@@ -1,0 +1,52 @@
+//! Time-to-target-loss race (the paper's Table 11 / Fig. 6 as a
+//! standalone tool): FedAvg vs HybridSGD on one dataset profile, with the
+//! target calibrated to the slower solver's terminal loss.
+//!
+//! ```bash
+//! cargo run --release --example convergence_race [-- url|news20|rcv1|epsilon]
+//! ```
+
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::experiments::{fixtures, table11, Effort};
+
+fn main() {
+    let spec = std::env::args()
+        .nth(1)
+        .and_then(|s| DatasetSpec::from_name(&s))
+        .unwrap_or(DatasetSpec::UrlLike);
+    let effort = Effort::Quick;
+    let ds = fixtures::dataset(spec, effort);
+    let sizes = vec![(spec, ds.n())];
+    let matchup = table11::matchups(&sizes)
+        .into_iter()
+        .find(|m| m.spec == spec)
+        .expect("matchup defined for every registry dataset");
+
+    println!(
+        "racing FedAvg(p={}) vs HybridSGD({}, {}) on {} (m={} n={})",
+        matchup.fed_p,
+        matchup.hyb_mesh,
+        matchup.policy.name(),
+        ds.name,
+        ds.m(),
+        ds.n()
+    );
+    let race = table11::race(&ds, &matchup, 0.1, 120);
+    println!("calibrated target loss: {:.5}\n", race.target);
+    println!("trace (simulated s, loss) — fedavg:");
+    for t in race.fed_run.trace.iter().step_by(4) {
+        println!("  {:>9.4}  {:.5}", t.sim_time, t.loss);
+    }
+    println!("trace — hybrid:");
+    for t in race.hyb_run.trace.iter().step_by(4) {
+        println!("  {:>9.4}  {:.5}", t.sim_time, t.loss);
+    }
+    println!(
+        "\ntime-to-target: fedavg {} s, hybrid {} s",
+        race.fed_time.map(|t| format!("{t:.4}")).unwrap_or("-".into()),
+        race.hyb_time.map(|t| format!("{t:.4}")).unwrap_or("-".into()),
+    );
+    if let Some(sp) = race.speedup() {
+        println!("HybridSGD speedup: {sp:.1}x (paper url: 53x, rcv1: 1.11x, epsilon: 0.44x)");
+    }
+}

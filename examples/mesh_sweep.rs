@@ -1,0 +1,56 @@
+//! Mesh-transition sweep (the paper's Fig. 5 as a standalone tool): walk
+//! every factorization p_r × p_c = p from the 1D s-step corner to the
+//! FedAvg corner and watch the per-iteration time trace the solver-family
+//! continuum; compare with the topology rule's pick.
+//!
+//! ```bash
+//! cargo run --release --example mesh_sweep [-- url|news20|rcv1] [p]
+//! ```
+
+use hybrid_sgd::costmodel::topology;
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::experiments::{fig5, fixtures, Effort};
+use hybrid_sgd::util::Table;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let spec = args
+        .next()
+        .and_then(|s| DatasetSpec::from_name(&s))
+        .unwrap_or(DatasetSpec::UrlLike);
+    let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let effort = Effort::Quick;
+
+    let ds_n = fixtures::dataset(spec, effort).n();
+    let rule = topology::mesh_rule(ds_n, p, 64, 1 << 20);
+    let series = fig5::sweep(spec, p, effort);
+    let min = series
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .expect("nonempty sweep")
+        .0;
+
+    let mut t = Table::new(&["p_r", "p_c", "ms/iter", ""]);
+    for (p_r, per_iter) in &series {
+        let mut mark = String::new();
+        if *p_r == 1 {
+            mark.push_str("1D s-step corner ");
+        }
+        if *p_r == p {
+            mark.push_str("FedAvg corner ");
+        }
+        if *p_r == min {
+            mark.push_str("<-- min ");
+        }
+        if *p_r == rule.p_r {
+            mark.push_str("<-- rule (Eq. 7)");
+        }
+        t.row(&[
+            p_r.to_string(),
+            (p / p_r).to_string(),
+            format!("{:.4}", per_iter * 1e3),
+            mark.trim().to_string(),
+        ]);
+    }
+    println!("dataset {} at p = {p}:\n{}", spec.profile().name, t.render());
+}

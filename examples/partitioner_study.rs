@@ -1,0 +1,75 @@
+//! Irregularity-aware partitioning study (paper §7.3 as a standalone
+//! tool): for a chosen dataset profile, surveys the three partitioners'
+//! κ / cache-footprint trade-off, runs the two-objective selector, shows
+//! the refined predictor's ranking, and measures per-iteration truth.
+//!
+//! ```bash
+//! cargo run --release --example partitioner_study [-- url|news20|rcv1]
+//! ```
+
+use hybrid_sgd::costmodel::model::DataShape;
+use hybrid_sgd::costmodel::predictor::{self, PartitionShape, PredictorKnobs};
+use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::experiments::fixtures;
+use hybrid_sgd::experiments::Effort;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
+use hybrid_sgd::partition::{ColPartition, Partitioner};
+use hybrid_sgd::util::table::fmt_bytes;
+use hybrid_sgd::util::Table;
+
+fn main() {
+    let spec = std::env::args()
+        .nth(1)
+        .and_then(|s| DatasetSpec::from_name(&s))
+        .unwrap_or(DatasetSpec::UrlLike);
+    let effort = Effort::Quick;
+    let ds = fixtures::dataset(spec, effort);
+    let p_c = 64.min(ds.n() / 4).max(2);
+    let mesh = Mesh::new(4, p_c);
+    let cfg = HybridConfig::new(mesh, 4, 32, 10);
+    println!(
+        "dataset {} (m={} n={} zbar={:.0}), mesh {}, L_cap = {}",
+        ds.name,
+        ds.m(),
+        ds.n(),
+        ds.zbar(),
+        mesh,
+        fmt_bytes(L_CAP_BYTES as f64)
+    );
+
+    let profile = CalibProfile::perlmutter();
+    let knobs = PredictorKnobs::default();
+    let data = DataShape { m: ds.m(), n: ds.n(), zbar: ds.zbar() };
+
+    let mut t = Table::new(&[
+        "partitioner",
+        "kappa",
+        "max n_local",
+        "max slab",
+        "fits L2",
+        "predicted ms/iter",
+        "measured ms/iter",
+    ]);
+    for policy in Partitioner::all() {
+        let part = ColPartition::build(&ds.a, p_c, policy);
+        let shape = PartitionShape::of(&part);
+        let pred = predictor::predict(&cfg, &data, &shape, &profile, &knobs).total();
+        let meas = fixtures::measure(&ds, cfg, policy, 12).per_iter;
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.2}", part.kappa()),
+            part.max_n_local().to_string(),
+            fmt_bytes(part.max_weight_bytes() as f64),
+            (part.max_weight_bytes() <= L_CAP_BYTES).to_string(),
+            format!("{:.4}", pred * 1e3),
+            format!("{:.4}", meas * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "two-objective selection (min kappa s.t. slab <= L_cap): {}",
+        select_two_objective(&ds.a, p_c, L_CAP_BYTES).name()
+    );
+}

@@ -1,0 +1,107 @@
+//! Quickstart: the end-to-end driver proving all three layers compose.
+//!
+//! Loads the AOT-compiled JAX+Pallas artifacts through PJRT (L1/L2),
+//! partitions a real generated url-like dataset over a 2D mesh, runs
+//! HybridSGD through the distributed engine (L3), and logs the loss curve
+//! to a target — then repeats with FedAvg for contrast. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use hybrid_sgd::comm::Charging;
+use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
+use hybrid_sgd::costmodel::{topology, CalibProfile, HybridConfig};
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
+use hybrid_sgd::runtime::XlaBackend;
+use hybrid_sgd::solvers::{HybridSolver, RunOpts, SolverKind};
+use std::time::Instant;
+
+fn main() {
+    // 1. A real small workload: the url-like profile (sparse, huge-n,
+    //    column-skewed — HybridSGD's home regime).
+    let ds = DatasetSpec::UrlLike.profile().generate_scaled(0.12, 42);
+    println!(
+        "dataset {}: m={} n={} zbar={:.0} nnz={}",
+        ds.name,
+        ds.m(),
+        ds.n(),
+        ds.zbar(),
+        ds.a.nnz()
+    );
+
+    // 2. Model-driven configuration: topology rule + two-objective
+    //    partitioner selection (no hand tuning).
+    let p = 64;
+    let mesh = topology::mesh_rule(ds.n(), p, 64, 1 << 20);
+    let policy = select_two_objective(&ds.a, mesh.p_c, L_CAP_BYTES);
+    println!("topology rule picked mesh {mesh}; two-objective partitioner: {}", policy.name());
+
+    // 3. The XLA backend: AOT artifacts, compiled once, Python nowhere.
+    let xla;
+    let backend: &dyn ComputeBackend = match XlaBackend::load_default() {
+        Ok(be) => {
+            println!("XLA backend up: {} artifacts", be.artifact_names().len());
+            xla = be;
+            &xla
+        }
+        Err(e) => {
+            println!("artifacts not built ({e:#}); using native backend");
+            &NativeBackend
+        }
+    };
+
+    // 4. Train to a target loss.
+    let cfg = HybridConfig::new(mesh, 4, 32, 10);
+    let opts = RunOpts {
+        eta: 0.5,
+        max_bundles: 600,
+        eval_every: 5,
+        target_loss: Some(0.55),
+        charging: Charging::Modeled,
+        profile: CalibProfile::perlmutter(),
+        ..Default::default()
+    };
+    let wall0 = Instant::now();
+    let run = HybridSolver::new(backend).run(&ds, cfg, policy, &opts);
+    let wall = wall0.elapsed().as_secs_f64();
+
+    println!("\nloss curve (bundle, simulated s, loss):");
+    for pt in &run.trace {
+        println!("  {:>5}  {:>9.4}  {:.5}", pt.bundles, pt.sim_time, pt.loss);
+    }
+    println!(
+        "\nHybridSGD: {} iters, {:.4} ms/iter simulated, final loss {:.4}, accuracy {:.3}, host wall {:.1}s",
+        run.inner_iters,
+        run.per_iter() * 1e3,
+        run.final_loss(),
+        ds.accuracy(&run.x),
+        wall
+    );
+    if let Some(t) = run.time_to_target {
+        println!("time-to-target 0.55: {t:.4} simulated s");
+    }
+
+    // 5. FedAvg contrast at the same rank count.
+    let fed = HybridSolver::new(backend).run(
+        &ds,
+        SolverKind::FedAvg.config(p, None, 1, 32, 10),
+        hybrid_sgd::partition::Partitioner::Rows,
+        &opts,
+    );
+    println!(
+        "FedAvg:    {} iters, {:.4} ms/iter simulated, final loss {:.4}{}",
+        fed.inner_iters,
+        fed.per_iter() * 1e3,
+        fed.final_loss(),
+        fed.time_to_target
+            .map(|t| format!(", time-to-target {t:.4} s"))
+            .unwrap_or_else(|| ", target not reached in budget".into())
+    );
+    match (run.time_to_target, fed.time_to_target) {
+        (Some(h), Some(f)) => println!("\nHybridSGD speedup to target: {:.1}x", f / h),
+        _ => println!("\n(one of the solvers did not reach the target in budget)"),
+    }
+}

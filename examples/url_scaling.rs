@@ -1,0 +1,18 @@
+//! Strong-scaling study on the url-like profile (the paper's Fig. 7 left
+//! panel as a standalone tool): sweeps p, compares FedAvg, HybridSGD 1×p,
+//! and HybridSGD 8×(p/8).
+//!
+//! ```bash
+//! cargo run --release --example url_scaling [-- full]
+//! ```
+
+use hybrid_sgd::experiments::{fig7, Effort};
+
+fn main() {
+    let effort = std::env::args()
+        .nth(1)
+        .and_then(|s| Effort::from_name(&s))
+        .unwrap_or(Effort::Quick);
+    println!("{}", fig7::run(effort).render());
+    println!("series TSV: results/fig7_strong_scaling.tsv");
+}

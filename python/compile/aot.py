@@ -1,0 +1,131 @@
+"""AOT compilation: lower the L2 model functions to HLO **text** artifacts.
+
+The interchange format is HLO text, NOT serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each model function is lowered over a grid of static shape *variants*; the
+Rust runtime (rust/src/runtime/) selects a variant from `manifest.tsv` and
+pads inputs up to it. Run via `make artifacts`:
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Python runs ONCE at build time and never on the request path.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+F64 = jax.numpy.float64
+
+# Variant grids. Kept deliberately small: each variant is one compiled
+# executable the Rust side caches; the solver clamps (s, b) to this grid.
+SSTEP_VARIANTS = [(s, b) for s in (1, 2, 4, 8) for b in (8, 16, 32, 64)]
+DENSE_VARIANTS = [(16, 256), (32, 512), (32, 1024), (64, 2048)]
+GRAM_VARIANTS = [(32, 256), (128, 256), (128, 1024)]
+LOSS_VARIANTS = [4096, 16384]
+SIGMOID_VARIANTS = [128, 512]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text.
+
+    return_tuple=False: every model function has exactly one output, and a
+    non-tuple result lets the Rust runtime read it back with a single
+    `copy_raw_to_host_sync` instead of a Literal round trip (measured
+    ~2x faster per call at s=4,b=32 — EXPERIMENTS.md SSPerf).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def variants():
+    """Yield (name, params-dict, jitted-fn, example-args) for every artifact."""
+    for s, b in SSTEP_VARIANTS:
+        q = s * b
+        yield (
+            f"sstep_s{s}_b{b}",
+            {"kind": "sstep", "s": s, "b": b},
+            model.sstep_bundle(s, b),
+            (spec(q, q), spec(q), spec()),
+        )
+    for b, n in DENSE_VARIANTS:
+        yield (
+            f"dense_grad_b{b}_n{n}",
+            {"kind": "dense_grad", "b": b, "n": n},
+            model.dense_grad(b, n),
+            (spec(b, n), spec(n), spec()),
+        )
+    for q, n in GRAM_VARIANTS:
+        yield (
+            f"gram_q{q}_n{n}",
+            {"kind": "gram", "q": q, "n": n},
+            model.gram(q, n),
+            (spec(q, n),),
+        )
+    for m in LOSS_VARIANTS:
+        yield (
+            f"loss_m{m}",
+            {"kind": "loss", "m": m},
+            model.loss_chunk(m),
+            (spec(m),),
+        )
+    for m in SIGMOID_VARIANTS:
+        yield (
+            f"sigmoid_m{m}",
+            {"kind": "sigmoid", "m": m},
+            model.sigmoid_residual(m),
+            (spec(m),),
+        )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="substring filter on artifact names (for tests)"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest_rows = []
+    for name, params, fn, example_args in variants():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        kv = ",".join(f"{k}={v}" for k, v in params.items())
+        manifest_rows.append((name, kv, fname))
+        print(f"  {name}: {len(text)} chars -> {fname}", file=sys.stderr)
+
+    manifest = os.path.join(args.outdir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("name\tparams\tfile\n")
+        for row in manifest_rows:
+            f.write("\t".join(row) + "\n")
+    print(f"wrote {len(manifest_rows)} artifacts + {manifest}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

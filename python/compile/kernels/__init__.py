@@ -1,0 +1,16 @@
+# Layer 1: Pallas kernels for HybridSGD's dense compute hot spots.
+#
+# All kernels run with interpret=True — the CPU PJRT plugin cannot execute
+# Mosaic custom-calls, so interpret mode is the correctness path and the
+# lowering target for the AOT artifacts (see /opt/xla-example/README.md).
+# FP64 throughout, matching the paper's precision discipline (the s-step
+# Gram was unstable at FP32 on news20).
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from .gram import gram_tril  # noqa: E402,F401
+from .logistic_grad import dense_grad_step, dense_margins, dense_update  # noqa: E402,F401
+from .loss_eval import loss_sum  # noqa: E402,F401
+from .sstep_correction import sstep_correct  # noqa: E402,F401

@@ -1,0 +1,63 @@
+"""Bundle Gram computation ``G = tril(Y Y^T)`` (the mkl_sparse_syrkd role).
+
+Y is the (q x n) stack of densified batch rows (q = s*b). The feature axis
+is tiled in MXU-friendly blocks and partial Grams ``Y_t @ Y_t^T`` are
+accumulated in the output across the sequential tile grid; the lower-
+triangular mask is applied once at the end (the correction only reads
+TRIL, matching Algorithm 3 line 6).
+
+Hardware adaptation: each (q x n_t) tile by its transpose is exactly the
+systolic-array shape the MXU wants; VMEM holds one tile + the (q x q)
+accumulator (q <= 512 -> <= 2 MB fp64).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _gram_kernel(last_tile: int, y_ref, out_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    y = y_ref[...]
+    out_ref[...] += y @ y.T
+
+    @pl.when(t == last_tile)
+    def _mask():
+        q = out_ref.shape[0]
+        row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+        out_ref[...] = jnp.where(row >= col, out_ref[...], 0.0)
+
+
+def _pick_tile(n: int, tile: int) -> int:
+    if n % tile == 0:
+        return tile
+    for t in range(min(tile, n), 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def gram_tril(y, tile: int = DEFAULT_TILE):
+    """G = tril(Y @ Y^T) for a (q, n) fp64 Y, tiled over n."""
+    q, n = y.shape
+    t = _pick_tile(n, tile)
+    grid = n // t
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, grid - 1),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((q, t), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((q, q), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, q), jnp.float64),
+        interpret=True,
+    )(jnp.asarray(y, jnp.float64))

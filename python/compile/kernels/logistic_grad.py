@@ -1,0 +1,102 @@
+"""Dense mini-batch logistic gradient step (the epsilon/dense path).
+
+Given a label-folded dense batch ``A_blk`` (b x n), weights ``x`` (n,) and
+step size eta:
+
+    margins = A_blk @ x
+    u       = 1 / (1 + exp(margins))
+    x_new   = x + (eta/b) * A_blk^T @ u
+
+Hardware adaptation: the feature axis is tiled in ``n_t``-column blocks so
+each tile's weight slab stays VMEM-resident -- the same role the paper's
+cache-aware partitioner plays for L2 (DESIGN.md SS Hardware-Adaptation).
+Two Pallas kernels: a margins reduction (grid over tiles, accumulating the
+(b,) partial product -- sequential grid iterations on TPU make in-place
+accumulation safe) and a rank-1-update kernel (grid over tiles, each tile
+an independent (n_t,) update: an MXU-shaped (n_t x b) @ (b,) product).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 256
+
+
+def _margins_kernel(a_ref, x_ref, out_ref):
+    """out += A_tile @ x_tile, accumulated across the tile grid."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _update_kernel(a_ref, x_ref, u_ref, scale_ref, out_ref):
+    """out_tile = x_tile + scale * A_tile^T @ u (independent per tile)."""
+    out_ref[...] = x_ref[...] + scale_ref[0] * a_ref[...].T @ u_ref[...]
+
+
+def _pick_tile(n: int, tile: int) -> int:
+    if n % tile == 0:
+        return tile
+    # Fall back to the largest divisor of n that is <= tile (n is padded to
+    # a friendly size by the caller in practice; this keeps tests exact).
+    for t in range(min(tile, n), 0, -1):
+        if n % t == 0:
+            return t
+    return n
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def dense_margins(a_blk, x, b: int = None, tile: int = DEFAULT_TILE):  # noqa: ARG001
+    """margins = A_blk @ x via the tiled Pallas reduction."""
+    bsz, n = a_blk.shape
+    t = _pick_tile(n, tile)
+    grid = n // t
+    return pl.pallas_call(
+        _margins_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bsz, t), lambda i: (0, i)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bsz,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float64),
+        interpret=True,
+    )(jnp.asarray(a_blk, jnp.float64), jnp.asarray(x, jnp.float64))
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def dense_update(a_blk, x, u, scale, tile: int = DEFAULT_TILE):
+    """x_new = x + scale * A_blk^T @ u via the tiled Pallas update."""
+    bsz, n = a_blk.shape
+    t = _pick_tile(n, tile)
+    grid = n // t
+    scale = jnp.asarray(scale, jnp.float64).reshape(1)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bsz, t), lambda i: (0, i)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((bsz,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(jnp.asarray(a_blk, jnp.float64), jnp.asarray(x, jnp.float64), u, scale)
+
+
+@jax.jit
+def dense_grad_step(a_blk, x, eta):
+    """One full dense mini-batch logistic SGD step (composes the kernels)."""
+    bsz = a_blk.shape[0]
+    margins = dense_margins(a_blk, x)
+    u = 1.0 / (1.0 + jnp.exp(margins))
+    return dense_update(a_blk, x, u, eta / bsz)

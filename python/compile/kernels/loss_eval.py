@@ -1,0 +1,55 @@
+"""Numerically-stable logistic-loss reduction (the metrics path).
+
+``loss_sum(margins) = sum_i log(1 + exp(-margins[i]))`` with the standard
+max-split so neither exp overflows:
+
+    log(1 + exp(t)) = max(t, 0) + log1p(exp(-|t|))
+
+Tiled over chunks with a scalar accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 1024
+
+
+def _loss_kernel(m_ref, out_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    neg = -m_ref[...]
+    val = jnp.maximum(neg, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(neg)))
+    out_ref[...] += jnp.sum(val)[None]
+
+
+def _pick_chunk(n: int, chunk: int) -> int:
+    if n % chunk == 0:
+        return chunk
+    for c in range(min(chunk, n), 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def loss_sum(margins, chunk: int = DEFAULT_CHUNK):
+    """Sum of stable log1p-exp over a 1-D margins array (caller divides by m)."""
+    (n,) = margins.shape
+    c = _pick_chunk(n, chunk)
+    grid = n // c
+    out = pl.pallas_call(
+        _loss_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((c,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float64),
+        interpret=True,
+    )(jnp.asarray(margins, jnp.float64))
+    return out[0]

@@ -1,0 +1,76 @@
+"""The s-step correction recurrence (paper Algorithm 3, lines 9-14).
+
+This is the algorithmic heart of s-step SGD: given the bundle Gram matrix
+``G = tril(Y Y^T)`` (sb x sb) and the partial products ``v = Y x_sk`` (sb),
+run the s *sequential* corrected sigmoid steps
+
+    t_j = v_j + (eta/b) * sum_{l<j} G[j-block, l-block] @ z_l
+    z_j = 1 / (1 + exp(t_j))
+
+and emit the stacked residuals ``z`` (sb), whose scatter
+``x += (eta/b) * Y^T z`` advances the weights by s SGD steps at once.
+
+Hardware adaptation (DESIGN.md SS Hardware-Adaptation): the recurrence is
+latency-bound, not throughput-bound -- sb <= 512 so G (<= 2 MB fp64) stays
+VMEM-resident as a single block; the sequential dependence over s is a
+``fori_loop`` carrying z, and each step is one (b x jb)-by-(jb) dense
+matvec that the MXU handles as a skinny matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _correction_kernel(s: int, b: int, g_ref, v_ref, eta_ref, z_ref):
+    """Pallas kernel body: one VMEM-resident block, sequential over s."""
+    q = s * b
+    g = g_ref[...]  # (q, q) lower-triangular
+    v = v_ref[...]  # (q,)
+    eta_over_b = eta_ref[0]
+
+    # Only strictly-lower *blocks* contribute (within-block entries belong
+    # to the same mini-batch step and must not feed back). Mask G down to
+    # the block-sub-diagonal part once.
+    row_block = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) // b
+    col_block = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1) // b
+    g_masked = jnp.where(row_block > col_block, g, 0.0)
+
+    def step(j, z):
+        # t_j = v_j + eta/b * (G[j-block, :] @ z)  -- masked G zeroes the
+        # not-yet-computed and same-block contributions, so a full-width
+        # matvec is safe and keeps the shape static.
+        rows = jax.lax.dynamic_slice(g_masked, (j * b, 0), (b, q))
+        t = jax.lax.dynamic_slice(v, (j * b,), (b,)) + eta_over_b * rows @ z
+        z_j = 1.0 / (1.0 + jnp.exp(t))
+        return jax.lax.dynamic_update_slice(z, z_j, (j * b,))
+
+    z = jax.lax.fori_loop(0, s, step, jnp.zeros((q,), dtype=g.dtype))
+    z_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def sstep_correct(s: int, b: int, g, v, eta_over_b):
+    """Run the correction recurrence.
+
+    Args:
+      s: recurrence unrolling length (static).
+      b: mini-batch size per step (static).
+      g: (s*b, s*b) lower-triangular Gram, fp64.
+      v: (s*b,) partial products Y @ x.
+      eta_over_b: scalar step size eta/b.
+
+    Returns:
+      z: (s*b,) corrected residuals.
+    """
+    q = s * b
+    g = jnp.asarray(g, jnp.float64).reshape(q, q)
+    v = jnp.asarray(v, jnp.float64).reshape(q)
+    eta = jnp.asarray(eta_over_b, jnp.float64).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_correction_kernel, s, b),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float64),
+        interpret=True,
+    )(g, v, eta)

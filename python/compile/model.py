@@ -1,0 +1,68 @@
+"""Layer 2: the JAX compute graph composing the Pallas kernels.
+
+These are the jitted functions `aot.py` lowers to HLO text for the Rust
+runtime. Each corresponds to one ComputeBackend operation on the Rust side
+(rust/src/compute/mod.rs) and calls the L1 kernels so they lower into the
+same HLO module. Python never runs at request time — these functions exist
+only on the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import (  # noqa: E402
+    dense_margins,
+    dense_update,
+    gram_tril,
+    loss_sum,
+    sstep_correct,
+)
+
+
+def sstep_bundle(s: int, b: int):
+    """The s-step correction entry point: (G, v, eta_over_b) -> (z,)."""
+
+    def fn(g, v, eta_over_b):
+        return (sstep_correct(s, b, g, v, eta_over_b),)
+
+    return fn
+
+
+def dense_grad(b: int, n: int):  # noqa: ARG001  (shape fixed by example args)
+    """Dense mini-batch logistic step: (A_blk, x, eta) -> (x_new,)."""
+
+    def fn(a_blk, x, eta):
+        margins = dense_margins(a_blk, x)
+        u = 1.0 / (1.0 + jnp.exp(margins))
+        return (dense_update(a_blk, x, u, eta / a_blk.shape[0]),)
+
+    return fn
+
+
+def gram(q: int, n: int):  # noqa: ARG001
+    """Bundle Gram: (Y,) -> (tril(Y Y^T),)."""
+
+    def fn(y):
+        return (gram_tril(y),)
+
+    return fn
+
+
+def loss_chunk(m: int):  # noqa: ARG001
+    """Loss reduction: (margins,) -> (scalar-as-(1,)-array,)."""
+
+    def fn(margins):
+        return (loss_sum(margins).reshape(1),)
+
+    return fn
+
+
+def sigmoid_residual(m: int):  # noqa: ARG001
+    """Elementwise logistic residual: (t,) -> (1/(1+exp(t)),)."""
+
+    def fn(t):
+        return (1.0 / (1.0 + jnp.exp(t)),)
+
+    return fn

@@ -1,0 +1,202 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and seeds; assert_allclose at fp64 tolerance.
+This is the CORE correctness signal for the compute layer — the Rust
+native backend mirrors these conventions and is parity-tested against the
+XLA artifacts produced from these same kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    dense_grad_step,
+    dense_margins,
+    dense_update,
+    gram_tril,
+    loss_sum,
+    sstep_correct,
+)
+from compile.kernels import ref
+
+RTOL = 1e-12
+ATOL = 1e-12
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# sstep_correct
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s=st.sampled_from([1, 2, 3, 4, 8]),
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sstep_correct_matches_ref(s, b, seed):
+    rng = rng_for(seed)
+    q = s * b
+    y = rng.standard_normal((q, 12))
+    g = np.tril(y @ y.T)  # realistic PSD-tril Gram
+    v = rng.standard_normal(q)
+    eta_over_b = float(rng.uniform(0.001, 0.5))
+    got = sstep_correct(s, b, g, v, eta_over_b)
+    want = ref.sstep_correct_ref(s, b, g, v, eta_over_b)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_sstep_with_zero_gram_is_plain_sigmoid():
+    s, b = 3, 4
+    q = s * b
+    v = np.linspace(-3, 3, q)
+    got = sstep_correct(s, b, np.zeros((q, q)), v, 0.1)
+    assert_allclose(np.asarray(got), 1.0 / (1.0 + np.exp(v)), rtol=RTOL)
+
+
+def test_sstep_ignores_upper_triangle_and_diagonal_block():
+    """Only strictly-lower *blocks* of G may influence z."""
+    s, b = 2, 3
+    q = s * b
+    rng = rng_for(0)
+    g = np.tril(rng.standard_normal((q, q)))
+    v = rng.standard_normal(q)
+    z1 = np.asarray(sstep_correct(s, b, g, v, 0.2))
+    # Perturb the within-block lower entries (same-block feedback is not
+    # part of the recurrence) and the upper triangle.
+    g2 = g.copy()
+    for blk in range(s):
+        sl = slice(blk * b, (blk + 1) * b)
+        g2[sl, sl] += rng.standard_normal((b, b))
+    g2 += np.triu(rng.standard_normal((q, q)), k=1)
+    z2 = np.asarray(sstep_correct(s, b, g2, v, 0.2))
+    assert_allclose(z1, z2, rtol=RTOL, atol=ATOL)
+
+
+def test_sstep_output_in_unit_interval():
+    rng = rng_for(3)
+    s, b = 4, 8
+    q = s * b
+    y = rng.standard_normal((q, 5)) * 10
+    z = np.asarray(sstep_correct(s, b, np.tril(y @ y.T), rng.standard_normal(q) * 50, 0.3))
+    assert np.all(z >= 0.0) and np.all(z <= 1.0)
+
+
+# --------------------------------------------------------------------------
+# dense logistic gradient
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 8, 16, 32]),
+    n=st.sampled_from([4, 16, 100, 256, 300]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_grad_step_matches_ref(b, n, seed):
+    rng = rng_for(seed)
+    a = rng.standard_normal((b, n))
+    x = rng.standard_normal(n)
+    eta = float(rng.uniform(0.01, 1.0))
+    got = dense_grad_step(a, x, eta)
+    want = ref.dense_grad_step_ref(a, x, eta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([2, 8, 16]),
+    n=st.sampled_from([8, 64, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_and_update_match_ref(b, n, seed):
+    rng = rng_for(seed)
+    a = rng.standard_normal((b, n))
+    x = rng.standard_normal(n)
+    u = rng.standard_normal(b)
+    assert_allclose(
+        np.asarray(dense_margins(a, x)),
+        np.asarray(ref.dense_margins_ref(a, x)),
+        rtol=1e-11,
+        atol=1e-11,
+    )
+    assert_allclose(
+        np.asarray(dense_update(a, x, u, 0.25)),
+        np.asarray(ref.dense_update_ref(a, x, u, 0.25)),
+        rtol=1e-11,
+        atol=1e-11,
+    )
+
+
+def test_dense_grad_reduces_separable_loss():
+    a = np.array([[1.0, 0.0], [0.0, 1.0], [0.5, 0.5]])
+    x = np.zeros(2)
+    for _ in range(100):
+        x = np.asarray(dense_grad_step(a, x, 0.5))
+    margins = a @ x
+    assert np.all(margins > 0.5)
+
+
+# --------------------------------------------------------------------------
+# gram
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.sampled_from([1, 4, 8, 32]),
+    n=st.sampled_from([8, 64, 256, 300, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(q, n, seed):
+    rng = rng_for(seed)
+    y = rng.standard_normal((q, n))
+    got = np.asarray(gram_tril(y))
+    want = np.asarray(ref.gram_tril_ref(y))
+    assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+    # Strictly-upper is exactly zero.
+    assert np.all(got[np.triu_indices(q, k=1)] == 0.0)
+
+
+def test_gram_diagonal_is_row_norms():
+    rng = rng_for(9)
+    y = rng.standard_normal((8, 40))
+    g = np.asarray(gram_tril(y))
+    assert_allclose(np.diag(g), np.sum(y * y, axis=1), rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 100, 1024, 2048, 5000]),
+    scale=st.sampled_from([1.0, 100.0, 1000.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_matches_ref_and_is_stable(m, scale, seed):
+    rng = rng_for(seed)
+    margins = rng.standard_normal(m) * scale
+    got = float(loss_sum(margins))
+    want = float(ref.loss_sum_ref(margins))
+    assert np.isfinite(got)
+    assert_allclose(got, want, rtol=1e-12)
+
+
+def test_loss_extreme_margins_no_overflow():
+    margins = np.array([1e4, -1e4, 0.0, 700.0, -700.0])
+    got = float(loss_sum(margins))
+    # -1e4 margin contributes ~1e4; +1e4 contributes ~0; 0 contributes ln 2.
+    assert got == pytest.approx(1e4 + 700.0 + np.log(2.0), rel=1e-10)
+
+
+def test_loss_at_zero_margin_is_log2():
+    assert float(loss_sum(np.zeros(64))) == pytest.approx(64 * np.log(2.0), rel=1e-12)

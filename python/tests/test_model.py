@@ -1,0 +1,82 @@
+"""L2 tests: the model functions compose the kernels correctly and keep
+fp64 shapes/dtypes stable through jit."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_sstep_bundle_shape_and_value():
+    s, b = 2, 4
+    q = s * b
+    rng = np.random.default_rng(0)
+    y = rng.standard_normal((q, 10))
+    g = np.tril(y @ y.T)
+    v = rng.standard_normal(q)
+    (z,) = model.sstep_bundle(s, b)(g, v, 0.05)
+    assert z.shape == (q,)
+    assert z.dtype == np.float64
+    assert_allclose(np.asarray(z), np.asarray(ref.sstep_correct_ref(s, b, g, v, 0.05)))
+
+
+def test_dense_grad_shape_and_value():
+    b, n = 8, 64
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((b, n))
+    x = rng.standard_normal(n)
+    (x_new,) = model.dense_grad(b, n)(a, x, 0.3)
+    assert x_new.shape == (n,)
+    assert x_new.dtype == np.float64
+    assert_allclose(
+        np.asarray(x_new), np.asarray(ref.dense_grad_step_ref(a, x, 0.3)), rtol=1e-11
+    )
+
+
+def test_gram_shape_and_value():
+    q, n = 8, 48
+    rng = np.random.default_rng(2)
+    y = rng.standard_normal((q, n))
+    (g,) = model.gram(q, n)(y)
+    assert g.shape == (q, q)
+    assert_allclose(np.asarray(g), np.asarray(ref.gram_tril_ref(y)), rtol=1e-11)
+
+
+def test_loss_chunk_shape_and_value():
+    m = 256
+    rng = np.random.default_rng(3)
+    margins = rng.standard_normal(m) * 10
+    (out,) = model.loss_chunk(m)(margins)
+    assert out.shape == (1,)
+    assert_allclose(float(out[0]), float(ref.loss_sum_ref(margins)), rtol=1e-12)
+
+
+def test_sigmoid_residual_value():
+    t = np.linspace(-5, 5, 32)
+    (u,) = model.sigmoid_residual(32)(t)
+    assert_allclose(np.asarray(u), 1.0 / (1.0 + np.exp(t)), rtol=1e-14)
+
+
+def test_model_chain_simulates_one_bundle_of_sgd():
+    """End-to-end L2 check: gram + sstep_bundle reproduce s sequential
+    dense SGD steps (the paper's 'algebraic reformulation' property at the
+    model layer, before AOT)."""
+    s, b, n = 3, 4, 16
+    q = s * b
+    rng = np.random.default_rng(4)
+    y = rng.standard_normal((q, n))
+    x0 = rng.standard_normal(n)
+    eta = 0.4
+
+    (g,) = model.gram(q, n)(y)
+    v = y @ x0
+    (z,) = model.sstep_bundle(s, b)(g, v, eta / b)
+    x_bundle = x0 + (eta / b) * y.T @ np.asarray(z)
+
+    x_seq = x0.copy()
+    for j in range(s):
+        rows = y[j * b : (j + 1) * b]
+        u = 1.0 / (1.0 + np.exp(rows @ x_seq))
+        x_seq = x_seq + (eta / b) * rows.T @ u
+    assert_allclose(x_bundle, x_seq, rtol=1e-10, atol=1e-10)

@@ -1,0 +1,130 @@
+//! Hot-path micro-ablations: the kernel-level choices DESIGN.md calls out.
+//!
+//! * sparse Gram: merge-join vs scatter/gather (the `syrkd` analogue);
+//! * s-step correction: native Rust vs the XLA/PJRT artifact (per-call
+//!   overhead of the AOT path);
+//! * SpMV forward vs transpose-scatter throughput;
+//! * 2D partition assembly cost (the load-time price of `select_columns`).
+//!
+//! Prints ns/op medians; drives the §Perf log in EXPERIMENTS.md.
+
+use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
+use hybrid_sgd::data::synth;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::partition::{MeshPartition, Partitioner};
+use hybrid_sgd::runtime::XlaBackend;
+use hybrid_sgd::sparse::{gram, Csr};
+use hybrid_sgd::util::stats::median;
+use hybrid_sgd::util::{Prng, Table};
+use std::time::Instant;
+
+fn time_op<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    median(&samples)
+}
+
+fn main() {
+    let mut rng = Prng::new(0xAB1A);
+    let mut table = Table::new(&["op", "config", "median time", "note"]);
+
+    // --- Gram: merge vs scatter ------------------------------------------
+    let a = Csr::random(4096, 8192, 64, &mut rng);
+    for &q in &[32usize, 128] {
+        let ids: Vec<usize> = (0..q).collect();
+        let mut out = vec![0.0; q * q];
+        let t_merge = time_op(20, || gram::gram_lower(&a, &ids, &mut out));
+        let mut scratch = vec![0.0; a.cols()];
+        let t_scatter =
+            time_op(20, || gram::gram_lower_scatter(&a, &ids, &mut scratch, &mut out));
+        table.row(&[
+            "gram merge".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_merge),
+            String::new(),
+        ]);
+        table.row(&[
+            "gram scatter".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_scatter),
+            format!("{:.2}x vs merge", t_merge / t_scatter),
+        ]);
+    }
+
+    // --- SpMV forward vs transpose ---------------------------------------
+    let batch: Vec<usize> = (0..128).collect();
+    let x = vec![1.0f64; a.cols()];
+    let mut v = vec![0.0f64; batch.len()];
+    let t_fwd = time_op(50, || a.spmv_rows(&batch, &x, &mut v));
+    let coeff = vec![0.5f64; batch.len()];
+    let mut acc = vec![0.0f64; a.cols()];
+    let t_tsp = time_op(50, || a.t_spmv_rows_acc(&batch, &coeff, &mut acc));
+    table.row(&["spmv fwd".into(), "b=128 zbar=64".into(), fmt(t_fwd), String::new()]);
+    table.row(&[
+        "spmv transpose".into(),
+        "b=128 zbar=64".into(),
+        fmt(t_tsp),
+        format!("{:.2}x vs fwd", t_tsp / t_fwd),
+    ]);
+
+    // --- correction: native vs XLA ----------------------------------------
+    let native = NativeBackend;
+    for &(s, b) in &[(4usize, 32usize), (8, 64)] {
+        let q = s * b;
+        let y: Vec<f64> = (0..q * 16).map(|_| rng.next_gaussian()).collect();
+        let mut g = vec![0.0; q * q];
+        for i in 0..q {
+            for l in 0..=i {
+                g[i * q + l] = (0..16).map(|c| y[i * 16 + c] * y[l * 16 + c]).sum();
+            }
+        }
+        let vv: Vec<f64> = (0..q).map(|_| rng.next_gaussian()).collect();
+        let mut z = vec![0.0; q];
+        let t_native =
+            time_op(50, || native.sstep_correct(s, b, &g, &vv, 1e-3, &mut z));
+        table.row(&[
+            "correction native".into(),
+            format!("s={s} b={b}"),
+            fmt(t_native),
+            String::new(),
+        ]);
+        if let Ok(xla) = XlaBackend::load_default() {
+            let t_xla = time_op(50, || xla.sstep_correct(s, b, &g, &vv, 1e-3, &mut z));
+            table.row(&[
+                "correction xla".into(),
+                format!("s={s} b={b}"),
+                fmt(t_xla),
+                format!("{:.1}x vs native (per-call PJRT overhead)", t_xla / t_native),
+            ]);
+        }
+    }
+
+    // --- partition assembly -----------------------------------------------
+    let mut rng2 = Prng::new(7);
+    let ds = synth::sparse_skewed("bench", 8192, 16384, 64, 1.0, &mut rng2);
+    for &(p_r, p_c) in &[(4usize, 16usize), (4, 64)] {
+        let t_build = time_op(5, || {
+            let mp = MeshPartition::build(&ds, Mesh::new(p_r, p_c), Partitioner::Cyclic);
+            std::hint::black_box(mp.blocks.len());
+        });
+        table.row(&[
+            "mesh partition build".into(),
+            format!("{p_r}x{p_c}, nnz={}", ds.a.nnz()),
+            fmt(t_build),
+            String::new(),
+        ]);
+    }
+
+    println!("== hot-path ablations ==");
+    println!("{}", table.render());
+}
+
+fn fmt(t: f64) -> String {
+    hybrid_sgd::util::table::fmt_time(t)
+}

@@ -1,0 +1,17 @@
+//! Bench target regenerating the paper's Figure 2 — partitioner assignment on the toy matrix.
+//!
+//! Effort via `HYBRID_SGD_EFFORT=quick|full` (default quick). Rows print
+//! to stdout; machine-readable TSV lands under `results/`.
+
+use hybrid_sgd::experiments::{fig2, Effort};
+use std::time::Instant;
+
+fn main() {
+    let effort = Effort::from_env();
+    let t0 = Instant::now();
+    let table = fig2::run(effort);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("== Figure 2 — partitioner assignment on the toy matrix ==");
+    println!("{}", table.render());
+    println!("(effort {effort:?}, generated in {wall:.1}s; TSV under results/)");
+}

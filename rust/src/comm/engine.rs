@@ -1,0 +1,381 @@
+//! Bulk-synchronous rank engine with simulated-clock charging.
+
+use crate::costmodel::calib::CalibProfile;
+use crate::costmodel::hockney;
+use crate::mesh::Mesh;
+use crate::metrics::{Phase, PhaseBook};
+use std::time::Instant;
+
+/// Which team a collective spans (paper §4: the row Allreduce runs within a
+/// row team across its `p_c` ranks; the column Allreduce within a column
+/// team across `p_r` ranks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scope {
+    /// Within each row team (`p_c` ranks — the s-step residual/Gram reduce).
+    RowTeam,
+    /// Within each column team (`p_r` ranks — the FedAvg weight average).
+    ColTeam,
+    /// All `p` ranks.
+    World,
+}
+
+/// Reduction operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    /// Elementwise sum.
+    Sum,
+    /// Elementwise mean (sum / team size) — FedAvg's averaging step.
+    Mean,
+}
+
+/// Cost declaration returned by a compute closure, used when charging is
+/// [`Charging::Modeled`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cost {
+    /// Floating-point operations performed.
+    pub flops: f64,
+    /// Bytes streamed through the memory hierarchy.
+    pub bytes: f64,
+    /// Resident working-set size in bytes — selects the γ(W) tier
+    /// (cache-aware compute, §6.5).
+    pub ws_bytes: usize,
+}
+
+impl Cost {
+    /// Pure-flop cost (working set assumed cache-resident).
+    pub fn flops(flops: f64) -> Cost {
+        Cost { flops, bytes: 0.0, ws_bytes: 0 }
+    }
+
+    /// Streaming cost over a working set.
+    pub fn streamed(flops: f64, bytes: f64, ws_bytes: usize) -> Cost {
+        Cost { flops, bytes, ws_bytes }
+    }
+}
+
+/// How compute time is charged to the simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Charging {
+    /// Measured wall time of each rank's real compute on this host.
+    Measured,
+    /// Modeled: `flops·γ_flop + bytes·γ(ws)` from the calibration profile.
+    /// Fully deterministic.
+    Modeled,
+}
+
+/// The bulk-synchronous rank engine.
+pub struct Engine {
+    /// Mesh executed over.
+    pub mesh: Mesh,
+    /// Machine profile charging collective (and modeled compute) time.
+    pub profile: CalibProfile,
+    /// Compute charging policy.
+    pub charging: Charging,
+    /// Per-rank simulated clocks (seconds).
+    pub clock: Vec<f64>,
+    /// Phase-attributed accounting.
+    pub book: PhaseBook,
+    /// Compute lanes (OS threads) for per-rank closures; 1 = sequential.
+    pub lanes: usize,
+}
+
+impl Engine {
+    /// New engine over `mesh`, charging from `profile`.
+    pub fn new(mesh: Mesh, profile: CalibProfile, charging: Charging) -> Engine {
+        let p = mesh.p();
+        Engine { mesh, profile, charging, clock: vec![0.0; p], book: PhaseBook::new(p), lanes: 1 }
+    }
+
+    /// Use up to `lanes` OS threads for compute phases.
+    pub fn with_lanes(mut self, lanes: usize) -> Engine {
+        self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Total ranks.
+    pub fn p(&self) -> usize {
+        self.mesh.p()
+    }
+
+    /// Maximum simulated clock over all ranks — the simulated wall time.
+    pub fn sim_wall(&self) -> f64 {
+        self.clock.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Reset clocks and the phase book (e.g. after warmup).
+    pub fn reset_accounting(&mut self) {
+        self.clock.fill(0.0);
+        self.book.reset();
+    }
+
+    /// Run a compute phase: `f(rank, state)` for every rank, charging each
+    /// rank's clock. Reduction-free, so lane parallelism never changes
+    /// results — only wall time.
+    pub fn compute<S: Send>(
+        &mut self,
+        phase: Phase,
+        states: &mut [S],
+        f: impl Fn(usize, &mut S) -> Cost + Sync,
+    ) {
+        assert_eq!(states.len(), self.p(), "one state per rank");
+        let p = self.p();
+        let mut charge = vec![0.0f64; p];
+        if self.lanes <= 1 || p == 1 {
+            for (rank, st) in states.iter_mut().enumerate() {
+                charge[rank] = self.run_one(rank, st, &f);
+            }
+        } else {
+            let lanes = self.lanes.min(p);
+            let chunk = p.div_ceil(lanes);
+            let this = &*self;
+            let charges: Vec<(usize, f64)> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (ci, states_chunk) in states.chunks_mut(chunk).enumerate() {
+                    let f = &f;
+                    handles.push(scope.spawn(move || {
+                        let base = ci * chunk;
+                        states_chunk
+                            .iter_mut()
+                            .enumerate()
+                            .map(|(i, st)| (base + i, this.run_one(base + i, st, f)))
+                            .collect::<Vec<_>>()
+                    }));
+                }
+                handles.into_iter().flat_map(|h| h.join().expect("lane panicked")).collect()
+            });
+            for (rank, c) in charges {
+                charge[rank] = c;
+            }
+        }
+        for rank in 0..p {
+            self.clock[rank] += charge[rank];
+            self.book.charge(phase, rank, charge[rank]);
+        }
+    }
+
+    fn run_one<S>(&self, rank: usize, st: &mut S, f: &impl Fn(usize, &mut S) -> Cost) -> f64 {
+        let t0 = Instant::now();
+        let cost = f(rank, st);
+        let wall = t0.elapsed().as_secs_f64();
+        match self.charging {
+            Charging::Measured => wall,
+            Charging::Modeled => {
+                cost.flops * self.profile.gamma_flop
+                    + cost.bytes * self.profile.gamma_ws(cost.ws_bytes)
+            }
+        }
+    }
+
+    /// Team-scoped Allreduce. `buf(state)` exposes each rank's contribution
+    /// buffer; all buffers in a team must have equal length. After the call
+    /// every team member holds the reduced value. Reduction order is linear
+    /// in team order — bitwise deterministic.
+    ///
+    /// Charging: every member first *waits* until the slowest team member
+    /// arrives (booked as sync-skew wait, §6.5), then pays the rank-aware
+    /// Hockney time for the payload.
+    pub fn allreduce<S>(
+        &mut self,
+        phase: Phase,
+        scope: Scope,
+        op: Reduce,
+        states: &mut [S],
+        buf: impl Fn(&mut S) -> &mut [f64],
+    ) {
+        assert_eq!(states.len(), self.p(), "one state per rank");
+        for team in self.teams(scope) {
+            self.allreduce_team(phase, op, &team, states, &buf);
+        }
+    }
+
+    fn allreduce_team<S>(
+        &mut self,
+        phase: Phase,
+        op: Reduce,
+        team: &[usize],
+        states: &mut [S],
+        buf: &impl Fn(&mut S) -> &mut [f64],
+    ) {
+        let q = team.len();
+        let words = buf(&mut states[team[0]]).len();
+        // Reduce linearly in team order.
+        let mut acc = vec![0.0f64; words];
+        for &member in team {
+            let b = buf(&mut states[member]);
+            assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
+            for (a, x) in acc.iter_mut().zip(b.iter()) {
+                *a += *x;
+            }
+        }
+        if op == Reduce::Mean {
+            let inv = 1.0 / q as f64;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+        }
+        // Broadcast result.
+        for &member in team {
+            buf(&mut states[member]).copy_from_slice(&acc);
+        }
+        // Charge simulated time: barrier to slowest, then Hockney transfer.
+        let t_arrive = team.iter().map(|&m| self.clock[m]).fold(0.0, f64::max);
+        let dur = hockney::allreduce_time(&self.profile, q, words);
+        for &member in team {
+            let wait = t_arrive - self.clock[member];
+            self.book.charge(phase, member, wait + dur);
+            self.book.charge_wait(phase, member, wait);
+            self.clock[member] = t_arrive + dur;
+            if q > 1 {
+                self.book.words[member] += words as f64;
+                self.book.messages[member] += hockney::allreduce_messages(q);
+            }
+        }
+    }
+
+    /// The rank groups a scope reduces over.
+    pub fn teams(&self, scope: Scope) -> Vec<Vec<usize>> {
+        match scope {
+            Scope::World => vec![(0..self.p()).collect()],
+            Scope::RowTeam => {
+                (0..self.mesh.p_r).map(|r| self.mesh.row_team(self.mesh.rank_at(r, 0))).collect()
+            }
+            Scope::ColTeam => {
+                (0..self.mesh.p_c).map(|c| self.mesh.col_team(self.mesh.rank_at(0, c))).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(p_r: usize, p_c: usize) -> Engine {
+        Engine::new(Mesh::new(p_r, p_c), CalibProfile::perlmutter(), Charging::Modeled)
+    }
+
+    #[derive(Clone)]
+    struct St {
+        buf: Vec<f64>,
+    }
+
+    #[test]
+    fn world_allreduce_sums() {
+        let mut e = engine(2, 2);
+        let mut states: Vec<St> = (0..4).map(|r| St { buf: vec![r as f64, 1.0] }).collect();
+        e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        for s in &states {
+            assert_eq!(s.buf, vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn row_team_allreduce_is_scoped() {
+        let mut e = engine(2, 2);
+        // ranks 0,1 = row 0 ; ranks 2,3 = row 1
+        let mut states: Vec<St> = (0..4).map(|r| St { buf: vec![r as f64] }).collect();
+        e.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| &mut s.buf);
+        assert_eq!(states[0].buf, vec![1.0]);
+        assert_eq!(states[1].buf, vec![1.0]);
+        assert_eq!(states[2].buf, vec![5.0]);
+        assert_eq!(states[3].buf, vec![5.0]);
+    }
+
+    #[test]
+    fn col_team_mean_averages() {
+        let mut e = engine(2, 2);
+        // col teams: {0,2}, {1,3}
+        let mut states: Vec<St> = (0..4).map(|r| St { buf: vec![(r * 2) as f64] }).collect();
+        e.allreduce(Phase::FedAvgComm, Scope::ColTeam, Reduce::Mean, &mut states, |s| &mut s.buf);
+        assert_eq!(states[0].buf, vec![2.0]); // (0 + 4)/2
+        assert_eq!(states[1].buf, vec![4.0]); // (2 + 6)/2
+        assert_eq!(states[2].buf, vec![2.0]);
+        assert_eq!(states[3].buf, vec![4.0]);
+    }
+
+    #[test]
+    fn modeled_compute_charges_deterministically() {
+        let mut e = engine(1, 4);
+        let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![] }).collect();
+        e.compute(Phase::SpGemv, &mut states, |rank, _| Cost::flops(1e6 * (rank + 1) as f64));
+        let g = e.profile.gamma_flop;
+        for rank in 0..4 {
+            assert!((e.clock[rank] - 1e6 * (rank + 1) as f64 * g).abs() < 1e-18);
+        }
+        assert!((e.book.mean_charged(Phase::SpGemv) - 2.5e6 * g).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sync_skew_booked_as_wait() {
+        let mut e = engine(1, 2);
+        let mut states: Vec<St> = (0..2).map(|_| St { buf: vec![0.0; 8] }).collect();
+        // Rank 1 is 1 ms slower.
+        e.compute(Phase::SpGemv, &mut states, |rank, _| Cost::flops(rank as f64 * 1e-3 / e_gamma()));
+        let skew_before = e.clock[1] - e.clock[0];
+        assert!(skew_before > 0.9e-3);
+        e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        // Clocks equalize; rank 0 waited ≈ skew.
+        assert!((e.clock[0] - e.clock[1]).abs() < 1e-15);
+        assert!(e.book.mean_wait(Phase::SstepComm) > 0.4e-3);
+    }
+
+    fn e_gamma() -> f64 {
+        CalibProfile::perlmutter().gamma_flop
+    }
+
+    #[test]
+    fn lanes_do_not_change_results() {
+        let run = |lanes: usize| {
+            let mut e = engine(2, 4).with_lanes(lanes);
+            let mut states: Vec<St> =
+                (0..8).map(|r| St { buf: vec![r as f64 * 0.5; 16] }).collect();
+            e.compute(Phase::SpGemv, &mut states, |rank, s| {
+                for v in s.buf.iter_mut() {
+                    *v = (*v + rank as f64).sin();
+                }
+                Cost::flops(16.0)
+            });
+            e.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| {
+                &mut s.buf
+            });
+            states.into_iter().map(|s| s.buf).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn reduction_order_is_linear_deterministic() {
+        // Catastrophic-cancellation probe: linear order gives a specific
+        // fp result; any reordering would change it.
+        let mut e = engine(1, 3);
+        let mut states =
+            vec![St { buf: vec![1e16] }, St { buf: vec![1.0] }, St { buf: vec![-1e16] }];
+        e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        // (1e16 + 1.0) - 1e16 = 0.0 in linear order.
+        assert_eq!(states[0].buf[0], 0.0);
+    }
+
+    #[test]
+    fn teams_cover_all_ranks() {
+        let e = engine(3, 4);
+        for scope in [Scope::RowTeam, Scope::ColTeam, Scope::World] {
+            let mut seen = vec![false; 12];
+            for team in e.teams(scope) {
+                for r in team {
+                    assert!(!seen[r]);
+                    seen[r] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn words_and_messages_accounted() {
+        let mut e = engine(1, 4);
+        let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![0.0; 100] }).collect();
+        e.allreduce(Phase::FedAvgComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        assert_eq!(e.book.words[0], 100.0);
+        assert_eq!(e.book.messages[0], 4.0); // 2·log2(4)
+    }
+}

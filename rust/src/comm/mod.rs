@@ -1,0 +1,26 @@
+//! The message-passing substrate (the role Cray MPICH plays in the paper).
+//!
+//! The solvers are bulk-synchronous: local compute phases separated by
+//! team-scoped Allreduces. [`Engine`] executes them over `p` *simulated
+//! ranks* with two orthogonal knobs:
+//!
+//! * **Compute lanes** — per-rank compute closures run sequentially
+//!   (deterministic order) or in parallel across OS threads. The collective
+//!   reduction order is fixed (linear in team-rank order) either way, so
+//!   solver trajectories are bit-identical across lane counts.
+//! * **Charging** — each rank carries a simulated clock. Compute advances
+//!   it either by *measured* wall time of that rank's real work or by the
+//!   *modeled* cost (`flops·γ_flop + bytes·γ(W)`, the cache-aware §6.5
+//!   form). Collectives advance it by the rank-aware Hockney time from the
+//!   calibration profile, after an implicit wait-for-slowest barrier — this
+//!   is exactly how the paper's sync-skew term arises, and the wait
+//!   component is booked separately so Table 10's decomposition can be
+//!   reproduced.
+//!
+//! Timing claims at p ≫ cores are thus *charged* from the paper's own
+//! measured machine profile while the algorithm does its real math on real
+//! partitions (see DESIGN.md §2).
+
+pub mod engine;
+
+pub use engine::{Charging, Cost, Engine, Reduce, Scope};

@@ -1,0 +1,200 @@
+//! Pluggable dense-compute backends.
+//!
+//! The solvers' sparse work (SpMV, Gram, scatter updates) runs on the CSR
+//! substrate in [`crate::sparse`]; the *dense, shape-static* hot spots — the
+//! s-step correction recurrence, the dense mini-batch gradient, the
+//! numerically-stable loss reduction — go through this trait so they can be
+//! served either by
+//!
+//! * [`native::NativeBackend`] — pure Rust `f64`, always available, the
+//!   correctness reference on the Rust side; or
+//! * [`crate::runtime::XlaBackend`] — the AOT-compiled JAX + Pallas
+//!   artifacts executed via PJRT (the three-layer architecture's L1/L2),
+//!   loaded from `artifacts/*.hlo.txt` at startup. Python never runs at
+//!   request time.
+//!
+//! The two backends are parity-tested against each other and against the
+//! Python `ref.py` oracle (see `rust/tests/` and `python/tests/`).
+
+pub mod native;
+
+pub use native::NativeBackend;
+
+/// Dense compute operations used on the solver hot path.
+pub trait ComputeBackend: Sync {
+    /// Backend name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Elementwise logistic residual `out[i] = 1 / (1 + exp(v[i]))`
+    /// (Algorithm 1 line 4 with labels folded into the matrix).
+    fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]);
+
+    /// The s-step correction recurrence (Algorithm 3 lines 9–14).
+    ///
+    /// Inputs: `g` — the `sb × sb` lower-triangular Gram `tril(YYᵀ)`
+    /// (row-major, upper triangle ignored); `v = Y·x_sk` (`sb`);
+    /// `eta_over_b = η/b`. Output `z` (`sb`): for each step `j`,
+    /// `t_j = v_j + (η/b)·Σ_{l<j} G[j,l]·z_l`, then
+    /// `z_j = 1/(1 + exp(t_j))` — the corrected residuals whose scatter
+    /// `x += (η/b)·Yᵀz` advances the weights by `s` SGD steps at once.
+    fn sstep_correct(
+        &self,
+        s: usize,
+        b: usize,
+        g: &[f64],
+        v: &[f64],
+        eta_over_b: f64,
+        z: &mut [f64],
+    );
+
+    /// Dense mini-batch logistic gradient step:
+    /// `margins = A_blk·x` (`A_blk` row-major `b × n`, labels folded),
+    /// `u = 1/(1+exp(margins))`, `x ← x + (η/b)·A_blkᵀ·u`, in place.
+    /// (The dense/epsilon path.)
+    fn dense_grad_step(&self, b: usize, n: usize, a_blk: &[f64], x: &mut [f64], eta: f64);
+
+    /// Numerically-stable logistic loss reduction:
+    /// `Σ_i log(1 + exp(−margins[i]))` (caller divides by m).
+    fn loss_sum(&self, margins: &[f64]) -> f64;
+}
+
+/// Backend conformance suite: any `ComputeBackend` must pass these.
+/// Public so the runtime crate tests can run it against the XLA backend.
+pub fn conformance_suite(be: &dyn ComputeBackend) {
+    conformance::sigmoid_matches_scalar(be);
+    conformance::sstep_with_zero_gram_is_plain_sigmoid(be);
+    conformance::sstep_matches_sequential_sgd_reference(be);
+    conformance::dense_grad_matches_hand_rolled(be);
+    conformance::loss_sum_is_stable(be);
+}
+
+mod conformance {
+    use super::*;
+    use crate::util::Prng;
+
+    pub fn sigmoid_matches_scalar(be: &dyn ComputeBackend) {
+        let v = [-30.0, -1.0, 0.0, 1.0, 30.0, 700.0, -700.0];
+        let mut out = [0.0; 7];
+        be.sigmoid_residual(&v, &mut out);
+        for (i, &t) in v.iter().enumerate() {
+            let want = if t > 500.0 { 0.0 } else { 1.0 / (1.0 + t.exp()) };
+            assert!((out[i] - want).abs() < 1e-12, "t={t}: {} vs {want}", out[i]);
+        }
+    }
+
+    pub fn sstep_with_zero_gram_is_plain_sigmoid(be: &dyn ComputeBackend) {
+        let (s, b) = (3, 4);
+        let g = vec![0.0; (s * b) * (s * b)];
+        let v: Vec<f64> = (0..s * b).map(|i| (i as f64 - 6.0) / 3.0).collect();
+        let mut z = vec![0.0; s * b];
+        be.sstep_correct(s, b, &g, &v, 0.1, &mut z);
+        let mut want = vec![0.0; s * b];
+        be.sigmoid_residual(&v, &mut want);
+        for i in 0..s * b {
+            assert!((z[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    /// The defining property (paper §5.1): s-step SGD is an algebraic
+    /// reformulation of SGD and converges identically up to fp error. Run
+    /// s sequential SGD steps directly on a small dense problem and check
+    /// the bundle produces the same final weights.
+    pub fn sstep_matches_sequential_sgd_reference(be: &dyn ComputeBackend) {
+        let mut rng = Prng::new(42);
+        let (s, b, n) = (4usize, 3usize, 8usize);
+        let eta = 0.5;
+        // Dense rows of Y (labels already folded).
+        let y: Vec<f64> = (0..s * b * n).map(|_| rng.next_gaussian()).collect();
+        let x0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+
+        // Reference: s plain SGD steps.
+        let mut x_ref = x0.clone();
+        for j in 0..s {
+            let mut t = vec![0.0; b];
+            for i in 0..b {
+                let row = &y[(j * b + i) * n..(j * b + i + 1) * n];
+                t[i] = row.iter().zip(&x_ref).map(|(a, b)| a * b).sum();
+            }
+            let mut u = vec![0.0; b];
+            be.sigmoid_residual(&t, &mut u);
+            for i in 0..b {
+                let row = &y[(j * b + i) * n..(j * b + i + 1) * n];
+                for c in 0..n {
+                    x_ref[c] += eta / b as f64 * u[i] * row[c];
+                }
+            }
+        }
+
+        // Bundle: G = tril(YYᵀ), v = Y·x0, correct, then x = x0 + η/b·Yᵀz.
+        let q = s * b;
+        let mut g = vec![0.0; q * q];
+        for i in 0..q {
+            for l in 0..=i {
+                g[i * q + l] = (0..n).map(|c| y[i * n + c] * y[l * n + c]).sum();
+            }
+        }
+        let v: Vec<f64> =
+            (0..q).map(|i| (0..n).map(|c| y[i * n + c] * x0[c]).sum()).collect();
+        let mut z = vec![0.0; q];
+        be.sstep_correct(s, b, &g, &v, eta / b as f64, &mut z);
+        let mut x_bundle = x0;
+        for i in 0..q {
+            for c in 0..n {
+                x_bundle[c] += eta / b as f64 * z[i] * y[i * n + c];
+            }
+        }
+        for c in 0..n {
+            assert!(
+                (x_bundle[c] - x_ref[c]).abs() < 1e-10,
+                "weight {c}: bundle {} vs sequential {}",
+                x_bundle[c],
+                x_ref[c]
+            );
+        }
+    }
+
+    pub fn dense_grad_matches_hand_rolled(be: &dyn ComputeBackend) {
+        let mut rng = Prng::new(7);
+        let (b, n) = (5usize, 6usize);
+        let a: Vec<f64> = (0..b * n).map(|_| rng.next_gaussian()).collect();
+        let x0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let eta = 0.3;
+
+        let mut x_got = x0.clone();
+        be.dense_grad_step(b, n, &a, &mut x_got, eta);
+
+        let mut x_want = x0;
+        let mut t = vec![0.0; b];
+        for i in 0..b {
+            t[i] = (0..n).map(|c| a[i * n + c] * x_want[c]).sum();
+        }
+        let mut u = vec![0.0; b];
+        be.sigmoid_residual(&t, &mut u);
+        for i in 0..b {
+            for c in 0..n {
+                x_want[c] += eta / b as f64 * u[i] * a[i * n + c];
+            }
+        }
+        for c in 0..n {
+            assert!((x_got[c] - x_want[c]).abs() < 1e-12);
+        }
+    }
+
+    pub fn loss_sum_is_stable(be: &dyn ComputeBackend) {
+        let margins = [0.0, 1.0, -1.0, 100.0, -100.0, 800.0, -800.0];
+        let got = be.loss_sum(&margins);
+        let want: f64 = margins.iter().map(|&m| crate::data::stable_log1p_exp(-m)).sum();
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        assert!(got.is_finite());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_conformance() {
+        conformance_suite(&NativeBackend);
+    }
+}

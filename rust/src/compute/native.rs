@@ -1,0 +1,139 @@
+//! Pure-Rust `f64` compute backend — the Rust-side correctness reference
+//! and the default hot path when the XLA artifacts are not built.
+
+use super::ComputeBackend;
+
+/// Zero-sized native backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), out.len());
+        for (o, &t) in out.iter_mut().zip(v) {
+            // 1/(1+exp(t)) is stable for t ≥ 0; for very negative t the
+            // exp underflows to 0 giving exactly 1.0 — also fine. Only
+            // t → +inf needs the early exit to avoid exp overflow → inf,
+            // which still divides to 0.0 correctly, so no branch needed
+            // beyond NaN protection.
+            *o = if t > 700.0 { 0.0 } else { 1.0 / (1.0 + t.exp()) };
+        }
+    }
+
+    fn sstep_correct(
+        &self,
+        s: usize,
+        b: usize,
+        g: &[f64],
+        v: &[f64],
+        eta_over_b: f64,
+        z: &mut [f64],
+    ) {
+        let q = s * b;
+        assert_eq!(g.len(), q * q, "gram size");
+        assert_eq!(v.len(), q, "v size");
+        assert_eq!(z.len(), q, "z size");
+        let mut t = vec![0.0f64; b];
+        for j in 0..s {
+            let row0 = j * b;
+            // t = v_j + η/b · Σ_{l<j} G[j-block, l-block] · z_l
+            // (one dense (b × j·b)·(j·b) product against already-computed z).
+            for i in 0..b {
+                let gi = &g[(row0 + i) * q..(row0 + i) * q + row0];
+                let mut acc = 0.0;
+                for (gv, zv) in gi.iter().zip(&z[..row0]) {
+                    acc += gv * zv;
+                }
+                t[i] = v[row0 + i] + eta_over_b * acc;
+            }
+            // z_j = sigmoid residual of t.
+            for i in 0..b {
+                z[row0 + i] = if t[i] > 700.0 { 0.0 } else { 1.0 / (1.0 + t[i].exp()) };
+            }
+        }
+    }
+
+    fn dense_grad_step(&self, b: usize, n: usize, a_blk: &[f64], x: &mut [f64], eta: f64) {
+        assert_eq!(a_blk.len(), b * n, "a_blk size");
+        assert_eq!(x.len(), n, "x size");
+        let mut u = vec![0.0f64; b];
+        for i in 0..b {
+            let row = &a_blk[i * n..(i + 1) * n];
+            let mut acc = 0.0;
+            for (a, xv) in row.iter().zip(x.iter()) {
+                acc += a * xv;
+            }
+            u[i] = if acc > 700.0 { 0.0 } else { 1.0 / (1.0 + acc.exp()) };
+        }
+        let scale = eta / b as f64;
+        for i in 0..b {
+            let c = scale * u[i];
+            if c == 0.0 {
+                continue;
+            }
+            let row = &a_blk[i * n..(i + 1) * n];
+            for (xv, a) in x.iter_mut().zip(row) {
+                *xv += c * a;
+            }
+        }
+    }
+
+    fn loss_sum(&self, margins: &[f64]) -> f64 {
+        margins.iter().map(|&m| crate::data::stable_log1p_exp(-m)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::ComputeBackend;
+
+    #[test]
+    fn sigmoid_extremes() {
+        let be = NativeBackend;
+        let mut out = [0.0; 3];
+        be.sigmoid_residual(&[1e308, -1e308, 0.0], &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 1.0);
+        assert_eq!(out[2], 0.5);
+    }
+
+    #[test]
+    fn correction_uses_only_lower_triangle() {
+        let be = NativeBackend;
+        let (s, b) = (2, 2);
+        let q = s * b;
+        let mut g = vec![0.0; q * q];
+        // Fill upper triangle with garbage; must not affect the result.
+        for i in 0..q {
+            for j in (i + 1)..q {
+                g[i * q + j] = f64::NAN;
+            }
+        }
+        g[2 * q] = 1.0; // G[2,0]
+        let v = vec![0.1, 0.2, 0.3, 0.4];
+        let mut z = vec![0.0; q];
+        be.sstep_correct(s, b, &g, &v, 0.5, &mut z);
+        assert!(z.iter().all(|x| x.is_finite()), "z={z:?}");
+    }
+
+    #[test]
+    fn dense_grad_reduces_loss() {
+        let be = NativeBackend;
+        // Separable toy data: labels folded so all margins should grow.
+        let a = vec![1.0, 0.0, 0.0, 1.0, 0.5, 0.5];
+        let mut x = vec![0.0, 0.0];
+        for _ in 0..200 {
+            be.dense_grad_step(3, 2, &a, &mut x, 0.5);
+        }
+        // All folded margins positive → loss well below log 2.
+        let margins: Vec<f64> =
+            (0..3).map(|i| a[i * 2] * x[0] + a[i * 2 + 1] * x[1]).collect();
+        let loss = be.loss_sum(&margins) / 3.0;
+        assert!(loss < 0.3, "loss={loss}");
+    }
+}

@@ -1,0 +1,353 @@
+//! Machine calibration profiles: measured `α(q)`, `β(q)`, `γ(W)`.
+//!
+//! [`CalibProfile::perlmutter`] ships the paper's Table 7 verbatim — the
+//! NERSC Cray EX (Perlmutter CPU) measurements this reproduction charges
+//! simulated communication time from (see DESIGN.md §2 for why). The
+//! defining structural feature is the **order-of-magnitude β discontinuity
+//! at the per-node rank boundary** `q = R = 64`, which is what makes the
+//! topology rule (Eq. 7) parameter-free.
+//!
+//! [`measure_local`] produces the same profile shape from microbenchmarks
+//! on the host (shared-memory allreduce sweep + `ddot` cache sweep), the
+//! way the paper's §7.1 does on Perlmutter.
+
+use std::time::Instant;
+
+/// One Allreduce calibration point: total ranks, latency `α` (s), inverse
+/// bandwidth `β` (s/byte).
+#[derive(Clone, Copy, Debug)]
+pub struct CommPoint {
+    /// Ranks participating in the Allreduce.
+    pub ranks: usize,
+    /// Latency per message batch, seconds.
+    pub alpha: f64,
+    /// Seconds per byte.
+    pub beta: f64,
+}
+
+/// One memory-tier calibration point: working set ≤ `bytes` costs `gamma`
+/// seconds per byte.
+#[derive(Clone, Copy, Debug)]
+pub struct MemTier {
+    /// Tier label (L1/L2/L3/DRAM).
+    pub name: &'static str,
+    /// Upper working-set bound in bytes (`usize::MAX` for DRAM).
+    pub max_bytes: usize,
+    /// Seconds per byte streamed from this tier.
+    pub gamma: f64,
+}
+
+/// A machine calibration profile (the paper's Table 7 as data).
+#[derive(Clone, Debug)]
+pub struct CalibProfile {
+    /// Profile name (e.g. `perlmutter-cpu`).
+    pub name: String,
+    /// Ranks per node `R` — the β-step boundary and the topology-rule input.
+    pub ranks_per_node: usize,
+    /// Per-core cache capacity `L_cap` in bytes (the topology rule's second
+    /// machine constant; L2 = 1 MB on EPYC 7763).
+    pub l_cap_bytes: usize,
+    /// Intra-node Allreduce points (q ≤ R), ascending in ranks.
+    pub intra: Vec<CommPoint>,
+    /// Inter-node Allreduce points (q > R), ascending in ranks.
+    pub inter: Vec<CommPoint>,
+    /// Memory tiers, ascending in capacity.
+    pub tiers: Vec<MemTier>,
+    /// Seconds per floating-point operation for the leading-order model
+    /// (the paper's flat `γ`; the refinements replace it with `γ(W)`).
+    /// Calibrated for *sparse, memory-bound* streaming compute.
+    pub gamma_flop: f64,
+    /// Seconds per flop for *dense, vectorizable* compute (the s-step
+    /// correction's `2sb` extra flops run at vector rate, which is what
+    /// makes the paper's §6.4 CA-overhead inequality
+    /// `α·log p_c / γ > s²b²` hold up to s=32, b=64).
+    pub gamma_flop_dense: f64,
+}
+
+impl CalibProfile {
+    /// The paper's measured Perlmutter CPU profile (Table 7, verbatim).
+    pub fn perlmutter() -> CalibProfile {
+        let us = 1e-6;
+        CalibProfile {
+            name: "perlmutter-cpu".into(),
+            ranks_per_node: 64,
+            l_cap_bytes: 1 << 20, // L2/core, AMD EPYC 7763
+            intra: vec![
+                // Single-rank β is the shared-memory copy cost; α undefined
+                // in the paper (no message) — use 0.
+                CommPoint { ranks: 1, alpha: 0.0, beta: 5.34e-11 },
+                CommPoint { ranks: 8, alpha: 3.41 * us, beta: 5.90e-10 },
+                CommPoint { ranks: 32, alpha: 3.39 * us, beta: 1.50e-9 },
+                CommPoint { ranks: 64, alpha: 4.22 * us, beta: 2.67e-9 },
+            ],
+            inter: vec![
+                // Inter-node table: 1 node = 64 ranks ... 256 nodes = 16384.
+                CommPoint { ranks: 64, alpha: 3.64 * us, beta: 2.66e-9 },
+                CommPoint { ranks: 128, alpha: 8.36 * us, beta: 3.14e-9 },
+                CommPoint { ranks: 256, alpha: 12.56 * us, beta: 3.33e-9 },
+                CommPoint { ranks: 512, alpha: 14.46 * us, beta: 3.73e-9 },
+                CommPoint { ranks: 1024, alpha: 23.23 * us, beta: 4.14e-9 },
+                CommPoint { ranks: 2048, alpha: 43.22 * us, beta: 5.15e-9 },
+                CommPoint { ranks: 4096, alpha: 92.71 * us, beta: 5.37e-9 },
+                CommPoint { ranks: 8192, alpha: 57.13 * us, beta: 6.10e-9 },
+                CommPoint { ranks: 16384, alpha: 84.92 * us, beta: 6.65e-9 },
+            ],
+            tiers: vec![
+                MemTier { name: "L1", max_bytes: 16 << 10, gamma: 4.0e-12 },
+                MemTier { name: "L2", max_bytes: 1 << 20, gamma: 1.25e-11 },
+                MemTier { name: "L3", max_bytes: 32 << 20, gamma: 1.5e-11 },
+                MemTier { name: "DRAM", max_bytes: usize::MAX, gamma: 2.6e-11 },
+            ],
+            // ~2 flops per f64 word at DRAM bandwidth ≈ 1e-10 s/flop for
+            // sparse streaming compute. The dense-vector rate below gives
+            // α/γ_dense ≈ 4×10⁶, inside the paper's §6.4 [10⁶, 10⁸] band.
+            gamma_flop: 1.0e-10,
+            gamma_flop_dense: 1.0e-12,
+        }
+    }
+
+    /// Perlmutter profile with **contended, per-core effective** cache
+    /// tiers: under 64 ranks/node the shared L3's per-core share (~512 KB)
+    /// is smaller than L2, so working sets beyond L2 effectively price at
+    /// DRAM — exactly the paper's "spilling out of L2 (1 MB/core) into L3
+    /// or DRAM" accounting (§6.5). This is the profile the charged
+    /// experiments use; the single-thread Table 7 tiers remain in
+    /// [`CalibProfile::perlmutter`].
+    pub fn perlmutter_contended() -> CalibProfile {
+        let mut p = Self::perlmutter();
+        p.name = "perlmutter-cpu-contended".into();
+        p.tiers = vec![
+            MemTier { name: "L1", max_bytes: 16 << 10, gamma: 4.0e-12 },
+            MemTier { name: "L2", max_bytes: 1 << 20, gamma: 1.25e-11 },
+            MemTier { name: "DRAM", max_bytes: usize::MAX, gamma: 2.6e-11 },
+        ];
+        p
+    }
+
+    /// Rank-aware `α(q)`: piecewise log-linear interpolation, intra-node
+    /// table below `R`, inter-node table above (paper §6.5 "rank-aware β",
+    /// applied to α symmetrically).
+    pub fn alpha(&self, q: usize) -> f64 {
+        self.lookup(q, |p| p.alpha)
+    }
+
+    /// Rank-aware `β(q)` in s/byte.
+    pub fn beta(&self, q: usize) -> f64 {
+        self.lookup(q, |p| p.beta)
+    }
+
+    fn lookup(&self, q: usize, get: impl Fn(&CommPoint) -> f64) -> f64 {
+        assert!(q >= 1, "allreduce over zero ranks");
+        let table = if q <= self.ranks_per_node { &self.intra } else { &self.inter };
+        interp_loglog(table, q, &get)
+    }
+
+    /// Cache-tiered `γ(W)`: seconds per byte for a working set of `bytes`
+    /// (§6.5 "cache-aware compute").
+    pub fn gamma_ws(&self, bytes: usize) -> f64 {
+        for t in &self.tiers {
+            if bytes <= t.max_bytes {
+                return t.gamma;
+            }
+        }
+        self.tiers.last().expect("profile has tiers").gamma
+    }
+
+    /// Tier name a working set of `bytes` falls in.
+    pub fn tier_name(&self, bytes: usize) -> &'static str {
+        for t in &self.tiers {
+            if bytes <= t.max_bytes {
+                return t.name;
+            }
+        }
+        self.tiers.last().expect("profile has tiers").name
+    }
+}
+
+/// Log-log interpolation over an ascending table; clamps outside the range.
+fn interp_loglog(table: &[CommPoint], q: usize, get: &impl Fn(&CommPoint) -> f64) -> f64 {
+    assert!(!table.is_empty());
+    if q <= table[0].ranks {
+        return get(&table[0]);
+    }
+    if q >= table[table.len() - 1].ranks {
+        return get(&table[table.len() - 1]);
+    }
+    let idx = table.partition_point(|p| p.ranks < q);
+    let (lo, hi) = (&table[idx - 1], &table[idx]);
+    if lo.ranks == q {
+        return get(lo);
+    }
+    let (vlo, vhi) = (get(lo), get(hi));
+    if vlo <= 0.0 || vhi <= 0.0 {
+        // Cannot log-interpolate through zero (the 1-rank α point); fall
+        // back to linear.
+        let t = (q - lo.ranks) as f64 / (hi.ranks - lo.ranks) as f64;
+        return vlo + t * (vhi - vlo);
+    }
+    let t = ((q as f64).ln() - (lo.ranks as f64).ln())
+        / ((hi.ranks as f64).ln() - (lo.ranks as f64).ln());
+    (vlo.ln() + t * (vhi.ln() - vlo.ln())).exp()
+}
+
+/// Measure a local profile the way the paper's §7.1 measures Perlmutter:
+/// an in-memory "allreduce" sweep over thread counts and payload sizes
+/// (fit `T = 2⌈log₂q⌉α + Wβ` by two-point regression) and a `ddot` sweep
+/// over working sets for `γ(W)`. `quick` shrinks the sweep for tests.
+pub fn measure_local(quick: bool) -> CalibProfile {
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let qs: Vec<usize> =
+        [1usize, 2, 4, 8, 16].iter().copied().filter(|&q| q <= max_threads).collect();
+    let sizes: &[usize] =
+        if quick { &[1 << 12, 1 << 16] } else { &[1 << 10, 1 << 14, 1 << 18, 1 << 22] };
+
+    let mut intra = Vec::new();
+    for &q in &qs {
+        // Fit alpha/beta from the smallest and largest payload.
+        let t_small = time_allreduce(q, sizes[0], if quick { 3 } else { 10 });
+        let t_large = time_allreduce(q, sizes[sizes.len() - 1], if quick { 3 } else { 10 });
+        let w_small = (sizes[0] * 8) as f64;
+        let w_large = (sizes[sizes.len() - 1] * 8) as f64;
+        let beta = ((t_large - t_small) / (w_large - w_small)).max(1e-13);
+        let lat_div = 2.0 * ((q as f64).log2().ceil()).max(1.0);
+        let alpha = ((t_small - beta * w_small) / lat_div).max(1e-9);
+        intra.push(CommPoint { ranks: q, alpha, beta });
+    }
+
+    // γ(W): ddot over increasing working sets.
+    let mut tiers = Vec::new();
+    let tier_sizes: &[(usize, &'static str)] = &[
+        (8 << 10, "L1"),
+        (256 << 10, "L2"),
+        (8 << 20, "L3"),
+        (usize::MAX, "DRAM"),
+    ];
+    for &(cap, name) in tier_sizes {
+        let ws = if cap == usize::MAX { 64 << 20 } else { cap / 2 };
+        let n = (ws / 16).max(1024); // two f64 arrays
+        let reps = if quick { 2 } else { 8 };
+        let gamma = time_ddot(n, reps) / (2.0 * 8.0 * n as f64);
+        tiers.push(MemTier { name, max_bytes: cap, gamma: gamma.max(1e-13) });
+    }
+
+    let inter = vec![*intra.last().expect("at least one comm point")];
+    let gamma_flop = tiers[2].gamma * 8.0; // ≈ one flop per word at L3 speed
+    CalibProfile {
+        name: "local".into(),
+        ranks_per_node: max_threads,
+        l_cap_bytes: 1 << 20,
+        intra,
+        inter,
+        tiers,
+        gamma_flop,
+        gamma_flop_dense: gamma_flop * 0.01,
+    }
+}
+
+/// Time one simulated shared-memory allreduce (q threads each summing a
+/// length-`words` array into a shared accumulator through a barrier).
+fn time_allreduce(q: usize, words: usize, reps: usize) -> f64 {
+    use std::sync::{Arc, Barrier, Mutex};
+    let barrier = Arc::new(Barrier::new(q));
+    let acc = Arc::new(Mutex::new(vec![0.0f64; words]));
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..q {
+            let barrier = barrier.clone();
+            let acc = acc.clone();
+            scope.spawn(move || {
+                let local = vec![t as f64; words];
+                for _ in 0..reps {
+                    barrier.wait();
+                    {
+                        let mut a = acc.lock().unwrap();
+                        for (x, l) in a.iter_mut().zip(&local) {
+                            *x += l;
+                        }
+                    }
+                    barrier.wait();
+                }
+            });
+        }
+    });
+    start.elapsed().as_secs_f64() / reps as f64
+}
+
+/// Time a ddot of length `n` (median of `reps`).
+fn time_ddot(n: usize, reps: usize) -> f64 {
+    let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+    let y: Vec<f64> = (0..n).map(|i| (i % 5) as f64).collect();
+    let mut times = Vec::with_capacity(reps);
+    let mut sink = 0.0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += x[i] * y[i];
+        }
+        sink += acc;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(sink);
+    crate::util::stats::median(&times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perlmutter_table_points_exact() {
+        let p = CalibProfile::perlmutter();
+        // Exact table hits.
+        assert!((p.beta(64) - 2.67e-9).abs() < 1e-12);
+        assert!((p.beta(1) - 5.34e-11).abs() < 1e-13);
+        assert!((p.alpha(1024) - 23.23e-6).abs() < 1e-9);
+        assert!((p.beta(16384) - 6.65e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn beta_step_at_node_boundary() {
+        // The paper's structural observation: an order-of-magnitude jump
+        // between small intra-node teams and the inter-node regime.
+        let p = CalibProfile::perlmutter();
+        assert!(p.beta(8) < 1e-9);
+        assert!(p.beta(128) > 3e-9);
+        // And β is (weakly) increasing across the boundary.
+        assert!(p.beta(64) <= p.beta(65).max(p.beta(128)));
+    }
+
+    #[test]
+    fn interpolation_is_monotone_between_points() {
+        let p = CalibProfile::perlmutter();
+        let b100 = p.beta(100);
+        assert!(b100 > p.beta(65) - 1e-12 && b100 < p.beta(128) + 1e-12);
+        // Clamped outside.
+        assert_eq!(p.beta(100_000), p.beta(16384));
+    }
+
+    #[test]
+    fn gamma_tiers_step() {
+        let p = CalibProfile::perlmutter();
+        assert_eq!(p.gamma_ws(1 << 10), 4.0e-12);
+        assert_eq!(p.gamma_ws(1 << 20), 1.25e-11);
+        assert_eq!(p.gamma_ws(2 << 20), 1.5e-11);
+        assert_eq!(p.gamma_ws(1 << 30), 2.6e-11);
+        assert_eq!(p.tier_name(1 << 30), "DRAM");
+        assert_eq!(p.tier_name(100 << 10), "L2");
+    }
+
+    #[test]
+    fn local_measurement_produces_sane_profile() {
+        let p = measure_local(true);
+        assert!(!p.intra.is_empty());
+        for pt in &p.intra {
+            assert!(pt.alpha > 0.0 && pt.alpha < 1.0, "alpha={}", pt.alpha);
+            assert!(pt.beta > 0.0 && pt.beta < 1e-3, "beta={}", pt.beta);
+        }
+        // Tiers are ascending in gamma is not guaranteed on noisy hosts,
+        // but all must be positive and DRAM must exist.
+        assert_eq!(p.tiers.len(), 4);
+        assert!(p.tiers.iter().all(|t| t.gamma > 0.0));
+    }
+}

@@ -1,0 +1,85 @@
+//! Hockney's two-term communication model (paper §5.2, §6.1).
+//!
+//! One Allreduce over `q` ranks with a payload of `W` words costs
+//! `T = 2⌈log₂ q⌉·α + W·w·β`, the bandwidth-optimal reduce-scatter +
+//! all-gather bound of Thakur et al. / Rabenseifner ([33, 27] in the
+//! paper). α and β are supplied rank-aware by a [`CalibProfile`].
+
+use super::calib::CalibProfile;
+use crate::WORD_BYTES;
+
+/// Latency message count of one Allreduce over `q` ranks: `2⌈log₂ q⌉`.
+pub fn allreduce_messages(q: usize) -> f64 {
+    assert!(q >= 1);
+    if q == 1 {
+        0.0
+    } else {
+        2.0 * (q as f64).log2().ceil()
+    }
+}
+
+/// Time of one Allreduce of `words` f64 words over `q` ranks under the
+/// rank-aware profile.
+pub fn allreduce_time(profile: &CalibProfile, q: usize, words: usize) -> f64 {
+    if q <= 1 {
+        return 0.0; // no communication within a singleton team
+    }
+    let bytes = (words * WORD_BYTES) as f64;
+    allreduce_messages(q) * profile.alpha(q) + bytes * profile.beta(q)
+}
+
+/// Time under *fixed* α, β (the leading-order model of Table 2/3, before
+/// the rank-aware refinement).
+pub fn allreduce_time_flat(alpha: f64, beta: f64, q: usize, words: usize) -> f64 {
+    if q <= 1 {
+        return 0.0;
+    }
+    let bytes = (words * WORD_BYTES) as f64;
+    allreduce_messages(q) * alpha + bytes * beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_counts() {
+        assert_eq!(allreduce_messages(1), 0.0);
+        assert_eq!(allreduce_messages(2), 2.0);
+        assert_eq!(allreduce_messages(8), 6.0);
+        assert_eq!(allreduce_messages(9), 8.0); // ceil(log2 9) = 4
+    }
+
+    #[test]
+    fn singleton_team_is_free() {
+        let p = CalibProfile::perlmutter();
+        assert_eq!(allreduce_time(&p, 1, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn time_grows_with_payload_and_ranks() {
+        let p = CalibProfile::perlmutter();
+        let t_small = allreduce_time(&p, 8, 1_000);
+        let t_big = allreduce_time(&p, 8, 1_000_000);
+        assert!(t_big > t_small);
+        // Crossing the node boundary at fixed payload costs more.
+        let intra = allreduce_time(&p, 64, 100_000);
+        let inter = allreduce_time(&p, 128, 100_000);
+        assert!(inter > intra);
+    }
+
+    #[test]
+    fn latency_dominates_tiny_payloads() {
+        let p = CalibProfile::perlmutter();
+        let t = allreduce_time(&p, 64, 1);
+        let latency = allreduce_messages(64) * p.alpha(64);
+        assert!((t - latency) / t < 0.01, "latency share too small");
+    }
+
+    #[test]
+    fn flat_model_matches_hand_formula() {
+        let t = allreduce_time_flat(1e-6, 1e-9, 16, 1000);
+        let want = 2.0 * 4.0 * 1e-6 + 8000.0 * 1e-9;
+        assert!((t - want).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,29 @@
+//! The α-β-γ cost model of the paper (§5, §6) with every empirical
+//! refinement (§6.5).
+//!
+//! Components:
+//! * [`calib`] — machine calibration profiles: the paper's measured
+//!   Perlmutter Table 7 (rank-aware α(q)/β(q) with the intra/inter-node
+//!   step, cache-tiered γ(W)) plus a local-measurement path.
+//! * [`hockney`] — the two-term Allreduce time `2⌈log₂q⌉α + Wβ`.
+//! * [`model`] — the closed-form per-epoch runtime `T(p_r,p_c,s,b,τ)`
+//!   (Eq. 4) and its per-sample Table 3 decomposition.
+//! * [`optima`] — closed-form `s*` (Eq. 5), `b*` (Eq. 6), the fixed-point
+//!   joint optimum, and the bandwidth balance condition.
+//! * [`topology`] — the parameter-free mesh rule (Eq. 7).
+//! * [`regimes`] — the Table 5 operating-regime classifier.
+//! * [`predictor`] — the refined per-iteration predictor used for the
+//!   partitioner/mesh ranking study (Fig. 4): cache-aware γ(W), κ
+//!   multiplier, sync-skew, and the per-call `max(flop, c·n_local)` floor.
+
+pub mod calib;
+pub mod hockney;
+pub mod model;
+pub mod optima;
+pub mod predictor;
+pub mod regimes;
+pub mod topology;
+
+pub use calib::CalibProfile;
+pub use model::{HybridConfig, ModelBreakdown};
+pub use regimes::Regime;

@@ -1,0 +1,267 @@
+//! The closed-form HybridSGD runtime model — Eq. (4) of the paper.
+//!
+//! `T(p_r, p_c, s, b, τ) = (m/p)(6z̄ + 2sb)γ
+//!     + m·[ 2α(τ·log p_c + log p_r)/(sbτ)   (latency)
+//!         + ((s−1)b/2)·w·β                   (Gram BW)
+//!         + n·w·β/(sbτ·p_c) ]                (sync BW)`
+//!
+//! The model is used exactly as the paper uses it: as a **ranking and
+//! selection** tool over candidate `(p_r, p_c, s, b, τ, partitioner)`
+//! configurations (§6: "we use it as a selection tool rather than an
+//! absolute-runtime predictor"). The refined per-iteration predictor with
+//! the §6.5 corrections lives in [`super::predictor`].
+
+use super::calib::CalibProfile;
+use crate::mesh::Mesh;
+use crate::WORD_BYTES;
+
+/// A HybridSGD algorithm configuration (the tunables of Eq. 4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HybridConfig {
+    /// Processor mesh `p_r × p_c`.
+    pub mesh: Mesh,
+    /// Recurrence unrolling length (s-step depth); `s = 1` degenerates to
+    /// plain mini-batch steps.
+    pub s: usize,
+    /// Per-row-team mini-batch size.
+    pub b: usize,
+    /// Local steps between column (FedAvg) Allreduces; `τ ≥ s` required.
+    pub tau: usize,
+}
+
+impl HybridConfig {
+    /// Construct, checking the paper's `s ≤ τ` requirement.
+    pub fn new(mesh: Mesh, s: usize, b: usize, tau: usize) -> HybridConfig {
+        assert!(s >= 1 && b >= 1 && tau >= 1, "degenerate config");
+        assert!(tau >= s, "HybridSGD requires s <= tau (got s={s}, tau={tau})");
+        HybridConfig { mesh, s, b, tau }
+    }
+
+    /// Pure 1D s-step SGD corner (`p_r = 1`).
+    pub fn sstep_corner(p: usize, s: usize, b: usize) -> HybridConfig {
+        // τ is irrelevant at p_r = 1 (no column Allreduce partner); use a
+        // large value so the sync term vanishes, as the paper's Fig. 5 does
+        // (τ = 10⁴ at the s-step endpoint).
+        HybridConfig { mesh: Mesh::col_1d(p), s, b, tau: 10_000.max(s) }
+    }
+
+    /// Pure FedAvg corner (`p_c = 1, s = 1`).
+    pub fn fedavg_corner(p: usize, b: usize, tau: usize) -> HybridConfig {
+        HybridConfig { mesh: Mesh::row_1d(p), s: 1, b, tau }
+    }
+}
+
+/// Dataset shape parameters the model needs.
+#[derive(Clone, Copy, Debug)]
+pub struct DataShape {
+    /// Samples.
+    pub m: usize,
+    /// Features.
+    pub n: usize,
+    /// Mean nonzeros per row.
+    pub zbar: f64,
+}
+
+/// The four Eq. (4) terms (seconds per epoch).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModelBreakdown {
+    /// `(m/p)(6z̄ + 2sb)γ`.
+    pub compute: f64,
+    /// `m·2α(τ log p_c + log p_r)/(sbτ)`.
+    pub latency: f64,
+    /// `m·((s−1)b/2)·wβ` — the s-step Gram/residual message.
+    pub gram_bw: f64,
+    /// `m·nwβ/(sbτp_c)` — the FedAvg-style weight synchronization.
+    pub sync_bw: f64,
+}
+
+impl ModelBreakdown {
+    /// Total per-epoch time.
+    pub fn total(&self) -> f64 {
+        self.compute + self.latency + self.gram_bw + self.sync_bw
+    }
+
+    /// Largest term (drives the regime classification).
+    pub fn dominant(&self) -> (&'static str, f64) {
+        let terms = [
+            ("compute", self.compute),
+            ("latency", self.latency),
+            ("gram_bw", self.gram_bw),
+            ("sync_bw", self.sync_bw),
+        ];
+        terms
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("nonempty terms")
+    }
+}
+
+/// `L̃ = τ·log₂ p_c + log₂ p_r` (the combined latency weight of §6.3).
+pub fn ltilde(cfg: &HybridConfig) -> f64 {
+    let lc = if cfg.mesh.p_c > 1 { (cfg.mesh.p_c as f64).log2() } else { 0.0 };
+    let lr = if cfg.mesh.p_r > 1 { (cfg.mesh.p_r as f64).log2() } else { 0.0 };
+    cfg.tau as f64 * lc + lr
+}
+
+/// Evaluate Eq. (4) with *flat* machine constants (the leading-order model
+/// of Tables 1–3).
+pub fn eval_flat(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+) -> ModelBreakdown {
+    let (m, n) = (data.m as f64, data.n as f64);
+    let p = cfg.mesh.p() as f64;
+    let (s, b, tau) = (cfg.s as f64, cfg.b as f64, cfg.tau as f64);
+    let w = WORD_BYTES as f64;
+    let zbar = data.zbar;
+    let p_c = cfg.mesh.p_c as f64;
+
+    let compute = (m / p) * (6.0 * zbar + 2.0 * s * b) * gamma;
+    let latency = m * 2.0 * alpha * ltilde(cfg) / (s * b * tau);
+    // Gram message exists only when a row team has partners and s > 1.
+    let gram_bw =
+        if cfg.mesh.p_c > 1 { m * ((s - 1.0) * b / 2.0) * w * beta } else { 0.0 };
+    // Weight sync exists only when a column team has partners.
+    let sync_bw =
+        if cfg.mesh.p_r > 1 { m * n * w * beta / (s * b * tau * p_c) } else { 0.0 };
+    ModelBreakdown { compute, latency, gram_bw, sync_bw }
+}
+
+/// Evaluate Eq. (4) with the **rank-aware** α(q), β(q) refinement (§6.5):
+/// the row Allreduce (Gram) prices at `q = p_c` ranks, the column Allreduce
+/// (sync) at `q = p_r` ranks.
+pub fn eval(cfg: &HybridConfig, data: &DataShape, profile: &CalibProfile) -> ModelBreakdown {
+    let (m, n) = (data.m as f64, data.n as f64);
+    let p = cfg.mesh.p() as f64;
+    let (s, b, tau) = (cfg.s as f64, cfg.b as f64, cfg.tau as f64);
+    let w = WORD_BYTES as f64;
+    let p_c = cfg.mesh.p_c as f64;
+    let (q_row, q_col) = (cfg.mesh.p_c, cfg.mesh.p_r);
+
+    let compute = (m / p) * (6.0 * data.zbar + 2.0 * s * b) * profile.gamma_flop;
+    let lc = if q_row > 1 { (q_row as f64).log2() } else { 0.0 };
+    let lr = if q_col > 1 { (q_col as f64).log2() } else { 0.0 };
+    let latency = m
+        * 2.0
+        * (tau * lc * profile.alpha(q_row.max(1)) + lr * profile.alpha(q_col.max(1)))
+        / (s * b * tau);
+    let gram_bw = if q_row > 1 {
+        m * ((s - 1.0) * b / 2.0) * w * profile.beta(q_row)
+    } else {
+        0.0
+    };
+    let sync_bw = if q_col > 1 {
+        m * n * w * profile.beta(q_col) / (s * b * tau * p_c)
+    } else {
+        0.0
+    };
+    ModelBreakdown { compute, latency, gram_bw, sync_bw }
+}
+
+/// Bandwidth balance condition of §6.3: `(s−1)·s·b²·τ·p_c ≈ 2n`.
+/// Returns the ratio LHS/RHS — `> 1` means Gram-BW-dominated (shrink `s`
+/// or `b`), `< 1` means sync-BW-dominated (grow `τ` or `p_c`).
+pub fn bandwidth_balance(cfg: &HybridConfig, n: usize) -> f64 {
+    let (s, b, tau) = (cfg.s as f64, cfg.b as f64, cfg.tau as f64);
+    let p_c = cfg.mesh.p_c as f64;
+    ((s - 1.0) * s * b * b * tau * p_c) / (2.0 * n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn url_shape() -> DataShape {
+        DataShape { m: 2_396_130, n: 3_231_961, zbar: 116.0 }
+    }
+
+    #[test]
+    fn sstep_corner_has_no_sync_term() {
+        let cfg = HybridConfig::sstep_corner(256, 4, 32);
+        let b = eval(&cfg, &url_shape(), &CalibProfile::perlmutter());
+        assert_eq!(b.sync_bw, 0.0);
+        assert!(b.gram_bw > 0.0);
+    }
+
+    #[test]
+    fn fedavg_corner_has_no_gram_term() {
+        let cfg = HybridConfig::fedavg_corner(256, 32, 10);
+        let b = eval(&cfg, &url_shape(), &CalibProfile::perlmutter());
+        assert_eq!(b.gram_bw, 0.0);
+        assert!(b.sync_bw > 0.0);
+    }
+
+    #[test]
+    fn interior_mesh_beats_fedavg_on_url_shape() {
+        // The paper's headline: on url-like shapes (huge n, sparse), an
+        // interior mesh beats the FedAvg corner because the n-word sync
+        // shrinks by p_c.
+        let p = 256;
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        let fed = eval(&HybridConfig::fedavg_corner(p, 32, 10), &data, &prof).total();
+        let hyb =
+            eval(&HybridConfig::new(Mesh::new(4, 64), 4, 32, 10), &data, &prof).total();
+        assert!(hyb < fed, "hybrid {hyb} should beat fedavg {fed} on url shape");
+    }
+
+    #[test]
+    fn fedavg_wins_on_dense_small_n() {
+        // epsilon regime: n tiny, z̄ huge → compute dominates and the
+        // s-step Gram message is pure overhead.
+        let data = DataShape { m: 400_000, n: 2_000, zbar: 2_000.0 };
+        let prof = CalibProfile::perlmutter();
+        let p = 256;
+        let fed = eval(&HybridConfig::fedavg_corner(p, 32, 10), &data, &prof).total();
+        let hyb =
+            eval(&HybridConfig::new(Mesh::new(4, 64), 4, 32, 10), &data, &prof).total();
+        assert!(fed < hyb, "fedavg {fed} should beat hybrid {hyb} on epsilon shape");
+    }
+
+    #[test]
+    fn eq4_limits_match_section_6_2() {
+        // At p_r=1, p_c=p, τ→∞ Eq. 4 must reduce to the pure s-step cost.
+        let data = url_shape();
+        let (alpha, beta, gamma) = (3.64e-6, 2.66e-9, 1e-10);
+        let p = 64;
+        let (s, b) = (4.0f64, 32.0f64);
+        let cfg = HybridConfig::sstep_corner(p, 4, 32);
+        let got = eval_flat(&cfg, &data, alpha, beta, gamma);
+        let m = data.m as f64;
+        let want_compute = (m / p as f64) * (6.0 * data.zbar + 2.0 * s * b) * gamma;
+        let want_gram = m * (s - 1.0) * b / 2.0 * 8.0 * beta;
+        assert!((got.compute - want_compute).abs() < want_compute * 1e-12);
+        assert!((got.gram_bw - want_gram).abs() < want_gram * 1e-12);
+        // Latency at τ=10⁴: 2α·τ·log p/(sbτ) = 2α log p/(sb).
+        let want_lat = m * 2.0 * alpha * (p as f64).log2() / (s * b);
+        assert!((got.latency - want_lat).abs() < want_lat * 1e-9);
+        assert_eq!(got.sync_bw, 0.0);
+    }
+
+    #[test]
+    fn balance_condition_signs() {
+        let n = 3_231_961;
+        // Large s·b·τ·p_c → Gram-dominated.
+        let heavy = HybridConfig::new(Mesh::new(1, 256), 8, 64, 100);
+        assert!(bandwidth_balance(&heavy, n) > 1.0);
+        // Tiny s,b at small p_c → sync-dominated.
+        let light = HybridConfig::new(Mesh::new(128, 2), 2, 8, 2);
+        assert!(bandwidth_balance(&light, n) < 1.0);
+    }
+
+    #[test]
+    fn dominant_term_identification() {
+        let bd = ModelBreakdown { compute: 1.0, latency: 5.0, gram_bw: 2.0, sync_bw: 0.1 };
+        assert_eq!(bd.dominant().0, "latency");
+        assert!((bd.total() - 8.1).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "s <= tau")]
+    fn tau_less_than_s_rejected() {
+        HybridConfig::new(Mesh::new(2, 2), 8, 32, 4);
+    }
+}

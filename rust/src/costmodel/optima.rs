@@ -1,0 +1,140 @@
+//! Closed-form optima for the recurrence length `s` (Eq. 5) and batch size
+//! `b` (Eq. 6), their joint fixed point, and sweep-based verification
+//! helpers (paper §6.3).
+
+use super::model::{eval_flat, ltilde, DataShape, HybridConfig};
+use crate::WORD_BYTES;
+
+/// Eq. (5): `s* = sqrt( (2αL̃/(bτ) + nwβ/(bτp_c)) / ((2γ/p + wβ/2)·b) )`.
+pub fn s_star(cfg: &HybridConfig, data: &DataShape, alpha: f64, beta: f64, gamma: f64) -> f64 {
+    let w = WORD_BYTES as f64;
+    let (b, tau) = (cfg.b as f64, cfg.tau as f64);
+    let (p, p_c) = (cfg.mesh.p() as f64, cfg.mesh.p_c as f64);
+    let n = data.n as f64;
+    let b_s = 2.0 * alpha * ltilde(cfg) / (b * tau) + n * w * beta / (b * tau * p_c);
+    let a_s = (2.0 * gamma / p + w * beta / 2.0) * b;
+    (b_s / a_s).sqrt()
+}
+
+/// Eq. (6): `b* = sqrt( (2αL̃/τ + nwβ/(τp_c)) / ((2γs/p + (s−1)wβ/2)·s) )`.
+pub fn b_star(cfg: &HybridConfig, data: &DataShape, alpha: f64, beta: f64, gamma: f64) -> f64 {
+    let w = WORD_BYTES as f64;
+    let (s, tau) = (cfg.s as f64, cfg.tau as f64);
+    let (p, p_c) = (cfg.mesh.p() as f64, cfg.mesh.p_c as f64);
+    let n = data.n as f64;
+    let b_b = 2.0 * alpha * ltilde(cfg) / tau + n * w * beta / (tau * p_c);
+    let a_b = (2.0 * gamma * s / p + (s - 1.0).max(0.0) * w * beta / 2.0) * s;
+    (b_b / a_b).sqrt()
+}
+
+/// Joint `(s*, b*)` via the paper's one-step fixed-point iteration on
+/// Eq. (5)/(6), then rounded to the integer grid and clamped to
+/// `[1, s_max] × [1, b_max]`.
+pub fn joint_optimum(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    s_max: usize,
+    b_max: usize,
+) -> (usize, usize) {
+    // Start from the given config, take s* at current b, then b* at that s.
+    let s1 = s_star(cfg, data, alpha, beta, gamma).max(1.0);
+    let mut cfg2 = *cfg;
+    cfg2.s = (s1.round() as usize).clamp(1, s_max);
+    cfg2.tau = cfg2.tau.max(cfg2.s);
+    let b1 = b_star(&cfg2, data, alpha, beta, gamma).max(1.0);
+    let b_opt = (b1.round() as usize).clamp(1, b_max);
+    (cfg2.s, b_opt)
+}
+
+/// Verify `s*` against an exhaustive sweep of Eq. (4) over integer `s`
+/// (test helper and bench reporting): returns the sweep argmin.
+pub fn sweep_s(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    alpha: f64,
+    beta: f64,
+    gamma: f64,
+    s_max: usize,
+) -> usize {
+    (1..=s_max)
+        .min_by(|&sa, &sb| {
+            let mut ca = *cfg;
+            ca.s = sa;
+            ca.tau = ca.tau.max(sa);
+            let mut cb = *cfg;
+            cb.s = sb;
+            cb.tau = cb.tau.max(sb);
+            let ta = eval_flat(&ca, data, alpha, beta, gamma).total();
+            let tb = eval_flat(&cb, data, alpha, beta, gamma).total();
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .expect("nonempty sweep")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Mesh;
+
+    const ALPHA: f64 = 3.64e-6;
+    const BETA: f64 = 2.66e-9;
+    const GAMMA: f64 = 1e-10;
+
+    fn shape() -> DataShape {
+        DataShape { m: 100_000, n: 3_000_000, zbar: 100.0 }
+    }
+
+    #[test]
+    fn s_star_is_the_convex_minimum() {
+        // The continuous s* must land within one grid step of the integer
+        // sweep argmin of the latency+gram(+sync) trade-off.
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let data = shape();
+        let s_cont = s_star(&cfg, &data, ALPHA, BETA, GAMMA);
+        let s_sweep = sweep_s(&cfg, &data, ALPHA, BETA, GAMMA, 64);
+        assert!(
+            (s_cont - s_sweep as f64).abs() <= 1.5,
+            "continuous s*={s_cont} vs sweep argmin {s_sweep}"
+        );
+    }
+
+    #[test]
+    fn s_star_grows_with_latency() {
+        // More latency per message → longer unrolling pays.
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let data = shape();
+        let lo = s_star(&cfg, &data, 1e-7, BETA, GAMMA);
+        let hi = s_star(&cfg, &data, 1e-4, BETA, GAMMA);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn b_star_shrinks_with_s() {
+        let data = shape();
+        let c2 = HybridConfig::new(Mesh::new(4, 64), 2, 32, 10);
+        let c8 = HybridConfig::new(Mesh::new(4, 64), 8, 32, 10);
+        assert!(b_star(&c8, &data, ALPHA, BETA, GAMMA) < b_star(&c2, &data, ALPHA, BETA, GAMMA));
+    }
+
+    #[test]
+    fn joint_optimum_in_bounds() {
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let (s, b) = joint_optimum(&cfg, &shape(), ALPHA, BETA, GAMMA, 32, 512);
+        assert!((1..=32).contains(&s));
+        assert!((1..=512).contains(&b));
+    }
+
+    #[test]
+    fn balance_guides_direction() {
+        // Above the balance the model wants smaller s (Gram-dominated).
+        use super::super::model::bandwidth_balance;
+        let data = shape();
+        let heavy = HybridConfig::new(Mesh::new(1, 256), 16, 128, 100);
+        assert!(bandwidth_balance(&heavy, data.n) > 1.0);
+        let s_opt = s_star(&heavy, &data, ALPHA, BETA, GAMMA);
+        assert!(s_opt < 16.0, "should recommend shrinking s, got s*={s_opt}");
+    }
+}

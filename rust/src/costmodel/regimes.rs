@@ -1,0 +1,140 @@
+//! Operating-regime taxonomy (paper Table 5).
+//!
+//! Four regimes, classified from the dominant Eq. (4) term, each with the
+//! paper's threshold condition and recommended action.
+
+use super::calib::CalibProfile;
+use super::model::{self, DataShape, HybridConfig};
+
+/// The four operating regimes of Table 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Regime {
+    /// `γz̄sbτ ≫ pα log p` — scale out; s, b secondary.
+    ComputeBound,
+    /// `α log p · p_c ≫ nwβ` — maximize `sbτ`, prefer large s, b.
+    LatencyBound,
+    /// `(s−1)sb²τp_c ≫ 2n` — decrease s or b; FedAvg competitive.
+    GramBwBound,
+    /// `(s−1)sb²τp_c ≪ 2n` — increase τ or p_c.
+    SyncBwBound,
+}
+
+impl Regime {
+    /// Table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::ComputeBound => "Compute-bound",
+            Regime::LatencyBound => "Latency-bound",
+            Regime::GramBwBound => "Gram-BW-bound",
+            Regime::SyncBwBound => "Sync-BW-bound",
+        }
+    }
+
+    /// The paper's threshold condition, rendered.
+    pub fn condition(&self) -> &'static str {
+        match self {
+            Regime::ComputeBound => "gamma*zbar*s*b*tau >> p*alpha*log p",
+            Regime::LatencyBound => "alpha*log p * p_c >> n*w*beta",
+            Regime::GramBwBound => "(s-1)*s*b^2*tau*p_c >> 2n",
+            Regime::SyncBwBound => "(s-1)*s*b^2*tau*p_c << 2n",
+        }
+    }
+
+    /// The paper's "optimal action" column.
+    pub fn action(&self) -> &'static str {
+        match self {
+            Regime::ComputeBound => "increase p; s, b secondary",
+            Regime::LatencyBound => "maximize s*b*tau; prefer large s, b",
+            Regime::GramBwBound => "decrease s or b; use FedAvg",
+            Regime::SyncBwBound => "increase tau or p_c",
+        }
+    }
+}
+
+/// Classify a configuration by the dominant Eq. (4) term (rank-aware).
+/// When a bandwidth term dominates, the balance condition decides Gram vs
+/// sync (they are the two sides of `(s−1)sb²τp_c ⋛ 2n`).
+pub fn classify(cfg: &HybridConfig, data: &DataShape, profile: &CalibProfile) -> Regime {
+    let bd = model::eval(cfg, data, profile);
+    match bd.dominant().0 {
+        "compute" => Regime::ComputeBound,
+        "latency" => Regime::LatencyBound,
+        "gram_bw" => Regime::GramBwBound,
+        "sync_bw" => Regime::SyncBwBound,
+        other => unreachable!("unknown term {other}"),
+    }
+}
+
+/// The CA-overhead benefit condition of §6.4: recurrence unrolling's extra
+/// `2sb` flops/sample pay off when `α·log p_c / γ > s²b²`. The `2sb` extra
+/// flops are dense vector work, so `γ` here is the dense-flop rate
+/// (`gamma_flop_dense`); with Perlmutter's α this puts `α/γ ≈ 4×10⁶`,
+/// inside the paper's `[10⁶, 10⁸]` band, and the inequality holds for all
+/// `s ≤ 32, b ≤ 64, p_c ≥ 2` as the paper states.
+pub fn ca_overhead_beneficial(
+    s: usize,
+    b: usize,
+    p_c: usize,
+    alpha: f64,
+    gamma_flop_dense: f64,
+) -> bool {
+    if p_c < 2 {
+        return false;
+    }
+    alpha * (p_c as f64).log2() / gamma_flop_dense > (s * b * s * b) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::Mesh;
+
+    fn prof() -> CalibProfile {
+        CalibProfile::perlmutter()
+    }
+
+    #[test]
+    fn dense_small_n_is_compute_bound() {
+        // epsilon shape: z̄ = n = 2000 — at moderate p the per-rank sparse
+        // work dwarfs the tiny Gram/sync payloads (the paper's "dense
+        // epsilon falls in the compute-dominated regime").
+        let data = DataShape { m: 400_000, n: 2_000, zbar: 2_000.0 };
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 32, 10);
+        assert_eq!(classify(&cfg, &data, &prof()), Regime::ComputeBound);
+    }
+
+    #[test]
+    fn tiny_payload_many_ranks_is_latency_bound() {
+        let data = DataShape { m: 100_000, n: 1_000, zbar: 5.0 };
+        let cfg = HybridConfig::new(Mesh::new(2, 1024), 1, 1, 1);
+        assert_eq!(classify(&cfg, &data, &prof()), Regime::LatencyBound);
+    }
+
+    #[test]
+    fn huge_gram_message_is_gram_bound() {
+        let data = DataShape { m: 100_000, n: 50_000, zbar: 20.0 };
+        let cfg = HybridConfig::new(Mesh::new(1, 64), 32, 512, 100);
+        assert_eq!(classify(&cfg, &data, &prof()), Regime::GramBwBound);
+    }
+
+    #[test]
+    fn huge_n_small_batch_is_sync_bound() {
+        let data = DataShape { m: 100_000, n: 50_000_000, zbar: 10.0 };
+        let cfg = HybridConfig::new(Mesh::new(64, 2), 2, 4, 2);
+        assert_eq!(classify(&cfg, &data, &prof()), Regime::SyncBwBound);
+    }
+
+    #[test]
+    fn ca_overhead_holds_in_paper_band() {
+        // §6.4: holds for all s ≤ 32, b ≤ 64, p_c ≥ 2 at Perlmutter α/γ.
+        let p = prof();
+        for &(s, b) in &[(2usize, 8usize), (8, 32), (32, 64)] {
+            assert!(
+                ca_overhead_beneficial(s, b, 2, p.alpha(64), p.gamma_flop_dense),
+                "s={s} b={b}"
+            );
+        }
+        // And p_c = 1 never benefits (no row partner to amortize against).
+        assert!(!ca_overhead_beneficial(4, 32, 1, p.alpha(64), p.gamma_flop_dense));
+    }
+}

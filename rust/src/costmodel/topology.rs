@@ -1,0 +1,121 @@
+//! The parameter-free topology rule, Eq. (7):
+//!
+//! `p_c* = max( ⌈n·w / L_cap⌉, min(R, p) )`, `p_r* = p / p_c*`.
+//!
+//! Holding the row team within one node (`p_c ≤ R`) keeps the frequent row
+//! Allreduce on shared-memory transport; sliding `p_c` upward shrinks the
+//! `n/p_c` sync payload monotonically inside the intra-node piece, so the
+//! kink at `p_c = R` is the optimum. The cache term raises `p_c*` above `R`
+//! only when the per-rank weight slab `n·w/p_c` would spill `L_cap` at
+//! `p_c = R`. Only two machine constants — `R` and `L_cap` — are needed; no
+//! α-β-γ calibration (paper §6.3).
+
+use crate::mesh::Mesh;
+use crate::WORD_BYTES;
+
+/// Apply Eq. (7) for a dataset with `n` features on a machine with `R`
+/// ranks per node and `L_cap` bytes of per-core cache, at total ranks `p`.
+/// The raw rule value is snapped to the nearest *feasible* `p_c` (a divisor
+/// of `p`): the smallest divisor ≥ the rule value, or `p` if none.
+pub fn mesh_rule(n: usize, p: usize, ranks_per_node: usize, l_cap_bytes: usize) -> Mesh {
+    assert!(p >= 1);
+    let cache_term = (n * WORD_BYTES).div_ceil(l_cap_bytes);
+    let target = cache_term.max(ranks_per_node.min(p)).min(p);
+    let p_c = smallest_divisor_at_least(p, target);
+    Mesh::new(p / p_c, p_c)
+}
+
+/// Is the cache term binding (i.e. does it raise `p_c*` above `min(R, p)`)?
+/// On the paper's LIBSVM suite it never binds (`n·w ≤ R·L_cap = 64 MB`).
+pub fn cache_term_binding(n: usize, p: usize, ranks_per_node: usize, l_cap_bytes: usize) -> bool {
+    (n * WORD_BYTES).div_ceil(l_cap_bytes) > ranks_per_node.min(p)
+}
+
+fn smallest_divisor_at_least(p: usize, target: usize) -> usize {
+    for d in 1..=p {
+        if p % d == 0 && d >= target {
+            return d;
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const R: usize = 64;
+    const L_CAP: usize = 1 << 20;
+
+    // The paper's Table 4, verbatim: rule predictions on Perlmutter (R=64,
+    // L_cap = 1 MB), cache term non-binding on every LIBSVM entry.
+    #[test]
+    fn table4_url() {
+        let m = mesh_rule(3_231_961, 256, R, L_CAP);
+        assert_eq!((m.p_r, m.p_c), (4, 64));
+    }
+
+    #[test]
+    fn table4_synthetic() {
+        let m = mesh_rule(3_145_728, 128, R, L_CAP);
+        assert_eq!((m.p_r, m.p_c), (2, 64));
+    }
+
+    #[test]
+    fn table4_news20() {
+        let m = mesh_rule(1_355_191, 64, R, L_CAP);
+        assert_eq!((m.p_r, m.p_c), (1, 64));
+    }
+
+    #[test]
+    fn table4_rcv1() {
+        let m = mesh_rule(47_236, 16, R, L_CAP);
+        assert_eq!((m.p_r, m.p_c), (1, 16));
+    }
+
+    #[test]
+    fn cache_term_nonbinding_on_libsvm() {
+        for &n in &[3_231_961usize, 1_355_191, 47_236, 2_000] {
+            assert!(!cache_term_binding(n, 256, R, L_CAP), "n={n}");
+        }
+    }
+
+    #[test]
+    fn cache_term_binds_on_huge_n() {
+        // n·w = 800 MB ≫ 64 MB: the rule must push p_c past R.
+        let n = 100_000_000;
+        assert!(cache_term_binding(n, 2048, R, L_CAP));
+        let m = mesh_rule(n, 2048, R, L_CAP);
+        assert!(m.p_c > R, "p_c={} should exceed R", m.p_c);
+        // And the per-rank slab now fits (or p_c hit its ceiling p).
+        assert!(n * WORD_BYTES <= m.p_c * L_CAP || m.p_c == 2048);
+    }
+
+    #[test]
+    fn rule_saturates_at_small_p() {
+        // p < R: the whole machine is one node; rule picks the 1D s-step
+        // corner (p_c = p).
+        let m = mesh_rule(47_236, 8, R, L_CAP);
+        assert_eq!((m.p_r, m.p_c), (1, 8));
+    }
+
+    #[test]
+    fn rule_always_returns_valid_factorization() {
+        for p in [1usize, 2, 6, 12, 60, 96, 256, 384] {
+            for n in [1usize << 10, 1 << 20, 1 << 27] {
+                let m = mesh_rule(n, p, R, L_CAP);
+                assert_eq!(m.p(), p, "p={p} n={n} gave {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_snaps_to_divisor() {
+        // p = 96, target 64 → smallest divisor ≥ 64 is 96.
+        let m = mesh_rule(1 << 20, 96, R, L_CAP);
+        assert_eq!(m.p_c, 96);
+        // p = 192, target 64 → divisor 64 exists.
+        let m = mesh_rule(1 << 20, 192, R, L_CAP);
+        assert_eq!(m.p_c, 64);
+    }
+}

@@ -1,0 +1,183 @@
+//! LIBSVM / SVMlight sparse-format reader and writer.
+//!
+//! Format: one sample per line, `label idx:val idx:val ...`, indices
+//! 1-based, `#` comments allowed. The paper's datasets (rcv1, news20, url,
+//! epsilon) ship in this format from the LIBSVM repository [7]; with the
+//! real files on disk this loader replaces the synthetic profiles.
+
+use super::Dataset;
+use crate::sparse::Csr;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Parse LIBSVM text. Labels are normalized to ±1: positive labels
+/// (including `+1`, `1`, `2`...) map to +1.0, non-positive to −1.0
+/// (LIBSVM binary sets use either {+1,−1} or {1,2} conventions).
+/// `n_hint` optionally forces the feature count (otherwise max index).
+pub fn parse(text: &str, name: &str, n_hint: Option<usize>) -> Result<Dataset> {
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut y = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let row = y.len();
+        y.push(if label > 0.0 { 1.0 } else { -1.0 });
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected idx:val, got '{tok}'", lineno + 1))?;
+            let idx: usize =
+                idx_s.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
+            let val: f64 =
+                val_s.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based, got 0", lineno + 1);
+            }
+            if idx <= prev_idx {
+                bail!("line {}: indices must be strictly increasing", lineno + 1);
+            }
+            prev_idx = idx;
+            max_col = max_col.max(idx);
+            triplets.push((row, idx - 1, val));
+        }
+    }
+    let n = match n_hint {
+        Some(n) => {
+            if max_col > n {
+                bail!("n_hint {n} smaller than max feature index {max_col}");
+            }
+            n
+        }
+        None => max_col,
+    };
+    let a = Csr::from_triplets(y.len(), n, &triplets);
+    Ok(Dataset { name: name.to_string(), a, y })
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read<P: AsRef<Path>>(path: P, n_hint: Option<usize>) -> Result<Dataset> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let name = path
+        .as_ref()
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "libsvm".into());
+    parse(&text, &name, n_hint)
+}
+
+/// Serialize a dataset to LIBSVM text (1-based indices; floats use the
+/// shortest representation that round-trips, so write→read is lossless).
+pub fn to_string(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for r in 0..ds.m() {
+        let label = if ds.y[r] > 0.0 { "+1" } else { "-1" };
+        out.push_str(label);
+        let (ci, cv) = ds.a.row(r);
+        for (k, &c) in ci.iter().enumerate() {
+            out.push_str(&format!(" {}:{}", c + 1, fmt_g(cv[k])));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a dataset to a LIBSVM file on disk.
+pub fn write_file<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    f.write_all(to_string(ds).as_bytes())?;
+    Ok(())
+}
+
+fn fmt_g(v: f64) -> String {
+    // Shortest representation that round-trips.
+    let s = format!("{v}");
+    if s.parse::<f64>() == Ok(v) {
+        s
+    } else {
+        format!("{v:.17e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::Prng;
+
+    #[test]
+    fn parse_basic() {
+        let d = parse("+1 1:0.5 3:2\n-1 2:1.5 # trailing\n\n# comment\n1 1:1\n", "t", None)
+            .unwrap();
+        assert_eq!(d.m(), 3);
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(d.a.to_dense(), vec![0.5, 0.0, 2.0, 0.0, 1.5, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_label_conventions() {
+        // {1,2} convention: 2 is positive, and "0" maps negative.
+        let d = parse("2 1:1\n1 1:1\n0 1:1\n", "t", None).unwrap();
+        assert_eq!(d.y, vec![1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(parse("+1 0:1\n", "t", None).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unsorted() {
+        assert!(parse("+1 3:1 2:1\n", "t", None).is_err());
+    }
+
+    #[test]
+    fn parse_respects_n_hint() {
+        let d = parse("+1 2:1\n", "t", Some(10)).unwrap();
+        assert_eq!(d.n(), 10);
+        assert!(parse("+1 20:1\n", "t", Some(10)).is_err());
+    }
+
+    #[test]
+    fn roundtrip_synthetic() {
+        let mut rng = Prng::new(7);
+        let ds = synth::sparse_skewed("rt", 30, 20, 4, 0.7, &mut rng);
+        let text = to_string(&ds);
+        let back = parse(&text, "rt", Some(20)).unwrap();
+        assert_eq!(back.m(), ds.m());
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.y, ds.y);
+        let (da, db) = (ds.a.to_dense(), back.a.to_dense());
+        for (x, y) in da.iter().zip(&db) {
+            assert!((x - y).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Prng::new(8);
+        let ds = synth::sparse_skewed("file", 10, 8, 3, 0.0, &mut rng);
+        let path = std::env::temp_dir().join(format!("libsvm_test_{}.txt", std::process::id()));
+        write_file(&ds, &path).unwrap();
+        let back = read(&path, Some(8)).unwrap();
+        assert_eq!(back.m(), 10);
+        std::fs::remove_file(path).unwrap();
+    }
+}

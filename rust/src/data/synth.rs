@@ -1,0 +1,188 @@
+//! Synthetic dataset generators.
+//!
+//! Three families, matching the data regimes the paper evaluates:
+//!
+//! * [`sparse_skewed`] — each row draws `z̄` distinct columns from a
+//!   power-law column distribution `P(c) ∝ (c+1)^(−α)` (exactly the
+//!   generator of the paper's Fig. 3 skew sweep; `α = 0` uniform, `α = 1`
+//!   Zipf). This produces the heavy-tailed nonzero-per-column histograms
+//!   that drive the partitioning study.
+//! * [`sparse_uniform`] — `α = 0` shorthand, the paper's Fig. 7 (right) and
+//!   Table 4 "synthetic" dataset.
+//! * [`dense`] — fully dense Gaussian features (epsilon-like).
+//!
+//! Labels come from a *planted model*: a ground-truth weight vector `x★`
+//! with Gaussian entries produces `y = sign(A·x★)` and a fraction
+//! `label_noise` of labels is flipped. Convergence behaviour is therefore
+//! real (the optimum exists and SGD finds it), not mocked — a requirement
+//! for the time-to-target-loss experiments (Table 11).
+
+use super::Dataset;
+use crate::sparse::Csr;
+use crate::util::{Prng, Zipf};
+
+/// Fraction of labels flipped by default (keeps the Bayes loss away from 0
+/// so target-loss thresholds behave like the paper's real datasets).
+pub const DEFAULT_LABEL_NOISE: f64 = 0.05;
+
+/// Sparse dataset with power-law column skew.
+///
+/// * `m` samples × `n` features, exactly `zbar` nonzeros per row
+///   (capped at `n`), values N(0, 1/√z̄) so row norms are O(1).
+/// * `alpha` is the column-skew exponent of Fig. 3.
+pub fn sparse_skewed(
+    name: &str,
+    m: usize,
+    n: usize,
+    zbar: usize,
+    alpha: f64,
+    rng: &mut Prng,
+) -> Dataset {
+    let zipf = Zipf::new(n, alpha);
+    let z = zbar.min(n);
+    let scale = 1.0 / (z as f64).sqrt();
+    let mut indptr = Vec::with_capacity(m + 1);
+    indptr.push(0usize);
+    let mut indices: Vec<u32> = Vec::with_capacity(m * z);
+    let mut values: Vec<f64> = Vec::with_capacity(m * z);
+    let mut row_cols: Vec<u32> = Vec::with_capacity(z);
+    for _ in 0..m {
+        row_cols.clear();
+        // Draw distinct columns from the skewed law by rejection; for very
+        // skewed heads the same column repeats, so bound the attempts and
+        // fall back to uniform fill-in (keeps z̄ exact).
+        let mut attempts = 0;
+        while row_cols.len() < z && attempts < z * 30 {
+            let c = zipf.sample(rng) as u32;
+            if !row_cols.contains(&c) {
+                row_cols.push(c);
+            }
+            attempts += 1;
+        }
+        while row_cols.len() < z {
+            let c = rng.next_below(n) as u32;
+            if !row_cols.contains(&c) {
+                row_cols.push(c);
+            }
+        }
+        row_cols.sort_unstable();
+        for &c in row_cols.iter() {
+            indices.push(c);
+            values.push(rng.next_gaussian() * scale);
+        }
+        indptr.push(indices.len());
+    }
+    let a = Csr::from_parts(m, n, indptr, indices, values);
+    let y = planted_labels(&a, DEFAULT_LABEL_NOISE, rng);
+    Dataset { name: name.to_string(), a, y }
+}
+
+/// Sparse dataset with uniform column distribution (`alpha = 0`).
+pub fn sparse_uniform(name: &str, m: usize, n: usize, zbar: usize, rng: &mut Prng) -> Dataset {
+    sparse_skewed(name, m, n, zbar, 0.0, rng)
+}
+
+/// Dense dataset (epsilon-like): every entry N(0, 1/√n).
+pub fn dense(name: &str, m: usize, n: usize, rng: &mut Prng) -> Dataset {
+    let scale = 1.0 / (n as f64).sqrt();
+    let mut indptr = Vec::with_capacity(m + 1);
+    indptr.push(0);
+    let mut indices = Vec::with_capacity(m * n);
+    let mut values = Vec::with_capacity(m * n);
+    for _ in 0..m {
+        for c in 0..n {
+            indices.push(c as u32);
+            values.push(rng.next_gaussian() * scale);
+        }
+        indptr.push(indices.len());
+    }
+    let a = Csr::from_parts(m, n, indptr, indices, values);
+    let y = planted_labels(&a, DEFAULT_LABEL_NOISE, rng);
+    Dataset { name: name.to_string(), a, y }
+}
+
+/// Labels from a planted Gaussian model with a given flip fraction.
+pub fn planted_labels(a: &Csr, label_noise: f64, rng: &mut Prng) -> Vec<f64> {
+    let xstar: Vec<f64> = (0..a.cols()).map(|_| rng.next_gaussian()).collect();
+    let mut margins = vec![0.0; a.rows()];
+    a.spmv(&xstar, &mut margins);
+    margins
+        .iter()
+        .map(|&mg| {
+            let base = if mg >= 0.0 { 1.0 } else { -1.0 };
+            if rng.next_f64() < label_noise {
+                -base
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::NnzStats;
+
+    #[test]
+    fn skewed_has_exact_zbar_and_shape() {
+        let mut rng = Prng::new(1);
+        let d = sparse_skewed("t", 50, 40, 6, 0.8, &mut rng);
+        assert_eq!(d.m(), 50);
+        assert_eq!(d.n(), 40);
+        assert!((d.zbar() - 6.0).abs() < 1e-12);
+        for r in 0..50 {
+            assert_eq!(d.a.row_nnz(r), 6);
+        }
+    }
+
+    #[test]
+    fn zbar_capped_at_n() {
+        let mut rng = Prng::new(2);
+        let d = sparse_skewed("t", 5, 3, 10, 0.0, &mut rng);
+        assert!((d.zbar() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_exponent_increases_column_imbalance() {
+        let mut rng = Prng::new(3);
+        let flat = sparse_skewed("f", 400, 200, 8, 0.0, &mut rng);
+        let skew = sparse_skewed("s", 400, 200, 8, 1.0, &mut rng);
+        let (sf, ss) = (NnzStats::of(&flat.a), NnzStats::of(&skew.a));
+        assert!(
+            ss.cols.imbalance() > 2.0 * sf.cols.imbalance(),
+            "flat κ={} skew κ={}",
+            sf.cols.imbalance(),
+            ss.cols.imbalance()
+        );
+        assert!(ss.col_gini > sf.col_gini + 0.2);
+    }
+
+    #[test]
+    fn dense_is_dense() {
+        let mut rng = Prng::new(4);
+        let d = dense("e", 10, 7, &mut rng);
+        assert_eq!(d.a.nnz(), 70);
+        assert!((d.zbar() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn labels_are_pm_one_and_learnable() {
+        let mut rng = Prng::new(5);
+        let d = sparse_uniform("l", 300, 50, 10, &mut rng);
+        assert!(d.y.iter().all(|&y| y == 1.0 || y == -1.0));
+        // Not degenerate: both classes present.
+        let pos = d.y.iter().filter(|&&y| y > 0.0).count();
+        assert!(pos > 30 && pos < 270, "pos={pos}");
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let mut r1 = Prng::new(77);
+        let mut r2 = Prng::new(77);
+        let d1 = sparse_skewed("a", 20, 30, 5, 0.5, &mut r1);
+        let d2 = sparse_skewed("a", 20, 30, 5, 0.5, &mut r2);
+        assert_eq!(d1.a, d2.a);
+        assert_eq!(d1.y, d2.y);
+    }
+}

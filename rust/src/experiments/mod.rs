@@ -1,0 +1,72 @@
+//! Reproduction drivers: one module per paper table/figure.
+//!
+//! Each driver generates the workload, runs the measurement, prints the
+//! same rows/series the paper reports (plus our measured values), and
+//! appends machine-readable TSV under `results/`. The `cargo bench`
+//! targets in `rust/benches/` are thin wrappers over these functions, and
+//! the CLI (`hybrid-sgd bench-*` / `fig*`) calls them directly.
+//!
+//! See DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
+//! recorded paper-vs-measured outcomes.
+
+pub mod fixtures;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table10;
+pub mod table11;
+pub mod table4;
+pub mod table5;
+pub mod table7;
+pub mod table8;
+pub mod table9;
+
+/// Effort level for experiment drivers: `Quick` shrinks datasets and
+/// iteration budgets (CI / smoke), `Full` runs the scale the
+/// EXPERIMENTS.md numbers are recorded at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    /// Small datasets, few iterations — seconds.
+    Quick,
+    /// Recorded scale — minutes.
+    Full,
+}
+
+impl Effort {
+    /// Dataset scale factor.
+    pub fn scale(&self) -> f64 {
+        match self {
+            Effort::Quick => 0.06,
+            Effort::Full => 0.25,
+        }
+    }
+
+    /// Bundle budget multiplier.
+    pub fn bundles(&self, full: usize) -> usize {
+        match self {
+            Effort::Quick => (full / 8).max(4),
+            Effort::Full => full,
+        }
+    }
+
+    /// Parse from CLI/env (`quick` / `full`).
+    pub fn from_name(s: &str) -> Option<Effort> {
+        match s {
+            "quick" => Some(Effort::Quick),
+            "full" => Some(Effort::Full),
+            _ => None,
+        }
+    }
+
+    /// Effort from `HYBRID_SGD_EFFORT` (benches default to Quick so the
+    /// suite completes in minutes; EXPERIMENTS.md records Full runs).
+    pub fn from_env() -> Effort {
+        std::env::var("HYBRID_SGD_EFFORT")
+            .ok()
+            .and_then(|s| Effort::from_name(&s))
+            .unwrap_or(Effort::Quick)
+    }
+}

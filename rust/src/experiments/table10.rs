@@ -1,0 +1,111 @@
+//! Table 10: per-phase timing breakdown for url HybridSGD 4×64 under each
+//! partitioner.
+//!
+//! Paper shape to reproduce: the dominant cost of poor partitioning is
+//! **sync-skew waiting time inside the row-team Allreduce** (the
+//! `sstep_comm` row), not compute on the slowest rank — the comm timer
+//! grows roughly linearly in κ from cyclic to rows to nnz while the
+//! payload stays constant.
+
+use super::fixtures::{self, ms};
+use super::Effort;
+use crate::costmodel::HybridConfig;
+use crate::mesh::Mesh;
+use crate::metrics::Phase;
+use crate::partition::Partitioner;
+use crate::util::Table;
+
+/// Run the Table 10 reproduction: per-iteration phase breakdown (ms).
+pub fn run(effort: Effort) -> Table {
+    // The spill-scale url dataset (see fixtures::url_spill_dataset): the
+    // breakdown's nnz column must show the cache-spill blowup.
+    let ds = fixtures::url_spill_dataset(effort);
+    let mesh = Mesh::new(4, 64);
+    let cfg = HybridConfig::new(mesh, 4, 32, 10);
+    let bundles = effort.bundles(24);
+
+    let mut table = Table::new(&["phase", "rows", "cyclic", "nnz"]);
+    let mut out = fixtures::results(
+        "table10_breakdown",
+        &["phase", "rows_ms", "cyclic_ms", "nnz_ms"],
+    );
+
+    let measured: Vec<_> = [Partitioner::Rows, Partitioner::Cyclic, Partitioner::Nnz]
+        .iter()
+        .map(|&p| fixtures::measure(&ds, cfg, p, bundles))
+        .collect();
+
+    for phase in Phase::all() {
+        let cells: Vec<f64> = measured.iter().map(|m| m.phase_per_iter(phase)).collect();
+        table.row(&[
+            phase.name().to_string(),
+            ms(cells[0]),
+            ms(cells[1]),
+            ms(cells[2]),
+        ]);
+        let _ = out.append(&[
+            phase.name().to_string(),
+            ms(cells[0]),
+            ms(cells[1]),
+            ms(cells[2]),
+        ]);
+    }
+    // Sync-skew wait share of the row Allreduce (the paper's ~335 µs gap).
+    let waits: Vec<f64> = measured
+        .iter()
+        .map(|m| m.book.mean_wait(Phase::SstepComm) / m.iters as f64)
+        .collect();
+    table.row(&[
+        "  of which sync-skew wait".into(),
+        ms(waits[0]),
+        ms(waits[1]),
+        ms(waits[2]),
+    ]);
+    let _ = out.append(&[
+        "sstep_comm_wait".into(),
+        ms(waits[0]),
+        ms(waits[1]),
+        ms(waits[2]),
+    ]);
+    let totals: Vec<f64> = measured
+        .iter()
+        .map(|m| m.book.algorithm_total() / m.iters as f64)
+        .collect();
+    table.row(&[
+        "algorithm total".into(),
+        ms(totals[0]),
+        ms(totals[1]),
+        ms(totals[2]),
+    ]);
+    let _ = out.append(&["algorithm_total".into(), ms(totals[0]), ms(totals[1]), ms(totals[2])]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's key Table 10 observation, verified end to end: the row
+    /// Allreduce inherits wait-for-slowest time that orders cyclic < rows,
+    /// while payload (true transfer) is identical.
+    #[test]
+    fn sync_skew_orders_partitioners_on_skewed_data() {
+        let ds = fixtures::url_spill_dataset(Effort::Quick);
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let rows = fixtures::measure(&ds, cfg, Partitioner::Rows, 6);
+        let cyc = fixtures::measure(&ds, cfg, Partitioner::Cyclic, 6);
+        let wait_rows = rows.book.mean_wait(Phase::SstepComm);
+        let wait_cyc = cyc.book.mean_wait(Phase::SstepComm);
+        assert!(
+            wait_rows > 1.5 * wait_cyc,
+            "rows wait {wait_rows} should exceed cyclic wait {wait_cyc}"
+        );
+    }
+
+    #[test]
+    #[ignore = "bench-scale; run via `cargo bench --bench table10_breakdown`"]
+    fn full_driver() {
+        let t = run(Effort::Quick);
+        assert!(t.render().contains("sstep_comm"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Table 4: the topology rule (Eq. 7) versus the empirical best mesh.
+//!
+//! Paper result: the rule `p_c* = max(⌈nw/L_cap⌉, min(R, p))` predicts the
+//! winner exactly on synthetic/news20/rcv1 and the immediate neighbour of
+//! the winner on url (within 9% per-iteration). We verify both the rule's
+//! *paper-scale* predictions (exact Table 4 rows, pure arithmetic) and its
+//! *repro-scale* empirical agreement by sweeping every mesh factorization.
+
+use super::fixtures;
+use super::Effort;
+use crate::costmodel::{topology, HybridConfig};
+use crate::data::DatasetSpec;
+use crate::mesh::Mesh;
+use crate::partition::Partitioner;
+use crate::util::table::fmt_bytes;
+use crate::util::Table;
+use crate::WORD_BYTES;
+
+/// Paper machine constants (Perlmutter CPU).
+pub const R: usize = 64;
+/// L2 per core.
+pub const L_CAP: usize = 1 << 20;
+
+/// The paper's Table 4 rows: (dataset, p, paper n, rule mesh, empirical).
+pub const PAPER_ROWS: [(&str, usize, usize, (usize, usize), (usize, usize)); 4] = [
+    ("url", 256, 3_231_961, (4, 64), (8, 32)),
+    ("synthetic", 128, 3_145_728, (2, 64), (2, 64)),
+    ("news20", 64, 1_355_191, (1, 64), (1, 64)),
+    ("rcv1", 16, 47_236, (1, 16), (1, 16)),
+];
+
+/// Run the Table 4 reproduction.
+pub fn run(effort: Effort) -> Table {
+    let mut table = Table::new(&[
+        "dataset", "p", "nw(paper)", "rule", "paper-best", "repro-best", "rule-vs-best",
+    ]);
+    let mut out = fixtures::results(
+        "table4_topology",
+        &["dataset", "p", "rule_pr", "rule_pc", "best_pr", "best_pc", "rule_tts_s", "best_tts_s"],
+    );
+
+    let specs: [(DatasetSpec, usize); 4] = [
+        (DatasetSpec::UrlLike, 256),
+        (DatasetSpec::SyntheticUniform, 128),
+        (DatasetSpec::News20Like, 64),
+        (DatasetSpec::Rcv1Like, 16),
+    ];
+    for (i, (spec, p)) in specs.iter().enumerate() {
+        let (name, _, paper_n, paper_rule, paper_best) = PAPER_ROWS[i];
+        // The rule at paper scale must reproduce the paper's row exactly.
+        let rule_paper = topology::mesh_rule(paper_n, *p, R, L_CAP);
+        assert_eq!((rule_paper.p_r, rule_paper.p_c), paper_rule, "paper-scale rule ({name})");
+
+        // Empirical: race every factorization to a common calibrated
+        // target (the paper's Table 4 compares on *time-to-target*, which
+        // also rewards fewer averaging groups — the reason its url winner
+        // is 4×64 over the per-iteration-best 8×32).
+        let ds = super::fig5::sweep_dataset(*spec, effort);
+        let rule = topology::mesh_rule(ds.n(), *p, R, L_CAP);
+        let bundles = effort.bundles(160);
+        let runs: Vec<(Mesh, crate::solvers::SolverRun)> = Mesh::factorizations(*p)
+            .into_iter()
+            .map(|mesh| {
+                let cfg = hybrid_cfg(mesh);
+                (mesh, fixtures::run_to_target(&ds, cfg, Partitioner::Cyclic, 0.1, bundles, 2, None))
+            })
+            .collect();
+        let target =
+            runs.iter().map(|(_, r)| r.final_loss()).fold(f64::MIN, f64::max) * 1.0001;
+        let cross = |r: &crate::solvers::SolverRun| -> f64 {
+            r.trace
+                .iter()
+                .find(|t| t.loss <= target)
+                .map(|t| t.sim_time)
+                .unwrap_or(f64::INFINITY)
+        };
+        let mut best: Option<(Mesh, f64)> = None;
+        let mut rule_ms_val = f64::NAN;
+        for (mesh, run) in &runs {
+            let t = cross(run);
+            if *mesh == rule {
+                rule_ms_val = t;
+            }
+            if best.is_none() || t < best.as_ref().unwrap().1 {
+                best = Some((*mesh, t));
+            }
+        }
+        let (best_mesh, best_t) = best.expect("nonempty sweep");
+        let gap = if best_t > 0.0 { rule_ms_val / best_t } else { 1.0 };
+        table.row(&[
+            name.to_string(),
+            p.to_string(),
+            fmt_bytes((paper_n * WORD_BYTES) as f64),
+            rule.label(),
+            format!("{}x{}", paper_best.0, paper_best.1),
+            best_mesh.label(),
+            format!("{:.2}x", gap),
+        ]);
+        let _ = out.append(&[
+            name.to_string(),
+            p.to_string(),
+            rule.p_r.to_string(),
+            rule.p_c.to_string(),
+            best_mesh.p_r.to_string(),
+            best_mesh.p_c.to_string(),
+            format!("{rule_ms_val:.5}"),
+            format!("{best_t:.5}"),
+        ]);
+    }
+    table
+}
+
+/// The paper's sweep configuration (b=32, s=4, τ=10) clamped to the mesh
+/// (s=1 at the FedAvg corner where no row partner exists).
+pub fn hybrid_cfg(mesh: Mesh) -> HybridConfig {
+    if mesh.p_c == 1 {
+        HybridConfig::new(mesh, 1, 32, 10)
+    } else {
+        HybridConfig::new(mesh, 4, 32, 10)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_rule_rows_exact() {
+        for (name, p, n, want_rule, _) in PAPER_ROWS {
+            let got = topology::mesh_rule(n, p, R, L_CAP);
+            assert_eq!((got.p_r, got.p_c), want_rule, "{name}");
+        }
+    }
+
+    #[test]
+    #[ignore = "full sweep is bench-scale; run via `cargo bench --bench table4_topology`"]
+    fn full_driver() {
+        let t = run(Effort::Quick);
+        assert_eq!(t.len(), 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! Table 5: the operating-regime taxonomy.
+//!
+//! Prints the four regimes with their conditions/actions, then classifies
+//! a grid of representative configurations (including each dataset profile
+//! at its Table 8 mesh) and reports the dominant Eq. (4) term — the
+//! machine-checkable version of the paper's "Perlmutter CPU nodes lie in
+//! the latency-to-Gram-BW transition at n ≥ 10⁵, p ≥ 64".
+
+use super::fixtures;
+use super::Effort;
+use crate::costmodel::model::{self, DataShape};
+use crate::costmodel::{regimes, CalibProfile, HybridConfig, Regime};
+use crate::data::DatasetSpec;
+use crate::mesh::Mesh;
+use crate::util::Table;
+
+/// Representative configurations (paper-scale shapes).
+pub fn cases() -> Vec<(&'static str, DataShape, HybridConfig)> {
+    vec![
+        (
+            "url @ 8x32",
+            DataShape { m: 2_396_130, n: 3_231_961, zbar: 116.0 },
+            HybridConfig::new(Mesh::new(8, 32), 4, 32, 10),
+        ),
+        (
+            "news20 @ 1x64",
+            DataShape { m: 19_996, n: 1_355_191, zbar: 455.0 },
+            HybridConfig::new(Mesh::new(1, 64), 4, 32, 10),
+        ),
+        (
+            "rcv1 @ 1x16",
+            DataShape { m: 20_242, n: 47_236, zbar: 74.0 },
+            HybridConfig::new(Mesh::new(1, 16), 4, 32, 10),
+        ),
+        (
+            "epsilon @ 2x2",
+            DataShape { m: 400_000, n: 2_000, zbar: 2_000.0 },
+            HybridConfig::new(Mesh::new(2, 2), 2, 32, 10),
+        ),
+        (
+            "tiny-n @ 2x1024",
+            DataShape { m: 100_000, n: 1_000, zbar: 5.0 },
+            HybridConfig::new(Mesh::new(2, 1024), 1, 1, 1),
+        ),
+        (
+            "huge-gram @ 1x64",
+            DataShape { m: 100_000, n: 50_000, zbar: 20.0 },
+            HybridConfig::new(Mesh::new(1, 64), 32, 512, 100),
+        ),
+        (
+            "huge-n small-batch @ 64x2",
+            DataShape { m: 100_000, n: 50_000_000, zbar: 10.0 },
+            HybridConfig::new(Mesh::new(64, 2), 2, 4, 2),
+        ),
+    ]
+}
+
+/// Run the Table 5 reproduction.
+pub fn run(_effort: Effort) -> Table {
+    let profile = CalibProfile::perlmutter();
+    let mut table =
+        Table::new(&["case", "regime", "dominant-term", "balance", "recommended-action"]);
+    let mut out = fixtures::results(
+        "table5_regimes",
+        &["case", "regime", "dominant", "balance_ratio"],
+    );
+    for (name, data, cfg) in cases() {
+        let regime = regimes::classify(&cfg, &data, &profile);
+        let bd = model::eval(&cfg, &data, &profile);
+        let bal = model::bandwidth_balance(&cfg, data.n);
+        table.row(&[
+            name.to_string(),
+            regime.name().to_string(),
+            bd.dominant().0.to_string(),
+            format!("{bal:.2}"),
+            regime.action().to_string(),
+        ]);
+        let _ = out.append(&[
+            name.to_string(),
+            regime.name().to_string(),
+            bd.dominant().0.to_string(),
+            format!("{bal:.3}"),
+        ]);
+    }
+    // Check the paper's summary claim on our dataset profiles at their
+    // Table 8 meshes: large-n sparse sets sit in the latency↔Gram-BW
+    // transition (never compute-bound at p ≥ 64).
+    for spec in [DatasetSpec::UrlLike, DatasetSpec::News20Like] {
+        let p = spec.profile();
+        let data = DataShape { m: p.paper_m, n: p.paper_n, zbar: p.paper_zbar as f64 };
+        let cfg = HybridConfig::new(Mesh::new(1, 64), 4, 32, 10);
+        let r = regimes::classify(&cfg, &data, &profile);
+        assert_ne!(r, Regime::ComputeBound, "{} should not be compute-bound at p=64", p.name);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_four_regimes_appear() {
+        let t = run(Effort::Quick);
+        let rendered = t.render();
+        for r in ["Compute-bound", "Latency-bound", "Gram-BW-bound", "Sync-BW-bound"] {
+            assert!(rendered.contains(r), "{r} missing:\n{rendered}");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Table 7: the measured machine parameters α(q), β(q), γ(W).
+//!
+//! Two panels: the paper's Perlmutter CPU profile (shipped as calibration
+//! data — the constants every charged experiment uses) and a locally
+//! *measured* profile produced by the same microbenchmark methodology the
+//! paper's §7.1 describes (in-memory allreduce sweep + ddot cache sweep).
+
+use super::fixtures;
+use super::Effort;
+use crate::costmodel::calib::{measure_local, CalibProfile};
+use crate::util::Table;
+
+/// Run the Table 7 reproduction.
+pub fn run(effort: Effort) -> Table {
+    let mut table = Table::new(&["profile", "kind", "q / tier", "alpha (us)", "beta (s/B)"]);
+    let mut out = fixtures::results(
+        "table7_calibration",
+        &["profile", "kind", "key", "alpha_s", "beta_or_gamma"],
+    );
+
+    let perl = CalibProfile::perlmutter();
+    emit(&mut table, &mut out, &perl);
+    let local = measure_local(effort == Effort::Quick);
+    emit(&mut table, &mut out, &local);
+    table
+}
+
+fn emit(table: &mut Table, out: &mut crate::util::tsv::TsvWriter, p: &CalibProfile) {
+    for pt in &p.intra {
+        table.row(&[
+            p.name.clone(),
+            "intra-node".into(),
+            pt.ranks.to_string(),
+            format!("{:.2}", pt.alpha * 1e6),
+            format!("{:.2e}", pt.beta),
+        ]);
+        let _ = out.append(&[
+            p.name.clone(),
+            "intra".into(),
+            pt.ranks.to_string(),
+            format!("{:.3e}", pt.alpha),
+            format!("{:.3e}", pt.beta),
+        ]);
+    }
+    for pt in &p.inter {
+        table.row(&[
+            p.name.clone(),
+            "inter-node".into(),
+            pt.ranks.to_string(),
+            format!("{:.2}", pt.alpha * 1e6),
+            format!("{:.2e}", pt.beta),
+        ]);
+        let _ = out.append(&[
+            p.name.clone(),
+            "inter".into(),
+            pt.ranks.to_string(),
+            format!("{:.3e}", pt.alpha),
+            format!("{:.3e}", pt.beta),
+        ]);
+    }
+    for t in &p.tiers {
+        table.row(&[
+            p.name.clone(),
+            "gamma".into(),
+            t.name.to_string(),
+            "-".into(),
+            format!("{:.2e}", t.gamma),
+        ]);
+        let _ = out.append(&[
+            p.name.clone(),
+            "gamma".into(),
+            t.name.to_string(),
+            "-".into(),
+            format!("{:.3e}", t.gamma),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_profiles_emitted() {
+        let t = run(Effort::Quick);
+        let r = t.render();
+        assert!(r.contains("perlmutter-cpu"));
+        assert!(r.contains("local"));
+        assert!(r.contains("DRAM"));
+    }
+}

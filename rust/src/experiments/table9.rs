@@ -1,0 +1,119 @@
+//! Table 9: partitioner statistics and per-iteration runtime.
+//!
+//! Paper shape to reproduce (the §7.3 story): on column-skewed data the
+//! ordering is **cyclic < rows < nnz** — nnz achieves κ≈1 but concentrates
+//! columns on one rank (cache spill), rows is cache-exact but κ-imbalanced,
+//! cyclic satisfies both objectives. On rcv1-like balanced data all three
+//! tie.
+
+use super::fixtures::{self, ms};
+use super::Effort;
+use crate::costmodel::HybridConfig;
+use crate::data::DatasetSpec;
+use crate::mesh::Mesh;
+use crate::partition::{ColPartition, Partitioner};
+use crate::util::Table;
+
+/// (spec, p, mesh) — the paper's Table 9 configurations.
+pub const CONFIGS: [(DatasetSpec, usize, (usize, usize)); 3] = [
+    (DatasetSpec::UrlLike, 256, (4, 64)),
+    (DatasetSpec::News20Like, 64, (1, 64)),
+    (DatasetSpec::Rcv1Like, 16, (1, 16)),
+];
+
+/// Run the Table 9 reproduction. Returns (table, winners per dataset).
+pub fn run_full(effort: Effort) -> (Table, Vec<(DatasetSpec, Partitioner)>) {
+    let mut table =
+        Table::new(&["dataset (config)", "partitioner", "kappa", "max n_loc", "ms/iter", "best"]);
+    let mut out = fixtures::results(
+        "table9_partitioners",
+        &["dataset", "mesh", "partitioner", "kappa", "max_n_local", "ms_per_iter", "winner"],
+    );
+    let bundles = effort.bundles(24);
+    let mut winners = Vec::new();
+    for (spec, p, (p_r, p_c)) in CONFIGS {
+        // url uses the dedicated spill-scale dataset: the nnz partitioner's
+        // cache-spill penalty only exists when the heavy rank's slab
+        // crosses L2 (see fixtures::url_spill_dataset).
+        let ds = match spec {
+            DatasetSpec::UrlLike => fixtures::url_spill_dataset(effort),
+            _ => fixtures::dataset(spec, effort),
+        };
+        let mesh = Mesh::new(p_r, p_c);
+        let cfg = if mesh.p_c == 1 {
+            HybridConfig::new(mesh, 1, 32, 10)
+        } else {
+            HybridConfig::new(mesh, 4, 32, 10)
+        };
+        let mut rows: Vec<(Partitioner, f64, usize, f64)> = Vec::new();
+        for policy in Partitioner::all() {
+            let part = ColPartition::build(&ds.a, mesh.p_c, policy);
+            let m = fixtures::measure(&ds, cfg, policy, bundles);
+            rows.push((policy, part.kappa(), part.max_n_local(), m.per_iter));
+        }
+        let best = rows
+            .iter()
+            .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+            .map(|r| r.0)
+            .expect("three rows");
+        winners.push((spec, best));
+        for (policy, kappa, max_n, per_iter) in &rows {
+            let label = format!("{} ({} p={})", spec.profile().name, mesh.label(), p);
+            table.row(&[
+                label,
+                policy.name().to_string(),
+                format!("{kappa:.2}"),
+                max_n.to_string(),
+                ms(*per_iter),
+                if *policy == best { "*".into() } else { "".into() },
+            ]);
+            let _ = out.append(&[
+                spec.profile().name.to_string(),
+                mesh.label(),
+                policy.name().to_string(),
+                format!("{kappa:.3}"),
+                max_n.to_string(),
+                ms(*per_iter),
+                (*policy == best).to_string(),
+            ]);
+        }
+    }
+    (table, winners)
+}
+
+/// Table-only entry point for the bench.
+pub fn run(effort: Effort) -> Table {
+    run_full(effort).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The url-like partitioner stats reproduce the paper's structure:
+    /// rows is heavily κ-imbalanced, nnz concentrates columns, cyclic is
+    /// exact on both objectives.
+    #[test]
+    fn url_like_partition_statistics_shape() {
+        let ds = fixtures::dataset(DatasetSpec::UrlLike, Effort::Quick);
+        let p_c = 64;
+        let rows = ColPartition::build(&ds.a, p_c, Partitioner::Rows);
+        let nnz = ColPartition::build(&ds.a, p_c, Partitioner::Nnz);
+        let cyc = ColPartition::build(&ds.a, p_c, Partitioner::Cyclic);
+        // Paper (url @ p_c=64): rows κ=33.8, nnz κ=1.3, cyclic κ=1.9.
+        assert!(rows.kappa() > 5.0, "rows κ={}", rows.kappa());
+        assert!(nnz.kappa() < rows.kappa() / 2.0, "nnz κ={}", nnz.kappa());
+        assert!(cyc.kappa() < 3.0, "cyclic κ={}", cyc.kappa());
+        // Footprints: rows/cyclic exact, nnz concentrated.
+        assert_eq!(cyc.max_n_local(), ds.n().div_ceil(p_c));
+        assert!(nnz.max_n_local() > 4 * ds.n() / p_c, "nnz max={}", nnz.max_n_local());
+    }
+
+    #[test]
+    #[ignore = "bench-scale; run via `cargo bench --bench table9_partitioners`"]
+    fn full_driver_cyclic_wins_on_skewed_data() {
+        let (_, winners) = run_full(Effort::Quick);
+        let url = winners.iter().find(|(s, _)| *s == DatasetSpec::UrlLike).unwrap();
+        assert_eq!(url.1, Partitioner::Cyclic);
+    }
+}

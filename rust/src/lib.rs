@@ -1,0 +1,47 @@
+//! # hybrid-sgd
+//!
+//! A from-scratch reproduction of *"Communication-Efficient, 2D Parallel
+//! Stochastic Gradient Descent for Distributed-Memory Optimization"*
+//! (Devarakonda & Kannan, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate implements:
+//!
+//! * **[`solvers`]** — the full solver family of the paper: sequential SGD,
+//!   mini-batch SGD, FedAvg (1D-row + deferred averaging), s-step SGD
+//!   (1D-column + recurrence unrolling), 2D SGD, and **HybridSGD** — the 2D
+//!   `p = p_r × p_c` mesh generalization in which row teams run s-step
+//!   bundles and column teams average every `τ` steps.
+//! * **[`sparse`]** — the CSR sparse-BLAS substrate (the role Intel MKL plays
+//!   in the paper's C++ implementation).
+//! * **[`data`]** — LIBSVM reader/writer plus matched-profile synthetic
+//!   generators for the paper's four evaluation datasets.
+//! * **[`partition`]** — the three column partitioners of §7.3 (`rows`,
+//!   `nnz`-greedy, `cyclic`) and the two-objective partitioner selector.
+//! * **[`mesh`]** / **[`comm`]** — the 2D processor mesh and a
+//!   message-passing substrate with real-thread and deterministic
+//!   simulated-clock executors (the role Cray MPICH plays in the paper).
+//! * **[`costmodel`]** — the closed-form α-β-γ model (Eq. 4), the optima
+//!   `s*`/`b*` (Eq. 5/6), the topology rule (Eq. 7), the regime taxonomy
+//!   (Table 5) and every empirical refinement of §6.5 (cache-aware γ(W),
+//!   rank-aware β(q), κ load-imbalance multiplier, sync-skew).
+//! * **[`compute`]** / **[`runtime`]** — pluggable compute backends: a pure
+//!   Rust `f64` backend and an XLA/PJRT backend that executes the
+//!   AOT-compiled JAX+Pallas artifacts (Python never runs at request time).
+//! * **[`experiments`]** — one reproduction driver per paper table/figure.
+
+pub mod comm;
+pub mod compute;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod mesh;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+pub mod util;
+
+/// Word size in bytes for all dataset / model words (FP64, matching the
+/// paper's `w = 8` in every bandwidth expression).
+pub const WORD_BYTES: usize = 8;

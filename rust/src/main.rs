@@ -1,0 +1,320 @@
+//! `hybrid-sgd` — the leader entrypoint / CLI.
+//!
+//! Subcommands (hand-rolled parser; the build is offline, no clap):
+//!
+//! ```text
+//! hybrid-sgd train      --dataset url --p 256 --mesh 8x32 --partitioner cyclic
+//!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
+//!                       [--bundles 200] [--target 0.5] [--backend xla|native]
+//! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
+//! hybrid-sgd calibrate  [--quick]                  # Table 7 locally
+//! hybrid-sgd partition-stats --dataset url --pc 64
+//! hybrid-sgd datasets                              # registry listing
+//! hybrid-sgd table4|table5|table7|table8|table9|table10|table11
+//! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
+//! ```
+
+use hybrid_sgd::comm::Charging;
+use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
+use hybrid_sgd::costmodel::model::DataShape;
+use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, HybridConfig};
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::experiments::{self, Effort};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::partition::{self, Partitioner};
+use hybrid_sgd::runtime::XlaBackend;
+use hybrid_sgd::solvers::{HybridSolver, RunOpts};
+use hybrid_sgd::util::Table;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    let code = match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "predict" => cmd_predict(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        "partition-stats" => cmd_partition_stats(&flags),
+        "datasets" => cmd_datasets(),
+        "table4" => run_table(experiments::table4::run, &flags),
+        "table5" => run_table(experiments::table5::run, &flags),
+        "table7" => run_table(experiments::table7::run, &flags),
+        "table8" => run_table(experiments::table8::run, &flags),
+        "table9" => run_table(experiments::table9::run, &flags),
+        "table10" => run_table(experiments::table10::run, &flags),
+        "table11" => run_table(experiments::table11::run, &flags),
+        "fig2" => run_table(experiments::fig2::run, &flags),
+        "fig3" => run_table(experiments::fig3::run, &flags),
+        "fig4" => run_table(experiments::fig4::run, &flags),
+        "fig5" => run_table(experiments::fig5::run, &flags),
+        "fig6" => run_table(experiments::fig6::run, &flags),
+        "fig7" => run_table(experiments::fig7::run, &flags),
+        "help" | "--help" | "-h" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown command: {other}\n");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "hybrid-sgd — 2D-parallel SGD (HybridSGD) reproduction\n\n\
+         commands:\n  \
+         train             run a solver on a dataset profile\n  \
+         predict           cost-model mesh/partitioner/parameter selection\n  \
+         calibrate         measure local alpha/beta/gamma (Table 7 method)\n  \
+         partition-stats   kappa / footprint survey for the three partitioners\n  \
+         datasets          list registry profiles\n  \
+         table4..table11   reproduce a paper table\n  \
+         fig2..fig7        reproduce a paper figure\n\n\
+         common flags: --dataset url|news20|rcv1|epsilon|synthetic  --p N\n  \
+         --mesh PRxPC  --partitioner rows|nnz|cyclic  --s N --b N --tau N\n  \
+         --eta F  --bundles N  --target F  --backend native|xla\n  \
+         --effort quick|full  --scale F  --lanes N  --charging modeled|measured"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Flags {
+    let mut flags = Flags::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("ignoring stray argument {a:?}");
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn get<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn dataset_spec(flags: &Flags) -> DatasetSpec {
+    let name = flags.get("dataset").map(|s| s.as_str()).unwrap_or("rcv1");
+    DatasetSpec::from_name(name).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name:?}; see `hybrid-sgd datasets`");
+        std::process::exit(2);
+    })
+}
+
+fn parse_mesh(s: &str) -> Option<Mesh> {
+    let (r, c) = s.split_once('x')?;
+    Some(Mesh::new(r.parse().ok()?, c.parse().ok()?))
+}
+
+fn run_table(f: fn(Effort) -> Table, flags: &Flags) -> i32 {
+    let effort = flags
+        .get("effort")
+        .and_then(|e| Effort::from_name(e))
+        .unwrap_or_else(Effort::from_env);
+    let t = f(effort);
+    println!("{}", t.render());
+    println!("(machine-readable copies under results/)");
+    0
+}
+
+fn cmd_datasets() -> i32 {
+    let mut t = Table::new(&[
+        "name", "paper m", "paper n", "paper zbar", "repro m", "repro n", "repro zbar", "skew",
+    ]);
+    for spec in DatasetSpec::all() {
+        let p = spec.profile();
+        t.row(&[
+            p.name.to_string(),
+            p.paper_m.to_string(),
+            p.paper_n.to_string(),
+            p.paper_zbar.to_string(),
+            p.m.to_string(),
+            p.n.to_string(),
+            p.zbar.to_string(),
+            format!("{:.2}", p.skew_alpha),
+        ]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_calibrate(flags: &Flags) -> i32 {
+    let quick = flags.contains_key("quick");
+    let p = calib::measure_local(quick);
+    let mut t = Table::new(&["kind", "key", "alpha (us)", "beta/gamma (s/B)"]);
+    for pt in &p.intra {
+        t.row(&[
+            "allreduce".into(),
+            format!("q={}", pt.ranks),
+            format!("{:.2}", pt.alpha * 1e6),
+            format!("{:.2e}", pt.beta),
+        ]);
+    }
+    for tier in &p.tiers {
+        t.row(&["gamma".into(), tier.name.into(), "-".into(), format!("{:.2e}", tier.gamma)]);
+    }
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_partition_stats(flags: &Flags) -> i32 {
+    let spec = dataset_spec(flags);
+    let scale: f64 = get(flags, "scale", 0.25);
+    let p_c: usize = get(flags, "pc", 64);
+    let ds = spec.profile().generate_scaled(scale, 0x2D5D);
+    let stats = partition::stats::survey(&ds.a, p_c, partition::stats::L_CAP_BYTES);
+    let mut t = Table::new(&["partitioner", "kappa", "max n_local", "max slab", "fits L2"]);
+    for s in &stats {
+        t.row(&[
+            s.policy.name().to_string(),
+            format!("{:.2}", s.kappa),
+            s.max_n_local.to_string(),
+            hybrid_sgd::util::table::fmt_bytes(s.max_weight_bytes as f64),
+            s.fits_cache.to_string(),
+        ]);
+    }
+    println!("dataset {} at scale {scale}: m={} n={} zbar={:.0}, p_c={p_c}", ds.name, ds.m(), ds.n(), ds.zbar());
+    println!("{}", t.render());
+    let pick = partition::stats::select_two_objective(&ds.a, p_c, partition::stats::L_CAP_BYTES);
+    println!("two-objective selection: {}", pick.name());
+    0
+}
+
+fn cmd_predict(flags: &Flags) -> i32 {
+    let spec = dataset_spec(flags);
+    let p: usize = get(flags, "p", 256);
+    let profile = CalibProfile::perlmutter();
+    let dp = spec.profile();
+    // Selection is done at *paper scale*, as the paper's Table 4 does.
+    let data = DataShape { m: dp.paper_m, n: dp.paper_n, zbar: dp.paper_zbar as f64 };
+    let mesh = topology::mesh_rule(dp.paper_n, p, profile.ranks_per_node, profile.l_cap_bytes);
+    println!("topology rule (Eq. 7): mesh {} (cache term binding: {})", mesh, topology::cache_term_binding(dp.paper_n, p, profile.ranks_per_node, profile.l_cap_bytes));
+    let cfg0 = HybridConfig::new(mesh, 4.min(10), 32, 10);
+    let (s_opt, b_opt) = optima::joint_optimum(
+        &cfg0,
+        &data,
+        profile.alpha(mesh.p_c.max(2)),
+        profile.beta(mesh.p_c.max(2)),
+        profile.gamma_flop,
+        32,
+        512,
+    );
+    println!("closed-form optima (Eq. 5/6): s* = {s_opt}, b* = {b_opt}");
+    let cfg = HybridConfig::new(mesh, s_opt.min(10), b_opt, 10.max(s_opt));
+    let regime = regimes::classify(&cfg, &data, &profile);
+    println!("operating regime (Table 5): {} -> {}", regime.name(), regime.action());
+    let ds = dp.generate_scaled(get(flags, "scale", 0.12), 0x2D5D);
+    let pick = partition::stats::select_two_objective(
+        &ds.a,
+        mesh.p_c.min(ds.n() / 2).max(1),
+        profile.l_cap_bytes,
+    );
+    println!("two-objective partitioner: {}", pick.name());
+    0
+}
+
+fn cmd_train(flags: &Flags) -> i32 {
+    let spec = dataset_spec(flags);
+    let p: usize = get(flags, "p", 16);
+    let scale: f64 = get(flags, "scale", 0.12);
+    let ds = spec.profile().generate_scaled(scale, 0x2D5D);
+
+    let mesh = flags
+        .get("mesh")
+        .and_then(|m| parse_mesh(m))
+        .unwrap_or_else(|| topology::mesh_rule(ds.n(), p, 64, 1 << 20));
+    let s: usize = get(flags, "s", 4);
+    let b: usize = get(flags, "b", 32);
+    let tau: usize = get(flags, "tau", 10);
+    let s = if mesh.p_c == 1 { 1 } else { s };
+    let cfg = HybridConfig::new(mesh, s, b, tau.max(s));
+    let policy = flags
+        .get("partitioner")
+        .and_then(|s| Partitioner::from_name(s))
+        .unwrap_or(Partitioner::Cyclic);
+
+    let opts = RunOpts {
+        eta: get(flags, "eta", 0.1),
+        max_bundles: get(flags, "bundles", 200),
+        eval_every: get(flags, "eval-every", 5),
+        target_loss: flags.get("target").and_then(|t| t.parse().ok()),
+        lanes: get(flags, "lanes", 1),
+        charging: match flags.get("charging").map(|s| s.as_str()) {
+            Some("measured") => Charging::Measured,
+            _ => Charging::Modeled,
+        },
+        profile: CalibProfile::perlmutter(),
+        seed: get(flags, "seed", 0x5EEDu64),
+    };
+
+    let backend_name = flags.get("backend").map(|s| s.as_str()).unwrap_or("native");
+    let xla;
+    let backend: &dyn ComputeBackend = match backend_name {
+        "xla" => match XlaBackend::load_default() {
+            Ok(be) => {
+                xla = be;
+                &xla
+            }
+            Err(e) => {
+                eprintln!("failed to load XLA artifacts ({e:#}); falling back to native");
+                &NativeBackend
+            }
+        },
+        _ => &NativeBackend,
+    };
+
+    println!(
+        "training {} (m={} n={} zbar={:.0}) on mesh {} s={} b={} tau={} partitioner={} backend={}",
+        ds.name,
+        ds.m(),
+        ds.n(),
+        ds.zbar(),
+        mesh,
+        cfg.s,
+        cfg.b,
+        cfg.tau,
+        policy.name(),
+        backend.name(),
+    );
+    let run = HybridSolver::new(backend).run(&ds, cfg, policy, &opts);
+    let mut t = Table::new(&["bundles", "iters", "sim time (s)", "loss"]);
+    for pt in &run.trace {
+        t.row(&[
+            pt.bundles.to_string(),
+            pt.iters.to_string(),
+            format!("{:.5}", pt.sim_time),
+            format!("{:.5}", pt.loss),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "done: {} bundles, {} iters, {:.3} ms/iter (simulated), final loss {:.5}, accuracy {:.3}",
+        run.bundles_run,
+        run.inner_iters,
+        run.per_iter() * 1e3,
+        run.final_loss(),
+        ds.accuracy(&run.x)
+    );
+    if let Some(t) = run.time_to_target {
+        println!("time-to-target: {t:.4} s (simulated)");
+    }
+    0
+}

@@ -1,0 +1,158 @@
+//! The 2D processor mesh `p = p_r × p_c` (paper §4, Fig. 1).
+//!
+//! Rank layout is row-major: rank `r·p_c + c` sits at mesh coordinate
+//! `(r, c)`. A **row team** is the set of ranks sharing a row index `r`
+//! (size `p_c`, communicates the s-step row Allreduce); a **column team**
+//! shares a column index `c` (size `p_r`, communicates the FedAvg-style
+//! weight-averaging Allreduce). Setting `p_r = 1` recovers 1D-column
+//! (s-step SGD) layout; `p_c = 1` recovers 1D-row (FedAvg).
+
+/// A `p_r × p_c` processor mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Mesh {
+    /// Row dimension (number of row teams; FedAvg averaging groups).
+    pub p_r: usize,
+    /// Column dimension (ranks per row team; weight-shard count).
+    pub p_c: usize,
+}
+
+impl Mesh {
+    /// Construct a mesh; both dimensions must be ≥ 1.
+    pub fn new(p_r: usize, p_c: usize) -> Mesh {
+        assert!(p_r >= 1 && p_c >= 1, "mesh dims must be >= 1 (got {p_r}x{p_c})");
+        Mesh { p_r, p_c }
+    }
+
+    /// 1D-row mesh (FedAvg corner): `p × 1`.
+    pub fn row_1d(p: usize) -> Mesh {
+        Mesh::new(p, 1)
+    }
+
+    /// 1D-column mesh (s-step corner): `1 × p`.
+    pub fn col_1d(p: usize) -> Mesh {
+        Mesh::new(1, p)
+    }
+
+    /// Total ranks `p = p_r · p_c`.
+    pub fn p(&self) -> usize {
+        self.p_r * self.p_c
+    }
+
+    /// Mesh coordinate of a rank (row-major).
+    pub fn coords(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.p(), "rank {rank} out of mesh {self:?}");
+        (rank / self.p_c, rank % self.p_c)
+    }
+
+    /// Rank at a mesh coordinate.
+    pub fn rank_at(&self, row: usize, col: usize) -> usize {
+        assert!(row < self.p_r && col < self.p_c, "coord ({row},{col}) out of {self:?}");
+        row * self.p_c + col
+    }
+
+    /// Ranks in the row team containing `rank` (all same `row`, ordered by
+    /// column).
+    pub fn row_team(&self, rank: usize) -> Vec<usize> {
+        let (row, _) = self.coords(rank);
+        (0..self.p_c).map(|c| self.rank_at(row, c)).collect()
+    }
+
+    /// Ranks in the column team containing `rank` (all same `col`, ordered
+    /// by row).
+    pub fn col_team(&self, rank: usize) -> Vec<usize> {
+        let (_, col) = self.coords(rank);
+        (0..self.p_r).map(|r| self.rank_at(r, col)).collect()
+    }
+
+    /// All factorizations `p_r · p_c = p` in increasing `p_r` order —
+    /// the sweep axis of the paper's Fig. 5.
+    pub fn factorizations(p: usize) -> Vec<Mesh> {
+        assert!(p >= 1);
+        let mut out = Vec::new();
+        for p_r in 1..=p {
+            if p % p_r == 0 {
+                out.push(Mesh::new(p_r, p / p_r));
+            }
+        }
+        out
+    }
+
+    /// Display as `p_r x p_c` (paper notation, e.g. `8x32`).
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.p_r, self.p_c)
+    }
+}
+
+impl std::fmt::Display for Mesh {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.p_r, self.p_c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn coords_roundtrip() {
+        let m = Mesh::new(4, 8);
+        for rank in 0..m.p() {
+            let (r, c) = m.coords(rank);
+            assert_eq!(m.rank_at(r, c), rank);
+        }
+    }
+
+    #[test]
+    fn teams_have_right_shape() {
+        let m = Mesh::new(3, 4);
+        let rt = m.row_team(5); // rank 5 = (1, 1)
+        assert_eq!(rt, vec![4, 5, 6, 7]);
+        let ct = m.col_team(5);
+        assert_eq!(ct, vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn corners_are_1d() {
+        assert_eq!(Mesh::row_1d(8).p_c, 1);
+        assert_eq!(Mesh::col_1d(8).p_r, 1);
+        // FedAvg corner: every row team is a singleton.
+        let f = Mesh::row_1d(4);
+        assert_eq!(f.row_team(2), vec![2]);
+        assert_eq!(f.col_team(2), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn factorizations_of_256() {
+        let f = Mesh::factorizations(256);
+        assert_eq!(f.len(), 9); // 1,2,4,...,256 — the paper's nine meshes
+        assert_eq!(f[0], Mesh::new(1, 256));
+        assert_eq!(f[8], Mesh::new(256, 1));
+        assert!(f.iter().all(|m| m.p() == 256));
+    }
+
+    #[test]
+    fn prop_teams_partition_the_mesh() {
+        check(
+            Config { cases: 32, seed: 0x3E5 },
+            "row teams partition ranks",
+            |rng| {
+                let p_r = 1 + rng.next_below(8);
+                let p_c = 1 + rng.next_below(8);
+                Mesh::new(p_r, p_c)
+            },
+            |m| {
+                let mut seen = vec![false; m.p()];
+                for row in 0..m.p_r {
+                    for rank in m.row_team(m.rank_at(row, 0)) {
+                        if seen[rank] {
+                            return false;
+                        }
+                        seen[rank] = true;
+                    }
+                }
+                seen.iter().all(|&s| s)
+            },
+        );
+    }
+}

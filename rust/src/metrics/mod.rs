@@ -1,0 +1,207 @@
+//! Phase-level timing accounting (the paper's Table 10 breakdown).
+//!
+//! Every charge to the simulated clock is attributed to a [`Phase`]; the
+//! per-phase totals reproduce the paper's "Timing breakdown for url
+//! HybridSGD 4×64" rows, including the separation of *sync-skew waiting
+//! time inside the row-team Allreduce* from true transfer time (§6.5).
+
+/// Algorithm phases, matching the rows of the paper's Table 10.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Loss computation / CSV logging — "pure overhead", excluded from the
+    /// algorithm-time total exactly as the paper does.
+    Metrics,
+    /// Gram-matrix formation (`G = tril(YYᵀ)`).
+    Gram,
+    /// s-step row-team Allreduce (payload + sync-skew wait).
+    SstepComm,
+    /// FedAvg-style column-team Allreduce of the weight shard.
+    FedAvgComm,
+    /// Weight vector update.
+    WeightsUpdate,
+    /// Sparse matrix–vector products (forward SpMV / transpose scatter).
+    SpGemv,
+    /// Recurrence correction loop / memory ops / startup.
+    Correction,
+}
+
+impl Phase {
+    /// All phases in Table 10 row order.
+    pub fn all() -> [Phase; 7] {
+        [
+            Phase::Metrics,
+            Phase::Gram,
+            Phase::SstepComm,
+            Phase::FedAvgComm,
+            Phase::WeightsUpdate,
+            Phase::SpGemv,
+            Phase::Correction,
+        ]
+    }
+
+    /// Table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Metrics => "metrics",
+            Phase::Gram => "gram",
+            Phase::SstepComm => "sstep_comm",
+            Phase::FedAvgComm => "fedavg_comm",
+            Phase::WeightsUpdate => "weights_update",
+            Phase::SpGemv => "spgemv",
+            Phase::Correction => "correction",
+        }
+    }
+
+    /// Phases counted in the paper's "algorithm total" (everything except
+    /// metrics overhead).
+    pub fn in_algorithm_total(&self) -> bool {
+        !matches!(self, Phase::Metrics)
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Phase::Metrics => 0,
+            Phase::Gram => 1,
+            Phase::SstepComm => 2,
+            Phase::FedAvgComm => 3,
+            Phase::WeightsUpdate => 4,
+            Phase::SpGemv => 5,
+            Phase::Correction => 6,
+        }
+    }
+}
+
+/// Per-rank, per-phase accumulated charged time plus communication volume.
+#[derive(Clone, Debug)]
+pub struct PhaseBook {
+    p: usize,
+    /// `charged[phase][rank]` — seconds of simulated time.
+    charged: Vec<Vec<f64>>,
+    /// `wait[phase][rank]` — portion of `charged` that was wait-for-slowest
+    /// (sync skew) rather than transfer or compute.
+    wait: Vec<Vec<f64>>,
+    /// Total words moved per rank (allreduce payloads, counted once per
+    /// participating rank as in the paper's W).
+    pub words: Vec<f64>,
+    /// Total collective messages per rank (L).
+    pub messages: Vec<f64>,
+}
+
+impl PhaseBook {
+    /// New book for `p` ranks.
+    pub fn new(p: usize) -> PhaseBook {
+        PhaseBook {
+            p,
+            charged: vec![vec![0.0; p]; Phase::all().len()],
+            wait: vec![vec![0.0; p]; Phase::all().len()],
+            words: vec![0.0; p],
+            messages: vec![0.0; p],
+        }
+    }
+
+    /// Number of ranks tracked.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// Charge `seconds` of work/communication on `rank` to `phase`.
+    pub fn charge(&mut self, phase: Phase, rank: usize, seconds: f64) {
+        self.charged[phase.index()][rank] += seconds;
+    }
+
+    /// Record that `seconds` of the charge on `rank` was sync-skew wait.
+    pub fn charge_wait(&mut self, phase: Phase, rank: usize, seconds: f64) {
+        self.wait[phase.index()][rank] += seconds;
+    }
+
+    /// Mean over ranks of the charged time for a phase (the per-rank wall
+    /// contribution the paper's breakdown reports).
+    pub fn mean_charged(&self, phase: Phase) -> f64 {
+        mean(&self.charged[phase.index()])
+    }
+
+    /// Max over ranks (critical-path view).
+    pub fn max_charged(&self, phase: Phase) -> f64 {
+        self.charged[phase.index()].iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean sync-skew wait for a phase.
+    pub fn mean_wait(&self, phase: Phase) -> f64 {
+        mean(&self.wait[phase.index()])
+    }
+
+    /// Algorithm total (mean over ranks, metrics excluded) — the paper's
+    /// "algorithm total" row.
+    pub fn algorithm_total(&self) -> f64 {
+        Phase::all()
+            .iter()
+            .filter(|ph| ph.in_algorithm_total())
+            .map(|ph| self.mean_charged(*ph))
+            .sum()
+    }
+
+    /// Total including metrics overhead — "total with metrics".
+    pub fn total_with_metrics(&self) -> f64 {
+        self.algorithm_total() + self.mean_charged(Phase::Metrics)
+    }
+
+    /// Reset all counters (e.g. after warmup iterations).
+    pub fn reset(&mut self) {
+        for v in self.charged.iter_mut().chain(self.wait.iter_mut()) {
+            v.fill(0.0);
+        }
+        self.words.fill(0.0);
+        self.messages.fill(0.0);
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate_per_phase() {
+        let mut b = PhaseBook::new(2);
+        b.charge(Phase::Gram, 0, 1.0);
+        b.charge(Phase::Gram, 1, 3.0);
+        b.charge(Phase::Metrics, 0, 10.0);
+        assert!((b.mean_charged(Phase::Gram) - 2.0).abs() < 1e-12);
+        assert_eq!(b.max_charged(Phase::Gram), 3.0);
+    }
+
+    #[test]
+    fn algorithm_total_excludes_metrics() {
+        let mut b = PhaseBook::new(1);
+        b.charge(Phase::Metrics, 0, 5.0);
+        b.charge(Phase::SpGemv, 0, 1.0);
+        b.charge(Phase::SstepComm, 0, 2.0);
+        assert!((b.algorithm_total() - 3.0).abs() < 1e-12);
+        assert!((b.total_with_metrics() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_tracked_separately() {
+        let mut b = PhaseBook::new(2);
+        b.charge(Phase::SstepComm, 0, 1.0);
+        b.charge_wait(Phase::SstepComm, 0, 0.8);
+        assert!((b.mean_wait(Phase::SstepComm) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut b = PhaseBook::new(1);
+        b.charge(Phase::Gram, 0, 1.0);
+        b.words[0] = 10.0;
+        b.reset();
+        assert_eq!(b.algorithm_total(), 0.0);
+        assert_eq!(b.words[0], 0.0);
+    }
+}

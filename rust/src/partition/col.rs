@@ -1,0 +1,310 @@
+//! Column partitioners (paper §7.3).
+
+use crate::sparse::{col_degrees, Csr};
+
+/// The three selectable column-partitioning policies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Partitioner {
+    /// Uniform contiguous blocks of `⌈n/p_c⌉` columns.
+    Rows,
+    /// Contiguous greedy nnz balancing (advance when cumulative nnz reaches
+    /// the per-rank target).
+    Nnz,
+    /// Round-robin assignment `col → col mod p_c`.
+    Cyclic,
+}
+
+impl Partitioner {
+    /// All policies in the paper's presentation order.
+    pub fn all() -> [Partitioner; 3] {
+        [Partitioner::Rows, Partitioner::Nnz, Partitioner::Cyclic]
+    }
+
+    /// CLI / table name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Rows => "rows",
+            Partitioner::Nnz => "nnz",
+            Partitioner::Cyclic => "cyclic",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Partitioner> {
+        match s {
+            "rows" => Some(Partitioner::Rows),
+            "nnz" => Some(Partitioner::Nnz),
+            "cyclic" => Some(Partitioner::Cyclic),
+            _ => None,
+        }
+    }
+}
+
+/// The result of partitioning `n` columns into `p_c` parts: a total map
+/// `column → (owner part, local index within part)`.
+#[derive(Clone, Debug)]
+pub struct ColPartition {
+    /// Number of parts.
+    pub p_c: usize,
+    /// Policy that produced this partition.
+    pub policy: Partitioner,
+    /// `owner[c]` = part owning global column `c`.
+    pub owner: Vec<u32>,
+    /// `local_id[c]` = index of global column `c` within its part.
+    pub local_id: Vec<u32>,
+    /// Columns per part.
+    pub n_local: Vec<usize>,
+    /// Nonzeros per part (sum of owned column degrees).
+    pub nnz_local: Vec<usize>,
+}
+
+impl ColPartition {
+    /// Partition the columns of `a` into `p_c` parts under `policy`.
+    pub fn build(a: &Csr, p_c: usize, policy: Partitioner) -> ColPartition {
+        assert!(p_c >= 1, "p_c must be >= 1");
+        assert!(a.cols() >= p_c, "cannot split {} cols into {p_c} parts", a.cols());
+        let n = a.cols();
+        let deg = col_degrees(a);
+        let owner: Vec<u32> = match policy {
+            Partitioner::Rows => {
+                // Contiguous blocks, sizes differing by at most one.
+                let base = n / p_c;
+                let extra = n % p_c;
+                let mut owner = Vec::with_capacity(n);
+                for part in 0..p_c {
+                    let sz = base + usize::from(part < extra);
+                    owner.extend(std::iter::repeat(part as u32).take(sz));
+                }
+                owner
+            }
+            Partitioner::Nnz => greedy_nnz_owners(&deg, p_c),
+            Partitioner::Cyclic => (0..n).map(|c| (c % p_c) as u32).collect(),
+        };
+        Self::from_owners(a, p_c, policy, owner, &deg)
+    }
+
+    fn from_owners(
+        _a: &Csr,
+        p_c: usize,
+        policy: Partitioner,
+        owner: Vec<u32>,
+        deg: &[usize],
+    ) -> ColPartition {
+        let n = owner.len();
+        let mut n_local = vec![0usize; p_c];
+        let mut nnz_local = vec![0usize; p_c];
+        let mut local_id = vec![0u32; n];
+        for c in 0..n {
+            let part = owner[c] as usize;
+            local_id[c] = n_local[part] as u32;
+            n_local[part] += 1;
+            nnz_local[part] += deg[c];
+        }
+        ColPartition { p_c, policy, owner, local_id, n_local, nnz_local }
+    }
+
+    /// Total columns.
+    pub fn n(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Column-to-local map for one part, suitable for `Csr::select_columns`.
+    pub fn col_map(&self, part: usize) -> Vec<Option<u32>> {
+        assert!(part < self.p_c);
+        self.owner
+            .iter()
+            .zip(&self.local_id)
+            .map(|(&o, &l)| if o as usize == part { Some(l) } else { None })
+            .collect()
+    }
+
+    /// Global column ids owned by `part`, in local order.
+    pub fn owned_cols(&self, part: usize) -> Vec<usize> {
+        let mut cols = vec![0usize; self.n_local[part]];
+        for c in 0..self.n() {
+            if self.owner[c] as usize == part {
+                cols[self.local_id[c] as usize] = c;
+            }
+        }
+        cols
+    }
+
+    /// nnz imbalance `κ = max/avg` over parts (paper §6.5).
+    pub fn kappa(&self) -> f64 {
+        crate::util::Summary::of_counts(&self.nnz_local).imbalance()
+    }
+
+    /// Largest per-part column count (the cache-footprint objective).
+    pub fn max_n_local(&self) -> usize {
+        self.n_local.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest per-part weight-slab footprint in bytes (`max n_local · w`).
+    pub fn max_weight_bytes(&self) -> usize {
+        self.max_n_local() * crate::WORD_BYTES
+    }
+}
+
+/// Contiguous greedy owner assignment: walk columns in order, advance to the
+/// next part once its cumulative nnz reaches the uniform target. The final
+/// part absorbs the remainder (this is what concentrates 1.4M light columns
+/// on one rank for url in the paper — deliberately preserved behaviour).
+fn greedy_nnz_owners(deg: &[usize], p_c: usize) -> Vec<u32> {
+    let n = deg.len();
+    let total: usize = deg.iter().sum();
+    let target = (total as f64 / p_c as f64).max(1.0);
+    let mut owner = vec![0u32; n];
+    let mut part = 0usize;
+    let mut acc = 0usize;
+    let mut part_size = 0usize;
+    for c in 0..n {
+        // Never let trailing parts run out of columns: once the columns
+        // still unassigned are only enough to give each *later* part one,
+        // advance on every subsequent column.
+        let later_parts = p_c - 1 - part;
+        let must_advance = part_size > 0 && (n - c) <= later_parts;
+        // Cumulative target: keeps parts balanced even when a single heavy
+        // column overshoots several targets at once.
+        let target_reached = part_size > 0 && acc as f64 >= target * (part + 1) as f64;
+        if part + 1 < p_c && (must_advance || target_reached) {
+            part += 1;
+            part_size = 0;
+        }
+        owner[c] = part as u32;
+        part_size += 1;
+        acc += deg[c];
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::{Prng, Zipf};
+
+    fn skewed_matrix(m: usize, n: usize, z: usize, alpha: f64, seed: u64) -> Csr {
+        let mut rng = Prng::new(seed);
+        let zipf = Zipf::new(n, alpha);
+        let mut t = Vec::new();
+        for r in 0..m {
+            let mut cols = std::collections::HashSet::new();
+            while cols.len() < z {
+                cols.insert(zipf.sample(&mut rng));
+            }
+            for c in cols {
+                t.push((r, c, 1.0));
+            }
+        }
+        Csr::from_triplets(m, n, &t)
+    }
+
+    #[test]
+    fn rows_partition_is_contiguous_and_exact() {
+        let a = skewed_matrix(50, 17, 3, 0.0, 1);
+        let p = ColPartition::build(&a, 4, Partitioner::Rows);
+        assert_eq!(p.n_local, vec![5, 4, 4, 4]); // 17 = 5+4+4+4
+        // Contiguity: owner non-decreasing.
+        assert!(p.owner.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn cyclic_partition_is_round_robin() {
+        let a = skewed_matrix(20, 12, 3, 0.0, 2);
+        let p = ColPartition::build(&a, 4, Partitioner::Cyclic);
+        assert_eq!(p.n_local, vec![3, 3, 3, 3]);
+        assert_eq!(p.owner[0], 0);
+        assert_eq!(p.owner[1], 1);
+        assert_eq!(p.owner[5], 1);
+        // Local ids increase along owned columns.
+        assert_eq!(p.owned_cols(1), vec![1, 5, 9]);
+    }
+
+    #[test]
+    fn nnz_partition_balances_nnz_on_skewed_data() {
+        let a = skewed_matrix(400, 256, 8, 1.0, 3);
+        let rows = ColPartition::build(&a, 8, Partitioner::Rows);
+        let nnz = ColPartition::build(&a, 8, Partitioner::Nnz);
+        assert!(
+            nnz.kappa() < rows.kappa() / 2.0,
+            "nnz κ={} rows κ={}",
+            nnz.kappa(),
+            rows.kappa()
+        );
+        // ... at the cost of column-count imbalance (cache-spill risk):
+        assert!(nnz.max_n_local() > 2 * nnz.n() / 8, "max n_local={}", nnz.max_n_local());
+    }
+
+    #[test]
+    fn cyclic_meets_both_objectives_on_skewed_data() {
+        let a = skewed_matrix(400, 256, 8, 1.0, 4);
+        let cyc = ColPartition::build(&a, 8, Partitioner::Cyclic);
+        let rows = ColPartition::build(&a, 8, Partitioner::Rows);
+        assert_eq!(cyc.max_n_local(), 256 / 8); // exact n/p_c
+        assert!(cyc.kappa() < rows.kappa(), "cyc κ={} rows κ={}", cyc.kappa(), rows.kappa());
+        assert!(cyc.kappa() < 2.5, "cyc κ={}", cyc.kappa());
+    }
+
+    #[test]
+    fn prop_every_partitioner_covers_each_column_once() {
+        check(
+            Config { cases: 40, seed: 0xC01 },
+            "partition covers exactly once",
+            |rng| {
+                let n = 4 + rng.next_below(200);
+                let m = 10 + rng.next_below(50);
+                let p_c = 1 + rng.next_below(8.min(n));
+                let alpha = rng.range_f64(0.0, 1.2);
+                let a = skewed_matrix(m, n, 3.min(n), alpha, rng.next_u64());
+                (a, p_c)
+            },
+            |(a, p_c)| {
+                for policy in Partitioner::all() {
+                    let p = ColPartition::build(a, *p_c, policy);
+                    // owners in range, n_local sums to n, local ids bijective.
+                    if p.n_local.iter().sum::<usize>() != a.cols() {
+                        return false;
+                    }
+                    if p.n_local.iter().any(|&x| x == 0) {
+                        return false; // every part owns >= 1 column
+                    }
+                    for part in 0..*p_c {
+                        let cols = p.owned_cols(part);
+                        if cols.len() != p.n_local[part] {
+                            return false;
+                        }
+                        let mut ids: Vec<u32> =
+                            cols.iter().map(|&c| p.local_id[c]).collect();
+                        ids.sort_unstable();
+                        if ids != (0..cols.len() as u32).collect::<Vec<_>>() {
+                            return false;
+                        }
+                    }
+                    // kappa >= 1 by definition.
+                    if p.kappa() < 1.0 - 1e-12 {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn col_map_matches_owned_cols() {
+        let a = skewed_matrix(30, 24, 4, 0.5, 5);
+        let p = ColPartition::build(&a, 3, Partitioner::Nnz);
+        for part in 0..3 {
+            let map = p.col_map(part);
+            for (c, entry) in map.iter().enumerate() {
+                match entry {
+                    Some(l) => {
+                        assert_eq!(p.owner[c] as usize, part);
+                        assert_eq!(p.owned_cols(part)[*l as usize], c);
+                    }
+                    None => assert_ne!(p.owner[c] as usize, part),
+                }
+            }
+        }
+    }
+}

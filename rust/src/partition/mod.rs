@@ -1,0 +1,27 @@
+//! Data partitioning across the 2D mesh (paper §4 Fig. 1, §6.5, §7.3).
+//!
+//! Rows of `A` are split contiguously across the `p_r` row teams (each row
+//! team works on an independent slice of samples — the FedAvg axis).
+//! Columns are split across the `p_c` ranks of each row team by one of the
+//! three selectable **column partitioners** the paper implements:
+//!
+//! * `Rows`  — uniform contiguous `n/p_c` columns per rank. Cache-friendly
+//!   (`n_local` exact) but nnz-imbalanced on skewed data.
+//! * `Nnz`   — contiguous greedy walk balancing cumulative nnz. `κ ≈ 1`
+//!   but can concentrate millions of light columns on one rank
+//!   (cache spill — the paper's 2.4× url penalty).
+//! * `Cyclic` — round-robin columns. `n_local = n/p_c` exactly *and*
+//!   `κ ≈ 1` in expectation; costs a column permutation at load time.
+//!
+//! [`stats::PartitionStats`] quantifies both objectives of the paper's
+//! two-objective problem: `min κ  s.t.  max n_local · w ≤ L_cap`.
+
+pub mod col;
+pub mod row;
+pub mod stats;
+pub mod twod;
+
+pub use col::{ColPartition, Partitioner};
+pub use row::RowPartition;
+pub use stats::PartitionStats;
+pub use twod::MeshPartition;

@@ -1,0 +1,166 @@
+//! Row (sample) partitioning across the `p_r` row teams.
+//!
+//! The paper partitions rows contiguously (FedAvg's 1D-row layout,
+//! Algorithm 2 line 2) and pads `m ≡ 0 (mod s_max·b)` so cyclic mini-batch
+//! sampling reconstructs row-index arrays cheaply (§5). We keep the
+//! contiguous layout and expose the same cyclic batch iterator.
+
+/// Contiguous partition of `m` rows into `p_r` blocks (sizes differ by ≤ 1).
+#[derive(Clone, Debug)]
+pub struct RowPartition {
+    /// Block boundaries; block `i` is `starts[i]..starts[i+1]`.
+    starts: Vec<usize>,
+}
+
+impl RowPartition {
+    /// Split `m` rows into `p_r` contiguous blocks.
+    pub fn new(m: usize, p_r: usize) -> RowPartition {
+        assert!(p_r >= 1, "p_r must be >= 1");
+        assert!(m >= p_r, "cannot split {m} rows into {p_r} blocks");
+        let base = m / p_r;
+        let extra = m % p_r;
+        let mut starts = Vec::with_capacity(p_r + 1);
+        starts.push(0);
+        for i in 0..p_r {
+            let sz = base + usize::from(i < extra);
+            starts.push(starts[i] + sz);
+        }
+        RowPartition { starts }
+    }
+
+    /// Number of blocks.
+    pub fn p_r(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Total rows.
+    pub fn m(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// Row range of block `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.starts[i]..self.starts[i + 1]
+    }
+
+    /// Rows in block `i`.
+    pub fn len(&self, i: usize) -> usize {
+        self.starts[i + 1] - self.starts[i]
+    }
+
+    /// Block owning a global row.
+    pub fn owner(&self, row: usize) -> usize {
+        assert!(row < self.m());
+        // starts is sorted; partition_point gives first index with start > row.
+        self.starts.partition_point(|&s| s <= row) - 1
+    }
+}
+
+/// Cyclic mini-batch cursor over a local row block: successive batches of
+/// `b` local rows via `i ← (i + b) mod m_local` (paper §5: "sub-sampling of
+/// rows is performed cyclically"). Deterministic, allocation-free per batch.
+#[derive(Clone, Debug)]
+pub struct CyclicBatches {
+    m_local: usize,
+    b: usize,
+    cursor: usize,
+}
+
+impl CyclicBatches {
+    /// Batches of size `b` over `m_local` rows, starting at row 0.
+    pub fn new(m_local: usize, b: usize) -> CyclicBatches {
+        assert!(b >= 1 && m_local >= 1, "empty batch domain");
+        CyclicBatches { m_local, b, cursor: 0 }
+    }
+
+    /// Fill `out` (length `b`) with the next batch's local row indices.
+    pub fn next_into(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        for k in 0..self.b {
+            out.push((self.cursor + k) % self.m_local);
+        }
+        self.cursor = (self.cursor + self.b) % self.m_local;
+    }
+
+    /// Convenience allocating variant.
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut v = Vec::with_capacity(self.b);
+        self.next_into(&mut v);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    #[test]
+    fn even_split() {
+        let p = RowPartition::new(12, 4);
+        assert_eq!(p.range(0), 0..3);
+        assert_eq!(p.range(3), 9..12);
+    }
+
+    #[test]
+    fn uneven_split_front_loads_extra() {
+        let p = RowPartition::new(10, 4);
+        assert_eq!(p.len(0), 3);
+        assert_eq!(p.len(1), 3);
+        assert_eq!(p.len(2), 2);
+        assert_eq!(p.len(3), 2);
+        assert_eq!(p.m(), 10);
+    }
+
+    #[test]
+    fn owner_is_inverse_of_range() {
+        let p = RowPartition::new(37, 5);
+        for i in 0..5 {
+            for r in p.range(i) {
+                assert_eq!(p.owner(r), i);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_blocks_cover_exactly() {
+        check(
+            Config { cases: 64, seed: 0x40 },
+            "row blocks cover",
+            |rng| {
+                let p_r = 1 + rng.next_below(16);
+                let m = p_r + rng.next_below(1000);
+                (m, p_r)
+            },
+            |&(m, p_r)| {
+                let p = RowPartition::new(m, p_r);
+                let total: usize = (0..p_r).map(|i| p.len(i)).sum();
+                total == m && (0..p_r).all(|i| p.len(i) >= 1)
+            },
+        );
+    }
+
+    #[test]
+    fn cyclic_batches_wrap() {
+        let mut it = CyclicBatches::new(5, 2);
+        assert_eq!(it.next_batch(), vec![0, 1]);
+        assert_eq!(it.next_batch(), vec![2, 3]);
+        assert_eq!(it.next_batch(), vec![4, 0]);
+        assert_eq!(it.next_batch(), vec![1, 2]);
+    }
+
+    #[test]
+    fn cyclic_visits_all_rows_evenly() {
+        let m = 7;
+        let b = 3;
+        let mut it = CyclicBatches::new(m, b);
+        let mut counts = vec![0usize; m];
+        for _ in 0..m {
+            // m batches of b rows = b full passes when gcd wraps
+            for r in it.next_batch() {
+                counts[r] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c == b), "counts={counts:?}");
+    }
+}

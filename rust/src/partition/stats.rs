@@ -1,0 +1,130 @@
+//! Partition diagnostics and the two-objective partitioner selector
+//! (paper §6.5 "Cache-aware partitioning", §7.3, Table 9).
+
+use super::col::{ColPartition, Partitioner};
+use crate::sparse::Csr;
+
+/// Per-node L2 capacity per core on the paper's machine (AMD EPYC 7763,
+/// Perlmutter CPU): 1 MB. Used as the default `L_cap` of the cache-footprint
+/// constraint and of the topology rule's cache term.
+pub const L_CAP_BYTES: usize = 1 << 20;
+
+/// The Table 9 statistics for one (dataset, partitioner) cell.
+#[derive(Clone, Debug)]
+pub struct PartitionStats {
+    /// Policy measured.
+    pub policy: Partitioner,
+    /// nnz imbalance κ = max/avg over parts.
+    pub kappa: f64,
+    /// Largest per-part column count.
+    pub max_n_local: usize,
+    /// Largest per-part weight slab in bytes.
+    pub max_weight_bytes: usize,
+    /// Does the largest slab fit the cache budget?
+    pub fits_cache: bool,
+}
+
+impl PartitionStats {
+    /// Measure a column partition against a cache budget.
+    pub fn of(part: &ColPartition, l_cap_bytes: usize) -> PartitionStats {
+        let max_weight_bytes = part.max_weight_bytes();
+        PartitionStats {
+            policy: part.policy,
+            kappa: part.kappa(),
+            max_n_local: part.max_n_local(),
+            max_weight_bytes,
+            fits_cache: max_weight_bytes <= l_cap_bytes,
+        }
+    }
+}
+
+/// Evaluate all three policies on `a` at `p_c` parts.
+pub fn survey(a: &Csr, p_c: usize, l_cap_bytes: usize) -> Vec<PartitionStats> {
+    Partitioner::all()
+        .iter()
+        .map(|&policy| PartitionStats::of(&ColPartition::build(a, p_c, policy), l_cap_bytes))
+        .collect()
+}
+
+/// The paper's two-objective selection: `min κ s.t. max n_local·w ≤ L_cap`.
+/// If no policy satisfies the constraint, fall back to the smallest
+/// footprint (least-bad cache behaviour), breaking ties by κ.
+pub fn select_two_objective(a: &Csr, p_c: usize, l_cap_bytes: usize) -> Partitioner {
+    let stats = survey(a, p_c, l_cap_bytes);
+    let feasible: Vec<&PartitionStats> = stats.iter().filter(|s| s.fits_cache).collect();
+    if !feasible.is_empty() {
+        return feasible
+            .iter()
+            .min_by(|x, y| x.kappa.partial_cmp(&y.kappa).unwrap())
+            .unwrap()
+            .policy;
+    }
+    stats
+        .iter()
+        .min_by(|x, y| {
+            (x.max_weight_bytes, x.kappa)
+                .partial_cmp(&(y.max_weight_bytes, y.kappa))
+                .unwrap()
+        })
+        .unwrap()
+        .policy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::Prng;
+
+    #[test]
+    fn survey_reports_all_three() {
+        let mut rng = Prng::new(1);
+        let ds = synth::sparse_skewed("s", 200, 128, 6, 1.0, &mut rng);
+        let s = survey(&ds.a, 8, L_CAP_BYTES);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].policy, Partitioner::Rows);
+        assert_eq!(s[2].policy, Partitioner::Cyclic);
+        // Everything fits a 1MB budget at this scale.
+        assert!(s.iter().all(|x| x.fits_cache));
+    }
+
+    #[test]
+    fn selector_prefers_low_kappa_when_all_fit() {
+        let mut rng = Prng::new(2);
+        // Strong column skew: nnz or cyclic should beat rows on κ.
+        let ds = synth::sparse_skewed("s", 600, 256, 8, 1.1, &mut rng);
+        let pick = select_two_objective(&ds.a, 8, L_CAP_BYTES);
+        assert_ne!(pick, Partitioner::Rows, "rows has the worst κ on skewed data");
+    }
+
+    #[test]
+    fn selector_enforces_cache_constraint() {
+        let mut rng = Prng::new(3);
+        let ds = synth::sparse_skewed("s", 600, 1024, 4, 1.2, &mut rng);
+        // Tiny cache budget: only exact n/p_c partitioners can fit; nnz's
+        // overloaded tail rank must be rejected if it exceeds the budget.
+        let p_c = 8;
+        let budget = (ds.n() / p_c) * crate::WORD_BYTES; // exactly n/p_c words
+        let pick = select_two_objective(&ds.a, p_c, budget);
+        let stats = survey(&ds.a, p_c, budget);
+        let nnz_stat = &stats[1];
+        if !nnz_stat.fits_cache {
+            assert_ne!(pick, Partitioner::Nnz);
+        }
+        // The picked policy must fit (rows and cyclic always do here).
+        let picked = stats.iter().find(|s| s.policy == pick).unwrap();
+        assert!(picked.fits_cache);
+    }
+
+    #[test]
+    fn infeasible_budget_falls_back_to_min_footprint() {
+        let mut rng = Prng::new(4);
+        let ds = synth::sparse_skewed("s", 100, 64, 4, 0.9, &mut rng);
+        let pick = select_two_objective(&ds.a, 4, 1); // nothing fits 1 byte
+        // Fallback = smallest max-footprint → one of the exact-n/p_c policies.
+        let stats = survey(&ds.a, 4, 1);
+        let min_fp = stats.iter().map(|s| s.max_weight_bytes).min().unwrap();
+        let picked = stats.iter().find(|s| s.policy == pick).unwrap();
+        assert_eq!(picked.max_weight_bytes, min_fp);
+    }
+}

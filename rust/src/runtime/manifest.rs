@@ -1,0 +1,157 @@
+//! Artifact manifest parsing and variant selection.
+//!
+//! `manifest.tsv` (written by `python/compile/aot.py`) has one row per
+//! compiled shape variant: `name \t kind=...,k=v,... \t file`. The runtime
+//! selects variants by exact parameter match (the solver clamps its
+//! configuration to the compiled grid) or by smallest-padding match for
+//! the pad-friendly kernels (sigmoid, loss).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    /// Unique artifact name (e.g. `sstep_s4_b32`).
+    pub name: String,
+    /// Kernel kind (`sstep`, `dense_grad`, `gram`, `loss`, `sigmoid`).
+    pub kind: String,
+    /// Static shape parameters (e.g. `s → 4`, `b → 32`).
+    pub params: HashMap<String, usize>,
+    /// HLO text file path (absolute).
+    pub path: PathBuf,
+}
+
+/// The parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// All artifacts in manifest order.
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors relative file names.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("name\tparams\tfile") => {}
+            other => bail!("bad manifest header: {other:?}"),
+        }
+        let mut artifacts = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (name, params_s, file) = match (cols.next(), cols.next(), cols.next()) {
+                (Some(a), Some(b), Some(c)) => (a, b, c),
+                _ => bail!("manifest row {} malformed: {line:?}", i + 2),
+            };
+            let mut kind = String::new();
+            let mut params = HashMap::new();
+            for kv in params_s.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("bad param {kv:?} in row {}", i + 2))?;
+                if k == "kind" {
+                    kind = v.to_string();
+                } else {
+                    params.insert(
+                        k.to_string(),
+                        v.parse::<usize>()
+                            .with_context(|| format!("non-numeric param {kv:?}"))?,
+                    );
+                }
+            }
+            if kind.is_empty() {
+                bail!("row {} missing kind", i + 2);
+            }
+            artifacts.push(Artifact {
+                name: name.to_string(),
+                kind,
+                params,
+                path: dir.join(file),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Exact-match lookup: artifact of `kind` whose params all equal `want`.
+    pub fn find_exact(&self, kind: &str, want: &[(&str, usize)]) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind && want.iter().all(|(k, v)| a.params.get(*k) == Some(v))
+        })
+    }
+
+    /// Smallest artifact of `kind` whose parameter `dim` is ≥ `min` —
+    /// the pad-up selection for elementwise kernels.
+    pub fn find_padded(&self, kind: &str, dim: &str, min: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .filter(|a| a.params.get(dim).is_some_and(|&v| v >= min))
+            .min_by_key(|a| a.params[dim])
+    }
+
+    /// Largest artifact of `kind` by parameter `dim` (chunking fallback).
+    pub fn find_largest(&self, kind: &str, dim: &str) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .max_by_key(|a| a.params.get(dim).copied().unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tparams\tfile\n\
+        sstep_s4_b32\tkind=sstep,s=4,b=32\tsstep_s4_b32.hlo.txt\n\
+        sigmoid_m128\tkind=sigmoid,m=128\tsigmoid_m128.hlo.txt\n\
+        sigmoid_m512\tkind=sigmoid,m=512\tsigmoid_m512.hlo.txt\n";
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find_exact("sstep", &[("s", 4), ("b", 32)]).unwrap();
+        assert_eq!(a.name, "sstep_s4_b32");
+        assert_eq!(a.path, Path::new("/art/sstep_s4_b32.hlo.txt"));
+        assert!(m.find_exact("sstep", &[("s", 3), ("b", 32)]).is_none());
+    }
+
+    #[test]
+    fn padded_selection_picks_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.find_padded("sigmoid", "m", 100).unwrap().params["m"], 128);
+        assert_eq!(m.find_padded("sigmoid", "m", 129).unwrap().params["m"], 512);
+        assert!(m.find_padded("sigmoid", "m", 1000).is_none());
+        assert_eq!(m.find_largest("sigmoid", "m").unwrap().params["m"], 512);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(Manifest::parse("nope\n", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(Manifest::parse("name\tparams\tfile\nonly-one-col\n", Path::new("/")).is_err());
+        assert!(
+            Manifest::parse("name\tparams\tfile\nx\tkind=s,b=notnum\tf\n", Path::new("/"))
+                .is_err()
+        );
+        assert!(Manifest::parse("name\tparams\tfile\nx\tb=1\tf\n", Path::new("/")).is_err());
+    }
+}

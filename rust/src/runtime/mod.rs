@@ -1,0 +1,34 @@
+//! The XLA/PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and serves them as a [`ComputeBackend`].
+//!
+//! Flow (mirrors /opt/xla-example/load_hlo):
+//! `artifacts/manifest.tsv` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::cpu().compile` → cached
+//! `PjRtLoadedExecutable`, executed with f64 literals on the solver hot
+//! path. Python never runs here — the Rust binary is self-contained once
+//! `make artifacts` has produced the HLO text files.
+//!
+//! [`ComputeBackend`]: crate::compute::ComputeBackend
+
+pub mod manifest;
+pub mod xla_backend;
+
+pub use manifest::{Artifact, Manifest};
+pub use xla_backend::XlaBackend;
+
+/// Default artifacts directory, relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: `$HYBRID_SGD_ARTIFACTS` if set, else
+/// `artifacts/` relative to the current directory, else relative to the
+/// crate root (so tests work from any cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("HYBRID_SGD_ARTIFACTS") {
+        return dir.into();
+    }
+    let cwd = std::path::PathBuf::from(DEFAULT_ARTIFACTS_DIR);
+    if cwd.join("manifest.tsv").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACTS_DIR)
+}

@@ -1,0 +1,113 @@
+//! Shared solver plumbing: run options, traces, results.
+
+use crate::comm::Charging;
+use crate::costmodel::CalibProfile;
+use crate::metrics::PhaseBook;
+
+/// Options controlling a solver run.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Fixed step size η (the paper tunes offline to 0.01).
+    pub eta: f64,
+    /// Maximum outer bundles to run (a bundle = `s` inner iterations).
+    pub max_bundles: usize,
+    /// Evaluate the global loss every this many bundles (0 = only at end).
+    pub eval_every: usize,
+    /// Stop early once the global loss reaches this target.
+    pub target_loss: Option<f64>,
+    /// Compute-lane threads for the engine.
+    pub lanes: usize,
+    /// Charging policy for compute phases.
+    pub charging: Charging,
+    /// Machine profile for collective charging.
+    pub profile: CalibProfile,
+    /// Master seed (drives dataset-independent solver randomness; sampling
+    /// itself is cyclic and deterministic, matching the paper §5).
+    pub seed: u64,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            eta: 0.01,
+            max_bundles: 100,
+            eval_every: 10,
+            target_loss: None,
+            lanes: 1,
+            charging: Charging::Modeled,
+            profile: CalibProfile::perlmutter(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One loss-trace point.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Outer bundles completed.
+    pub bundles: usize,
+    /// Inner iterations completed (`bundles · s`).
+    pub iters: usize,
+    /// Simulated wall time at this point (algorithm time, metrics excluded).
+    pub sim_time: f64,
+    /// Global logistic loss of the team-averaged model.
+    pub loss: f64,
+}
+
+/// Result of a solver run.
+#[derive(Clone, Debug)]
+pub struct SolverRun {
+    /// Solver label (e.g. `hybrid 4x64 cyclic`).
+    pub name: String,
+    /// Final global (team-averaged) weights.
+    pub x: Vec<f64>,
+    /// Loss trace at the eval cadence.
+    pub trace: Vec<TracePoint>,
+    /// Outer bundles executed.
+    pub bundles_run: usize,
+    /// Inner iterations executed.
+    pub inner_iters: usize,
+    /// Final simulated wall (algorithm time).
+    pub sim_wall: f64,
+    /// Phase accounting (Table 10 material).
+    pub book: PhaseBook,
+    /// Simulated time at which `target_loss` was first met, if it was.
+    pub time_to_target: Option<f64>,
+}
+
+impl SolverRun {
+    /// Simulated algorithm time per inner iteration — the paper's "ms/iter".
+    pub fn per_iter(&self) -> f64 {
+        if self.inner_iters == 0 {
+            0.0
+        } else {
+            self.sim_wall / self.inner_iters as f64
+        }
+    }
+
+    /// Final loss (last trace point), or NaN when tracing was off.
+    pub fn final_loss(&self) -> f64 {
+        self.trace.last().map(|t| t.loss).unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_iter_divides() {
+        let r = SolverRun {
+            name: "t".into(),
+            x: vec![],
+            trace: vec![],
+            bundles_run: 5,
+            inner_iters: 20,
+            sim_wall: 2.0,
+            book: PhaseBook::new(1),
+            time_to_target: None,
+        };
+        assert!((r.per_iter() - 0.1).abs() < 1e-12);
+        assert!(r.final_loss().is_nan());
+    }
+}

@@ -1,0 +1,463 @@
+//! HybridSGD — the paper's 2D-parallel solver (§4 "HybridSGD Design").
+//!
+//! Data layout: `A` is 2D-partitioned over the `p_r × p_c` mesh (rows
+//! contiguously over row teams, columns by the selected partitioner within
+//! each team). Every rank holds a `m/p_r × n_local` label-folded CSR block
+//! and the matching `n_local` slice of the weight vector.
+//!
+//! One **bundle** (outer iteration, `s` inner steps):
+//! 1. all ranks of a row team sample the same `s·b` local rows cyclically;
+//! 2. each rank forms its column-partial `v = Y·x` and partial Gram
+//!    `G = tril(YYᵀ)` (SpGemv + Gram phases);
+//! 3. one row-team Allreduce combines `[v | tril(G)]` (SstepComm phase —
+//!    this is where load-imbalance skew materializes as wait time);
+//! 4. every rank redundantly runs the correction recurrence (Correction)
+//!    producing the `s·b` residuals `z`;
+//! 5. each rank scatters `x += (η/b)·Yᵀz` into its weight slice
+//!    (WeightsUpdate).
+//!
+//! Every `τ` bundles, column teams average their weight slices (FedAvgComm)
+//! — the deferred FedAvg synchronization. The mesh corners recover the 1D
+//! baselines exactly (no row partner ⇒ SstepComm free; no column partner ⇒
+//! FedAvgComm free).
+
+use super::common::{RunOpts, SolverRun, TracePoint};
+use crate::comm::{Cost, Engine, Reduce, Scope};
+use crate::compute::ComputeBackend;
+use crate::costmodel::HybridConfig;
+use crate::data::Dataset;
+use crate::metrics::Phase;
+use crate::partition::{MeshPartition, Partitioner};
+use crate::sparse::{gram, Csr};
+use crate::WORD_BYTES;
+use std::time::Instant;
+
+/// Per-rank solver state.
+struct RankState {
+    /// Local label-folded block (`m_local × n_local`).
+    block: Csr,
+    /// Local weight slice.
+    x: Vec<f64>,
+    /// Packed communication buffer: `[v (s·b) | tril(G) (q(q+1)/2)]`.
+    comm: Vec<f64>,
+    /// Correction output (`s·b`).
+    z: Vec<f64>,
+    /// Current bundle's local row ids (`s·b`).
+    batch: Vec<usize>,
+    /// Cyclic sampling cursor (identical across a row team).
+    cursor: usize,
+    /// Dense Gram scratch (`q × q`).
+    gtmp: Vec<f64>,
+    /// Column-scatter scratch for the Gram kernel (`n_local`).
+    gscratch: Vec<f64>,
+    /// Nonzeros in the current batch (for cost charging).
+    batch_nnz: usize,
+}
+
+/// The HybridSGD solver. Construct with a compute backend, run on a
+/// dataset + configuration + partitioner.
+pub struct HybridSolver<'a> {
+    /// Dense-compute backend (native or XLA).
+    pub backend: &'a dyn ComputeBackend,
+}
+
+impl<'a> HybridSolver<'a> {
+    /// New solver over a backend.
+    pub fn new(backend: &'a dyn ComputeBackend) -> Self {
+        HybridSolver { backend }
+    }
+
+    /// Run HybridSGD. See module docs for the algorithm; see
+    /// [`RunOpts`] for termination/tracing knobs.
+    pub fn run(
+        &self,
+        ds: &Dataset,
+        cfg: HybridConfig,
+        policy: Partitioner,
+        opts: &RunOpts,
+    ) -> SolverRun {
+        let mesh = cfg.mesh;
+        let q = cfg.s * cfg.b;
+        // At s = 1 the correction never reads G (no deferred steps to
+        // correct), so the Gram is neither computed nor communicated —
+        // exactly the paper's FedAvg/MB-SGD: the row payload reduces to
+        // the b-vector of Table 2's 1D-row SGD row.
+        let tril_len = if cfg.s > 1 { q * (q + 1) / 2 } else { 0 };
+
+        let mut mp = MeshPartition::build(ds, mesh, policy);
+        let blocks = std::mem::take(&mut mp.blocks);
+
+        let mut states: Vec<RankState> = blocks
+            .into_iter()
+            .map(|block| {
+                let n_local = block.cols();
+                RankState {
+                    block,
+                    x: vec![0.0; n_local],
+                    comm: vec![0.0; q + tril_len],
+                    z: vec![0.0; q],
+                    batch: Vec::with_capacity(q),
+                    cursor: 0,
+                    gtmp: vec![0.0; q * q],
+                    gscratch: vec![0.0; n_local],
+                    batch_nnz: 0,
+                }
+            })
+            .collect();
+
+        let mut engine =
+            Engine::new(mesh, opts.profile.clone(), opts.charging).with_lanes(opts.lanes);
+
+        let backend = self.backend;
+        let (s, b, eta) = (cfg.s, cfg.b, opts.eta);
+        let eta_over_b = eta / b as f64;
+
+        let mut trace = Vec::new();
+        let mut time_to_target = None;
+        let mut bundles_run = 0usize;
+
+        for bundle in 0..opts.max_bundles {
+            // --- 1+2: sample, partial products, partial Gram -------------
+            engine.compute(Phase::SpGemv, &mut states, |_rank, st| {
+                let m_local = st.block.rows();
+                st.batch.clear();
+                for k in 0..q {
+                    st.batch.push((st.cursor + k) % m_local);
+                }
+                st.cursor = (st.cursor + q) % m_local;
+                st.batch_nnz = st.batch.iter().map(|&r| st.block.row_nnz(r)).sum();
+                // v = Y·x (column-partial).
+                let (v, _) = st.comm.split_at_mut(q);
+                st.block.spmv_rows(&st.batch, &st.x, v);
+                // Streamed bytes: CSR traversal plus one read pass over the
+                // local weight slab — the paper's §6.5 cache-aware compute
+                // term (FedAvg's full-n slab prices at L3/DRAM, HybridSGD's
+                // n/p_c slab at L1/L2 — its cache-locality advantage).
+                let slab = (st.x.len() * WORD_BYTES) as f64;
+                Cost::streamed(
+                    2.0 * st.batch_nnz as f64,
+                    12.0 * st.batch_nnz as f64 + slab,
+                    st.x.len() * WORD_BYTES,
+                )
+            });
+
+            if s > 1 {
+                engine.compute(Phase::Gram, &mut states, |_rank, st| {
+                    gram::gram_lower_scatter(&st.block, &st.batch, &mut st.gscratch, &mut st.gtmp);
+                    pack_tril(&st.gtmp, q, &mut st.comm[q..]);
+                    let nnz = st.batch_nnz as f64;
+                    // Scatter + clean (2·nnz) plus ~q/2 gathers over the batch.
+                    let flops = 2.0 * nnz + (q as f64 - 1.0) / 2.0 * nnz;
+                    Cost::streamed(flops, 6.0 * flops, st.x.len() * WORD_BYTES)
+                });
+            }
+
+            // --- 3: row-team Allreduce of [v | tril(G)] ------------------
+            engine.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |st| {
+                &mut st.comm
+            });
+
+            // --- 4: redundant correction recurrence ----------------------
+            engine.compute(Phase::Correction, &mut states, |_rank, st| {
+                if s > 1 {
+                    unpack_tril(&st.comm[q..], q, &mut st.gtmp);
+                }
+                let (v, _) = st.comm.split_at(q);
+                backend.sstep_correct(s, b, &st.gtmp, v, eta_over_b, &mut st.z);
+                Cost::flops((s * (s - 1) * b * b) as f64 + 12.0 * q as f64)
+            });
+
+            // --- 5: scatter the bundle update into the weight slice ------
+            engine.compute(Phase::WeightsUpdate, &mut states, |_rank, st| {
+                for zv in st.z.iter_mut() {
+                    *zv *= eta_over_b;
+                }
+                // Split borrows: scatter reads block/batch, writes x.
+                let RankState { block, batch, z, x, .. } = st;
+                block.t_spmv_rows_acc(batch, z, x);
+                // Read+write pass over the weight slab (§6.5 cache-aware
+                // term, as in the SpGemv phase).
+                let slab = (st.x.len() * WORD_BYTES) as f64;
+                Cost::streamed(
+                    2.0 * st.batch_nnz as f64,
+                    20.0 * st.batch_nnz as f64 + 2.0 * slab,
+                    st.x.len() * WORD_BYTES,
+                )
+            });
+
+            // --- every τ bundles: column-team averaging ------------------
+            if (bundle + 1) % cfg.tau == 0 {
+                engine.allreduce(
+                    Phase::FedAvgComm,
+                    Scope::ColTeam,
+                    Reduce::Mean,
+                    &mut states,
+                    |st| &mut st.x,
+                );
+            }
+
+            bundles_run = bundle + 1;
+
+            // --- metrics: loss of the team-averaged model ----------------
+            let eval_now = (opts.eval_every > 0 && (bundle + 1) % opts.eval_every == 0)
+                || bundle + 1 == opts.max_bundles;
+            if eval_now {
+                let t0 = Instant::now();
+                let x_global = assemble_averaged(&mp, &states);
+                let loss = ds.loss(&x_global);
+                let wall = t0.elapsed().as_secs_f64();
+                let share = wall / mesh.p() as f64;
+                for r in 0..mesh.p() {
+                    engine.book.charge(Phase::Metrics, r, share);
+                }
+                trace.push(TracePoint {
+                    bundles: bundle + 1,
+                    iters: (bundle + 1) * s,
+                    sim_time: engine.sim_wall(),
+                    loss,
+                });
+                if let Some(target) = opts.target_loss {
+                    if loss <= target && time_to_target.is_none() {
+                        time_to_target = Some(engine.sim_wall());
+                        break;
+                    }
+                }
+            }
+        }
+
+        let x = assemble_averaged(&mp, &states);
+        SolverRun {
+            name: format!("hybrid {} s={} b={} tau={} {}", mesh, s, b, cfg.tau, policy.name()),
+            x,
+            trace,
+            bundles_run,
+            inner_iters: bundles_run * s,
+            sim_wall: engine.sim_wall(),
+            book: engine.book,
+            time_to_target,
+        }
+    }
+}
+
+/// Pack the lower triangle (incl. diagonal) of a row-major `q × q` matrix.
+fn pack_tril(full: &[f64], q: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), q * (q + 1) / 2);
+    let mut k = 0;
+    for i in 0..q {
+        out[k..k + i + 1].copy_from_slice(&full[i * q..i * q + i + 1]);
+        k += i + 1;
+    }
+}
+
+/// Unpack a packed lower triangle into a row-major `q × q` matrix (upper
+/// triangle zeroed).
+fn unpack_tril(packed: &[f64], q: usize, out: &mut [f64]) {
+    debug_assert_eq!(packed.len(), q * (q + 1) / 2);
+    out.fill(0.0);
+    let mut k = 0;
+    for i in 0..q {
+        out[i * q..i * q + i + 1].copy_from_slice(&packed[k..k + i + 1]);
+        k += i + 1;
+    }
+}
+
+/// Average the weight slices across row teams and gather the global vector.
+fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
+    let mesh = mp.mesh;
+    let parts: Vec<Vec<f64>> = (0..mesh.p_c)
+        .map(|c| {
+            let n_local = mp.cols.n_local[c];
+            let mut avg = vec![0.0f64; n_local];
+            for r in 0..mesh.p_r {
+                let st = &states[mesh.rank_at(r, c)];
+                for (a, v) in avg.iter_mut().zip(&st.x) {
+                    *a += v;
+                }
+            }
+            let inv = 1.0 / mesh.p_r as f64;
+            for a in avg.iter_mut() {
+                *a *= inv;
+            }
+            avg
+        })
+        .collect();
+    mp.gather_weights(&parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::data::synth;
+    use crate::mesh::Mesh;
+    use crate::solvers::reference;
+    use crate::util::Prng;
+
+    fn toy(seed: u64, m: usize, n: usize, z: usize) -> Dataset {
+        let mut rng = Prng::new(seed);
+        synth::sparse_skewed("hyb-toy", m, n, z, 0.6, &mut rng)
+    }
+
+    fn opts(max_bundles: usize) -> RunOpts {
+        RunOpts { max_bundles, eval_every: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn tril_pack_roundtrip() {
+        let q = 5;
+        let full: Vec<f64> = (0..q * q).map(|i| i as f64).collect();
+        let mut packed = vec![0.0; q * (q + 1) / 2];
+        pack_tril(&full, q, &mut packed);
+        let mut back = vec![0.0; q * q];
+        unpack_tril(&packed, q, &mut back);
+        for i in 0..q {
+            for j in 0..q {
+                let want = if j <= i { full[i * q + j] } else { 0.0 };
+                assert_eq!(back[i * q + j], want);
+            }
+        }
+    }
+
+    /// Single-rank HybridSGD with s = 1 must match the sequential
+    /// mini-batch reference trajectory exactly (same cyclic sampling).
+    #[test]
+    fn single_rank_s1_matches_minibatch_reference() {
+        let ds = toy(1, 120, 30, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(1, 1), 1, 8, 1);
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Rows, &opts(25));
+        let (x_ref, _) = reference::minibatch_sgd(&ds, &be, 8, 0.01, 25, 0);
+        for (a, b) in run.x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    /// s-step SGD is an algebraic reformulation of SGD (paper §5.1): the
+    /// single-rank s = 4 bundle trajectory must match 4·bundles sequential
+    /// steps up to floating-point error.
+    #[test]
+    fn single_rank_sstep_matches_sequential_sgd() {
+        let ds = toy(2, 96, 24, 4);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(1, 1), 4, 4, 10);
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Rows, &opts(6));
+        let (x_ref, _) = reference::minibatch_sgd(&ds, &be, 4, 0.01, 24, 0);
+        for (a, b) in run.x.iter().zip(&x_ref) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    /// Column splitting must not change the math: 1 × p s-step equals the
+    /// single-rank run up to fp reduction order, for every partitioner.
+    #[test]
+    fn column_split_preserves_trajectory() {
+        let ds = toy(3, 64, 40, 6);
+        let be = NativeBackend;
+        let single = HybridSolver::new(&be).run(
+            &ds,
+            HybridConfig::new(Mesh::new(1, 1), 2, 4, 10),
+            Partitioner::Rows,
+            &opts(8),
+        );
+        for policy in Partitioner::all() {
+            let split = HybridSolver::new(&be).run(
+                &ds,
+                HybridConfig::new(Mesh::new(1, 4), 2, 4, 10),
+                policy,
+                &opts(8),
+            );
+            for (a, b) in split.x.iter().zip(&single.x) {
+                assert!((a - b).abs() < 1e-9, "{policy:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// FedAvg corner with τ = 1 from a shared start equals one global
+    /// mini-batch step of batch p·b scaled — sanity: loss decreases and
+    /// teams stay synchronized.
+    #[test]
+    fn fedavg_corner_converges() {
+        let ds = toy(4, 256, 32, 6);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::row_1d(4), 1, 8, 5);
+        let mut o = opts(100);
+        o.eval_every = 10;
+        o.eta = 0.5;
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Rows, &o);
+        let l0 = ds.loss(&vec![0.0; ds.n()]);
+        assert!(run.final_loss() < 0.8 * l0, "loss {l0} -> {}", run.final_loss());
+        // No row team partner ⇒ no s-step comm charged.
+        assert_eq!(run.book.mean_charged(Phase::SstepComm), 0.0);
+        assert!(run.book.mean_charged(Phase::FedAvgComm) > 0.0);
+    }
+
+    #[test]
+    fn sstep_corner_has_no_fedavg_comm() {
+        let ds = toy(5, 64, 32, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::sstep_corner(4, 2, 4);
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts(4));
+        assert_eq!(run.book.mean_charged(Phase::FedAvgComm), 0.0);
+        assert!(run.book.mean_charged(Phase::SstepComm) > 0.0);
+    }
+
+    /// Full 2D mesh converges and both communication phases are exercised.
+    #[test]
+    fn full_2d_mesh_converges() {
+        let ds = toy(6, 240, 48, 6);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 8, 4);
+        let mut o = opts(40);
+        o.eval_every = 5;
+        o.eta = 0.5;
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o);
+        let l0 = ds.loss(&vec![0.0; ds.n()]);
+        assert!(run.final_loss() < 0.85 * l0, "loss {l0} -> {}", run.final_loss());
+        assert!(run.book.mean_charged(Phase::SstepComm) > 0.0);
+        assert!(run.book.mean_charged(Phase::FedAvgComm) > 0.0);
+        assert_eq!(run.inner_iters, 80);
+    }
+
+    /// Early stop on target loss records a time-to-target.
+    #[test]
+    fn target_loss_stops_early() {
+        let ds = toy(7, 200, 24, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(1, 2), 2, 8, 4);
+        let mut o = opts(500);
+        o.eval_every = 2;
+        o.eta = 0.1;
+        o.target_loss = Some(0.6);
+        let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o);
+        assert!(run.time_to_target.is_some());
+        assert!(run.bundles_run < 500, "should stop early, ran {}", run.bundles_run);
+    }
+
+    /// Determinism: identical runs give identical trajectories and charges.
+    #[test]
+    fn runs_are_deterministic() {
+        let ds = toy(8, 100, 30, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let a = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts(10));
+        let b = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts(10));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.sim_wall, b.sim_wall);
+    }
+
+    /// Lane parallelism must not change the trajectory (engine guarantee,
+    /// verified end-to-end through the solver).
+    #[test]
+    fn lanes_do_not_change_solution() {
+        let ds = toy(9, 128, 32, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let mut o1 = opts(8);
+        o1.lanes = 1;
+        let mut o4 = opts(8);
+        o4.lanes = 4;
+        let a = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o1);
+        let b = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o4);
+        assert_eq!(a.x, b.x);
+    }
+}

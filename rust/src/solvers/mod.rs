@@ -1,0 +1,116 @@
+//! The parallel SGD solver family of the paper (§4, Algorithms 1–3).
+//!
+//! Everything is one engine: [`hybrid::HybridSolver`] implements the full
+//! 2D HybridSGD algorithm — row teams run s-step bundles, column teams
+//! average every τ bundles — and the 1D baselines are its mesh corners
+//! (paper §6.2 "Baselines as limits"):
+//!
+//! | Solver          | mesh        | s   | τ     |
+//! |-----------------|-------------|-----|-------|
+//! | MB-SGD          | `p × 1`     | 1   | 1     |
+//! | FedAvg          | `p × 1`     | 1   | τ     |
+//! | 1D s-step SGD   | `1 × p`     | s   | large |
+//! | 2D SGD          | `p_r × p_c` | 1   | 1     |
+//! | HybridSGD       | `p_r × p_c` | s   | τ     |
+//!
+//! [`reference`] holds the sequential Algorithm-1 implementation used as
+//! the convergence/correctness oracle (s-step SGD must match it up to
+//! floating-point error — a tested property).
+
+pub mod common;
+pub mod hybrid;
+pub mod reference;
+
+pub use common::{RunOpts, SolverRun, TracePoint};
+pub use hybrid::HybridSolver;
+
+use crate::costmodel::HybridConfig;
+use crate::mesh::Mesh;
+
+/// Named solver constructors for the CLI and experiment drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Synchronous mini-batch SGD (1D-row, Allreduce every step).
+    MbSgd,
+    /// Federated SGD with Averaging (Algorithm 2).
+    FedAvg,
+    /// Communication-avoiding s-step SGD (Algorithm 3, 1D-column).
+    SstepSgd,
+    /// 2D SGD (s = 1, τ = 1 on a 2D mesh).
+    Sgd2d,
+    /// Full HybridSGD.
+    Hybrid,
+}
+
+impl SolverKind {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::MbSgd => "mb-sgd",
+            SolverKind::FedAvg => "fedavg",
+            SolverKind::SstepSgd => "sstep-sgd",
+            SolverKind::Sgd2d => "2d-sgd",
+            SolverKind::Hybrid => "hybrid",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<SolverKind> {
+        match s {
+            "mb-sgd" | "mbsgd" => Some(SolverKind::MbSgd),
+            "fedavg" => Some(SolverKind::FedAvg),
+            "sstep-sgd" | "sstep" => Some(SolverKind::SstepSgd),
+            "2d-sgd" | "sgd2d" => Some(SolverKind::Sgd2d),
+            "hybrid" => Some(SolverKind::Hybrid),
+            _ => None,
+        }
+    }
+
+    /// The HybridConfig realizing this solver at total ranks `p`
+    /// (mesh/s/τ per the corner table above; `mesh` is only consulted for
+    /// `Sgd2d`/`Hybrid`).
+    pub fn config(&self, p: usize, mesh: Option<Mesh>, s: usize, b: usize, tau: usize) -> HybridConfig {
+        match self {
+            SolverKind::MbSgd => HybridConfig::new(Mesh::row_1d(p), 1, b, 1),
+            SolverKind::FedAvg => HybridConfig::new(Mesh::row_1d(p), 1, b, tau),
+            SolverKind::SstepSgd => HybridConfig::sstep_corner(p, s, b),
+            SolverKind::Sgd2d => {
+                let m = mesh.unwrap_or_else(|| Mesh::new(1, p));
+                HybridConfig::new(m, 1, b, 1)
+            }
+            SolverKind::Hybrid => {
+                let m = mesh.unwrap_or_else(|| Mesh::new(1, p));
+                HybridConfig::new(m, s, b, tau.max(s))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corner_configs_match_table() {
+        let fed = SolverKind::FedAvg.config(8, None, 4, 32, 10);
+        assert_eq!((fed.mesh.p_r, fed.mesh.p_c, fed.s, fed.tau), (8, 1, 1, 10));
+        let sstep = SolverKind::SstepSgd.config(8, None, 4, 32, 10);
+        assert_eq!((sstep.mesh.p_r, sstep.mesh.p_c, sstep.s), (1, 8, 4));
+        assert!(sstep.tau >= 10_000);
+        let mb = SolverKind::MbSgd.config(8, None, 4, 32, 10);
+        assert_eq!((mb.s, mb.tau), (1, 1));
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for k in [
+            SolverKind::MbSgd,
+            SolverKind::FedAvg,
+            SolverKind::SstepSgd,
+            SolverKind::Sgd2d,
+            SolverKind::Hybrid,
+        ] {
+            assert_eq!(SolverKind::from_name(k.name()), Some(k));
+        }
+    }
+}

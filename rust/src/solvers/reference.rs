@@ -1,0 +1,137 @@
+//! Sequential reference solvers (Algorithm 1) — the correctness oracles.
+//!
+//! These run on the full dataset on one rank with no communication, using
+//! the same deterministic cyclic sampling as the parallel solvers, so the
+//! parallel implementations can be tested against them *trajectory-wise*
+//! (s-step SGD is an algebraic reformulation of SGD and must match up to
+//! floating-point error — paper §5.1).
+
+use crate::compute::ComputeBackend;
+use crate::data::Dataset;
+use crate::sparse::Csr;
+
+/// Plain mini-batch SGD (Algorithm 1) with cyclic sampling. Returns the
+/// weight trajectory sampled every `trace_every` iterations (including the
+/// final point).
+pub fn minibatch_sgd(
+    ds: &Dataset,
+    backend: &dyn ComputeBackend,
+    b: usize,
+    eta: f64,
+    iters: usize,
+    trace_every: usize,
+) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let a = ds.label_scaled();
+    let mut x = vec![0.0f64; ds.n()];
+    let mut trace = Vec::new();
+    let mut cursor = 0usize;
+    let m = ds.m();
+    let mut batch = Vec::with_capacity(b);
+    let mut v = vec![0.0f64; b];
+    let mut u = vec![0.0f64; b];
+    for k in 0..iters {
+        batch.clear();
+        for j in 0..b {
+            batch.push((cursor + j) % m);
+        }
+        cursor = (cursor + b) % m;
+        step(&a, &batch, backend, eta, &mut x, &mut v, &mut u);
+        if trace_every > 0 && (k + 1) % trace_every == 0 {
+            trace.push(x.clone());
+        }
+    }
+    (x, trace)
+}
+
+fn step(
+    a: &Csr,
+    batch: &[usize],
+    backend: &dyn ComputeBackend,
+    eta: f64,
+    x: &mut [f64],
+    v: &mut [f64],
+    u: &mut [f64],
+) {
+    let b = batch.len();
+    a.spmv_rows(batch, x, v);
+    backend.sigmoid_residual(v, u);
+    for uv in u.iter_mut() {
+        *uv *= eta / b as f64;
+    }
+    a.t_spmv_rows_acc(batch, u, x);
+}
+
+/// Full-batch gradient descent (Eq. 2–3) — used by tests that need a
+/// monotone reference and by the loss-surface sanity checks.
+pub fn gradient_descent(
+    ds: &Dataset,
+    backend: &dyn ComputeBackend,
+    eta: f64,
+    iters: usize,
+) -> Vec<f64> {
+    let a = ds.label_scaled();
+    let m = ds.m();
+    let mut x = vec![0.0f64; ds.n()];
+    let all: Vec<usize> = (0..m).collect();
+    let mut v = vec![0.0f64; m];
+    let mut u = vec![0.0f64; m];
+    for _ in 0..iters {
+        a.spmv_rows(&all, &x, &mut v);
+        backend.sigmoid_residual(&v, &mut u);
+        for uv in u.iter_mut() {
+            *uv *= eta / m as f64;
+        }
+        a.t_spmv_rows_acc(&all, &u, &mut x);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::data::synth;
+    use crate::util::Prng;
+
+    fn toy(seed: u64) -> Dataset {
+        let mut rng = Prng::new(seed);
+        synth::sparse_uniform("ref-toy", 200, 40, 8, &mut rng)
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let ds = toy(1);
+        let l0 = ds.loss(&vec![0.0; ds.n()]);
+        let (x, _) = minibatch_sgd(&ds, &NativeBackend, 8, 0.5, 400, 0);
+        let l1 = ds.loss(&x);
+        assert!(l1 < 0.7 * l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn gd_is_monotone_at_small_eta() {
+        let ds = toy(2);
+        let be = NativeBackend;
+        let mut prev = ds.loss(&vec![0.0; ds.n()]);
+        for iters in [5, 10, 20, 40] {
+            let x = gradient_descent(&ds, &be, 0.5, iters);
+            let l = ds.loss(&x);
+            assert!(l <= prev + 1e-9, "GD not monotone: {prev} -> {l} at {iters}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn trajectory_trace_has_expected_cadence() {
+        let ds = toy(3);
+        let (_, trace) = minibatch_sgd(&ds, &NativeBackend, 4, 0.1, 20, 5);
+        assert_eq!(trace.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let ds = toy(4);
+        let (x1, _) = minibatch_sgd(&ds, &NativeBackend, 8, 0.2, 50, 0);
+        let (x2, _) = minibatch_sgd(&ds, &NativeBackend, 8, 0.2, 50, 0);
+        assert_eq!(x1, x2);
+    }
+}

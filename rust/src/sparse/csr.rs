@@ -1,0 +1,454 @@
+//! Compressed Sparse Row matrices over `f64`.
+//!
+//! Matches the paper's storage choice (§7: "A is stored in three-array CSR
+//! format"). The solvers only ever touch sparse data through this type, so
+//! the per-call costs the cost model reasons about (§6.5: inspector
+//! overheads, transpose-SpMV scatter) correspond to real code here.
+
+use crate::util::Prng;
+
+/// Three-array CSR sparse matrix, rows × cols, f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, length nnz; strictly increasing within each row.
+    indices: Vec<u32>,
+    /// Nonzero values, parallel to `indices`.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from triplets `(row, col, value)`. Duplicates are summed;
+    /// explicit zeros are kept (they count as stored nonzeros, as in MKL).
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        for &(r, c, _) in triplets {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of {rows}x{cols}");
+        }
+        let mut order: Vec<usize> = (0..triplets.len()).collect();
+        order.sort_unstable_by_key(|&i| (triplets[i].0, triplets[i].1));
+
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triplets.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &i in &order {
+            let (r, c, v) = triplets[i];
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r + 1] += 1;
+                indices.push(c as u32);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Build directly from validated CSR arrays.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(indices.len(), values.len(), "indices/values length");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "indptr tail");
+        for r in 0..rows {
+            assert!(indptr[r] <= indptr[r + 1], "indptr monotonicity at row {r}");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "unsorted/duplicate column in row {r}");
+            }
+            if let Some(&last) = row.last() {
+                assert!((last as usize) < cols, "column out of range in row {r}");
+            }
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// An `rows × cols` matrix with no nonzeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Csr { rows, cols, indptr: vec![0; rows + 1], indices: vec![], values: vec![] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Mean nonzeros per row (the paper's `z̄`).
+    pub fn mean_row_nnz(&self) -> f64 {
+        if self.rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.rows as f64
+        }
+    }
+
+    /// Raw row pointer.
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+    /// Raw column indices.
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+    /// Raw values.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// (column indices, values) of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
+    /// Number of stored entries in row `r`.
+    pub fn row_nnz(&self, r: usize) -> usize {
+        self.indptr[r + 1] - self.indptr[r]
+    }
+
+    /// Scale each row `i` by `scale[i]` in place. Used once at load time to
+    /// fold the labels in: the paper precomputes `diag(y)·A`.
+    pub fn scale_rows(&mut self, scale: &[f64]) {
+        assert_eq!(scale.len(), self.rows, "scale length");
+        for r in 0..self.rows {
+            let s = scale[r];
+            for v in &mut self.values[self.indptr[r]..self.indptr[r + 1]] {
+                *v *= s;
+            }
+        }
+    }
+
+    /// `out = A·x` (dense x of length `cols`, dense out of length `rows`).
+    pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "spmv x length");
+        assert_eq!(out.len(), self.rows, "spmv out length");
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// SpMV restricted to a set of rows: `out[j] = A[rows[j], :] · x`.
+    /// This is the sub-sampled `S_k · diag(y) · A · x` product of
+    /// Algorithm 1 line 4 — the forward hot path.
+    pub fn spmv_rows(&self, row_ids: &[usize], x: &[f64], out: &mut [f64]) {
+        assert_eq!(row_ids.len(), out.len(), "spmv_rows out length");
+        assert_eq!(x.len(), self.cols, "spmv_rows x length");
+        for (j, &r) in row_ids.iter().enumerate() {
+            let mut acc = 0.0;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            out[j] = acc;
+        }
+    }
+
+    /// Transposed sub-sampled SpMV with scatter-accumulate:
+    /// `out += Σ_j coeff[j] · A[rows[j], :]`. This forms the gradient
+    /// (Algorithm 1 line 5) and the s-step weight update (Algorithm 3
+    /// line 14) without materializing `Aᵀ`.
+    pub fn t_spmv_rows_acc(&self, row_ids: &[usize], coeff: &[f64], out: &mut [f64]) {
+        assert_eq!(row_ids.len(), coeff.len(), "t_spmv coeff length");
+        assert_eq!(out.len(), self.cols, "t_spmv out length");
+        for (j, &r) in row_ids.iter().enumerate() {
+            let c = coeff[j];
+            if c == 0.0 {
+                continue;
+            }
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                out[self.indices[k] as usize] += c * self.values[k];
+            }
+        }
+    }
+
+    /// Extract the sub-matrix of the given rows (in the given order) as a new
+    /// CSR. Used to build per-rank local blocks after 2D partitioning.
+    pub fn gather_rows(&self, row_ids: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(row_ids.len() + 1);
+        indptr.push(0usize);
+        let nnz: usize = row_ids.iter().map(|&r| self.row_nnz(r)).sum();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        for &r in row_ids {
+            let (ci, cv) = self.row(r);
+            indices.extend_from_slice(ci);
+            values.extend_from_slice(cv);
+            indptr.push(indices.len());
+        }
+        Csr { rows: row_ids.len(), cols: self.cols, indptr, indices, values }
+    }
+
+    /// Keep only the columns selected by `col_map` (old → Some(new)),
+    /// producing a matrix with `new_cols` columns. Column order within a row
+    /// follows the new indices (caller guarantees `col_map` is monotone-
+    /// compatible or accepts re-sorting; we always re-sort for safety).
+    pub fn select_columns(&self, col_map: &[Option<u32>], new_cols: usize) -> Csr {
+        assert_eq!(col_map.len(), self.cols, "col_map length");
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        indptr.push(0usize);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut values: Vec<f64> = Vec::new();
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..self.rows {
+            scratch.clear();
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                if let Some(nc) = col_map[self.indices[k] as usize] {
+                    debug_assert!((nc as usize) < new_cols);
+                    scratch.push((nc, self.values[k]));
+                }
+            }
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in &scratch {
+                indices.push(c);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { rows: self.rows, cols: new_cols, indptr, indices, values }
+    }
+
+    /// Densify the given rows into a row-major `row_ids.len() × cols` buffer
+    /// (used to feed the dense XLA kernels; `out` must be zeroed or will be
+    /// overwritten fully).
+    pub fn densify_rows(&self, row_ids: &[usize], out: &mut [f64]) {
+        assert_eq!(out.len(), row_ids.len() * self.cols, "densify out length");
+        out.fill(0.0);
+        for (j, &r) in row_ids.iter().enumerate() {
+            let base = j * self.cols;
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                out[base + self.indices[k] as usize] = self.values[k];
+            }
+        }
+    }
+
+    /// Full dense copy (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                out[r * self.cols + self.indices[k] as usize] = self.values[k];
+            }
+        }
+        out
+    }
+
+    /// Explicit transpose as CSR (used by tests as an oracle for
+    /// `t_spmv_rows_acc`; not on any hot path).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for c in 0..self.cols {
+            counts[c + 1] += counts[c];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k] as usize;
+                let dst = cursor[c];
+                cursor[c] += 1;
+                indices[dst] = r as u32;
+                values[dst] = self.values[k];
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// A random sparse matrix for tests: each row draws `row_nnz` distinct
+    /// columns uniformly, values standard normal.
+    pub fn random(rows: usize, cols: usize, row_nnz: usize, rng: &mut Prng) -> Csr {
+        let mut triplets = Vec::with_capacity(rows * row_nnz);
+        for r in 0..rows {
+            for c in rng.sample_distinct(cols, row_nnz.min(cols)) {
+                triplets.push((r, c, rng.next_gaussian()));
+            }
+        }
+        Csr::from_triplets(rows, cols, &triplets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+
+    fn small() -> Csr {
+        // [1 0 2]
+        // [0 3 0]
+        Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn triplets_roundtrip_dense() {
+        let a = small();
+        assert_eq!(a.to_dense(), vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let a = Csr::from_triplets(1, 2, &[(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.to_dense(), vec![0.0, 3.5]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut out = [0.0; 2];
+        a.spmv(&x, &mut out);
+        assert_eq!(out, [7.0, 6.0]);
+    }
+
+    #[test]
+    fn spmv_rows_subsample() {
+        let a = small();
+        let x = [1.0, 2.0, 3.0];
+        let mut out = [0.0; 3];
+        a.spmv_rows(&[1, 0, 1], &x, &mut out);
+        assert_eq!(out, [6.0, 7.0, 6.0]);
+    }
+
+    #[test]
+    fn t_spmv_accumulates() {
+        let a = small();
+        let mut out = vec![10.0, 0.0, 0.0];
+        a.t_spmv_rows_acc(&[0, 1], &[2.0, -1.0], &mut out);
+        // 10 + 2*1 = 12 ; -1*3 = -3 ; 2*2 = 4
+        assert_eq!(out, vec![12.0, -3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_rows_order_preserved() {
+        let a = small();
+        let g = a.gather_rows(&[1, 0]);
+        assert_eq!(g.to_dense(), vec![0.0, 3.0, 0.0, 1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn select_columns_drops_and_renames() {
+        let a = small();
+        // Keep columns {2, 0} -> new ids {0 -> 1, 2 -> 0}? map: old0->1, old1->None, old2->0
+        let map = vec![Some(1u32), None, Some(0u32)];
+        let s = a.select_columns(&map, 2);
+        assert_eq!(s.to_dense(), vec![2.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn densify_rows_matches_dense() {
+        let a = small();
+        let mut out = vec![f64::NAN; 2 * 3];
+        a.densify_rows(&[0, 1], &mut out);
+        assert_eq!(out, a.to_dense());
+    }
+
+    #[test]
+    fn scale_rows_folds_labels() {
+        let mut a = small();
+        a.scale_rows(&[-1.0, 2.0]);
+        assert_eq!(a.to_dense(), vec![-1.0, 0.0, -2.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_is_involution_and_oracle() {
+        let mut rng = Prng::new(17);
+        let a = Csr::random(20, 15, 4, &mut rng);
+        let t = a.transpose();
+        assert_eq!(t.rows(), 15);
+        assert_eq!(t.transpose().to_dense(), a.to_dense());
+    }
+
+    #[test]
+    fn prop_tspmv_matches_transpose_oracle() {
+        check(
+            Config { cases: 32, seed: 0xA11CE },
+            "t_spmv == transpose.spmv",
+            |rng| {
+                let rows = 1 + rng.next_below(30);
+                let cols = 1 + rng.next_below(40);
+                let nnz = 1 + rng.next_below(6);
+                let a = Csr::random(rows, cols, nnz, rng);
+                let b = 1 + rng.next_below(rows);
+                let row_ids: Vec<usize> = (0..b).map(|_| rng.next_below(rows)).collect();
+                let coeff: Vec<f64> = (0..b).map(|_| rng.next_gaussian()).collect();
+                (a, row_ids, coeff)
+            },
+            |(a, row_ids, coeff)| {
+                let mut got = vec![0.0; a.cols()];
+                a.t_spmv_rows_acc(row_ids, coeff, &mut got);
+                // Oracle: dense scatter of coeff into an m-vector, then Aᵀ·u.
+                let mut u = vec![0.0; a.rows()];
+                for (j, &r) in row_ids.iter().enumerate() {
+                    u[r] += coeff[j];
+                }
+                let t = a.transpose();
+                let mut want = vec![0.0; a.cols()];
+                t.spmv(&u, &mut want);
+                got.iter().zip(&want).all(|(g, w)| (g - w).abs() <= 1e-9 * (1.0 + w.abs()))
+            },
+        );
+    }
+
+    #[test]
+    fn prop_spmv_rows_matches_gather() {
+        check(
+            Config { cases: 32, seed: 0xB0B },
+            "spmv_rows == gather_rows.spmv",
+            |rng| {
+                let rows = 1 + rng.next_below(25);
+                let cols = 1 + rng.next_below(25);
+                let a = Csr::random(rows, cols, 1 + rng.next_below(5), rng);
+                let ids: Vec<usize> =
+                    (0..1 + rng.next_below(12)).map(|_| rng.next_below(rows)).collect();
+                let x: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+                (a, ids, x)
+            },
+            |(a, ids, x)| {
+                let mut got = vec![0.0; ids.len()];
+                a.spmv_rows(ids, x, &mut got);
+                let g = a.gather_rows(ids);
+                let mut want = vec![0.0; ids.len()];
+                g.spmv(x, &mut want);
+                got.iter().zip(&want).all(|(a, b)| (a - b).abs() < 1e-12)
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn triplet_bounds_checked() {
+        let _ = Csr::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsorted")]
+    fn from_parts_rejects_unsorted() {
+        let _ = Csr::from_parts(1, 3, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+}

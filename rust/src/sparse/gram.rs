@@ -1,0 +1,177 @@
+//! Sparse Gram computation — the role `mkl_sparse_syrkd` plays in the
+//! paper's s-step bundle (Algorithm 3 line 6: `G = tril(Y·Yᵀ)`).
+//!
+//! `Y` is the `sb × n_local` stack of sampled, label-scaled rows; `G` is the
+//! small dense lower-triangular Gram whose blocks correct the deferred
+//! updates. Two implementations are provided:
+//!
+//! * [`gram_lower`] — row-pair sparse dot products (cache-friendly when rows
+//!   are short; `O((sb)² · z̄_row)` worst case but with early-exit merges).
+//! * [`gram_lower_scatter`] — scatter/gather over a dense accumulator of
+//!   length `n_local` (faster for larger `z̄`; this mirrors the
+//!   inspector-executor structure whose per-call `O(n_local)` floor the
+//!   paper measures in §6.5).
+
+use super::csr::Csr;
+
+/// Dense lower-triangular Gram `G[i*q + j] = rowᵢ · rowⱼ` for `j ≤ i`,
+/// where row k of `Y` is `A[row_ids[k], :]`; `q = row_ids.len()`.
+/// Upper triangle is left as zero (the s-step correction only reads
+/// `TRIL`, matching Algorithm 3).
+pub fn gram_lower(a: &Csr, row_ids: &[usize], out: &mut [f64]) {
+    let q = row_ids.len();
+    assert_eq!(out.len(), q * q, "gram out size");
+    out.fill(0.0);
+    for i in 0..q {
+        let (ci, vi) = a.row(row_ids[i]);
+        for j in 0..=i {
+            let (cj, vj) = a.row(row_ids[j]);
+            out[i * q + j] = sparse_dot(ci, vi, cj, vj);
+        }
+    }
+}
+
+/// Merge-based sparse dot product of two sorted index/value rows.
+#[inline]
+pub fn sparse_dot(ci: &[u32], vi: &[f64], cj: &[u32], vj: &[f64]) -> f64 {
+    let (mut x, mut y) = (0usize, 0usize);
+    let mut acc = 0.0;
+    while x < ci.len() && y < cj.len() {
+        match ci[x].cmp(&cj[y]) {
+            std::cmp::Ordering::Less => x += 1,
+            std::cmp::Ordering::Greater => y += 1,
+            std::cmp::Ordering::Equal => {
+                acc += vi[x] * vj[y];
+                x += 1;
+                y += 1;
+            }
+        }
+    }
+    acc
+}
+
+/// Scatter-based Gram: densifies one row at a time into a scratch vector of
+/// length `a.cols()` and gathers dot products against the remaining rows.
+/// `scratch` must have length `a.cols()`; it is cleaned (not re-zeroed in
+/// full) after each row, so repeated calls stay `O(nnz)` amortized — this is
+/// the optimization `mkl_sparse_syrkd`'s executor performs, and its
+/// `O(n_local)` first-touch cost is what the paper's §6.5 refinement models.
+pub fn gram_lower_scatter(a: &Csr, row_ids: &[usize], scratch: &mut [f64], out: &mut [f64]) {
+    let q = row_ids.len();
+    assert_eq!(out.len(), q * q, "gram out size");
+    assert_eq!(scratch.len(), a.cols(), "scratch size");
+    out.fill(0.0);
+    for i in 0..q {
+        let (ci, vi) = a.row(row_ids[i]);
+        // Scatter row i.
+        for (k, &c) in ci.iter().enumerate() {
+            scratch[c as usize] = vi[k];
+        }
+        // Diagonal.
+        out[i * q + i] = vi.iter().map(|v| v * v).sum();
+        // Gather against rows j < i.
+        for j in 0..i {
+            let (cj, vj) = a.row(row_ids[j]);
+            let mut acc = 0.0;
+            for (k, &c) in cj.iter().enumerate() {
+                acc += vj[k] * scratch[c as usize];
+            }
+            out[i * q + j] = acc;
+        }
+        // Clean scratch (only the touched entries).
+        for &c in ci {
+            scratch[c as usize] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Prng;
+
+    fn dense_gram_lower(a: &Csr, row_ids: &[usize]) -> Vec<f64> {
+        let q = row_ids.len();
+        let n = a.cols();
+        let d = a.to_dense();
+        let mut out = vec![0.0; q * q];
+        for i in 0..q {
+            for j in 0..=i {
+                let (ri, rj) = (row_ids[i], row_ids[j]);
+                out[i * q + j] = (0..n).map(|c| d[ri * n + c] * d[rj * n + c]).sum();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gram_small_exact() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 2, 3.0), (2, 1, -1.0), (2, 3, 4.0)],
+        );
+        let ids = [0, 1, 2];
+        let mut g = vec![0.0; 9];
+        gram_lower(&a, &ids, &mut g);
+        assert_eq!(g, dense_gram_lower(&a, &ids));
+        // Known entries: G[1][0] = rows 0·1 = 2*3 = 6 ; G[2][*] = 0 overlap.
+        assert_eq!(g[3], 6.0);
+        assert_eq!(g[6], 0.0);
+        assert_eq!(g[7], 0.0);
+        // Upper triangle untouched (zero).
+        assert_eq!(g[1], 0.0);
+        assert_eq!(g[2], 0.0);
+    }
+
+    #[test]
+    fn prop_merge_and_scatter_agree_with_dense() {
+        check(
+            Config { cases: 40, seed: 0x6A5 },
+            "gram merge == scatter == dense",
+            |rng| {
+                let rows = 2 + rng.next_below(20);
+                let cols = 1 + rng.next_below(30);
+                let a = Csr::random(rows, cols, 1 + rng.next_below(6), rng);
+                let q = 1 + rng.next_below(8.min(rows));
+                let ids: Vec<usize> = (0..q).map(|_| rng.next_below(rows)).collect();
+                (a, ids)
+            },
+            |(a, ids)| {
+                let q = ids.len();
+                let want = dense_gram_lower(a, ids);
+                let mut merge = vec![0.0; q * q];
+                gram_lower(a, ids, &mut merge);
+                let mut scratch = vec![0.0; a.cols()];
+                let mut scat = vec![0.0; q * q];
+                gram_lower_scatter(a, ids, &mut scratch, &mut scat);
+                let close = |x: &[f64], y: &[f64]| {
+                    x.iter().zip(y).all(|(a, b)| (a - b).abs() <= 1e-9 * (1.0 + b.abs()))
+                };
+                close(&merge, &want) && close(&scat, &want)
+            },
+        );
+    }
+
+    #[test]
+    fn scatter_scratch_stays_clean() {
+        let mut rng = Prng::new(23);
+        let a = Csr::random(10, 20, 4, &mut rng);
+        let mut scratch = vec![0.0; 20];
+        let mut g = vec![0.0; 16];
+        gram_lower_scatter(&a, &[0, 3, 5, 7], &mut scratch, &mut g);
+        assert!(scratch.iter().all(|&v| v == 0.0), "scratch leaked: {scratch:?}");
+    }
+
+    #[test]
+    fn repeated_rows_give_symmetric_diagonal_blocks() {
+        let mut rng = Prng::new(29);
+        let a = Csr::random(6, 12, 3, &mut rng);
+        let mut g = vec![0.0; 4];
+        gram_lower(&a, &[2, 2], &mut g);
+        // G = [‖r2‖² 0; ‖r2‖² ‖r2‖²]
+        assert!((g[0] - g[3]).abs() < 1e-12);
+        assert!((g[2] - g[0]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse-matrix substrate (the role Intel MKL sparse BLAS plays in the
+//! paper's C++ implementation).
+//!
+//! Everything the solvers need is here: CSR storage, SpMV, the transposed
+//! SpMV scatter that forms the gradient, batched row gather (sparse and
+//! densified), the sparse Gram (`syrk`) used by the s-step bundle, and the
+//! nonzero-distribution statistics (`κ`, degree histograms) that drive the
+//! partitioning study.
+
+pub mod csr;
+pub mod gram;
+pub mod stats;
+
+pub use csr::Csr;
+pub use stats::{col_degrees, row_degrees, NnzStats};

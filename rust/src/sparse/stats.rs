@@ -1,0 +1,128 @@
+//! Nonzero-distribution statistics.
+//!
+//! Real sparse data (rcv1, news20, url) has heavy-tailed nonzero-per-row and
+//! nonzero-per-column distributions (paper §1); these statistics quantify
+//! the skew and feed both the partitioning study (§7.3) and the
+//! load-imbalance refinement `κ` (§6.5).
+
+use super::csr::Csr;
+use crate::util::Summary;
+
+/// Per-column nonzero counts ("column degrees").
+pub fn col_degrees(a: &Csr) -> Vec<usize> {
+    let mut deg = vec![0usize; a.cols()];
+    for &c in a.indices() {
+        deg[c as usize] += 1;
+    }
+    deg
+}
+
+/// Per-row nonzero counts.
+pub fn row_degrees(a: &Csr) -> Vec<usize> {
+    (0..a.rows()).map(|r| a.row_nnz(r)).collect()
+}
+
+/// Aggregate skew diagnostics for a matrix.
+#[derive(Clone, Debug)]
+pub struct NnzStats {
+    /// Summary over per-row nnz.
+    pub rows: Summary,
+    /// Summary over per-column nnz.
+    pub cols: Summary,
+    /// Fraction of total nnz held by the heaviest 1% of columns — the
+    /// "heavy-tail share" that separates url-like from uniform data.
+    pub top1pct_col_share: f64,
+    /// Gini coefficient of the column-degree distribution (0 = uniform).
+    pub col_gini: f64,
+}
+
+impl NnzStats {
+    /// Compute all diagnostics for `a`.
+    pub fn of(a: &Csr) -> NnzStats {
+        let rdeg = row_degrees(a);
+        let cdeg = col_degrees(a);
+        let rows = Summary::of_counts(&rdeg);
+        let cols = Summary::of_counts(&cdeg);
+
+        let mut sorted = cdeg.clone();
+        sorted.sort_unstable_by(|x, y| y.cmp(x)); // descending
+        let total: usize = sorted.iter().sum();
+        let k = (sorted.len().max(100) / 100).max(1);
+        let top: usize = sorted.iter().take(k).sum();
+        let top1pct_col_share = if total == 0 { 0.0 } else { top as f64 / total as f64 };
+
+        NnzStats { rows, cols, top1pct_col_share, col_gini: gini(&cdeg) }
+    }
+}
+
+/// Gini coefficient of a count distribution (0 uniform, →1 concentrated).
+pub fn gini(counts: &[usize]) -> f64 {
+    if counts.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = counts.iter().map(|&c| c as f64).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let sum: f64 = v.iter().sum();
+    if sum == 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = v.iter().enumerate().map(|(i, &x)| (i as f64 + 1.0) * x).sum();
+    (2.0 * weighted) / (n * sum) - (n + 1.0) / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn degrees_count_correctly() {
+        let a = Csr::from_triplets(3, 3, &[(0, 0, 1.0), (1, 0, 1.0), (2, 0, 1.0), (2, 2, 1.0)]);
+        assert_eq!(col_degrees(&a), vec![3, 0, 1]);
+        assert_eq!(row_degrees(&a), vec![1, 1, 2]);
+    }
+
+    #[test]
+    fn gini_uniform_is_zero() {
+        assert!(gini(&[5, 5, 5, 5]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gini_concentrated_is_high() {
+        let g = gini(&[0, 0, 0, 100]);
+        assert!(g > 0.7, "g={g}");
+    }
+
+    #[test]
+    fn gini_monotone_in_skew() {
+        let lo = gini(&[4, 5, 6, 5]);
+        let hi = gini(&[1, 1, 1, 17]);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn skewed_matrix_detected() {
+        // Column 0 holds half of all nonzeros.
+        let mut t = Vec::new();
+        for r in 0..100 {
+            t.push((r, 0usize, 1.0));
+            t.push((r, 1 + (r % 99), 1.0));
+        }
+        let a = Csr::from_triplets(100, 100, &t);
+        let s = NnzStats::of(&a);
+        assert!(s.cols.imbalance() > 10.0, "imbalance={}", s.cols.imbalance());
+        assert!(s.top1pct_col_share >= 0.5);
+        // Rows are perfectly balanced.
+        assert!((s.rows.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uniform_random_matrix_is_balanced() {
+        let mut rng = Prng::new(31);
+        let a = Csr::random(500, 200, 10, &mut rng);
+        let s = NnzStats::of(&a);
+        assert!(s.cols.imbalance() < 2.5, "imbalance={}", s.cols.imbalance());
+        assert!(s.col_gini < 0.3, "gini={}", s.col_gini);
+    }
+}

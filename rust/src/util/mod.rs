@@ -1,0 +1,16 @@
+//! Small self-contained utilities: PRNG, samplers, summary statistics,
+//! table formatting, and a hand-rolled property-test harness.
+//!
+//! Everything here is written from scratch because the build is fully
+//! offline (no `rand`, `proptest`, or `serde` available); the implementations
+//! are deliberately simple, deterministic, and unit-tested.
+
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod tsv;
+
+pub use prng::{Prng, Zipf};
+pub use stats::Summary;
+pub use table::Table;

@@ -1,0 +1,293 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `Prng` is a splitmix64 generator: tiny state, excellent statistical
+//! quality for simulation workloads, and — critically for this repo —
+//! *reproducible across executors*: the virtual and threaded comm executors
+//! must sample identical mini-batches so that solver trajectories can be
+//! compared bit-for-bit.
+
+/// splitmix64 PRNG (Steele, Lea & Flood; public domain reference constants).
+#[derive(Clone, Debug)]
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    /// Create a generator from a seed. Two generators with the same seed
+    /// produce identical streams.
+    pub fn new(seed: u64) -> Self {
+        Prng { state: seed }
+    }
+
+    /// Derive an independent child stream (used to give each simulated rank
+    /// its own stream while keeping the whole run a function of one seed).
+    pub fn fork(&mut self, tag: u64) -> Prng {
+        // Mix the tag through one splitmix round so forks with adjacent
+        // tags are decorrelated.
+        let mut z = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        Prng::new(z)
+    }
+
+    /// Next 64 uniformly distributed bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`. Uses Lemire's multiply-shift rejection
+    /// to avoid modulo bias.
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0, "next_below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let low = m as u64;
+            if low >= n {
+                return (m >> 64) as usize;
+            }
+            // Rejection zone: only reachable when n does not divide 2^64.
+            let threshold = n.wrapping_neg() % n;
+            if low >= threshold {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the pair's second
+    /// half is discarded for simplicity — generation is not a hot path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k ≪ n assumed; uses
+    /// rejection with a scratch set for small k, Fisher–Yates prefix
+    /// otherwise).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k={k} > n={n}");
+        if k * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.next_below(n);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.next_below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Power-law (bounded Zipf-like) sampler over `[0, n)` with exponent `alpha`:
+/// `P(c) ∝ (c + 1)^(−alpha)`.
+///
+/// This is exactly the column-skew law of the paper's Fig. 3 synthetic sweep
+/// (`α = 0` uniform, `α = 1` Zipf). Sampling is by inverse-CDF binary search
+/// over a precomputed cumulative table — O(log n) per draw, exact.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build the sampler for `n` items with exponent `alpha ≥ 0`.
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf over empty domain");
+        assert!(alpha >= 0.0, "negative skew exponent");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for c in 0..n {
+            acc += ((c + 1) as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        // Guard against fp round-off on the last entry.
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    /// Number of items in the domain.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// True when the domain is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one item.
+    pub fn sample(&self, rng: &mut Prng) -> usize {
+        let u = rng.next_f64();
+        // partition_point returns the first index with cdf[i] >= u.
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+
+    /// Probability mass of item `c`.
+    pub fn pmf(&self, c: usize) -> f64 {
+        if c == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[c] - self.cdf[c - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Prng::new(7);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Prng::new(3);
+        let n = 10;
+        let mut counts = vec![0usize; n];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[rng.next_below(n)] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < expect * 0.1, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut rng = Prng::new(9);
+        for &(n, k) in &[(100usize, 5usize), (10, 10), (1000, 100), (8, 7)] {
+            let s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Prng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            sum += x;
+            sumsq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn zipf_uniform_limit() {
+        // alpha = 0 must be uniform.
+        let z = Zipf::new(16, 0.0);
+        for c in 0..16 {
+            assert!((z.pmf(c) - 1.0 / 16.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zipf_skew_orders_mass() {
+        let z = Zipf::new(100, 1.0);
+        // Monotone decreasing mass.
+        for c in 1..100 {
+            assert!(z.pmf(c) <= z.pmf(c - 1) + 1e-15);
+        }
+        // Head heavier than tail.
+        assert!(z.pmf(0) > 10.0 * z.pmf(99));
+    }
+
+    #[test]
+    fn zipf_samples_match_pmf() {
+        let z = Zipf::new(8, 1.0);
+        let mut rng = Prng::new(5);
+        let mut counts = vec![0usize; 8];
+        let draws = 200_000;
+        for _ in 0..draws {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for c in 0..8 {
+            let got = counts[c] as f64 / draws as f64;
+            assert!((got - z.pmf(c)).abs() < 0.01, "c={c} got={got} want={}", z.pmf(c));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Prng::new(13);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,185 @@
+//! Summary statistics used throughout partition analysis and benchmarking.
+
+/// One-pass summary of a sample: min / max / mean / variance (Welford) plus
+/// the max/mean ratio that the paper calls `κ` when applied to per-rank nnz.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Summary {
+    /// Empty summary.
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    /// Build from a slice.
+    pub fn of(xs: &[f64]) -> Self {
+        let mut s = Summary::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    /// Build from integer counts (per-rank nnz, column degrees, ...).
+    pub fn of_counts(xs: &[usize]) -> Self {
+        let mut s = Summary::new();
+        for &x in xs {
+            s.push(x as f64);
+        }
+        s
+    }
+
+    /// Add one observation (Welford update).
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Sample variance (n−1 denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Relative standard deviation (stddev / mean), the ± percentage the
+    /// paper reports in Table 11.
+    pub fn rel_stddev(&self) -> f64 {
+        if self.mean.abs() < f64::EPSILON {
+            0.0
+        } else {
+            self.stddev() / self.mean.abs()
+        }
+    }
+
+    /// The paper's load-imbalance factor `κ = max / mean` (Section 6.5).
+    /// Returns 1.0 for an empty or all-zero sample (perfect balance by
+    /// convention — no work means no waiting).
+    pub fn imbalance(&self) -> f64 {
+        if self.n == 0 || self.mean.abs() < f64::EPSILON {
+            1.0
+        } else {
+            self.max / self.mean
+        }
+    }
+}
+
+/// Exact median of a sample (copies + sorts; fine for bench-sized samples).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 0 {
+        (v[mid - 1] + v[mid]) / 2.0
+    } else {
+        v[mid]
+    }
+}
+
+/// Linear-interpolated percentile (q in [0,100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+        assert!((s.imbalance() - 4.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_matches_two_pass() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64).collect();
+        let s = Summary::of(&xs);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((s.mean() - mean).abs() < 1e-9);
+        assert!((s.variance() - var).abs() < 1e-6);
+    }
+
+    #[test]
+    fn imbalance_of_balanced_is_one() {
+        let s = Summary::of(&[5.0; 8]);
+        assert!((s.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_of_empty_is_one() {
+        assert_eq!(Summary::new().imbalance(), 1.0);
+        assert_eq!(Summary::of(&[0.0, 0.0]).imbalance(), 1.0);
+    }
+
+    #[test]
+    fn median_and_percentile() {
+        let xs = [3.0, 1.0, 2.0];
+        assert_eq!(median(&xs), 2.0);
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(median(&ys), 2.5);
+        assert_eq!(percentile(&ys, 0.0), 1.0);
+        assert_eq!(percentile(&ys, 100.0), 4.0);
+        assert!((percentile(&ys, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Machine-readable TSV output for experiment results.
+//!
+//! Every bench target appends its rows under `results/` so that paper-vs-
+//! measured comparisons in EXPERIMENTS.md can be regenerated without
+//! re-parsing human-formatted tables.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A TSV writer bound to one results file. Creates parent directories and
+/// writes the header on first use; subsequent `append` calls add rows.
+pub struct TsvWriter {
+    path: PathBuf,
+    header: Vec<String>,
+    started: bool,
+}
+
+impl TsvWriter {
+    /// Create a writer that will (re)create `path` with the given header on
+    /// the first row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Self {
+        TsvWriter {
+            path: path.as_ref().to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            started: false,
+        }
+    }
+
+    /// Append one row; cells are stringified by the caller.
+    pub fn append(&mut self, cells: &[String]) -> std::io::Result<()> {
+        assert_eq!(cells.len(), self.header.len(), "tsv row arity mismatch");
+        if !self.started {
+            if let Some(parent) = self.path.parent() {
+                fs::create_dir_all(parent)?;
+            }
+            let mut f = fs::File::create(&self.path)?;
+            writeln!(f, "{}", self.header.join("\t"))?;
+            self.started = true;
+        }
+        let mut f = fs::OpenOptions::new().append(true).open(&self.path)?;
+        writeln!(f, "{}", cells.join("\t"))?;
+        Ok(())
+    }
+
+    /// Path this writer targets.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Parse a TSV file into (header, rows). Used by tests and by the
+/// EXPERIMENTS.md tooling; tolerant of trailing newlines only.
+pub fn read_tsv<P: AsRef<Path>>(path: P) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header: Vec<String> = match lines.next() {
+        Some(h) => h.split('\t').map(|s| s.to_string()).collect(),
+        None => return Ok((vec![], vec![])),
+    };
+    let rows = lines
+        .filter(|l| !l.is_empty())
+        .map(|l| l.split('\t').map(|s| s.to_string()).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tsv_test_{}", std::process::id()));
+        let path = dir.join("t.tsv");
+        let mut w = TsvWriter::create(&path, &["a", "b"]);
+        w.append(&["1".into(), "x".into()]).unwrap();
+        w.append(&["2".into(), "y".into()]).unwrap();
+        let (h, rows) = read_tsv(&path).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec!["1", "x"], vec!["2", "y"]]);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut w = TsvWriter::create("/tmp/never_written.tsv", &["a", "b"]);
+        let _ = w.append(&["only".into()]);
+    }
+}

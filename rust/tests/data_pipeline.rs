@@ -1,0 +1,101 @@
+//! Data-pipeline integration: registry profiles, LIBSVM round trips, and
+//! partition invariants across the whole suite.
+
+use hybrid_sgd::data::{libsvm, DatasetSpec};
+use hybrid_sgd::partition::{stats, ColPartition, MeshPartition, Partitioner};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::sparse::NnzStats;
+
+/// Every registry profile generates, matches its declared shape, and
+/// carries learnable labels.
+#[test]
+fn registry_profiles_generate_and_learn() {
+    for spec in DatasetSpec::all() {
+        let p = spec.profile();
+        let ds = p.generate_scaled(0.04, 1);
+        assert!(ds.m() >= 64 && ds.n() >= 32, "{}", p.name);
+        let l0 = ds.loss(&vec![0.0; ds.n()]);
+        assert!((l0 - (2.0f64).ln()).abs() < 1e-9, "{}: zero-model loss {l0}", p.name);
+        // A few full-gradient steps must reduce the loss — labels are
+        // planted, not random.
+        let x = hybrid_sgd::solvers::reference::gradient_descent(
+            &ds,
+            &hybrid_sgd::compute::NativeBackend,
+            5.0,
+            120,
+        );
+        assert!(ds.loss(&x) < 0.90 * l0, "{} did not learn", p.name);
+    }
+}
+
+/// Skew ordering across the suite matches Table 6's qualitative ranking:
+/// url-like is the most column-skewed, epsilon/synthetic are balanced.
+#[test]
+fn skew_ordering_matches_paper_suite() {
+    let gini = |spec: DatasetSpec| {
+        let ds = spec.profile().generate_scaled(0.04, 2);
+        NnzStats::of(&ds.a).col_gini
+    };
+    let url = gini(DatasetSpec::UrlLike);
+    let news = gini(DatasetSpec::News20Like);
+    let rcv1 = gini(DatasetSpec::Rcv1Like);
+    let synth = gini(DatasetSpec::SyntheticUniform);
+    assert!(url > rcv1, "url {url} vs rcv1 {rcv1}");
+    assert!(news > rcv1, "news {news} vs rcv1 {rcv1}");
+    assert!(rcv1 > synth, "rcv1 {rcv1} vs synthetic {synth}");
+}
+
+/// LIBSVM round trip at dataset scale: write → read preserves everything.
+#[test]
+fn libsvm_roundtrip_full_dataset() {
+    let ds = DatasetSpec::Rcv1Like.profile().generate_scaled(0.03, 3);
+    let text = libsvm::to_string(&ds);
+    let back = libsvm::parse(&text, "rt", Some(ds.n())).unwrap();
+    assert_eq!(back.m(), ds.m());
+    assert_eq!(back.y, ds.y);
+    assert_eq!(back.a.nnz(), ds.a.nnz());
+    assert_eq!(back.a.indices(), ds.a.indices());
+    for (a, b) in back.a.values().iter().zip(ds.a.values()) {
+        assert_eq!(a, b, "lossless float round trip");
+    }
+}
+
+/// Partition invariants hold on every (profile, partitioner, p_c) cell:
+/// exact column cover, κ ≥ 1, per-part ownership bijective, and the 2D
+/// assembly conserves nonzeros.
+#[test]
+fn partition_invariants_across_suite() {
+    for spec in [DatasetSpec::UrlLike, DatasetSpec::News20Like, DatasetSpec::Rcv1Like] {
+        let ds = spec.profile().generate_scaled(0.03, 4);
+        for p_c in [4usize, 16] {
+            for policy in Partitioner::all() {
+                let part = ColPartition::build(&ds.a, p_c, policy);
+                assert_eq!(part.n_local.iter().sum::<usize>(), ds.n());
+                assert!(part.kappa() >= 1.0 - 1e-12);
+                assert_eq!(
+                    part.nnz_local.iter().sum::<usize>(),
+                    ds.a.nnz(),
+                    "{policy:?} lost nonzeros"
+                );
+            }
+        }
+        let mp = MeshPartition::build(&ds, Mesh::new(2, 8), Partitioner::Cyclic);
+        assert_eq!(mp.rank_nnz().iter().sum::<usize>(), ds.a.nnz());
+    }
+}
+
+/// The two-objective selector picks a cache-feasible policy whenever one
+/// exists, on every profile.
+#[test]
+fn selector_always_feasible_when_possible() {
+    for spec in [DatasetSpec::UrlLike, DatasetSpec::News20Like, DatasetSpec::Rcv1Like] {
+        let ds = spec.profile().generate_scaled(0.05, 5);
+        let p_c = 16;
+        let pick = stats::select_two_objective(&ds.a, p_c, stats::L_CAP_BYTES);
+        let all = stats::survey(&ds.a, p_c, stats::L_CAP_BYTES);
+        if all.iter().any(|s| s.fits_cache) {
+            let picked = all.iter().find(|s| s.policy == pick).unwrap();
+            assert!(picked.fits_cache, "{}: picked infeasible {pick:?}", ds.name);
+        }
+    }
+}

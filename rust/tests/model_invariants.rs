@@ -1,0 +1,148 @@
+//! Cost-model invariants, property-tested across random configurations.
+
+use hybrid_sgd::costmodel::model::{self, DataShape};
+use hybrid_sgd::costmodel::{optima, topology, CalibProfile, HybridConfig};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::util::proptest::{check, Config};
+
+fn random_shape(rng: &mut hybrid_sgd::util::Prng) -> DataShape {
+    DataShape {
+        m: 10_000 + rng.next_below(5_000_000),
+        n: 1_000 + rng.next_below(10_000_000),
+        zbar: 5.0 + rng.next_below(2000) as f64,
+    }
+}
+
+fn random_cfg(rng: &mut hybrid_sgd::util::Prng) -> HybridConfig {
+    let p_r = 1 << rng.next_below(8);
+    let p_c = 1 << rng.next_below(8);
+    let s = 1 + rng.next_below(16);
+    let b = 1 + rng.next_below(128);
+    let tau = s + rng.next_below(50);
+    HybridConfig::new(Mesh::new(p_r, p_c), s, b, tau)
+}
+
+/// Every Eq. 4 term is nonnegative and finite, and the total is the sum.
+#[test]
+fn prop_breakdown_well_formed() {
+    let profile = CalibProfile::perlmutter();
+    check(
+        Config { cases: 200, seed: 0x11 },
+        "eq4 well-formed",
+        |rng| (random_cfg(rng), random_shape(rng)),
+        |(cfg, data)| {
+            let bd = model::eval(cfg, data, &profile);
+            let terms = [bd.compute, bd.latency, bd.gram_bw, bd.sync_bw];
+            terms.iter().all(|t| t.is_finite() && *t >= 0.0)
+                && (bd.total() - terms.iter().sum::<f64>()).abs() < 1e-12 * bd.total().max(1.0)
+        },
+    );
+}
+
+/// Doubling τ never increases the flat-model total at the corners where τ
+/// only appears in denominators (sync + latency amortization).
+#[test]
+fn prop_tau_monotone() {
+    check(
+        Config { cases: 100, seed: 0x22 },
+        "tau amortizes comm",
+        |rng| (random_cfg(rng), random_shape(rng)),
+        |(cfg, data)| {
+            let t1 = model::eval_flat(cfg, data, 1e-6, 1e-9, 1e-10);
+            let mut cfg2 = *cfg;
+            cfg2.tau *= 2;
+            let t2 = model::eval_flat(&cfg2, data, 1e-6, 1e-9, 1e-10);
+            t2.latency <= t1.latency + 1e-15 && t2.sync_bw <= t1.sync_bw + 1e-15
+        },
+    );
+}
+
+/// The closed-form s* (Eq. 5) tracks the integer sweep argmin of the full
+/// Eq. 4 within one grid neighbour, across random shapes.
+#[test]
+fn prop_s_star_matches_sweep() {
+    check(
+        Config { cases: 60, seed: 0x33 },
+        "s* vs sweep",
+        |rng| {
+            let mut cfg = random_cfg(rng);
+            cfg.b = 8 + rng.next_below(64);
+            // Eq. 5 presumes an *interior* mesh (both teams exist): at a
+            // 1D corner one of the communication terms vanishes from
+            // Eq. 4 but not from the closed form, so the comparison is
+            // out of scope there.
+            cfg.mesh =
+                hybrid_sgd::mesh::Mesh::new(cfg.mesh.p_r.max(2), cfg.mesh.p_c.max(2));
+            (cfg, random_shape(rng))
+        },
+        |(cfg, data)| {
+            let (alpha, beta, gamma) = (3.6e-6, 2.7e-9, 1e-10);
+            let s_cont = optima::s_star(cfg, data, alpha, beta, gamma).clamp(1.0, 64.0);
+            let s_sweep = optima::sweep_s(cfg, data, alpha, beta, gamma, 64) as f64;
+            // Within a factor-2 bracket of the discrete argmin (the
+            // continuous optimum of a convex A·s + B/s is within that of
+            // any integer neighbour).
+            s_cont <= 2.0 * s_sweep + 1.0 && s_sweep <= 2.0 * s_cont + 1.0
+        },
+    );
+}
+
+/// The topology rule always yields a valid factorization with p_c ≤ p and
+/// p_r·p_c = p, and the cache term only ever *raises* p_c.
+#[test]
+fn prop_topology_rule_valid() {
+    check(
+        Config { cases: 200, seed: 0x44 },
+        "rule validity",
+        |rng| {
+            let p = 1 + rng.next_below(4096);
+            let n = 1 + rng.next_below(100_000_000);
+            (n, p)
+        },
+        |&(n, p)| {
+            let m = topology::mesh_rule(n, p, 64, 1 << 20);
+            let base = topology::mesh_rule(1, p, 64, 1 << 20); // cache never binds at n=1
+            m.p() == p && m.p_c >= base.p_c.min(p)
+        },
+    );
+}
+
+/// Eq. 4's mesh corners reproduce the Table 2/3 baseline structure:
+/// FedAvg corner has no Gram term, s-step corner has no sync term, and
+/// the interior has both.
+#[test]
+fn prop_corner_structure() {
+    let profile = CalibProfile::perlmutter();
+    check(
+        Config { cases: 100, seed: 0x55 },
+        "corner structure",
+        |rng| {
+            let p = 2 << rng.next_below(9);
+            (p, random_shape(rng))
+        },
+        |&(p, data)| {
+            let fed = model::eval(&HybridConfig::fedavg_corner(p, 32, 10), &data, &profile);
+            let sstep = model::eval(&HybridConfig::sstep_corner(p, 4, 32), &data, &profile);
+            fed.gram_bw == 0.0 && sstep.sync_bw == 0.0 && fed.sync_bw > 0.0 && sstep.gram_bw > 0.0
+        },
+    );
+}
+
+/// Rank-aware β refinement: crossing the node boundary (p_c > R) never
+/// makes the Gram term cheaper at fixed payload.
+#[test]
+fn prop_node_boundary_step() {
+    let profile = CalibProfile::perlmutter();
+    check(
+        Config { cases: 50, seed: 0x66 },
+        "beta step at R",
+        |rng| random_shape(rng),
+        |data| {
+            let intra =
+                model::eval(&HybridConfig::new(Mesh::new(4, 64), 4, 32, 10), data, &profile);
+            let inter =
+                model::eval(&HybridConfig::new(Mesh::new(4, 128), 4, 32, 10), data, &profile);
+            inter.gram_bw >= intra.gram_bw
+        },
+    );
+}

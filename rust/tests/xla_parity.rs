@@ -1,0 +1,135 @@
+//! Cross-layer parity: the XLA/PJRT backend (AOT JAX + Pallas artifacts)
+//! must agree with the native Rust backend — and both must satisfy the
+//! shared conformance suite. Requires `make artifacts` (skips cleanly with
+//! a message otherwise).
+
+use hybrid_sgd::compute::{conformance_suite, ComputeBackend, NativeBackend};
+use hybrid_sgd::runtime::{artifacts_dir, XlaBackend};
+use hybrid_sgd::util::Prng;
+
+fn load_or_skip() -> Option<XlaBackend> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(XlaBackend::load(dir).expect("load artifacts"))
+}
+
+#[test]
+fn xla_backend_passes_conformance() {
+    let Some(be) = load_or_skip() else { return };
+    conformance_suite(&be);
+    assert!(be.served.load(std::sync::atomic::Ordering::Relaxed) > 0, "nothing ran on XLA");
+}
+
+#[test]
+fn sstep_parity_native_vs_xla_across_grid() {
+    let Some(xla) = load_or_skip() else { return };
+    let native = NativeBackend;
+    let mut rng = Prng::new(0xBEEF);
+    for &s in &[1usize, 2, 4, 8] {
+        for &b in &[8usize, 16, 32] {
+            let q = s * b;
+            // PSD-ish lower-triangular Gram from a random Y.
+            let n = 24;
+            let y: Vec<f64> = (0..q * n).map(|_| rng.next_gaussian()).collect();
+            let mut g = vec![0.0; q * q];
+            for i in 0..q {
+                for l in 0..=i {
+                    g[i * q + l] = (0..n).map(|c| y[i * n + c] * y[l * n + c]).sum();
+                }
+            }
+            let v: Vec<f64> = (0..q).map(|_| rng.next_gaussian()).collect();
+            let eta_over_b = 0.01 / b as f64;
+            let mut z_native = vec![0.0; q];
+            native.sstep_correct(s, b, &g, &v, eta_over_b, &mut z_native);
+            let mut z_xla = vec![0.0; q];
+            xla.sstep_correct(s, b, &g, &v, eta_over_b, &mut z_xla);
+            for i in 0..q {
+                assert!(
+                    (z_native[i] - z_xla[i]).abs() < 1e-12,
+                    "s={s} b={b} i={i}: native {} vs xla {}",
+                    z_native[i],
+                    z_xla[i]
+                );
+            }
+        }
+    }
+    assert_eq!(xla.fallbacks.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn dense_grad_parity() {
+    let Some(xla) = load_or_skip() else { return };
+    let native = NativeBackend;
+    let mut rng = Prng::new(0xD15C);
+    for &(b, n) in &[(16usize, 256usize), (32, 512)] {
+        let a: Vec<f64> = (0..b * n).map(|_| rng.next_gaussian()).collect();
+        let x0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let mut xn = x0.clone();
+        native.dense_grad_step(b, n, &a, &mut xn, 0.1);
+        let mut xx = x0.clone();
+        xla.dense_grad_step(b, n, &a, &mut xx, 0.1);
+        for c in 0..n {
+            assert!((xn[c] - xx[c]).abs() < 1e-11, "b={b} n={n} c={c}");
+        }
+    }
+}
+
+#[test]
+fn loss_parity_with_chunk_padding() {
+    let Some(xla) = load_or_skip() else { return };
+    let native = NativeBackend;
+    let mut rng = Prng::new(0x105);
+    // Deliberately not a multiple of any chunk size, and bigger than one chunk.
+    let margins: Vec<f64> = (0..20_001).map(|_| rng.next_gaussian() * 30.0).collect();
+    let ln = native.loss_sum(&margins);
+    let lx = xla.loss_sum(&margins);
+    assert!(
+        (ln - lx).abs() < 1e-7 * ln.abs().max(1.0),
+        "native {ln} vs xla {lx}"
+    );
+}
+
+#[test]
+fn sigmoid_parity_with_padding() {
+    let Some(xla) = load_or_skip() else { return };
+    let native = NativeBackend;
+    let mut rng = Prng::new(0x51);
+    for m in [1usize, 100, 128, 200, 512] {
+        let v: Vec<f64> = (0..m).map(|_| rng.next_gaussian() * 5.0).collect();
+        let mut on = vec![0.0; m];
+        native.sigmoid_residual(&v, &mut on);
+        let mut ox = vec![0.0; m];
+        xla.sigmoid_residual(&v, &mut ox);
+        for i in 0..m {
+            assert!((on[i] - ox[i]).abs() < 1e-14, "m={m} i={i}");
+        }
+    }
+}
+
+/// End-to-end: the HybridSGD solver produces the same trajectory on both
+/// backends (the correction recurrence is the only backend-served op on
+/// the solver path).
+#[test]
+fn solver_trajectory_parity() {
+    let Some(xla) = load_or_skip() else { return };
+    use hybrid_sgd::costmodel::HybridConfig;
+    use hybrid_sgd::data::synth;
+    use hybrid_sgd::mesh::Mesh;
+    use hybrid_sgd::partition::Partitioner;
+    use hybrid_sgd::solvers::{HybridSolver, RunOpts};
+
+    let mut rng = Prng::new(77);
+    let ds = synth::sparse_skewed("parity", 128, 64, 6, 0.7, &mut rng);
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 8, 4);
+    let opts = RunOpts { max_bundles: 6, eval_every: 0, ..Default::default() };
+
+    let run_native = HybridSolver::new(&NativeBackend).run(&ds, cfg, Partitioner::Cyclic, &opts);
+    let run_xla = HybridSolver::new(&xla).run(&ds, cfg, Partitioner::Cyclic, &opts);
+    assert_eq!(run_native.x.len(), run_xla.x.len());
+    for (a, b) in run_native.x.iter().zip(&run_xla.x) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+}
