@@ -1,0 +1,85 @@
+//! Map the collective-algorithm tuning table the engine's auto selector
+//! induces: for each team size, the payload thresholds where the cheapest
+//! Allreduce schedule switches (recursive doubling → Rabenseifner → ring),
+//! and for every mesh shape of a paper-scale dataset, which algorithms the
+//! row/column collectives actually get and what they cost.
+//!
+//! ```bash
+//! cargo run --release --example collective_sweep [-- url|news20|rcv1|synthetic] [p]
+//! ```
+
+use hybrid_sgd::collectives::{charge, AlgoPolicy, Algorithm, AutoSelector};
+use hybrid_sgd::costmodel::model::DataShape;
+use hybrid_sgd::costmodel::CalibProfile;
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::experiments::table4;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::util::Table;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let spec = args
+        .next()
+        .and_then(|s| DatasetSpec::from_name(&s))
+        .unwrap_or(DatasetSpec::UrlLike);
+    let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let prof = CalibProfile::perlmutter();
+
+    // 1. The payload crossover map per team size: where the lower envelope
+    //    of the three physical schedules switches under the Table 7
+    //    profile. The β(q) discontinuity at the node boundary (q = 64)
+    //    shows up as a kink in the thresholds.
+    let sel = AutoSelector::new(&prof);
+    let max_words = 1 << 24;
+    let mut cross = Table::new(&["team q", "selection by payload (words)"]);
+    for q in [2usize, 4, 8, 16, 32, 64, 128, 256, 1024, 4096, 16384] {
+        let segs = sel.selection_map(q, max_words);
+        let desc = segs
+            .iter()
+            .map(|(w, a)| format!("{}@{w}", a.name()))
+            .collect::<Vec<_>>()
+            .join(" -> ");
+        cross.row(&[q.to_string(), desc]);
+    }
+    println!("collective crossover map (Perlmutter profile, payloads 1..{max_words} words):");
+    println!("{}", cross.render());
+    println!("(`algo@W` = algorithm cheapest from W words on)");
+    println!();
+
+    // 2. What each mesh shape of the chosen dataset actually gets: the row
+    //    team's Gram payload is small and latency-sensitive, the column
+    //    team's weight shard huge and bandwidth-bound — so one mesh can mix
+    //    recursive doubling rows with ring columns, and the aspect ratio
+    //    moves both payloads and team sizes through the crossover map.
+    let profile = spec.profile();
+    let data = DataShape {
+        m: profile.paper_m,
+        n: profile.paper_n,
+        zbar: profile.paper_zbar as f64,
+    };
+    let mut t = Table::new(&[
+        "mesh", "row q", "W_row", "row algo", "row us", "col q", "W_col", "col algo",
+        "col us",
+    ]);
+    for mesh in Mesh::factorizations(p) {
+        let cfg = table4::hybrid_cfg(mesh);
+        let (w_row, w_col) = table4::bundle_payloads(&cfg, &data);
+        let (row_algo, row_cost) = charge(&prof, AlgoPolicy::Auto, mesh.p_c, w_row);
+        let (col_algo, col_cost) = charge(&prof, AlgoPolicy::Auto, mesh.p_r, w_col);
+        let name = |q: usize, a: Algorithm| if q > 1 { a.name() } else { "-" };
+        let us = |t: f64| format!("{:.2}", t * 1e6);
+        t.row(&[
+            mesh.label(),
+            mesh.p_c.to_string(),
+            w_row.to_string(),
+            name(mesh.p_c, row_algo).to_string(),
+            us(row_cost.time),
+            mesh.p_r.to_string(),
+            w_col.to_string(),
+            name(mesh.p_r, col_algo).to_string(),
+            us(col_cost.time),
+        ]);
+    }
+    println!("{} at p = {p} (s/b/tau from the Table 4 sweep config):", profile.name);
+    println!("{}", t.render());
+}

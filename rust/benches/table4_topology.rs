@@ -1,14 +1,29 @@
-//! Bench target regenerating the paper's Table 4 — topology rule vs empirical best mesh.
+//! Bench target regenerating the paper's Table 4 — topology rule vs
+//! empirical best mesh — plus the collective-algorithm sweep the pluggable
+//! collectives layer adds: charged Allreduce time per algorithm across
+//! every mesh aspect ratio of each Table 4 row, with the auto selector's
+//! per-collective picks.
 //!
 //! Effort via `HYBRID_SGD_EFFORT=quick|full` (default quick). Rows print
-//! to stdout; machine-readable TSV lands under `results/`.
+//! to stdout; machine-readable TSV lands under `results/`
+//! (`table4_topology.tsv` and `table4_algo_sweep.tsv`).
 
 use hybrid_sgd::experiments::{table4, Effort};
 use std::time::Instant;
 
 fn main() {
     let effort = Effort::from_env();
+
+    // Pure cost-model arithmetic first: the algorithm × mesh sweep shows
+    // where the tuning-table crossovers sit before any solver runs.
     let t0 = Instant::now();
+    let sweep = table4::algo_sweep();
+    println!("== Table 4 extension — charged Allreduce time by collective algorithm ==");
+    println!("{}", sweep.render());
+    println!("(per-bundle row + tau-amortized column Allreduce, paper-scale shapes)");
+    println!();
+
+    // Then the empirical mesh race behind the paper's Table 4 rows.
     let table = table4::run(effort);
     let wall = t0.elapsed().as_secs_f64();
     println!("== Table 4 — topology rule vs empirical best mesh ==");

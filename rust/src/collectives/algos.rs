@@ -1,0 +1,316 @@
+//! The four collective-algorithm implementations and their Hockney-model
+//! accounting (Thakur, Rabenseifner & Gropp, *Optimization of Collective
+//! Communication Operations in MPICH* — refs [33, 27] of the paper).
+//!
+//! Shared notation: `q` team ranks, `W` payload words, `w = 8` bytes/word,
+//! `α = α(q)`, `β = β(q)` from the rank-aware calibration profile,
+//! `k = ⌈log₂ q⌉`. Non-powers-of-two pay the standard MPICH *fold*: the
+//! `q − 2^⌊log₂q⌋` surplus ranks fold their contribution into a neighbour
+//! before the power-of-two core runs and receive the result after it — two
+//! extra full-payload phases on the critical path.
+
+use super::{Algorithm, CollectiveAlgo, CollectiveCost};
+use crate::costmodel::calib::CalibProfile;
+use crate::costmodel::hockney;
+use crate::WORD_BYTES;
+
+/// Bandwidth penalty on Rabenseifner's recursive-halving phase: the halving
+/// steps move strided, non-contiguous halves (pack/unpack on every step),
+/// charged as a 25% slowdown on that phase's bytes. This is the modeling
+/// term that lets the contiguous nearest-neighbour ring overtake
+/// Rabenseifner at the largest payloads — the switch real MPI tuning
+/// tables (Cray MPICH included) make.
+pub const RSH_NONCONTIG_PENALTY: f64 = 0.25;
+
+/// `⌈log₂ q⌉` (0 for `q = 1`).
+pub fn log2_ceil(q: usize) -> usize {
+    debug_assert!(q >= 1);
+    (usize::BITS - (q - 1).leading_zeros()) as usize
+}
+
+/// Extra critical-path phases a non-power-of-two team pays for the fold
+/// (0 when `q` is a power of two, 2 otherwise).
+pub fn fold_phases(q: usize) -> usize {
+    if q.is_power_of_two() {
+        0
+    } else {
+        2
+    }
+}
+
+fn bytes(words: usize) -> f64 {
+    (words * WORD_BYTES) as f64
+}
+
+/// The seed engine's charging: linear-order reduction priced at the fixed
+/// bandwidth-optimal Hockney bound `2⌈log₂q⌉α + Wwβ`
+/// ([`hockney::allreduce_time`]). No physical schedule attains the `Wwβ`
+/// bandwidth term for `q > 2` (reduce-scatter + allgather needs
+/// `2W(q−1)/q`), which is why the [`AutoSelector`](super::AutoSelector)
+/// treats `Linear` as the idealized lower envelope rather than a candidate.
+pub struct Linear;
+
+impl CollectiveAlgo for Linear {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Linear
+    }
+
+    fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        CollectiveCost {
+            time: hockney::allreduce_time(profile, q, words),
+            steps: 2 * log2_ceil(q),
+            messages: hockney::allreduce_messages(q),
+            words: words as f64,
+        }
+    }
+}
+
+/// Recursive doubling: at step `i` rank `r` exchanges the **full** payload
+/// with rank `r ⊕ 2^i` and both combine.
+///
+/// `T = (k + f)·(α + Wwβ)` with `k = ⌈log₂q⌉` and fold `f ∈ {0, 2}`;
+/// messages `k + f`, words `(k + f)·W` per rank. Latency-optimal (`k`
+/// rounds is a lower bound for an allreduce), but every round carries the
+/// whole vector — the tuning-table choice for small payloads only.
+pub struct RecursiveDoubling;
+
+impl CollectiveAlgo for RecursiveDoubling {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::RecursiveDoubling
+    }
+
+    fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let steps = log2_ceil(q) + fold_phases(q);
+        let per_step = profile.alpha(q) + bytes(words) * profile.beta(q);
+        CollectiveCost {
+            time: steps as f64 * per_step,
+            steps,
+            messages: steps as f64,
+            words: (steps * words) as f64,
+        }
+    }
+}
+
+/// Ring allreduce: reduce-scatter around the ring (`q − 1` steps of `W/q`
+/// words), then allgather around the ring (`q − 1` more).
+///
+/// `T = 2(q−1)α + 2·((q−1)/q)·Wwβ`; messages `2(q−1)`, words
+/// `2W(q−1)/q` per rank. Bandwidth-optimal with contiguous
+/// nearest-neighbour transfers — the large-payload winner — at the price
+/// of latency linear in `q`. Handles any `q` without a fold.
+pub struct RingAllreduce;
+
+impl CollectiveAlgo for RingAllreduce {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::RingAllreduce
+    }
+
+    fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let steps = 2 * (q - 1);
+        let r = (q - 1) as f64 / q as f64;
+        CollectiveCost {
+            time: steps as f64 * profile.alpha(q) + 2.0 * r * bytes(words) * profile.beta(q),
+            steps,
+            messages: steps as f64,
+            words: 2.0 * r * words as f64,
+        }
+    }
+}
+
+/// Rabenseifner: recursive-halving reduce-scatter (`k` steps of
+/// `W/2, W/4, …` words) followed by a recursive-doubling allgather.
+///
+/// `T = (2k + f)·α + (2 + p)·((q−1)/q)·Wwβ [+ Wwβ fold]` where
+/// `p =` [`RSH_NONCONTIG_PENALTY`] prices the halving phase's
+/// non-contiguous strides; messages `2k + f`, words `2W(q−1)/q [+ W]`
+/// per rank. Log-latency *and* near-optimal bandwidth — the classic
+/// mid-to-large payload default.
+pub struct Rabenseifner;
+
+impl CollectiveAlgo for Rabenseifner {
+    fn algorithm(&self) -> Algorithm {
+        Algorithm::Rabenseifner
+    }
+
+    fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let fold = fold_phases(q);
+        let steps = 2 * log2_ceil(q) + fold;
+        let r = (q - 1) as f64 / q as f64;
+        let fold_words = if fold > 0 { words as f64 } else { 0.0 };
+        let bw_bytes =
+            ((2.0 + RSH_NONCONTIG_PENALTY) * r * words as f64 + fold_words) * WORD_BYTES as f64;
+        CollectiveCost {
+            time: steps as f64 * profile.alpha(q) + bw_bytes * profile.beta(q),
+            steps,
+            messages: steps as f64,
+            words: 2.0 * r * words as f64 + fold_words,
+        }
+    }
+}
+
+/// Static dispatch table.
+pub fn lookup(a: Algorithm) -> &'static dyn CollectiveAlgo {
+    match a {
+        Algorithm::Linear => &Linear,
+        Algorithm::RecursiveDoubling => &RecursiveDoubling,
+        Algorithm::RingAllreduce => &RingAllreduce,
+        Algorithm::Rabenseifner => &Rabenseifner,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> CalibProfile {
+        CalibProfile::perlmutter()
+    }
+
+    #[test]
+    fn log2_ceil_edges() {
+        assert_eq!(log2_ceil(1), 0);
+        assert_eq!(log2_ceil(2), 1);
+        assert_eq!(log2_ceil(3), 2);
+        assert_eq!(log2_ceil(8), 3);
+        assert_eq!(log2_ceil(9), 4);
+        assert_eq!(log2_ceil(16384), 14);
+    }
+
+    #[test]
+    fn fold_only_for_non_powers_of_two() {
+        for q in [1usize, 2, 4, 64, 1024] {
+            assert_eq!(fold_phases(q), 0, "q={q}");
+        }
+        for q in [3usize, 5, 6, 7, 9, 96, 100] {
+            assert_eq!(fold_phases(q), 2, "q={q}");
+        }
+    }
+
+    #[test]
+    fn linear_reproduces_seed_charging() {
+        // Linear is the seed engine verbatim: hockney time, 2⌈log₂q⌉
+        // messages, W words.
+        let p = prof();
+        for (q, w) in [(2usize, 100usize), (8, 1), (64, 1 << 20), (9, 777)] {
+            let c = Algorithm::Linear.as_algo().cost(&p, q, w);
+            assert_eq!(c.time, hockney::allreduce_time(&p, q, w), "q={q}");
+            assert_eq!(c.messages, hockney::allreduce_messages(q), "q={q}");
+            assert_eq!(c.words, w as f64, "q={q}");
+            assert_eq!(c.steps as f64, c.messages, "q={q}");
+        }
+    }
+
+    #[test]
+    fn recursive_doubling_counts() {
+        let p = prof();
+        let c = Algorithm::RecursiveDoubling.as_algo().cost(&p, 8, 1000);
+        assert_eq!(c.steps, 3);
+        assert_eq!(c.words, 3000.0);
+        let want = 3.0 * (p.alpha(8) + 8000.0 * p.beta(8));
+        assert!((c.time - want).abs() < want * 1e-12);
+        // Non-power-of-two pays the two fold phases.
+        let c9 = Algorithm::RecursiveDoubling.as_algo().cost(&p, 9, 1000);
+        assert_eq!(c9.steps, 4 + 2);
+        assert_eq!(c9.words, 6000.0);
+    }
+
+    #[test]
+    fn ring_counts() {
+        let p = prof();
+        let c = Algorithm::RingAllreduce.as_algo().cost(&p, 8, 1000);
+        assert_eq!(c.steps, 14);
+        assert!((c.words - 2.0 * 7.0 / 8.0 * 1000.0).abs() < 1e-9);
+        let want = 14.0 * p.alpha(8) + 2.0 * (7.0 / 8.0) * 8000.0 * p.beta(8);
+        assert!((c.time - want).abs() < want * 1e-12);
+        // No fold needed: q = 5 keeps the same closed form.
+        let c5 = Algorithm::RingAllreduce.as_algo().cost(&p, 5, 1000);
+        assert_eq!(c5.steps, 8);
+        assert!((c5.words - 2.0 * 4.0 / 5.0 * 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rabenseifner_counts() {
+        let p = prof();
+        let c = Algorithm::Rabenseifner.as_algo().cost(&p, 8, 1000);
+        assert_eq!(c.steps, 6);
+        assert!((c.words - 2.0 * 7.0 / 8.0 * 1000.0).abs() < 1e-9);
+        let want = 6.0 * p.alpha(8)
+            + (2.0 + RSH_NONCONTIG_PENALTY) * (7.0 / 8.0) * 8000.0 * p.beta(8);
+        assert!((c.time - want).abs() < want * 1e-12);
+        // Fold: two extra steps and one extra full payload of words.
+        let c9 = Algorithm::Rabenseifner.as_algo().cost(&p, 9, 1000);
+        assert_eq!(c9.steps, 2 * 4 + 2);
+        assert!((c9.words - (2.0 * 8.0 / 9.0 * 1000.0 + 1000.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_is_the_lower_envelope() {
+        // The idealized bound undercuts every physical schedule once q > 2
+        // (its Wwβ bandwidth term is unattainable).
+        let p = prof();
+        for q in [4usize, 8, 64, 256] {
+            for w in [1usize, 1000, 1 << 20] {
+                let lin = Algorithm::Linear.as_algo().cost(&p, q, w).time;
+                for a in Algorithm::physical() {
+                    let t = a.as_algo().cost(&p, q, w).time;
+                    assert!(
+                        lin <= t * (1.0 + 1e-12),
+                        "{} q={q} w={w}: linear {lin} > {t}",
+                        a.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_algorithm_times_diverge() {
+        // Same collective, three genuinely different charges.
+        let p = prof();
+        let times: Vec<f64> = Algorithm::physical()
+            .iter()
+            .map(|a| a.as_algo().cost(&p, 64, 4096).time)
+            .collect();
+        for i in 0..times.len() {
+            for j in i + 1..times.len() {
+                assert!(
+                    (times[i] - times[j]).abs() > 1e-15,
+                    "times {i} and {j} coincide: {times:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_ordering_at_large_payload() {
+        // Huge payload at q = 64: ring < rabenseifner < recursive doubling.
+        let p = prof();
+        let w = 1 << 22;
+        let ring = Algorithm::RingAllreduce.as_algo().cost(&p, 64, w).time;
+        let rab = Algorithm::Rabenseifner.as_algo().cost(&p, 64, w).time;
+        let rd = Algorithm::RecursiveDoubling.as_algo().cost(&p, 64, w).time;
+        assert!(ring < rab && rab < rd, "ring={ring} rab={rab} rd={rd}");
+    }
+
+    #[test]
+    fn latency_ordering_at_tiny_payload() {
+        // One-word payload at q = 64: recursive doubling < rabenseifner < ring.
+        let p = prof();
+        let ring = Algorithm::RingAllreduce.as_algo().cost(&p, 64, 1).time;
+        let rab = Algorithm::Rabenseifner.as_algo().cost(&p, 64, 1).time;
+        let rd = Algorithm::RecursiveDoubling.as_algo().cost(&p, 64, 1).time;
+        assert!(rd < rab && rab < ring, "rd={rd} rab={rab} ring={ring}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Pluggable collective-algorithm layer for team-scoped Allreduces.
+//!
+//! The paper charges every Allreduce with one fixed Hockney formula
+//! (`2⌈log₂q⌉α + Wwβ`, the bandwidth-optimal bound of Thakur et al. /
+//! Rabenseifner). Real MPI stacks — Cray MPICH on the paper's Perlmutter
+//! included — switch the *algorithm* by team size and payload: a
+//! latency-optimal recursive doubling for small messages, the
+//! bandwidth-optimal ring or Rabenseifner schedules for large ones. That
+//! switch moves exactly the latency/bandwidth crossover that decides the
+//! s-step vs FedAvg trade-off the paper measures (Tables 4/5/8/10), so the
+//! engine models it explicitly:
+//!
+//! * [`CollectiveAlgo`] — the algorithm interface: each implementation
+//!   carries its own step/message/word accounting and Hockney time formula,
+//!   parameterized by the rank-aware `α(q)`/`β(q)` calibration profile.
+//! * [`algos`] — the four implementations: [`algos::Linear`] (the seed
+//!   engine's fixed bound, kept as the correctness oracle),
+//!   [`algos::RecursiveDoubling`], [`algos::RingAllreduce`]
+//!   (reduce-scatter + allgather), and [`algos::Rabenseifner`]
+//!   (recursive-halving reduce-scatter + recursive-doubling allgather).
+//! * [`select`] — the [`AutoSelector`]: picks the cheapest *physical*
+//!   algorithm per `(q, words)` from the profile, the way an MPI tuning
+//!   table does. [`AlgoPolicy`] is the override knob threaded through
+//!   [`Engine`](crate::comm::Engine), [`RunOpts`](crate::solvers::RunOpts)
+//!   and the cost-model predictors.
+//!
+//! **Determinism contract.** Algorithm choice changes *charged* time,
+//! message, and word books only — never reduced values. Every algorithm
+//! reduces through the shared [`canonical_reduce`] kernel (linear in team
+//! order, the seed engine's order), so solver trajectories are bit-identical
+//! across `AlgoPolicy` settings. A schedule-faithful floating-point
+//! reduction would re-associate sums (recursive doubling pairs ranks,
+//! the ring accumulates per block) and break the cross-executor
+//! reproducibility the repo's equivalence tests rely on; the schedules are
+//! therefore modeled in the accounting, not in the arithmetic.
+
+pub mod algos;
+pub mod select;
+
+pub use select::AutoSelector;
+
+use crate::costmodel::calib::CalibProfile;
+
+/// Reduction operator of a collective. (Lives here rather than in
+/// [`crate::comm`] so the algorithm layer does not depend on the engine;
+/// re-exported as `comm::Reduce` for API compatibility.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    /// Elementwise sum.
+    Sum,
+    /// Elementwise mean (sum / team size) — FedAvg's averaging step.
+    Mean,
+}
+
+/// The collective-algorithm family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// The seed engine's charging: linear-order reduction charged at the
+    /// fixed bandwidth-optimal Hockney bound `2⌈log₂q⌉α + Wwβ`. Kept as
+    /// the correctness oracle and the idealized lower envelope; never
+    /// chosen by [`AutoSelector`] (no physical schedule attains `Wwβ`
+    /// for `q > 2`).
+    Linear,
+    /// Recursive doubling: `⌈log₂q⌉` exchange steps of the full payload.
+    /// Latency-optimal; bandwidth cost grows with `log q`.
+    RecursiveDoubling,
+    /// Ring reduce-scatter + ring allgather: `2(q−1)` nearest-neighbour
+    /// steps of `W/q` words. Bandwidth-optimal; latency grows linearly
+    /// in `q`.
+    RingAllreduce,
+    /// Rabenseifner: recursive-halving reduce-scatter followed by a
+    /// recursive-doubling allgather — `2⌈log₂q⌉` steps moving `2W(q−1)/q`
+    /// words, the classic large-message default.
+    Rabenseifner,
+}
+
+impl Algorithm {
+    /// All algorithms, Linear (the oracle) first.
+    pub fn all() -> [Algorithm; 4] {
+        [
+            Algorithm::Linear,
+            Algorithm::RecursiveDoubling,
+            Algorithm::RingAllreduce,
+            Algorithm::Rabenseifner,
+        ]
+    }
+
+    /// The physically realizable schedules the [`AutoSelector`] chooses
+    /// among (everything except the idealized `Linear` bound).
+    pub fn physical() -> [Algorithm; 3] {
+        [Algorithm::RecursiveDoubling, Algorithm::RingAllreduce, Algorithm::Rabenseifner]
+    }
+
+    /// Table/CLI label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Linear => "linear",
+            Algorithm::RecursiveDoubling => "recursive-doubling",
+            Algorithm::RingAllreduce => "ring",
+            Algorithm::Rabenseifner => "rabenseifner",
+        }
+    }
+
+    /// Parse a CLI/env label.
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        match s {
+            "linear" => Some(Algorithm::Linear),
+            "recursive-doubling" | "rd" => Some(Algorithm::RecursiveDoubling),
+            "ring" => Some(Algorithm::RingAllreduce),
+            "rabenseifner" | "rab" => Some(Algorithm::Rabenseifner),
+            _ => None,
+        }
+    }
+
+    /// The implementation behind this tag.
+    pub fn as_algo(&self) -> &'static dyn CollectiveAlgo {
+        algos::lookup(*self)
+    }
+}
+
+/// How the engine (or a predictor) picks the collective algorithm.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AlgoPolicy {
+    /// Cheapest physical algorithm per `(q, words)` under the profile —
+    /// what a tuned MPI stack does. The default.
+    #[default]
+    Auto,
+    /// Pin one algorithm for every collective (e.g. `Fixed(Linear)`
+    /// reproduces the seed engine's books exactly).
+    Fixed(Algorithm),
+}
+
+/// Charged per-rank cost of one Allreduce under a specific algorithm.
+///
+/// All team members are charged identically (the engine's collectives are
+/// bulk-synchronous): `time` advances the simulated clock, `messages` and
+/// `words` feed the phase book's `L`/`W` columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CollectiveCost {
+    /// Seconds charged to every participating rank.
+    pub time: f64,
+    /// Communication rounds in the schedule's critical path.
+    pub steps: usize,
+    /// Messages sent per rank (the latency count `L`).
+    pub messages: f64,
+    /// Words moved per rank (the bandwidth count `W`; fractional for
+    /// block-scattered schedules like the ring's `2W(q−1)/q`).
+    pub words: f64,
+}
+
+impl CollectiveCost {
+    /// The free collective (singleton team).
+    pub const ZERO: CollectiveCost =
+        CollectiveCost { time: 0.0, steps: 0, messages: 0.0, words: 0.0 };
+}
+
+/// One collective algorithm: an accounting model plus the shared canonical
+/// reduction kernel.
+pub trait CollectiveAlgo: Sync {
+    /// The tag this implementation answers to.
+    fn algorithm(&self) -> Algorithm;
+
+    /// Display name.
+    fn name(&self) -> &'static str {
+        self.algorithm().name()
+    }
+
+    /// Charged per-rank cost of one Allreduce of `words` f64 words over a
+    /// `q`-rank team, priced by the rank-aware `α(q)`/`β(q)` profile.
+    /// Must return [`CollectiveCost::ZERO`] for `q ≤ 1`.
+    fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost;
+
+    /// Reduce the team's contribution buffers. Every algorithm shares the
+    /// canonical kernel — see the module docs' determinism contract.
+    fn reduce(&self, contribs: &[&[f64]], op: Reduce) -> Vec<f64> {
+        canonical_reduce(contribs, op)
+    }
+}
+
+/// The canonical reduction: accumulate contributions **linearly in team
+/// order** (index 0 first). This is the seed engine's order and the bitwise
+/// contract every algorithm's `reduce` honours.
+pub fn canonical_reduce(contribs: &[&[f64]], op: Reduce) -> Vec<f64> {
+    let first = contribs.first().expect("canonical_reduce over empty team");
+    let words = first.len();
+    let mut acc = vec![0.0f64; words];
+    for c in contribs {
+        assert_eq!(c.len(), words, "allreduce buffer length mismatch in team");
+        for (a, x) in acc.iter_mut().zip(c.iter()) {
+            *a += *x;
+        }
+    }
+    if op == Reduce::Mean {
+        let inv = 1.0 / contribs.len() as f64;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+    }
+    acc
+}
+
+/// Resolve a policy to a concrete `(algorithm, cost)` for one collective.
+/// The single entry point the engine and the cost-model predictors charge
+/// through. Singleton teams are free under every policy.
+pub fn charge(
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    q: usize,
+    words: usize,
+) -> (Algorithm, CollectiveCost) {
+    if q <= 1 {
+        return (Algorithm::Linear, CollectiveCost::ZERO);
+    }
+    match policy {
+        AlgoPolicy::Auto => AutoSelector::new(profile).pick_cost(q, words),
+        AlgoPolicy::Fixed(a) => (a, a.as_algo().cost(profile, q, words)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> CalibProfile {
+        CalibProfile::perlmutter()
+    }
+
+    #[test]
+    fn singleton_teams_are_free_under_every_policy() {
+        for a in Algorithm::all() {
+            assert_eq!(charge(&prof(), AlgoPolicy::Fixed(a), 1, 1_000_000).1, CollectiveCost::ZERO);
+            assert_eq!(a.as_algo().cost(&prof(), 1, 1_000_000), CollectiveCost::ZERO);
+        }
+        assert_eq!(charge(&prof(), AlgoPolicy::Auto, 1, 64).1, CollectiveCost::ZERO);
+    }
+
+    #[test]
+    fn canonical_reduce_is_linear_order() {
+        // Catastrophic-cancellation probe: (1e16 + 1.0) − 1e16 = 0.0 only
+        // in strict left-to-right order.
+        let a = [1e16];
+        let b = [1.0];
+        let c = [-1e16];
+        let r = canonical_reduce(&[&a, &b, &c], Reduce::Sum);
+        assert_eq!(r, vec![0.0]);
+    }
+
+    #[test]
+    fn canonical_reduce_mean_divides() {
+        let a = [2.0, 4.0];
+        let b = [4.0, 8.0];
+        let r = canonical_reduce(&[&a, &b], Reduce::Mean);
+        assert_eq!(r, vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn every_algorithm_reduces_identically_to_linear() {
+        let bufs: Vec<Vec<f64>> = (0..5)
+            .map(|r| (0..17).map(|i| ((r * 31 + i) as f64).sin() * 1e3).collect())
+            .collect();
+        let refs: Vec<&[f64]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let oracle = Algorithm::Linear.as_algo().reduce(&refs, Reduce::Sum);
+        for a in Algorithm::physical() {
+            let got = a.as_algo().reduce(&refs, Reduce::Sum);
+            for (x, y) in got.iter().zip(&oracle) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", a.name());
+            }
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::all() {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::from_name("rd"), Some(Algorithm::RecursiveDoubling));
+        assert_eq!(Algorithm::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn default_policy_is_auto() {
+        assert_eq!(AlgoPolicy::default(), AlgoPolicy::Auto);
+    }
+}

@@ -1,0 +1,199 @@
+//! Hockney-costed algorithm auto-selection — the model of an MPI stack's
+//! collective tuning table.
+//!
+//! For every `(q, words)` the [`AutoSelector`] evaluates each *physical*
+//! algorithm's charged time under the rank-aware profile and picks the
+//! cheapest. Because every algorithm's time is affine in the payload
+//! (`T(W) = L·α + c·Wwβ`) the selection is a lower envelope of lines:
+//! recursive doubling (smallest intercept, steepest slope) wins tiny
+//! payloads, Rabenseifner the mid range, and the ring (largest intercept,
+//! shallowest slope) the largest payloads — at most two crossovers per
+//! team size, mapped exactly by [`AutoSelector::selection_map`].
+
+use super::{algos, Algorithm, CollectiveCost};
+use crate::costmodel::calib::CalibProfile;
+
+/// Picks the cheapest physical collective algorithm per `(q, words)`.
+pub struct AutoSelector<'p> {
+    profile: &'p CalibProfile,
+}
+
+impl<'p> AutoSelector<'p> {
+    /// Selector over a calibration profile.
+    pub fn new(profile: &'p CalibProfile) -> AutoSelector<'p> {
+        AutoSelector { profile }
+    }
+
+    /// Cheapest physical algorithm for one collective. Ties resolve to the
+    /// earlier entry of [`Algorithm::physical`] (deterministic).
+    pub fn pick(&self, q: usize, words: usize) -> Algorithm {
+        self.pick_cost(q, words).0
+    }
+
+    /// Cheapest algorithm together with its charged cost.
+    pub fn pick_cost(&self, q: usize, words: usize) -> (Algorithm, CollectiveCost) {
+        if q <= 1 {
+            return (Algorithm::Linear, CollectiveCost::ZERO);
+        }
+        let mut best: Option<(Algorithm, CollectiveCost)> = None;
+        for a in Algorithm::physical() {
+            let c = algos::lookup(a).cost(self.profile, q, words);
+            let better = match &best {
+                None => true,
+                Some((_, b)) => c.time < b.time,
+            };
+            if better {
+                best = Some((a, c));
+            }
+        }
+        best.expect("physical algorithm set is nonempty")
+    }
+
+    /// The selection map for a team size: `(first_words, algorithm)`
+    /// segments covering `1..=max_words`, with exact (word-resolution)
+    /// crossover thresholds found by bisection. The payload axis of the
+    /// paper-style tuning table; `collective_sweep` renders it per mesh.
+    pub fn selection_map(&self, q: usize, max_words: usize) -> Vec<(usize, Algorithm)> {
+        assert!(max_words >= 1);
+        let mut segments = vec![(1usize, self.pick(q, 1))];
+        if q <= 1 {
+            return segments;
+        }
+        let mut lo = 1usize;
+        while lo < max_words {
+            let cur = segments.last().expect("nonempty").1;
+            // Gallop to a payload where the pick changes.
+            let mut hi = (lo * 2).min(max_words);
+            while self.pick(q, hi) == cur && hi < max_words {
+                lo = hi;
+                hi = (hi * 2).min(max_words);
+            }
+            if self.pick(q, hi) == cur {
+                break; // no further switch before max_words
+            }
+            // Bisect the switch point in (lo, hi].
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if self.pick(q, mid) == cur {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            segments.push((hi, self.pick(q, hi)));
+            lo = hi;
+        }
+        segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sel(p: &CalibProfile) -> AutoSelector<'_> {
+        AutoSelector::new(p)
+    }
+
+    #[test]
+    fn tiny_payloads_pick_latency_optimal_recursive_doubling() {
+        let p = CalibProfile::perlmutter();
+        for q in [4usize, 8, 32, 64, 256, 1024] {
+            assert_eq!(
+                sel(&p).pick(q, 8),
+                Algorithm::RecursiveDoubling,
+                "q={q} should pick the ⌈log₂q⌉-message schedule for 8 words"
+            );
+        }
+    }
+
+    #[test]
+    fn large_payloads_pick_bandwidth_optimal_ring() {
+        let p = CalibProfile::perlmutter();
+        for q in [8usize, 64, 256] {
+            assert_eq!(
+                sel(&p).pick(q, 1 << 22),
+                Algorithm::RingAllreduce,
+                "q={q} should pick ring for 4M words"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_payloads_pick_rabenseifner() {
+        // Between the two regimes the log-latency / near-optimal-bandwidth
+        // schedule wins (verified numerically against the Table 7 profile:
+        // at q = 64 the RD→Rabenseifner crossover sits near 3×10² words and
+        // the Rabenseifner→ring one near 10⁵).
+        let p = CalibProfile::perlmutter();
+        assert_eq!(sel(&p).pick(64, 8192), Algorithm::Rabenseifner);
+        assert_eq!(sel(&p).pick(256, 16384), Algorithm::Rabenseifner);
+    }
+
+    #[test]
+    fn crossover_order_is_rd_then_rab_then_ring() {
+        // The acceptance criterion: as payload grows the selector crosses
+        // over from recursive doubling to ring/Rabenseifner.
+        let p = CalibProfile::perlmutter();
+        let map = sel(&p).selection_map(64, 1 << 24);
+        let algos: Vec<Algorithm> = map.iter().map(|(_, a)| *a).collect();
+        assert_eq!(
+            algos,
+            vec![
+                Algorithm::RecursiveDoubling,
+                Algorithm::Rabenseifner,
+                Algorithm::RingAllreduce
+            ]
+        );
+        // Thresholds are strictly increasing and start at 1 word.
+        assert_eq!(map[0].0, 1);
+        assert!(map[0].0 < map[1].0 && map[1].0 < map[2].0);
+    }
+
+    #[test]
+    fn selection_map_thresholds_are_exact() {
+        // At each reported threshold the pick differs from one word earlier.
+        let p = CalibProfile::perlmutter();
+        for q in [8usize, 64, 100] {
+            let map = sel(&p).selection_map(q, 1 << 22);
+            for pair in map.windows(2) {
+                let (w, a) = pair[1];
+                assert_eq!(sel(&p).pick(q, w), a, "q={q} w={w}");
+                assert_eq!(sel(&p).pick(q, w - 1), pair[0].1, "q={q} w={}", w - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn two_rank_teams_always_use_recursive_doubling() {
+        // q = 2: one exchange of the full payload is optimal in both α
+        // and β — no crossover exists.
+        let p = CalibProfile::perlmutter();
+        let map = sel(&p).selection_map(2, 1 << 24);
+        assert_eq!(map, vec![(1, Algorithm::RecursiveDoubling)]);
+    }
+
+    #[test]
+    fn auto_never_picks_the_idealized_linear_bound() {
+        let p = CalibProfile::perlmutter();
+        for q in [2usize, 3, 8, 64, 1000] {
+            for w in [1usize, 512, 1 << 20] {
+                assert_ne!(sel(&p).pick(q, w), Algorithm::Linear, "q={q} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_is_cheapest_over_physical_set() {
+        let p = CalibProfile::perlmutter();
+        for q in [3usize, 8, 64, 300] {
+            for w in [1usize, 100, 10_000, 1 << 20] {
+                let (_, best) = sel(&p).pick_cost(q, w);
+                for a in Algorithm::physical() {
+                    let t = algos::lookup(a).cost(&p, q, w).time;
+                    assert!(best.time <= t * (1.0 + 1e-12), "q={q} w={w} {}", a.name());
+                }
+            }
+        }
+    }
+}

@@ -1,10 +1,12 @@
 //! Bulk-synchronous rank engine with simulated-clock charging.
 
+use crate::collectives::{self, AlgoPolicy};
 use crate::costmodel::calib::CalibProfile;
-use crate::costmodel::hockney;
 use crate::mesh::Mesh;
 use crate::metrics::{Phase, PhaseBook};
 use std::time::Instant;
+
+pub use crate::collectives::Reduce;
 
 /// Which team a collective spans (paper §4: the row Allreduce runs within a
 /// row team across its `p_c` ranks; the column Allreduce within a column
@@ -17,15 +19,6 @@ pub enum Scope {
     ColTeam,
     /// All `p` ranks.
     World,
-}
-
-/// Reduction operator.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Reduce {
-    /// Elementwise sum.
-    Sum,
-    /// Elementwise mean (sum / team size) — FedAvg's averaging step.
-    Mean,
 }
 
 /// Cost declaration returned by a compute closure, used when charging is
@@ -77,18 +70,37 @@ pub struct Engine {
     pub book: PhaseBook,
     /// Compute lanes (OS threads) for per-rank closures; 1 = sequential.
     pub lanes: usize,
+    /// Collective-algorithm policy: `Auto` (Hockney-costed selection per
+    /// team size and payload, the default) or `Fixed(_)` to pin one
+    /// algorithm — `Fixed(Linear)` reproduces the seed engine's books.
+    /// Never changes reduced values, only the charged accounting.
+    pub algo: AlgoPolicy,
 }
 
 impl Engine {
     /// New engine over `mesh`, charging from `profile`.
     pub fn new(mesh: Mesh, profile: CalibProfile, charging: Charging) -> Engine {
         let p = mesh.p();
-        Engine { mesh, profile, charging, clock: vec![0.0; p], book: PhaseBook::new(p), lanes: 1 }
+        Engine {
+            mesh,
+            profile,
+            charging,
+            clock: vec![0.0; p],
+            book: PhaseBook::new(p),
+            lanes: 1,
+            algo: AlgoPolicy::Auto,
+        }
     }
 
     /// Use up to `lanes` OS threads for compute phases.
     pub fn with_lanes(mut self, lanes: usize) -> Engine {
         self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Override the collective-algorithm policy (see [`Engine::algo`]).
+    pub fn with_algo(mut self, algo: AlgoPolicy) -> Engine {
+        self.algo = algo;
         self
     }
 
@@ -168,12 +180,15 @@ impl Engine {
 
     /// Team-scoped Allreduce. `buf(state)` exposes each rank's contribution
     /// buffer; all buffers in a team must have equal length. After the call
-    /// every team member holds the reduced value. Reduction order is linear
-    /// in team order — bitwise deterministic.
+    /// every team member holds the reduced value. Reduction order is the
+    /// canonical linear team order ([`collectives::canonical_reduce`]) —
+    /// bitwise deterministic regardless of the algorithm policy.
     ///
     /// Charging: every member first *waits* until the slowest team member
-    /// arrives (booked as sync-skew wait, §6.5), then pays the rank-aware
-    /// Hockney time for the payload.
+    /// arrives (booked as sync-skew wait, §6.5), then pays the per-rank
+    /// time of the collective algorithm resolved by [`Engine::algo`] for
+    /// this `(team size, payload)` — together with that algorithm's
+    /// message and word counts in the phase book.
     pub fn allreduce<S>(
         &mut self,
         phase: Phase,
@@ -198,36 +213,38 @@ impl Engine {
     ) {
         let q = team.len();
         let words = buf(&mut states[team[0]]).len();
-        // Reduce linearly in team order.
-        let mut acc = vec![0.0f64; words];
-        for &member in team {
-            let b = buf(&mut states[member]);
-            assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
-            for (a, x) in acc.iter_mut().zip(b.iter()) {
-                *a += *x;
-            }
-        }
-        if op == Reduce::Mean {
-            let inv = 1.0 / q as f64;
-            for a in acc.iter_mut() {
-                *a *= inv;
-            }
-        }
+        // Reduce through the collectives layer's one canonical kernel
+        // (linear team order — the determinism contract: algorithm choice
+        // changes charged accounting, never values). Contributions are
+        // snapshotted because the closure API hands out one `&mut` buffer
+        // at a time; this is simulator bookkeeping, not charged traffic.
+        let contribs: Vec<Vec<f64>> = team
+            .iter()
+            .map(|&member| {
+                let b = buf(&mut states[member]);
+                assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
+                b.to_vec()
+            })
+            .collect();
+        let slices: Vec<&[f64]> = contribs.iter().map(|c| c.as_slice()).collect();
+        let acc = collectives::canonical_reduce(&slices, op);
         // Broadcast result.
         for &member in team {
             buf(&mut states[member]).copy_from_slice(&acc);
         }
-        // Charge simulated time: barrier to slowest, then Hockney transfer.
+        // Charge simulated time: barrier to slowest, then the selected
+        // algorithm's per-rank transfer time and books.
+        let (_algo, cost) = collectives::charge(&self.profile, self.algo, q, words);
         let t_arrive = team.iter().map(|&m| self.clock[m]).fold(0.0, f64::max);
-        let dur = hockney::allreduce_time(&self.profile, q, words);
+        let dur = cost.time;
         for &member in team {
             let wait = t_arrive - self.clock[member];
             self.book.charge(phase, member, wait + dur);
             self.book.charge_wait(phase, member, wait);
             self.clock[member] = t_arrive + dur;
             if q > 1 {
-                self.book.words[member] += words as f64;
-                self.book.messages[member] += hockney::allreduce_messages(q);
+                self.book.words[member] += cost.words;
+                self.book.messages[member] += cost.messages;
             }
         }
     }
@@ -372,10 +389,51 @@ mod tests {
 
     #[test]
     fn words_and_messages_accounted() {
+        // Default policy is Auto: the books carry the selected algorithm's
+        // counts (recursive doubling for this tiny payload — 2 steps of
+        // the full 100 words at q = 4).
         let mut e = engine(1, 4);
+        let (algo, cost) = collectives::charge(&e.profile, AlgoPolicy::Auto, 4, 100);
+        assert_eq!(algo, crate::collectives::Algorithm::RecursiveDoubling);
+        let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![0.0; 100] }).collect();
+        e.allreduce(Phase::FedAvgComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        assert_eq!(e.book.words[0], cost.words);
+        assert_eq!(e.book.messages[0], cost.messages);
+        assert_eq!(e.book.words[0], 200.0); // 2 steps × 100 words
+        assert_eq!(e.book.messages[0], 2.0); // ⌈log₂ 4⌉
+    }
+
+    #[test]
+    fn pinned_linear_reproduces_seed_books() {
+        // Fixed(Linear) is the seed engine verbatim: hockney time,
+        // 2⌈log₂q⌉ messages, W words.
+        use crate::collectives::Algorithm;
+        use crate::costmodel::hockney;
+        let mut e = engine(1, 4).with_algo(AlgoPolicy::Fixed(Algorithm::Linear));
         let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![0.0; 100] }).collect();
         e.allreduce(Phase::FedAvgComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
         assert_eq!(e.book.words[0], 100.0);
         assert_eq!(e.book.messages[0], 4.0); // 2·log2(4)
+        assert!((e.clock[0] - hockney::allreduce_time(&e.profile, 4, 100)).abs() < 1e-18);
+    }
+
+    #[test]
+    fn algorithm_policy_changes_charges_not_values() {
+        use crate::collectives::Algorithm;
+        let run = |policy: AlgoPolicy| {
+            let mut e = engine(2, 4).with_algo(policy);
+            let mut states: Vec<St> =
+                (0..8).map(|r| St { buf: vec![(r as f64).sin() * 1e3; 512] }).collect();
+            e.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| {
+                &mut s.buf
+            });
+            (states.into_iter().map(|s| s.buf).collect::<Vec<_>>(), e.sim_wall())
+        };
+        let (vals_lin, t_lin) = run(AlgoPolicy::Fixed(Algorithm::Linear));
+        for algo in Algorithm::physical() {
+            let (vals, t) = run(AlgoPolicy::Fixed(algo));
+            assert_eq!(vals, vals_lin, "{} changed reduced values", algo.name());
+            assert!((t - t_lin).abs() > 1e-15, "{} charged exactly like linear", algo.name());
+        }
     }
 }

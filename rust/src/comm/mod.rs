@@ -11,16 +11,21 @@
 //! * **Charging** — each rank carries a simulated clock. Compute advances
 //!   it either by *measured* wall time of that rank's real work or by the
 //!   *modeled* cost (`flops·γ_flop + bytes·γ(W)`, the cache-aware §6.5
-//!   form). Collectives advance it by the rank-aware Hockney time from the
-//!   calibration profile, after an implicit wait-for-slowest barrier — this
-//!   is exactly how the paper's sync-skew term arises, and the wait
+//!   form). Collectives advance it by the per-algorithm Hockney time the
+//!   [`collectives`](crate::collectives) layer resolves from the rank-aware
+//!   calibration profile (auto-selected per team size and payload, or
+//!   pinned via [`AlgoPolicy`]), after an implicit wait-for-slowest barrier
+//!   — this is exactly how the paper's sync-skew term arises, and the wait
 //!   component is booked separately so Table 10's decomposition can be
 //!   reproduced.
 //!
 //! Timing claims at p ≫ cores are thus *charged* from the paper's own
 //! measured machine profile while the algorithm does its real math on real
-//! partitions (see DESIGN.md §2).
+//! partitions (see DESIGN.md §2). Reduced values never depend on the
+//! collective algorithm: every algorithm reduces in the canonical linear
+//! team order, so trajectories are bit-identical across policies.
 
 pub mod engine;
 
+pub use crate::collectives::{AlgoPolicy, Algorithm};
 pub use engine::{Charging, Cost, Engine, Reduce, Scope};

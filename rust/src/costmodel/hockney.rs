@@ -4,11 +4,30 @@
 //! `T = 2⌈log₂ q⌉·α + W·w·β`, the bandwidth-optimal reduce-scatter +
 //! all-gather bound of Thakur et al. / Rabenseifner ([33, 27] in the
 //! paper). α and β are supplied rank-aware by a [`CalibProfile`].
+//!
+//! This fixed formula is the paper's *bound*, not a schedule: the
+//! `2⌈log₂q⌉` doubling count is just one algorithm's message count, and
+//! the `W·w·β` bandwidth term is unattainable for `q > 2` (reduce-scatter
+//! + allgather moves `2W(q−1)/q` words per rank). The per-algorithm step
+//! counts and time formulas — recursive doubling, ring, Rabenseifner —
+//! live in [`crate::collectives`]; this module remains the idealized
+//! `Linear` oracle's charge and the closed-form Eq. 4–6 substrate.
 
 use super::calib::CalibProfile;
 use crate::WORD_BYTES;
 
 /// Latency message count of one Allreduce over `q` ranks: `2⌈log₂ q⌉`.
+///
+/// Edge cases, by definition rather than accident:
+///
+/// * `q = 1` — a singleton team has no partner and sends **0** messages
+///   (not `2⌈log₂1⌉ = 0` by luck of the formula: the branch is explicit
+///   so the intent survives refactors).
+/// * non-powers-of-two round the doubling count **up**: `q = 9` costs
+///   `2·⌈log₂9⌉ = 8` messages, same as `q = 16`. This is the
+///   power-of-two-core schedule's count; the per-algorithm fold
+///   accounting (two extra phases, [`crate::collectives::algos`])
+///   refines it per schedule.
 pub fn allreduce_messages(q: usize) -> f64 {
     assert!(q >= 1);
     if q == 1 {
@@ -48,6 +67,49 @@ mod tests {
         assert_eq!(allreduce_messages(2), 2.0);
         assert_eq!(allreduce_messages(8), 6.0);
         assert_eq!(allreduce_messages(9), 8.0); // ceil(log2 9) = 4
+    }
+
+    #[test]
+    fn non_power_of_two_rounds_up_to_next_power() {
+        // The doubling count treats q as its power-of-two ceiling …
+        for (q, pow2) in [(3usize, 4usize), (5, 8), (9, 16), (1000, 1024)] {
+            assert_eq!(allreduce_messages(q), allreduce_messages(pow2), "q={q}");
+        }
+        // … and is monotone non-decreasing in q.
+        let mut prev = 0.0;
+        for q in 1..200 {
+            let m = allreduce_messages(q);
+            assert!(m >= prev, "q={q}");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn q1_edges_are_explicitly_free() {
+        // Singleton team: no messages, no time, at any payload.
+        assert_eq!(allreduce_messages(1), 0.0);
+        let p = CalibProfile::perlmutter();
+        assert_eq!(allreduce_time(&p, 1, 0), 0.0);
+        assert_eq!(allreduce_time_flat(1e-6, 1e-9, 1, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn doubling_count_matches_collectives_log_schedules() {
+        // The fixed 2⌈log₂q⌉ count is exactly the Linear oracle's and —
+        // for powers of two, where no fold applies — Rabenseifner's.
+        use crate::collectives::Algorithm;
+        let p = CalibProfile::perlmutter();
+        for q in [2usize, 4, 8, 64, 1024] {
+            let lin = Algorithm::Linear.as_algo().cost(&p, q, 100);
+            let rab = Algorithm::Rabenseifner.as_algo().cost(&p, q, 100);
+            assert_eq!(lin.messages, allreduce_messages(q), "q={q}");
+            assert_eq!(rab.messages, allreduce_messages(q), "q={q}");
+        }
+        // Non-powers-of-two: the schedules' fold adds two phases on top.
+        for q in [3usize, 9, 96] {
+            let rab = Algorithm::Rabenseifner.as_algo().cost(&p, q, 100);
+            assert_eq!(rab.messages, allreduce_messages(q) + 2.0, "q={q}");
+        }
     }
 
     #[test]

@@ -5,16 +5,26 @@
 //! * [`calib`] — machine calibration profiles: the paper's measured
 //!   Perlmutter Table 7 (rank-aware α(q)/β(q) with the intra/inter-node
 //!   step, cache-tiered γ(W)) plus a local-measurement path.
-//! * [`hockney`] — the two-term Allreduce time `2⌈log₂q⌉α + Wβ`.
+//! * [`hockney`] — the two-term Allreduce time `2⌈log₂q⌉α + Wβ`, the
+//!   paper's fixed bandwidth-optimal *bound*. Per-algorithm schedules
+//!   (recursive doubling / ring / Rabenseifner) and their auto-selection
+//!   live in [`crate::collectives`]; every model below accepts an
+//!   [`AlgoPolicy`](crate::collectives::AlgoPolicy) to price collectives
+//!   the way the engine actually charges them.
 //! * [`model`] — the closed-form per-epoch runtime `T(p_r,p_c,s,b,τ)`
-//!   (Eq. 4) and its per-sample Table 3 decomposition.
+//!   (Eq. 4) and its per-sample Table 3 decomposition; `eval_algo` is the
+//!   collective-algorithm-aware variant.
 //! * [`optima`] — closed-form `s*` (Eq. 5), `b*` (Eq. 6), the fixed-point
-//!   joint optimum, and the bandwidth balance condition.
-//! * [`topology`] — the parameter-free mesh rule (Eq. 7).
-//! * [`regimes`] — the Table 5 operating-regime classifier.
+//!   joint optimum, and the bandwidth balance condition; `sweep_s_algo` /
+//!   `joint_optimum_algo` are the algorithm-aware grid argmins.
+//! * [`topology`] — the parameter-free mesh rule (Eq. 7) and the
+//!   algorithm-aware `mesh_rule_costed` factorization argmin.
+//! * [`regimes`] — the Table 5 operating-regime classifier
+//!   (`classify_algo` for a chosen collective policy).
 //! * [`predictor`] — the refined per-iteration predictor used for the
 //!   partitioner/mesh ranking study (Fig. 4): cache-aware γ(W), κ
-//!   multiplier, sync-skew, and the per-call `max(flop, c·n_local)` floor.
+//!   multiplier, sync-skew, the per-call `max(flop, c·n_local)` floor,
+//!   and policy-priced communication terms.
 
 pub mod calib;
 pub mod hockney;

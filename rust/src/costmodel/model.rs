@@ -12,6 +12,7 @@
 //! the §6.5 corrections lives in [`super::predictor`].
 
 use super::calib::CalibProfile;
+use crate::collectives::{self, AlgoPolicy};
 use crate::mesh::Mesh;
 use crate::WORD_BYTES;
 
@@ -161,6 +162,68 @@ pub fn eval(cfg: &HybridConfig, data: &DataShape, profile: &CalibProfile) -> Mod
     ModelBreakdown { compute, latency, gram_bw, sync_bw }
 }
 
+/// Evaluate Eq. (4) under an explicit **collective-algorithm policy**:
+/// instead of the fixed `2⌈log₂q⌉α + Wwβ` bound, each of the epoch's
+/// Allreduces is priced by the algorithm the policy resolves for its
+/// `(team size, payload)`. `Fixed(Linear)` recovers [`eval`] exactly (up
+/// to the one-word rounding of the `n/p_c` shard) on power-of-two meshes.
+///
+/// Per epoch there are `m/(sb)` row Allreduces of the
+/// `s(s−1)b²/2`-word Gram payload across `p_c` ranks and `m/(sbτ)` column
+/// Allreduces of the `⌈n/p_c⌉`-word shard across `p_r` ranks — the same
+/// call counts Eq. (4) amortizes. Each call's charged time is split into
+/// its latency part (`messages·α(q)`, reported in
+/// [`ModelBreakdown::latency`]) and its bandwidth remainder (reported in
+/// `gram_bw`/`sync_bw`), so the regime classifier and optima sweeps work
+/// unchanged on the algorithm-aware breakdown.
+///
+/// Note: the row payload here is Eq. (4)'s **amortized Gram message**
+/// (`s(s−1)b²/2`), which keeps the `Fixed(Linear)` ↔ [`eval`] identity;
+/// the engine's actual row buffer is the slightly larger
+/// `sb + sb(sb+1)/2` ([`crate::experiments::table4::bundle_payloads`]),
+/// so near a selector crossover `Auto` here may price a different
+/// algorithm than the engine books. Use the engine's phase book (or the
+/// [`predictor`](super::predictor), which prices the real buffer) when
+/// engine-exact charges matter.
+pub fn eval_algo(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+) -> ModelBreakdown {
+    let m = data.m as f64;
+    let p = cfg.mesh.p() as f64;
+    let (s, b, tau) = (cfg.s as f64, cfg.b as f64, cfg.tau as f64);
+    let (q_row, q_col) = (cfg.mesh.p_c, cfg.mesh.p_r);
+
+    let compute = (m / p) * (6.0 * data.zbar + 2.0 * s * b) * profile.gamma_flop;
+
+    // Row Allreduce: the s(s−1)b²/2-word Gram message (Eq. 4's payload;
+    // zero at s = 1, where only the latency of reducing v remains).
+    let row_calls = m / (s * b);
+    let w_row = cfg.s * (cfg.s - 1) * cfg.b * cfg.b / 2;
+    let (mut latency, mut gram_bw) = (0.0, 0.0);
+    if q_row > 1 {
+        let (_, c) = collectives::charge(profile, policy, q_row, w_row);
+        let lat = c.messages * profile.alpha(q_row);
+        latency += row_calls * lat;
+        gram_bw = row_calls * (c.time - lat);
+    }
+
+    // Column Allreduce: the ⌈n/p_c⌉-word weight shard every τ bundles.
+    let col_calls = m / (s * b * tau);
+    let mut sync_bw = 0.0;
+    if q_col > 1 {
+        let w_col = data.n.div_ceil(q_row);
+        let (_, c) = collectives::charge(profile, policy, q_col, w_col);
+        let lat = c.messages * profile.alpha(q_col);
+        latency += col_calls * lat;
+        sync_bw = col_calls * (c.time - lat);
+    }
+
+    ModelBreakdown { compute, latency, gram_bw, sync_bw }
+}
+
 /// Bandwidth balance condition of §6.3: `(s−1)·s·b²·τ·p_c ≈ 2n`.
 /// Returns the ratio LHS/RHS — `> 1` means Gram-BW-dominated (shrink `s`
 /// or `b`), `< 1` means sync-BW-dominated (grow `τ` or `p_c`).
@@ -239,6 +302,67 @@ mod tests {
         let want_lat = m * 2.0 * alpha * (p as f64).log2() / (s * b);
         assert!((got.latency - want_lat).abs() < want_lat * 1e-9);
         assert_eq!(got.sync_bw, 0.0);
+    }
+
+    #[test]
+    fn eval_algo_linear_matches_eval_on_pow2_meshes() {
+        // Pinning the Linear oracle must recover Eq. (4) term-for-term
+        // (the ⌈n/p_c⌉ shard rounding is the only slack).
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        for cfg in [
+            HybridConfig::new(Mesh::new(4, 64), 4, 32, 10),
+            HybridConfig::new(Mesh::new(8, 32), 2, 16, 4),
+            HybridConfig::new(Mesh::new(1, 256), 8, 32, 100),
+            HybridConfig::new(Mesh::new(256, 1), 1, 32, 10),
+        ] {
+            let want = eval(&cfg, &data, &prof);
+            let got = eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(Algorithm::Linear));
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-4 * (1.0 + a.abs() + b.abs());
+            assert!(close(got.compute, want.compute), "{cfg:?} compute");
+            assert!(close(got.latency, want.latency), "{cfg:?} latency");
+            assert!(close(got.gram_bw, want.gram_bw), "{cfg:?} gram");
+            assert!(close(got.sync_bw, want.sync_bw), "{cfg:?} sync");
+        }
+    }
+
+    #[test]
+    fn auto_policy_never_beats_the_linear_bound_on_bw_terms() {
+        // Linear's Wwβ bandwidth is the unattainable lower envelope; the
+        // auto-selected physical schedule pays at least it, and strictly
+        // less than the worst pinned algorithm.
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let lin =
+            eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(Algorithm::Linear)).total();
+        let auto = eval_algo(&cfg, &data, &prof, AlgoPolicy::Auto).total();
+        assert!(auto >= lin, "auto {auto} beat the idealized bound {lin}");
+        for a in Algorithm::physical() {
+            let pinned = eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(a)).total();
+            assert!(
+                auto <= pinned * (1.0 + 1e-12),
+                "auto {auto} worse than pinned {} {pinned}",
+                a.name()
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm_choice_moves_the_sync_term() {
+        // FedAvg's full-shard column Allreduce is bandwidth-dominated:
+        // ring charges it less than recursive doubling.
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::fedavg_corner(256, 32, 10);
+        let ring =
+            eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(Algorithm::RingAllreduce));
+        let rd =
+            eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(Algorithm::RecursiveDoubling));
+        assert!(ring.sync_bw < rd.sync_bw, "ring {} vs rd {}", ring.sync_bw, rd.sync_bw);
     }
 
     #[test]

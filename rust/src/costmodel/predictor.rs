@@ -21,8 +21,8 @@
 //! its validation target is the engine's measured per-iteration time.
 
 use super::calib::CalibProfile;
-use super::hockney;
 use super::model::{DataShape, HybridConfig};
+use crate::collectives::{self, AlgoPolicy};
 use crate::WORD_BYTES;
 
 /// Shape of a concrete partition, extracted from real partition statistics.
@@ -59,11 +59,20 @@ pub struct PredictorKnobs {
     /// Bytes streamed per stored nonzero in CSR traversal (8-byte value +
     /// 4-byte index).
     pub bytes_per_nnz: f64,
+    /// Collective-algorithm policy the communication terms are priced
+    /// under — `Auto` mirrors the engine's default selection, `Fixed(_)`
+    /// prices a pinned algorithm (e.g. for per-algorithm sweeps).
+    pub algo: AlgoPolicy,
 }
 
 impl Default for PredictorKnobs {
     fn default() -> Self {
-        PredictorKnobs { phi: 12.0, syrkd_floor_s_per_col: 0.0, bytes_per_nnz: 12.0 }
+        PredictorKnobs {
+            phi: 12.0,
+            syrkd_floor_s_per_col: 0.0,
+            bytes_per_nnz: 12.0,
+            algo: AlgoPolicy::Auto,
+        }
     }
 }
 
@@ -130,13 +139,15 @@ pub fn predict(
 
     // --- communication ---------------------------------------------------
     // Row Allreduce per bundle: partial products v (s·b words) + lower-
-    // triangular Gram (sb(sb+1)/2 words), across the p_c-rank row team.
+    // triangular Gram (sb(sb+1)/2 words), across the p_c-rank row team,
+    // priced by the policy-selected collective algorithm (the same
+    // selection the engine charges).
     let sb = (cfg.s * cfg.b) as f64;
     let row_words = (sb + sb * (sb + 1.0) / 2.0) as usize;
-    let row_t = hockney::allreduce_time(profile, cfg.mesh.p_c, row_words) / s;
+    let row_t = collectives::charge(profile, knobs.algo, cfg.mesh.p_c, row_words).1.time / s;
     // Column Allreduce per round: the n/p_c weight shard across p_r ranks.
     let col_words = part.n_local_mean as usize;
-    let col_t = hockney::allreduce_time(profile, cfg.mesh.p_r, col_words) / tau;
+    let col_t = collectives::charge(profile, knobs.algo, cfg.mesh.p_r, col_words).1.time / tau;
 
     PredictedIter {
         gram: t.gram,
@@ -321,6 +332,45 @@ mod tests {
         let t_spill = predict(&cfg, &data, &spill, &prof(), &knobs).total();
         let t_tight = predict(&cfg, &data, &tight, &prof(), &knobs).total();
         assert!(t_spill > t_tight * 1.1, "spill {t_spill} vs tight {t_tight}");
+    }
+
+    #[test]
+    fn pinned_linear_reproduces_hockney_comm_terms() {
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        use crate::costmodel::hockney;
+        let data = url_shape();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let exact = data.n as f64 / 64.0;
+        let shape = PartitionShape { kappa: 1.0, n_local_mean: exact, n_local_max: exact };
+        let knobs =
+            PredictorKnobs { algo: AlgoPolicy::Fixed(Algorithm::Linear), ..Default::default() };
+        let pred = predict(&cfg, &data, &shape, &prof(), &knobs);
+        let sb = 128.0;
+        let row_words = (sb + sb * (sb + 1.0) / 2.0) as usize;
+        let want_row = hockney::allreduce_time(&prof(), 64, row_words) / 4.0;
+        assert!((pred.sstep_comm - want_row).abs() < want_row * 1e-12);
+        let want_col = hockney::allreduce_time(&prof(), 4, exact as usize) / 10.0;
+        assert!((pred.fedavg_comm - want_col).abs() < want_col * 1e-12);
+    }
+
+    #[test]
+    fn algorithm_policy_moves_predicted_comm() {
+        // The full-shard column Allreduce is bandwidth-dominated: pricing
+        // it at ring beats recursive doubling, and Auto matches the best.
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let data = url_shape();
+        let cfg = HybridConfig::new(Mesh::new(64, 4), 2, 32, 10);
+        let exact = data.n as f64 / 4.0;
+        let shape = PartitionShape { kappa: 1.0, n_local_mean: exact, n_local_max: exact };
+        let with = |algo: AlgoPolicy| {
+            predict(&cfg, &data, &shape, &prof(), &PredictorKnobs { algo, ..Default::default() })
+                .fedavg_comm
+        };
+        let ring = with(AlgoPolicy::Fixed(Algorithm::RingAllreduce));
+        let rd = with(AlgoPolicy::Fixed(Algorithm::RecursiveDoubling));
+        let auto = with(AlgoPolicy::Auto);
+        assert!(ring < rd, "ring {ring} vs rd {rd}");
+        assert!(auto <= ring * (1.0 + 1e-12), "auto {auto} vs ring {ring}");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use super::calib::CalibProfile;
 use super::model::{self, DataShape, HybridConfig};
+use crate::collectives::AlgoPolicy;
 
 /// The four operating regimes of Table 5.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -55,7 +56,25 @@ impl Regime {
 /// When a bandwidth term dominates, the balance condition decides Gram vs
 /// sync (they are the two sides of `(s−1)sb²τp_c ⋛ 2n`).
 pub fn classify(cfg: &HybridConfig, data: &DataShape, profile: &CalibProfile) -> Regime {
-    let bd = model::eval(cfg, data, profile);
+    dominant_to_regime(model::eval(cfg, data, profile))
+}
+
+/// Classify under an explicit collective-algorithm policy: the dominant
+/// term of [`model::eval_algo`]. The algorithm switch can move a
+/// configuration across the latency/bandwidth boundary — e.g. a tiny-
+/// payload, many-rank collective priced at recursive doubling (half the
+/// doubling-bound messages) leaves the latency-bound regime earlier than
+/// the fixed bound predicts.
+pub fn classify_algo(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+) -> Regime {
+    dominant_to_regime(model::eval_algo(cfg, data, profile, policy))
+}
+
+fn dominant_to_regime(bd: model::ModelBreakdown) -> Regime {
     match bd.dominant().0 {
         "compute" => Regime::ComputeBound,
         "latency" => Regime::LatencyBound,
@@ -122,6 +141,40 @@ mod tests {
         let data = DataShape { m: 100_000, n: 50_000_000, zbar: 10.0 };
         let cfg = HybridConfig::new(Mesh::new(64, 2), 2, 4, 2);
         assert_eq!(classify(&cfg, &data, &prof()), Regime::SyncBwBound);
+    }
+
+    #[test]
+    fn classify_algo_linear_matches_classify() {
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let pol = AlgoPolicy::Fixed(Algorithm::Linear);
+        let cases = [
+            (DataShape { m: 400_000, n: 2_000, zbar: 2_000.0 }, Mesh::new(2, 2), 2, 32, 10),
+            (DataShape { m: 100_000, n: 1_000, zbar: 5.0 }, Mesh::new(2, 1024), 1, 1, 1),
+            (DataShape { m: 100_000, n: 50_000, zbar: 20.0 }, Mesh::new(1, 64), 32, 512, 100),
+            (DataShape { m: 100_000, n: 50_000_000, zbar: 10.0 }, Mesh::new(64, 2), 2, 4, 2),
+        ];
+        for (data, mesh, s, b, tau) in cases {
+            let cfg = HybridConfig::new(mesh, s, b, tau);
+            assert_eq!(
+                classify_algo(&cfg, &data, &prof(), pol),
+                classify(&cfg, &data, &prof()),
+                "{mesh:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_policy_can_keep_latency_bound_configs_classified() {
+        // Tiny payloads at many ranks stay latency-bound under Auto (the
+        // recursive-doubling pick halves the message count but latency
+        // still dominates by orders of magnitude).
+        use crate::collectives::AlgoPolicy;
+        let data = DataShape { m: 100_000, n: 1_000, zbar: 5.0 };
+        let cfg = HybridConfig::new(Mesh::new(2, 1024), 1, 1, 1);
+        assert_eq!(
+            classify_algo(&cfg, &data, &prof(), AlgoPolicy::Auto),
+            Regime::LatencyBound
+        );
     }
 
     #[test]

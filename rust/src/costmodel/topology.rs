@@ -10,6 +10,9 @@
 //! `p_c = R`. Only two machine constants — `R` and `L_cap` — are needed; no
 //! α-β-γ calibration (paper §6.3).
 
+use super::calib::CalibProfile;
+use super::model::{eval_algo, DataShape, HybridConfig};
+use crate::collectives::AlgoPolicy;
 use crate::mesh::Mesh;
 use crate::WORD_BYTES;
 
@@ -29,6 +32,43 @@ pub fn mesh_rule(n: usize, p: usize, ranks_per_node: usize, l_cap_bytes: usize) 
 /// On the paper's LIBSVM suite it never binds (`n·w ≤ R·L_cap = 64 MB`).
 pub fn cache_term_binding(n: usize, p: usize, ranks_per_node: usize, l_cap_bytes: usize) -> bool {
     (n * WORD_BYTES).div_ceil(l_cap_bytes) > ranks_per_node.min(p)
+}
+
+/// Collective-algorithm-aware mesh selection: the Eq. (4) argmin over all
+/// factorizations `p_r · p_c = p`, priced under `policy`.
+///
+/// Eq. (7) is parameter-free because under the *fixed* Hockney bound the
+/// `n/p_c` sync payload shrinks monotonically in `p_c` up to the node
+/// boundary kink. Once the collective algorithm switches with payload
+/// (ring for the huge FedAvg shard, recursive doubling for the small Gram
+/// message), the crossover moves with it — this rule re-derives the best
+/// mesh from the algorithm-aware model instead of the two machine
+/// constants. `s` is clamped to 1 at the FedAvg corner (`p_c = 1`), `τ`
+/// raised to `s` where needed, matching the experiment drivers.
+pub fn mesh_rule_costed(
+    data: &DataShape,
+    p: usize,
+    s: usize,
+    b: usize,
+    tau: usize,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+) -> Mesh {
+    assert!(p >= 1);
+    Mesh::factorizations(p)
+        .into_iter()
+        .min_by(|a, b_mesh| {
+            let ta = eval_algo(&costed_cfg(*a, s, b, tau), data, profile, policy).total();
+            let tb = eval_algo(&costed_cfg(*b_mesh, s, b, tau), data, profile, policy).total();
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .expect("factorizations are nonempty")
+}
+
+/// The sweep configuration at one mesh (s clamped at the FedAvg corner).
+fn costed_cfg(mesh: Mesh, s: usize, b: usize, tau: usize) -> HybridConfig {
+    let s = if mesh.p_c == 1 { 1 } else { s };
+    HybridConfig::new(mesh, s, b, tau.max(s))
 }
 
 fn smallest_divisor_at_least(p: usize, target: usize) -> usize {
@@ -106,6 +146,37 @@ mod tests {
                 let m = mesh_rule(n, p, R, L_CAP);
                 assert_eq!(m.p(), p, "p={p} n={n} gave {m}");
             }
+        }
+    }
+
+    #[test]
+    fn costed_rule_returns_valid_factorizations() {
+        use crate::collectives::AlgoPolicy;
+        let prof = CalibProfile::perlmutter();
+        let data = DataShape { m: 100_000, n: 3_000_000, zbar: 100.0 };
+        for p in [1usize, 2, 6, 16, 96, 256] {
+            let m = mesh_rule_costed(&data, p, 4, 32, 10, &prof, AlgoPolicy::Auto);
+            assert_eq!(m.p(), p, "p={p} gave {m}");
+        }
+    }
+
+    #[test]
+    fn costed_rule_is_no_worse_than_eq7_under_same_pricing() {
+        use crate::collectives::AlgoPolicy;
+        let prof = CalibProfile::perlmutter();
+        // url-shaped: huge n, sparse.
+        let data = DataShape { m: 2_396_130, n: 3_231_961, zbar: 116.0 };
+        let p = 256;
+        for policy in [AlgoPolicy::Auto] {
+            let costed = mesh_rule_costed(&data, p, 4, 32, 10, &prof, policy);
+            let eq7 = mesh_rule(data.n, p, R, L_CAP);
+            let t = |mesh: Mesh| {
+                eval_algo(&costed_cfg(mesh, 4, 32, 10), &data, &prof, policy).total()
+            };
+            assert!(t(costed) <= t(eq7) * (1.0 + 1e-12), "{costed} vs {eq7}");
+            // And on the url shape the costed rule still wants a wide row
+            // team (the sync shard must shrink): p_c well above 1.
+            assert!(costed.p_c >= 16, "costed rule picked {costed}");
         }
     }
 

@@ -7,7 +7,7 @@
 
 use super::Dataset;
 use crate::sparse::Csr;
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::Write;
 use std::path::Path;
 

@@ -8,7 +8,9 @@
 
 use super::fixtures;
 use super::Effort;
-use crate::costmodel::{topology, HybridConfig};
+use crate::collectives::{self, AlgoPolicy, Algorithm};
+use crate::costmodel::model::DataShape;
+use crate::costmodel::{topology, CalibProfile, HybridConfig};
 use crate::data::DatasetSpec;
 use crate::mesh::Mesh;
 use crate::partition::Partitioner;
@@ -120,6 +122,100 @@ pub fn hybrid_cfg(mesh: Mesh) -> HybridConfig {
     }
 }
 
+/// Charged-Allreduce algorithm × mesh-aspect-ratio sweep at **paper
+/// scale** (pure cost-model arithmetic, no solver runs): for every
+/// factorization of each Table 4 row's `p`, the per-bundle communication
+/// time (row Allreduce + τ-amortized column Allreduce) under each pinned
+/// collective algorithm, plus the auto selector's per-collective picks.
+/// This is the sweep `cargo bench --bench table4_topology` renders and
+/// the `collective_sweep` example drills into.
+pub fn algo_sweep() -> Table {
+    let prof = CalibProfile::perlmutter();
+    let mut table = Table::new(&[
+        "dataset", "mesh", "W_row", "W_col", "linear us", "rd us", "ring us", "rab us",
+        "auto us", "auto picks (row/col)",
+    ]);
+    let mut out = fixtures::results(
+        "table4_algo_sweep",
+        &[
+            "dataset", "p_r", "p_c", "w_row", "w_col", "linear_us", "rd_us", "ring_us",
+            "rab_us", "auto_us", "auto_row", "auto_col",
+        ],
+    );
+
+    let specs: [(DatasetSpec, usize); 4] = [
+        (DatasetSpec::UrlLike, 256),
+        (DatasetSpec::SyntheticUniform, 128),
+        (DatasetSpec::News20Like, 64),
+        (DatasetSpec::Rcv1Like, 16),
+    ];
+    for (spec, p) in specs {
+        let profile = spec.profile();
+        let data = DataShape {
+            m: profile.paper_m,
+            n: profile.paper_n,
+            zbar: profile.paper_zbar as f64,
+        };
+        for mesh in Mesh::factorizations(p) {
+            let cfg = hybrid_cfg(mesh);
+            let (w_row, w_col) = bundle_payloads(&cfg, &data);
+            let per_bundle = |policy: AlgoPolicy| -> f64 {
+                let row = collectives::charge(&prof, policy, mesh.p_c, w_row).1.time;
+                let col = collectives::charge(&prof, policy, mesh.p_r, w_col).1.time;
+                row + col / cfg.tau as f64
+            };
+            let us = |t: f64| format!("{:.2}", t * 1e6);
+            let lin = per_bundle(AlgoPolicy::Fixed(Algorithm::Linear));
+            let rd = per_bundle(AlgoPolicy::Fixed(Algorithm::RecursiveDoubling));
+            let ring = per_bundle(AlgoPolicy::Fixed(Algorithm::RingAllreduce));
+            let rab = per_bundle(AlgoPolicy::Fixed(Algorithm::Rabenseifner));
+            let auto = per_bundle(AlgoPolicy::Auto);
+            let pick = |q: usize, w: usize| collectives::charge(&prof, AlgoPolicy::Auto, q, w).0;
+            let row_pick =
+                if mesh.p_c > 1 { pick(mesh.p_c, w_row).name() } else { "-" };
+            let col_pick =
+                if mesh.p_r > 1 { pick(mesh.p_r, w_col).name() } else { "-" };
+            table.row(&[
+                profile.name.to_string(),
+                mesh.label(),
+                w_row.to_string(),
+                w_col.to_string(),
+                us(lin),
+                us(rd),
+                us(ring),
+                us(rab),
+                us(auto),
+                format!("{row_pick}/{col_pick}"),
+            ]);
+            let _ = out.append(&[
+                profile.name.to_string(),
+                mesh.p_r.to_string(),
+                mesh.p_c.to_string(),
+                w_row.to_string(),
+                w_col.to_string(),
+                us(lin),
+                us(rd),
+                us(ring),
+                us(rab),
+                us(auto),
+                row_pick.to_string(),
+                col_pick.to_string(),
+            ]);
+        }
+    }
+    table
+}
+
+/// The engine's per-bundle Allreduce payloads for a configuration: the
+/// row team reduces `[v (sb) | tril(G) (sb(sb+1)/2, s > 1 only)]`, the
+/// column team the `⌈n/p_c⌉`-word weight shard.
+pub fn bundle_payloads(cfg: &HybridConfig, data: &DataShape) -> (usize, usize) {
+    let sb = cfg.s * cfg.b;
+    let w_row = if cfg.s > 1 { sb + sb * (sb + 1) / 2 } else { sb };
+    let w_col = data.n.div_ceil(cfg.mesh.p_c);
+    (w_row, w_col)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,5 +233,28 @@ mod tests {
     fn full_driver() {
         let t = run(Effort::Quick);
         assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn algo_sweep_covers_every_factorization() {
+        // 9 meshes at p=256, 8 at 128, 7 at 64, 5 at 16 (pure arithmetic —
+        // no solver runs, safe at test scale).
+        let t = algo_sweep();
+        assert_eq!(t.len(), 9 + 8 + 7 + 5);
+    }
+
+    #[test]
+    fn bundle_payloads_match_engine_buffers() {
+        let data = DataShape { m: 1000, n: 3_231_961, zbar: 100.0 };
+        // s=4, b=32: v (128) + tril (128·129/2).
+        let cfg = hybrid_cfg(Mesh::new(4, 64));
+        let (w_row, w_col) = bundle_payloads(&cfg, &data);
+        assert_eq!(w_row, 128 + 128 * 129 / 2);
+        assert_eq!(w_col, 3_231_961usize.div_ceil(64));
+        // FedAvg corner: s=1 drops the Gram, shard is the full vector.
+        let corner = hybrid_cfg(Mesh::new(256, 1));
+        let (w_row1, w_col1) = bundle_payloads(&corner, &data);
+        assert_eq!(w_row1, 32);
+        assert_eq!(w_col1, 3_231_961);
     }
 }

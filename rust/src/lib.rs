@@ -20,6 +20,13 @@
 //! * **[`mesh`]** / **[`comm`]** — the 2D processor mesh and a
 //!   message-passing substrate with real-thread and deterministic
 //!   simulated-clock executors (the role Cray MPICH plays in the paper).
+//! * **[`collectives`]** — the pluggable collective-algorithm layer the
+//!   engine charges Allreduces through: recursive doubling, ring, and
+//!   Rabenseifner schedules with per-algorithm Hockney accounting, a
+//!   Hockney-costed auto-selector (the MPI tuning-table analogue), and
+//!   the `Linear` oracle preserving the seed engine's charging. Reduced
+//!   values are bit-identical across algorithms (canonical reduction
+//!   order); only charged time/message/word books change.
 //! * **[`costmodel`]** — the closed-form α-β-γ model (Eq. 4), the optima
 //!   `s*`/`b*` (Eq. 5/6), the topology rule (Eq. 7), the regime taxonomy
 //!   (Table 5) and every empirical refinement of §6.5 (cache-aware γ(W),
@@ -29,6 +36,7 @@
 //!   AOT-compiled JAX+Pallas artifacts (Python never runs at request time).
 //! * **[`experiments`]** — one reproduction driver per paper table/figure.
 
+pub mod collectives;
 pub mod comm;
 pub mod compute;
 pub mod costmodel;

@@ -6,6 +6,7 @@
 //! hybrid-sgd train      --dataset url --p 256 --mesh 8x32 --partitioner cyclic
 //!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
 //!                       [--bundles 200] [--target 0.5] [--backend xla|native]
+//!                       [--collective auto|linear|rd|ring|rabenseifner]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
 //! hybrid-sgd calibrate  [--quick]                  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
@@ -14,7 +15,7 @@
 //! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
 //! ```
 
-use hybrid_sgd::comm::Charging;
+use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging};
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::model::DataShape;
 use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, HybridConfig};
@@ -262,6 +263,18 @@ fn cmd_train(flags: &Flags) -> i32 {
             _ => Charging::Modeled,
         },
         profile: CalibProfile::perlmutter(),
+        algo: match flags.get("collective").map(|s| s.as_str()) {
+            None | Some("auto") => AlgoPolicy::Auto,
+            Some(name) => match Algorithm::from_name(name) {
+                Some(a) => AlgoPolicy::Fixed(a),
+                None => {
+                    eprintln!(
+                        "unknown --collective {name} (want auto|linear|rd|ring|rabenseifner)"
+                    );
+                    return 2;
+                }
+            },
+        },
         seed: get(flags, "seed", 0x5EEDu64),
     };
 

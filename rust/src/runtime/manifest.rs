@@ -6,7 +6,7 @@
 //! configuration to the compiled grid) or by smallest-padding match for
 //! the pad-friendly kernels (sigmoid, loss).
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

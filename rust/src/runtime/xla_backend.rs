@@ -5,205 +5,298 @@
 //! covered by the compiled variant grid fall back to the native backend
 //! (recorded in [`XlaBackend::fallbacks`]) — the experiment configurations
 //! are chosen inside the grid, so the hot path stays on XLA.
+//!
+//! The PJRT bindings come from the external `xla` crate, which the offline
+//! build cannot vendor; the real backend is therefore gated behind the
+//! `xla` cargo feature. Without it a stub with the identical API ships:
+//! `load` reports the missing feature and every caller falls back to the
+//! native backend (which all of them already handle — the artifacts may
+//! legitimately be absent too). Enable with `--features xla` after
+//! vendoring the `xla` crate.
 
-use super::manifest::{Artifact, Manifest};
-use crate::compute::{ComputeBackend, NativeBackend};
-use anyhow::{Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+pub use real::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaBackend;
 
-/// Pad value for loss margins: `log1p(exp(−1e30)) = 0`, so padded entries
-/// contribute nothing to the reduction.
-const LOSS_PAD: f64 = 1e30;
+#[cfg(feature = "xla")]
+mod real {
+    use crate::compute::{ComputeBackend, NativeBackend};
+    use crate::runtime::manifest::{Artifact, Manifest};
+    use crate::util::error::{Context, Error, Result};
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
 
-struct Inner {
-    client: xla::PjRtClient,
-    /// Executable cache keyed by artifact name.
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
+    /// Pad value for loss margins: `log1p(exp(−1e30)) = 0`, so padded
+    /// entries contribute nothing to the reduction.
+    const LOSS_PAD: f64 = 1e30;
 
-/// The XLA/PJRT compute backend.
-pub struct XlaBackend {
-    manifest: Manifest,
-    inner: Mutex<Inner>,
-    /// Calls that fell back to the native backend (shape outside the
-    /// compiled grid).
-    pub fallbacks: AtomicUsize,
-    /// Calls served by XLA executables.
-    pub served: AtomicUsize,
-    native: NativeBackend,
-}
-
-// SAFETY: the PJRT CPU client is internally synchronized and usable from
-// any thread; the raw-pointer wrappers in the `xla` crate simply lack the
-// marker impls. All access goes through the `Mutex<Inner>`, which also
-// serializes executions, so no concurrent aliasing of the underlying
-// C++ objects can occur.
-unsafe impl Send for XlaBackend {}
-unsafe impl Sync for XlaBackend {}
-
-impl XlaBackend {
-    /// Load the backend from an artifacts directory (see
-    /// [`super::artifacts_dir`]).
-    pub fn load<P: AsRef<Path>>(dir: P) -> Result<XlaBackend> {
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(XlaBackend {
-            manifest,
-            inner: Mutex::new(Inner { client, cache: RefCell::new(HashMap::new()) }),
-            fallbacks: AtomicUsize::new(0),
-            served: AtomicUsize::new(0),
-            native: NativeBackend,
-        })
+    struct Inner {
+        client: xla::PjRtClient,
+        /// Executable cache keyed by artifact name.
+        cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    /// Load from the default artifacts directory.
-    pub fn load_default() -> Result<XlaBackend> {
-        Self::load(super::artifacts_dir())
+    /// The XLA/PJRT compute backend.
+    pub struct XlaBackend {
+        manifest: Manifest,
+        inner: Mutex<Inner>,
+        /// Calls that fell back to the native backend (shape outside the
+        /// compiled grid).
+        pub fallbacks: AtomicUsize,
+        /// Calls served by XLA executables.
+        pub served: AtomicUsize,
+        native: NativeBackend,
     }
 
-    /// Artifact names available.
-    pub fn artifact_names(&self) -> Vec<String> {
-        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
-    }
+    // SAFETY: the PJRT CPU client is internally synchronized and usable
+    // from any thread; the raw-pointer wrappers in the `xla` crate simply
+    // lack the marker impls. All access goes through the `Mutex<Inner>`,
+    // which also serializes executions, so no concurrent aliasing of the
+    // underlying C++ objects can occur.
+    unsafe impl Send for XlaBackend {}
+    unsafe impl Sync for XlaBackend {}
 
-    /// Execute an artifact: raw f64 host slices (with dims) in, one raw
-    /// f64 output copied into `out`. No Literal intermediates — inputs go
-    /// through `buffer_from_host_buffer` and the (non-tuple) result comes
-    /// back via a single `copy_raw_to_host_sync` (§Perf: ~2× per call vs
-    /// the Literal round trip).
-    fn execute(
-        &self,
-        artifact: &Artifact,
-        args: &[(&[f64], &[usize])],
-        out: &mut [f64],
-    ) -> Result<()> {
-        let inner = self.inner.lock().expect("xla backend poisoned");
-        // Compile on first use.
-        if !inner.cache.borrow().contains_key(&artifact.name) {
-            let path_s = artifact
-                .path
-                .to_str()
-                .with_context(|| format!("non-utf8 path {:?}", artifact.path))?;
-            let proto = xla::HloModuleProto::from_text_file(path_s)
-                .with_context(|| format!("parse HLO text {}", artifact.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compile artifact {}", artifact.name))?;
-            inner.cache.borrow_mut().insert(artifact.name.clone(), exe);
+    impl XlaBackend {
+        /// Load the backend from an artifacts directory (see
+        /// [`crate::runtime::artifacts_dir`]).
+        pub fn load<P: AsRef<Path>>(dir: P) -> Result<XlaBackend> {
+            let manifest = Manifest::load(&dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::msg(format!("create PJRT CPU client: {e:?}")))?;
+            Ok(XlaBackend {
+                manifest,
+                inner: Mutex::new(Inner { client, cache: RefCell::new(HashMap::new()) }),
+                fallbacks: AtomicUsize::new(0),
+                served: AtomicUsize::new(0),
+                native: NativeBackend,
+            })
         }
-        let mut buffers = Vec::with_capacity(args.len());
-        for (data, dims) in args {
-            buffers.push(
-                inner
-                    .client
-                    .buffer_from_host_buffer::<f64>(data, dims, None)
-                    .with_context(|| format!("upload arg for {}", artifact.name))?,
-            );
+
+        /// Load from the default artifacts directory.
+        pub fn load_default() -> Result<XlaBackend> {
+            Self::load(crate::runtime::artifacts_dir())
         }
-        let cache = inner.cache.borrow();
-        let exe = cache.get(&artifact.name).expect("just inserted");
-        let result = exe
-            .execute_b::<xla::PjRtBuffer>(&buffers)
-            .with_context(|| format!("execute {}", artifact.name))?;
-        // CopyRawToHost is unimplemented in xla_extension 0.5.1's CPU
-        // plugin, so the (non-tuple) output comes back through one literal.
-        let lit = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("read back {}", artifact.name))?;
-        let vals = lit.to_vec::<f64>()?;
-        if vals.len() != out.len() {
-            anyhow::bail!("{}: output length {} != expected {}", artifact.name, vals.len(), out.len());
+
+        /// Artifact names available.
+        pub fn artifact_names(&self) -> Vec<String> {
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
         }
-        out.copy_from_slice(&vals);
-        self.served.fetch_add(1, Ordering::Relaxed);
-        Ok(())
-    }
 
-    fn native_fallback(&self) -> &NativeBackend {
-        self.fallbacks.fetch_add(1, Ordering::Relaxed);
-        &self.native
-    }
-}
-
-impl ComputeBackend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]) {
-        let m = v.len();
-        let Some(art) = self.manifest.find_padded("sigmoid", "m", m) else {
-            return self.native_fallback().sigmoid_residual(v, out);
-        };
-        let target = art.params["m"];
-        let mut padded = vec![0.0f64; target];
-        padded[..m].copy_from_slice(v);
-        let mut res = vec![0.0f64; target];
-        match self.execute(art, &[(&padded, &[target])], &mut res) {
-            Ok(()) => out.copy_from_slice(&res[..m]),
-            Err(_) => self.native_fallback().sigmoid_residual(v, out),
+        /// Execute an artifact: raw f64 host slices (with dims) in, one raw
+        /// f64 output copied into `out`. No Literal intermediates — inputs
+        /// go through `buffer_from_host_buffer` and the (non-tuple) result
+        /// comes back via a single `copy_raw_to_host_sync` (§Perf: ~2× per
+        /// call vs the Literal round trip).
+        fn execute(
+            &self,
+            artifact: &Artifact,
+            args: &[(&[f64], &[usize])],
+            out: &mut [f64],
+        ) -> Result<()> {
+            let xerr = |what: &str, e: &dyn std::fmt::Debug| {
+                Error::msg(format!("{what} {}: {e:?}", artifact.name))
+            };
+            let inner = self.inner.lock().expect("xla backend poisoned");
+            // Compile on first use.
+            if !inner.cache.borrow().contains_key(&artifact.name) {
+                let path_s = artifact
+                    .path
+                    .to_str()
+                    .with_context(|| format!("non-utf8 path {:?}", artifact.path))?;
+                let proto = xla::HloModuleProto::from_text_file(path_s)
+                    .map_err(|e| xerr("parse HLO text", &e))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    inner.client.compile(&comp).map_err(|e| xerr("compile artifact", &e))?;
+                inner.cache.borrow_mut().insert(artifact.name.clone(), exe);
+            }
+            let mut buffers = Vec::with_capacity(args.len());
+            for (data, dims) in args {
+                buffers.push(
+                    inner
+                        .client
+                        .buffer_from_host_buffer::<f64>(data, dims, None)
+                        .map_err(|e| xerr("upload arg for", &e))?,
+                );
+            }
+            let cache = inner.cache.borrow();
+            let exe = cache.get(&artifact.name).expect("just inserted");
+            let result = exe
+                .execute_b::<xla::PjRtBuffer>(&buffers)
+                .map_err(|e| xerr("execute", &e))?;
+            // CopyRawToHost is unimplemented in xla_extension 0.5.1's CPU
+            // plugin, so the (non-tuple) output comes back through one
+            // literal.
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| xerr("read back", &e))?;
+            let vals = lit.to_vec::<f64>().map_err(|e| xerr("to_vec", &e))?;
+            if vals.len() != out.len() {
+                crate::bail!(
+                    "{}: output length {} != expected {}",
+                    artifact.name,
+                    vals.len(),
+                    out.len()
+                );
+            }
+            out.copy_from_slice(&vals);
+            self.served.fetch_add(1, Ordering::Relaxed);
+            Ok(())
         }
-    }
 
-    fn sstep_correct(
-        &self,
-        s: usize,
-        b: usize,
-        g: &[f64],
-        v: &[f64],
-        eta_over_b: f64,
-        z: &mut [f64],
-    ) {
-        let q = s * b;
-        let art = match self.manifest.find_exact("sstep", &[("s", s), ("b", b)]) {
-            Some(a) => a,
-            None => return self.native_fallback().sstep_correct(s, b, g, v, eta_over_b, z),
-        };
-        let eta = [eta_over_b];
-        let args: [(&[f64], &[usize]); 3] =
-            [(g, &[q, q]), (v, &[q]), (&eta, &[])];
-        if self.execute(art, &args, z).is_err() {
-            self.native_fallback().sstep_correct(s, b, g, v, eta_over_b, z);
+        fn native_fallback(&self) -> &NativeBackend {
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            &self.native
         }
     }
 
-    fn dense_grad_step(&self, b: usize, n: usize, a_blk: &[f64], x: &mut [f64], eta: f64) {
-        let art = match self.manifest.find_exact("dense_grad", &[("b", b), ("n", n)]) {
-            Some(a) => a,
-            None => return self.native_fallback().dense_grad_step(b, n, a_blk, x, eta),
-        };
-        let eta_arr = [eta];
-        let mut out = vec![0.0f64; n];
-        let args: [(&[f64], &[usize]); 3] =
-            [(a_blk, &[b, n]), (&*x, &[n]), (&eta_arr, &[])];
-        match self.execute(art, &args, &mut out) {
-            Ok(()) => x.copy_from_slice(&out),
-            Err(_) => self.native_fallback().dense_grad_step(b, n, a_blk, x, eta),
+    impl ComputeBackend for XlaBackend {
+        fn name(&self) -> &'static str {
+            "xla"
         }
-    }
 
-    fn loss_sum(&self, margins: &[f64]) -> f64 {
-        let Some(art) = self.manifest.find_largest("loss", "m") else {
-            return self.native_fallback().loss_sum(margins);
-        };
-        let chunk = art.params["m"];
-        let mut total = 0.0;
-        let mut buf = vec![LOSS_PAD; chunk];
-        let mut res = [0.0f64; 1];
-        for piece in margins.chunks(chunk) {
-            buf[..piece.len()].copy_from_slice(piece);
-            buf[piece.len()..].fill(LOSS_PAD);
-            match self.execute(art, &[(&buf, &[chunk])], &mut res) {
-                Ok(()) => total += res[0],
-                Err(_) => return self.native_fallback().loss_sum(margins),
+        fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]) {
+            let m = v.len();
+            let Some(art) = self.manifest.find_padded("sigmoid", "m", m) else {
+                return self.native_fallback().sigmoid_residual(v, out);
+            };
+            let target = art.params["m"];
+            let mut padded = vec![0.0f64; target];
+            padded[..m].copy_from_slice(v);
+            let mut res = vec![0.0f64; target];
+            match self.execute(art, &[(&padded, &[target])], &mut res) {
+                Ok(()) => out.copy_from_slice(&res[..m]),
+                Err(_) => self.native_fallback().sigmoid_residual(v, out),
             }
         }
-        total
+
+        fn sstep_correct(
+            &self,
+            s: usize,
+            b: usize,
+            g: &[f64],
+            v: &[f64],
+            eta_over_b: f64,
+            z: &mut [f64],
+        ) {
+            let q = s * b;
+            let art = match self.manifest.find_exact("sstep", &[("s", s), ("b", b)]) {
+                Some(a) => a,
+                None => return self.native_fallback().sstep_correct(s, b, g, v, eta_over_b, z),
+            };
+            let eta = [eta_over_b];
+            let args: [(&[f64], &[usize]); 3] = [(g, &[q, q]), (v, &[q]), (&eta, &[])];
+            if self.execute(art, &args, z).is_err() {
+                self.native_fallback().sstep_correct(s, b, g, v, eta_over_b, z);
+            }
+        }
+
+        fn dense_grad_step(&self, b: usize, n: usize, a_blk: &[f64], x: &mut [f64], eta: f64) {
+            let art = match self.manifest.find_exact("dense_grad", &[("b", b), ("n", n)]) {
+                Some(a) => a,
+                None => return self.native_fallback().dense_grad_step(b, n, a_blk, x, eta),
+            };
+            let eta_arr = [eta];
+            let mut out = vec![0.0f64; n];
+            let args: [(&[f64], &[usize]); 3] = [(a_blk, &[b, n]), (&*x, &[n]), (&eta_arr, &[])];
+            match self.execute(art, &args, &mut out) {
+                Ok(()) => x.copy_from_slice(&out),
+                Err(_) => self.native_fallback().dense_grad_step(b, n, a_blk, x, eta),
+            }
+        }
+
+        fn loss_sum(&self, margins: &[f64]) -> f64 {
+            let Some(art) = self.manifest.find_largest("loss", "m") else {
+                return self.native_fallback().loss_sum(margins);
+            };
+            let chunk = art.params["m"];
+            let mut total = 0.0;
+            let mut buf = vec![LOSS_PAD; chunk];
+            let mut res = [0.0f64; 1];
+            for piece in margins.chunks(chunk) {
+                buf[..piece.len()].copy_from_slice(piece);
+                buf[piece.len()..].fill(LOSS_PAD);
+                match self.execute(art, &[(&buf, &[chunk])], &mut res) {
+                    Ok(()) => total += res[0],
+                    Err(_) => return self.native_fallback().loss_sum(margins),
+                }
+            }
+            total
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::compute::{ComputeBackend, NativeBackend};
+    use crate::util::error::Result;
+    use std::path::Path;
+    use std::sync::atomic::AtomicUsize;
+
+    /// API-compatible stand-in for the PJRT backend when the crate is
+    /// built without the `xla` feature. `load` always fails (callers
+    /// already handle missing artifacts by falling back to
+    /// [`NativeBackend`]); the `ComputeBackend` impl delegates to native
+    /// so the type still satisfies every call site.
+    pub struct XlaBackend {
+        /// Calls that fell back to the native backend.
+        pub fallbacks: AtomicUsize,
+        /// Calls served by XLA executables (always 0 in the stub).
+        pub served: AtomicUsize,
+        native: NativeBackend,
+    }
+
+    impl XlaBackend {
+        /// Always fails: the build carries no PJRT bindings.
+        pub fn load<P: AsRef<Path>>(_dir: P) -> Result<XlaBackend> {
+            crate::bail!(
+                "built without the `xla` feature — vendor the `xla` crate and \
+                 rebuild with `--features xla` to run AOT artifacts"
+            )
+        }
+
+        /// Load from the default artifacts directory (always fails).
+        pub fn load_default() -> Result<XlaBackend> {
+            Self::load(crate::runtime::artifacts_dir())
+        }
+
+        /// Artifact names available (none in the stub).
+        pub fn artifact_names(&self) -> Vec<String> {
+            Vec::new()
+        }
+    }
+
+    impl ComputeBackend for XlaBackend {
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
+
+        fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]) {
+            self.native.sigmoid_residual(v, out)
+        }
+
+        fn sstep_correct(
+            &self,
+            s: usize,
+            b: usize,
+            g: &[f64],
+            v: &[f64],
+            eta_over_b: f64,
+            z: &mut [f64],
+        ) {
+            self.native.sstep_correct(s, b, g, v, eta_over_b, z)
+        }
+
+        fn dense_grad_step(&self, b: usize, n: usize, a_blk: &[f64], x: &mut [f64], eta: f64) {
+            self.native.dense_grad_step(b, n, a_blk, x, eta)
+        }
+
+        fn loss_sum(&self, margins: &[f64]) -> f64 {
+            self.native.loss_sum(margins)
+        }
     }
 }

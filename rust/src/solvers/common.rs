@@ -1,5 +1,6 @@
 //! Shared solver plumbing: run options, traces, results.
 
+use crate::collectives::AlgoPolicy;
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
@@ -21,6 +22,9 @@ pub struct RunOpts {
     pub charging: Charging,
     /// Machine profile for collective charging.
     pub profile: CalibProfile,
+    /// Collective-algorithm policy (auto-selected by default; pin with
+    /// `Fixed(_)`). Changes charged time/books only, never trajectories.
+    pub algo: AlgoPolicy,
     /// Master seed (drives dataset-independent solver randomness; sampling
     /// itself is cyclic and deterministic, matching the paper §5).
     pub seed: u64,
@@ -36,6 +40,7 @@ impl Default for RunOpts {
             lanes: 1,
             charging: Charging::Modeled,
             profile: CalibProfile::perlmutter(),
+            algo: AlgoPolicy::Auto,
             seed: 0x5EED,
         }
     }

@@ -105,8 +105,9 @@ impl<'a> HybridSolver<'a> {
             })
             .collect();
 
-        let mut engine =
-            Engine::new(mesh, opts.profile.clone(), opts.charging).with_lanes(opts.lanes);
+        let mut engine = Engine::new(mesh, opts.profile.clone(), opts.charging)
+            .with_lanes(opts.lanes)
+            .with_algo(opts.algo);
 
         let backend = self.backend;
         let (s, b, eta) = (cfg.s, cfg.b, opts.eta);

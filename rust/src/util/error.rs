@@ -1,0 +1,136 @@
+//! Minimal error type with context chaining — an offline, dependency-free
+//! stand-in for the `anyhow` subset this crate uses (`Result`, `Context`
+//! on `Result`/`Option`, `bail!`). The build vendors no crates, so the
+//! I/O-facing modules (`data::libsvm`, `runtime::manifest`) chain their
+//! context through this instead.
+
+use std::fmt;
+
+/// A string-chained error: the innermost message plus the context frames
+/// wrapped around it, displayed outermost-first (`open manifest: read
+/// /x/manifest.tsv: No such file or directory`).
+#[derive(Debug)]
+pub struct Error {
+    /// Context frames, outermost last (pushed as the error propagates up).
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// New error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { frames: vec![msg.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, ctx: impl Into<String>) -> Error {
+        self.frames.push(ctx.into());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, frame) in self.frames.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{frame}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Result alias defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` with any displayable error,
+/// or `Option`, where `None` becomes an error of the context message).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e.to_string()).context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` shape).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use crate::bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("inner"))
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let e2 = fails().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn option_none_becomes_error() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert_eq!(Some(5u32).context("missing").unwrap(), 5);
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: std::result::Result<(), std::num::ParseIntError> = "x".parse::<usize>().map(|_| ());
+        let e = r.with_context(|| "parse x").unwrap_err();
+        assert!(e.to_string().starts_with("parse x: "));
+    }
+
+    #[test]
+    fn bail_formats_and_returns() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed (got 0)");
+    }
+}

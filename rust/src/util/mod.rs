@@ -1,10 +1,12 @@
 //! Small self-contained utilities: PRNG, samplers, summary statistics,
-//! table formatting, and a hand-rolled property-test harness.
+//! table formatting, error/context chaining, and a hand-rolled
+//! property-test harness.
 //!
 //! Everything here is written from scratch because the build is fully
-//! offline (no `rand`, `proptest`, or `serde` available); the implementations
-//! are deliberately simple, deterministic, and unit-tested.
+//! offline (no `rand`, `proptest`, `serde`, or `anyhow` available); the
+//! implementations are deliberately simple, deterministic, and unit-tested.
 
+pub mod error;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

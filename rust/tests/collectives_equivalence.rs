@@ -1,0 +1,182 @@
+//! The collectives layer's determinism and accounting contracts, verified
+//! end to end through the engine and the solver:
+//!
+//! * every algorithm's reduced values are **bit-identical** to the
+//!   `Linear` oracle across mesh shapes, scopes, and ops (property test);
+//! * charged time / message / word books genuinely differ by algorithm;
+//! * the auto selector's books cross over from recursive doubling to
+//!   ring/Rabenseifner as the payload grows;
+//! * solver trajectories are invariant under the algorithm policy while
+//!   simulated wall time is not.
+
+use hybrid_sgd::collectives::{charge, AlgoPolicy, Algorithm};
+use hybrid_sgd::comm::{Charging, Engine, Reduce, Scope};
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
+use hybrid_sgd::data::synth;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::metrics::Phase;
+use hybrid_sgd::partition::Partitioner;
+use hybrid_sgd::solvers::{HybridSolver, RunOpts};
+use hybrid_sgd::util::proptest::{check, Config};
+use hybrid_sgd::util::Prng;
+
+struct St {
+    buf: Vec<f64>,
+}
+
+/// Run one allreduce over a fresh engine and return (buffers, sim_wall,
+/// messages[0], words[0]).
+fn run_allreduce(
+    policy: AlgoPolicy,
+    mesh: Mesh,
+    scope: Scope,
+    op: Reduce,
+    words: usize,
+    data_seed: u64,
+) -> (Vec<Vec<u64>>, f64, f64, f64) {
+    let mut e =
+        Engine::new(mesh, CalibProfile::perlmutter(), Charging::Modeled).with_algo(policy);
+    let mut rng = Prng::new(data_seed);
+    let mut states: Vec<St> = (0..mesh.p())
+        .map(|_| St { buf: (0..words).map(|_| rng.range_f64(-1e6, 1e6)).collect() })
+        .collect();
+    e.allreduce(Phase::SstepComm, scope, op, &mut states, |s| &mut s.buf);
+    let bits: Vec<Vec<u64>> =
+        states.iter().map(|s| s.buf.iter().map(|v| v.to_bits()).collect()).collect();
+    (bits, e.sim_wall(), e.book.messages[0], e.book.words[0])
+}
+
+#[test]
+fn prop_all_algorithms_bit_identical_to_linear_oracle() {
+    check(
+        Config { cases: 48, seed: 0xC011EC7 },
+        "algorithm choice never changes reduced values",
+        |rng| {
+            (
+                1 + rng.next_below(5),          // p_r
+                1 + rng.next_below(5),          // p_c
+                1 + rng.next_below(64),         // words
+                rng.next_below(3),              // scope index
+                rng.next_below(2),              // op index
+                rng.next_u64(),                 // data seed
+            )
+        },
+        |&(p_r, p_c, words, scope_i, op_i, data_seed)| {
+            let mesh = Mesh::new(p_r, p_c);
+            let scope = [Scope::World, Scope::RowTeam, Scope::ColTeam][scope_i];
+            let op = [Reduce::Sum, Reduce::Mean][op_i];
+            let (oracle, _, _, _) = run_allreduce(
+                AlgoPolicy::Fixed(Algorithm::Linear),
+                mesh,
+                scope,
+                op,
+                words,
+                data_seed,
+            );
+            Algorithm::physical().into_iter().all(|algo| {
+                let (got, _, _, _) =
+                    run_allreduce(AlgoPolicy::Fixed(algo), mesh, scope, op, words, data_seed);
+                got == oracle
+            }) && {
+                let (auto, _, _, _) =
+                    run_allreduce(AlgoPolicy::Auto, mesh, scope, op, words, data_seed);
+                auto == oracle
+            }
+        },
+    );
+}
+
+#[test]
+fn charged_books_differ_by_algorithm() {
+    // One 4096-word allreduce over 8 ranks: all four pinned policies agree
+    // on values (above) but disagree pairwise on charged time, and the
+    // physical schedules disagree with the oracle on words.
+    let mesh = Mesh::new(1, 8);
+    let runs: Vec<(Algorithm, f64, f64, f64)> = Algorithm::all()
+        .into_iter()
+        .map(|a| {
+            let (_, wall, msgs, words) = run_allreduce(
+                AlgoPolicy::Fixed(a),
+                mesh,
+                Scope::World,
+                Reduce::Sum,
+                4096,
+                7,
+            );
+            (a, wall, msgs, words)
+        })
+        .collect();
+    for i in 0..runs.len() {
+        for j in i + 1..runs.len() {
+            assert!(
+                (runs[i].1 - runs[j].1).abs() > 1e-15,
+                "{} and {} charged identical time",
+                runs[i].0.name(),
+                runs[j].0.name()
+            );
+        }
+    }
+    // Linear books the bound's W; ring moves 2W(q−1)/q; recursive doubling
+    // log₂q · W.
+    let by = |a: Algorithm| runs.iter().find(|r| r.0 == a).unwrap();
+    assert_eq!(by(Algorithm::Linear).3, 4096.0);
+    assert_eq!(by(Algorithm::RecursiveDoubling).3, 3.0 * 4096.0);
+    assert!((by(Algorithm::RingAllreduce).3 - 2.0 * 7.0 / 8.0 * 4096.0).abs() < 1e-9);
+}
+
+#[test]
+fn auto_books_cross_over_with_payload() {
+    // q = 64 world team. Tiny payload: recursive doubling's 6 messages.
+    // Huge payload: the ring's 2(q−1) messages. The books prove the
+    // selector switched.
+    let mesh = Mesh::new(1, 64);
+    let (_, _, msgs_small, words_small) =
+        run_allreduce(AlgoPolicy::Auto, mesh, Scope::World, Reduce::Sum, 8, 11);
+    assert_eq!(msgs_small, 6.0, "tiny payload must book ⌈log₂64⌉ messages");
+    assert_eq!(words_small, 6.0 * 8.0);
+    let big = 1 << 20;
+    let (_, _, msgs_big, words_big) =
+        run_allreduce(AlgoPolicy::Auto, mesh, Scope::World, Reduce::Sum, big, 11);
+    assert_eq!(msgs_big, 126.0, "huge payload must book the ring's 2(q−1) messages");
+    assert!((words_big - 2.0 * 63.0 / 64.0 * big as f64).abs() < 1e-6);
+    // And the books match the selector's own account.
+    let prof = CalibProfile::perlmutter();
+    let (algo_small, cost_small) = charge(&prof, AlgoPolicy::Auto, 64, 8);
+    let (algo_big, cost_big) = charge(&prof, AlgoPolicy::Auto, 64, big);
+    assert_eq!(algo_small, Algorithm::RecursiveDoubling);
+    assert_eq!(algo_big, Algorithm::RingAllreduce);
+    assert_eq!(cost_small.messages, msgs_small);
+    assert_eq!(cost_big.messages, msgs_big);
+}
+
+#[test]
+fn solver_trajectory_invariant_under_algorithm_policy() {
+    let mut rng = Prng::new(0x50C1A1);
+    let ds = synth::sparse_skewed("collectives-toy", 240, 96, 6, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+    let run_with = |policy: AlgoPolicy| {
+        let opts = RunOpts { max_bundles: 12, eval_every: 0, algo: policy, ..Default::default() };
+        HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+    };
+    let oracle = run_with(AlgoPolicy::Fixed(Algorithm::Linear));
+    let mut walls = vec![oracle.sim_wall];
+    for algo in Algorithm::physical() {
+        let run = run_with(AlgoPolicy::Fixed(algo));
+        assert_eq!(run.x, oracle.x, "{} changed the trajectory", algo.name());
+        walls.push(run.sim_wall);
+    }
+    let auto = run_with(AlgoPolicy::Auto);
+    assert_eq!(auto.x, oracle.x, "auto changed the trajectory");
+    // Charged walls genuinely differ across pinned algorithms.
+    for i in 0..walls.len() {
+        for j in i + 1..walls.len() {
+            assert!((walls[i] - walls[j]).abs() > 1e-15, "walls {i}/{j} coincide");
+        }
+    }
+    // Auto is never slower than the best pinned physical schedule.
+    let best_physical =
+        walls[1..].iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(auto.sim_wall <= best_physical * (1.0 + 1e-9));
+}

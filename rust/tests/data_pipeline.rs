@@ -2,8 +2,8 @@
 //! partition invariants across the whole suite.
 
 use hybrid_sgd::data::{libsvm, DatasetSpec};
-use hybrid_sgd::partition::{stats, ColPartition, MeshPartition, Partitioner};
 use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::partition::{stats, ColPartition, MeshPartition, Partitioner};
 use hybrid_sgd::sparse::NnzStats;
 
 /// Every registry profile generates, matches its declared shape, and

@@ -1,13 +1,17 @@
 //! Cross-layer parity: the XLA/PJRT backend (AOT JAX + Pallas artifacts)
 //! must agree with the native Rust backend — and both must satisfy the
-//! shared conformance suite. Requires `make artifacts` (skips cleanly with
-//! a message otherwise).
+//! shared conformance suite. Requires `make artifacts` *and* a build with
+//! the `xla` feature (skips cleanly with a message otherwise).
 
 use hybrid_sgd::compute::{conformance_suite, ComputeBackend, NativeBackend};
 use hybrid_sgd::runtime::{artifacts_dir, XlaBackend};
 use hybrid_sgd::util::Prng;
 
 fn load_or_skip() -> Option<XlaBackend> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("skipping: built without the `xla` feature (stub backend cannot load)");
+        return None;
+    }
     let dir = artifacts_dir();
     if !dir.join("manifest.tsv").exists() {
         eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
