@@ -10,8 +10,11 @@ fn main() {
     let effort = Effort::from_env();
     let t0 = Instant::now();
     let table = table8::run(effort);
+    let overlap = table8::overlap_gain(effort);
     let wall = t0.elapsed().as_secs_f64();
     println!("== Table 8 — per-iteration runtime at best mesh ==");
     println!("{}", table.render());
+    println!("== Table 8b — compute/communication overlap gain (--overlap bundle) ==");
+    println!("{}", overlap.render());
     println!("(effort {effort:?}, generated in {wall:.1}s; TSV under results/)");
 }

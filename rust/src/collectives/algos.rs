@@ -9,7 +9,7 @@
 //! before the power-of-two core runs and receive the result after it — two
 //! extra full-payload phases on the critical path.
 
-use super::{Algorithm, CollectiveAlgo, CollectiveCost};
+use super::{Algorithm, CollectiveAlgo, CollectiveCost, ScheduleStep};
 use crate::costmodel::calib::CalibProfile;
 use crate::costmodel::hockney;
 use crate::WORD_BYTES;
@@ -64,6 +64,28 @@ impl CollectiveAlgo for Linear {
             steps: 2 * log2_ceil(q),
             messages: hockney::allreduce_messages(q),
             words: words as f64,
+        }
+    }
+
+    /// Idealized reduce-scatter bound: half the bound's latency phases
+    /// (`⌈log₂q⌉α`) plus the `(q−1)/q` bandwidth share a scatter must
+    /// move.
+    fn reduce_scatter_cost(
+        &self,
+        profile: &CalibProfile,
+        q: usize,
+        words: usize,
+    ) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let k = log2_ceil(q);
+        let r = (q - 1) as f64 / q as f64;
+        CollectiveCost {
+            time: k as f64 * profile.alpha(q) + r * bytes(words) * profile.beta(q),
+            steps: k,
+            messages: k as f64,
+            words: r * words as f64,
         }
     }
 }
@@ -124,6 +146,27 @@ impl CollectiveAlgo for RingAllreduce {
             words: 2.0 * r * words as f64,
         }
     }
+
+    /// The ring's reduce-scatter is exactly its first `q − 1` rounds of
+    /// `W/q` words — half the Allreduce in every column of the books.
+    fn reduce_scatter_cost(
+        &self,
+        profile: &CalibProfile,
+        q: usize,
+        words: usize,
+    ) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let steps = q - 1;
+        let r = (q - 1) as f64 / q as f64;
+        CollectiveCost {
+            time: steps as f64 * profile.alpha(q) + r * bytes(words) * profile.beta(q),
+            steps,
+            messages: steps as f64,
+            words: r * words as f64,
+        }
+    }
 }
 
 /// Rabenseifner: recursive-halving reduce-scatter (`k` steps of
@@ -158,6 +201,118 @@ impl CollectiveAlgo for Rabenseifner {
             words: 2.0 * r * words as f64 + fold_words,
         }
     }
+
+    /// Recursive-halving reduce-scatter only: `k` halving steps (plus the
+    /// fold), `(1 + p)·((q−1)/q)·Wwβ` bandwidth — the allgather's `r·Wwβ`
+    /// and `k` phases dropped.
+    fn reduce_scatter_cost(
+        &self,
+        profile: &CalibProfile,
+        q: usize,
+        words: usize,
+    ) -> CollectiveCost {
+        if q <= 1 {
+            return CollectiveCost::ZERO;
+        }
+        let fold = fold_phases(q);
+        let steps = log2_ceil(q) + fold;
+        let r = (q - 1) as f64 / q as f64;
+        let fold_words = if fold > 0 { words as f64 } else { 0.0 };
+        let bw_bytes =
+            ((1.0 + RSH_NONCONTIG_PENALTY) * r * words as f64 + fold_words) * WORD_BYTES as f64;
+        CollectiveCost {
+            time: steps as f64 * profile.alpha(q) + bw_bytes * profile.beta(q),
+            steps,
+            messages: steps as f64,
+            words: r * words as f64 + fold_words,
+        }
+    }
+
+    /// Geometric per-round shapes: fold-in, halving rounds of
+    /// `W/2, W/4, …` (penalized strides), doubling rounds reversed,
+    /// fold-out. Non-powers of two scale the geometric halves by
+    /// `r/(1 − 2⁻ᵏ)` so each phase still sums to the aggregate's `rW`
+    /// (the factor is exactly 1 at powers of two) — the sum-to-aggregate
+    /// contract holds for every team size.
+    fn steps_of(&self, profile: &CalibProfile, q: usize, words: usize) -> Vec<ScheduleStep> {
+        if q <= 1 {
+            return Vec::new();
+        }
+        let (rs, ag) = rab_phase_steps(profile, q, words);
+        let mut steps = Vec::new();
+        if fold_phases(q) > 0 {
+            steps.push(fold_in_step(profile, q, words));
+        }
+        steps.extend(rs);
+        steps.extend(ag);
+        if fold_phases(q) > 0 {
+            steps.push(fold_out_step(profile, q));
+        }
+        steps
+    }
+
+    fn rs_steps_of(&self, profile: &CalibProfile, q: usize, words: usize) -> Vec<ScheduleStep> {
+        if q <= 1 {
+            return Vec::new();
+        }
+        let (rs, _) = rab_phase_steps(profile, q, words);
+        let mut steps = Vec::new();
+        if fold_phases(q) > 0 {
+            steps.push(fold_in_step(profile, q, words));
+        }
+        steps.extend(rs);
+        if fold_phases(q) > 0 {
+            steps.push(fold_out_step(profile, q));
+        }
+        steps
+    }
+}
+
+/// Rabenseifner's halving (penalized) and doubling (contiguous) rounds.
+/// The geometric halves are normalized by `r/(1 − 2⁻ᵏ)` so each phase's
+/// words sum to the aggregate's `rW` at every team size (the factor is
+/// exactly 1.0 for powers of two, where `r = (q−1)/q = 1 − 2⁻ᵏ`).
+fn rab_phase_steps(
+    profile: &CalibProfile,
+    q: usize,
+    words: usize,
+) -> (Vec<ScheduleStep>, Vec<ScheduleStep>) {
+    let k = log2_ceil(q);
+    let a = profile.alpha(q);
+    let b = profile.beta(q);
+    let w = WORD_BYTES as f64;
+    let r = (q - 1) as f64 / q as f64;
+    let norm = r / (1.0 - 2f64.powi(-(k as i32)));
+    let half = |i: usize| norm * (words as f64 / 2f64.powi(i as i32));
+    let rs = (1..=k)
+        .map(|i| ScheduleStep {
+            time: a + (1.0 + RSH_NONCONTIG_PENALTY) * half(i) * w * b,
+            words: half(i),
+            messages: 1.0,
+        })
+        .collect();
+    let ag = (1..=k)
+        .rev()
+        .map(|i| ScheduleStep { time: a + half(i) * w * b, words: half(i), messages: 1.0 })
+        .collect();
+    (rs, ag)
+}
+
+/// The non-power-of-two fold-in phase: a surplus rank sends its full
+/// payload to a core neighbour before the power-of-two core runs.
+fn fold_in_step(profile: &CalibProfile, q: usize, words: usize) -> ScheduleStep {
+    ScheduleStep {
+        time: profile.alpha(q) + bytes(words) * profile.beta(q),
+        words: words as f64,
+        messages: 1.0,
+    }
+}
+
+/// The fold-out phase: surplus ranks receive the result after the core —
+/// a latency-only phase in the aggregate accounting (its payload is
+/// counted once, on the fold-in).
+fn fold_out_step(profile: &CalibProfile, q: usize) -> ScheduleStep {
+    ScheduleStep { time: profile.alpha(q), words: 0.0, messages: 1.0 }
 }
 
 /// Static dispatch table.
@@ -302,6 +457,49 @@ mod tests {
         let rab = Algorithm::Rabenseifner.as_algo().cost(&p, 64, w).time;
         let rd = Algorithm::RecursiveDoubling.as_algo().cost(&p, 64, w).time;
         assert!(ring < rab && rab < rd, "ring={ring} rab={rab} rd={rd}");
+    }
+
+    #[test]
+    fn reduce_scatter_counts() {
+        let p = prof();
+        // Ring: q−1 rounds of W/q words.
+        let rs = Algorithm::RingAllreduce.as_algo().reduce_scatter_cost(&p, 8, 1000);
+        assert_eq!(rs.steps, 7);
+        assert!((rs.words - 7.0 / 8.0 * 1000.0).abs() < 1e-9);
+        let want = 7.0 * p.alpha(8) + (7.0 / 8.0) * 8000.0 * p.beta(8);
+        assert!((rs.time - want).abs() < want * 1e-12);
+        // Rabenseifner: k halving rounds, penalized bandwidth, no fold at
+        // powers of two.
+        let rab = Algorithm::Rabenseifner.as_algo().reduce_scatter_cost(&p, 8, 1000);
+        assert_eq!(rab.steps, 3);
+        let want = 3.0 * p.alpha(8)
+            + (1.0 + RSH_NONCONTIG_PENALTY) * (7.0 / 8.0) * 8000.0 * p.beta(8);
+        assert!((rab.time - want).abs() < want * 1e-12);
+        // Non-power-of-two pays the fold: two extra phases, one extra
+        // full payload of words.
+        let rab9 = Algorithm::Rabenseifner.as_algo().reduce_scatter_cost(&p, 9, 1000);
+        assert_eq!(rab9.steps, 4 + 2);
+        assert!((rab9.words - (8.0 / 9.0 * 1000.0 + 1000.0)).abs() < 1e-9);
+        // Recursive doubling has no reduce-scatter half: full Allreduce.
+        let rd = Algorithm::RecursiveDoubling.as_algo();
+        assert_eq!(rd.reduce_scatter_cost(&p, 8, 1000), rd.cost(&p, 8, 1000));
+    }
+
+    #[test]
+    fn rabenseifner_rounds_halve_geometrically() {
+        let p = prof();
+        let steps = Algorithm::Rabenseifner.as_algo().steps_of(&p, 8, 1024);
+        // k = 3 halving + 3 doubling rounds, no fold.
+        assert_eq!(steps.len(), 6);
+        assert_eq!(steps[0].words, 512.0);
+        assert_eq!(steps[1].words, 256.0);
+        assert_eq!(steps[2].words, 128.0);
+        // Allgather mirrors the halving in reverse.
+        assert_eq!(steps[3].words, 128.0);
+        assert_eq!(steps[5].words, 512.0);
+        // The halving rounds pay the stride penalty; the doubling rounds
+        // move the same words cheaper.
+        assert!(steps[0].time > steps[5].time);
     }
 
     #[test]

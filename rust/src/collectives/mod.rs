@@ -154,6 +154,35 @@ impl CollectiveCost {
         CollectiveCost { time: 0.0, steps: 0, messages: 0.0, words: 0.0 };
 }
 
+/// One communication round of a collective schedule: the per-step shape
+/// the [`timeline`](crate::timeline) layer interleaves with compute
+/// events. Step times/words sum (to fp accumulation error) to the
+/// algorithm's aggregate [`CollectiveCost`], which remains authoritative
+/// for charging.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduleStep {
+    /// Seconds this round occupies on every participating rank.
+    pub time: f64,
+    /// Words moved per rank in this round.
+    pub words: f64,
+    /// Messages sent per rank in this round.
+    pub messages: f64,
+}
+
+/// Split an aggregate cost evenly across its rounds — exact for every
+/// schedule whose rounds are uniform (linear bound, recursive doubling,
+/// ring); Rabenseifner overrides with its geometric halving shapes.
+fn even_steps(cost: &CollectiveCost) -> Vec<ScheduleStep> {
+    if cost.steps == 0 {
+        return Vec::new();
+    }
+    let n = cost.steps as f64;
+    vec![
+        ScheduleStep { time: cost.time / n, words: cost.words / n, messages: cost.messages / n };
+        cost.steps
+    ]
+}
+
 /// One collective algorithm: an accounting model plus the shared canonical
 /// reduction kernel.
 pub trait CollectiveAlgo: Sync {
@@ -169,6 +198,35 @@ pub trait CollectiveAlgo: Sync {
     /// `q`-rank team, priced by the rank-aware `α(q)`/`β(q)` profile.
     /// Must return [`CollectiveCost::ZERO`] for `q ≤ 1`.
     fn cost(&self, profile: &CalibProfile, q: usize, words: usize) -> CollectiveCost;
+
+    /// Charged cost of the **reduce-scatter half** of this algorithm's
+    /// schedule (drop the allgather): after it, each rank holds the
+    /// reduced values of its own `~W/q`-word block only. Schedules with a
+    /// genuine reduce-scatter phase (ring, Rabenseifner, and the
+    /// idealized linear bound) charge roughly half the Allreduce — the
+    /// ROADMAP's 2× bandwidth saving on the row collective; algorithms
+    /// without one (recursive doubling's butterfly combines in place)
+    /// fall back to the full Allreduce charge.
+    fn reduce_scatter_cost(
+        &self,
+        profile: &CalibProfile,
+        q: usize,
+        words: usize,
+    ) -> CollectiveCost {
+        self.cost(profile, q, words)
+    }
+
+    /// The Allreduce as a schedule of per-round shapes (sums to
+    /// [`CollectiveAlgo::cost`]; empty for `q ≤ 1`).
+    fn steps_of(&self, profile: &CalibProfile, q: usize, words: usize) -> Vec<ScheduleStep> {
+        even_steps(&self.cost(profile, q, words))
+    }
+
+    /// The reduce-scatter half as a schedule of per-round shapes (sums to
+    /// [`CollectiveAlgo::reduce_scatter_cost`]; empty for `q ≤ 1`).
+    fn rs_steps_of(&self, profile: &CalibProfile, q: usize, words: usize) -> Vec<ScheduleStep> {
+        even_steps(&self.reduce_scatter_cost(profile, q, words))
+    }
 
     /// Reduce the team's contribution buffers. Every algorithm shares the
     /// canonical kernel — see the module docs' determinism contract.
@@ -214,6 +272,29 @@ pub fn charge(
     match policy {
         AlgoPolicy::Auto => AutoSelector::new(profile).pick_cost(q, words),
         AlgoPolicy::Fixed(a) => (a, a.as_algo().cost(profile, q, words)),
+    }
+}
+
+/// Resolve a policy to `(algorithm, cost)` for one **reduce-scatter** —
+/// the first half of an Allreduce schedule, used when the consumer needs
+/// only its own block of the reduced payload. Under `Auto` the cheapest
+/// physical reduce-scatter wins (ring or Rabenseifner; recursive
+/// doubling's fallback is its full Allreduce, so it never saves here).
+/// Singleton teams are free under every policy.
+pub fn reduce_scatter_charge(
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    q: usize,
+    words: usize,
+) -> (Algorithm, CollectiveCost) {
+    if q <= 1 {
+        return (Algorithm::Linear, CollectiveCost::ZERO);
+    }
+    match policy {
+        AlgoPolicy::Auto => {
+            select::cheapest_physical(|a| a.as_algo().reduce_scatter_cost(profile, q, words))
+        }
+        AlgoPolicy::Fixed(a) => (a, a.as_algo().reduce_scatter_cost(profile, q, words)),
     }
 }
 
@@ -280,5 +361,89 @@ mod tests {
     #[test]
     fn default_policy_is_auto() {
         assert_eq!(AlgoPolicy::default(), AlgoPolicy::Auto);
+    }
+
+    #[test]
+    fn reduce_scatter_never_costs_more_than_allreduce() {
+        // Per algorithm and under Auto: dropping the allgather can only
+        // cheapen the collective (recursive doubling degenerates to its
+        // full Allreduce — equality).
+        let p = prof();
+        for q in [2usize, 3, 8, 9, 64, 100] {
+            for w in [1usize, 100, 4096, 1 << 20] {
+                for a in Algorithm::all() {
+                    let ar = a.as_algo().cost(&p, q, w);
+                    let rs = a.as_algo().reduce_scatter_cost(&p, q, w);
+                    assert!(
+                        rs.time <= ar.time * (1.0 + 1e-12),
+                        "{} q={q} w={w}: rs {} > ar {}",
+                        a.name(),
+                        rs.time,
+                        ar.time
+                    );
+                    assert!(rs.words <= ar.words + 1e-9, "{} q={q} w={w}", a.name());
+                    assert!(rs.messages <= ar.messages + 1e-9, "{} q={q} w={w}", a.name());
+                }
+                let (_, ar_auto) = charge(&p, AlgoPolicy::Auto, q, w);
+                let (_, rs_auto) = reduce_scatter_charge(&p, AlgoPolicy::Auto, q, w);
+                assert!(rs_auto.time <= ar_auto.time * (1.0 + 1e-12), "auto q={q} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_singleton_is_free() {
+        let (_, c) = reduce_scatter_charge(&prof(), AlgoPolicy::Auto, 1, 1 << 20);
+        assert_eq!(c, CollectiveCost::ZERO);
+    }
+
+    #[test]
+    fn ring_reduce_scatter_halves_the_books() {
+        // The ring's reduce-scatter is exactly half its Allreduce: q−1 of
+        // the 2(q−1) rounds, half the words.
+        let p = prof();
+        let ar = Algorithm::RingAllreduce.as_algo().cost(&p, 8, 4096);
+        let rs = Algorithm::RingAllreduce.as_algo().reduce_scatter_cost(&p, 8, 4096);
+        assert_eq!(rs.steps * 2, ar.steps);
+        assert!((rs.words * 2.0 - ar.words).abs() < 1e-9);
+        assert!((rs.messages * 2.0 - ar.messages).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_steps_sum_to_aggregate_cost() {
+        // Per-round shapes are a decomposition of the aggregate charge at
+        // every team size: uniform rounds for linear/rd/ring, normalized
+        // geometric halves (plus the fold phases) for Rabenseifner.
+        let p = prof();
+        for a in Algorithm::all() {
+            for q in [2usize, 3, 4, 8, 9, 64, 100] {
+                for w in [64usize, 4096] {
+                    for (cost, steps) in [
+                        (a.as_algo().cost(&p, q, w), a.as_algo().steps_of(&p, q, w)),
+                        (
+                            a.as_algo().reduce_scatter_cost(&p, q, w),
+                            a.as_algo().rs_steps_of(&p, q, w),
+                        ),
+                    ] {
+                        assert_eq!(steps.len(), cost.steps, "{} q={q} w={w}", a.name());
+                        let t: f64 = steps.iter().map(|s| s.time).sum();
+                        let words: f64 = steps.iter().map(|s| s.words).sum();
+                        let msgs: f64 = steps.iter().map(|s| s.messages).sum();
+                        let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + y.abs());
+                        assert!(close(t, cost.time), "{} q={q} w={w} time", a.name());
+                        assert!(close(words, cost.words), "{} q={q} w={w} words", a.name());
+                        assert!(close(msgs, cost.messages), "{} q={q} w={w} msgs", a.name());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_empty_for_singleton_teams() {
+        for a in Algorithm::all() {
+            assert!(a.as_algo().steps_of(&prof(), 1, 100).is_empty());
+            assert!(a.as_algo().rs_steps_of(&prof(), 1, 100).is_empty());
+        }
     }
 }

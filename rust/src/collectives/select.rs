@@ -35,18 +35,7 @@ impl<'p> AutoSelector<'p> {
         if q <= 1 {
             return (Algorithm::Linear, CollectiveCost::ZERO);
         }
-        let mut best: Option<(Algorithm, CollectiveCost)> = None;
-        for a in Algorithm::physical() {
-            let c = algos::lookup(a).cost(self.profile, q, words);
-            let better = match &best {
-                None => true,
-                Some((_, b)) => c.time < b.time,
-            };
-            if better {
-                best = Some((a, c));
-            }
-        }
-        best.expect("physical algorithm set is nonempty")
+        cheapest_physical(|a| algos::lookup(a).cost(self.profile, q, words))
     }
 
     /// The selection map for a team size: `(first_words, algorithm)`
@@ -85,6 +74,27 @@ impl<'p> AutoSelector<'p> {
         }
         segments
     }
+}
+
+/// The one argmin over [`Algorithm::physical`] every auto-selection path
+/// shares (Allreduce and reduce-scatter pricing differ only in the
+/// per-algorithm cost callback). Ties resolve to the earlier entry of
+/// [`Algorithm::physical`] (deterministic).
+pub fn cheapest_physical(
+    cost_of: impl Fn(Algorithm) -> CollectiveCost,
+) -> (Algorithm, CollectiveCost) {
+    let mut best: Option<(Algorithm, CollectiveCost)> = None;
+    for a in Algorithm::physical() {
+        let c = cost_of(a);
+        let better = match &best {
+            None => true,
+            Some((_, b)) => c.time < b.time,
+        };
+        if better {
+            best = Some((a, c));
+        }
+    }
+    best.expect("physical algorithm set is nonempty")
 }
 
 #[cfg(test)]

@@ -1,9 +1,41 @@
-//! Bulk-synchronous rank engine with simulated-clock charging.
+//! The simulated-clock rank engine, with **two charging regimes**.
+//!
+//! Every solver phase runs real math on real partitions while each of the
+//! `p` simulated ranks carries a clock; what differs between the regimes
+//! is *when* collective transfer time lands on those clocks:
+//!
+//! 1. **Bulk-synchronous** (the seed regime; [`Engine::allreduce`],
+//!    [`Engine::reduce_scatter`]). Every member first waits until the
+//!    slowest team member arrives (booked as sync-skew wait, §6.5), then
+//!    pays the full per-rank time of the collective algorithm resolved by
+//!    [`Engine::algo`] — wait-then-transfer, nothing overlaps. This is
+//!    the paper's own charging model, and with
+//!    [`OverlapPolicy::Off`](crate::timeline::OverlapPolicy) it is what
+//!    every solver uses; its books are locked bit-for-bit by the
+//!    equivalence suites.
+//! 2. **Timeline-overlapped** ([`Engine::iallreduce`] /
+//!    [`Engine::ireduce_scatter`] returning a [`CollHandle`], completed
+//!    later by [`Engine::wait`]). Posting performs the reduction math
+//!    immediately (the determinism contract: values never depend on
+//!    charging) and resolves the transfer's span from the members'
+//!    clocks; compute charged between post and wait runs *under* the
+//!    transfer, and at the wait each member pays only the exposed
+//!    remainder — the hidden part is booked in the
+//!    [`PhaseBook`]'s hidden column, uncharged. The charging rule lives
+//!    in [`timeline::PendingCollective`](crate::timeline); the blocking
+//!    calls are literally post + immediate wait, whose degenerate branch
+//!    reproduces regime 1 expression for expression.
+//!
+//! All clock advances (either regime) are recorded as events on
+//! [`Engine::timeline`], which the
+//! [`timeline::analyzer`](crate::timeline::analyzer) turns into
+//! per-phase critical-path breakdowns.
 
-use crate::collectives::{self, AlgoPolicy};
+use crate::collectives::{self, AlgoPolicy, CollectiveCost};
 use crate::costmodel::calib::CalibProfile;
 use crate::mesh::Mesh;
 use crate::metrics::{Phase, PhaseBook};
+use crate::timeline::{EventKind, PendingCollective, Timeline};
 use std::time::Instant;
 
 pub use crate::collectives::Reduce;
@@ -56,7 +88,32 @@ pub enum Charging {
     Modeled,
 }
 
-/// The bulk-synchronous rank engine.
+/// Which collective a posted handle charges — the full Allreduce or its
+/// reduce-scatter first half.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CollKind {
+    Allreduce,
+    ReduceScatter,
+}
+
+/// Handle to one posted (nonblocking) collective call — one pending
+/// transfer per team in the call's scope. Complete it with
+/// [`Engine::wait`]; every handle must be waited before the engine's
+/// books are read.
+#[must_use = "a posted collective must be completed with Engine::wait before the books are read"]
+pub struct CollHandle {
+    pending: Vec<PendingCollective>,
+}
+
+impl CollHandle {
+    /// The pending per-team transfers (inspection/testing).
+    pub fn pending(&self) -> &[PendingCollective] {
+        &self.pending
+    }
+}
+
+/// The simulated-clock rank engine (see the module docs for the two
+/// charging regimes).
 pub struct Engine {
     /// Mesh executed over.
     pub mesh: Mesh,
@@ -68,6 +125,8 @@ pub struct Engine {
     pub clock: Vec<f64>,
     /// Phase-attributed accounting.
     pub book: PhaseBook,
+    /// Per-rank event log (the analyzer's input).
+    pub timeline: Timeline,
     /// Compute lanes (OS threads) for per-rank closures; 1 = sequential.
     pub lanes: usize,
     /// Collective-algorithm policy: `Auto` (Hockney-costed selection per
@@ -87,6 +146,7 @@ impl Engine {
             charging,
             clock: vec![0.0; p],
             book: PhaseBook::new(p),
+            timeline: Timeline::new(p),
             lanes: 1,
             algo: AlgoPolicy::Auto,
         }
@@ -114,10 +174,12 @@ impl Engine {
         self.clock.iter().copied().fold(0.0, f64::max)
     }
 
-    /// Reset clocks and the phase book (e.g. after warmup).
+    /// Reset clocks, the phase book, and the event log (e.g. after
+    /// warmup).
     pub fn reset_accounting(&mut self) {
         self.clock.fill(0.0);
         self.book.reset();
+        self.timeline.clear();
     }
 
     /// Run a compute phase: `f(rank, state)` for every rank, charging each
@@ -160,8 +222,10 @@ impl Engine {
             }
         }
         for rank in 0..p {
+            let start = self.clock[rank];
             self.clock[rank] += charge[rank];
             self.book.charge(phase, rank, charge[rank]);
+            self.timeline.record(rank, phase, EventKind::Compute, start, self.clock[rank]);
         }
     }
 
@@ -178,17 +242,18 @@ impl Engine {
         }
     }
 
-    /// Team-scoped Allreduce. `buf(state)` exposes each rank's contribution
-    /// buffer; all buffers in a team must have equal length. After the call
-    /// every team member holds the reduced value. Reduction order is the
-    /// canonical linear team order ([`collectives::canonical_reduce`]) —
-    /// bitwise deterministic regardless of the algorithm policy.
+    /// Team-scoped blocking Allreduce. `buf(state)` exposes each rank's
+    /// contribution buffer; all buffers in a team must have equal length.
+    /// After the call every team member holds the reduced value. Reduction
+    /// order is the canonical linear team order
+    /// ([`collectives::canonical_reduce`]) — bitwise deterministic
+    /// regardless of the algorithm policy.
     ///
-    /// Charging: every member first *waits* until the slowest team member
-    /// arrives (booked as sync-skew wait, §6.5), then pays the per-rank
-    /// time of the collective algorithm resolved by [`Engine::algo`] for
-    /// this `(team size, payload)` — together with that algorithm's
-    /// message and word counts in the phase book.
+    /// Charging regime 1 (bulk-synchronous; see module docs): this is the
+    /// degenerate timeline schedule, post + immediate wait — every member
+    /// waits to the slowest, then pays the full per-rank time of the
+    /// algorithm resolved by [`Engine::algo`], with that algorithm's
+    /// message/word counts in the phase book.
     pub fn allreduce<S>(
         &mut self,
         phase: Phase,
@@ -197,56 +262,119 @@ impl Engine {
         states: &mut [S],
         buf: impl Fn(&mut S) -> &mut [f64],
     ) {
-        assert_eq!(states.len(), self.p(), "one state per rank");
-        for team in self.teams(scope) {
-            self.allreduce_team(phase, op, &team, states, &buf);
+        let h = self.post_collective(phase, CollKind::Allreduce, scope, op, states, &buf);
+        self.wait(h);
+    }
+
+    /// Nonblocking Allreduce: performs the reduction math now (values are
+    /// identical to [`Engine::allreduce`], bitwise) and posts the
+    /// transfer; charging is settled when the returned handle is passed
+    /// to [`Engine::wait`]. Compute charged in between hides the
+    /// transfer (charging regime 2, see module docs).
+    pub fn iallreduce<S>(
+        &mut self,
+        phase: Phase,
+        scope: Scope,
+        op: Reduce,
+        states: &mut [S],
+        buf: impl Fn(&mut S) -> &mut [f64],
+    ) -> CollHandle {
+        self.post_collective(phase, CollKind::Allreduce, scope, op, states, &buf)
+    }
+
+    /// Team-scoped blocking reduce-scatter: the **first half** of the
+    /// Allreduce schedule (ring / Rabenseifner with the allgather
+    /// dropped), for consumers that need only their own block of the
+    /// reduced payload — the ROADMAP's 2× bandwidth saving on the row
+    /// collective.
+    ///
+    /// Like the algorithm schedules themselves, the scatter is modeled in
+    /// the *accounting*, not the arithmetic: every member's buffer ends
+    /// with the full canonical reduction (free simulator bookkeeping, so
+    /// trajectories stay bit-identical across charging paths), while the
+    /// time/message/word books charge only the reduce-scatter half
+    /// resolved by [`collectives::reduce_scatter_charge`]. Callers whose
+    /// consumer actually reads beyond its own block (e.g. HybridSGD's
+    /// redundant correction under `rs_row`) are charging a *what-if*
+    /// pipeline — see [`RunOpts::rs_row`](crate::solvers::RunOpts) for
+    /// the contract.
+    pub fn reduce_scatter<S>(
+        &mut self,
+        phase: Phase,
+        scope: Scope,
+        op: Reduce,
+        states: &mut [S],
+        buf: impl Fn(&mut S) -> &mut [f64],
+    ) {
+        let h = self.post_collective(phase, CollKind::ReduceScatter, scope, op, states, &buf);
+        self.wait(h);
+    }
+
+    /// Nonblocking [`Engine::reduce_scatter`].
+    pub fn ireduce_scatter<S>(
+        &mut self,
+        phase: Phase,
+        scope: Scope,
+        op: Reduce,
+        states: &mut [S],
+        buf: impl Fn(&mut S) -> &mut [f64],
+    ) -> CollHandle {
+        self.post_collective(phase, CollKind::ReduceScatter, scope, op, states, &buf)
+    }
+
+    /// Complete a posted collective: settle each team's charge per the
+    /// timeline charging rule (degenerate when nothing was charged since
+    /// the post — then bit-identical to the blocking call).
+    pub fn wait(&mut self, handle: CollHandle) {
+        for pc in handle.pending {
+            pc.complete(&mut self.clock, &mut self.book, &mut self.timeline);
         }
     }
 
-    fn allreduce_team<S>(
+    fn post_collective<S>(
         &mut self,
         phase: Phase,
+        kind: CollKind,
+        scope: Scope,
         op: Reduce,
-        team: &[usize],
         states: &mut [S],
         buf: &impl Fn(&mut S) -> &mut [f64],
-    ) {
-        let q = team.len();
-        let words = buf(&mut states[team[0]]).len();
-        // Reduce through the collectives layer's one canonical kernel
-        // (linear team order — the determinism contract: algorithm choice
-        // changes charged accounting, never values). Contributions are
-        // snapshotted because the closure API hands out one `&mut` buffer
-        // at a time; this is simulator bookkeeping, not charged traffic.
-        let contribs: Vec<Vec<f64>> = team
-            .iter()
-            .map(|&member| {
-                let b = buf(&mut states[member]);
-                assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
-                b.to_vec()
-            })
-            .collect();
-        let slices: Vec<&[f64]> = contribs.iter().map(|c| c.as_slice()).collect();
-        let acc = collectives::canonical_reduce(&slices, op);
-        // Broadcast result.
-        for &member in team {
-            buf(&mut states[member]).copy_from_slice(&acc);
-        }
-        // Charge simulated time: barrier to slowest, then the selected
-        // algorithm's per-rank transfer time and books.
-        let (_algo, cost) = collectives::charge(&self.profile, self.algo, q, words);
-        let t_arrive = team.iter().map(|&m| self.clock[m]).fold(0.0, f64::max);
-        let dur = cost.time;
-        for &member in team {
-            let wait = t_arrive - self.clock[member];
-            self.book.charge(phase, member, wait + dur);
-            self.book.charge_wait(phase, member, wait);
-            self.clock[member] = t_arrive + dur;
-            if q > 1 {
-                self.book.words[member] += cost.words;
-                self.book.messages[member] += cost.messages;
+    ) -> CollHandle {
+        assert_eq!(states.len(), self.p(), "one state per rank");
+        let mut pending = Vec::new();
+        for team in self.teams(scope) {
+            let q = team.len();
+            let words = buf(&mut states[team[0]]).len();
+            // Reduce through the collectives layer's one canonical kernel
+            // (linear team order — the determinism contract: algorithm and
+            // charging-path choice change charged accounting, never
+            // values). Contributions are snapshotted because the closure
+            // API hands out one `&mut` buffer at a time; this is simulator
+            // bookkeeping, not charged traffic.
+            let contribs: Vec<Vec<f64>> = team
+                .iter()
+                .map(|&member| {
+                    let b = buf(&mut states[member]);
+                    assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
+                    b.to_vec()
+                })
+                .collect();
+            let slices: Vec<&[f64]> = contribs.iter().map(|c| c.as_slice()).collect();
+            let acc = collectives::canonical_reduce(&slices, op);
+            // Broadcast result (the reduce-scatter path delivers the full
+            // buffer too — see `reduce_scatter`'s accounting contract).
+            for &member in &team {
+                buf(&mut states[member]).copy_from_slice(&acc);
             }
+            let (algo, cost): (_, CollectiveCost) = match kind {
+                CollKind::Allreduce => collectives::charge(&self.profile, self.algo, q, words),
+                CollKind::ReduceScatter => {
+                    collectives::reduce_scatter_charge(&self.profile, self.algo, q, words)
+                }
+            };
+            pending.push(PendingCollective::post(phase, team, &self.clock, algo, cost));
         }
+        CollHandle { pending }
     }
 
     /// The rank groups a scope reduces over.
@@ -435,5 +563,130 @@ mod tests {
             assert_eq!(vals, vals_lin, "{} changed reduced values", algo.name());
             assert!((t - t_lin).abs() > 1e-15, "{} charged exactly like linear", algo.name());
         }
+    }
+
+    /// The blocking Allreduce is the degenerate nonblocking schedule:
+    /// iallreduce + immediate wait gives bit-identical values, clocks,
+    /// and books.
+    #[test]
+    fn iallreduce_immediate_wait_equals_blocking_allreduce() {
+        let run = |nonblocking: bool| {
+            let mut e = engine(2, 2);
+            let mut states: Vec<St> =
+                (0..4).map(|r| St { buf: vec![(r as f64).sin(); 64] }).collect();
+            // Skewed arrival so the wait branch is exercised.
+            e.compute(Phase::SpGemv, &mut states, |rank, _| Cost::flops(1e6 * rank as f64));
+            if nonblocking {
+                let h = e.iallreduce(
+                    Phase::SstepComm,
+                    Scope::RowTeam,
+                    Reduce::Sum,
+                    &mut states,
+                    |s| &mut s.buf,
+                );
+                e.wait(h);
+            } else {
+                e.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| {
+                    &mut s.buf
+                });
+            }
+            let vals: Vec<Vec<u64>> =
+                states.iter().map(|s| s.buf.iter().map(|v| v.to_bits()).collect()).collect();
+            (vals, e.clock.clone(), e.book.mean_charged(Phase::SstepComm), e.book.words[0])
+        };
+        let (v_block, c_block, t_block, w_block) = run(false);
+        let (v_nb, c_nb, t_nb, w_nb) = run(true);
+        assert_eq!(v_block, v_nb);
+        assert_eq!(c_block, c_nb);
+        assert_eq!(t_block, t_nb);
+        assert_eq!(w_block, w_nb);
+    }
+
+    /// Compute charged between post and wait hides the transfer: the
+    /// clock advances less than bulk-synchronous and the difference lands
+    /// in the hidden column.
+    #[test]
+    fn compute_between_post_and_wait_hides_the_transfer() {
+        let words = 1 << 16;
+        let dur = collectives::charge(&CalibProfile::perlmutter(), AlgoPolicy::Auto, 4, words)
+            .1
+            .time;
+        let run = |overlap_flops: f64| {
+            let mut e = engine(1, 4);
+            let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![1.0; words] }).collect();
+            let h =
+                e.iallreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| {
+                    &mut s.buf
+                });
+            if overlap_flops > 0.0 {
+                e.compute(Phase::SpGemv, &mut states, |_, _| Cost::flops(overlap_flops));
+            }
+            e.wait(h);
+            (e.sim_wall(), e.book.mean_hidden(Phase::SstepComm))
+        };
+        let (wall_sync, hidden_sync) = run(0.0);
+        assert_eq!(hidden_sync, 0.0);
+        // Enough compute to cover half the transfer.
+        let g = CalibProfile::perlmutter().gamma_flop;
+        let (wall_half, hidden_half) = run(0.5 * dur / g);
+        assert!(hidden_half > 0.25 * dur && hidden_half < 0.75 * dur, "hidden={hidden_half}");
+        assert!((wall_half - wall_sync).abs() < 1e-12 * wall_sync.max(1e-30));
+        // Enough compute to swallow it entirely: the wall is now
+        // compute-bound and the whole duration is hidden.
+        let (wall_full, hidden_full) = run(4.0 * dur / g);
+        assert!((hidden_full - dur).abs() < dur * 1e-9, "hidden={hidden_full} dur={dur}");
+        assert!(wall_full > wall_sync);
+    }
+
+    /// reduce_scatter delivers the same values as allreduce (the scatter
+    /// is modeled in the accounting) while charging strictly less time
+    /// and about half the words under a ring policy.
+    #[test]
+    fn reduce_scatter_matches_values_and_halves_ring_books() {
+        use crate::collectives::Algorithm;
+        let run = |rs: bool| {
+            let mut e = engine(1, 8).with_algo(AlgoPolicy::Fixed(Algorithm::RingAllreduce));
+            let mut states: Vec<St> =
+                (0..8).map(|r| St { buf: vec![(r as f64) * 0.25; 512] }).collect();
+            if rs {
+                e.reduce_scatter(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| {
+                    &mut s.buf
+                });
+            } else {
+                e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| {
+                    &mut s.buf
+                });
+            }
+            let vals: Vec<Vec<u64>> =
+                states.iter().map(|s| s.buf.iter().map(|v| v.to_bits()).collect()).collect();
+            (vals, e.sim_wall(), e.book.words[0], e.book.messages[0])
+        };
+        let (v_ar, t_ar, w_ar, m_ar) = run(false);
+        let (v_rs, t_rs, w_rs, m_rs) = run(true);
+        assert_eq!(v_ar, v_rs, "reduce_scatter changed reduced values");
+        assert!(t_rs < t_ar, "rs {t_rs} not cheaper than ar {t_ar}");
+        assert!((w_rs * 2.0 - w_ar).abs() < 1e-9, "rs words {w_rs} vs ar {w_ar}");
+        assert!((m_rs * 2.0 - m_ar).abs() < 1e-9);
+    }
+
+    /// Every clock advance lands on the timeline as an event; hidden
+    /// spans are recorded but never move the analyzer's makespan.
+    #[test]
+    fn timeline_records_compute_and_collective_events() {
+        use crate::timeline::{CriticalPath, EventKind};
+        let mut e = engine(1, 2);
+        let mut states: Vec<St> = (0..2).map(|_| St { buf: vec![1.0; 128] }).collect();
+        e.compute(Phase::SpGemv, &mut states, |rank, _| Cost::flops(1e6 * (rank + 1) as f64));
+        e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        let kinds: Vec<EventKind> = e.timeline.events().iter().map(|ev| ev.kind).collect();
+        assert!(kinds.contains(&EventKind::Compute));
+        assert!(kinds.contains(&EventKind::Transfer));
+        assert!(kinds.contains(&EventKind::Wait), "skewed ranks must book a wait event");
+        let cp = CriticalPath::analyze(&e.timeline);
+        assert!((cp.makespan() - e.sim_wall()).abs() < 1e-15);
+        let comm = cp.line(Phase::SstepComm).charged;
+        assert!((comm - e.book.mean_charged(Phase::SstepComm)).abs() < 1e-12);
+        e.reset_accounting();
+        assert!(e.timeline.events().is_empty());
     }
 }

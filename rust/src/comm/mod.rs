@@ -24,8 +24,16 @@
 //! partitions (see DESIGN.md §2). Reduced values never depend on the
 //! collective algorithm: every algorithm reduces in the canonical linear
 //! team order, so trajectories are bit-identical across policies.
+//!
+//! Since the timeline layer landed, collectives come in blocking form
+//! (bulk-synchronous charging, as above) and nonblocking form
+//! ([`Engine::iallreduce`] + [`Engine::wait`]), which lets solvers hide
+//! transfer time behind later compute under an
+//! [`OverlapPolicy`](crate::timeline::OverlapPolicy) — see
+//! [`engine`]'s module docs for the two charging regimes.
 
 pub mod engine;
 
 pub use crate::collectives::{AlgoPolicy, Algorithm};
-pub use engine::{Charging, Cost, Engine, Reduce, Scope};
+pub use crate::timeline::OverlapPolicy;
+pub use engine::{Charging, CollHandle, Cost, Engine, Reduce, Scope};

@@ -162,6 +162,129 @@ impl CalibProfile {
         }
         self.tiers.last().expect("profile has tiers").name
     }
+
+    /// Persist the profile as TSV (via [`crate::util::tsv`]) so a
+    /// [`measure_local`] calibration survives the process — reload with
+    /// [`CalibProfile::from_tsv`] instead of refitting every run.
+    ///
+    /// Row kinds: `meta` (name/constants), `intra`/`inter` (per-q α, β),
+    /// `tier` (name, γ, capacity). Floats use Rust's shortest-roundtrip
+    /// formatting, so a load-save-load cycle is lossless.
+    pub fn to_tsv<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        let mut w = crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b"]);
+        let na = "-".to_string();
+        w.append(&["meta".into(), "name".into(), self.name.clone(), na.clone()])?;
+        w.append(&[
+            "meta".into(),
+            "ranks_per_node".into(),
+            self.ranks_per_node.to_string(),
+            na.clone(),
+        ])?;
+        w.append(&["meta".into(), "l_cap_bytes".into(), self.l_cap_bytes.to_string(), na.clone()])?;
+        w.append(&["meta".into(), "gamma_flop".into(), self.gamma_flop.to_string(), na.clone()])?;
+        w.append(&[
+            "meta".into(),
+            "gamma_flop_dense".into(),
+            self.gamma_flop_dense.to_string(),
+            na,
+        ])?;
+        for (kind, table) in [("intra", &self.intra), ("inter", &self.inter)] {
+            for pt in table {
+                w.append(&[
+                    kind.into(),
+                    pt.ranks.to_string(),
+                    pt.alpha.to_string(),
+                    pt.beta.to_string(),
+                ])?;
+            }
+        }
+        for t in &self.tiers {
+            let cells =
+                ["tier".into(), t.name.into(), t.gamma.to_string(), t.max_bytes.to_string()];
+            w.append(&cells)?;
+        }
+        Ok(())
+    }
+
+    /// Load a profile saved by [`CalibProfile::to_tsv`].
+    pub fn from_tsv<P: AsRef<std::path::Path>>(path: P) -> std::io::Result<CalibProfile> {
+        use std::io::{Error, ErrorKind};
+        let bad = |msg: String| Error::new(ErrorKind::InvalidData, msg);
+        let parse_f = |s: &str| s.parse::<f64>().map_err(|_| bad(format!("bad float {s:?}")));
+        let parse_u = |s: &str| s.parse::<usize>().map_err(|_| bad(format!("bad int {s:?}")));
+
+        let (header, rows) = crate::util::tsv::read_tsv(path)?;
+        if header != ["kind", "key", "a", "b"] {
+            return Err(bad(format!("unexpected profile header {header:?}")));
+        }
+        let mut p = CalibProfile {
+            name: "loaded".into(),
+            ranks_per_node: 0,
+            l_cap_bytes: 1 << 20,
+            intra: Vec::new(),
+            inter: Vec::new(),
+            tiers: Vec::new(),
+            gamma_flop: 0.0,
+            gamma_flop_dense: 0.0,
+        };
+        for row in &rows {
+            let [kind, key, a, b] = match row.as_slice() {
+                [k, key, a, b] => [k.as_str(), key.as_str(), a.as_str(), b.as_str()],
+                _ => return Err(bad(format!("short profile row {row:?}"))),
+            };
+            match kind {
+                "meta" => match key {
+                    "name" => p.name = a.to_string(),
+                    "ranks_per_node" => p.ranks_per_node = parse_u(a)?,
+                    "l_cap_bytes" => p.l_cap_bytes = parse_u(a)?,
+                    "gamma_flop" => p.gamma_flop = parse_f(a)?,
+                    "gamma_flop_dense" => p.gamma_flop_dense = parse_f(a)?,
+                    other => return Err(bad(format!("unknown meta key {other:?}"))),
+                },
+                "intra" | "inter" => {
+                    let pt =
+                        CommPoint { ranks: parse_u(key)?, alpha: parse_f(a)?, beta: parse_f(b)? };
+                    if kind == "intra" {
+                        p.intra.push(pt);
+                    } else {
+                        p.inter.push(pt);
+                    }
+                }
+                "tier" => p.tiers.push(MemTier {
+                    name: intern_tier_name(key),
+                    max_bytes: parse_u(b)?,
+                    gamma: parse_f(a)?,
+                }),
+                other => return Err(bad(format!("unknown profile row kind {other:?}"))),
+            }
+        }
+        if p.intra.is_empty() || p.inter.is_empty() || p.tiers.is_empty() || p.ranks_per_node == 0
+        {
+            return Err(bad("incomplete profile: need intra, inter, tiers, ranks_per_node".into()));
+        }
+        // A truncated meta section would otherwise price compute at
+        // 0 s/flop and silently zero every charged timing.
+        if p.gamma_flop <= 0.0 || p.gamma_flop_dense <= 0.0 {
+            return Err(bad("incomplete profile: gamma_flop/gamma_flop_dense missing or zero".into()));
+        }
+        // The lookup tables require ascending order.
+        p.intra.sort_by_key(|pt| pt.ranks);
+        p.inter.sort_by_key(|pt| pt.ranks);
+        p.tiers.sort_by_key(|t| t.max_bytes);
+        Ok(p)
+    }
+}
+
+/// Map a loaded tier label onto the static names the profile uses
+/// (unknown labels collapse to a generic `"tier"`).
+fn intern_tier_name(s: &str) -> &'static str {
+    match s {
+        "L1" => "L1",
+        "L2" => "L2",
+        "L3" => "L3",
+        "DRAM" => "DRAM",
+        _ => "tier",
+    }
 }
 
 /// Log-log interpolation over an ascending table; clamps outside the range.
@@ -335,6 +458,75 @@ mod tests {
         assert_eq!(p.gamma_ws(1 << 30), 2.6e-11);
         assert_eq!(p.tier_name(1 << 30), "DRAM");
         assert_eq!(p.tier_name(100 << 10), "L2");
+    }
+
+    #[test]
+    fn tsv_roundtrip_is_lossless() {
+        let dir = std::env::temp_dir().join(format!("calib_tsv_{}", std::process::id()));
+        let path = dir.join("perlmutter.tsv");
+        let p = CalibProfile::perlmutter();
+        p.to_tsv(&path).unwrap();
+        let q = CalibProfile::from_tsv(&path).unwrap();
+        assert_eq!(q.name, p.name);
+        assert_eq!(q.ranks_per_node, p.ranks_per_node);
+        assert_eq!(q.l_cap_bytes, p.l_cap_bytes);
+        assert_eq!(q.gamma_flop, p.gamma_flop);
+        assert_eq!(q.gamma_flop_dense, p.gamma_flop_dense);
+        assert_eq!(q.intra.len(), p.intra.len());
+        assert_eq!(q.inter.len(), p.inter.len());
+        assert_eq!(q.tiers.len(), p.tiers.len());
+        // Lookups are bit-identical after the roundtrip.
+        for ranks in [1usize, 8, 50, 64, 100, 1024, 16384] {
+            assert_eq!(q.alpha(ranks), p.alpha(ranks), "alpha q={ranks}");
+            assert_eq!(q.beta(ranks), p.beta(ranks), "beta q={ranks}");
+        }
+        for ws in [1usize << 10, 1 << 20, 8 << 20, 1 << 30] {
+            assert_eq!(q.gamma_ws(ws), p.gamma_ws(ws));
+            assert_eq!(q.tier_name(ws), p.tier_name(ws));
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn tsv_load_rejects_incomplete_profiles() {
+        let dir = std::env::temp_dir().join(format!("calib_tsv_bad_{}", std::process::id()));
+        let path = dir.join("bad.tsv");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, "kind\tkey\ta\tb\nmeta\tname\tonly-a-name\t-\n").unwrap();
+        assert!(CalibProfile::from_tsv(&path).is_err());
+        std::fs::write(&path, "wrong\theader\n").unwrap();
+        assert!(CalibProfile::from_tsv(&path).is_err());
+        // Tables present but the gamma meta rows lost: must not load a
+        // profile that prices compute at 0 s/flop.
+        std::fs::write(
+            &path,
+            "kind\tkey\ta\tb\n\
+             meta\tranks_per_node\t4\t-\n\
+             intra\t2\t0.000001\t0.000000001\n\
+             inter\t4\t0.000002\t0.000000002\n\
+             tier\tDRAM\t0.00000000002\t18446744073709551615\n",
+        )
+        .unwrap();
+        assert!(CalibProfile::from_tsv(&path).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn measured_profile_roundtrips_through_tsv() {
+        // The satellite use case: persist a measure_local fit, reload it.
+        let dir = std::env::temp_dir().join(format!("calib_tsv_local_{}", std::process::id()));
+        let path = dir.join("local.tsv");
+        let p = measure_local(true);
+        p.to_tsv(&path).unwrap();
+        let q = CalibProfile::from_tsv(&path).unwrap();
+        assert_eq!(q.name, "local");
+        assert_eq!(q.intra.len(), p.intra.len());
+        for (a, b) in q.intra.iter().zip(&p.intra) {
+            assert_eq!(a.ranks, b.ranks);
+            assert_eq!(a.alpha, b.alpha);
+            assert_eq!(a.beta, b.beta);
+        }
+        std::fs::remove_dir_all(dir).unwrap();
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use super::calib::CalibProfile;
 use crate::collectives::{self, AlgoPolicy};
 use crate::mesh::Mesh;
+use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
 /// A HybridSGD algorithm configuration (the tunables of Eq. 4).
@@ -191,6 +192,31 @@ pub fn eval_algo(
     profile: &CalibProfile,
     policy: AlgoPolicy,
 ) -> ModelBreakdown {
+    let parts = eval_algo_parts(cfg, data, profile, policy);
+    ModelBreakdown {
+        compute: parts.compute,
+        latency: parts.lat_row + parts.lat_col,
+        gram_bw: parts.gram_bw,
+        sync_bw: parts.sync_bw,
+    }
+}
+
+/// [`eval_algo`] split so the row collective's terms are separable from
+/// the column's (the overlap model hides only the row reduce).
+struct AlgoParts {
+    compute: f64,
+    lat_row: f64,
+    lat_col: f64,
+    gram_bw: f64,
+    sync_bw: f64,
+}
+
+fn eval_algo_parts(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+) -> AlgoParts {
     let m = data.m as f64;
     let p = cfg.mesh.p() as f64;
     let (s, b, tau) = (cfg.s as f64, cfg.b as f64, cfg.tau as f64);
@@ -202,26 +228,89 @@ pub fn eval_algo(
     // zero at s = 1, where only the latency of reducing v remains).
     let row_calls = m / (s * b);
     let w_row = cfg.s * (cfg.s - 1) * cfg.b * cfg.b / 2;
-    let (mut latency, mut gram_bw) = (0.0, 0.0);
+    let (mut lat_row, mut gram_bw) = (0.0, 0.0);
     if q_row > 1 {
         let (_, c) = collectives::charge(profile, policy, q_row, w_row);
         let lat = c.messages * profile.alpha(q_row);
-        latency += row_calls * lat;
+        lat_row = row_calls * lat;
         gram_bw = row_calls * (c.time - lat);
     }
 
     // Column Allreduce: the ⌈n/p_c⌉-word weight shard every τ bundles.
     let col_calls = m / (s * b * tau);
-    let mut sync_bw = 0.0;
+    let (mut lat_col, mut sync_bw) = (0.0, 0.0);
     if q_col > 1 {
         let w_col = data.n.div_ceil(q_row);
         let (_, c) = collectives::charge(profile, policy, q_col, w_col);
         let lat = c.messages * profile.alpha(q_col);
-        latency += col_calls * lat;
+        lat_col = col_calls * lat;
         sync_bw = col_calls * (c.time - lat);
     }
 
-    ModelBreakdown { compute, latency, gram_bw, sync_bw }
+    AlgoParts { compute, lat_row, lat_col, gram_bw, sync_bw }
+}
+
+/// Eq. (4) priced under an overlap policy: the **visible** (charged)
+/// breakdown plus the per-epoch seconds hidden behind compute.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapBreakdown {
+    /// The charged terms — what the simulated clocks actually pay.
+    pub visible: ModelBreakdown,
+    /// Row-collective seconds per epoch hidden behind compute (zero with
+    /// overlap off).
+    pub hidden: f64,
+}
+
+impl OverlapBreakdown {
+    /// Total visible (charged) time per epoch — the selection objective.
+    pub fn total(&self) -> f64 {
+        self.visible.total()
+    }
+}
+
+/// Evaluate Eq. (4) under a collective-algorithm policy **and** an
+/// overlap policy. With [`OverlapPolicy::Off`] this is [`eval_algo`] with
+/// zero hidden. With [`OverlapPolicy::Bundle`] the row reduce (its
+/// latency and Gram-bandwidth terms) hides behind the epoch's
+/// overlappable compute — the pipelined window of correction, weights
+/// update, and the next bundle's SpMV/Gram, i.e. the whole compute term —
+/// and only the remainder stays visible; the column sync is not
+/// overlapped. This is the model whose `s*` shifts when communication is
+/// hidden: growing `s` inflates the Gram message, but the inflation is
+/// free until it exceeds the compute window.
+pub fn eval_algo_overlap(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    overlap: OverlapPolicy,
+) -> OverlapBreakdown {
+    let parts = eval_algo_parts(cfg, data, profile, policy);
+    match overlap {
+        OverlapPolicy::Off => OverlapBreakdown {
+            visible: ModelBreakdown {
+                compute: parts.compute,
+                latency: parts.lat_row + parts.lat_col,
+                gram_bw: parts.gram_bw,
+                sync_bw: parts.sync_bw,
+            },
+            hidden: 0.0,
+        },
+        OverlapPolicy::Bundle => {
+            let row_total = parts.lat_row + parts.gram_bw;
+            let exposed = (row_total - parts.compute).max(0.0);
+            let scale = if row_total > 0.0 { exposed / row_total } else { 0.0 };
+            OverlapBreakdown {
+                visible: ModelBreakdown {
+                    compute: parts.compute,
+                    latency: parts.lat_row * scale + parts.lat_col,
+                    gram_bw: parts.gram_bw * scale,
+                    sync_bw: parts.sync_bw,
+                },
+                hidden: row_total - exposed,
+            }
+        }
+    }
 }
 
 /// Bandwidth balance condition of §6.3: `(s−1)·s·b²·τ·p_c ≈ 2n`.
@@ -363,6 +452,40 @@ mod tests {
         let rd =
             eval_algo(&cfg, &data, &prof, AlgoPolicy::Fixed(Algorithm::RecursiveDoubling));
         assert!(ring.sync_bw < rd.sync_bw, "ring {} vs rd {}", ring.sync_bw, rd.sync_bw);
+    }
+
+    #[test]
+    fn overlap_off_matches_eval_algo_with_zero_hidden() {
+        use crate::collectives::AlgoPolicy;
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let base = eval_algo(&cfg, &data, &prof, AlgoPolicy::Auto);
+        let off = eval_algo_overlap(&cfg, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Off);
+        assert_eq!(off.hidden, 0.0);
+        assert_eq!(off.total(), base.total());
+    }
+
+    #[test]
+    fn bundle_overlap_hides_row_comm_up_to_the_compute_window() {
+        use crate::collectives::AlgoPolicy;
+        let data = url_shape();
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let off = eval_algo_overlap(&cfg, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Off);
+        let bun =
+            eval_algo_overlap(&cfg, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Bundle);
+        // Visible total shrinks by exactly the hidden seconds; the column
+        // sync and compute terms are untouched.
+        assert!(bun.hidden > 0.0);
+        assert!(bun.total() < off.total());
+        let diff = off.total() - bun.total();
+        let hid = bun.hidden;
+        assert!((diff - hid).abs() <= 1e-9 * (1.0 + diff), "diff {diff} vs hidden {hid}");
+        assert_eq!(bun.visible.compute, off.visible.compute);
+        assert_eq!(bun.visible.sync_bw, off.visible.sync_bw);
+        // Hidden never exceeds the compute window it hides behind.
+        assert!(bun.hidden <= off.visible.compute * (1.0 + 1e-12));
     }
 
     #[test]

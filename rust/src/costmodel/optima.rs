@@ -9,8 +9,9 @@
 //! [`eval_algo`](super::model::eval_algo) rather than square roots.
 
 use super::calib::CalibProfile;
-use super::model::{eval_algo, eval_flat, ltilde, DataShape, HybridConfig};
+use super::model::{eval_algo_overlap, eval_flat, ltilde, DataShape, HybridConfig};
 use crate::collectives::AlgoPolicy;
+use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
 /// Eq. (5): `s* = sqrt( (2αL̃/(bτ) + nwβ/(bτp_c)) / ((2γ/p + wβ/2)·b) )`.
@@ -84,6 +85,9 @@ pub fn sweep_s(
 
 /// Algorithm-aware `s*`: the integer argmin of Eq. (4) priced under
 /// `policy` (see module docs for why this is a sweep, not a square root).
+/// The bulk-synchronous special case of [`sweep_s_overlap`]
+/// ([`eval_algo_overlap`] at `Off` is
+/// [`eval_algo`](super::model::eval_algo) term for term).
 pub fn sweep_s_algo(
     cfg: &HybridConfig,
     data: &DataShape,
@@ -91,22 +95,54 @@ pub fn sweep_s_algo(
     policy: AlgoPolicy,
     s_max: usize,
 ) -> usize {
-    (1..=s_max)
-        .min_by(|&sa, &sb| {
-            let ta = eval_algo(&with_s(cfg, sa), data, profile, policy).total();
-            let tb = eval_algo(&with_s(cfg, sb), data, profile, policy).total();
-            ta.partial_cmp(&tb).unwrap()
-        })
-        .expect("nonempty sweep")
+    sweep_s_overlap(cfg, data, profile, policy, OverlapPolicy::Off, s_max)
 }
 
 /// Algorithm-aware joint `(s*, b*)`: full grid argmin of Eq. (4) under
-/// `policy` over `[1, s_max] × [1, b_max]`.
+/// `policy` over `[1, s_max] × [1, b_max]` — the bulk-synchronous
+/// special case of [`joint_optimum_overlap`].
 pub fn joint_optimum_algo(
     cfg: &HybridConfig,
     data: &DataShape,
     profile: &CalibProfile,
     policy: AlgoPolicy,
+    s_max: usize,
+    b_max: usize,
+) -> (usize, usize) {
+    joint_optimum_overlap(cfg, data, profile, policy, OverlapPolicy::Off, s_max, b_max)
+}
+
+/// Overlap-aware `s*`: the integer argmin of the **visible** Eq. (4)
+/// total under `policy` and `overlap`. When the row reduce hides behind
+/// compute, growing `s` inflates a message that is free until it exceeds
+/// the compute window — so the optimum shifts toward larger `s` relative
+/// to the bulk-synchronous sweep (never smaller: hiding only discounts
+/// the terms that penalize `s`).
+pub fn sweep_s_overlap(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    overlap: OverlapPolicy,
+    s_max: usize,
+) -> usize {
+    (1..=s_max)
+        .min_by(|&sa, &sb| {
+            let ta = eval_algo_overlap(&with_s(cfg, sa), data, profile, policy, overlap).total();
+            let tb = eval_algo_overlap(&with_s(cfg, sb), data, profile, policy, overlap).total();
+            ta.partial_cmp(&tb).unwrap()
+        })
+        .expect("nonempty sweep")
+}
+
+/// Overlap-aware joint `(s*, b*)`: grid argmin of the visible Eq. (4)
+/// total under `policy` and `overlap` over `[1, s_max] × [1, b_max]`.
+pub fn joint_optimum_overlap(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    overlap: OverlapPolicy,
     s_max: usize,
     b_max: usize,
 ) -> (usize, usize) {
@@ -118,7 +154,7 @@ pub fn joint_optimum_algo(
             c.s = s;
             c.b = b;
             c.tau = c.tau.max(s);
-            let t = eval_algo(&c, data, profile, policy).total();
+            let t = eval_algo_overlap(&c, data, profile, policy, overlap).total();
             if t < best_t {
                 best_t = t;
                 best = (s, b);
@@ -138,6 +174,7 @@ fn with_s(cfg: &HybridConfig, s: usize) -> HybridConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::model::eval_algo;
     use crate::mesh::Mesh;
 
     const ALPHA: f64 = 3.64e-6;
@@ -258,6 +295,79 @@ mod tests {
         for (cs, cb) in [(1, 1), (1, 64), (16, 1), (16, 64)] {
             assert!(best <= at(cs, cb) + 1e-15, "corner ({cs},{cb}) beat the grid argmin");
         }
+    }
+
+    #[test]
+    fn overlap_shifts_the_predicted_s_star_upward() {
+        // Hiding the row reduce discounts exactly the terms that penalize
+        // large s, so the overlap-aware argmin is never below the
+        // bulk-synchronous one — and on a latency-dominated shape it is
+        // strictly above (cheap extra unrolling now rides for free).
+        use crate::collectives::AlgoPolicy;
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 8, 10);
+        let data = shape();
+        let s_off =
+            sweep_s_overlap(&cfg, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Off, 64);
+        let s_bun =
+            sweep_s_overlap(&cfg, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Bundle, 64);
+        assert_eq!(
+            s_off,
+            sweep_s_algo(&cfg, &data, &prof, AlgoPolicy::Auto, 64),
+            "overlap-off sweep must coincide with the algorithm-aware sweep"
+        );
+        assert!(s_bun >= s_off, "overlap shrank s*: {s_bun} < {s_off}");
+        // At every s the visible total never exceeds bulk-synchronous.
+        for s in [1usize, 2, 4, 8, 16, 32] {
+            let off = eval_algo_overlap(
+                &with_s(&cfg, s),
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                OverlapPolicy::Off,
+            )
+            .total();
+            let bun = eval_algo_overlap(
+                &with_s(&cfg, s),
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                OverlapPolicy::Bundle,
+            )
+            .total();
+            assert!(bun <= off * (1.0 + 1e-12), "s={s}: bundle {bun} > off {off}");
+        }
+    }
+
+    #[test]
+    fn joint_optimum_overlap_in_bounds_and_no_worse() {
+        use crate::collectives::AlgoPolicy;
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let data = shape();
+        let (s, b) = joint_optimum_overlap(
+            &cfg,
+            &data,
+            &prof,
+            AlgoPolicy::Auto,
+            OverlapPolicy::Bundle,
+            16,
+            64,
+        );
+        assert!((1..=16).contains(&s));
+        assert!((1..=64).contains(&b));
+        // The overlap-aware optimum's visible total is never worse than
+        // pricing the bulk-synchronous optimum under overlap.
+        let (s0, b0) =
+            joint_optimum_algo(&cfg, &data, &prof, AlgoPolicy::Auto, 16, 64);
+        let at = |s: usize, b: usize| {
+            let mut c = cfg;
+            c.s = s;
+            c.b = b;
+            c.tau = c.tau.max(s);
+            eval_algo_overlap(&c, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Bundle).total()
+        };
+        assert!(at(s, b) <= at(s0, b0) + 1e-15);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 use super::calib::CalibProfile;
 use super::model::{DataShape, HybridConfig};
 use crate::collectives::{self, AlgoPolicy};
+use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
 /// Shape of a concrete partition, extracted from real partition statistics.
@@ -63,6 +64,12 @@ pub struct PredictorKnobs {
     /// under — `Auto` mirrors the engine's default selection, `Fixed(_)`
     /// prices a pinned algorithm (e.g. for per-algorithm sweeps).
     pub algo: AlgoPolicy,
+    /// Overlap policy the row Allreduce is priced under — with `Bundle`,
+    /// its transfer hides behind the per-iteration compute window
+    /// (Gram + SpMV + weights + correction) and only the exposed
+    /// remainder (plus the sync-skew wait, which is not overlappable)
+    /// lands in `sstep_comm`; the hidden part is reported separately.
+    pub overlap: OverlapPolicy,
 }
 
 impl Default for PredictorKnobs {
@@ -72,6 +79,7 @@ impl Default for PredictorKnobs {
             syrkd_floor_s_per_col: 0.0,
             bytes_per_nnz: 12.0,
             algo: AlgoPolicy::Auto,
+            overlap: OverlapPolicy::Off,
         }
     }
 }
@@ -83,10 +91,13 @@ impl Default for PredictorKnobs {
 pub struct PredictedIter {
     /// Gram formation (amortized per iteration).
     pub gram: f64,
-    /// Row-team Allreduce: Hockney transfer + sync-skew wait.
+    /// Row-team Allreduce: exposed Hockney transfer + sync-skew wait.
     pub sstep_comm: f64,
     /// ... of which sync-skew wait.
     pub sstep_skew: f64,
+    /// Row transfer hidden behind overlapped compute (uncharged — not in
+    /// [`PredictedIter::total`]; zero with overlap off).
+    pub sstep_hidden: f64,
     /// Column-team Allreduce (amortized over τ).
     pub fedavg_comm: f64,
     /// Weight update.
@@ -149,10 +160,23 @@ pub fn predict(
     let col_words = part.n_local_mean as usize;
     let col_t = collectives::charge(profile, knobs.algo, cfg.mesh.p_r, col_words).1.time / tau;
 
+    // Overlap: the pipelined row transfer hides behind the iteration's
+    // compute window; the skew wait stays exposed (a slow rank is late,
+    // nothing hides behind lateness).
+    let (row_exposed, row_hidden) = match knobs.overlap {
+        OverlapPolicy::Off => (row_t, 0.0),
+        OverlapPolicy::Bundle => {
+            let window = t.gram + t.spgemv + t.weights + t.correction;
+            let exposed = (row_t - window).max(0.0);
+            (exposed, row_t - exposed)
+        }
+    };
+
     PredictedIter {
         gram: t.gram,
-        sstep_comm: row_t + skew,
+        sstep_comm: row_exposed + skew,
         sstep_skew: skew,
+        sstep_hidden: row_hidden,
         fedavg_comm: col_t,
         weights: t.weights,
         spgemv: t.spgemv,
@@ -371,6 +395,33 @@ mod tests {
         let auto = with(AlgoPolicy::Auto);
         assert!(ring < rd, "ring {ring} vs rd {rd}");
         assert!(auto <= ring * (1.0 + 1e-12), "auto {auto} vs ring {ring}");
+    }
+
+    #[test]
+    fn overlap_knob_moves_comm_into_hidden_without_touching_compute() {
+        let data = url_shape();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let exact = data.n as f64 / 64.0;
+        let shape = PartitionShape { kappa: 1.5, n_local_mean: exact, n_local_max: exact };
+        let off = predict(&cfg, &data, &shape, &prof(), &PredictorKnobs::default());
+        let bun = predict(
+            &cfg,
+            &data,
+            &shape,
+            &prof(),
+            &PredictorKnobs { overlap: OverlapPolicy::Bundle, ..Default::default() },
+        );
+        assert_eq!(off.sstep_hidden, 0.0);
+        assert!(bun.sstep_hidden > 0.0);
+        assert!(bun.total() <= off.total());
+        // Exposed + hidden reconstructs the bulk-synchronous transfer
+        // (the skew wait is identical in both).
+        let row_off = off.sstep_comm - off.sstep_skew;
+        let row_bun = bun.sstep_comm - bun.sstep_skew;
+        assert!((row_bun + bun.sstep_hidden - row_off).abs() <= 1e-12 * (1.0 + row_off));
+        assert_eq!(off.spgemv, bun.spgemv);
+        assert_eq!(off.gram, bun.gram);
+        assert_eq!(off.sstep_skew, bun.sstep_skew);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! per-iteration measurement, result output.
 
 use super::Effort;
-use crate::comm::Charging;
+use crate::comm::{Charging, OverlapPolicy};
 use crate::compute::NativeBackend;
 use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::{Dataset, DatasetSpec};
@@ -41,6 +41,8 @@ pub struct Measured {
     pub per_iter: f64,
     /// Inner iterations measured.
     pub iters: usize,
+    /// Final simulated wall of the run.
+    pub sim_wall: f64,
     /// Phase accounting for the whole run.
     pub book: PhaseBook,
 }
@@ -65,6 +67,8 @@ pub fn charged_opts(bundles: usize) -> RunOpts {
         eval_every: 0,
         charging: Charging::Modeled,
         profile: CalibProfile::perlmutter_contended(),
+        // Bench-scale sweeps read books, not event logs; skip recording.
+        timeline: false,
         ..Default::default()
     }
 }
@@ -75,10 +79,28 @@ pub fn charged_opts(bundles: usize) -> RunOpts {
 /// represented in the per-iteration average (otherwise FedAvg-like
 /// configs would be measured communication-free).
 pub fn measure(ds: &Dataset, cfg: HybridConfig, policy: Partitioner, bundles: usize) -> Measured {
+    measure_overlap(ds, cfg, policy, bundles, OverlapPolicy::Off)
+}
+
+/// [`measure`] under an explicit compute/communication overlap policy.
+pub fn measure_overlap(
+    ds: &Dataset,
+    cfg: HybridConfig,
+    policy: Partitioner,
+    bundles: usize,
+    overlap: OverlapPolicy,
+) -> Measured {
     let rounds = bundles.div_ceil(cfg.tau).max(1);
     let bundles = rounds * cfg.tau;
-    let run = HybridSolver::new(&NativeBackend).run(ds, cfg, policy, &charged_opts(bundles));
-    Measured { per_iter: run.per_iter(), iters: run.inner_iters, book: run.book }
+    let mut opts = charged_opts(bundles);
+    opts.overlap = overlap;
+    let run = HybridSolver::new(&NativeBackend).run(ds, cfg, policy, &opts);
+    Measured {
+        per_iter: run.per_iter(),
+        iters: run.inner_iters,
+        sim_wall: run.sim_wall,
+        book: run.book,
+    }
 }
 
 /// Run to a target loss (or the bundle budget) with tracing on.
@@ -98,6 +120,7 @@ pub fn run_to_target(
         target_loss: target,
         charging: Charging::Modeled,
         profile: CalibProfile::perlmutter_contended(),
+        timeline: false,
         ..Default::default()
     };
     HybridSolver::new(&NativeBackend).run(ds, cfg, policy, &opts)

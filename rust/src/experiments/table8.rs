@@ -8,9 +8,11 @@
 
 use super::fixtures::{self, ms};
 use super::Effort;
+use crate::comm::OverlapPolicy;
 use crate::costmodel::HybridConfig;
 use crate::data::DatasetSpec;
 use crate::mesh::Mesh;
+use crate::metrics::Phase;
 use crate::partition::Partitioner;
 use crate::solvers::SolverKind;
 use crate::util::Table;
@@ -43,11 +45,7 @@ pub fn run(effort: Effort) -> Table {
     for (i, (spec, p, (p_r, p_c))) in CONFIGS.iter().enumerate() {
         let ds = fixtures::dataset(*spec, effort);
         let mesh = Mesh::new(*p_r, *p_c);
-        let hyb_cfg = if mesh.p_c == 1 {
-            HybridConfig::new(mesh, 1, 32, 10)
-        } else {
-            HybridConfig::new(mesh, 4, 32, 10)
-        };
+        let hyb_cfg = hybrid_cfg_of(mesh);
         let fed_cfg = SolverKind::FedAvg.config(*p, None, 4, 32, 10);
 
         let hyb = fixtures::measure(&ds, hyb_cfg, Partitioner::Cyclic, bundles);
@@ -71,6 +69,72 @@ pub fn run(effort: Effort) -> Table {
             format!("{ratio:.2}"),
             format!("{pf}"),
             format!("{ph}"),
+        ]);
+    }
+    table
+}
+
+/// The hybrid mesh of a Table 8 configuration row.
+fn hybrid_cfg_of(mesh: Mesh) -> HybridConfig {
+    if mesh.p_c == 1 {
+        HybridConfig::new(mesh, 1, 32, 10)
+    } else {
+        HybridConfig::new(mesh, 4, 32, 10)
+    }
+}
+
+/// Off-vs-Bundle overlap gain on the Table 8 HybridSGD configurations:
+/// charged wall with the bulk-synchronous books, with the row reduce
+/// hidden behind the next bundle's SpMV, the hidden seconds that account
+/// for the difference, and the resulting speedup.
+pub fn overlap_gain(effort: Effort) -> Table {
+    let mut table = Table::new(&[
+        "dataset",
+        "mesh",
+        "off ms/iter",
+        "bundle ms/iter",
+        "hidden ms/iter",
+        "gain",
+    ]);
+    let mut out = fixtures::results(
+        "table8_overlap",
+        &["dataset", "mesh", "off_ms", "bundle_ms", "hidden_ms", "gain"],
+    );
+    let bundles = effort.bundles(32);
+    for (spec, _p, (p_r, p_c)) in CONFIGS.iter() {
+        let ds = fixtures::dataset(*spec, effort);
+        let mesh = Mesh::new(*p_r, *p_c);
+        let cfg = hybrid_cfg_of(mesh);
+        let off =
+            fixtures::measure_overlap(&ds, cfg, Partitioner::Cyclic, bundles, OverlapPolicy::Off);
+        let bun = fixtures::measure_overlap(
+            &ds,
+            cfg,
+            Partitioner::Cyclic,
+            bundles,
+            OverlapPolicy::Bundle,
+        );
+        let hidden_per_iter = if bun.iters == 0 {
+            0.0
+        } else {
+            bun.book.mean_hidden(Phase::SstepComm) / bun.iters as f64
+        };
+        let gain = if bun.per_iter > 0.0 { off.per_iter / bun.per_iter } else { 1.0 };
+        table.row(&[
+            spec.profile().name.to_string(),
+            mesh.label(),
+            ms(off.per_iter),
+            ms(bun.per_iter),
+            ms(hidden_per_iter),
+            format!("{gain:.2}x"),
+        ]);
+        let _ = out.append(&[
+            spec.profile().name.to_string(),
+            mesh.label(),
+            ms(off.per_iter),
+            ms(bun.per_iter),
+            ms(hidden_per_iter),
+            format!("{gain:.3}"),
         ]);
     }
     table
@@ -108,10 +172,50 @@ mod tests {
         );
     }
 
+    /// The overlap acceptance criterion on the url-like Table 8
+    /// configuration: `--overlap bundle` leaves the trajectory alone,
+    /// strictly shrinks `sim_wall`, and the hidden-seconds column
+    /// accounts for the difference per rank
+    /// (`clock_off − clock_bundle = Δwait + hidden`).
+    #[test]
+    fn url_like_bundle_overlap_strictly_shrinks_sim_wall() {
+        let ds = DatasetSpec::UrlLike.profile().generate_scaled(0.05, fixtures::SEED);
+        let mesh = Mesh::new(8, 32);
+        let cfg = hybrid_cfg_of(mesh);
+        let off =
+            fixtures::measure_overlap(&ds, cfg, Partitioner::Cyclic, 10, OverlapPolicy::Off);
+        let bun =
+            fixtures::measure_overlap(&ds, cfg, Partitioner::Cyclic, 10, OverlapPolicy::Bundle);
+        assert!(
+            bun.sim_wall < off.sim_wall,
+            "bundle {} not strictly below off {}",
+            bun.sim_wall,
+            off.sim_wall
+        );
+        assert_eq!(off.book.mean_hidden(Phase::SstepComm), 0.0);
+        assert!(bun.book.mean_hidden(Phase::SstepComm) > 0.0);
+        for r in 0..mesh.p() {
+            let gap = off.book.rank_algorithm_total(r) - bun.book.rank_algorithm_total(r);
+            let want = off.book.rank_wait_total(r) - bun.book.rank_wait_total(r)
+                + bun.book.rank_hidden_total(r);
+            assert!(
+                (gap - want).abs() <= 1e-12 * (1.0 + gap.abs() + want.abs()),
+                "rank {r}: clock saving {gap} != wait-delta + hidden {want}"
+            );
+        }
+    }
+
     #[test]
     #[ignore = "bench-scale; run via `cargo bench --bench table8_per_iter`"]
     fn full_driver() {
         let t = run(Effort::Quick);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    #[ignore = "bench-scale; run via `cargo bench --bench table8_per_iter`"]
+    fn full_overlap_driver() {
+        let t = overlap_gain(Effort::Quick);
         assert_eq!(t.len(), 3);
     }
 }

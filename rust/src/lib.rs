@@ -27,6 +27,13 @@
 //!   the `Linear` oracle preserving the seed engine's charging. Reduced
 //!   values are bit-identical across algorithms (canonical reduction
 //!   order); only charged time/message/word books change.
+//! * **[`timeline`]** — the event-driven per-rank timeline engine:
+//!   nonblocking collectives as schedules of steps, compute/communication
+//!   overlap charging (`OverlapPolicy`, the `--overlap` knob), the
+//!   reduce-scatter-only charging path, and a critical-path analyzer
+//!   reporting which phase each rank's makespan is bound by. Trajectories
+//!   never change across overlap policies; hidden transfer seconds are
+//!   booked in their own [`metrics::PhaseBook`] column.
 //! * **[`costmodel`]** — the closed-form α-β-γ model (Eq. 4), the optima
 //!   `s*`/`b*` (Eq. 5/6), the topology rule (Eq. 7), the regime taxonomy
 //!   (Table 5) and every empirical refinement of §6.5 (cache-aware γ(W),
@@ -48,6 +55,7 @@ pub mod partition;
 pub mod runtime;
 pub mod solvers;
 pub mod sparse;
+pub mod timeline;
 pub mod util;
 
 /// Word size in bytes for all dataset / model words (FP64, matching the

@@ -7,15 +7,16 @@
 //!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
 //!                       [--bundles 200] [--target 0.5] [--backend xla|native]
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
+//!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
-//! hybrid-sgd calibrate  [--quick]                  # Table 7 locally
+//! hybrid-sgd calibrate  [--quick] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
 //! hybrid-sgd datasets                              # registry listing
 //! hybrid-sgd table4|table5|table7|table8|table9|table10|table11
 //! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
 //! ```
 
-use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging};
+use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging, OverlapPolicy};
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::model::DataShape;
 use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, HybridConfig};
@@ -81,7 +82,9 @@ fn usage() {
          common flags: --dataset url|news20|rcv1|epsilon|synthetic  --p N\n  \
          --mesh PRxPC  --partitioner rows|nnz|cyclic  --s N --b N --tau N\n  \
          --eta F  --bundles N  --target F  --backend native|xla\n  \
-         --effort quick|full  --scale F  --lanes N  --charging modeled|measured"
+         --effort quick|full  --scale F  --lanes N  --charging modeled|measured\n  \
+         --collective auto|linear|rd|ring|rabenseifner  --overlap off|bundle\n  \
+         --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv"
     );
 }
 
@@ -160,6 +163,15 @@ fn cmd_datasets() -> i32 {
 fn cmd_calibrate(flags: &Flags) -> i32 {
     let quick = flags.contains_key("quick");
     let p = calib::measure_local(quick);
+    if let Some(path) = flags.get("save") {
+        match p.to_tsv(path) {
+            Ok(()) => println!("profile saved to {path} (reload with `train --profile {path}`)"),
+            Err(e) => {
+                eprintln!("failed to save profile to {path}: {e}");
+                return 1;
+            }
+        }
+    }
     let mut t = Table::new(&["kind", "key", "alpha (us)", "beta/gamma (s/B)"]);
     for pt in &p.intra {
         t.row(&[
@@ -252,6 +264,20 @@ fn cmd_train(flags: &Flags) -> i32 {
         .and_then(|s| Partitioner::from_name(s))
         .unwrap_or(Partitioner::Cyclic);
 
+    let profile = match flags.get("profile") {
+        Some(path) => match CalibProfile::from_tsv(path) {
+            Ok(p) => {
+                println!("charging from saved profile {path} ({})", p.name);
+                p
+            }
+            Err(e) => {
+                eprintln!("failed to load profile {path}: {e}");
+                return 2;
+            }
+        },
+        None => CalibProfile::perlmutter(),
+    };
+
     let opts = RunOpts {
         eta: get(flags, "eta", 0.1),
         max_bundles: get(flags, "bundles", 200),
@@ -262,7 +288,7 @@ fn cmd_train(flags: &Flags) -> i32 {
             Some("measured") => Charging::Measured,
             _ => Charging::Modeled,
         },
-        profile: CalibProfile::perlmutter(),
+        profile,
         algo: match flags.get("collective").map(|s| s.as_str()) {
             None | Some("auto") => AlgoPolicy::Auto,
             Some(name) => match Algorithm::from_name(name) {
@@ -275,6 +301,21 @@ fn cmd_train(flags: &Flags) -> i32 {
                 }
             },
         },
+        overlap: match flags.get("overlap").map(|s| s.as_str()) {
+            None => OverlapPolicy::Off,
+            Some(name) => match OverlapPolicy::from_name(name) {
+                Some(o) => o,
+                None => {
+                    eprintln!("unknown --overlap {name} (want off|bundle)");
+                    return 2;
+                }
+            },
+        },
+        rs_row: flags.contains_key("rs-row"),
+        // The CLI reports book-based stats only; don't record an event
+        // log nothing reads (large at high p · bundles). The analyzer
+        // surface is `examples/overlap_breakdown.rs`.
+        timeline: false,
         seed: get(flags, "seed", 0x5EEDu64),
     };
 
@@ -326,6 +367,12 @@ fn cmd_train(flags: &Flags) -> i32 {
         run.final_loss(),
         ds.accuracy(&run.x)
     );
+    if opts.overlap == OverlapPolicy::Bundle {
+        println!(
+            "overlap: {:.4} s of row-reduce transfer hidden behind compute (mean/rank)",
+            run.book.mean_hidden(hybrid_sgd::metrics::Phase::SstepComm)
+        );
+    }
     if let Some(t) = run.time_to_target {
         println!("time-to-target: {t:.4} s (simulated)");
     }

@@ -4,6 +4,7 @@ use crate::collectives::AlgoPolicy;
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
+use crate::timeline::{OverlapPolicy, Timeline};
 
 /// Options controlling a solver run.
 #[derive(Clone, Debug)]
@@ -25,6 +26,31 @@ pub struct RunOpts {
     /// Collective-algorithm policy (auto-selected by default; pin with
     /// `Fixed(_)`). Changes charged time/books only, never trajectories.
     pub algo: AlgoPolicy,
+    /// Compute/communication overlap policy: `Off` (bulk-synchronous,
+    /// seed-identical books) or `Bundle` (the s-step row Allreduce of
+    /// bundle `k` hides behind the SpMV/Gram of bundle `k + 1`). Changes
+    /// charged time/books only, never trajectories; `sim_wall` never
+    /// increases under `Bundle`. Note: when a run stops early on
+    /// `target_loss` under `Bundle`, `time_to_target` is read with the
+    /// last row transfer still in flight (its exposed remainder settles
+    /// into the final `sim_wall`).
+    pub overlap: OverlapPolicy,
+    /// Charge the s-step row-team reduce as a **reduce-scatter** (the
+    /// allgather half of the ring/Rabenseifner schedule dropped). This is
+    /// a **what-if charging path**: it prices the restructured pipeline
+    /// the ROADMAP's 2× bandwidth item envisions, in which each rank
+    /// consumes only its own residual block — the current solver's
+    /// *redundant* correction still reads the full buffer, which a real
+    /// reduce-scatter could not deliver, so treat `rs_row` books as the
+    /// projected saving of that redesign, not as a runnable schedule of
+    /// today's algorithm. Like the collective algorithms, it moves books
+    /// only, never values.
+    pub rs_row: bool,
+    /// Record the per-rank event log ([`SolverRun::timeline`]). On by
+    /// default; bench-scale sweeps that never read the log turn it off
+    /// (charging and books are unaffected — recording is observation
+    /// only).
+    pub timeline: bool,
     /// Master seed (drives dataset-independent solver randomness; sampling
     /// itself is cyclic and deterministic, matching the paper §5).
     pub seed: u64,
@@ -41,6 +67,9 @@ impl Default for RunOpts {
             charging: Charging::Modeled,
             profile: CalibProfile::perlmutter(),
             algo: AlgoPolicy::Auto,
+            overlap: OverlapPolicy::Off,
+            rs_row: false,
+            timeline: true,
             seed: 0x5EED,
         }
     }
@@ -76,6 +105,9 @@ pub struct SolverRun {
     pub sim_wall: f64,
     /// Phase accounting (Table 10 material).
     pub book: PhaseBook,
+    /// Per-rank event log of the run (input to
+    /// [`timeline::analyzer`](crate::timeline::analyzer)).
+    pub timeline: Timeline,
     /// Simulated time at which `target_loss` was first met, if it was.
     pub time_to_target: Option<f64>,
 }
@@ -110,6 +142,7 @@ mod tests {
             inner_iters: 20,
             sim_wall: 2.0,
             book: PhaseBook::new(1),
+            timeline: Timeline::new(1),
             time_to_target: None,
         };
         assert!((r.per_iter() - 0.1).abs() < 1e-12);

@@ -20,9 +20,19 @@
 //! — the deferred FedAvg synchronization. The mesh corners recover the 1D
 //! baselines exactly (no row partner ⇒ SstepComm free; no column partner ⇒
 //! FedAvgComm free).
+//!
+//! **Overlap** ([`RunOpts::overlap`] = `Bundle`): the loop charges a
+//! DaSGD-style software pipeline — step 3's row reduce is *posted*
+//! nonblocking and completed only after the SpMV/Gram of the next bundle,
+//! so its transfer hides behind the intervening compute (correction,
+//! weights, FedAvg, next SpMV/Gram). The math still executes in program
+//! order at the post (values bit-identical to bulk-synchronous); only
+//! the charged books move, and `sim_wall` can only shrink.
+//! [`RunOpts::rs_row`] additionally charges that reduce as a
+//! reduce-scatter (allgather half dropped) for the own-block consumer.
 
 use super::common::{RunOpts, SolverRun, TracePoint};
-use crate::comm::{Cost, Engine, Reduce, Scope};
+use crate::comm::{CollHandle, Cost, Engine, OverlapPolicy, Reduce, Scope};
 use crate::compute::ComputeBackend;
 use crate::costmodel::HybridConfig;
 use crate::data::Dataset;
@@ -108,6 +118,7 @@ impl<'a> HybridSolver<'a> {
         let mut engine = Engine::new(mesh, opts.profile.clone(), opts.charging)
             .with_lanes(opts.lanes)
             .with_algo(opts.algo);
+        engine.timeline.set_enabled(opts.timeline);
 
         let backend = self.backend;
         let (s, b, eta) = (cfg.s, cfg.b, opts.eta);
@@ -116,6 +127,9 @@ impl<'a> HybridSolver<'a> {
         let mut trace = Vec::new();
         let mut time_to_target = None;
         let mut bundles_run = 0usize;
+        // At most one row reduce is in flight (posted under
+        // OverlapPolicy::Bundle, completed after the next bundle's Gram).
+        let mut pending: Option<CollHandle> = None;
 
         for bundle in 0..opts.max_bundles {
             // --- 1+2: sample, partial products, partial Gram -------------
@@ -153,10 +167,54 @@ impl<'a> HybridSolver<'a> {
                 });
             }
 
-            // --- 3: row-team Allreduce of [v | tril(G)] ------------------
-            engine.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |st| {
-                &mut st.comm
-            });
+            // Complete the previous bundle's row reduce: under
+            // OverlapPolicy::Bundle it has been hiding behind this
+            // bundle's SpMV/Gram (and the previous bundle's tail phases).
+            if let Some(h) = pending.take() {
+                engine.wait(h);
+            }
+
+            // --- 3: row-team reduce of [v | tril(G)] ---------------------
+            // rs_row charges the reduce-scatter half only; Bundle posts
+            // nonblocking and defers completion to the next bundle.
+            match (opts.rs_row, opts.overlap) {
+                (false, OverlapPolicy::Off) => {
+                    engine.allreduce(
+                        Phase::SstepComm,
+                        Scope::RowTeam,
+                        Reduce::Sum,
+                        &mut states,
+                        |st| &mut st.comm,
+                    );
+                }
+                (false, OverlapPolicy::Bundle) => {
+                    pending = Some(engine.iallreduce(
+                        Phase::SstepComm,
+                        Scope::RowTeam,
+                        Reduce::Sum,
+                        &mut states,
+                        |st| &mut st.comm,
+                    ));
+                }
+                (true, OverlapPolicy::Off) => {
+                    engine.reduce_scatter(
+                        Phase::SstepComm,
+                        Scope::RowTeam,
+                        Reduce::Sum,
+                        &mut states,
+                        |st| &mut st.comm,
+                    );
+                }
+                (true, OverlapPolicy::Bundle) => {
+                    pending = Some(engine.ireduce_scatter(
+                        Phase::SstepComm,
+                        Scope::RowTeam,
+                        Reduce::Sum,
+                        &mut states,
+                        |st| &mut st.comm,
+                    ));
+                }
+            }
 
             // --- 4: redundant correction recurrence ----------------------
             engine.compute(Phase::Correction, &mut states, |_rank, st| {
@@ -226,6 +284,12 @@ impl<'a> HybridSolver<'a> {
             }
         }
 
+        // Settle any still-in-flight row transfer before the books are
+        // read (its exposed remainder lands in the final sim_wall).
+        if let Some(h) = pending.take() {
+            engine.wait(h);
+        }
+
         let x = assemble_averaged(&mp, &states);
         SolverRun {
             name: format!("hybrid {} s={} b={} tau={} {}", mesh, s, b, cfg.tau, policy.name()),
@@ -235,6 +299,7 @@ impl<'a> HybridSolver<'a> {
             inner_iters: bundles_run * s,
             sim_wall: engine.sim_wall(),
             book: engine.book,
+            timeline: engine.timeline,
             time_to_target,
         }
     }
@@ -444,6 +509,73 @@ mod tests {
         let b = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts(10));
         assert_eq!(a.x, b.x);
         assert_eq!(a.sim_wall, b.sim_wall);
+    }
+
+    /// Bundle overlap is a charging change only: identical trajectory,
+    /// never-larger wall, and the per-rank accounting identity
+    /// `clock_off − clock_bundle = Δwait + hidden`.
+    #[test]
+    fn bundle_overlap_preserves_trajectory_and_books_hidden() {
+        use crate::comm::OverlapPolicy;
+        let ds = toy(10, 192, 48, 6, 0.6);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+        let run_with = |overlap: OverlapPolicy| {
+            let mut o = opts(10);
+            o.overlap = overlap;
+            HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o)
+        };
+        let off = run_with(OverlapPolicy::Off);
+        let bundle = run_with(OverlapPolicy::Bundle);
+        assert_eq!(off.x, bundle.x, "overlap changed the trajectory");
+        assert!(
+            bundle.sim_wall < off.sim_wall,
+            "bundle {} not faster than off {}",
+            bundle.sim_wall,
+            off.sim_wall
+        );
+        assert_eq!(off.book.mean_hidden(Phase::SstepComm), 0.0);
+        assert!(bundle.book.mean_hidden(Phase::SstepComm) > 0.0);
+        // Per-rank identity: the clock saving is exactly the wait delta
+        // plus the hidden transfer.
+        for r in 0..cfg.mesh.p() {
+            let gap = off.book.rank_algorithm_total(r) - bundle.book.rank_algorithm_total(r);
+            let want = off.book.rank_wait_total(r) - bundle.book.rank_wait_total(r)
+                + bundle.book.rank_hidden_total(r);
+            assert!(
+                (gap - want).abs() <= 1e-12 * (1.0 + gap.abs() + want.abs()),
+                "rank {r}: gap {gap} != wait-delta + hidden {want}"
+            );
+        }
+    }
+
+    /// The reduce-scatter row charging path never changes values, only
+    /// cheapens the SstepComm books.
+    #[test]
+    fn rs_row_preserves_trajectory_and_cheapens_row_comm() {
+        use crate::collectives::{AlgoPolicy, Algorithm};
+        let ds = toy(11, 128, 40, 5, 0.5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+        let run_with = |rs_row: bool| {
+            let mut o = opts(8);
+            o.rs_row = rs_row;
+            o.algo = AlgoPolicy::Fixed(Algorithm::RingAllreduce);
+            HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &o)
+        };
+        let full = run_with(false);
+        let rs = run_with(true);
+        assert_eq!(full.x, rs.x, "rs_row changed the trajectory");
+        let t_full = full.book.mean_charged(Phase::SstepComm);
+        let t_rs = rs.book.mean_charged(Phase::SstepComm);
+        assert!(t_rs < t_full, "rs {t_rs} not cheaper than full {t_full}");
+        // Ring's reduce-scatter halves the words on the row collective;
+        // the FedAvg column books are untouched (up to fp noise from the
+        // shifted clocks entering its wait terms).
+        assert!(rs.book.words[0] < full.book.words[0]);
+        let f_full = full.book.mean_charged(Phase::FedAvgComm);
+        let f_rs = rs.book.mean_charged(Phase::FedAvgComm);
+        assert!((f_full - f_rs).abs() <= 1e-12 * (1.0 + f_full.abs()), "{f_full} vs {f_rs}");
     }
 
     /// Lane parallelism must not change the trajectory (engine guarantee,

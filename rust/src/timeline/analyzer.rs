@@ -1,0 +1,195 @@
+//! Critical-path analysis over a recorded [`Timeline`].
+//!
+//! The bulk-synchronous books answer "how much time did phase X cost on
+//! average"; the analyzer answers the scheduling question the overlap
+//! work actually turns on: **which phase is each rank's makespan bound
+//! by, and how much transfer ran hidden versus exposed**. It aggregates
+//! the event log per `(rank, phase, kind)` and reports charged / wait /
+//! hidden seconds per phase plus per-rank binding phases — the table
+//! `examples/overlap_breakdown.rs` prints.
+
+use super::{EventKind, Timeline};
+use crate::metrics::Phase;
+
+/// Aggregated seconds of one phase (means over ranks unless noted).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseLine {
+    /// Clock-advancing seconds (compute + exposed transfer + wait).
+    pub charged: f64,
+    /// … of which wait-for-slowest.
+    pub wait: f64,
+    /// Transfer seconds that ran hidden behind compute (uncharged).
+    pub hidden: f64,
+    /// Max over ranks of the charged seconds (the critical-path view).
+    pub charged_max: f64,
+}
+
+/// Per-rank, per-phase aggregation of a timeline's events.
+#[derive(Clone, Debug)]
+pub struct CriticalPath {
+    p: usize,
+    /// `charged[phase][rank]` — clock-advancing seconds.
+    charged: Vec<Vec<f64>>,
+    /// `wait[phase][rank]`.
+    wait: Vec<Vec<f64>>,
+    /// `hidden[phase][rank]`.
+    hidden: Vec<Vec<f64>>,
+    /// Per-rank latest clock-advancing event end (the rank's makespan).
+    end: Vec<f64>,
+}
+
+impl CriticalPath {
+    /// Aggregate a recorded timeline.
+    pub fn analyze(timeline: &Timeline) -> CriticalPath {
+        let p = timeline.ranks();
+        let n = Phase::all().len();
+        let mut cp = CriticalPath {
+            p,
+            charged: vec![vec![0.0; p]; n],
+            wait: vec![vec![0.0; p]; n],
+            hidden: vec![vec![0.0; p]; n],
+            end: vec![0.0; p],
+        };
+        for e in timeline.events() {
+            let pi = phase_index(e.phase);
+            match e.kind {
+                EventKind::Compute | EventKind::Transfer => cp.charged[pi][e.rank] += e.dur(),
+                EventKind::Wait => {
+                    cp.charged[pi][e.rank] += e.dur();
+                    cp.wait[pi][e.rank] += e.dur();
+                }
+                EventKind::Hidden => cp.hidden[pi][e.rank] += e.dur(),
+            }
+            if e.kind.is_charged() && e.end > cp.end[e.rank] {
+                cp.end[e.rank] = e.end;
+            }
+        }
+        cp
+    }
+
+    /// Ranks tracked.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// The timeline's makespan: the latest clock-advancing instant over
+    /// all ranks.
+    pub fn makespan(&self) -> f64 {
+        self.end.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// The rank whose clock defines the makespan (first of ties).
+    pub fn makespan_rank(&self) -> usize {
+        let mut best = 0;
+        for (r, &e) in self.end.iter().enumerate() {
+            if e > self.end[best] {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// The phase a rank's time is bound by: the one with the most charged
+    /// (clock-advancing) seconds on that rank.
+    pub fn bound_by(&self, rank: usize) -> Phase {
+        let mut best = Phase::all()[0];
+        let mut best_t = f64::NEG_INFINITY;
+        for ph in Phase::all() {
+            let t = self.charged[phase_index(ph)][rank];
+            if t > best_t {
+                best_t = t;
+                best = ph;
+            }
+        }
+        best
+    }
+
+    /// The phase the makespan rank is bound by.
+    pub fn makespan_bound_by(&self) -> Phase {
+        self.bound_by(self.makespan_rank())
+    }
+
+    /// Aggregated line for one phase.
+    pub fn line(&self, phase: Phase) -> PhaseLine {
+        let pi = phase_index(phase);
+        PhaseLine {
+            charged: mean(&self.charged[pi]),
+            wait: mean(&self.wait[pi]),
+            hidden: mean(&self.hidden[pi]),
+            charged_max: self.charged[pi].iter().copied().fold(0.0, f64::max),
+        }
+    }
+
+    /// All phase lines, in Table 10 row order.
+    pub fn rows(&self) -> Vec<(Phase, PhaseLine)> {
+        Phase::all().iter().map(|&ph| (ph, self.line(ph))).collect()
+    }
+
+    /// One rank's total hidden seconds across phases.
+    pub fn rank_hidden(&self, rank: usize) -> f64 {
+        self.hidden.iter().map(|per_rank| per_rank[rank]).sum()
+    }
+}
+
+fn phase_index(phase: Phase) -> usize {
+    Phase::all().iter().position(|&p| p == phase).expect("phase in Phase::all()")
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_by_phase_and_kind() {
+        let mut tl = Timeline::new(2);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 2.0);
+        tl.record(1, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(1, Phase::SstepComm, EventKind::Wait, 1.0, 2.0);
+        tl.record(0, Phase::SstepComm, EventKind::Transfer, 2.0, 3.0);
+        tl.record(1, Phase::SstepComm, EventKind::Transfer, 2.0, 3.0);
+        tl.record(0, Phase::SstepComm, EventKind::Hidden, 3.0, 3.5);
+        let cp = CriticalPath::analyze(&tl);
+        let spmv = cp.line(Phase::SpGemv);
+        assert!((spmv.charged - 1.5).abs() < 1e-15);
+        assert_eq!(spmv.charged_max, 2.0);
+        let comm = cp.line(Phase::SstepComm);
+        assert!((comm.charged - 1.5).abs() < 1e-15);
+        assert!((comm.wait - 0.5).abs() < 1e-15);
+        assert!((comm.hidden - 0.25).abs() < 1e-15);
+        assert!((cp.rank_hidden(0) - 0.5).abs() < 1e-15);
+        assert_eq!(cp.rank_hidden(1), 0.0);
+    }
+
+    #[test]
+    fn makespan_ignores_hidden_spans() {
+        let mut tl = Timeline::new(2);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 4.0);
+        tl.record(1, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        // A hidden span stretching past every charged event must not move
+        // the makespan: it never advanced a clock.
+        tl.record(1, Phase::SstepComm, EventKind::Hidden, 1.0, 9.0);
+        let cp = CriticalPath::analyze(&tl);
+        assert_eq!(cp.makespan(), 4.0);
+        assert_eq!(cp.makespan_rank(), 0);
+        assert_eq!(cp.makespan_bound_by(), Phase::SpGemv);
+    }
+
+    #[test]
+    fn bound_by_picks_the_dominant_phase() {
+        let mut tl = Timeline::new(1);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(0, Phase::SstepComm, EventKind::Transfer, 1.0, 4.0);
+        tl.record(0, Phase::Correction, EventKind::Compute, 4.0, 5.0);
+        let cp = CriticalPath::analyze(&tl);
+        assert_eq!(cp.bound_by(0), Phase::SstepComm);
+        assert_eq!(cp.rows().len(), Phase::all().len());
+    }
+}

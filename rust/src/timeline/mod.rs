@@ -1,0 +1,383 @@
+//! Event-driven per-rank timeline engine — the charging layer that lets
+//! collectives overlap with compute.
+//!
+//! The seed engine charged every collective bulk-synchronously: wait for
+//! the slowest team member, then pay the whole transfer on every rank's
+//! clock. On real Cray EX-class machines the dominant optimization is the
+//! opposite: post the collective early and *hide* its transfer behind
+//! compute that does not depend on it (DaSGD's delayed-averaging
+//! pipeline, arXiv:2006.00441). This module makes that expressible while
+//! preserving the repo's determinism contract — **reduced values never
+//! change, only the charged time books do**:
+//!
+//! * [`Timeline`] — a per-rank event log. Every clock advance the engine
+//!   makes (compute, collective transfer, sync-skew wait) is recorded as
+//!   an [`Event`] with a phase, a kind, and a simulated-time span; hidden
+//!   transfer is recorded too, as the zero-charge [`EventKind::Hidden`].
+//! * [`PendingCollective`] — one posted (nonblocking) collective on one
+//!   team. Posting resolves the transfer's start (the instant the slowest
+//!   member arrives) from the per-rank clocks; completing it applies the
+//!   timeline charging rule below. The engine's blocking Allreduce is the
+//!   degenerate schedule: post immediately followed by complete, which
+//!   reproduces the seed's wait-then-transfer charging **bit for bit**.
+//! * [`schedule`] — collectives as *schedules of steps*: the per-round
+//!   shapes of the `collectives::algos` layer, which is what physically
+//!   justifies interrupting a transfer at an arbitrary instant (a rank
+//!   can be mid-ring, some rounds done, some hidden, some exposed).
+//! * [`analyzer`] — the critical-path analyzer over a recorded timeline:
+//!   per-phase charged/wait/hidden totals and, per rank, which phase its
+//!   makespan is actually bound by.
+//!
+//! # The charging rule
+//!
+//! A pending collective with start `t₀` (max member clock at post) and
+//! duration `d` completes on a member whose clock has advanced to `c`:
+//!
+//! * `c ≤ t₀` — degenerate (bulk-synchronous): the member waits
+//!   `t₀ − c`, then pays the full `d`; clock lands on `t₀ + d`. This
+//!   branch is expression-for-expression the seed engine's charging.
+//! * `t₀ < c < t₀ + d` — partial overlap: `c − t₀` seconds of transfer
+//!   already ran behind the member's compute (booked hidden, uncharged);
+//!   only the remainder `t₀ + d − c` is exposed and charged; clock lands
+//!   on `t₀ + d`.
+//! * `c ≥ t₀ + d` — full overlap: the whole transfer hid behind compute;
+//!   `d` is booked hidden, nothing is charged, the clock does not move.
+//!
+//! Per rank this yields the accounting identity the tests verify:
+//! `clock_off − clock_overlap = Δwait + hidden`.
+//!
+//! [`OverlapPolicy`] is the user-facing knob threaded through
+//! [`RunOpts`](crate::solvers::RunOpts), the CLI (`--overlap`) and the
+//! cost model: `Off` keeps every book bit-identical to the seed engine,
+//! `Bundle` software-pipelines HybridSGD so the s-step row-team Allreduce
+//! of bundle *k* hides behind the SpMV/Gram of bundle *k + 1*.
+
+pub mod analyzer;
+pub mod schedule;
+
+pub use analyzer::CriticalPath;
+pub use schedule::CollectiveSchedule;
+
+use crate::collectives::{Algorithm, CollectiveCost};
+use crate::metrics::{Phase, PhaseBook};
+
+/// When the engine may charge collective transfer time *behind* later
+/// compute instead of bulk-synchronously.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverlapPolicy {
+    /// Bulk-synchronous: every collective is completed where it is
+    /// issued. Time/message/word books are bit-identical to the seed
+    /// engine's.
+    #[default]
+    Off,
+    /// Software-pipelined bundles (the DaSGD-style delayed pipeline): the
+    /// s-step row-team Allreduce of bundle *k* is posted nonblocking and
+    /// completed only after the SpMV/Gram of bundle *k + 1*, so its
+    /// transfer hides behind the pipeline's intervening compute. Solver
+    /// trajectories are unchanged (the reduction math still runs in
+    /// program order at the post); only the charged books move, with the
+    /// hidden seconds booked in [`PhaseBook`]'s hidden column.
+    Bundle,
+}
+
+impl OverlapPolicy {
+    /// CLI/table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapPolicy::Off => "off",
+            OverlapPolicy::Bundle => "bundle",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn from_name(s: &str) -> Option<OverlapPolicy> {
+        match s {
+            "off" => Some(OverlapPolicy::Off),
+            "bundle" => Some(OverlapPolicy::Bundle),
+            _ => None,
+        }
+    }
+}
+
+/// What a recorded event's span was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A compute phase advancing the rank's clock.
+    Compute,
+    /// Exposed (charged) collective transfer.
+    Transfer,
+    /// Wait-for-slowest sync skew inside a collective.
+    Wait,
+    /// Collective transfer that ran behind compute — uncharged; the span
+    /// is in simulated time but does not advance the clock.
+    Hidden,
+}
+
+impl EventKind {
+    /// Table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Compute => "compute",
+            EventKind::Transfer => "transfer",
+            EventKind::Wait => "wait",
+            EventKind::Hidden => "hidden",
+        }
+    }
+
+    /// Whether this kind advances the simulated clock (is charged).
+    pub fn is_charged(&self) -> bool {
+        !matches!(self, EventKind::Hidden)
+    }
+}
+
+/// One span on one rank's timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Rank the span belongs to.
+    pub rank: usize,
+    /// Phase the span is attributed to.
+    pub phase: Phase,
+    /// What the span was spent on.
+    pub kind: EventKind,
+    /// Simulated start time (seconds).
+    pub start: f64,
+    /// Simulated end time (seconds).
+    pub end: f64,
+}
+
+impl Event {
+    /// Span length in seconds.
+    pub fn dur(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// The per-rank event log the engine records every charge into.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    p: usize,
+    events: Vec<Event>,
+    enabled: bool,
+}
+
+impl Timeline {
+    /// New (enabled) timeline over `p` ranks.
+    pub fn new(p: usize) -> Timeline {
+        Timeline { p, events: Vec::new(), enabled: true }
+    }
+
+    /// Ranks tracked.
+    pub fn ranks(&self) -> usize {
+        self.p
+    }
+
+    /// Disable/enable recording (e.g. for very large sweeps where the
+    /// event log is not consumed). Charging is unaffected.
+    pub fn set_enabled(&mut self, enabled: bool) {
+        self.enabled = enabled;
+    }
+
+    /// Whether events are currently recorded.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one span (zero-length spans are dropped).
+    pub fn record(&mut self, rank: usize, phase: Phase, kind: EventKind, start: f64, end: f64) {
+        if self.enabled && end > start {
+            self.events.push(Event { rank, phase, kind, start, end });
+        }
+    }
+
+    /// All recorded events, in record order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Events of one rank, in record order.
+    pub fn events_of(&self, rank: usize) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(move |e| e.rank == rank)
+    }
+
+    /// Drop all recorded events (e.g. after warmup).
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+}
+
+/// One posted (nonblocking) collective on one team.
+///
+/// The transfer occupies `[t_start, t_start + cost.time]` in simulated
+/// time, where `t_start` is the instant the slowest member posted. The
+/// reduction *math* has already happened at the post (the determinism
+/// contract); completing only settles the charging per the module-level
+/// rule.
+#[derive(Clone, Debug)]
+pub struct PendingCollective {
+    /// Phase the charge is attributed to.
+    pub phase: Phase,
+    /// Participating ranks, in team order.
+    pub team: Vec<usize>,
+    /// Simulated instant the transfer starts (slowest member's post).
+    pub t_start: f64,
+    /// Algorithm the policy resolved for this `(team, payload)`.
+    pub algo: Algorithm,
+    /// Aggregate charged shape of the schedule.
+    pub cost: CollectiveCost,
+}
+
+impl PendingCollective {
+    /// Post a collective: resolve its start from the members' clocks.
+    pub fn post(
+        phase: Phase,
+        team: Vec<usize>,
+        clocks: &[f64],
+        algo: Algorithm,
+        cost: CollectiveCost,
+    ) -> PendingCollective {
+        let t_start = team.iter().map(|&m| clocks[m]).fold(0.0, f64::max);
+        PendingCollective { phase, team, t_start, algo, cost }
+    }
+
+    /// Simulated instant the transfer finishes.
+    pub fn done_at(&self) -> f64 {
+        self.t_start + self.cost.time
+    }
+
+    /// Complete the collective: settle each member's charge per the
+    /// module-level charging rule, book message/word counts, and record
+    /// the timeline events. Consumes the pending op.
+    pub fn complete(self, clocks: &mut [f64], book: &mut PhaseBook, timeline: &mut Timeline) {
+        let q = self.team.len();
+        let dur = self.cost.time;
+        for &m in &self.team {
+            let c = clocks[m];
+            if c <= self.t_start {
+                // Degenerate (bulk-synchronous) completion — the seed
+                // engine's wait-then-transfer charging, bit for bit.
+                let wait = self.t_start - c;
+                book.charge(self.phase, m, wait + dur);
+                book.charge_wait(self.phase, m, wait);
+                clocks[m] = self.t_start + dur;
+                timeline.record(m, self.phase, EventKind::Wait, c, self.t_start);
+                timeline.record(m, self.phase, EventKind::Transfer, self.t_start, clocks[m]);
+            } else {
+                // The member computed past the start: that span of the
+                // transfer ran hidden; only the remainder is exposed.
+                let t_done = self.t_start + dur;
+                let exposed = (t_done - c).max(0.0);
+                let hidden = dur - exposed;
+                book.charge(self.phase, m, exposed);
+                book.charge_hidden(self.phase, m, hidden);
+                timeline.record(
+                    m,
+                    self.phase,
+                    EventKind::Hidden,
+                    self.t_start,
+                    self.t_start + hidden,
+                );
+                if exposed > 0.0 {
+                    timeline.record(m, self.phase, EventKind::Transfer, c, t_done);
+                    clocks[m] = t_done;
+                }
+            }
+            if q > 1 {
+                book.words[m] += self.cost.words;
+                book.messages[m] += self.cost.messages;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(clocks: &[f64], dur: f64) -> PendingCollective {
+        let team: Vec<usize> = (0..clocks.len()).collect();
+        let cost = CollectiveCost { time: dur, steps: 2, messages: 2.0, words: 100.0 };
+        PendingCollective::post(Phase::SstepComm, team, clocks, Algorithm::RingAllreduce, cost)
+    }
+
+    #[test]
+    fn immediate_completion_matches_bulk_synchronous_charging() {
+        // Post + complete with no intervening compute: wait-to-slowest
+        // then full duration, exactly the seed charging.
+        let mut clocks = vec![1.0, 3.0];
+        let mut book = PhaseBook::new(2);
+        let mut tl = Timeline::new(2);
+        let pc = pending(&clocks, 2.0);
+        assert_eq!(pc.t_start, 3.0);
+        assert_eq!(pc.done_at(), 5.0);
+        pc.complete(&mut clocks, &mut book, &mut tl);
+        assert_eq!(clocks, vec![5.0, 5.0]);
+        // Rank 0 charged wait 2 + dur 2; rank 1 charged dur only.
+        assert_eq!(book.mean_charged(Phase::SstepComm), 3.0);
+        assert_eq!(book.mean_wait(Phase::SstepComm), 1.0);
+        assert_eq!(book.mean_hidden(Phase::SstepComm), 0.0);
+        assert_eq!(book.words[0], 100.0);
+        assert_eq!(book.messages[1], 2.0);
+    }
+
+    #[test]
+    fn partial_overlap_charges_only_the_exposed_remainder() {
+        let mut clocks = vec![3.0, 3.0];
+        let mut book = PhaseBook::new(2);
+        let mut tl = Timeline::new(2);
+        let pc = pending(&clocks, 2.0);
+        // Both ranks compute 0.5 s past the post before completing.
+        clocks[0] += 0.5;
+        clocks[1] += 0.5;
+        pc.complete(&mut clocks, &mut book, &mut tl);
+        assert_eq!(clocks, vec![5.0, 5.0]);
+        assert!((book.mean_charged(Phase::SstepComm) - 1.5).abs() < 1e-15);
+        assert!((book.mean_hidden(Phase::SstepComm) - 0.5).abs() < 1e-15);
+        assert_eq!(book.mean_wait(Phase::SstepComm), 0.0);
+    }
+
+    #[test]
+    fn full_overlap_is_free_and_fully_hidden() {
+        let mut clocks = vec![3.0];
+        let mut book = PhaseBook::new(1);
+        let mut tl = Timeline::new(1);
+        let mut pc = pending(&clocks, 2.0);
+        pc.cost.words = 0.0; // singleton team books no traffic anyway
+        clocks[0] += 10.0;
+        pc.complete(&mut clocks, &mut book, &mut tl);
+        assert_eq!(clocks, vec![13.0]);
+        assert_eq!(book.mean_charged(Phase::SstepComm), 0.0);
+        assert_eq!(book.mean_hidden(Phase::SstepComm), 2.0);
+    }
+
+    #[test]
+    fn timeline_records_and_filters_by_rank() {
+        let mut tl = Timeline::new(2);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(1, Phase::SpGemv, EventKind::Compute, 0.0, 2.0);
+        tl.record(0, Phase::SstepComm, EventKind::Transfer, 1.0, 1.5);
+        tl.record(0, Phase::SstepComm, EventKind::Wait, 1.0, 1.0); // zero-length: dropped
+        assert_eq!(tl.events().len(), 3);
+        assert_eq!(tl.events_of(0).count(), 2);
+        assert!((tl.events_of(1).next().unwrap().dur() - 2.0).abs() < 1e-15);
+        tl.clear();
+        assert!(tl.events().is_empty());
+    }
+
+    #[test]
+    fn disabled_timeline_records_nothing() {
+        let mut tl = Timeline::new(1);
+        tl.set_enabled(false);
+        assert!(!tl.is_enabled());
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        assert!(tl.events().is_empty());
+    }
+
+    #[test]
+    fn overlap_policy_names_roundtrip() {
+        for p in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+            assert_eq!(OverlapPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(OverlapPolicy::from_name("bogus"), None);
+        assert_eq!(OverlapPolicy::default(), OverlapPolicy::Off);
+    }
+}

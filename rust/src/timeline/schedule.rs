@@ -1,0 +1,130 @@
+//! Collectives as schedules of steps.
+//!
+//! The timeline charging rule interrupts a collective's transfer at an
+//! arbitrary simulated instant (part hidden behind compute, part
+//! exposed). What makes that physically meaningful is that every
+//! algorithm in [`crate::collectives::algos`] *is* a schedule of
+//! communication rounds — a rank mid-ring has completed some rounds and
+//! not others, so progress is well defined at any instant. This module
+//! materializes those per-round shapes into a [`CollectiveSchedule`] the
+//! analyzer and examples can inspect; the aggregate
+//! [`CollectiveCost`] remains authoritative for charging (step times sum
+//! to it up to fp accumulation).
+
+use crate::collectives::{self, AlgoPolicy, Algorithm, CollectiveCost, ScheduleStep};
+use crate::costmodel::calib::CalibProfile;
+
+/// One collective resolved to a concrete algorithm, its aggregate cost,
+/// and its per-round decomposition.
+#[derive(Clone, Debug)]
+pub struct CollectiveSchedule {
+    /// Algorithm the policy resolved.
+    pub algo: Algorithm,
+    /// Aggregate charged shape (authoritative for the engine's books).
+    pub cost: CollectiveCost,
+    /// Per-round shapes, in schedule order.
+    pub steps: Vec<ScheduleStep>,
+}
+
+impl CollectiveSchedule {
+    /// The Allreduce schedule `policy` resolves for a `q`-rank team and a
+    /// `words`-word payload.
+    pub fn allreduce(
+        profile: &CalibProfile,
+        policy: AlgoPolicy,
+        q: usize,
+        words: usize,
+    ) -> CollectiveSchedule {
+        let (algo, cost) = collectives::charge(profile, policy, q, words);
+        CollectiveSchedule { algo, cost, steps: algo.as_algo().steps_of(profile, q, words) }
+    }
+
+    /// The reduce-scatter (first-half) schedule `policy` resolves.
+    pub fn reduce_scatter(
+        profile: &CalibProfile,
+        policy: AlgoPolicy,
+        q: usize,
+        words: usize,
+    ) -> CollectiveSchedule {
+        let (algo, cost) = collectives::reduce_scatter_charge(profile, policy, q, words);
+        CollectiveSchedule { algo, cost, steps: algo.as_algo().rs_steps_of(profile, q, words) }
+    }
+
+    /// Rounds in the schedule.
+    pub fn rounds(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// How many whole rounds have completed `elapsed` seconds into the
+    /// transfer — the step-level reading of the timeline's hidden/exposed
+    /// split at an interruption instant. (A small relative tolerance
+    /// absorbs the fp accumulation of step times.)
+    pub fn rounds_done_after(&self, elapsed: f64) -> usize {
+        let tol = 1e-12 * (1.0 + elapsed.abs());
+        let mut t = 0.0;
+        for (i, s) in self.steps.iter().enumerate() {
+            t += s.time;
+            if t > elapsed + tol {
+                return i;
+            }
+        }
+        self.steps.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof() -> CalibProfile {
+        CalibProfile::perlmutter()
+    }
+
+    #[test]
+    fn allreduce_schedule_matches_policy_resolution() {
+        let p = prof();
+        let s = CollectiveSchedule::allreduce(&p, AlgoPolicy::Auto, 64, 8);
+        // Tiny payload at q = 64: recursive doubling, 6 rounds.
+        assert_eq!(s.algo, Algorithm::RecursiveDoubling);
+        assert_eq!(s.rounds(), 6);
+        assert_eq!(s.rounds(), s.cost.steps);
+        let t: f64 = s.steps.iter().map(|st| st.time).sum();
+        assert!((t - s.cost.time).abs() < 1e-9 * (1.0 + s.cost.time));
+    }
+
+    #[test]
+    fn reduce_scatter_schedule_is_the_first_half() {
+        let p = prof();
+        let ring = AlgoPolicy::Fixed(Algorithm::RingAllreduce);
+        let ar = CollectiveSchedule::allreduce(&p, ring, 8, 1 << 16);
+        let rs = CollectiveSchedule::reduce_scatter(
+            &p,
+            AlgoPolicy::Fixed(Algorithm::RingAllreduce),
+            8,
+            1 << 16,
+        );
+        assert_eq!(rs.rounds() * 2, ar.rounds());
+        assert!(rs.cost.time < ar.cost.time);
+    }
+
+    #[test]
+    fn rounds_done_tracks_elapsed_time() {
+        let p = prof();
+        let ring = AlgoPolicy::Fixed(Algorithm::RingAllreduce);
+        let s = CollectiveSchedule::allreduce(&p, ring, 4, 1000);
+        assert_eq!(s.rounds(), 6);
+        assert_eq!(s.rounds_done_after(0.0), 0);
+        assert_eq!(s.rounds_done_after(s.cost.time), s.rounds());
+        let one_and_a_half = s.steps[0].time * 1.5;
+        assert_eq!(s.rounds_done_after(one_and_a_half), 1);
+    }
+
+    #[test]
+    fn singleton_schedules_are_empty() {
+        let p = prof();
+        let s = CollectiveSchedule::allreduce(&p, AlgoPolicy::Auto, 1, 1000);
+        assert_eq!(s.rounds(), 0);
+        assert_eq!(s.cost, CollectiveCost::ZERO);
+        assert_eq!(s.rounds_done_after(1.0), 0);
+    }
+}

@@ -9,8 +9,8 @@
 //! * solver trajectories are invariant under the algorithm policy while
 //!   simulated wall time is not.
 
-use hybrid_sgd::collectives::{charge, AlgoPolicy, Algorithm};
-use hybrid_sgd::comm::{Charging, Engine, Reduce, Scope};
+use hybrid_sgd::collectives::{charge, reduce_scatter_charge, AlgoPolicy, Algorithm};
+use hybrid_sgd::comm::{Charging, Engine, OverlapPolicy, Reduce, Scope};
 use hybrid_sgd::compute::NativeBackend;
 use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
 use hybrid_sgd::data::synth;
@@ -148,6 +148,123 @@ fn auto_books_cross_over_with_payload() {
     assert_eq!(algo_big, Algorithm::RingAllreduce);
     assert_eq!(cost_small.messages, msgs_small);
     assert_eq!(cost_big.messages, msgs_big);
+}
+
+/// Satellite property: across mesh shapes, s-step depths, and collective
+/// policies, `OverlapPolicy::Bundle` never increases `sim_wall` and never
+/// changes the solver trajectory (final weights bitwise, final loss
+/// equal). The combined `rs_row + Bundle` charging path obeys the same
+/// contract.
+#[test]
+fn prop_bundle_overlap_never_slower_and_trajectory_invariant() {
+    let mut rng = Prng::new(0x0E71A9);
+    let ds = synth::sparse_skewed("overlap-toy", 180, 64, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let policies = [
+        AlgoPolicy::Auto,
+        AlgoPolicy::Fixed(Algorithm::Linear),
+        AlgoPolicy::Fixed(Algorithm::RecursiveDoubling),
+        AlgoPolicy::Fixed(Algorithm::RingAllreduce),
+        AlgoPolicy::Fixed(Algorithm::Rabenseifner),
+    ];
+    check(
+        Config { cases: 16, seed: 0xB41D1E },
+        "bundle overlap: wall never grows, trajectory never changes",
+        |rng| {
+            (
+                1 + rng.next_below(3),  // p_r
+                1 + rng.next_below(3),  // p_c
+                1 + rng.next_below(3),  // s
+                2 + rng.next_below(7),  // b
+                rng.next_below(3),      // tau - s offset
+                rng.next_below(5),      // policy index
+                rng.next_below(2) == 1, // rs_row
+            )
+        },
+        |&(p_r, p_c, s, b, tau_off, policy_i, rs_row)| {
+            let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + tau_off);
+            let run_with = |overlap: OverlapPolicy| {
+                let opts = RunOpts {
+                    max_bundles: 6,
+                    eval_every: 0,
+                    algo: policies[policy_i],
+                    overlap,
+                    rs_row,
+                    ..Default::default()
+                };
+                HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+            };
+            let off = run_with(OverlapPolicy::Off);
+            let bun = run_with(OverlapPolicy::Bundle);
+            off.x == bun.x
+                && off.final_loss() == bun.final_loss()
+                && bun.sim_wall <= off.sim_wall * (1.0 + 1e-12) + 1e-18
+                && off.book.mean_hidden(Phase::SstepComm) == 0.0
+        },
+    );
+}
+
+/// Satellite property: the engine's reduce-scatter charging path books no
+/// more time/words/messages than the full Allreduce under every policy,
+/// while delivering bitwise-identical reduced values, and its books match
+/// [`reduce_scatter_charge`]'s account.
+#[test]
+fn prop_reduce_scatter_books_bounded_by_allreduce_books() {
+    let policies = [
+        AlgoPolicy::Auto,
+        AlgoPolicy::Fixed(Algorithm::Linear),
+        AlgoPolicy::Fixed(Algorithm::RecursiveDoubling),
+        AlgoPolicy::Fixed(Algorithm::RingAllreduce),
+        AlgoPolicy::Fixed(Algorithm::Rabenseifner),
+    ];
+    check(
+        Config { cases: 40, seed: 0x5CA77E2 },
+        "reduce-scatter books never exceed allreduce books",
+        |rng| {
+            (
+                2 + rng.next_below(8),    // q
+                1 + rng.next_below(2048), // words
+                rng.next_below(5),        // policy index
+                rng.next_u64(),           // data seed
+            )
+        },
+        |&(q, words, policy_i, data_seed)| {
+            let policy = policies[policy_i];
+            let mesh = Mesh::new(1, q);
+            let run = |rs: bool| {
+                let mut e = Engine::new(mesh, CalibProfile::perlmutter(), Charging::Modeled)
+                    .with_algo(policy);
+                let mut rng = Prng::new(data_seed);
+                let mut states: Vec<St> = (0..q)
+                    .map(|_| St { buf: (0..words).map(|_| rng.range_f64(-1e6, 1e6)).collect() })
+                    .collect();
+                if rs {
+                    e.reduce_scatter(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| {
+                        &mut s.buf
+                    });
+                } else {
+                    e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| {
+                        &mut s.buf
+                    });
+                }
+                let bits: Vec<Vec<u64>> = states
+                    .iter()
+                    .map(|s| s.buf.iter().map(|v| v.to_bits()).collect())
+                    .collect();
+                (bits, e.sim_wall(), e.book.messages[0], e.book.words[0])
+            };
+            let (v_ar, t_ar, m_ar, w_ar) = run(false);
+            let (v_rs, t_rs, m_rs, w_rs) = run(true);
+            let (_, rs_cost) = reduce_scatter_charge(&CalibProfile::perlmutter(), policy, q, words);
+            v_ar == v_rs
+                && t_rs <= t_ar * (1.0 + 1e-12)
+                && m_rs <= m_ar + 1e-9
+                && w_rs <= w_ar + 1e-9
+                && (t_rs - rs_cost.time).abs() <= 1e-15 * (1.0 + rs_cost.time)
+                && m_rs == rs_cost.messages
+                && w_rs == rs_cost.words
+        },
+    );
 }
 
 #[test]
