@@ -1,0 +1,143 @@
+//! The measured collective selector, end to end: fit this host's
+//! per-algorithm Allreduce curves (the paper's §7.1 microbenchmark
+//! methodology applied per schedule), persist them through the TSV
+//! profile, diff the measured tuning table against the analytic Hockney
+//! envelope, and show that switching the selector source moves charged
+//! books only — trajectories stay bit-identical. Finishes with the
+//! bound-aware pick: the overlap analyzer's bound-by verdict fed back
+//! into the selection, DaSGD-style.
+//!
+//! ```bash
+//! cargo run --release --example measured_selector [-- url|news20|rcv1|synthetic] [p]
+//! ```
+
+use hybrid_sgd::collectives::{AutoSelector, SelectorSource};
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::calib::measure_collectives;
+use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::partition::Partitioner;
+use hybrid_sgd::solvers::{HybridSolver, RunOpts};
+use hybrid_sgd::timeline::{CriticalPath, OverlapPolicy};
+use hybrid_sgd::util::Table;
+
+fn map_desc(sel: &AutoSelector<'_>, q: usize, max_words: usize) -> String {
+    sel.selection_map(q, max_words)
+        .iter()
+        .map(|(w, a)| format!("{}@{w}", a.name()))
+        .collect::<Vec<_>>()
+        .join(" -> ")
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let spec = args
+        .next()
+        .and_then(|s| DatasetSpec::from_name(&s))
+        .unwrap_or(DatasetSpec::UrlLike);
+    let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    // 1. Fit this host's per-algorithm curves and attach them to the
+    //    charging profile.
+    println!("fitting per-algorithm curves on this host (simulated schedule rounds)...");
+    let curves = measure_collectives(true);
+    let base = CalibProfile::perlmutter();
+    let prof = base.clone().with_algo_curves(curves);
+
+    // 2. Round-trip through the TSV schema (what `calibrate --collectives
+    //    --save` + `train --profile` do between processes).
+    let path = std::env::temp_dir().join("measured_selector_profile.tsv");
+    prof.to_tsv(&path).expect("save profile");
+    let prof = CalibProfile::from_tsv(&path).expect("reload profile");
+    assert!(prof.algo_curves.is_some(), "curves survive the TSV round trip");
+    println!("profile round-tripped through {}", path.display());
+    println!();
+
+    // 3. The two tuning tables side by side, at the team sizes the quick
+    //    calibration actually fit (larger q would just clamp to the q=8
+    //    curve and misread as per-q host data).
+    let analytic = AutoSelector::new(&base);
+    let measured = AutoSelector::new(&prof).with_source(SelectorSource::Measured);
+    let mut maps = Table::new(&["team q", "analytic map", "measured map (this host)"]);
+    for q in [2usize, 4, 8] {
+        maps.row(&[
+            q.to_string(),
+            map_desc(&analytic, q, 1 << 22),
+            map_desc(&measured, q, 1 << 22),
+        ]);
+    }
+    println!("selector crossovers (payloads 1..{} words, fitted team sizes):", 1 << 22);
+    println!("{}", maps.render());
+    println!();
+
+    // 4. Same run under both sources: trajectories bit-identical, only
+    //    the charged books are allowed to move.
+    let ds = spec.profile().generate_scaled(0.05, 0x2D5D);
+    let mesh = Mesh::factorizations(p)
+        .into_iter()
+        .find(|m| m.p_r > 1 && m.p_c > 1)
+        .unwrap_or(Mesh::new(1, p));
+    let s = if mesh.p_c >= 4 { 4 } else { 2 };
+    let cfg = HybridConfig::new(mesh, s, 16, 10);
+    let run_with = |selector: SelectorSource| {
+        let opts = RunOpts {
+            max_bundles: 10,
+            eval_every: 0,
+            profile: prof.clone(),
+            selector,
+            ..Default::default()
+        };
+        HybridSolver::new(&NativeBackend).run(&ds, cfg, Partitioner::Cyclic, &opts)
+    };
+    let run_a = run_with(SelectorSource::Analytic);
+    let run_m = run_with(SelectorSource::Measured);
+    assert_eq!(run_a.x, run_m.x, "selector source must never change the trajectory");
+    println!(
+        "train on {} mesh {}: final weights bit-identical across sources; \
+         sim wall {:.4} ms (analytic) vs {:.4} ms (measured crossovers)",
+        ds.name,
+        mesh,
+        run_a.sim_wall * 1e3,
+        run_m.sim_wall * 1e3
+    );
+    println!();
+
+    // 5. Bound-aware selection: ask the timeline analyzer what the
+    //    makespan rank is starved on and let that verdict steer the pick
+    //    for the row collective's payload.
+    let cp = CriticalPath::analyze(&run_m.timeline);
+    let rank = cp.makespan_rank();
+    let axis = cp.bound_axis(rank);
+    let q_row = mesh.p_c.max(2);
+    let w_row = cfg.s * cfg.b + cfg.s * cfg.b * (cfg.s * cfg.b + 1) / 2;
+    let (plain, _) = measured.pick_cost(q_row, w_row);
+    let (aware, _) = measured.pick_bound_aware(q_row, w_row, axis);
+    println!(
+        "rank {rank} is {}-bound (per the critical path); row collective (q={q_row}, \
+         W={w_row}): plain pick {}, bound-aware pick {}",
+        axis.name(),
+        plain.name(),
+        aware.name()
+    );
+    let overlap_run = {
+        let opts = RunOpts {
+            max_bundles: 10,
+            eval_every: 0,
+            profile: prof.clone(),
+            selector: SelectorSource::Measured,
+            overlap: OverlapPolicy::Bundle,
+            ..Default::default()
+        };
+        HybridSolver::new(&NativeBackend).run(&ds, cfg, Partitioner::Cyclic, &opts)
+    };
+    let cp2 = CriticalPath::analyze(&overlap_run.timeline);
+    println!(
+        "with --overlap bundle the makespan rank is {}-bound instead \
+         (wall {:.4} ms vs {:.4} ms bulk-synchronous)",
+        cp2.bound_axis(cp2.makespan_rank()).name(),
+        overlap_run.sim_wall * 1e3,
+        run_m.sim_wall * 1e3
+    );
+    let _ = std::fs::remove_file(&path);
+}

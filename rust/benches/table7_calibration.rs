@@ -10,8 +10,11 @@ fn main() {
     let effort = Effort::from_env();
     let t0 = Instant::now();
     let table = table7::run(effort);
+    let crossovers = table7::selector_crossovers(effort);
     let wall = t0.elapsed().as_secs_f64();
     println!("== Table 7 — measured alpha/beta/gamma ==");
     println!("{}", table.render());
+    println!("== Table 7b — selector crossovers, measured per-algorithm curves vs analytic ==");
+    println!("{}", crossovers.render());
     println!("(effort {effort:?}, generated in {wall:.1}s; TSV under results/)");
 }

@@ -22,7 +22,12 @@
 //!   algorithm per `(q, words)` from the profile, the way an MPI tuning
 //!   table does. [`AlgoPolicy`] is the override knob threaded through
 //!   [`Engine`](crate::comm::Engine), [`RunOpts`](crate::solvers::RunOpts)
-//!   and the cost-model predictors.
+//!   and the cost-model predictors; [`SelectorSource`] chooses whether
+//!   the selection prices candidates analytically or from the
+//!   per-algorithm measured curves a profile may carry
+//!   ([`CalibProfile::algo_curves`]), and
+//!   [`AutoSelector::pick_bound_aware`] folds the overlap analyzer's
+//!   bound-by report back into the choice.
 //!
 //! **Determinism contract.** Algorithm choice changes *charged* time,
 //! message, and word books only — never reduced values. Every algorithm
@@ -37,7 +42,7 @@
 pub mod algos;
 pub mod select;
 
-pub use select::AutoSelector;
+pub use select::{AutoSelector, BoundBy, SelectorSource};
 
 use crate::costmodel::calib::CalibProfile;
 
@@ -259,10 +264,29 @@ pub fn canonical_reduce(contribs: &[&[f64]], op: Reduce) -> Vec<f64> {
 
 /// Resolve a policy to a concrete `(algorithm, cost)` for one collective.
 /// The single entry point the engine and the cost-model predictors charge
-/// through. Singleton teams are free under every policy.
+/// through; selection prices from the **analytic** source — see
+/// [`charge_with`] for the [`SelectorSource`] knob. Singleton teams are
+/// free under every policy.
 pub fn charge(
     profile: &CalibProfile,
     policy: AlgoPolicy,
+    q: usize,
+    words: usize,
+) -> (Algorithm, CollectiveCost) {
+    charge_with(profile, policy, SelectorSource::Analytic, q, words)
+}
+
+/// [`charge`] with an explicit [`SelectorSource`]: under
+/// [`AlgoPolicy::Auto`] the selection prices candidates from the chosen
+/// curve family (measured curves steer the crossovers when the profile
+/// carries them); the returned cost is always the winner's analytic
+/// charge, and a pinned policy ignores the source entirely — so the
+/// source can only change *which* algorithm's books get charged, never
+/// the books of a given algorithm and never reduced values.
+pub fn charge_with(
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    source: SelectorSource,
     q: usize,
     words: usize,
 ) -> (Algorithm, CollectiveCost) {
@@ -270,7 +294,7 @@ pub fn charge(
         return (Algorithm::Linear, CollectiveCost::ZERO);
     }
     match policy {
-        AlgoPolicy::Auto => AutoSelector::new(profile).pick_cost(q, words),
+        AlgoPolicy::Auto => AutoSelector::new(profile).with_source(source).pick_cost(q, words),
         AlgoPolicy::Fixed(a) => (a, a.as_algo().cost(profile, q, words)),
     }
 }

@@ -1,27 +1,136 @@
-//! Hockney-costed algorithm auto-selection — the model of an MPI stack's
-//! collective tuning table.
+//! Algorithm auto-selection — the model of an MPI stack's collective
+//! tuning table, priced from either curve family.
 //!
 //! For every `(q, words)` the [`AutoSelector`] evaluates each *physical*
-//! algorithm's charged time under the rank-aware profile and picks the
-//! cheapest. Because every algorithm's time is affine in the payload
-//! (`T(W) = L·α + c·Wwβ`) the selection is a lower envelope of lines:
-//! recursive doubling (smallest intercept, steepest slope) wins tiny
-//! payloads, Rabenseifner the mid range, and the ring (largest intercept,
-//! shallowest slope) the largest payloads — at most two crossovers per
-//! team size, mapped exactly by [`AutoSelector::selection_map`].
+//! algorithm's time and picks the cheapest. Because every algorithm's
+//! time is affine in the payload (`T(W) = L·α + c·Wwβ` analytically, and
+//! a fitted `a + Wwb` under measured curves) the selection is a lower
+//! envelope of lines: recursive doubling (smallest intercept, steepest
+//! slope) wins tiny payloads, Rabenseifner the mid range, and the ring
+//! (largest intercept, shallowest slope) the largest payloads — at most
+//! two crossovers per team size, mapped exactly by
+//! [`AutoSelector::selection_map`].
+//!
+//! Where the candidate prices come from is the [`SelectorSource`] knob:
+//!
+//! * [`SelectorSource::Analytic`] — each schedule's Hockney formula over
+//!   the shared rank-aware `α(q)`/`β(q)` fit (the PR-1 behavior, and the
+//!   fallback whenever no curve is available);
+//! * [`SelectorSource::Measured`] — the per-algorithm fitted curves a
+//!   profile may carry ([`CalibProfile::algo_curves`], produced by
+//!   [`measure_collectives`](crate::costmodel::calib::measure_collectives)
+//!   the way the paper's §7.1 microbenchmarks Perlmutter), which is how
+//!   real MPI tuning tables place the crossovers.
+//!
+//! **The source steers selection only.** Whatever source picked the
+//! winner, the returned [`CollectiveCost`] is that algorithm's analytic
+//! charge under the profile, so books stay comparable across sources and
+//! a measured curve set fitted *from* the Hockney model reproduces the
+//! analytic selection map exactly (the equivalence property test's
+//! identity). Reduced values never depend on the source at all.
 
 use super::{algos, Algorithm, CollectiveCost};
 use crate::costmodel::calib::CalibProfile;
 
+/// Which curve family the [`AutoSelector`] prices candidates from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SelectorSource {
+    /// Hockney-model pricing off the shared `α(q)`/`β(q)` fit (default).
+    #[default]
+    Analytic,
+    /// Per-algorithm measured curves when the profile carries them;
+    /// per-algorithm fallback to the analytic price when it does not.
+    Measured,
+}
+
+impl SelectorSource {
+    /// CLI/table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorSource::Analytic => "analytic",
+            SelectorSource::Measured => "measured",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn from_name(s: &str) -> Option<SelectorSource> {
+        match s {
+            "analytic" => Some(SelectorSource::Analytic),
+            "measured" => Some(SelectorSource::Measured),
+            _ => None,
+        }
+    }
+}
+
+/// What a rank's makespan is bound by, collapsed to the axis that matters
+/// for algorithm choice — the bridge from the overlap analyzer's
+/// bound-by-phase report
+/// ([`CriticalPath::bound_axis`](crate::timeline::CriticalPath::bound_axis))
+/// back into selection via [`AutoSelector::pick_bound_aware`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BoundBy {
+    /// Compute-bound or balanced: plain cheapest-total selection.
+    #[default]
+    Balanced,
+    /// Latency-bound: per-call overhead dominates — among near-tied
+    /// candidates prefer the smallest intercept (fewest rounds).
+    Latency,
+    /// Bandwidth-bound: payload bytes dominate — among near-tied
+    /// candidates prefer the shallowest slope.
+    Bandwidth,
+}
+
+impl BoundBy {
+    /// Table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoundBy::Balanced => "balanced",
+            BoundBy::Latency => "latency",
+            BoundBy::Bandwidth => "bandwidth",
+        }
+    }
+}
+
+/// Near-tie slack for [`AutoSelector::pick_bound_aware`]: a candidate
+/// within this factor of the cheapest total is eligible for the
+/// bound-axis preference.
+pub const BOUND_AWARE_SLACK: f64 = 1.10;
+
 /// Picks the cheapest physical collective algorithm per `(q, words)`.
 pub struct AutoSelector<'p> {
     profile: &'p CalibProfile,
+    source: SelectorSource,
 }
 
 impl<'p> AutoSelector<'p> {
-    /// Selector over a calibration profile.
+    /// Selector over a calibration profile (analytic source).
     pub fn new(profile: &'p CalibProfile) -> AutoSelector<'p> {
-        AutoSelector { profile }
+        AutoSelector { profile, source: SelectorSource::Analytic }
+    }
+
+    /// Override the pricing source (builder form).
+    pub fn with_source(mut self, source: SelectorSource) -> AutoSelector<'p> {
+        self.source = source;
+        self
+    }
+
+    /// The pricing source in effect.
+    pub fn source(&self) -> SelectorSource {
+        self.source
+    }
+
+    /// The selection-time price of one candidate: measured curve when the
+    /// source and the profile provide one, analytic Hockney otherwise.
+    fn selection_time(&self, a: Algorithm, q: usize, words: usize, analytic: f64) -> f64 {
+        match self.source {
+            SelectorSource::Analytic => analytic,
+            SelectorSource::Measured => self
+                .profile
+                .algo_curves
+                .as_ref()
+                .and_then(|c| c.time(a, q, words))
+                .unwrap_or(analytic),
+        }
     }
 
     /// Cheapest physical algorithm for one collective. Ties resolve to the
@@ -30,12 +139,76 @@ impl<'p> AutoSelector<'p> {
         self.pick_cost(q, words).0
     }
 
-    /// Cheapest algorithm together with its charged cost.
+    /// Cheapest algorithm together with its charged cost (always the
+    /// winner's analytic charge — see the module docs).
     pub fn pick_cost(&self, q: usize, words: usize) -> (Algorithm, CollectiveCost) {
         if q <= 1 {
             return (Algorithm::Linear, CollectiveCost::ZERO);
         }
-        cheapest_physical(|a| algos::lookup(a).cost(self.profile, q, words))
+        let mut best: Option<(Algorithm, CollectiveCost, f64)> = None;
+        for a in Algorithm::physical() {
+            let cost = algos::lookup(a).cost(self.profile, q, words);
+            let t = self.selection_time(a, q, words, cost.time);
+            let better = match &best {
+                None => true,
+                Some((_, _, bt)) => t < *bt,
+            };
+            if better {
+                best = Some((a, cost, t));
+            }
+        }
+        let (a, cost, _) = best.expect("physical algorithm set is nonempty");
+        (a, cost)
+    }
+
+    /// Selection with the overlap analyzer's verdict in the loop: the
+    /// plain argmin decides, except that a rank reported latency-bound
+    /// (resp. bandwidth-bound) by
+    /// [`CriticalPath::bound_axis`](crate::timeline::CriticalPath::bound_axis)
+    /// swaps to the candidate with the smallest intercept (resp. slope)
+    /// among those within [`BOUND_AWARE_SLACK`] of the cheapest total —
+    /// trading a few percent of modeled total for pressure off the axis
+    /// the rank is actually starved on (DaSGD's motivation for keeping
+    /// the bound-by report in the tuning loop). Intercepts and slopes are
+    /// read from the same source as the totals, so measured curves steer
+    /// this pick too.
+    pub fn pick_bound_aware(
+        &self,
+        q: usize,
+        words: usize,
+        bound: BoundBy,
+    ) -> (Algorithm, CollectiveCost) {
+        if q <= 1 {
+            return (Algorithm::Linear, CollectiveCost::ZERO);
+        }
+        let (best_a, best_cost) = self.pick_cost(q, words);
+        if bound == BoundBy::Balanced {
+            return (best_a, best_cost);
+        }
+        let best_t = self.selection_time(best_a, q, words, best_cost.time);
+        let mut pick = (best_a, best_cost);
+        let mut pick_key = f64::INFINITY;
+        for a in Algorithm::physical() {
+            let cost = algos::lookup(a).cost(self.profile, q, words);
+            let total = self.selection_time(a, q, words, cost.time);
+            if total > best_t * BOUND_AWARE_SLACK {
+                continue;
+            }
+            // Intercept = the curve at zero payload; slope = what the
+            // payload adds. Both read through the active source.
+            let zero = algos::lookup(a).cost(self.profile, q, 0);
+            let intercept = self.selection_time(a, q, 0, zero.time);
+            let key = match bound {
+                BoundBy::Latency => intercept,
+                BoundBy::Bandwidth => total - intercept,
+                BoundBy::Balanced => unreachable!("handled above"),
+            };
+            if key < pick_key {
+                pick_key = key;
+                pick = (a, cost);
+            }
+        }
+        pick
     }
 
     /// The selection map for a team size: `(first_words, algorithm)`
@@ -203,6 +376,148 @@ mod tests {
                     let t = algos::lookup(a).cost(&p, q, w).time;
                     assert!(best.time <= t * (1.0 + 1e-12), "q={q} w={w} {}", a.name());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn selector_source_names_roundtrip() {
+        for s in [SelectorSource::Analytic, SelectorSource::Measured] {
+            assert_eq!(SelectorSource::from_name(s.name()), Some(s));
+        }
+        assert_eq!(SelectorSource::from_name("bogus"), None);
+        assert_eq!(SelectorSource::default(), SelectorSource::Analytic);
+    }
+
+    #[test]
+    fn measured_without_curves_falls_back_to_analytic() {
+        // A profile with no curve set: the measured selector is the
+        // analytic one, pick for pick.
+        let p = CalibProfile::perlmutter();
+        let analytic = AutoSelector::new(&p);
+        let measured = AutoSelector::new(&p).with_source(SelectorSource::Measured);
+        assert_eq!(measured.source(), SelectorSource::Measured);
+        for q in [2usize, 8, 64, 100] {
+            for w in [1usize, 512, 8192, 1 << 20] {
+                assert_eq!(measured.pick(q, w), analytic.pick(q, w), "q={q} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hockney_fitted_curves_reproduce_the_analytic_selection_map() {
+        // Curves generated from the model make Measured ≡ Analytic —
+        // the calibration identity (the TSV-roundtrip version lives in
+        // tests/collectives_equivalence.rs).
+        use crate::costmodel::calib::AlgoCurves;
+        let base = CalibProfile::perlmutter();
+        let qs = [2usize, 8, 64, 100, 1024];
+        let curves = AlgoCurves::from_hockney(&base, &qs, 1 << 16);
+        let p = base.clone().with_algo_curves(curves);
+        let analytic = AutoSelector::new(&base);
+        let measured = AutoSelector::new(&p).with_source(SelectorSource::Measured);
+        for &q in &qs {
+            assert_eq!(
+                measured.selection_map(q, 1 << 24),
+                analytic.selection_map(q, 1 << 24),
+                "q={q}"
+            );
+        }
+    }
+
+    #[test]
+    fn measured_curves_move_the_crossovers() {
+        // Hand-written curves that price the ring's intercept at zero and
+        // a tiny slope: the measured selector must hand it every payload,
+        // while the charged cost stays the ring's analytic charge.
+        use crate::costmodel::calib::{AlgoCurves, CommPoint};
+        let base = CalibProfile::perlmutter();
+        let mut curves = AlgoCurves::new();
+        for a in Algorithm::physical() {
+            let (alpha, beta) = if a == Algorithm::RingAllreduce {
+                (0.0, 1e-13)
+            } else {
+                (1.0, 1e-6) // absurdly expensive
+            };
+            curves.push(a, CommPoint { ranks: 2, alpha, beta });
+            curves.push(a, CommPoint { ranks: 1024, alpha, beta });
+        }
+        let p = base.clone().with_algo_curves(curves);
+        let measured = AutoSelector::new(&p).with_source(SelectorSource::Measured);
+        for q in [2usize, 64, 512] {
+            for w in [1usize, 4096, 1 << 20] {
+                let (algo, cost) = measured.pick_cost(q, w);
+                assert_eq!(algo, Algorithm::RingAllreduce, "q={q} w={w}");
+                let want = algos::lookup(algo).cost(&p, q, w);
+                assert_eq!(cost, want, "charge must stay analytic");
+            }
+        }
+        // The analytic selector on the same profile is unmoved.
+        assert_eq!(AutoSelector::new(&p).pick(64, 8), Algorithm::RecursiveDoubling);
+    }
+
+    #[test]
+    fn bound_aware_balanced_is_the_plain_pick() {
+        let p = CalibProfile::perlmutter();
+        for q in [2usize, 8, 64] {
+            for w in [8usize, 8192, 1 << 20] {
+                assert_eq!(
+                    sel(&p).pick_bound_aware(q, w, BoundBy::Balanced),
+                    sel(&p).pick_cost(q, w),
+                    "q={q} w={w}"
+                );
+            }
+        }
+        assert_eq!(
+            sel(&p).pick_bound_aware(1, 100, BoundBy::Latency).0,
+            Algorithm::Linear,
+            "singleton teams stay free"
+        );
+    }
+
+    #[test]
+    fn latency_bound_rank_prefers_the_low_intercept_schedule() {
+        // Near the Rabenseifner/recursive-doubling crossover the two are
+        // within the slack; a latency-bound rank takes the ⌈log₂q⌉-round
+        // schedule (strictly fewer rounds ⇒ smaller intercept).
+        let p = CalibProfile::perlmutter();
+        let s = sel(&p);
+        for q in [8usize, 64, 256] {
+            // Find a payload where the plain pick is Rabenseifner but RD
+            // is within the slack (just past the crossover).
+            let map = s.selection_map(q, 1 << 24);
+            let w_cross = match map.iter().find(|(_, a)| *a == Algorithm::Rabenseifner) {
+                Some(&(w, _)) => w,
+                None => continue,
+            };
+            let (plain, _) = s.pick_cost(q, w_cross);
+            assert_eq!(plain, Algorithm::Rabenseifner, "q={q}");
+            let (aware, cost) = s.pick_bound_aware(q, w_cross, BoundBy::Latency);
+            assert_eq!(aware, Algorithm::RecursiveDoubling, "q={q}");
+            assert_eq!(cost, algos::lookup(aware).cost(&p, q, w_cross));
+        }
+    }
+
+    #[test]
+    fn bandwidth_bound_rank_never_picks_a_steeper_slope() {
+        // Under bandwidth pressure the chosen slope never exceeds the
+        // plain pick's, and the choice stays within the slack on totals.
+        let p = CalibProfile::perlmutter();
+        let s = sel(&p);
+        for q in [4usize, 8, 64, 100] {
+            for w in [64usize, 4096, 1 << 16, 1 << 22] {
+                let slope = |a: Algorithm| {
+                    let c = algos::lookup(a).cost(&p, q, w);
+                    c.time - algos::lookup(a).cost(&p, q, 0).time
+                };
+                let (plain, plain_cost) = s.pick_cost(q, w);
+                let (aware, _) = s.pick_bound_aware(q, w, BoundBy::Bandwidth);
+                assert!(slope(aware) <= slope(plain) * (1.0 + 1e-12), "q={q} w={w}");
+                let aware_t = algos::lookup(aware).cost(&p, q, w).time;
+                assert!(
+                    aware_t <= plain_cost.time * BOUND_AWARE_SLACK * (1.0 + 1e-12),
+                    "q={q} w={w}"
+                );
             }
         }
     }

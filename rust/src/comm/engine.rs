@@ -31,7 +31,7 @@
 //! [`timeline::analyzer`](crate::timeline::analyzer) turns into
 //! per-phase critical-path breakdowns.
 
-use crate::collectives::{self, AlgoPolicy, CollectiveCost};
+use crate::collectives::{self, AlgoPolicy, CollectiveCost, SelectorSource};
 use crate::costmodel::calib::CalibProfile;
 use crate::mesh::Mesh;
 use crate::metrics::{Phase, PhaseBook};
@@ -134,6 +134,14 @@ pub struct Engine {
     /// algorithm — `Fixed(Linear)` reproduces the seed engine's books.
     /// Never changes reduced values, only the charged accounting.
     pub algo: AlgoPolicy,
+    /// Curve family the `Auto` policy prices candidates from:
+    /// `Analytic` (Hockney over the shared α/β fit, the default) or
+    /// `Measured` (the profile's per-algorithm fitted curves, when
+    /// present). Selection-only — the charged cost is always the chosen
+    /// algorithm's analytic charge, so this knob can move *which*
+    /// algorithm's books a collective pays, never the books of a given
+    /// algorithm and never reduced values.
+    pub selector: SelectorSource,
 }
 
 impl Engine {
@@ -149,6 +157,7 @@ impl Engine {
             timeline: Timeline::new(p),
             lanes: 1,
             algo: AlgoPolicy::Auto,
+            selector: SelectorSource::Analytic,
         }
     }
 
@@ -161,6 +170,13 @@ impl Engine {
     /// Override the collective-algorithm policy (see [`Engine::algo`]).
     pub fn with_algo(mut self, algo: AlgoPolicy) -> Engine {
         self.algo = algo;
+        self
+    }
+
+    /// Override the auto-selection pricing source (see
+    /// [`Engine::selector`]).
+    pub fn with_selector(mut self, selector: SelectorSource) -> Engine {
+        self.selector = selector;
         self
     }
 
@@ -367,7 +383,11 @@ impl Engine {
                 buf(&mut states[member]).copy_from_slice(&acc);
             }
             let (algo, cost): (_, CollectiveCost) = match kind {
-                CollKind::Allreduce => collectives::charge(&self.profile, self.algo, q, words),
+                CollKind::Allreduce => {
+                    collectives::charge_with(&self.profile, self.algo, self.selector, q, words)
+                }
+                // Reduce-scatter selection stays analytic: the measured
+                // curves are fitted from full-Allreduce schedules.
                 CollKind::ReduceScatter => {
                     collectives::reduce_scatter_charge(&self.profile, self.algo, q, words)
                 }

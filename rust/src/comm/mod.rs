@@ -34,6 +34,6 @@
 
 pub mod engine;
 
-pub use crate::collectives::{AlgoPolicy, Algorithm};
+pub use crate::collectives::{AlgoPolicy, Algorithm, SelectorSource};
 pub use crate::timeline::OverlapPolicy;
 pub use engine::{Charging, CollHandle, Cost, Engine, Reduce, Scope};

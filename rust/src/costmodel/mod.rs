@@ -4,7 +4,10 @@
 //! Components:
 //! * [`calib`] — machine calibration profiles: the paper's measured
 //!   Perlmutter Table 7 (rank-aware α(q)/β(q) with the intra/inter-node
-//!   step, cache-tiered γ(W)) plus a local-measurement path.
+//!   step, cache-tiered γ(W)) plus local-measurement paths — the shared
+//!   single-curve fit (`measure_local`) and the per-algorithm schedule
+//!   microbenchmarks (`measure_collectives` → `AlgoCurves`) the measured
+//!   selector reads crossovers from.
 //! * [`hockney`] — the two-term Allreduce time `2⌈log₂q⌉α + Wβ`, the
 //!   paper's fixed bandwidth-optimal *bound*. Per-algorithm schedules
 //!   (recursive doubling / ring / Rabenseifner) and their auto-selection

@@ -12,7 +12,7 @@
 //! the §6.5 corrections lives in [`super::predictor`].
 
 use super::calib::CalibProfile;
-use crate::collectives::{self, AlgoPolicy};
+use crate::collectives::{self, AlgoPolicy, SelectorSource};
 use crate::mesh::Mesh;
 use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
@@ -192,7 +192,24 @@ pub fn eval_algo(
     profile: &CalibProfile,
     policy: AlgoPolicy,
 ) -> ModelBreakdown {
-    let parts = eval_algo_parts(cfg, data, profile, policy);
+    eval_algo_with(cfg, data, profile, policy, SelectorSource::Analytic)
+}
+
+/// [`eval_algo`] with an explicit [`SelectorSource`]: under `Auto` the
+/// per-call algorithm selection prices candidates from the chosen curve
+/// family (the profile's measured per-algorithm curves when present), so
+/// the model's crossovers track the engine's
+/// [`Engine::selector`](crate::comm::Engine) knob. The charged terms are
+/// always the winner's analytic price — only *which* algorithm wins can
+/// move.
+pub fn eval_algo_with(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    source: SelectorSource,
+) -> ModelBreakdown {
+    let parts = eval_algo_parts(cfg, data, profile, policy, source);
     ModelBreakdown {
         compute: parts.compute,
         latency: parts.lat_row + parts.lat_col,
@@ -216,6 +233,7 @@ fn eval_algo_parts(
     data: &DataShape,
     profile: &CalibProfile,
     policy: AlgoPolicy,
+    source: SelectorSource,
 ) -> AlgoParts {
     let m = data.m as f64;
     let p = cfg.mesh.p() as f64;
@@ -230,7 +248,7 @@ fn eval_algo_parts(
     let w_row = cfg.s * (cfg.s - 1) * cfg.b * cfg.b / 2;
     let (mut lat_row, mut gram_bw) = (0.0, 0.0);
     if q_row > 1 {
-        let (_, c) = collectives::charge(profile, policy, q_row, w_row);
+        let (_, c) = collectives::charge_with(profile, policy, source, q_row, w_row);
         let lat = c.messages * profile.alpha(q_row);
         lat_row = row_calls * lat;
         gram_bw = row_calls * (c.time - lat);
@@ -241,7 +259,7 @@ fn eval_algo_parts(
     let (mut lat_col, mut sync_bw) = (0.0, 0.0);
     if q_col > 1 {
         let w_col = data.n.div_ceil(q_row);
-        let (_, c) = collectives::charge(profile, policy, q_col, w_col);
+        let (_, c) = collectives::charge_with(profile, policy, source, q_col, w_col);
         let lat = c.messages * profile.alpha(q_col);
         lat_col = col_calls * lat;
         sync_bw = col_calls * (c.time - lat);
@@ -285,7 +303,20 @@ pub fn eval_algo_overlap(
     policy: AlgoPolicy,
     overlap: OverlapPolicy,
 ) -> OverlapBreakdown {
-    let parts = eval_algo_parts(cfg, data, profile, policy);
+    eval_algo_overlap_with(cfg, data, profile, policy, SelectorSource::Analytic, overlap)
+}
+
+/// [`eval_algo_overlap`] with an explicit [`SelectorSource`] (see
+/// [`eval_algo_with`]).
+pub fn eval_algo_overlap_with(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    source: SelectorSource,
+    overlap: OverlapPolicy,
+) -> OverlapBreakdown {
+    let parts = eval_algo_parts(cfg, data, profile, policy, source);
     match overlap {
         OverlapPolicy::Off => OverlapBreakdown {
             visible: ModelBreakdown {
@@ -486,6 +517,31 @@ mod tests {
         assert_eq!(bun.visible.sync_bw, off.visible.sync_bw);
         // Hidden never exceeds the compute window it hides behind.
         assert!(bun.hidden <= off.visible.compute * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn measured_source_with_hockney_curves_matches_analytic_eval() {
+        // Curves fitted from the model leave the model's selection — and
+        // therefore every term — unchanged.
+        use crate::collectives::AlgoPolicy;
+        use crate::costmodel::calib::AlgoCurves;
+        let data = url_shape();
+        let base = CalibProfile::perlmutter();
+        let qs = [2usize, 4, 8, 32, 64, 256];
+        let prof = base.clone().with_algo_curves(AlgoCurves::from_hockney(&base, &qs, 1 << 16));
+        for cfg in [
+            HybridConfig::new(Mesh::new(4, 64), 4, 32, 10),
+            HybridConfig::new(Mesh::new(8, 32), 2, 16, 4),
+            HybridConfig::new(Mesh::new(256, 1), 1, 32, 10),
+        ] {
+            let analytic = eval_algo(&cfg, &data, &prof, AlgoPolicy::Auto);
+            let measured =
+                eval_algo_with(&cfg, &data, &prof, AlgoPolicy::Auto, SelectorSource::Measured);
+            assert_eq!(measured.compute, analytic.compute, "{cfg:?}");
+            assert_eq!(measured.latency, analytic.latency, "{cfg:?}");
+            assert_eq!(measured.gram_bw, analytic.gram_bw, "{cfg:?}");
+            assert_eq!(measured.sync_bw, analytic.sync_bw, "{cfg:?}");
+        }
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! [`eval_algo`](super::model::eval_algo) rather than square roots.
 
 use super::calib::CalibProfile;
-use super::model::{eval_algo_overlap, eval_flat, ltilde, DataShape, HybridConfig};
-use crate::collectives::AlgoPolicy;
+use super::model::{eval_algo_overlap_with, eval_flat, ltilde, DataShape, HybridConfig};
+use crate::collectives::{AlgoPolicy, SelectorSource};
 use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
@@ -126,12 +126,28 @@ pub fn sweep_s_overlap(
     overlap: OverlapPolicy,
     s_max: usize,
 ) -> usize {
+    sweep_s_full(cfg, data, profile, policy, SelectorSource::Analytic, overlap, s_max)
+}
+
+/// The fully general `s*` sweep: integer argmin of the visible Eq. (4)
+/// total under an algorithm policy, a [`SelectorSource`] (measured
+/// crossovers when the profile carries per-algorithm curves), and an
+/// overlap policy. Every other `s` sweep in this module is a special
+/// case.
+pub fn sweep_s_full(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    source: SelectorSource,
+    overlap: OverlapPolicy,
+    s_max: usize,
+) -> usize {
+    let total = |s: usize| {
+        eval_algo_overlap_with(&with_s(cfg, s), data, profile, policy, source, overlap).total()
+    };
     (1..=s_max)
-        .min_by(|&sa, &sb| {
-            let ta = eval_algo_overlap(&with_s(cfg, sa), data, profile, policy, overlap).total();
-            let tb = eval_algo_overlap(&with_s(cfg, sb), data, profile, policy, overlap).total();
-            ta.partial_cmp(&tb).unwrap()
-        })
+        .min_by(|&sa, &sb| total(sa).partial_cmp(&total(sb)).unwrap())
         .expect("nonempty sweep")
 }
 
@@ -146,6 +162,21 @@ pub fn joint_optimum_overlap(
     s_max: usize,
     b_max: usize,
 ) -> (usize, usize) {
+    joint_optimum_full(cfg, data, profile, policy, SelectorSource::Analytic, overlap, s_max, b_max)
+}
+
+/// The fully general joint `(s*, b*)` grid argmin (see [`sweep_s_full`]).
+#[allow(clippy::too_many_arguments)]
+pub fn joint_optimum_full(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    policy: AlgoPolicy,
+    source: SelectorSource,
+    overlap: OverlapPolicy,
+    s_max: usize,
+    b_max: usize,
+) -> (usize, usize) {
     let mut best = (1usize, 1usize);
     let mut best_t = f64::INFINITY;
     for s in 1..=s_max {
@@ -154,7 +185,7 @@ pub fn joint_optimum_overlap(
             c.s = s;
             c.b = b;
             c.tau = c.tau.max(s);
-            let t = eval_algo_overlap(&c, data, profile, policy, overlap).total();
+            let t = eval_algo_overlap_with(&c, data, profile, policy, source, overlap).total();
             if t < best_t {
                 best_t = t;
                 best = (s, b);
@@ -174,7 +205,7 @@ fn with_s(cfg: &HybridConfig, s: usize) -> HybridConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::costmodel::model::eval_algo;
+    use crate::costmodel::model::{eval_algo, eval_algo_overlap};
     use crate::mesh::Mesh;
 
     const ALPHA: f64 = 3.64e-6;
@@ -368,6 +399,59 @@ mod tests {
             eval_algo_overlap(&c, &data, &prof, AlgoPolicy::Auto, OverlapPolicy::Bundle).total()
         };
         assert!(at(s, b) <= at(s0, b0) + 1e-15);
+    }
+
+    #[test]
+    fn measured_source_with_hockney_curves_leaves_the_optima_unmoved() {
+        use crate::collectives::AlgoPolicy;
+        use crate::costmodel::calib::AlgoCurves;
+        let base = CalibProfile::perlmutter();
+        let qs = [2usize, 4, 8, 16, 32, 64, 256];
+        let prof = base.clone().with_algo_curves(AlgoCurves::from_hockney(&base, &qs, 1 << 16));
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let data = shape();
+        for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+            let analytic = sweep_s_full(
+                &cfg,
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                SelectorSource::Analytic,
+                overlap,
+                32,
+            );
+            let measured = sweep_s_full(
+                &cfg,
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                SelectorSource::Measured,
+                overlap,
+                32,
+            );
+            assert_eq!(analytic, measured, "{overlap:?}");
+        }
+        let a = joint_optimum_full(
+            &cfg,
+            &data,
+            &prof,
+            AlgoPolicy::Auto,
+            SelectorSource::Analytic,
+            OverlapPolicy::Off,
+            8,
+            48,
+        );
+        let m = joint_optimum_full(
+            &cfg,
+            &data,
+            &prof,
+            AlgoPolicy::Auto,
+            SelectorSource::Measured,
+            OverlapPolicy::Off,
+            8,
+            48,
+        );
+        assert_eq!(a, m);
     }
 
     #[test]

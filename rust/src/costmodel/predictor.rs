@@ -22,7 +22,7 @@
 
 use super::calib::CalibProfile;
 use super::model::{DataShape, HybridConfig};
-use crate::collectives::{self, AlgoPolicy};
+use crate::collectives::{self, AlgoPolicy, SelectorSource};
 use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
@@ -64,6 +64,11 @@ pub struct PredictorKnobs {
     /// under — `Auto` mirrors the engine's default selection, `Fixed(_)`
     /// prices a pinned algorithm (e.g. for per-algorithm sweeps).
     pub algo: AlgoPolicy,
+    /// Curve family `Auto` selection prices from — mirror of the
+    /// engine's [`Engine::selector`](crate::comm::Engine) knob, so the
+    /// predictor's picks track a measured tuning table when the profile
+    /// carries per-algorithm curves.
+    pub source: SelectorSource,
     /// Overlap policy the row Allreduce is priced under — with `Bundle`,
     /// its transfer hides behind the per-iteration compute window
     /// (Gram + SpMV + weights + correction) and only the exposed
@@ -79,6 +84,7 @@ impl Default for PredictorKnobs {
             syrkd_floor_s_per_col: 0.0,
             bytes_per_nnz: 12.0,
             algo: AlgoPolicy::Auto,
+            source: SelectorSource::Analytic,
             overlap: OverlapPolicy::Off,
         }
     }
@@ -155,10 +161,14 @@ pub fn predict(
     // selection the engine charges).
     let sb = (cfg.s * cfg.b) as f64;
     let row_words = (sb + sb * (sb + 1.0) / 2.0) as usize;
-    let row_t = collectives::charge(profile, knobs.algo, cfg.mesh.p_c, row_words).1.time / s;
+    let (_, row_cost) =
+        collectives::charge_with(profile, knobs.algo, knobs.source, cfg.mesh.p_c, row_words);
+    let row_t = row_cost.time / s;
     // Column Allreduce per round: the n/p_c weight shard across p_r ranks.
     let col_words = part.n_local_mean as usize;
-    let col_t = collectives::charge(profile, knobs.algo, cfg.mesh.p_r, col_words).1.time / tau;
+    let (_, col_cost) =
+        collectives::charge_with(profile, knobs.algo, knobs.source, cfg.mesh.p_r, col_words);
+    let col_t = col_cost.time / tau;
 
     // Overlap: the pipelined row transfer hides behind the iteration's
     // compute window; the skew wait stays exposed (a slow rank is late,

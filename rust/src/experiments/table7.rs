@@ -4,10 +4,18 @@
 //! data — the constants every charged experiment uses) and a locally
 //! *measured* profile produced by the same microbenchmark methodology the
 //! paper's §7.1 describes (in-memory allreduce sweep + ddot cache sweep).
+//!
+//! [`selector_crossovers`] extends the methodology per algorithm: this
+//! host's fitted per-schedule curves ([`measure_collectives`]) against
+//! the analytic Hockney envelope, diffed as tuning-table crossover
+//! deltas per team size — where the measured machine would switch
+//! recursive doubling → Rabenseifner → ring versus where the model says
+//! it should.
 
 use super::fixtures;
 use super::Effort;
-use crate::costmodel::calib::{measure_local, CalibProfile};
+use crate::collectives::{Algorithm, AutoSelector, SelectorSource};
+use crate::costmodel::calib::{measure_collectives, measure_local, CalibProfile};
 use crate::util::Table;
 
 /// Run the Table 7 reproduction.
@@ -76,6 +84,66 @@ fn emit(table: &mut Table, out: &mut crate::util::tsv::TsvWriter, p: &CalibProfi
     }
 }
 
+/// The measured-vs-analytic selector crossover panel: fit this host's
+/// per-algorithm curves, attach them to the Perlmutter profile, and diff
+/// the two tuning-table maps per team size. A `+N` delta means the
+/// measured machine keeps the previous (lower-intercept) schedule for
+/// `N` more payload words than the model predicts.
+pub fn selector_crossovers(effort: Effort) -> Table {
+    let quick = effort == Effort::Quick;
+    let base = CalibProfile::perlmutter();
+    let measured_prof = base.clone().with_algo_curves(measure_collectives(quick));
+    let qs: &[usize] = if quick { &[2, 4, 8] } else { &[2, 4, 8, 16, 32, 64] };
+    let max_words = 1 << 22;
+
+    let analytic_sel = AutoSelector::new(&base);
+    let measured_sel = AutoSelector::new(&measured_prof).with_source(SelectorSource::Measured);
+    let mut t = Table::new(&["team q", "analytic map", "measured map (local)", "delta (words)"]);
+    let mut out = fixtures::results(
+        "table7_selector_crossovers",
+        &["q", "source", "first_words", "algorithm"],
+    );
+    for &q in qs {
+        let a = analytic_sel.selection_map(q, max_words);
+        let m = measured_sel.selection_map(q, max_words);
+        for (src, map) in [("analytic", &a), ("measured", &m)] {
+            for (w, algo) in map {
+                let _ =
+                    out.append(&[q.to_string(), src.into(), w.to_string(), algo.name().into()]);
+            }
+        }
+        t.row(&[q.to_string(), map_desc(&a), map_desc(&m), map_delta(&a, &m)]);
+    }
+    t
+}
+
+/// `algo@W -> ...` rendering of one selection map.
+fn map_desc(map: &[(usize, Algorithm)]) -> String {
+    map.iter().map(|(w, a)| format!("{}@{w}", a.name())).collect::<Vec<_>>().join(" -> ")
+}
+
+/// Signed per-crossover threshold shifts when the two maps agree on the
+/// algorithm sequence; `reordered` when the measured tuning table
+/// changes the sequence itself; `-` when there is no crossover to diff.
+fn map_delta(analytic: &[(usize, Algorithm)], measured: &[(usize, Algorithm)]) -> String {
+    let same_seq = analytic.len() == measured.len()
+        && analytic.iter().zip(measured).all(|((_, a), (_, b))| a == b);
+    if !same_seq {
+        return "reordered".into();
+    }
+    let deltas: Vec<String> = analytic
+        .iter()
+        .zip(measured)
+        .skip(1)
+        .map(|((wa, _), (wm, _))| format!("{:+}", *wm as i64 - *wa as i64))
+        .collect();
+    if deltas.is_empty() {
+        "-".into()
+    } else {
+        deltas.join(", ")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +155,31 @@ mod tests {
         assert!(r.contains("perlmutter-cpu"));
         assert!(r.contains("local"));
         assert!(r.contains("DRAM"));
+    }
+
+    #[test]
+    fn crossover_panel_emits_one_row_per_team_size() {
+        let t = selector_crossovers(Effort::Quick);
+        let r = t.render();
+        // Quick sweep covers q = 2, 4, 8; every map starts at 1 word with
+        // the latency-optimal schedule under the analytic envelope.
+        assert!(r.contains("recursive-doubling@1"));
+        for q in ["2", "4", "8"] {
+            assert!(r.contains(q), "missing q={q} row");
+        }
+    }
+
+    #[test]
+    fn map_delta_reports_shifts_reorders_and_absence() {
+        use Algorithm::{Rabenseifner as Rab, RecursiveDoubling as Rd, RingAllreduce as Ring};
+        let a = vec![(1usize, Rd), (300, Rab), (100_000, Ring)];
+        let shifted = vec![(1usize, Rd), (350, Rab), (90_000, Ring)];
+        assert_eq!(map_delta(&a, &shifted), "+50, -10000");
+        assert_eq!(map_delta(&a, &a), "+0, +0");
+        let reordered = vec![(1usize, Rd), (300, Ring), (100_000, Rab)];
+        assert_eq!(map_delta(&a, &reordered), "reordered");
+        let single = vec![(1usize, Rd)];
+        assert_eq!(map_delta(&single, &single), "-");
+        assert_eq!(map_delta(&a, &single), "reordered");
     }
 }

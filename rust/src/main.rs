@@ -7,16 +7,17 @@
 //!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
 //!                       [--bundles 200] [--target 0.5] [--backend xla|native]
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
+//!                       [--selector analytic|measured]
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
-//! hybrid-sgd calibrate  [--quick] [--save FILE.tsv]  # Table 7 locally
+//! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
 //! hybrid-sgd datasets                              # registry listing
 //! hybrid-sgd table4|table5|table7|table8|table9|table10|table11
 //! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
 //! ```
 
-use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging, OverlapPolicy};
+use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging, OverlapPolicy, SelectorSource};
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::model::DataShape;
 use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, HybridConfig};
@@ -84,7 +85,9 @@ fn usage() {
          --eta F  --bundles N  --target F  --backend native|xla\n  \
          --effort quick|full  --scale F  --lanes N  --charging modeled|measured\n  \
          --collective auto|linear|rd|ring|rabenseifner  --overlap off|bundle\n  \
-         --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv"
+         --selector analytic|measured (crossover source for --collective auto)\n  \
+         --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv\n  \
+         calibrate --collectives (also fit per-algorithm curves into --save)"
     );
 }
 
@@ -162,7 +165,12 @@ fn cmd_datasets() -> i32 {
 
 fn cmd_calibrate(flags: &Flags) -> i32 {
     let quick = flags.contains_key("quick");
-    let p = calib::measure_local(quick);
+    let mut p = calib::measure_local(quick);
+    if flags.contains_key("collectives") {
+        // Per-algorithm microbenchmarks (§7.1 per schedule): the curves
+        // ride along in the saved profile and feed `--selector measured`.
+        p = p.with_algo_curves(calib::measure_collectives(quick));
+    }
     if let Some(path) = flags.get("save") {
         match p.to_tsv(path) {
             Ok(()) => println!("profile saved to {path} (reload with `train --profile {path}`)"),
@@ -183,6 +191,18 @@ fn cmd_calibrate(flags: &Flags) -> i32 {
     }
     for tier in &p.tiers {
         t.row(&["gamma".into(), tier.name.into(), "-".into(), format!("{:.2e}", tier.gamma)]);
+    }
+    if let Some(curves) = &p.algo_curves {
+        for algo in curves.algorithms() {
+            for pt in curves.points(algo).unwrap_or(&[]) {
+                t.row(&[
+                    algo.name().into(),
+                    format!("q={}", pt.ranks),
+                    format!("{:.2}", pt.alpha * 1e6),
+                    format!("{:.2e}", pt.beta),
+                ]);
+            }
+        }
     }
     println!("{}", t.render());
     0
@@ -301,6 +321,16 @@ fn cmd_train(flags: &Flags) -> i32 {
                 }
             },
         },
+        selector: match flags.get("selector").map(|s| s.as_str()) {
+            None => SelectorSource::Analytic,
+            Some(name) => match SelectorSource::from_name(name) {
+                Some(s) => s,
+                None => {
+                    eprintln!("unknown --selector {name} (want analytic|measured)");
+                    return 2;
+                }
+            },
+        },
         overlap: match flags.get("overlap").map(|s| s.as_str()) {
             None => OverlapPolicy::Off,
             Some(name) => match OverlapPolicy::from_name(name) {
@@ -318,6 +348,19 @@ fn cmd_train(flags: &Flags) -> i32 {
         timeline: false,
         seed: get(flags, "seed", 0x5EEDu64),
     };
+
+    if opts.selector == SelectorSource::Measured && opts.profile.algo_curves.is_none() {
+        println!(
+            "note: --selector measured but the profile carries no per-algorithm curves; \
+             selection falls back to analytic (fit them with `calibrate --collectives --save`)"
+        );
+    }
+    if opts.selector == SelectorSource::Measured && opts.rs_row {
+        println!(
+            "note: --rs-row charges the row reduce as a reduce-scatter, whose selection is \
+             always analytic (measured curves are fitted from full-Allreduce schedules)"
+        );
+    }
 
     let backend_name = flags.get("backend").map(|s| s.as_str()).unwrap_or("native");
     let xla;

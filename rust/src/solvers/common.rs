@@ -1,6 +1,6 @@
 //! Shared solver plumbing: run options, traces, results.
 
-use crate::collectives::AlgoPolicy;
+use crate::collectives::{AlgoPolicy, SelectorSource};
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
@@ -26,6 +26,13 @@ pub struct RunOpts {
     /// Collective-algorithm policy (auto-selected by default; pin with
     /// `Fixed(_)`). Changes charged time/books only, never trajectories.
     pub algo: AlgoPolicy,
+    /// Curve family the `Auto` policy prices selection from (`--selector`):
+    /// `Analytic` (Hockney, default) or `Measured` (the profile's
+    /// per-algorithm fitted curves, e.g. loaded via `train --profile` from
+    /// a `calibrate --collectives --save` run; falls back to analytic when
+    /// the profile carries no curves). Selection-only: trajectories are
+    /// bit-identical across sources, only charged books may move.
+    pub selector: SelectorSource,
     /// Compute/communication overlap policy: `Off` (bulk-synchronous,
     /// seed-identical books) or `Bundle` (the s-step row Allreduce of
     /// bundle `k` hides behind the SpMV/Gram of bundle `k + 1`). Changes
@@ -67,6 +74,7 @@ impl Default for RunOpts {
             charging: Charging::Modeled,
             profile: CalibProfile::perlmutter(),
             algo: AlgoPolicy::Auto,
+            selector: SelectorSource::Analytic,
             overlap: OverlapPolicy::Off,
             rs_row: false,
             timeline: true,

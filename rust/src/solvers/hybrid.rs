@@ -117,7 +117,8 @@ impl<'a> HybridSolver<'a> {
 
         let mut engine = Engine::new(mesh, opts.profile.clone(), opts.charging)
             .with_lanes(opts.lanes)
-            .with_algo(opts.algo);
+            .with_algo(opts.algo)
+            .with_selector(opts.selector);
         engine.timeline.set_enabled(opts.timeline);
 
         let backend = self.backend;

@@ -9,6 +9,7 @@
 //! `examples/overlap_breakdown.rs` prints.
 
 use super::{EventKind, Timeline};
+use crate::collectives::BoundBy;
 use crate::metrics::Phase;
 
 /// Aggregated seconds of one phase (means over ranks unless noted).
@@ -109,6 +110,37 @@ impl CriticalPath {
         self.bound_by(self.makespan_rank())
     }
 
+    /// Collapse a rank's bound-by report onto the axis the collective
+    /// selector cares about
+    /// ([`AutoSelector::pick_bound_aware`](crate::collectives::AutoSelector::pick_bound_aware)):
+    ///
+    /// * bound by a compute phase → [`BoundBy::Balanced`] (changing the
+    ///   collective schedule will not move this rank's makespan);
+    /// * bound by a communication phase whose charged seconds are mostly
+    ///   **wait** → [`BoundBy::Latency`]: the rank spends its comm time
+    ///   synchronizing round after round, so per-round overhead — the
+    ///   intercept — is what to shrink;
+    /// * bound by a communication phase whose charged seconds are mostly
+    ///   exposed **transfer** → [`BoundBy::Bandwidth`]: payload bytes
+    ///   dominate, prefer the shallowest slope.
+    pub fn bound_axis(&self, rank: usize) -> BoundBy {
+        let phase = self.bound_by(rank);
+        if !matches!(phase, Phase::SstepComm | Phase::FedAvgComm) {
+            return BoundBy::Balanced;
+        }
+        let pi = phase_index(phase);
+        let charged = self.charged[pi][rank];
+        let wait = self.wait[pi][rank];
+        if charged <= 0.0 {
+            return BoundBy::Balanced;
+        }
+        if wait * 2.0 > charged {
+            BoundBy::Latency
+        } else {
+            BoundBy::Bandwidth
+        }
+    }
+
     /// Aggregated line for one phase.
     pub fn line(&self, phase: Phase) -> PhaseLine {
         let pi = phase_index(phase);
@@ -191,5 +223,25 @@ mod tests {
         let cp = CriticalPath::analyze(&tl);
         assert_eq!(cp.bound_by(0), Phase::SstepComm);
         assert_eq!(cp.rows().len(), Phase::all().len());
+    }
+
+    #[test]
+    fn bound_axis_splits_comm_bound_ranks_by_wait_share() {
+        let mut tl = Timeline::new(3);
+        // Rank 0: compute-bound.
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 5.0);
+        tl.record(0, Phase::SstepComm, EventKind::Transfer, 5.0, 6.0);
+        // Rank 1: comm-bound, mostly wait (sync after every round).
+        tl.record(1, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(1, Phase::SstepComm, EventKind::Wait, 1.0, 4.0);
+        tl.record(1, Phase::SstepComm, EventKind::Transfer, 4.0, 5.0);
+        // Rank 2: comm-bound, mostly exposed transfer.
+        tl.record(2, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(2, Phase::FedAvgComm, EventKind::Wait, 1.0, 1.5);
+        tl.record(2, Phase::FedAvgComm, EventKind::Transfer, 1.5, 6.0);
+        let cp = CriticalPath::analyze(&tl);
+        assert_eq!(cp.bound_axis(0), BoundBy::Balanced);
+        assert_eq!(cp.bound_axis(1), BoundBy::Latency);
+        assert_eq!(cp.bound_axis(2), BoundBy::Bandwidth);
     }
 }

@@ -11,7 +11,7 @@
 //! [`CollectiveCost`] remains authoritative for charging (step times sum
 //! to it up to fp accumulation).
 
-use crate::collectives::{self, AlgoPolicy, Algorithm, CollectiveCost, ScheduleStep};
+use crate::collectives::{self, AlgoPolicy, Algorithm, CollectiveCost, ScheduleStep, SelectorSource};
 use crate::costmodel::calib::CalibProfile;
 
 /// One collective resolved to a concrete algorithm, its aggregate cost,
@@ -28,14 +28,28 @@ pub struct CollectiveSchedule {
 
 impl CollectiveSchedule {
     /// The Allreduce schedule `policy` resolves for a `q`-rank team and a
-    /// `words`-word payload.
+    /// `words`-word payload (analytic selection source).
     pub fn allreduce(
         profile: &CalibProfile,
         policy: AlgoPolicy,
         q: usize,
         words: usize,
     ) -> CollectiveSchedule {
-        let (algo, cost) = collectives::charge(profile, policy, q, words);
+        Self::allreduce_with(profile, policy, SelectorSource::Analytic, q, words)
+    }
+
+    /// [`CollectiveSchedule::allreduce`] with an explicit
+    /// [`SelectorSource`]: pass the engine's selector so that under
+    /// `Auto` + measured curves the materialized schedule names the same
+    /// algorithm the engine actually charged.
+    pub fn allreduce_with(
+        profile: &CalibProfile,
+        policy: AlgoPolicy,
+        source: SelectorSource,
+        q: usize,
+        words: usize,
+    ) -> CollectiveSchedule {
+        let (algo, cost) = collectives::charge_with(profile, policy, source, q, words);
         CollectiveSchedule { algo, cost, steps: algo.as_algo().steps_of(profile, q, words) }
     }
 
@@ -117,6 +131,35 @@ mod tests {
         assert_eq!(s.rounds_done_after(s.cost.time), s.rounds());
         let one_and_a_half = s.steps[0].time * 1.5;
         assert_eq!(s.rounds_done_after(one_and_a_half), 1);
+    }
+
+    #[test]
+    fn measured_source_schedule_names_the_engine_charged_algorithm() {
+        // Under Auto + measured curves the materialized schedule must
+        // track the measured pick, not the analytic one.
+        use crate::costmodel::calib::{AlgoCurves, CommPoint};
+        let base = prof();
+        let mut curves = AlgoCurves::new();
+        for a in Algorithm::physical() {
+            let (alpha, beta) =
+                if a == Algorithm::RingAllreduce { (0.0, 1e-13) } else { (1.0, 1e-6) };
+            curves.push(a, CommPoint { ranks: 2, alpha, beta });
+            curves.push(a, CommPoint { ranks: 1024, alpha, beta });
+        }
+        let p = base.clone().with_algo_curves(curves);
+        let analytic = CollectiveSchedule::allreduce(&p, AlgoPolicy::Auto, 64, 8);
+        assert_eq!(analytic.algo, Algorithm::RecursiveDoubling);
+        let measured = CollectiveSchedule::allreduce_with(
+            &p,
+            AlgoPolicy::Auto,
+            SelectorSource::Measured,
+            64,
+            8,
+        );
+        assert_eq!(measured.algo, Algorithm::RingAllreduce);
+        // The charged shape stays the winner's analytic cost.
+        assert_eq!(measured.cost, Algorithm::RingAllreduce.as_algo().cost(&p, 64, 8));
+        assert_eq!(measured.rounds(), measured.cost.steps);
     }
 
     #[test]

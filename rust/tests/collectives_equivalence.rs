@@ -267,6 +267,80 @@ fn prop_reduce_scatter_books_bounded_by_allreduce_books() {
     );
 }
 
+/// Satellite property: a measured profile whose per-algorithm points are
+/// *generated from* the Hockney model makes `SelectorSource::Measured`
+/// reproduce `Analytic`'s `selection_map` exactly — every algorithm
+/// sequence and every word-resolution crossover threshold — including
+/// after a round trip through the TSV schema (the `calibrate
+/// --collectives --save` → `train --profile` path). Every schedule's
+/// analytic time is affine in the payload at fixed team size, so the
+/// two-point fit loses nothing the selector can see.
+#[test]
+fn prop_hockney_generated_measured_profile_reproduces_analytic_selection() {
+    use hybrid_sgd::collectives::{AutoSelector, SelectorSource};
+    use hybrid_sgd::costmodel::calib::AlgoCurves;
+    let base = CalibProfile::perlmutter();
+    let team_sizes = [2usize, 3, 4, 8, 9, 16, 32, 64, 100, 256, 1024];
+    let curves = AlgoCurves::from_hockney(&base, &team_sizes, 1 << 16);
+    let dir = std::env::temp_dir().join(format!("collectives_equiv_{}", std::process::id()));
+    let path = dir.join("hockney_curves.tsv");
+    base.clone().with_algo_curves(curves).to_tsv(&path).unwrap();
+    let measured_prof = CalibProfile::from_tsv(&path).unwrap();
+    assert!(measured_prof.algo_curves.is_some(), "curves survive the TSV round trip");
+    check(
+        Config { cases: 32, seed: 0x5E1EC7 },
+        "hockney-fitted measured curves reproduce the analytic selection map",
+        |rng| (rng.next_below(11), 1 + rng.next_below(1 << 22)),
+        |&(qi, max_words)| {
+            let q = team_sizes[qi];
+            let analytic = AutoSelector::new(&base).selection_map(q, max_words);
+            let measured = AutoSelector::new(&measured_prof)
+                .with_source(SelectorSource::Measured)
+                .selection_map(q, max_words);
+            analytic == measured
+        },
+    );
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// `--selector measured` end-to-end through the solver: trajectories are
+/// bit-identical to `--selector analytic` under *any* curve set (the
+/// source steers charged books only), and under Hockney-fitted curves
+/// even the charged wall coincides.
+#[test]
+fn solver_trajectory_invariant_under_selector_source() {
+    use hybrid_sgd::collectives::SelectorSource;
+    use hybrid_sgd::costmodel::calib::{AlgoCurves, CommPoint};
+    let mut rng = Prng::new(0x5E1EC2);
+    let ds = synth::sparse_skewed("selector-toy", 200, 80, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+    let run_with = |profile: CalibProfile, selector: SelectorSource| {
+        let opts =
+            RunOpts { max_bundles: 8, eval_every: 0, profile, selector, ..Default::default() };
+        HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+    };
+    let base = CalibProfile::perlmutter();
+    let qs = [2usize, 4];
+    let hockney = base.clone().with_algo_curves(AlgoCurves::from_hockney(&base, &qs, 1 << 14));
+    let a = run_with(base.clone(), SelectorSource::Analytic);
+    let m = run_with(hockney, SelectorSource::Measured);
+    assert_eq!(a.x, m.x, "selector source changed the trajectory");
+    assert_eq!(a.sim_wall, m.sim_wall, "hockney-fitted curves must charge identically");
+    // A deliberately warped curve set (ring free, everything else
+    // absurd): selection moves, books may move, values must not.
+    let mut warped = AlgoCurves::new();
+    for algo in Algorithm::physical() {
+        for &q in &qs {
+            let alpha = if algo == Algorithm::RingAllreduce { 0.0 } else { 1.0 };
+            warped.push(algo, CommPoint { ranks: q, alpha, beta: 1e-12 });
+        }
+    }
+    let w = run_with(base.clone().with_algo_curves(warped), SelectorSource::Measured);
+    assert_eq!(a.x, w.x, "warped measured curves changed the trajectory");
+    assert!(w.sim_wall > 0.0);
+}
+
 #[test]
 fn solver_trajectory_invariant_under_algorithm_policy() {
     let mut rng = Prng::new(0x50C1A1);

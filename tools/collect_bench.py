@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Collect the harness-less benches' printed tables into one BENCH_ci.json.
+
+Usage: collect_bench.py <dir-of-bench-stdout-files> [out.json]
+
+Each input file is one bench target's captured stdout (named
+``<bench>.txt``). The benches share a reporting idiom this parser keys on:
+
+* a trailing ``(effort Quick, generated in 12.3s; ...)`` line — the
+  headline wall seconds for the whole target;
+* optional ``1.87x``-style tokens (the overlap/collective gain columns) —
+  collected as ``speedups`` so gain regressions are visible in the
+  trajectory;
+* the ``== ... ==`` section headers, kept as ``sections`` for a cheap
+  smoke check that a bench kept printing what it used to.
+
+Output schema (one object per bench)::
+
+    { "<bench>": { "wall_s": 12.3, "speedups": [1.87, ...],
+                   "sections": ["Table 8 - ...", ...], "lines": 120 } }
+
+The script is deliberately tolerant: a bench that prints nothing
+recognizable still lands in the JSON (with nulls) so the CI artifact
+always carries the full bench roster and a disappearing bench is loud.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+WALL_RE = re.compile(r"generated in ([0-9]+(?:\.[0-9]+)?)s")
+SPEEDUP_RE = re.compile(r"\b([0-9]+(?:\.[0-9]+)?)x\b")
+SECTION_RE = re.compile(r"^==\s*(.*?)\s*==\s*$")
+
+
+def collect(text: str) -> dict:
+    wall = None
+    speedups = []
+    sections = []
+    for line in text.splitlines():
+        m = WALL_RE.search(line)
+        if m:
+            wall = float(m.group(1))
+        sec = SECTION_RE.match(line.strip())
+        if sec:
+            sections.append(sec.group(1))
+        for tok in SPEEDUP_RE.findall(line):
+            speedups.append(float(tok))
+    return {
+        "wall_s": wall,
+        "speedups": speedups,
+        "sections": sections,
+        "lines": len(text.splitlines()),
+    }
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    src = Path(sys.argv[1])
+    out = Path(sys.argv[2]) if len(sys.argv) > 2 else Path("BENCH_ci.json")
+    results = {}
+    for f in sorted(src.glob("*.txt")):
+        results[f.stem] = collect(f.read_text(errors="replace"))
+    if not results:
+        print(f"no bench outputs under {src}", file=sys.stderr)
+        return 1
+    out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {out} ({len(results)} benches)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
