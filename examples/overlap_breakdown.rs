@@ -15,7 +15,7 @@ use hybrid_sgd::data::{Dataset, DatasetSpec};
 use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::metrics::Phase;
 use hybrid_sgd::partition::Partitioner;
-use hybrid_sgd::solvers::{HybridSolver, RunOpts, SolverRun};
+use hybrid_sgd::solvers::{SessionBuilder, SolverRun};
 use hybrid_sgd::timeline::CriticalPath;
 use hybrid_sgd::util::Table;
 
@@ -29,14 +29,13 @@ fn run(ds: &Dataset, mesh: Mesh, overlap: OverlapPolicy) -> SolverRun {
     } else {
         HybridConfig::new(mesh, 4, 32, 10)
     };
-    let opts = RunOpts {
-        max_bundles: 20,
-        eval_every: 0,
-        overlap,
-        profile: CalibProfile::perlmutter_contended(),
-        ..Default::default()
-    };
-    HybridSolver::new(&NativeBackend).run(ds, cfg, Partitioner::Cyclic, &opts)
+    SessionBuilder::new(&NativeBackend, ds, cfg)
+        .partitioner(Partitioner::Cyclic)
+        .max_bundles(20)
+        .eval_every(0)
+        .overlap(overlap)
+        .profile(CalibProfile::perlmutter_contended())
+        .run_to_end()
 }
 
 fn main() {

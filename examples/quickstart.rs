@@ -1,28 +1,33 @@
 //! Quickstart: the end-to-end driver proving all three layers compose.
 //!
 //! Loads the AOT-compiled JAX+Pallas artifacts through PJRT (L1/L2),
-//! partitions a real generated url-like dataset over a 2D mesh, runs
-//! HybridSGD through the distributed engine (L3), and logs the loss curve
-//! to a target — then repeats with FedAvg for contrast. Recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! partitions a real generated url-like dataset over a 2D mesh, and runs
+//! HybridSGD through the distributed engine (L3) — via the **session
+//! API**: a [`SessionBuilder`] configures the run, `step_bundle()` drives
+//! it one outer bundle at a time (printing the loss curve as the evals
+//! arrive), and `finish()` assembles the result. Then repeats with FedAvg
+//! for contrast. Recorded in EXPERIMENTS.md §End-to-end.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- quick   # CI smoke scale
 //! ```
 
-use hybrid_sgd::comm::Charging;
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::{topology, CalibProfile, HybridConfig};
 use hybrid_sgd::data::DatasetSpec;
 use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
 use hybrid_sgd::runtime::XlaBackend;
-use hybrid_sgd::solvers::{HybridSolver, RunOpts, SolverKind};
+use hybrid_sgd::solvers::{SessionBuilder, SolverKind};
 use std::time::Instant;
 
 fn main() {
+    let quick = std::env::args().nth(1).is_some_and(|a| a == "quick");
+    let (scale, p, max_bundles) = if quick { (0.05, 16, 150) } else { (0.12, 64, 600) };
+
     // 1. A real small workload: the url-like profile (sparse, huge-n,
     //    column-skewed — HybridSGD's home regime).
-    let ds = DatasetSpec::UrlLike.profile().generate_scaled(0.12, 42);
+    let ds = DatasetSpec::UrlLike.profile().generate_scaled(scale, 42);
     println!(
         "dataset {}: m={} n={} zbar={:.0} nnz={}",
         ds.name,
@@ -34,7 +39,6 @@ fn main() {
 
     // 2. Model-driven configuration: topology rule + two-objective
     //    partitioner selection (no hand tuning).
-    let p = 64;
     let mesh = topology::mesh_rule(ds.n(), p, 64, 1 << 20);
     let policy = select_two_objective(&ds.a, mesh.p_c, L_CAP_BYTES);
     println!("topology rule picked mesh {mesh}; two-objective partitioner: {}", policy.name());
@@ -53,30 +57,36 @@ fn main() {
         }
     };
 
-    // 4. Train to a target loss.
+    // 4. Train to a target loss, one bundle at a time through the session
+    //    API (the builder absorbs what used to be a RunOpts struct).
     let cfg = HybridConfig::new(mesh, 4, 32, 10);
-    let opts = RunOpts {
-        eta: 0.5,
-        max_bundles: 600,
-        eval_every: 5,
-        target_loss: Some(0.55),
-        charging: Charging::Modeled,
-        profile: CalibProfile::perlmutter(),
-        ..Default::default()
+    let session = |cfg, policy| {
+        SessionBuilder::new(backend, &ds, cfg)
+            .partitioner(policy)
+            .eta(0.5)
+            .max_bundles(max_bundles)
+            .eval_every(5)
+            .target_loss(Some(0.55))
+            .profile(CalibProfile::perlmutter())
     };
     let wall0 = Instant::now();
-    let run = HybridSolver::new(backend).run(&ds, cfg, policy, &opts);
+    let mut hybrid = session(cfg, policy).build();
+    println!("\nloss curve (bundle, simulated s, loss):");
+    while !hybrid.is_done() {
+        let Some(report) = hybrid.step_bundle() else { break };
+        if let Some(pt) = report.eval {
+            println!("  {:>5}  {:>9.4}  {:.5}", pt.bundles, pt.sim_time, pt.loss);
+        }
+    }
+    let run = hybrid.finish();
     let wall = wall0.elapsed().as_secs_f64();
 
-    println!("\nloss curve (bundle, simulated s, loss):");
-    for pt in &run.trace {
-        println!("  {:>5}  {:>9.4}  {:.5}", pt.bundles, pt.sim_time, pt.loss);
-    }
+    let fmt_loss = |l: Option<f64>| l.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into());
     println!(
-        "\nHybridSGD: {} iters, {:.4} ms/iter simulated, final loss {:.4}, accuracy {:.3}, host wall {:.1}s",
+        "\nHybridSGD: {} iters, {:.4} ms/iter simulated, final loss {}, accuracy {:.3}, host wall {:.1}s",
         run.inner_iters,
         run.per_iter() * 1e3,
-        run.final_loss(),
+        fmt_loss(run.final_loss()),
         ds.accuracy(&run.x),
         wall
     );
@@ -84,18 +94,18 @@ fn main() {
         println!("time-to-target 0.55: {t:.4} simulated s");
     }
 
-    // 5. FedAvg contrast at the same rank count.
-    let fed = HybridSolver::new(backend).run(
-        &ds,
+    // 5. FedAvg contrast at the same rank count (run_to_end: the
+    //    compatibility one-liner over the same session machinery).
+    let fed = session(
         SolverKind::FedAvg.config(p, None, 1, 32, 10),
         hybrid_sgd::partition::Partitioner::Rows,
-        &opts,
-    );
+    )
+    .run_to_end();
     println!(
-        "FedAvg:    {} iters, {:.4} ms/iter simulated, final loss {:.4}{}",
+        "FedAvg:    {} iters, {:.4} ms/iter simulated, final loss {}{}",
         fed.inner_iters,
         fed.per_iter() * 1e3,
-        fed.final_loss(),
+        fmt_loss(fed.final_loss()),
         fed.time_to_target
             .map(|t| format!(", time-to-target {t:.4} s"))
             .unwrap_or_else(|| ", target not reached in budget".into())

@@ -89,6 +89,17 @@ impl BoundBy {
             BoundBy::Bandwidth => "bandwidth",
         }
     }
+
+    /// Parse a table label (the session-checkpoint schema round-trips
+    /// retune events through these names).
+    pub fn from_name(s: &str) -> Option<BoundBy> {
+        match s {
+            "balanced" => Some(BoundBy::Balanced),
+            "latency" => Some(BoundBy::Latency),
+            "bandwidth" => Some(BoundBy::Bandwidth),
+            _ => None,
+        }
+    }
 }
 
 /// Near-tie slack for [`AutoSelector::pick_bound_aware`]: a candidate

@@ -110,6 +110,22 @@ impl CollHandle {
     pub fn pending(&self) -> &[PendingCollective] {
         &self.pending
     }
+
+    /// Reassemble a handle from pending ops — the session checkpoint
+    /// path, which serializes an in-flight collective and reconstructs
+    /// it on resume. The ops must come from [`CollHandle::into_pending`]
+    /// (or an equivalent serialization of one) for the charging rule to
+    /// stay meaningful.
+    pub fn from_pending(pending: Vec<PendingCollective>) -> CollHandle {
+        CollHandle { pending }
+    }
+
+    /// Take the pending per-team transfers out of the handle (session
+    /// checkpointing). The caller becomes responsible for completing
+    /// them.
+    pub fn into_pending(self) -> Vec<PendingCollective> {
+        self.pending
+    }
 }
 
 /// The simulated-clock rank engine (see the module docs for the two

@@ -69,7 +69,8 @@ mod tests {
             .find(|m| m.spec == DatasetSpec::Rcv1Like)
             .unwrap();
         let race = table11::race(&ds, &m, 0.1, 120);
-        let (lf, lh) = (race.fed_run.final_loss(), race.hyb_run.final_loss());
+        let lf = race.fed_run.final_loss().expect("race traces on an eval cadence");
+        let lh = race.hyb_run.final_loss().expect("race traces on an eval cadence");
         assert!(
             (lf - lh).abs() / lf.max(lh) < 0.10,
             "terminal losses diverge: fedavg {lf} hybrid {lh}"

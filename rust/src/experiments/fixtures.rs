@@ -8,7 +8,7 @@ use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::{Dataset, DatasetSpec};
 use crate::metrics::{Phase, PhaseBook};
 use crate::partition::Partitioner;
-use crate::solvers::{HybridSolver, RunOpts, SolverRun};
+use crate::solvers::{RunOpts, SessionBuilder, SolverRun};
 use crate::util::tsv::TsvWriter;
 
 /// Master seed for all experiment datasets (fixed: experiments are
@@ -92,9 +92,11 @@ pub fn measure_overlap(
 ) -> Measured {
     let rounds = bundles.div_ceil(cfg.tau).max(1);
     let bundles = rounds * cfg.tau;
-    let mut opts = charged_opts(bundles);
-    opts.overlap = overlap;
-    let run = HybridSolver::new(&NativeBackend).run(ds, cfg, policy, &opts);
+    let run = SessionBuilder::new(&NativeBackend, ds, cfg)
+        .partitioner(policy)
+        .opts(charged_opts(bundles))
+        .overlap(overlap)
+        .run_to_end();
     Measured {
         per_iter: run.per_iter(),
         iters: run.inner_iters,
@@ -103,7 +105,8 @@ pub fn measure_overlap(
     }
 }
 
-/// Run to a target loss (or the bundle budget) with tracing on.
+/// Run to a target loss (or the bundle budget) with tracing on — the
+/// absorbed-builder form of the old `RunOpts` construction.
 pub fn run_to_target(
     ds: &Dataset,
     cfg: HybridConfig,
@@ -113,17 +116,16 @@ pub fn run_to_target(
     eval_every: usize,
     target: Option<f64>,
 ) -> SolverRun {
-    let opts = RunOpts {
-        eta,
-        max_bundles,
-        eval_every,
-        target_loss: target,
-        charging: Charging::Modeled,
-        profile: CalibProfile::perlmutter_contended(),
-        timeline: false,
-        ..Default::default()
-    };
-    HybridSolver::new(&NativeBackend).run(ds, cfg, policy, &opts)
+    SessionBuilder::new(&NativeBackend, ds, cfg)
+        .partitioner(policy)
+        .eta(eta)
+        .max_bundles(max_bundles)
+        .eval_every(eval_every)
+        .target_loss(target)
+        .charging(Charging::Modeled)
+        .profile(CalibProfile::perlmutter_contended())
+        .record_timeline(false)
+        .run_to_end()
 }
 
 /// TSV writer under `results/`.

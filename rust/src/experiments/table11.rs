@@ -123,7 +123,9 @@ pub fn race(ds: &Dataset, m: &Matchup, eta: f64, bundles: usize) -> RaceResult {
     let hyb_run = fixtures::run_to_target(ds, hyb_cfg, m.policy, eta, bundles, 1, None);
 
     // Calibrate target = slower solver's terminal loss (paper §7.5).
-    let target = fed_run.final_loss().max(hyb_run.final_loss()) * 1.0001;
+    let fed_loss = fed_run.final_loss().expect("race runs trace on an eval cadence");
+    let hyb_loss = hyb_run.final_loss().expect("race runs trace on an eval cadence");
+    let target = fed_loss.max(hyb_loss) * 1.0001;
     let first_cross = |run: &SolverRun| -> Option<f64> {
         run.trace.iter().find(|t| t.loss <= target).map(|t| t.sim_time)
     };

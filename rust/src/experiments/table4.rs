@@ -67,8 +67,11 @@ pub fn run(effort: Effort) -> Table {
                 (mesh, fixtures::run_to_target(&ds, cfg, Partitioner::Cyclic, 0.1, bundles, 2, None))
             })
             .collect();
-        let target =
-            runs.iter().map(|(_, r)| r.final_loss()).fold(f64::MIN, f64::max) * 1.0001;
+        let target = runs
+            .iter()
+            .map(|(_, r)| r.final_loss().expect("factorization races trace on an eval cadence"))
+            .fold(f64::MIN, f64::max)
+            * 1.0001;
         let cross = |r: &crate::solvers::SolverRun| -> f64 {
             r.trace
                 .iter()

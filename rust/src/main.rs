@@ -9,6 +9,8 @@
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
 //!                       [--selector analytic|measured]
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
+//!                       [--retune off|bound-aware] [--retune-every K]
+//!                       [--checkpoint FILE.tsv] [--resume FILE.tsv]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
 //! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
@@ -26,7 +28,7 @@ use hybrid_sgd::experiments::{self, Effort};
 use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
-use hybrid_sgd::solvers::{HybridSolver, RunOpts};
+use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
 use hybrid_sgd::util::Table;
 use std::collections::HashMap;
 
@@ -87,6 +89,10 @@ fn usage() {
          --collective auto|linear|rd|ring|rabenseifner  --overlap off|bundle\n  \
          --selector analytic|measured (crossover source for --collective auto)\n  \
          --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv\n  \
+         --retune off|bound-aware [--retune-every K] (re-pin the row collective\n  \
+           from the live critical path every K bundles; books only, never values)\n  \
+         --checkpoint FILE.tsv (save the session at the end of the run)\n  \
+         --resume FILE.tsv (continue a saved session; config must match)\n  \
          calibrate --collectives (also fit per-algorithm curves into --save)"
     );
 }
@@ -378,6 +384,15 @@ fn cmd_train(flags: &Flags) -> i32 {
         _ => &NativeBackend,
     };
 
+    let retune = match flags.get("retune").map(|s| s.as_str()) {
+        None | Some("off") => RetunePolicy::Off,
+        Some("bound-aware") => RetunePolicy::BoundAware { every: get(flags, "retune-every", 5) },
+        Some(other) => {
+            eprintln!("unknown --retune {other} (want off|bound-aware)");
+            return 2;
+        }
+    };
+
     println!(
         "training {} (m={} n={} zbar={:.0}) on mesh {} s={} b={} tau={} partitioner={} backend={}",
         ds.name,
@@ -391,7 +406,48 @@ fn cmd_train(flags: &Flags) -> i32 {
         policy.name(),
         backend.name(),
     );
-    let run = HybridSolver::new(backend).run(&ds, cfg, policy, &opts);
+    let overlap = opts.overlap;
+    let builder = SessionBuilder::new(backend, &ds, cfg)
+        .partitioner(policy)
+        .opts(opts)
+        .retune(retune);
+    let mut session = match flags.get("resume") {
+        Some(path) => match builder.resume(path) {
+            Ok(s) => {
+                println!("resumed from {path} at bundle {}", s.bundles_run());
+                s
+            }
+            Err(e) => {
+                eprintln!("failed to resume from {path}: {e}");
+                return 2;
+            }
+        },
+        None => builder.build(),
+    };
+    while !session.is_done() {
+        let _ = session.step_bundle();
+    }
+    for ev in session.retunes() {
+        println!(
+            "retune @bundle {}: {}-bound critical path -> row collective {} ({})",
+            ev.bundle,
+            ev.axis.name(),
+            ev.algo.name(),
+            if ev.switched { "switched" } else { "unchanged" },
+        );
+    }
+    if let Some(path) = flags.get("checkpoint") {
+        match session.checkpoint(path) {
+            Ok(()) => {
+                println!("checkpoint saved to {path} (continue with `train --resume {path}`)")
+            }
+            Err(e) => {
+                eprintln!("failed to save checkpoint to {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    let run = session.finish();
     let mut t = Table::new(&["bundles", "iters", "sim time (s)", "loss"]);
     for pt in &run.trace {
         t.row(&[
@@ -403,14 +459,14 @@ fn cmd_train(flags: &Flags) -> i32 {
     }
     println!("{}", t.render());
     println!(
-        "done: {} bundles, {} iters, {:.3} ms/iter (simulated), final loss {:.5}, accuracy {:.3}",
+        "done: {} bundles, {} iters, {:.3} ms/iter (simulated), final loss {}, accuracy {:.3}",
         run.bundles_run,
         run.inner_iters,
         run.per_iter() * 1e3,
-        run.final_loss(),
+        run.final_loss().map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into()),
         ds.accuracy(&run.x)
     );
-    if opts.overlap == OverlapPolicy::Bundle {
+    if overlap == OverlapPolicy::Bundle {
         println!(
             "overlap: {:.4} s of row-reduce transfer hidden behind compute (mean/rank)",
             run.book.mean_hidden(hybrid_sgd::metrics::Phase::SstepComm)

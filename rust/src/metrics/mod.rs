@@ -128,6 +128,24 @@ impl PhaseBook {
         self.hidden[phase.index()][rank] += seconds;
     }
 
+    /// Charged seconds of one phase on one rank (the session-checkpoint
+    /// serialization and per-rank diagnostics read the book through
+    /// these; the aggregates below stay the reporting surface).
+    pub fn charged_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.charged[phase.index()][rank]
+    }
+
+    /// Sync-skew wait seconds of one phase on one rank.
+    pub fn wait_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.wait[phase.index()][rank]
+    }
+
+    /// Hidden (overlapped, uncharged) transfer seconds of one phase on
+    /// one rank.
+    pub fn hidden_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.hidden[phase.index()][rank]
+    }
+
     /// Mean over ranks of the charged time for a phase (the per-rank wall
     /// contribution the paper's breakdown reports).
     pub fn mean_charged(&self, phase: Phase) -> f64 {

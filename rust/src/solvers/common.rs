@@ -37,10 +37,12 @@ pub struct RunOpts {
     /// seed-identical books) or `Bundle` (the s-step row Allreduce of
     /// bundle `k` hides behind the SpMV/Gram of bundle `k + 1`). Changes
     /// charged time/books only, never trajectories; `sim_wall` never
-    /// increases under `Bundle`. Note: when a run stops early on
-    /// `target_loss` under `Bundle`, `time_to_target` is read with the
-    /// last row transfer still in flight (its exposed remainder settles
-    /// into the final `sim_wall`).
+    /// increases under `Bundle`. When a run stops early on `target_loss`
+    /// under `Bundle`, the session settles the in-flight row transfer
+    /// *before* reading `time_to_target`, so the reported time includes
+    /// its exposed remainder and equals the final `sim_wall` (the seed
+    /// read the clock with the transfer still in flight — fixed, with a
+    /// regression test in `tests/session_equivalence.rs`).
     pub overlap: OverlapPolicy,
     /// Charge the s-step row-team reduce as a **reduce-scatter** (the
     /// allgather half of the ring/Rabenseifner schedule dropped). This is
@@ -130,9 +132,11 @@ impl SolverRun {
         }
     }
 
-    /// Final loss (last trace point), or NaN when tracing was off.
-    pub fn final_loss(&self) -> f64 {
-        self.trace.last().map(|t| t.loss).unwrap_or(f64::NAN)
+    /// Final loss (last trace point), or `None` when the run recorded no
+    /// trace (loss evals off, or the trace observer detached). The seed
+    /// returned a silent `NaN` here, which leaked into printed tables.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.trace.last().map(|t| t.loss)
     }
 }
 
@@ -154,6 +158,6 @@ mod tests {
             time_to_target: None,
         };
         assert!((r.per_iter() - 0.1).abs() < 1e-12);
-        assert!(r.final_loss().is_nan());
+        assert_eq!(r.final_loss(), None);
     }
 }

@@ -1,4 +1,5 @@
-//! The parallel SGD solver family of the paper (§4, Algorithms 1–3).
+//! The parallel SGD solver family of the paper (§4, Algorithms 1–3),
+//! exposed as a resumable **session**.
 //!
 //! Everything is one engine: [`hybrid::HybridSolver`] implements the full
 //! 2D HybridSGD algorithm — row teams run s-step bundles, column teams
@@ -13,6 +14,33 @@
 //! | 2D SGD          | `p_r × p_c` | 1   | 1     |
 //! | HybridSGD       | `p_r × p_c` | s   | τ     |
 //!
+//! # The Session lifecycle
+//!
+//! The solver loop lives in [`session::Session`], driven one outer
+//! bundle at a time — the round boundary the paper's interventions (and
+//! DaSGD-style mid-run tuning) need:
+//!
+//! 1. **Configure** — [`SessionBuilder`] replaces the old positional
+//!    `run(ds, cfg, policy, &opts)` signature and absorbs [`RunOpts`]
+//!    construction: `SessionBuilder::new(backend, &ds, cfg)
+//!    .partitioner(..).eta(..).max_bundles(..)…`. Optional:
+//!    [`RetunePolicy::BoundAware`] for mid-run collective re-tuning,
+//!    [`Observer`]s for per-bundle hooks (the loss trace, event-log
+//!    recording, and phase accounting are built-in observers).
+//! 2. **Drive** — [`Session::step_bundle`] advances exactly one bundle
+//!    (`s` inner iterations) and returns a [`BundleReport`] (books/trace
+//!    deltas, eval point, retune decision). [`Session::checkpoint`]
+//!    persists the run at any bundle boundary (weights, cursors, seed,
+//!    clocks, books, in-flight overlap state);
+//!    [`SessionBuilder::resume`] continues it bit-identically.
+//! 3. **Finish** — [`Session::finish`] settles in-flight transfers and
+//!    assembles the [`SolverRun`].
+//!
+//! [`HybridSolver::run`] remains as the thin compatibility wrapper
+//! (`SessionBuilder::…::run_to_end()`), bit-identical to the step-driven
+//! loop by construction — the property `tests/session_equivalence.rs`
+//! pins across overlap/selector/rs-row knobs.
+//!
 //! [`reference`] holds the sequential Algorithm-1 implementation used as
 //! the convergence/correctness oracle (s-step SGD must match it up to
 //! floating-point error — a tested property).
@@ -20,9 +48,14 @@
 pub mod common;
 pub mod hybrid;
 pub mod reference;
+pub mod session;
 
 pub use common::{RunOpts, SolverRun, TracePoint};
 pub use hybrid::HybridSolver;
+pub use session::{
+    BundleReport, LossTrace, Observer, ObserverCtx, PhaseAccounting, RetuneEvent, RetunePolicy,
+    Session, SessionBuilder, TimelineRecorder,
+};
 
 use crate::costmodel::HybridConfig;
 use crate::mesh::Mesh;

@@ -1,0 +1,1719 @@
+//! The resumable **`Session`** solver driver — HybridSGD as a schedule of
+//! per-bundle decisions instead of a monolithic run.
+//!
+//! The paper's experiments (§5, Tables 7–11) are interventions on a
+//! *running* solver: change `s`, `τ`, the collective, the overlap policy.
+//! DaSGD (arXiv:2006.00441) and post-local SGD (arXiv:2106.04759) frame
+//! the solver the same way — a loop of per-round decisions. This module
+//! exposes that round boundary:
+//!
+//! * [`SessionBuilder`] — replaces the positional
+//!   [`HybridSolver::run`](crate::solvers::HybridSolver::run) signature
+//!   and absorbs [`RunOpts`] construction (every knob has a builder
+//!   method; `.opts(..)` still accepts a prebuilt struct).
+//! * [`Session::step_bundle`] — advances exactly **one outer bundle**
+//!   (`s` inner iterations) and returns a [`BundleReport`] with that
+//!   bundle's charged-book deltas, eval point, and retune decision. The
+//!   engine ([`crate::comm::Engine`]) lives inside the session, so clocks,
+//!   books, and the event log persist across steps.
+//! * [`Observer`] — pluggable per-bundle hooks. The loss trace
+//!   ([`LossTrace`]), event-log recording ([`TimelineRecorder`]), and
+//!   [`PhaseBook`] export ([`PhaseAccounting`]) are three *built-in*
+//!   observers (attached by default, detachable on the builder) instead
+//!   of hard-wired solver fields; user observers ride the same hooks.
+//! * [`Session::checkpoint`] / [`SessionBuilder::resume`] — versioned TSV
+//!   (schema-guarded like
+//!   [`CalibProfile::from_tsv`](crate::costmodel::CalibProfile::from_tsv))
+//!   carrying weights, sampling cursors, the master seed, per-rank
+//!   clocks/books, and any **in-flight overlap state** (a posted row
+//!   reduce not yet settled), so a resumed session continues the
+//!   trajectory *and* the charged accounting bit-for-bit.
+//! * [`RetunePolicy::BoundAware`] — every `k` bundles the session reads
+//!   [`CriticalPath::bound_axis`] from the live timeline and re-pins the
+//!   row collective via [`AutoSelector::pick_bound_aware`]. Selection
+//!   moves books only (the collectives determinism contract), so
+//!   trajectories stay bit-identical with retuning on or off.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//! SessionBuilder::new(backend, &ds, cfg)   // or HybridSolver::session(..)
+//!     .partitioner(..).eta(..).max_bundles(..)...   // absorbed RunOpts
+//!     .retune(RetunePolicy::BoundAware { every })    // optional
+//!     .observe(Box::new(MyObserver))                 // optional
+//!     .build()                      // or .resume(path) from a checkpoint
+//!     -> Session
+//! loop { session.step_bundle() }    // drive; checkpoint() at boundaries
+//! session.finish() -> SolverRun     // settle in-flight state, assemble
+//! ```
+//!
+//! [`SessionBuilder::run_to_end`] collapses the whole lifecycle into the
+//! seed behavior; `HybridSolver::run` is that one-liner, so every caller
+//! of the old API gets bit-identical results (a property-tested
+//! guarantee — see `tests/session_equivalence.rs`).
+//!
+//! # Early stop and in-flight transfers
+//!
+//! When a run stops early on `target_loss` under
+//! [`OverlapPolicy::Bundle`], the last row transfer may still be in
+//! flight at the stopping eval. The session **settles it before reading
+//! `time_to_target`**, so the reported time includes the transfer's
+//! exposed remainder (fixing the seed caveat documented in
+//! [`RunOpts::overlap`]); `time_to_target` then equals the final
+//! `sim_wall` of the run.
+
+use super::common::{RunOpts, SolverRun, TracePoint};
+use crate::collectives::{AlgoPolicy, Algorithm, AutoSelector, BoundBy, CollectiveCost};
+use crate::comm::{Charging, CollHandle, Cost, Engine, OverlapPolicy, Reduce, Scope};
+use crate::compute::ComputeBackend;
+use crate::costmodel::{CalibProfile, HybridConfig};
+use crate::data::Dataset;
+use crate::metrics::{Phase, PhaseBook};
+use crate::partition::{MeshPartition, Partitioner};
+use crate::sparse::{gram, Csr};
+use crate::timeline::{CriticalPath, PendingCollective, Timeline};
+use crate::WORD_BYTES;
+use std::time::Instant;
+
+/// Per-rank solver state (weights, cursors, scratch).
+struct RankState {
+    /// Local label-folded block (`m_local × n_local`).
+    block: Csr,
+    /// Local weight slice.
+    x: Vec<f64>,
+    /// Packed communication buffer: `[v (s·b) | tril(G) (q(q+1)/2)]`.
+    comm: Vec<f64>,
+    /// Correction output (`s·b`).
+    z: Vec<f64>,
+    /// Current bundle's local row ids (`s·b`).
+    batch: Vec<usize>,
+    /// Cyclic sampling cursor (identical across a row team).
+    cursor: usize,
+    /// Dense Gram scratch (`q × q`).
+    gtmp: Vec<f64>,
+    /// Column-scatter scratch for the Gram kernel (`n_local`).
+    gscratch: Vec<f64>,
+    /// Nonzeros in the current batch (for cost charging).
+    batch_nnz: usize,
+}
+
+/// Mid-run collective re-tuning policy (the ROADMAP `pick_bound_aware`
+/// follow-on, DaSGD-style: keep the bound-by report in the tuning loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetunePolicy {
+    /// Never re-pin; the row collective follows [`RunOpts::algo`] for the
+    /// whole run (the seed behavior).
+    Off,
+    /// Every `every` bundles, read the live critical path's
+    /// [`CriticalPath::bound_axis`] for the makespan rank and re-pin the
+    /// row collective via [`AutoSelector::pick_bound_aware`]. Forces
+    /// event-log recording on (the analyzer needs it). Books may move;
+    /// trajectories never do.
+    BoundAware {
+        /// Re-tune cadence in bundles (0 disables).
+        every: usize,
+    },
+}
+
+impl RetunePolicy {
+    /// CLI/table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RetunePolicy::Off => "off",
+            RetunePolicy::BoundAware { .. } => "bound-aware",
+        }
+    }
+}
+
+/// One mid-run re-tune decision (returned in [`BundleReport::retune`] and
+/// kept in [`Session::retunes`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RetuneEvent {
+    /// Bundles completed when the check ran.
+    pub bundle: usize,
+    /// The critical-path verdict for the makespan rank.
+    pub axis: BoundBy,
+    /// The algorithm the row collective is pinned to from here on.
+    pub algo: Algorithm,
+    /// Whether the pin differs from what the previous bundles used.
+    pub switched: bool,
+}
+
+/// What one [`Session::step_bundle`] call did.
+#[derive(Clone, Debug)]
+pub struct BundleReport {
+    /// 1-based index of the completed bundle (== bundles run so far).
+    pub bundle: usize,
+    /// Inner iterations completed so far (`bundle · s`).
+    pub inner_iters: usize,
+    /// Simulated wall after this bundle.
+    pub sim_wall: f64,
+    /// Simulated wall this bundle added (critical-path delta).
+    pub wall_delta: f64,
+    /// Per-phase mean-charged-seconds delta of this bundle, in
+    /// [`Phase::all`] order (the bundle's slice of the Table 10 books;
+    /// the `Metrics` entry is measured host time, not simulated).
+    pub charged_delta: Vec<(Phase, f64)>,
+    /// Whether the deferred column (FedAvg) averaging fired.
+    pub fedavg_fired: bool,
+    /// The loss eval taken after this bundle, if the cadence hit.
+    pub eval: Option<TracePoint>,
+    /// Whether this bundle's eval reached `target_loss` (the session is
+    /// done; further `step_bundle` calls return `None`).
+    pub target_hit: bool,
+    /// The re-tune decision taken after this bundle, if the cadence hit.
+    pub retune: Option<RetuneEvent>,
+}
+
+/// Read-only view of the live session handed to [`Observer`] hooks.
+pub struct ObserverCtx<'s> {
+    /// Bundles completed.
+    pub bundles_run: usize,
+    /// Inner iterations completed.
+    pub inner_iters: usize,
+    /// Current simulated wall.
+    pub sim_wall: f64,
+    /// The live phase accounting.
+    pub book: &'s PhaseBook,
+    /// The live event log (empty when recording is off).
+    pub timeline: &'s Timeline,
+    /// Simulated time the target was reached, if it was.
+    pub time_to_target: Option<f64>,
+}
+
+/// Per-bundle hook into a running [`Session`]. The three built-ins
+/// ([`LossTrace`], [`TimelineRecorder`], [`PhaseAccounting`]) ride the
+/// same interface; attach your own with [`SessionBuilder::observe`].
+pub trait Observer {
+    /// Called after every completed bundle.
+    fn on_bundle(&mut self, _ctx: &ObserverCtx<'_>, _report: &BundleReport) {}
+    /// Called once when the session finishes (in-flight state settled).
+    fn on_finish(&mut self, _ctx: &ObserverCtx<'_>) {}
+}
+
+/// Built-in observer: collects the loss trace that becomes
+/// [`SolverRun::trace`]. Detaching it ([`SessionBuilder::loss_trace`])
+/// stops *collection* only — evals still run on the configured cadence
+/// (they drive early stop and charge `Metrics`), the points are just
+/// dropped.
+#[derive(Default)]
+pub struct LossTrace {
+    points: Vec<TracePoint>,
+}
+
+impl LossTrace {
+    /// The points collected so far.
+    pub fn points(&self) -> &[TracePoint] {
+        &self.points
+    }
+}
+
+impl Observer for LossTrace {
+    fn on_bundle(&mut self, _ctx: &ObserverCtx<'_>, report: &BundleReport) {
+        if let Some(tp) = report.eval {
+            self.points.push(tp);
+        }
+    }
+}
+
+/// Built-in observer: owns event-log recording. Its presence enables
+/// [`Timeline`] recording on the engine and exports the log as
+/// [`SolverRun::timeline`] at finish; without it the engine records
+/// nothing (the seed `opts.timeline = false` behavior). Charging is
+/// unaffected either way — recording is observation only.
+#[derive(Default)]
+pub struct TimelineRecorder;
+
+impl Observer for TimelineRecorder {}
+
+/// Built-in observer: exports the engine's [`PhaseBook`] as
+/// [`SolverRun::book`] at finish. The engine always *accumulates* the
+/// book (charging needs it); detaching this observer just leaves the
+/// result's book empty.
+#[derive(Default)]
+pub struct PhaseAccounting;
+
+impl Observer for PhaseAccounting {}
+
+/// Builder for a [`Session`] — the constructor that replaced the
+/// positional `run(ds, cfg, policy, &opts)` signature. See the module
+/// docs for the lifecycle.
+pub struct SessionBuilder<'a> {
+    backend: &'a dyn ComputeBackend,
+    ds: &'a Dataset,
+    cfg: HybridConfig,
+    policy: Partitioner,
+    opts: RunOpts,
+    retune: RetunePolicy,
+    trace: bool,
+    timeline: Option<bool>,
+    book: bool,
+    observers: Vec<Box<dyn Observer + 'a>>,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// New builder over a backend, dataset, and algorithm configuration.
+    /// Defaults: [`Partitioner::Cyclic`], [`RunOpts::default`], no
+    /// retuning, all three built-in observers attached (timeline
+    /// recording follows [`RunOpts::timeline`]).
+    pub fn new(
+        backend: &'a dyn ComputeBackend,
+        ds: &'a Dataset,
+        cfg: HybridConfig,
+    ) -> SessionBuilder<'a> {
+        SessionBuilder {
+            backend,
+            ds,
+            cfg,
+            policy: Partitioner::Cyclic,
+            opts: RunOpts::default(),
+            retune: RetunePolicy::Off,
+            trace: true,
+            timeline: None,
+            book: true,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Column-partitioning policy (default: cyclic).
+    pub fn partitioner(mut self, policy: Partitioner) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Replace the whole option block (the compatibility path for callers
+    /// that already hold a [`RunOpts`]).
+    pub fn opts(mut self, opts: RunOpts) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Step size η.
+    pub fn eta(mut self, eta: f64) -> Self {
+        self.opts.eta = eta;
+        self
+    }
+
+    /// Outer-bundle budget ([`Session::run_to_end`] stops here; manual
+    /// drivers may step past it).
+    pub fn max_bundles(mut self, n: usize) -> Self {
+        self.opts.max_bundles = n;
+        self
+    }
+
+    /// Loss-eval cadence in bundles (0 = only at the final budgeted
+    /// bundle).
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.opts.eval_every = n;
+        self
+    }
+
+    /// Early-stop target loss.
+    pub fn target_loss(mut self, target: Option<f64>) -> Self {
+        self.opts.target_loss = target;
+        self
+    }
+
+    /// Compute-lane threads.
+    pub fn lanes(mut self, lanes: usize) -> Self {
+        self.opts.lanes = lanes;
+        self
+    }
+
+    /// Compute charging policy.
+    pub fn charging(mut self, charging: Charging) -> Self {
+        self.opts.charging = charging;
+        self
+    }
+
+    /// Machine profile charged from.
+    pub fn profile(mut self, profile: CalibProfile) -> Self {
+        self.opts.profile = profile;
+        self
+    }
+
+    /// Collective-algorithm policy.
+    pub fn algo(mut self, algo: AlgoPolicy) -> Self {
+        self.opts.algo = algo;
+        self
+    }
+
+    /// Auto-selection pricing source.
+    pub fn selector(mut self, selector: crate::collectives::SelectorSource) -> Self {
+        self.opts.selector = selector;
+        self
+    }
+
+    /// Compute/communication overlap policy.
+    pub fn overlap(mut self, overlap: OverlapPolicy) -> Self {
+        self.opts.overlap = overlap;
+        self
+    }
+
+    /// Charge the row reduce as a reduce-scatter (see [`RunOpts::rs_row`]).
+    pub fn rs_row(mut self, rs_row: bool) -> Self {
+        self.opts.rs_row = rs_row;
+        self
+    }
+
+    /// Master seed carried through checkpoints.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Mid-run collective re-tuning policy (default off).
+    pub fn retune(mut self, retune: RetunePolicy) -> Self {
+        self.retune = retune;
+        self
+    }
+
+    /// Attach/detach the built-in [`LossTrace`] observer (default on).
+    pub fn loss_trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
+    /// Attach/detach the built-in [`TimelineRecorder`] observer,
+    /// overriding [`RunOpts::timeline`].
+    pub fn record_timeline(mut self, on: bool) -> Self {
+        self.timeline = Some(on);
+        self
+    }
+
+    /// Attach/detach the built-in [`PhaseAccounting`] observer (default
+    /// on).
+    pub fn phase_book(mut self, on: bool) -> Self {
+        self.book = on;
+        self
+    }
+
+    /// Attach a custom observer (called after the built-ins, in
+    /// attachment order).
+    pub fn observe(mut self, observer: Box<dyn Observer + 'a>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Build the session: partition the dataset over the mesh and stand
+    /// up the engine. No bundles run yet.
+    pub fn build(self) -> Session<'a> {
+        let cfg = self.cfg;
+        let mesh = cfg.mesh;
+        let q = cfg.s * cfg.b;
+        // At s = 1 the correction never reads G (no deferred steps to
+        // correct) — exactly the paper's FedAvg/MB-SGD row payload.
+        let tril_len = if cfg.s > 1 { q * (q + 1) / 2 } else { 0 };
+
+        let mut mp = MeshPartition::build(self.ds, mesh, self.policy);
+        let blocks = std::mem::take(&mut mp.blocks);
+        let states: Vec<RankState> = blocks
+            .into_iter()
+            .map(|block| {
+                let n_local = block.cols();
+                RankState {
+                    block,
+                    x: vec![0.0; n_local],
+                    comm: vec![0.0; q + tril_len],
+                    z: vec![0.0; q],
+                    batch: Vec::with_capacity(q),
+                    cursor: 0,
+                    gtmp: vec![0.0; q * q],
+                    gscratch: vec![0.0; n_local],
+                    batch_nnz: 0,
+                }
+            })
+            .collect();
+
+        let mut engine = Engine::new(mesh, self.opts.profile.clone(), self.opts.charging)
+            .with_lanes(self.opts.lanes)
+            .with_algo(self.opts.algo)
+            .with_selector(self.opts.selector);
+        // Bound-aware retuning reads the live event log, so it forces
+        // recording on even when the opts/builder left it off — unless
+        // its cadence is 0 (documented as disabled), which must not pay
+        // for an event log nothing will read.
+        let record = self.timeline.unwrap_or(self.opts.timeline)
+            || matches!(self.retune, RetunePolicy::BoundAware { every } if every > 0);
+        engine.timeline.set_enabled(record);
+
+        Session {
+            backend: self.backend,
+            ds: self.ds,
+            cfg,
+            policy: self.policy,
+            opts: self.opts,
+            q,
+            tril_len,
+            mp,
+            states,
+            engine,
+            bundles_run: 0,
+            pending: None,
+            time_to_target: None,
+            target_reached: false,
+            row_pin: None,
+            retune: self.retune,
+            retunes: Vec::new(),
+            trace_obs: if self.trace { Some(LossTrace::default()) } else { None },
+            timeline_obs: if record { Some(TimelineRecorder) } else { None },
+            book_obs: if self.book { Some(PhaseAccounting) } else { None },
+            observers: self.observers,
+        }
+    }
+
+    /// Build and immediately drive to the bundle budget (or the target
+    /// loss) — the seed `HybridSolver::run` behavior as one call.
+    pub fn run_to_end(self) -> SolverRun {
+        self.build().run_to_end()
+    }
+
+    /// Build the session and restore its state from a checkpoint written
+    /// by [`Session::checkpoint`]. The checkpoint must have been taken
+    /// under the same dataset, mesh/`s`/`b`/`τ`, partitioner, η, overlap/
+    /// rs-row knobs, and seed — mismatches are rejected rather than
+    /// silently resumed.
+    ///
+    /// The event log is *not* checkpointed (it grows with the run):
+    /// a resumed session's timeline — and therefore any bound-aware
+    /// retune verdict after resume — covers the resumed segment only.
+    pub fn resume<P: AsRef<std::path::Path>>(self, path: P) -> std::io::Result<Session<'a>> {
+        let mut session = self.build();
+        session.restore(path)?;
+        Ok(session)
+    }
+}
+
+/// A resumable HybridSGD run: per-rank solver state plus the engine that
+/// charges it, advanced one outer bundle at a time. Construct with
+/// [`SessionBuilder`]; see the module docs for the lifecycle and the
+/// algorithm description in [`crate::solvers::hybrid`].
+pub struct Session<'a> {
+    backend: &'a dyn ComputeBackend,
+    ds: &'a Dataset,
+    cfg: HybridConfig,
+    policy: Partitioner,
+    opts: RunOpts,
+    q: usize,
+    tril_len: usize,
+    mp: MeshPartition,
+    states: Vec<RankState>,
+    engine: Engine,
+    bundles_run: usize,
+    /// At most one row reduce in flight (posted under
+    /// `OverlapPolicy::Bundle`, completed after the next bundle's Gram).
+    pending: Option<CollHandle>,
+    time_to_target: Option<f64>,
+    target_reached: bool,
+    /// Bound-aware re-pin for the row collective (None = follow
+    /// `opts.algo`).
+    row_pin: Option<Algorithm>,
+    retune: RetunePolicy,
+    retunes: Vec<RetuneEvent>,
+    trace_obs: Option<LossTrace>,
+    timeline_obs: Option<TimelineRecorder>,
+    book_obs: Option<PhaseAccounting>,
+    observers: Vec<Box<dyn Observer + 'a>>,
+}
+
+impl<'a> Session<'a> {
+    /// Bundles completed so far.
+    pub fn bundles_run(&self) -> usize {
+        self.bundles_run
+    }
+
+    /// Whether the session reached its target loss or bundle budget.
+    /// (`step_bundle` may still be called past the budget by a manual
+    /// driver; it returns `None` only after a target stop.)
+    pub fn is_done(&self) -> bool {
+        self.target_reached || self.bundles_run >= self.opts.max_bundles
+    }
+
+    /// Current simulated wall (max rank clock).
+    pub fn sim_wall(&self) -> f64 {
+        self.engine.sim_wall()
+    }
+
+    /// Simulated time the target loss was reached, if it was.
+    pub fn time_to_target(&self) -> Option<f64> {
+        self.time_to_target
+    }
+
+    /// The live phase accounting.
+    pub fn book(&self) -> &PhaseBook {
+        &self.engine.book
+    }
+
+    /// The live event log (empty when recording is off).
+    pub fn timeline(&self) -> &Timeline {
+        &self.engine.timeline
+    }
+
+    /// All re-tune decisions taken so far.
+    pub fn retunes(&self) -> &[RetuneEvent] {
+        &self.retunes
+    }
+
+    /// The algorithm the row collective is currently pinned to, if a
+    /// retune has fired.
+    pub fn row_pin(&self) -> Option<Algorithm> {
+        self.row_pin
+    }
+
+    /// The current global (team-averaged) weight vector. Assembles a
+    /// fresh copy; cheap at bundle cadence, not per inner iteration.
+    pub fn current_weights(&self) -> Vec<f64> {
+        assemble_averaged(&self.mp, &self.states)
+    }
+
+    /// Advance exactly one outer bundle (`s` inner iterations): sample,
+    /// SpMV/Gram, row-team reduce (possibly posted nonblocking), the
+    /// correction recurrence, the weight scatter, the deferred FedAvg
+    /// column averaging, and the loss eval / retune cadences. Returns
+    /// `None` once the target loss has been reached (the run is over);
+    /// stepping past `max_bundles` is allowed for manual drivers.
+    pub fn step_bundle(&mut self) -> Option<BundleReport> {
+        if self.target_reached {
+            return None;
+        }
+        let bundle = self.bundles_run;
+        let (s, b) = (self.cfg.s, self.cfg.b);
+        let q = self.q;
+        let eta_over_b = self.opts.eta / b as f64;
+        let backend = self.backend;
+        let wall_before = self.engine.sim_wall();
+        let charged_before: Vec<f64> =
+            Phase::all().iter().map(|&ph| self.engine.book.mean_charged(ph)).collect();
+
+        // --- 1+2: sample, partial products, partial Gram -------------
+        self.engine.compute(Phase::SpGemv, &mut self.states, |_rank, st| {
+            let m_local = st.block.rows();
+            st.batch.clear();
+            for k in 0..q {
+                st.batch.push((st.cursor + k) % m_local);
+            }
+            st.cursor = (st.cursor + q) % m_local;
+            st.batch_nnz = st.batch.iter().map(|&r| st.block.row_nnz(r)).sum();
+            // v = Y·x (column-partial).
+            let (v, _) = st.comm.split_at_mut(q);
+            st.block.spmv_rows(&st.batch, &st.x, v);
+            // Streamed bytes: CSR traversal plus one read pass over the
+            // local weight slab — the paper's §6.5 cache-aware compute
+            // term (FedAvg's full-n slab prices at L3/DRAM, HybridSGD's
+            // n/p_c slab at L1/L2 — its cache-locality advantage).
+            let slab = (st.x.len() * WORD_BYTES) as f64;
+            Cost::streamed(
+                2.0 * st.batch_nnz as f64,
+                12.0 * st.batch_nnz as f64 + slab,
+                st.x.len() * WORD_BYTES,
+            )
+        });
+
+        if s > 1 {
+            self.engine.compute(Phase::Gram, &mut self.states, |_rank, st| {
+                gram::gram_lower_scatter(&st.block, &st.batch, &mut st.gscratch, &mut st.gtmp);
+                pack_tril(&st.gtmp, q, &mut st.comm[q..]);
+                let nnz = st.batch_nnz as f64;
+                // Scatter + clean (2·nnz) plus ~q/2 gathers over the batch.
+                let flops = 2.0 * nnz + (q as f64 - 1.0) / 2.0 * nnz;
+                Cost::streamed(flops, 6.0 * flops, st.x.len() * WORD_BYTES)
+            });
+        }
+
+        // Complete the previous bundle's row reduce: under
+        // OverlapPolicy::Bundle it has been hiding behind this bundle's
+        // SpMV/Gram (and the previous bundle's tail phases).
+        if let Some(h) = self.pending.take() {
+            self.engine.wait(h);
+        }
+
+        // --- 3: row-team reduce of [v | tril(G)] ---------------------
+        // A bound-aware re-pin overrides the policy for the row
+        // collective only; FedAvg's column reduce keeps `opts.algo`.
+        if let Some(a) = self.row_pin {
+            self.engine.algo = AlgoPolicy::Fixed(a);
+        }
+        match (self.opts.rs_row, self.opts.overlap) {
+            (false, OverlapPolicy::Off) => {
+                self.engine.allreduce(
+                    Phase::SstepComm,
+                    Scope::RowTeam,
+                    Reduce::Sum,
+                    &mut self.states,
+                    |st| &mut st.comm,
+                );
+            }
+            (false, OverlapPolicy::Bundle) => {
+                self.pending = Some(self.engine.iallreduce(
+                    Phase::SstepComm,
+                    Scope::RowTeam,
+                    Reduce::Sum,
+                    &mut self.states,
+                    |st| &mut st.comm,
+                ));
+            }
+            (true, OverlapPolicy::Off) => {
+                self.engine.reduce_scatter(
+                    Phase::SstepComm,
+                    Scope::RowTeam,
+                    Reduce::Sum,
+                    &mut self.states,
+                    |st| &mut st.comm,
+                );
+            }
+            (true, OverlapPolicy::Bundle) => {
+                self.pending = Some(self.engine.ireduce_scatter(
+                    Phase::SstepComm,
+                    Scope::RowTeam,
+                    Reduce::Sum,
+                    &mut self.states,
+                    |st| &mut st.comm,
+                ));
+            }
+        }
+        self.engine.algo = self.opts.algo;
+
+        // --- 4: redundant correction recurrence ----------------------
+        self.engine.compute(Phase::Correction, &mut self.states, |_rank, st| {
+            if s > 1 {
+                unpack_tril(&st.comm[q..], q, &mut st.gtmp);
+            }
+            let (v, _) = st.comm.split_at(q);
+            backend.sstep_correct(s, b, &st.gtmp, v, eta_over_b, &mut st.z);
+            Cost::flops((s * (s - 1) * b * b) as f64 + 12.0 * q as f64)
+        });
+
+        // --- 5: scatter the bundle update into the weight slice ------
+        self.engine.compute(Phase::WeightsUpdate, &mut self.states, |_rank, st| {
+            for zv in st.z.iter_mut() {
+                *zv *= eta_over_b;
+            }
+            // Split borrows: scatter reads block/batch, writes x.
+            let RankState { block, batch, z, x, .. } = st;
+            block.t_spmv_rows_acc(batch, z, x);
+            // Read+write pass over the weight slab (§6.5 cache-aware
+            // term, as in the SpGemv phase).
+            let slab = (st.x.len() * WORD_BYTES) as f64;
+            Cost::streamed(
+                2.0 * st.batch_nnz as f64,
+                20.0 * st.batch_nnz as f64 + 2.0 * slab,
+                st.x.len() * WORD_BYTES,
+            )
+        });
+
+        // --- every τ bundles: column-team averaging ------------------
+        let fedavg_fired = (bundle + 1) % self.cfg.tau == 0;
+        if fedavg_fired {
+            self.engine.allreduce(
+                Phase::FedAvgComm,
+                Scope::ColTeam,
+                Reduce::Mean,
+                &mut self.states,
+                |st| &mut st.x,
+            );
+        }
+
+        self.bundles_run = bundle + 1;
+
+        // --- metrics: loss of the team-averaged model ----------------
+        let eval_now = (self.opts.eval_every > 0 && (bundle + 1) % self.opts.eval_every == 0)
+            || bundle + 1 == self.opts.max_bundles;
+        let mut eval = None;
+        let mut target_hit = false;
+        if eval_now {
+            let t0 = Instant::now();
+            let x_global = assemble_averaged(&self.mp, &self.states);
+            let loss = self.ds.loss(&x_global);
+            let wall = t0.elapsed().as_secs_f64();
+            let share = wall / self.engine.p() as f64;
+            for r in 0..self.engine.p() {
+                self.engine.book.charge(Phase::Metrics, r, share);
+            }
+            target_hit = self.time_to_target.is_none()
+                && self.opts.target_loss.is_some_and(|t| loss <= t);
+            if target_hit {
+                // The run ends here: settle the in-flight row transfer
+                // *before* reading the clock, so time-to-target includes
+                // its exposed remainder (the seed read it mid-flight).
+                if let Some(h) = self.pending.take() {
+                    self.engine.wait(h);
+                }
+            }
+            let tp = TracePoint {
+                bundles: bundle + 1,
+                iters: (bundle + 1) * s,
+                sim_time: self.engine.sim_wall(),
+                loss,
+            };
+            eval = Some(tp);
+            if target_hit {
+                self.time_to_target = Some(self.engine.sim_wall());
+                self.target_reached = true;
+            }
+        }
+
+        // --- every k bundles: bound-aware re-tune --------------------
+        let mut retune = None;
+        if let RetunePolicy::BoundAware { every } = self.retune {
+            if every > 0
+                && self.bundles_run % every == 0
+                && !self.target_reached
+                && self.cfg.mesh.p_c > 1
+            {
+                retune = Some(self.retune_now());
+            }
+        }
+
+        let charged_delta: Vec<(Phase, f64)> = Phase::all()
+            .iter()
+            .zip(&charged_before)
+            .map(|(&ph, &before)| (ph, self.engine.book.mean_charged(ph) - before))
+            .collect();
+        let sim_wall = self.engine.sim_wall();
+        let report = BundleReport {
+            bundle: self.bundles_run,
+            inner_iters: self.bundles_run * s,
+            sim_wall,
+            wall_delta: sim_wall - wall_before,
+            charged_delta,
+            fedavg_fired,
+            eval,
+            target_hit,
+            retune,
+        };
+        self.notify_bundle(&report);
+        Some(report)
+    }
+
+    /// Drive to the bundle budget (or target), then [`Session::finish`].
+    pub fn run_to_end(mut self) -> SolverRun {
+        while !self.target_reached && self.bundles_run < self.opts.max_bundles {
+            let _ = self.step_bundle();
+        }
+        self.finish()
+    }
+
+    /// Settle any in-flight transfer, notify observers, and assemble the
+    /// [`SolverRun`] (trace/timeline/book come from the built-in
+    /// observers; detached ones leave their field empty).
+    pub fn finish(mut self) -> SolverRun {
+        // Settle any still-in-flight row transfer before the books are
+        // read (its exposed remainder lands in the final sim_wall).
+        if let Some(h) = self.pending.take() {
+            self.engine.wait(h);
+        }
+        self.notify_finish();
+
+        let x = assemble_averaged(&self.mp, &self.states);
+        let sim_wall = self.engine.sim_wall();
+        let p = self.engine.p();
+        let name = format!(
+            "hybrid {} s={} b={} tau={} {}",
+            self.cfg.mesh,
+            self.cfg.s,
+            self.cfg.b,
+            self.cfg.tau,
+            self.policy.name()
+        );
+        let trace = self.trace_obs.map(|t| t.points).unwrap_or_default();
+        let timeline =
+            if self.timeline_obs.is_some() { self.engine.timeline } else { Timeline::new(p) };
+        let book = if self.book_obs.is_some() { self.engine.book } else { PhaseBook::new(p) };
+        SolverRun {
+            name,
+            x,
+            trace,
+            bundles_run: self.bundles_run,
+            inner_iters: self.bundles_run * self.cfg.s,
+            sim_wall,
+            book,
+            timeline,
+            time_to_target: self.time_to_target,
+        }
+    }
+
+    /// The bound-aware re-tune: critical path → axis → row-collective
+    /// pin.
+    fn retune_now(&mut self) -> RetuneEvent {
+        let q_row = self.cfg.mesh.p_c;
+        let words = self.q + self.tril_len;
+        let (axis, algo, prev) = {
+            let cp = CriticalPath::analyze(&self.engine.timeline);
+            let axis = cp.bound_axis(cp.makespan_rank());
+            let sel =
+                AutoSelector::new(&self.engine.profile).with_source(self.engine.selector);
+            let (algo, _) = sel.pick_bound_aware(q_row, words, axis);
+            // What the previous bundles actually used: the standing pin,
+            // a fixed policy's algorithm, or the plain auto pick.
+            let prev = match self.row_pin {
+                Some(a) => a,
+                None => match self.opts.algo {
+                    AlgoPolicy::Fixed(a) => a,
+                    AlgoPolicy::Auto => sel.pick(q_row, words),
+                },
+            };
+            (axis, algo, prev)
+        };
+        self.row_pin = Some(algo);
+        let ev = RetuneEvent { bundle: self.bundles_run, axis, algo, switched: prev != algo };
+        self.retunes.push(ev);
+        ev
+    }
+
+    fn notify_bundle(&mut self, report: &BundleReport) {
+        self.notify(|o, ctx| o.on_bundle(ctx, report));
+    }
+
+    fn notify_finish(&mut self) {
+        self.notify(|o, ctx| o.on_finish(ctx));
+    }
+
+    /// Dispatch one hook over the built-in observers (in their fixed
+    /// order) then the user observers (in attachment order). The slots
+    /// are taken out of `self` for the duration so the hooks can borrow
+    /// the live engine state through [`ObserverCtx`].
+    fn notify(&mut self, mut f: impl FnMut(&mut dyn Observer, &ObserverCtx<'_>)) {
+        let mut trace_obs = self.trace_obs.take();
+        let mut timeline_obs = self.timeline_obs.take();
+        let mut book_obs = self.book_obs.take();
+        let mut user = std::mem::take(&mut self.observers);
+        {
+            let ctx = self.ctx();
+            if let Some(o) = trace_obs.as_mut() {
+                f(o, &ctx);
+            }
+            if let Some(o) = timeline_obs.as_mut() {
+                f(o, &ctx);
+            }
+            if let Some(o) = book_obs.as_mut() {
+                f(o, &ctx);
+            }
+            for o in user.iter_mut() {
+                f(o.as_mut(), &ctx);
+            }
+        }
+        self.trace_obs = trace_obs;
+        self.timeline_obs = timeline_obs;
+        self.book_obs = book_obs;
+        self.observers = user;
+    }
+
+    fn ctx(&self) -> ObserverCtx<'_> {
+        ObserverCtx {
+            bundles_run: self.bundles_run,
+            inner_iters: self.bundles_run * self.cfg.s,
+            sim_wall: self.engine.sim_wall(),
+            book: &self.engine.book,
+            timeline: &self.engine.timeline,
+            time_to_target: self.time_to_target,
+        }
+    }
+}
+
+/// Pack the lower triangle (incl. diagonal) of a row-major `q × q` matrix.
+fn pack_tril(full: &[f64], q: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), q * (q + 1) / 2);
+    let mut k = 0;
+    for i in 0..q {
+        out[k..k + i + 1].copy_from_slice(&full[i * q..i * q + i + 1]);
+        k += i + 1;
+    }
+}
+
+/// Unpack a packed lower triangle into a row-major `q × q` matrix (upper
+/// triangle zeroed).
+fn unpack_tril(packed: &[f64], q: usize, out: &mut [f64]) {
+    debug_assert_eq!(packed.len(), q * (q + 1) / 2);
+    out.fill(0.0);
+    let mut k = 0;
+    for i in 0..q {
+        out[i * q..i * q + i + 1].copy_from_slice(&packed[k..k + i + 1]);
+        k += i + 1;
+    }
+}
+
+/// Average the weight slices across row teams and gather the global vector.
+fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
+    let mesh = mp.mesh;
+    let parts: Vec<Vec<f64>> = (0..mesh.p_c)
+        .map(|c| {
+            let n_local = mp.cols.n_local[c];
+            let mut avg = vec![0.0f64; n_local];
+            for r in 0..mesh.p_r {
+                let st = &states[mesh.rank_at(r, c)];
+                for (a, v) in avg.iter_mut().zip(&st.x) {
+                    *a += v;
+                }
+            }
+            let inv = 1.0 / mesh.p_r as f64;
+            for a in avg.iter_mut() {
+                *a *= inv;
+            }
+            avg
+        })
+        .collect();
+    mp.gather_weights(&parts)
+}
+
+// ---------------------------------------------------------------------
+// Checkpoint / resume: versioned TSV, schema-guarded like CalibProfile.
+//
+// Schema v1, header `kind  key  a  b  c  d`:
+//   meta    schema|dataset|mesh|shape|opts|policy|bundles|
+//           time_to_target|trace_points|pending|retunes|pin
+//   cursor  <rank>  <cursor>
+//   clock   <rank>  <seconds>
+//   x       <rank>  <len>  <space-joined f64 shortest-roundtrip>
+//   traffic <rank>  <words>  <messages>
+//   book    <phase> <rank>  <charged>  <wait>  <hidden>
+//   trace   <i>     <bundles>  <iters>  <sim_time>  <loss>
+//   retune  <i>     <bundle>   <axis>   <algo>     <switched>
+//   pending <i>     <algo>  <t_start>  <time>   (row reduce in flight)
+//   pendcost <i>    <steps>  <messages>  <words>
+//
+// Floats use Rust's shortest-roundtrip formatting, so restore is
+// bit-lossless; declared counts guard truncated tails; config/dataset
+// meta rows guard resuming into a different run.
+// ---------------------------------------------------------------------
+
+impl Session<'_> {
+    /// Persist the session at a bundle boundary: weights, sampling
+    /// cursors, the master seed, per-rank clocks, the phase books, the
+    /// collected loss trace, the retune history, and any in-flight
+    /// (posted, unsettled) row reduce — everything needed for
+    /// [`SessionBuilder::resume`] to continue the trajectory and the
+    /// charged accounting bit-for-bit. The event log is not persisted
+    /// (see [`SessionBuilder::resume`]).
+    pub fn checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
+        let mut w =
+            crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b", "c", "d"]);
+        let na = "-".to_string();
+        let row = |k: &str, key: String, a: String, b: String, c: String, d: String| {
+            [k.to_string(), key, a, b, c, d]
+        };
+        w.append(&row("meta", "schema".into(), "1".into(), na.clone(), na.clone(), na.clone()))?;
+        w.append(&row(
+            "meta",
+            "dataset".into(),
+            self.ds.name.clone(),
+            self.ds.m().to_string(),
+            self.ds.n().to_string(),
+            na.clone(),
+        ))?;
+        w.append(&row(
+            "meta",
+            "mesh".into(),
+            self.cfg.mesh.p_r.to_string(),
+            self.cfg.mesh.p_c.to_string(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        w.append(&row(
+            "meta",
+            "shape".into(),
+            self.cfg.s.to_string(),
+            self.cfg.b.to_string(),
+            self.cfg.tau.to_string(),
+            na.clone(),
+        ))?;
+        w.append(&row(
+            "meta",
+            "opts".into(),
+            self.opts.overlap.name().into(),
+            (self.opts.rs_row as u8).to_string(),
+            self.opts.seed.to_string(),
+            na.clone(),
+        ))?;
+        // The partitioner decides the column->rank map the weight slices
+        // are sliced by, and eta the trajectory itself: a resume under a
+        // different value would silently corrupt the run, so both are
+        // recorded and guarded like the mesh.
+        w.append(&row(
+            "meta",
+            "policy".into(),
+            self.policy.name().into(),
+            self.opts.eta.to_string(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        w.append(&row(
+            "meta",
+            "bundles".into(),
+            self.bundles_run.to_string(),
+            na.clone(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        let ttt = self.time_to_target.map(|t| t.to_string()).unwrap_or_else(|| "-".into());
+        w.append(&row("meta", "time_to_target".into(), ttt, na.clone(), na.clone(), na.clone()))?;
+        let trace_n = self.trace_obs.as_ref().map(|t| t.points.len()).unwrap_or(0);
+        w.append(&row(
+            "meta",
+            "trace_points".into(),
+            trace_n.to_string(),
+            na.clone(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        let pend_n = self.pending.as_ref().map(|h| h.pending().len()).unwrap_or(0);
+        w.append(&row(
+            "meta",
+            "pending".into(),
+            pend_n.to_string(),
+            na.clone(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        w.append(&row(
+            "meta",
+            "retunes".into(),
+            self.retunes.len().to_string(),
+            na.clone(),
+            na.clone(),
+            na.clone(),
+        ))?;
+        let pin = self.row_pin.map(|a| a.name().to_string()).unwrap_or_else(|| "-".into());
+        w.append(&row("meta", "pin".into(), pin, na.clone(), na.clone(), na.clone()))?;
+
+        for (r, st) in self.states.iter().enumerate() {
+            w.append(&row(
+                "cursor",
+                r.to_string(),
+                st.cursor.to_string(),
+                na.clone(),
+                na.clone(),
+                na.clone(),
+            ))?;
+        }
+        for (r, c) in self.engine.clock.iter().enumerate() {
+            w.append(&row(
+                "clock",
+                r.to_string(),
+                c.to_string(),
+                na.clone(),
+                na.clone(),
+                na.clone(),
+            ))?;
+        }
+        for (r, st) in self.states.iter().enumerate() {
+            let joined = st.x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ");
+            w.append(&row(
+                "x",
+                r.to_string(),
+                st.x.len().to_string(),
+                joined,
+                na.clone(),
+                na.clone(),
+            ))?;
+        }
+        for r in 0..self.engine.p() {
+            w.append(&row(
+                "traffic",
+                r.to_string(),
+                self.engine.book.words[r].to_string(),
+                self.engine.book.messages[r].to_string(),
+                na.clone(),
+                na.clone(),
+            ))?;
+        }
+        for ph in Phase::all() {
+            for r in 0..self.engine.p() {
+                w.append(&row(
+                    "book",
+                    ph.name().into(),
+                    r.to_string(),
+                    self.engine.book.charged_of(ph, r).to_string(),
+                    self.engine.book.wait_of(ph, r).to_string(),
+                    self.engine.book.hidden_of(ph, r).to_string(),
+                ))?;
+            }
+        }
+        if let Some(obs) = &self.trace_obs {
+            for (i, tp) in obs.points.iter().enumerate() {
+                w.append(&row(
+                    "trace",
+                    i.to_string(),
+                    tp.bundles.to_string(),
+                    tp.iters.to_string(),
+                    tp.sim_time.to_string(),
+                    tp.loss.to_string(),
+                ))?;
+            }
+        }
+        for (i, ev) in self.retunes.iter().enumerate() {
+            w.append(&row(
+                "retune",
+                i.to_string(),
+                ev.bundle.to_string(),
+                ev.axis.name().into(),
+                ev.algo.name().into(),
+                (ev.switched as u8).to_string(),
+            ))?;
+        }
+        if let Some(h) = &self.pending {
+            for (i, pc) in h.pending().iter().enumerate() {
+                debug_assert_eq!(pc.phase, Phase::SstepComm, "only the row reduce is posted");
+                w.append(&row(
+                    "pending",
+                    i.to_string(),
+                    pc.algo.name().into(),
+                    pc.t_start.to_string(),
+                    pc.cost.time.to_string(),
+                    na.clone(),
+                ))?;
+                w.append(&row(
+                    "pendcost",
+                    i.to_string(),
+                    pc.cost.steps.to_string(),
+                    pc.cost.messages.to_string(),
+                    pc.cost.words.to_string(),
+                    na.clone(),
+                ))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore a freshly built session from a checkpoint file (the
+    /// [`SessionBuilder::resume`] path).
+    fn restore<P: AsRef<std::path::Path>>(&mut self, path: P) -> std::io::Result<()> {
+        use std::io::{Error, ErrorKind};
+        let bad = |msg: String| Error::new(ErrorKind::InvalidData, msg);
+        let parse_f = |s: &str| s.parse::<f64>().map_err(|_| bad(format!("bad float {s:?}")));
+        let parse_u = |s: &str| s.parse::<usize>().map_err(|_| bad(format!("bad int {s:?}")));
+        debug_assert_eq!(self.bundles_run, 0, "restore only into a fresh session");
+
+        let (header, rows) = crate::util::tsv::read_tsv(path)?;
+        if header != ["kind", "key", "a", "b", "c", "d"] {
+            return Err(bad(format!("unexpected checkpoint header {header:?}")));
+        }
+        let p = self.engine.p();
+        let mut bundles: Option<usize> = None;
+        let mut ttt: Option<f64> = None;
+        let mut declared_trace: Option<usize> = None;
+        let mut declared_pending: Option<usize> = None;
+        let mut declared_retunes: Option<usize> = None;
+        let mut pin: Option<Algorithm> = None;
+        let mut cursors: Vec<Option<usize>> = vec![None; p];
+        let mut clocks: Vec<Option<f64>> = vec![None; p];
+        let mut xs: Vec<Option<Vec<f64>>> = vec![None; p];
+        let mut traffic: Vec<Option<(f64, f64)>> = vec![None; p];
+        let mut book_rows: Vec<(Phase, usize, f64, f64, f64)> = Vec::new();
+        let mut trace_rows: Vec<(usize, TracePoint)> = Vec::new();
+        let mut retune_rows: Vec<(usize, RetuneEvent)> = Vec::new();
+        let mut pend_head: Vec<(usize, Algorithm, f64, f64)> = Vec::new();
+        let mut pend_cost: Vec<(usize, usize, f64, f64)> = Vec::new();
+
+        let phase_of = |name: &str| {
+            Phase::all()
+                .into_iter()
+                .find(|ph| ph.name() == name)
+                .ok_or_else(|| bad(format!("unknown phase {name:?} in checkpoint")))
+        };
+        let rank_of = |key: &str| {
+            let r = parse_u(key)?;
+            if r >= p {
+                return Err(bad(format!("rank {r} out of range (p = {p})")));
+            }
+            Ok(r)
+        };
+
+        for raw in &rows {
+            let [kind, key, a, b, c, d] = match raw.as_slice() {
+                [k, key, a, b, c, d] => {
+                    [k.as_str(), key.as_str(), a.as_str(), b.as_str(), c.as_str(), d.as_str()]
+                }
+                _ => return Err(bad(format!("short checkpoint row {raw:?}"))),
+            };
+            match kind {
+                "meta" => match key {
+                    "schema" => {
+                        let v = parse_u(a)?;
+                        if v > 1 {
+                            return Err(bad(format!(
+                                "checkpoint schema {v} is newer than this build"
+                            )));
+                        }
+                    }
+                    "dataset" => {
+                        if a != self.ds.name
+                            || parse_u(b)? != self.ds.m()
+                            || parse_u(c)? != self.ds.n()
+                        {
+                            return Err(bad(format!(
+                                "checkpoint is for dataset {a:?} ({b}x{c}), session has {:?} ({}x{})",
+                                self.ds.name,
+                                self.ds.m(),
+                                self.ds.n()
+                            )));
+                        }
+                    }
+                    "mesh" => {
+                        if parse_u(a)? != self.cfg.mesh.p_r || parse_u(b)? != self.cfg.mesh.p_c {
+                            return Err(bad(format!(
+                                "checkpoint mesh {a}x{b} != session mesh {}",
+                                self.cfg.mesh
+                            )));
+                        }
+                    }
+                    "shape" => {
+                        if parse_u(a)? != self.cfg.s
+                            || parse_u(b)? != self.cfg.b
+                            || parse_u(c)? != self.cfg.tau
+                        {
+                            return Err(bad(format!(
+                                "checkpoint s/b/tau {a}/{b}/{c} != session {}/{}/{}",
+                                self.cfg.s, self.cfg.b, self.cfg.tau
+                            )));
+                        }
+                    }
+                    "opts" => {
+                        let same_overlap = OverlapPolicy::from_name(a) == Some(self.opts.overlap);
+                        let same_rs = parse_u(b)? == self.opts.rs_row as usize;
+                        let same_seed = c.parse::<u64>().ok() == Some(self.opts.seed);
+                        if !(same_overlap && same_rs && same_seed) {
+                            return Err(bad(format!(
+                                "checkpoint was taken under different run options \
+                                 (overlap {a}, rs_row {b}, seed {c})"
+                            )));
+                        }
+                    }
+                    "policy" => {
+                        let same_policy = Partitioner::from_name(a) == Some(self.policy);
+                        let same_eta = parse_f(b)?.to_bits() == self.opts.eta.to_bits();
+                        if !(same_policy && same_eta) {
+                            return Err(bad(format!(
+                                "checkpoint was taken under partitioner {a} / eta {b}, \
+                                 session has {} / {}",
+                                self.policy.name(),
+                                self.opts.eta
+                            )));
+                        }
+                    }
+                    "bundles" => bundles = Some(parse_u(a)?),
+                    "time_to_target" => {
+                        if a != "-" {
+                            ttt = Some(parse_f(a)?);
+                        }
+                    }
+                    "trace_points" => declared_trace = Some(parse_u(a)?),
+                    "pending" => declared_pending = Some(parse_u(a)?),
+                    "retunes" => declared_retunes = Some(parse_u(a)?),
+                    "pin" => {
+                        if a != "-" {
+                            pin = Some(
+                                Algorithm::from_name(a)
+                                    .ok_or_else(|| bad(format!("unknown pin algorithm {a:?}")))?,
+                            );
+                        }
+                    }
+                    other => return Err(bad(format!("unknown meta key {other:?}"))),
+                },
+                "cursor" => cursors[rank_of(key)?] = Some(parse_u(a)?),
+                "clock" => clocks[rank_of(key)?] = Some(parse_f(a)?),
+                "x" => {
+                    let r = rank_of(key)?;
+                    let len = parse_u(a)?;
+                    let vals = b
+                        .split_whitespace()
+                        .map(parse_f)
+                        .collect::<Result<Vec<f64>, _>>()?;
+                    if vals.len() != len {
+                        return Err(bad(format!(
+                            "rank {r} weight row declares {len} values, found {}",
+                            vals.len()
+                        )));
+                    }
+                    xs[r] = Some(vals);
+                }
+                "traffic" => {
+                    let r = rank_of(key)?;
+                    traffic[r] = Some((parse_f(a)?, parse_f(b)?));
+                }
+                "book" => {
+                    let ph = phase_of(key)?;
+                    book_rows.push((ph, rank_of(a)?, parse_f(b)?, parse_f(c)?, parse_f(d)?));
+                }
+                "trace" => {
+                    let tp = TracePoint {
+                        bundles: parse_u(a)?,
+                        iters: parse_u(b)?,
+                        sim_time: parse_f(c)?,
+                        loss: parse_f(d)?,
+                    };
+                    trace_rows.push((parse_u(key)?, tp));
+                }
+                "retune" => {
+                    let axis = BoundBy::from_name(b)
+                        .ok_or_else(|| bad(format!("unknown bound axis {b:?}")))?;
+                    let algo = Algorithm::from_name(c)
+                        .ok_or_else(|| bad(format!("unknown algorithm {c:?}")))?;
+                    let ev = RetuneEvent {
+                        bundle: parse_u(a)?,
+                        axis,
+                        algo,
+                        switched: parse_u(d)? != 0,
+                    };
+                    retune_rows.push((parse_u(key)?, ev));
+                }
+                "pending" => {
+                    let algo = Algorithm::from_name(a)
+                        .ok_or_else(|| bad(format!("unknown algorithm {a:?}")))?;
+                    pend_head.push((parse_u(key)?, algo, parse_f(b)?, parse_f(c)?));
+                }
+                "pendcost" => {
+                    pend_cost.push((parse_u(key)?, parse_u(a)?, parse_f(b)?, parse_f(c)?));
+                }
+                other => return Err(bad(format!("unknown checkpoint row kind {other:?}"))),
+            }
+        }
+
+        let bundles =
+            bundles.ok_or_else(|| bad("checkpoint missing the bundles meta row".into()))?;
+        // Truncation guards: every per-rank section fully present, every
+        // declared count matched (the variable-length sections are
+        // written last).
+        for r in 0..p {
+            if cursors[r].is_none() || clocks[r].is_none() || xs[r].is_none() || traffic[r].is_none()
+            {
+                return Err(bad(format!("truncated checkpoint: rank {r} state incomplete")));
+            }
+        }
+        if book_rows.len() != Phase::all().len() * p {
+            return Err(bad(format!(
+                "truncated checkpoint: {} book rows, expected {}",
+                book_rows.len(),
+                Phase::all().len() * p
+            )));
+        }
+        let check_count = |what: &str, declared: Option<usize>, found: usize| match declared {
+            Some(n) if n != found => {
+                Err(bad(format!("truncated checkpoint: declared {n} {what}, found {found}")))
+            }
+            None if found > 0 => Err(bad(format!("{what} present without a count declaration"))),
+            _ => Ok(()),
+        };
+        check_count("trace points", declared_trace, trace_rows.len())?;
+        check_count("retune events", declared_retunes, retune_rows.len())?;
+        check_count("pending transfers", declared_pending, pend_head.len())?;
+        if pend_cost.len() != pend_head.len() {
+            return Err(bad("pending transfer rows missing their cost rows".into()));
+        }
+
+        // Apply. Books restore through the public charge API (one add
+        // onto zero is exact), so a resumed run's accounting continues
+        // bit-identically.
+        for (r, st) in self.states.iter_mut().enumerate() {
+            let x = xs[r].take().expect("checked above");
+            if x.len() != st.x.len() {
+                return Err(bad(format!(
+                    "rank {r} checkpoint carries {} weights, partition has {}",
+                    x.len(),
+                    st.x.len()
+                )));
+            }
+            st.x = x;
+            st.cursor = cursors[r].expect("checked above");
+            self.engine.clock[r] = clocks[r].expect("checked above");
+            let (words, messages) = traffic[r].expect("checked above");
+            self.engine.book.words[r] = words;
+            self.engine.book.messages[r] = messages;
+        }
+        for (ph, r, charged, wait, hidden) in book_rows {
+            self.engine.book.charge(ph, r, charged);
+            self.engine.book.charge_wait(ph, r, wait);
+            self.engine.book.charge_hidden(ph, r, hidden);
+        }
+        if let Some(obs) = self.trace_obs.as_mut() {
+            trace_rows.sort_by_key(|(i, _)| *i);
+            obs.points = trace_rows.into_iter().map(|(_, tp)| tp).collect();
+        }
+        retune_rows.sort_by_key(|(i, _)| *i);
+        self.retunes = retune_rows.into_iter().map(|(_, ev)| ev).collect();
+        self.row_pin = pin;
+        self.bundles_run = bundles;
+        self.time_to_target = ttt;
+        self.target_reached = ttt.is_some();
+        if !pend_head.is_empty() {
+            let teams = self.engine.teams(Scope::RowTeam);
+            if pend_head.len() != teams.len() {
+                return Err(bad(format!(
+                    "checkpoint carries {} pending transfers, mesh has {} row teams",
+                    pend_head.len(),
+                    teams.len()
+                )));
+            }
+            pend_head.sort_by_key(|(i, _, _, _)| *i);
+            pend_cost.sort_by_key(|(i, _, _, _)| *i);
+            let mut pending = Vec::with_capacity(pend_head.len());
+            for ((i, algo, t_start, time), (j, steps, messages, words)) in
+                pend_head.into_iter().zip(pend_cost)
+            {
+                if i != j || i >= teams.len() {
+                    return Err(bad(format!("pending transfer indices inconsistent ({i}/{j})")));
+                }
+                pending.push(PendingCollective {
+                    phase: Phase::SstepComm,
+                    team: teams[i].clone(),
+                    t_start,
+                    algo,
+                    cost: CollectiveCost { time, steps, messages, words },
+                });
+            }
+            self.pending = Some(CollHandle::from_pending(pending));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::data::synth;
+    use crate::mesh::Mesh;
+    use crate::util::Prng;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn toy(seed: u64, m: usize, n: usize, z: usize) -> Dataset {
+        let mut rng = Prng::new(seed);
+        synth::sparse_skewed("session-toy", m, n, z, 0.6, &mut rng)
+    }
+
+    #[test]
+    fn tril_pack_roundtrip() {
+        let q = 5;
+        let full: Vec<f64> = (0..q * q).map(|i| i as f64).collect();
+        let mut packed = vec![0.0; q * (q + 1) / 2];
+        pack_tril(&full, q, &mut packed);
+        let mut back = vec![0.0; q * q];
+        unpack_tril(&packed, q, &mut back);
+        for i in 0..q {
+            for j in 0..q {
+                let want = if j <= i { full[i * q + j] } else { 0.0 };
+                assert_eq!(back[i * q + j], want);
+            }
+        }
+    }
+
+    /// The absorbed builder knobs set exactly the RunOpts fields the
+    /// `.opts(..)` compatibility path would: both constructions produce
+    /// bit-identical runs.
+    #[test]
+    fn builder_knobs_match_opts_struct() {
+        let ds = toy(1, 96, 32, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let opts = RunOpts {
+            eta: 0.05,
+            max_bundles: 6,
+            eval_every: 2,
+            rs_row: true,
+            overlap: OverlapPolicy::Bundle,
+            ..Default::default()
+        };
+        let via_opts = SessionBuilder::new(&be, &ds, cfg).opts(opts).run_to_end();
+        let via_knobs = SessionBuilder::new(&be, &ds, cfg)
+            .eta(0.05)
+            .max_bundles(6)
+            .eval_every(2)
+            .rs_row(true)
+            .overlap(OverlapPolicy::Bundle)
+            .run_to_end();
+        assert_eq!(via_opts.x, via_knobs.x);
+        assert_eq!(via_opts.sim_wall, via_knobs.sim_wall);
+        assert_eq!(via_opts.trace.len(), via_knobs.trace.len());
+    }
+
+    /// Custom observers see one hook per bundle plus one finish call, and
+    /// the built-in loss trace collects exactly the eval points.
+    #[test]
+    fn observers_hook_every_bundle() {
+        struct Counter {
+            bundles: Rc<RefCell<usize>>,
+            finishes: Rc<RefCell<usize>>,
+        }
+        impl Observer for Counter {
+            fn on_bundle(&mut self, ctx: &ObserverCtx<'_>, report: &BundleReport) {
+                assert_eq!(ctx.bundles_run, report.bundle);
+                *self.bundles.borrow_mut() += 1;
+            }
+            fn on_finish(&mut self, _ctx: &ObserverCtx<'_>) {
+                *self.finishes.borrow_mut() += 1;
+            }
+        }
+        let bundles = Rc::new(RefCell::new(0));
+        let finishes = Rc::new(RefCell::new(0));
+        let ds = toy(2, 80, 24, 4);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(1, 2), 2, 4, 2);
+        let run = SessionBuilder::new(&be, &ds, cfg)
+            .max_bundles(5)
+            .eval_every(2)
+            .observe(Box::new(Counter { bundles: bundles.clone(), finishes: finishes.clone() }))
+            .run_to_end();
+        assert_eq!(*bundles.borrow(), 5);
+        assert_eq!(*finishes.borrow(), 1);
+        // Evals at bundles 2, 4, and the final 5th.
+        assert_eq!(run.trace.len(), 3);
+        assert_eq!(run.trace.last().unwrap().bundles, 5);
+    }
+
+    /// Detaching the built-in observers empties the corresponding
+    /// `SolverRun` fields without touching the math or the wall.
+    #[test]
+    fn detached_builtins_leave_fields_empty() {
+        let ds = toy(3, 80, 24, 4);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let full = SessionBuilder::new(&be, &ds, cfg).max_bundles(4).run_to_end();
+        let bare = SessionBuilder::new(&be, &ds, cfg)
+            .max_bundles(4)
+            .loss_trace(false)
+            .record_timeline(false)
+            .phase_book(false)
+            .run_to_end();
+        assert_eq!(full.x, bare.x, "observers must never change the math");
+        assert_eq!(full.sim_wall, bare.sim_wall);
+        assert!(bare.trace.is_empty());
+        assert!(bare.timeline.events().is_empty());
+        assert_eq!(bare.book.algorithm_total(), 0.0);
+        assert!(!full.timeline.events().is_empty());
+        assert!(full.book.algorithm_total() > 0.0);
+    }
+
+    /// A checkpoint round-trips the full mid-run state: resuming and
+    /// finishing matches the uninterrupted run bit for bit.
+    #[test]
+    fn checkpoint_roundtrip_preserves_trajectory() {
+        let dir = std::env::temp_dir().join(format!("session_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mid.tsv");
+        let ds = toy(4, 120, 40, 5);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let builder = || SessionBuilder::new(&be, &ds, cfg).max_bundles(8).eval_every(2);
+        let straight = builder().run_to_end();
+        let mut first = builder().build();
+        for _ in 0..3 {
+            let _ = first.step_bundle();
+        }
+        first.checkpoint(&path).unwrap();
+        drop(first);
+        let mut resumed = builder().resume(&path).unwrap();
+        assert_eq!(resumed.bundles_run(), 3);
+        while !resumed.is_done() {
+            let _ = resumed.step_bundle();
+        }
+        let run = resumed.finish();
+        assert_eq!(run.x, straight.x, "resume changed the trajectory");
+        assert_eq!(run.sim_wall, straight.sim_wall);
+        assert_eq!(run.trace.len(), straight.trace.len());
+        for (a, b) in run.trace.iter().zip(&straight.trace) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.sim_time, b.sim_time);
+        }
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    /// Checkpoints refuse to resume into a different run: other mesh,
+    /// other dataset, truncated file, or a future schema.
+    #[test]
+    fn checkpoint_guards_reject_mismatches() {
+        let dir = std::env::temp_dir().join(format!("session_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.tsv");
+        let ds = toy(5, 80, 24, 4);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let mut s = SessionBuilder::new(&be, &ds, cfg).max_bundles(6).build();
+        let _ = s.step_bundle();
+        s.checkpoint(&path).unwrap();
+
+        // Wrong mesh.
+        let other = HybridConfig::new(Mesh::new(1, 4), 2, 4, 2);
+        assert!(SessionBuilder::new(&be, &ds, other).resume(&path).is_err());
+        // Wrong shape.
+        let other = HybridConfig::new(Mesh::new(2, 2), 2, 8, 2);
+        assert!(SessionBuilder::new(&be, &ds, other).resume(&path).is_err());
+        // Wrong dataset.
+        let ds2 = toy(6, 64, 24, 4);
+        assert!(SessionBuilder::new(&be, &ds2, cfg).resume(&path).is_err());
+        // Wrong run options (different seed).
+        assert!(SessionBuilder::new(&be, &ds, cfg).seed(7).resume(&path).is_err());
+        // Wrong partitioner: Rows and Cyclic slice identical n_local
+        // shapes, so only the recorded policy name can catch this.
+        assert!(SessionBuilder::new(&be, &ds, cfg)
+            .partitioner(crate::partition::Partitioner::Rows)
+            .resume(&path)
+            .is_err());
+        // Wrong step size.
+        assert!(SessionBuilder::new(&be, &ds, cfg).eta(0.123).resume(&path).is_err());
+        // Truncated tail: drop the last three rows.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let cut = lines.len() - 3;
+        let trunc = dir.join("trunc.tsv");
+        std::fs::write(&trunc, format!("{}\n", lines[..cut].join("\n"))).unwrap();
+        assert!(SessionBuilder::new(&be, &ds, cfg).resume(&trunc).is_err());
+        // Future schema.
+        let future = dir.join("future.tsv");
+        std::fs::write(&future, "kind\tkey\ta\tb\tc\td\nmeta\tschema\t2\t-\t-\t-\n").unwrap();
+        assert!(SessionBuilder::new(&be, &ds, cfg).resume(&future).is_err());
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    /// Bound-aware retuning never fires without a row team to tune
+    /// (`p_c == 1` — the row collective is free), and fires on cadence
+    /// otherwise while leaving the trajectory bit-identical.
+    #[test]
+    fn bound_aware_retune_cadence_and_invariance() {
+        let ds = toy(7, 120, 40, 5);
+        let be = NativeBackend;
+        // No row team: no events.
+        let corner = HybridConfig::new(Mesh::new(4, 1), 1, 4, 2);
+        let mut s = SessionBuilder::new(&be, &ds, corner)
+            .retune(RetunePolicy::BoundAware { every: 2 })
+            .max_bundles(6)
+            .build();
+        while !s.is_done() {
+            let _ = s.step_bundle();
+        }
+        assert!(s.retunes().is_empty());
+
+        // Real row team: one event per cadence hit, trajectory invariant.
+        let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+        let plain = SessionBuilder::new(&be, &ds, cfg).max_bundles(8).run_to_end();
+        let mut tuned = SessionBuilder::new(&be, &ds, cfg)
+            .max_bundles(8)
+            .retune(RetunePolicy::BoundAware { every: 3 })
+            .build();
+        while !tuned.is_done() {
+            let _ = tuned.step_bundle();
+        }
+        assert_eq!(tuned.retunes().len(), 2, "cadence 3 over 8 bundles: checks at 3 and 6");
+        assert!(tuned.row_pin().is_some());
+        let tuned = tuned.finish();
+        assert_eq!(tuned.x, plain.x, "retuning changed the trajectory");
+    }
+
+    /// Stepping past the budget is the driver's call: evals follow the
+    /// cadence and the session keeps advancing.
+    #[test]
+    fn stepping_past_budget_is_allowed() {
+        let ds = toy(8, 64, 24, 4);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(1, 2), 2, 4, 2);
+        let mut s = SessionBuilder::new(&be, &ds, cfg).max_bundles(2).eval_every(0).build();
+        while !s.is_done() {
+            let _ = s.step_bundle();
+        }
+        assert_eq!(s.bundles_run(), 2);
+        let extra = s.step_bundle().expect("stepping past the budget is allowed");
+        assert_eq!(extra.bundle, 3);
+        let run = s.finish();
+        assert_eq!(run.bundles_run, 3);
+        assert_eq!(run.inner_iters, 6);
+    }
+}

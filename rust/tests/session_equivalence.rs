@@ -1,0 +1,238 @@
+//! Golden equivalence for the Session solver API:
+//!
+//! * a `step_bundle()`-driven session is **bit-identical** (weights,
+//!   trace, books, `sim_wall`) to the `HybridSolver::run` wrapper across
+//!   the overlap × selector × rs_row knob grid (property test);
+//! * checkpoint → resume → identical final state, including a checkpoint
+//!   taken with a row reduce still in flight under bundle overlap;
+//! * the early-stop bugfix: under `OverlapPolicy::Bundle`,
+//!   `time_to_target` is read only after the in-flight transfer settles
+//!   (regression test);
+//! * bound-aware mid-run retuning moves charged books only, never
+//!   trajectories.
+
+use hybrid_sgd::collectives::SelectorSource;
+use hybrid_sgd::comm::OverlapPolicy;
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::HybridConfig;
+use hybrid_sgd::data::synth;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::metrics::{Phase, PhaseBook};
+use hybrid_sgd::partition::Partitioner;
+use hybrid_sgd::solvers::{HybridSolver, RetunePolicy, RunOpts, SessionBuilder, SolverRun};
+use hybrid_sgd::util::proptest::{check, Config};
+use hybrid_sgd::util::Prng;
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Non-metrics books bit-equal (the `Metrics` phase charges measured
+/// host wall — nondeterministic between any two runs by design).
+fn books_equal(a: &PhaseBook, b: &PhaseBook) -> bool {
+    Phase::all().iter().filter(|ph| ph.in_algorithm_total()).all(|&ph| {
+        a.mean_charged(ph).to_bits() == b.mean_charged(ph).to_bits()
+            && a.mean_wait(ph).to_bits() == b.mean_wait(ph).to_bits()
+            && a.mean_hidden(ph).to_bits() == b.mean_hidden(ph).to_bits()
+    }) && a.words == b.words
+        && a.messages == b.messages
+}
+
+fn runs_equal(a: &SolverRun, b: &SolverRun) -> bool {
+    bits(&a.x) == bits(&b.x)
+        && a.sim_wall.to_bits() == b.sim_wall.to_bits()
+        && a.bundles_run == b.bundles_run
+        && a.inner_iters == b.inner_iters
+        && a.time_to_target.map(f64::to_bits) == b.time_to_target.map(f64::to_bits)
+        && a.trace.len() == b.trace.len()
+        && a.trace.iter().zip(&b.trace).all(|(p, q)| {
+            p.bundles == q.bundles
+                && p.iters == q.iters
+                && p.sim_time.to_bits() == q.sim_time.to_bits()
+                && p.loss.to_bits() == q.loss.to_bits()
+        })
+        && books_equal(&a.book, &b.book)
+}
+
+/// The tentpole golden suite: across mesh shapes, s-step depths,
+/// overlap × selector × rs_row, eval cadences, and early-stop targets, a
+/// manually stepped session reproduces `HybridSolver::run` exactly.
+#[test]
+fn prop_step_driven_session_bit_identical_to_run() {
+    let mut rng = Prng::new(0x5E5510);
+    let ds = synth::sparse_skewed("golden-toy", 160, 48, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    check(
+        Config { cases: 24, seed: 0x5E5510 },
+        "step-driven session == monolithic run, bit for bit",
+        |rng| {
+            (
+                1 + rng.next_below(3),  // p_r
+                1 + rng.next_below(4),  // p_c
+                1 + rng.next_below(3),  // s
+                2 + rng.next_below(7),  // b
+                rng.next_below(3),      // tau - s offset
+                rng.next_below(2) == 1, // overlap bundle
+                rng.next_below(2) == 1, // rs_row
+                rng.next_below(2) == 1, // measured selector
+                rng.next_below(3),      // eval_every
+                rng.next_below(2) == 1, // generous target (early stop path)
+            )
+        },
+        |&(p_r, p_c, s, b, tau_off, overlap, rs_row, measured, eval_every, target)| {
+            let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + tau_off);
+            let opts = RunOpts {
+                max_bundles: 6,
+                eval_every,
+                overlap: if overlap { OverlapPolicy::Bundle } else { OverlapPolicy::Off },
+                rs_row,
+                selector: if measured {
+                    SelectorSource::Measured
+                } else {
+                    SelectorSource::Analytic
+                },
+                // A loose target so some cases exercise the early stop.
+                target_loss: if target { Some(0.69) } else { None },
+                ..Default::default()
+            };
+            let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts);
+            let mut session = SessionBuilder::new(&be, &ds, cfg)
+                .partitioner(Partitioner::Cyclic)
+                .opts(opts.clone())
+                .build();
+            while !session.is_done() {
+                let _ = session.step_bundle();
+            }
+            runs_equal(&run, &session.finish())
+        },
+    );
+}
+
+/// Checkpoint → resume → identical final weights, trace, books, and
+/// wall, across both overlap policies (under `Bundle` the checkpoint
+/// carries a posted, unsettled row reduce).
+#[test]
+fn prop_checkpoint_resume_bit_identical() {
+    let mut rng = Prng::new(0xC4EC7);
+    let ds = synth::sparse_skewed("ckpt-toy", 140, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let dir = std::env::temp_dir().join(format!("session_equiv_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    check(
+        Config { cases: 12, seed: 0xC4EC7 },
+        "checkpoint/resume round trip is bit-identical",
+        |rng| {
+            (
+                1 + rng.next_below(3),  // p_r
+                1 + rng.next_below(3),  // p_c
+                1 + rng.next_below(3),  // s
+                2 + rng.next_below(5),  // b
+                rng.next_below(2) == 1, // overlap bundle
+                rng.next_below(2) == 1, // rs_row
+                1 + rng.next_below(5),  // bundles before the checkpoint
+                rng.next_below(1 << 16),
+            )
+        },
+        |&(p_r, p_c, s, b, overlap, rs_row, cut, case)| {
+            let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + 1);
+            let opts = RunOpts {
+                max_bundles: 7,
+                eval_every: 2,
+                overlap: if overlap { OverlapPolicy::Bundle } else { OverlapPolicy::Off },
+                rs_row,
+                ..Default::default()
+            };
+            let builder = || {
+                SessionBuilder::new(&be, &ds, cfg)
+                    .partitioner(Partitioner::Cyclic)
+                    .opts(opts.clone())
+            };
+            let straight = builder().run_to_end();
+            let path = dir.join(format!("case_{case}.tsv"));
+            let mut first = builder().build();
+            for _ in 0..cut {
+                let _ = first.step_bundle();
+            }
+            first.checkpoint(&path).unwrap();
+            drop(first);
+            let mut resumed = builder().resume(&path).unwrap();
+            while !resumed.is_done() {
+                let _ = resumed.step_bundle();
+            }
+            let resumed = resumed.finish();
+            std::fs::remove_file(&path).unwrap();
+            runs_equal(&straight, &resumed)
+        },
+    );
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// Regression (satellite bugfix): stopping early on `target_loss` under
+/// bundle overlap must settle the in-flight row transfer *before*
+/// `time_to_target` is read — the reported time now includes the exposed
+/// remainder and equals the run's final `sim_wall`. The seed read the
+/// clock mid-flight and under-reported.
+#[test]
+fn time_to_target_settles_in_flight_transfer_under_bundle_overlap() {
+    let mut rng = Prng::new(0x7A26E7);
+    let ds = synth::sparse_skewed("ttt-toy", 200, 48, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 2);
+    let run_with = |overlap: OverlapPolicy| {
+        let opts = RunOpts {
+            max_bundles: 400,
+            eval_every: 2,
+            eta: 0.1,
+            target_loss: Some(0.68),
+            overlap,
+            ..Default::default()
+        };
+        HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+    };
+    let off = run_with(OverlapPolicy::Off);
+    let bun = run_with(OverlapPolicy::Bundle);
+    assert!(off.time_to_target.is_some(), "target must be reachable for the regression probe");
+    // Both charging regimes stop at the same bundle with the same model.
+    assert_eq!(off.bundles_run, bun.bundles_run);
+    assert_eq!(off.x, bun.x);
+    // The fixed contract: time-to-target includes the settled in-flight
+    // transfer, so it coincides with the final wall in both regimes
+    // (the seed's Bundle path reported a smaller, mid-flight clock).
+    assert_eq!(off.time_to_target.unwrap().to_bits(), off.sim_wall.to_bits());
+    assert_eq!(bun.time_to_target.unwrap().to_bits(), bun.sim_wall.to_bits());
+    // Overlap still pays off end to end.
+    assert!(bun.sim_wall <= off.sim_wall * (1.0 + 1e-12));
+}
+
+/// Bound-aware mid-run retuning: trajectories bit-identical to the fixed
+/// policy, evals/trace unchanged — only the charged books may move.
+#[test]
+fn bound_aware_retune_is_trajectory_invariant_end_to_end() {
+    let mut rng = Prng::new(0x2E7E4E);
+    let ds = synth::sparse_skewed("retune-toy", 160, 48, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    for (mesh, s, b) in [(Mesh::new(2, 4), 2, 8), (Mesh::new(2, 8), 4, 16), (Mesh::new(1, 4), 3, 6)]
+    {
+        let cfg = HybridConfig::new(mesh, s, b, s + 1);
+        let session = |retune: RetunePolicy| {
+            SessionBuilder::new(&be, &ds, cfg)
+                .partitioner(Partitioner::Cyclic)
+                .max_bundles(9)
+                .eval_every(3)
+                .retune(retune)
+                .build()
+        };
+        let plain = session(RetunePolicy::Off).run_to_end();
+        let mut tuned = session(RetunePolicy::BoundAware { every: 2 });
+        while !tuned.is_done() {
+            let _ = tuned.step_bundle();
+        }
+        assert_eq!(tuned.retunes().len(), 4, "{mesh}: checks at bundles 2, 4, 6, 8");
+        let tuned = tuned.finish();
+        assert_eq!(bits(&tuned.x), bits(&plain.x), "{mesh}: retuning changed the trajectory");
+        assert_eq!(tuned.trace.len(), plain.trace.len());
+        for (a, b) in tuned.trace.iter().zip(&plain.trace) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{mesh}: retuning changed a loss");
+        }
+    }
+}
