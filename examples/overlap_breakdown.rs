@@ -34,6 +34,11 @@ fn run(ds: &Dataset, mesh: Mesh, overlap: OverlapPolicy) -> SolverRun {
         .max_bundles(20)
         .eval_every(0)
         .overlap(overlap)
+        // Scatter Gram pinned: the breakdown compares charged books
+        // across overlap policies, and a fixed kernel keeps the host-side
+        // timing noise out of the measured walls (charged books are
+        // gram-invariant either way).
+        .gram(hybrid_sgd::sparse::GramStrategy::Scatter)
         .profile(CalibProfile::perlmutter_contended())
         .run_to_end()
 }

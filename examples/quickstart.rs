@@ -19,6 +19,7 @@ use hybrid_sgd::data::DatasetSpec;
 use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{SessionBuilder, SolverKind};
+use hybrid_sgd::sparse::GramStrategy;
 use std::time::Instant;
 
 fn main() {
@@ -67,6 +68,11 @@ fn main() {
             .max_bundles(max_bundles)
             .eval_every(5)
             .target_loss(Some(0.55))
+            // Bundle Gram strategy: `Auto` (the default, spelled out
+            // here) resolves merge vs scatter per rank block from its
+            // measured row density — host wall time only, values are
+            // bit-identical across strategies.
+            .gram(GramStrategy::Auto)
             .profile(CalibProfile::perlmutter())
     };
     let wall0 = Instant::now();

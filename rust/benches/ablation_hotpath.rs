@@ -1,19 +1,28 @@
 //! Hot-path micro-ablations: the kernel-level choices DESIGN.md calls out.
 //!
-//! * sparse Gram: merge-join vs scatter/gather (the `syrkd` analogue);
-//! * s-step correction: native Rust vs the XLA/PJRT artifact (per-call
-//!   overhead of the AOT path);
-//! * SpMV forward vs transpose-scatter throughput;
+//! * **bundle working-set layer** (the PR 5 tentpole): indirect kernels
+//!   (`row_ids` indirection into the full CSR block — the seed hot path)
+//!   vs the gathered kernels on a materialized `BundleCsr` stack, on the
+//!   4096×8192 synthetic config: gather cost, per-kernel old-vs-new rows,
+//!   and the full bundle pipeline (SpMV → Gram → transpose-scatter);
+//! * sparse Gram strategies: merge-join vs scatter/gather (the `syrkd`
+//!   analogue), including the z̄ sweep across the `GramStrategy::Auto`
+//!   density crossover;
+//! * s-step correction: the seed scalar recurrence vs the register-tiled
+//!   fused kernel, and native vs the XLA/PJRT artifact (per-call overhead
+//!   of the AOT path);
 //! * 2D partition assembly cost (the load-time price of `select_columns`).
 //!
-//! Prints ns/op medians; drives the §Perf log in EXPERIMENTS.md.
+//! Prints ns/op medians (`tools/collect_bench.py` folds the time and
+//! `N.NNx` ratio tokens into `BENCH_ci.json`); drives the §Perf log in
+//! EXPERIMENTS.md.
 
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::data::synth;
 use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::partition::{MeshPartition, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
-use hybrid_sgd::sparse::{gram, Csr};
+use hybrid_sgd::sparse::{gram, BundleCsr, Csr, GRAM_MERGE_MAX_ZBAR};
 use hybrid_sgd::util::stats::median;
 use hybrid_sgd::util::{Prng, Table};
 use std::time::Instant;
@@ -30,11 +39,32 @@ fn time_op<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     median(&samples)
 }
 
+/// The seed scalar s-step correction, kept verbatim as the old-kernel
+/// baseline for the tiled backend kernel.
+fn sstep_correct_scalar(s: usize, b: usize, g: &[f64], v: &[f64], eta_over_b: f64, z: &mut [f64]) {
+    let q = s * b;
+    let mut t = vec![0.0f64; b];
+    for j in 0..s {
+        let row0 = j * b;
+        for i in 0..b {
+            let gi = &g[(row0 + i) * q..(row0 + i) * q + row0];
+            let mut acc = 0.0;
+            for (gv, zv) in gi.iter().zip(&z[..row0]) {
+                acc += gv * zv;
+            }
+            t[i] = v[row0 + i] + eta_over_b * acc;
+        }
+        for i in 0..b {
+            z[row0 + i] = if t[i] > 700.0 { 0.0 } else { 1.0 / (1.0 + t[i].exp()) };
+        }
+    }
+}
+
 fn main() {
     let mut rng = Prng::new(0xAB1A);
     let mut table = Table::new(&["op", "config", "median time", "note"]);
 
-    // --- Gram: merge vs scatter ------------------------------------------
+    // --- Gram: merge vs scatter (contiguous ids, the seed rows) ----------
     let a = Csr::random(4096, 8192, 64, &mut rng);
     for &q in &[32usize, 128] {
         let ids: Vec<usize> = (0..q).collect();
@@ -57,6 +87,135 @@ fn main() {
         ]);
     }
 
+    // --- bundle working-set layer: indirect vs gathered -------------------
+    // Strided sample (the bench stand-in for rows spread across the block)
+    // on the same 4096×8192 zbar=64 config; each kernel is timed through
+    // the `row_ids` indirection (old) and on the materialized stack (new),
+    // then the whole bundle pipeline including the gather itself.
+    for &q in &[128usize, 512] {
+        let ids: Vec<usize> = (0..q).map(|k| (k * 31) % 4096).collect();
+        let x = vec![1.0f64; a.cols()];
+        let mut v = vec![0.0f64; q];
+        let coeff = vec![0.5f64; q];
+        let mut acc = vec![0.0f64; a.cols()];
+        let mut g = vec![0.0f64; q * q];
+        let mut scratch = vec![0.0f64; a.cols()];
+        let mut y = BundleCsr::new();
+        y.gather(&a, &ids); // steady-state capacity before timing
+
+        let t_gather = time_op(30, || y.gather(&a, &ids));
+        table.row(&[
+            "bundle gather".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_gather),
+            "once per bundle, amortized over all kernels".into(),
+        ]);
+
+        let t_spmv_ind = time_op(30, || a.spmv_rows(&ids, &x, &mut v));
+        let t_spmv_gat = time_op(30, || y.spmv(&x, &mut v));
+        table.row(&[
+            "spmv indirect".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_spmv_ind),
+            String::new(),
+        ]);
+        table.row(&[
+            "spmv gathered".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_spmv_gat),
+            format!("{:.2}x vs indirect", t_spmv_ind / t_spmv_gat),
+        ]);
+
+        let t_gram_ind =
+            time_op(10, || gram::gram_lower_scatter(&a, &ids, &mut scratch, &mut g));
+        let t_gram_gat =
+            time_op(10, || gram::gram_lower_scatter_gathered(&y, &mut scratch, &mut g));
+        table.row(&[
+            "gram indirect".into(),
+            format!("q={q} zbar=64 scatter"),
+            fmt(t_gram_ind),
+            String::new(),
+        ]);
+        table.row(&[
+            "gram gathered".into(),
+            format!("q={q} zbar=64 scatter"),
+            fmt(t_gram_gat),
+            format!("{:.2}x vs indirect", t_gram_ind / t_gram_gat),
+        ]);
+
+        let t_tsp_ind = time_op(30, || a.t_spmv_rows_acc(&ids, &coeff, &mut acc));
+        let t_tsp_gat = time_op(30, || y.t_spmv_acc(&coeff, &mut acc));
+        table.row(&[
+            "t_spmv indirect".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_tsp_ind),
+            String::new(),
+        ]);
+        table.row(&[
+            "t_spmv gathered".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_tsp_gat),
+            format!("{:.2}x vs indirect", t_tsp_ind / t_tsp_gat),
+        ]);
+
+        // The acceptance row: one whole bundle's kernels, indirect vs
+        // gather-then-gathered (the gather is *inside* the new timing, so
+        // the ratio is the end-to-end win, not a cherry-pick).
+        let t_pipe_ind = time_op(10, || {
+            a.spmv_rows(&ids, &x, &mut v);
+            gram::gram_lower_scatter(&a, &ids, &mut scratch, &mut g);
+            a.t_spmv_rows_acc(&ids, &coeff, &mut acc);
+        });
+        let t_pipe_gat = time_op(10, || {
+            y.gather(&a, &ids);
+            y.spmv(&x, &mut v);
+            gram::gram_lower_scatter_gathered(&y, &mut scratch, &mut g);
+            y.t_spmv_acc(&coeff, &mut acc);
+        });
+        table.row(&[
+            "bundle pipeline indirect".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_pipe_ind),
+            String::new(),
+        ]);
+        table.row(&[
+            "bundle pipeline gathered".into(),
+            format!("q={q} zbar=64"),
+            fmt(t_pipe_gat),
+            format!("{:.2}x vs indirect (incl. gather)", t_pipe_ind / t_pipe_gat),
+        ]);
+    }
+
+    // --- Gram strategy crossover: z̄ sweep across GramStrategy::Auto ------
+    // Merge vs scatter on the gathered stack per density; the winner flips
+    // around the shipped GRAM_MERGE_MAX_ZBAR constant — these rows are the
+    // measured check of that constant on this machine.
+    {
+        let q = 128usize;
+        let mut g = vec![0.0f64; q * q];
+        for &zbar in &[2usize, 4, 8, 16, 32, 64] {
+            let mut rngz = Prng::new(0xC705 + zbar as u64);
+            let az = Csr::random(4096, 8192, zbar, &mut rngz);
+            let ids: Vec<usize> = (0..q).map(|k| (k * 31) % 4096).collect();
+            let mut y = BundleCsr::new();
+            y.gather(&az, &ids);
+            let mut scratch = vec![0.0f64; az.cols()];
+            let t_merge = time_op(10, || gram::gram_lower_gathered(&y, &mut g));
+            let t_scatter =
+                time_op(10, || gram::gram_lower_scatter_gathered(&y, &mut scratch, &mut g));
+            let auto_pick = if (zbar as f64) < GRAM_MERGE_MAX_ZBAR { "merge" } else { "scatter" };
+            table.row(&[
+                "gram crossover".into(),
+                format!("q={q} zbar={zbar}"),
+                fmt(t_merge.min(t_scatter)),
+                format!(
+                    "merge/scatter {:.2}x, auto picks {auto_pick}",
+                    t_merge / t_scatter
+                ),
+            ]);
+        }
+    }
+
     // --- SpMV forward vs transpose ---------------------------------------
     let batch: Vec<usize> = (0..128).collect();
     let x = vec![1.0f64; a.cols()];
@@ -73,7 +232,7 @@ fn main() {
         format!("{:.2}x vs fwd", t_tsp / t_fwd),
     ]);
 
-    // --- correction: native vs XLA ----------------------------------------
+    // --- correction: seed scalar vs tiled, and native vs XLA ---------------
     let native = NativeBackend;
     for &(s, b) in &[(4usize, 32usize), (8, 64)] {
         let q = s * b;
@@ -86,13 +245,21 @@ fn main() {
         }
         let vv: Vec<f64> = (0..q).map(|_| rng.next_gaussian()).collect();
         let mut z = vec![0.0; q];
+        let t_scalar =
+            time_op(50, || sstep_correct_scalar(s, b, &g, &vv, 1e-3, &mut z));
+        table.row(&[
+            "correction scalar (seed)".into(),
+            format!("s={s} b={b}"),
+            fmt(t_scalar),
+            String::new(),
+        ]);
         let t_native =
             time_op(50, || native.sstep_correct(s, b, &g, &vv, 1e-3, &mut z));
         table.row(&[
-            "correction native".into(),
+            "correction tiled".into(),
             format!("s={s} b={b}"),
             fmt(t_native),
-            String::new(),
+            format!("{:.2}x vs scalar (4-wide tile, fused sigmoid)", t_scalar / t_native),
         ]);
         if let Ok(xla) = XlaBackend::load_default() {
             let t_xla = time_op(50, || xla.sstep_correct(s, b, &g, &vv, 1e-3, &mut z));

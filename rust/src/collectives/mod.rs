@@ -244,10 +244,23 @@ pub trait CollectiveAlgo: Sync {
 /// order** (index 0 first). This is the seed engine's order and the bitwise
 /// contract every algorithm's `reduce` honours.
 pub fn canonical_reduce(contribs: &[&[f64]], op: Reduce) -> Vec<f64> {
-    let first = contribs.first().expect("canonical_reduce over empty team");
+    let mut acc = Vec::new();
+    canonical_reduce_into(contribs, op, &mut acc);
+    acc
+}
+
+/// [`canonical_reduce`] without the return allocation: reduce into a
+/// caller-owned accumulator (cleared and resized here) — the engine's
+/// steady-state path, fed from its reusable per-lane snapshot scratch
+/// (hence the `AsRef` bound: both `&[f64]` views and owned lane `Vec`s
+/// reduce through the one kernel). Same accumulation order, bit for bit.
+pub fn canonical_reduce_into<C: AsRef<[f64]>>(contribs: &[C], op: Reduce, acc: &mut Vec<f64>) {
+    let first = contribs.first().expect("canonical_reduce over empty team").as_ref();
     let words = first.len();
-    let mut acc = vec![0.0f64; words];
+    acc.clear();
+    acc.resize(words, 0.0);
     for c in contribs {
+        let c = c.as_ref();
         assert_eq!(c.len(), words, "allreduce buffer length mismatch in team");
         for (a, x) in acc.iter_mut().zip(c.iter()) {
             *a += *x;
@@ -259,7 +272,6 @@ pub fn canonical_reduce(contribs: &[&[f64]], op: Reduce) -> Vec<f64> {
             *a *= inv;
         }
     }
-    acc
 }
 
 /// Resolve a policy to a concrete `(algorithm, cost)` for one collective.

@@ -158,6 +158,18 @@ pub struct Engine {
     /// algorithm's books a collective pays, never the books of a given
     /// algorithm and never reduced values.
     pub selector: SelectorSource,
+    /// Reusable reduction scratch for `post_collective`: one snapshot
+    /// lane per team member plus the accumulator, so steady-state
+    /// collectives allocate nothing (the seed snapshot-allocated `q`
+    /// buffers of `words` floats on every call).
+    scratch: ReduceScratch,
+}
+
+/// Per-lane contribution snapshots + accumulator (see `Engine::scratch`).
+#[derive(Default)]
+struct ReduceScratch {
+    lanes: Vec<Vec<f64>>,
+    acc: Vec<f64>,
 }
 
 impl Engine {
@@ -174,6 +186,7 @@ impl Engine {
             lanes: 1,
             algo: AlgoPolicy::Auto,
             selector: SelectorSource::Analytic,
+            scratch: ReduceScratch::default(),
         }
     }
 
@@ -382,21 +395,27 @@ impl Engine {
             // charging-path choice change charged accounting, never
             // values). Contributions are snapshotted because the closure
             // API hands out one `&mut` buffer at a time; this is simulator
-            // bookkeeping, not charged traffic.
-            let contribs: Vec<Vec<f64>> = team
-                .iter()
-                .map(|&member| {
-                    let b = buf(&mut states[member]);
-                    assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
-                    b.to_vec()
-                })
-                .collect();
-            let slices: Vec<&[f64]> = contribs.iter().map(|c| c.as_slice()).collect();
-            let acc = collectives::canonical_reduce(&slices, op);
+            // bookkeeping, not charged traffic — snapshotted into the
+            // engine's reusable lanes, so the steady state allocates
+            // nothing.
+            if self.scratch.lanes.len() < q {
+                self.scratch.lanes.resize_with(q, Vec::new);
+            }
+            for (lane, &member) in self.scratch.lanes.iter_mut().zip(&team) {
+                let b = buf(&mut states[member]);
+                assert_eq!(b.len(), words, "allreduce buffer length mismatch in team");
+                lane.clear();
+                lane.extend_from_slice(b);
+            }
+            collectives::canonical_reduce_into(
+                &self.scratch.lanes[..q],
+                op,
+                &mut self.scratch.acc,
+            );
             // Broadcast result (the reduce-scatter path delivers the full
             // buffer too — see `reduce_scatter`'s accounting contract).
             for &member in &team {
-                buf(&mut states[member]).copy_from_slice(&acc);
+                buf(&mut states[member]).copy_from_slice(&self.scratch.acc);
             }
             let (algo, cost): (_, CollectiveCost) = match kind {
                 CollKind::Allreduce => {

@@ -1,7 +1,38 @@
 //! Pure-Rust `f64` compute backend — the Rust-side correctness reference
 //! and the default hot path when the XLA artifacts are not built.
+//!
+//! The s-step correction here is the **register-tiled** kernel of the
+//! bundle working-set layer: the recurrence's dense `(b × j·b)·(j·b)`
+//! products are computed four output rows at a time (one pass over the
+//! already-corrected prefix `z[..j·b]` feeds four accumulators, so the
+//! prefix is loaded once per tile instead of once per row), and the
+//! logistic residual is fused into the row epilogue (no `t` staging
+//! buffer — the kernel allocates nothing). Each accumulator still sums in
+//! exactly the seed's `l` order, so results are **bit-identical** to the
+//! scalar kernel — the repo's standing invariant, pinned by the
+//! conformance suite, `tests/xla_parity.rs`, and the old-vs-new rows in
+//! `benches/ablation_hotpath.rs`.
+//!
+//! The numerically-guarded logistic residual lives in one shared
+//! [`sigmoid_residual_scalar`] helper (the seed duplicated it across
+//! three kernels).
 
 use super::ComputeBackend;
+
+/// Numerically-stable logistic residual `σ(−t) = 1/(1 + eᵗ)`.
+///
+/// Stable for `t ≥ 0` directly; for very negative `t` the `exp`
+/// underflows to 0 giving exactly 1.0 — also fine. Only `t → +inf` needs
+/// the early exit to avoid `exp` overflow → `inf`, which still divides to
+/// 0.0 correctly, so no branch is needed beyond NaN protection.
+#[inline]
+pub(crate) fn sigmoid_residual_scalar(t: f64) -> f64 {
+    if t > 700.0 {
+        0.0
+    } else {
+        1.0 / (1.0 + t.exp())
+    }
+}
 
 /// Zero-sized native backend.
 #[derive(Clone, Copy, Debug, Default)]
@@ -15,12 +46,7 @@ impl ComputeBackend for NativeBackend {
     fn sigmoid_residual(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), out.len());
         for (o, &t) in out.iter_mut().zip(v) {
-            // 1/(1+exp(t)) is stable for t ≥ 0; for very negative t the
-            // exp underflows to 0 giving exactly 1.0 — also fine. Only
-            // t → +inf needs the early exit to avoid exp overflow → inf,
-            // which still divides to 0.0 correctly, so no branch needed
-            // beyond NaN protection.
-            *o = if t > 700.0 { 0.0 } else { 1.0 / (1.0 + t.exp()) };
+            *o = sigmoid_residual_scalar(t);
         }
     }
 
@@ -37,22 +63,44 @@ impl ComputeBackend for NativeBackend {
         assert_eq!(g.len(), q * q, "gram size");
         assert_eq!(v.len(), q, "v size");
         assert_eq!(z.len(), q, "z size");
-        let mut t = vec![0.0f64; b];
         for j in 0..s {
             let row0 = j * b;
-            // t = v_j + η/b · Σ_{l<j} G[j-block, l-block] · z_l
-            // (one dense (b × j·b)·(j·b) product against already-computed z).
-            for i in 0..b {
+            // z[..row0] is the corrected prefix this block's products
+            // read; z[row0..] is where the block's residuals land. The
+            // split lets the fused epilogue write while the prefix stays
+            // borrowed.
+            let (done, todo) = z.split_at_mut(row0);
+            // t_i = v_i + η/b · Σ_{l<j·b} G[row_i, l] · z_l, then
+            // z_i = σ(−t_i), four rows per tile. Each accumulator sums in
+            // the same `l` order as the scalar loop: bit-identical.
+            let mut i = 0;
+            while i + 4 <= b {
+                let g0 = &g[(row0 + i) * q..(row0 + i) * q + row0];
+                let g1 = &g[(row0 + i + 1) * q..(row0 + i + 1) * q + row0];
+                let g2 = &g[(row0 + i + 2) * q..(row0 + i + 2) * q + row0];
+                let g3 = &g[(row0 + i + 3) * q..(row0 + i + 3) * q + row0];
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                for (l, &zl) in done.iter().enumerate() {
+                    a0 += g0[l] * zl;
+                    a1 += g1[l] * zl;
+                    a2 += g2[l] * zl;
+                    a3 += g3[l] * zl;
+                }
+                todo[i] = sigmoid_residual_scalar(v[row0 + i] + eta_over_b * a0);
+                todo[i + 1] = sigmoid_residual_scalar(v[row0 + i + 1] + eta_over_b * a1);
+                todo[i + 2] = sigmoid_residual_scalar(v[row0 + i + 2] + eta_over_b * a2);
+                todo[i + 3] = sigmoid_residual_scalar(v[row0 + i + 3] + eta_over_b * a3);
+                i += 4;
+            }
+            // Remainder rows (b mod 4), scalar.
+            while i < b {
                 let gi = &g[(row0 + i) * q..(row0 + i) * q + row0];
                 let mut acc = 0.0;
-                for (gv, zv) in gi.iter().zip(&z[..row0]) {
-                    acc += gv * zv;
+                for (gv, zl) in gi.iter().zip(done.iter()) {
+                    acc += gv * zl;
                 }
-                t[i] = v[row0 + i] + eta_over_b * acc;
-            }
-            // z_j = sigmoid residual of t.
-            for i in 0..b {
-                z[row0 + i] = if t[i] > 700.0 { 0.0 } else { 1.0 / (1.0 + t[i].exp()) };
+                todo[i] = sigmoid_residual_scalar(v[row0 + i] + eta_over_b * acc);
+                i += 1;
             }
         }
     }
@@ -67,7 +115,7 @@ impl ComputeBackend for NativeBackend {
             for (a, xv) in row.iter().zip(x.iter()) {
                 acc += a * xv;
             }
-            u[i] = if acc > 700.0 { 0.0 } else { 1.0 / (1.0 + acc.exp()) };
+            u[i] = sigmoid_residual_scalar(acc);
         }
         let scale = eta / b as f64;
         for i in 0..b {
@@ -119,6 +167,47 @@ mod tests {
         let mut z = vec![0.0; q];
         be.sstep_correct(s, b, &g, &v, 0.5, &mut z);
         assert!(z.iter().all(|x| x.is_finite()), "z={z:?}");
+    }
+
+    /// The register tile is a pure access-pattern change: the tiled
+    /// kernel must match the seed scalar recurrence bit for bit across
+    /// block sizes on both sides of the 4-wide tile (including the
+    /// remainder rows of b mod 4 ≠ 0).
+    #[test]
+    fn tiled_correction_bit_identical_to_scalar_reference() {
+        // The seed scalar kernel, kept verbatim as the oracle.
+        fn scalar_ref(s: usize, b: usize, g: &[f64], v: &[f64], eta_over_b: f64, z: &mut [f64]) {
+            let q = s * b;
+            let mut t = vec![0.0f64; b];
+            for j in 0..s {
+                let row0 = j * b;
+                for i in 0..b {
+                    let gi = &g[(row0 + i) * q..(row0 + i) * q + row0];
+                    let mut acc = 0.0;
+                    for (gv, zv) in gi.iter().zip(&z[..row0]) {
+                        acc += gv * zv;
+                    }
+                    t[i] = v[row0 + i] + eta_over_b * acc;
+                }
+                for i in 0..b {
+                    z[row0 + i] = sigmoid_residual_scalar(t[i]);
+                }
+            }
+        }
+        let be = NativeBackend;
+        let mut rng = crate::util::Prng::new(0x71E5);
+        for &(s, b) in &[(1usize, 1usize), (2, 3), (3, 4), (2, 5), (4, 8), (3, 7), (2, 13)] {
+            let q = s * b;
+            let g: Vec<f64> = (0..q * q).map(|_| rng.next_gaussian()).collect();
+            let v: Vec<f64> = (0..q).map(|_| rng.next_gaussian()).collect();
+            let mut z_tiled = vec![0.0; q];
+            be.sstep_correct(s, b, &g, &v, 0.125, &mut z_tiled);
+            let mut z_ref = vec![0.0; q];
+            scalar_ref(s, b, &g, &v, 0.125, &mut z_ref);
+            for (a, r) in z_tiled.iter().zip(&z_ref) {
+                assert_eq!(a.to_bits(), r.to_bits(), "s={s} b={b}: {a} vs {r}");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
 //!                       [--bundles 200] [--target 0.5] [--backend xla|native]
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
-//!                       [--selector analytic|measured]
+//!                       [--selector analytic|measured] [--gram merge|scatter|auto]
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
 //!                       [--retune off|bound-aware] [--retune-every K]
 //!                       [--checkpoint FILE.tsv] [--resume FILE.tsv]
@@ -29,6 +29,7 @@ use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
+use hybrid_sgd::sparse::GramStrategy;
 use hybrid_sgd::util::Table;
 use std::collections::HashMap;
 
@@ -88,6 +89,8 @@ fn usage() {
          --effort quick|full  --scale F  --lanes N  --charging modeled|measured\n  \
          --collective auto|linear|rd|ring|rabenseifner  --overlap off|bundle\n  \
          --selector analytic|measured (crossover source for --collective auto)\n  \
+         --gram merge|scatter|auto (bundle Gram kernel; auto resolves per block\n  \
+           from measured row density — wall time only, never values)\n  \
          --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv\n  \
          --retune off|bound-aware [--retune-every K] (re-pin the row collective\n  \
            from the live critical path every K bundles; books only, never values)\n  \
@@ -348,6 +351,16 @@ fn cmd_train(flags: &Flags) -> i32 {
             },
         },
         rs_row: flags.contains_key("rs-row"),
+        gram: match flags.get("gram").map(|s| s.as_str()) {
+            None => GramStrategy::Auto,
+            Some(name) => match GramStrategy::from_name(name) {
+                Some(g) => g,
+                None => {
+                    eprintln!("unknown --gram {name} (want merge|scatter|auto)");
+                    return 2;
+                }
+            },
+        },
         // The CLI reports book-based stats only; don't record an event
         // log nothing reads (large at high p · bundles). The analyzer
         // surface is `examples/overlap_breakdown.rs`.

@@ -4,6 +4,7 @@ use crate::collectives::{AlgoPolicy, SelectorSource};
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
+use crate::sparse::GramStrategy;
 use crate::timeline::{OverlapPolicy, Timeline};
 
 /// Options controlling a solver run.
@@ -55,6 +56,16 @@ pub struct RunOpts {
     /// today's algorithm. Like the collective algorithms, it moves books
     /// only, never values.
     pub rs_row: bool,
+    /// Bundle Gram kernel strategy (`--gram`): merge-join, dense-
+    /// accumulator scatter, or `Auto` (the default), which resolves per
+    /// rank block from the block's measured mean row density (see
+    /// [`GramStrategy::resolve`] and the crossover constant
+    /// [`crate::sparse::GRAM_MERGE_MAX_ZBAR`]). The strategies are
+    /// bit-identical in values and the charged books are strategy-
+    /// independent by construction, so this knob moves host wall time
+    /// only — never trajectories (property-tested in
+    /// `tests/session_equivalence.rs`).
+    pub gram: GramStrategy,
     /// Record the per-rank event log ([`SolverRun::timeline`]). On by
     /// default; bench-scale sweeps that never read the log turn it off
     /// (charging and books are unaffected — recording is observation
@@ -79,6 +90,7 @@ impl Default for RunOpts {
             selector: SelectorSource::Analytic,
             overlap: OverlapPolicy::Off,
             rs_row: false,
+            gram: GramStrategy::Auto,
             timeline: true,
             seed: 0x5EED,
         }

@@ -70,7 +70,7 @@ use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::Dataset;
 use crate::metrics::{Phase, PhaseBook};
 use crate::partition::{MeshPartition, Partitioner};
-use crate::sparse::{gram, Csr};
+use crate::sparse::{gram, BundleCsr, Csr, GramStrategy};
 use crate::timeline::{CriticalPath, PendingCollective, Timeline};
 use crate::WORD_BYTES;
 use std::time::Instant;
@@ -87,6 +87,16 @@ struct RankState {
     z: Vec<f64>,
     /// Current bundle's local row ids (`s·b`).
     batch: Vec<usize>,
+    /// Materialized bundle stack `Y` — the sampled rows gathered once per
+    /// bundle into cache-contiguous scratch; every bundle kernel (SpMV,
+    /// Gram, transpose-scatter) runs on it instead of chasing `batch`
+    /// indirection through the full block. Reused across bundles: zero
+    /// steady-state allocation.
+    bundle: BundleCsr,
+    /// Gram strategy resolved for this rank's block (never `Auto`; the
+    /// `Auto` knob resolves from the block's measured row density at
+    /// build time).
+    gram: GramStrategy,
     /// Cyclic sampling cursor (identical across a row team).
     cursor: usize,
     /// Dense Gram scratch (`q × q`).
@@ -356,6 +366,14 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Bundle Gram kernel strategy (see [`GramStrategy`]; default
+    /// `Auto` — resolved per rank block from measured row density).
+    /// Strategies are bit-identical in values; only host wall time moves.
+    pub fn gram(mut self, gram: GramStrategy) -> Self {
+        self.opts.gram = gram;
+        self
+    }
+
     /// Master seed carried through checkpoints.
     pub fn seed(mut self, seed: u64) -> Self {
         self.opts.seed = seed;
@@ -407,16 +425,23 @@ impl<'a> SessionBuilder<'a> {
 
         let mut mp = MeshPartition::build(self.ds, mesh, self.policy);
         let blocks = std::mem::take(&mut mp.blocks);
+        let gram_knob = self.opts.gram;
         let states: Vec<RankState> = blocks
             .into_iter()
             .map(|block| {
                 let n_local = block.cols();
+                // `Auto` resolves here, once, from the block's measured
+                // density — the per-dataset heuristic of the working-set
+                // layer (see `GramStrategy::resolve`).
+                let gram = gram_knob.resolve(block.mean_row_nnz());
                 RankState {
                     block,
                     x: vec![0.0; n_local],
                     comm: vec![0.0; q + tril_len],
                     z: vec![0.0; q],
                     batch: Vec::with_capacity(q),
+                    bundle: BundleCsr::new(),
+                    gram,
                     cursor: 0,
                     gtmp: vec![0.0; q * q],
                     gscratch: vec![0.0; n_local],
@@ -424,6 +449,11 @@ impl<'a> SessionBuilder<'a> {
                 }
             })
             .collect();
+        // Per-column averaging scratch for the loss evals (the seed
+        // allocated these buffers on every sync — see
+        // `assemble_averaged_into`).
+        let avg_parts: Vec<Vec<f64>> =
+            mp.cols.n_local.iter().map(|&n| vec![0.0; n]).collect();
 
         let mut engine = Engine::new(mesh, self.opts.profile.clone(), self.opts.charging)
             .with_lanes(self.opts.lanes)
@@ -447,6 +477,8 @@ impl<'a> SessionBuilder<'a> {
             tril_len,
             mp,
             states,
+            avg_parts,
+            charged_scratch: Vec::with_capacity(Phase::all().len()),
             engine,
             bundles_run: 0,
             pending: None,
@@ -498,6 +530,12 @@ pub struct Session<'a> {
     tril_len: usize,
     mp: MeshPartition,
     states: Vec<RankState>,
+    /// Per-column averaging scratch for [`assemble_averaged_into`]
+    /// (hoisted out of the per-sync loss eval).
+    avg_parts: Vec<Vec<f64>>,
+    /// Reused per-bundle snapshot of the mean charged books
+    /// ([`Phase::all`] order).
+    charged_scratch: Vec<f64>,
     engine: Engine,
     bundles_run: usize,
     /// At most one row reduce in flight (posted under
@@ -582,10 +620,12 @@ impl<'a> Session<'a> {
         let eta_over_b = self.opts.eta / b as f64;
         let backend = self.backend;
         let wall_before = self.engine.sim_wall();
-        let charged_before: Vec<f64> =
-            Phase::all().iter().map(|&ph| self.engine.book.mean_charged(ph)).collect();
+        self.charged_scratch.clear();
+        self.charged_scratch
+            .extend(Phase::all().iter().map(|&ph| self.engine.book.mean_charged(ph)));
 
-        // --- 1+2: sample, partial products, partial Gram -------------
+        // --- 1+2: sample, gather the bundle stack, partial products,
+        //     partial Gram ------------------------------------------
         self.engine.compute(Phase::SpGemv, &mut self.states, |_rank, st| {
             let m_local = st.block.rows();
             st.batch.clear();
@@ -593,10 +633,16 @@ impl<'a> Session<'a> {
                 st.batch.push((st.cursor + k) % m_local);
             }
             st.cursor = (st.cursor + q) % m_local;
-            st.batch_nnz = st.batch.iter().map(|&r| st.block.row_nnz(r)).sum();
+            // Materialize `Y` once per bundle: every kernel below (SpMV
+            // here, the Gram, the transpose-scatter) streams the packed
+            // stack instead of re-chasing `batch` indirection through
+            // the full CSR block. Gathering into per-rank scratch keeps
+            // the steady state allocation-free.
+            st.bundle.gather(&st.block, &st.batch);
+            st.batch_nnz = st.bundle.nnz();
             // v = Y·x (column-partial).
             let (v, _) = st.comm.split_at_mut(q);
-            st.block.spmv_rows(&st.batch, &st.x, v);
+            st.bundle.spmv(&st.x, v);
             // Streamed bytes: CSR traversal plus one read pass over the
             // local weight slab — the paper's §6.5 cache-aware compute
             // term (FedAvg's full-n slab prices at L3/DRAM, HybridSGD's
@@ -611,7 +657,17 @@ impl<'a> Session<'a> {
 
         if s > 1 {
             self.engine.compute(Phase::Gram, &mut self.states, |_rank, st| {
-                gram::gram_lower_scatter(&st.block, &st.batch, &mut st.gscratch, &mut st.gtmp);
+                // Strategy resolved at build time (never `Auto` here);
+                // merge and scatter are bit-identical, so the knob moves
+                // host wall only — charged books and values never.
+                match st.gram {
+                    GramStrategy::Merge => gram::gram_lower_gathered(&st.bundle, &mut st.gtmp),
+                    GramStrategy::Scatter | GramStrategy::Auto => gram::gram_lower_scatter_gathered(
+                        &st.bundle,
+                        &mut st.gscratch,
+                        &mut st.gtmp,
+                    ),
+                }
                 pack_tril(&st.gtmp, q, &mut st.comm[q..]);
                 let nnz = st.batch_nnz as f64;
                 // Scatter + clean (2·nnz) plus ~q/2 gathers over the batch.
@@ -688,9 +744,9 @@ impl<'a> Session<'a> {
             for zv in st.z.iter_mut() {
                 *zv *= eta_over_b;
             }
-            // Split borrows: scatter reads block/batch, writes x.
-            let RankState { block, batch, z, x, .. } = st;
-            block.t_spmv_rows_acc(batch, z, x);
+            // Split borrows: scatter reads the gathered bundle, writes x.
+            let RankState { bundle, z, x, .. } = st;
+            bundle.t_spmv_acc(z, x);
             // Read+write pass over the weight slab (§6.5 cache-aware
             // term, as in the SpGemv phase).
             let slab = (st.x.len() * WORD_BYTES) as f64;
@@ -722,7 +778,7 @@ impl<'a> Session<'a> {
         let mut target_hit = false;
         if eval_now {
             let t0 = Instant::now();
-            let x_global = assemble_averaged(&self.mp, &self.states);
+            let x_global = assemble_averaged_into(&self.mp, &self.states, &mut self.avg_parts);
             let loss = self.ds.loss(&x_global);
             let wall = t0.elapsed().as_secs_f64();
             let share = wall / self.engine.p() as f64;
@@ -766,7 +822,7 @@ impl<'a> Session<'a> {
 
         let charged_delta: Vec<(Phase, f64)> = Phase::all()
             .iter()
-            .zip(&charged_before)
+            .zip(&self.charged_scratch)
             .map(|(&ph, &before)| (ph, self.engine.book.mean_charged(ph) - before))
             .collect();
         let sim_wall = self.engine.sim_wall();
@@ -804,7 +860,7 @@ impl<'a> Session<'a> {
         }
         self.notify_finish();
 
-        let x = assemble_averaged(&self.mp, &self.states);
+        let x = assemble_averaged_into(&self.mp, &self.states, &mut self.avg_parts);
         let sim_wall = self.engine.sim_wall();
         let p = self.engine.p();
         let name = format!(
@@ -932,27 +988,42 @@ fn unpack_tril(packed: &[f64], q: usize, out: &mut [f64]) {
     }
 }
 
-/// Average the weight slices across row teams and gather the global vector.
-fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
+/// Average the weight slices across row teams and gather the global
+/// vector, reusing the session's per-column scratch (`parts[c]` has
+/// length `n_local[c]`). The seed allocated the averaging buffers on
+/// every sync; only the gathered result still allocates (it is the
+/// return value).
+fn assemble_averaged_into(
+    mp: &MeshPartition,
+    states: &[RankState],
+    parts: &mut [Vec<f64>],
+) -> Vec<f64> {
     let mesh = mp.mesh;
-    let parts: Vec<Vec<f64>> = (0..mesh.p_c)
-        .map(|c| {
-            let n_local = mp.cols.n_local[c];
-            let mut avg = vec![0.0f64; n_local];
-            for r in 0..mesh.p_r {
-                let st = &states[mesh.rank_at(r, c)];
-                for (a, v) in avg.iter_mut().zip(&st.x) {
-                    *a += v;
-                }
+    debug_assert_eq!(parts.len(), mesh.p_c);
+    for (c, avg) in parts.iter_mut().enumerate() {
+        debug_assert_eq!(avg.len(), mp.cols.n_local[c]);
+        avg.fill(0.0);
+        for r in 0..mesh.p_r {
+            let st = &states[mesh.rank_at(r, c)];
+            for (a, v) in avg.iter_mut().zip(&st.x) {
+                *a += v;
             }
-            let inv = 1.0 / mesh.p_r as f64;
-            for a in avg.iter_mut() {
-                *a *= inv;
-            }
-            avg
-        })
-        .collect();
-    mp.gather_weights(&parts)
+        }
+        let inv = 1.0 / mesh.p_r as f64;
+        for a in avg.iter_mut() {
+            *a *= inv;
+        }
+    }
+    mp.gather_weights(parts)
+}
+
+/// Allocating variant of [`assemble_averaged_into`] for `&self` callers
+/// ([`Session::current_weights`]) — cheap at bundle cadence, not on the
+/// per-sync eval path.
+fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
+    let mut parts: Vec<Vec<f64>> =
+        mp.cols.n_local.iter().map(|&n| vec![0.0; n]).collect();
+    assemble_averaged_into(mp, states, &mut parts)
 }
 
 // ---------------------------------------------------------------------
@@ -987,42 +1058,51 @@ impl Session<'_> {
     pub fn checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
         let mut w =
             crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b", "c", "d"]);
-        let na = "-".to_string();
-        let row = |k: &str, key: String, a: String, b: String, c: String, d: String| {
-            [k.to_string(), key, a, b, c, d]
-        };
-        w.append(&row("meta", "schema".into(), "1".into(), na.clone(), na.clone(), na.clone()))?;
+        // Each value cell converts on its own terms — static cells stay
+        // `&str` (the seed's `na.clone()` churn allocated six Strings per
+        // row regardless of content).
+        fn row(
+            kind: &str,
+            key: impl Into<String>,
+            a: impl Into<String>,
+            b: impl Into<String>,
+            c: impl Into<String>,
+            d: impl Into<String>,
+        ) -> [String; 6] {
+            [kind.to_string(), key.into(), a.into(), b.into(), c.into(), d.into()]
+        }
+        w.append(&row("meta", "schema", "1", "-", "-", "-"))?;
         w.append(&row(
             "meta",
-            "dataset".into(),
-            self.ds.name.clone(),
+            "dataset",
+            self.ds.name.as_str(),
             self.ds.m().to_string(),
             self.ds.n().to_string(),
-            na.clone(),
+            "-",
         ))?;
         w.append(&row(
             "meta",
-            "mesh".into(),
+            "mesh",
             self.cfg.mesh.p_r.to_string(),
             self.cfg.mesh.p_c.to_string(),
-            na.clone(),
-            na.clone(),
+            "-",
+            "-",
         ))?;
         w.append(&row(
             "meta",
-            "shape".into(),
+            "shape",
             self.cfg.s.to_string(),
             self.cfg.b.to_string(),
             self.cfg.tau.to_string(),
-            na.clone(),
+            "-",
         ))?;
         w.append(&row(
             "meta",
-            "opts".into(),
-            self.opts.overlap.name().into(),
+            "opts",
+            self.opts.overlap.name(),
             (self.opts.rs_row as u8).to_string(),
             self.opts.seed.to_string(),
-            na.clone(),
+            "-",
         ))?;
         // The partitioner decides the column->rank map the weight slices
         // are sliced by, and eta the trajectory itself: a resume under a
@@ -1030,81 +1110,32 @@ impl Session<'_> {
         // recorded and guarded like the mesh.
         w.append(&row(
             "meta",
-            "policy".into(),
-            self.policy.name().into(),
+            "policy",
+            self.policy.name(),
             self.opts.eta.to_string(),
-            na.clone(),
-            na.clone(),
+            "-",
+            "-",
         ))?;
-        w.append(&row(
-            "meta",
-            "bundles".into(),
-            self.bundles_run.to_string(),
-            na.clone(),
-            na.clone(),
-            na.clone(),
-        ))?;
+        w.append(&row("meta", "bundles", self.bundles_run.to_string(), "-", "-", "-"))?;
         let ttt = self.time_to_target.map(|t| t.to_string()).unwrap_or_else(|| "-".into());
-        w.append(&row("meta", "time_to_target".into(), ttt, na.clone(), na.clone(), na.clone()))?;
+        w.append(&row("meta", "time_to_target", ttt, "-", "-", "-"))?;
         let trace_n = self.trace_obs.as_ref().map(|t| t.points.len()).unwrap_or(0);
-        w.append(&row(
-            "meta",
-            "trace_points".into(),
-            trace_n.to_string(),
-            na.clone(),
-            na.clone(),
-            na.clone(),
-        ))?;
+        w.append(&row("meta", "trace_points", trace_n.to_string(), "-", "-", "-"))?;
         let pend_n = self.pending.as_ref().map(|h| h.pending().len()).unwrap_or(0);
-        w.append(&row(
-            "meta",
-            "pending".into(),
-            pend_n.to_string(),
-            na.clone(),
-            na.clone(),
-            na.clone(),
-        ))?;
-        w.append(&row(
-            "meta",
-            "retunes".into(),
-            self.retunes.len().to_string(),
-            na.clone(),
-            na.clone(),
-            na.clone(),
-        ))?;
+        w.append(&row("meta", "pending", pend_n.to_string(), "-", "-", "-"))?;
+        w.append(&row("meta", "retunes", self.retunes.len().to_string(), "-", "-", "-"))?;
         let pin = self.row_pin.map(|a| a.name().to_string()).unwrap_or_else(|| "-".into());
-        w.append(&row("meta", "pin".into(), pin, na.clone(), na.clone(), na.clone()))?;
+        w.append(&row("meta", "pin", pin, "-", "-", "-"))?;
 
         for (r, st) in self.states.iter().enumerate() {
-            w.append(&row(
-                "cursor",
-                r.to_string(),
-                st.cursor.to_string(),
-                na.clone(),
-                na.clone(),
-                na.clone(),
-            ))?;
+            w.append(&row("cursor", r.to_string(), st.cursor.to_string(), "-", "-", "-"))?;
         }
         for (r, c) in self.engine.clock.iter().enumerate() {
-            w.append(&row(
-                "clock",
-                r.to_string(),
-                c.to_string(),
-                na.clone(),
-                na.clone(),
-                na.clone(),
-            ))?;
+            w.append(&row("clock", r.to_string(), c.to_string(), "-", "-", "-"))?;
         }
         for (r, st) in self.states.iter().enumerate() {
             let joined = st.x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ");
-            w.append(&row(
-                "x",
-                r.to_string(),
-                st.x.len().to_string(),
-                joined,
-                na.clone(),
-                na.clone(),
-            ))?;
+            w.append(&row("x", r.to_string(), st.x.len().to_string(), joined, "-", "-"))?;
         }
         for r in 0..self.engine.p() {
             w.append(&row(
@@ -1112,15 +1143,15 @@ impl Session<'_> {
                 r.to_string(),
                 self.engine.book.words[r].to_string(),
                 self.engine.book.messages[r].to_string(),
-                na.clone(),
-                na.clone(),
+                "-",
+                "-",
             ))?;
         }
         for ph in Phase::all() {
             for r in 0..self.engine.p() {
                 w.append(&row(
                     "book",
-                    ph.name().into(),
+                    ph.name(),
                     r.to_string(),
                     self.engine.book.charged_of(ph, r).to_string(),
                     self.engine.book.wait_of(ph, r).to_string(),
@@ -1145,8 +1176,8 @@ impl Session<'_> {
                 "retune",
                 i.to_string(),
                 ev.bundle.to_string(),
-                ev.axis.name().into(),
-                ev.algo.name().into(),
+                ev.axis.name(),
+                ev.algo.name(),
                 (ev.switched as u8).to_string(),
             ))?;
         }
@@ -1156,10 +1187,10 @@ impl Session<'_> {
                 w.append(&row(
                     "pending",
                     i.to_string(),
-                    pc.algo.name().into(),
+                    pc.algo.name(),
                     pc.t_start.to_string(),
                     pc.cost.time.to_string(),
-                    na.clone(),
+                    "-",
                 ))?;
                 w.append(&row(
                     "pendcost",
@@ -1167,7 +1198,7 @@ impl Session<'_> {
                     pc.cost.steps.to_string(),
                     pc.cost.messages.to_string(),
                     pc.cost.words.to_string(),
-                    na.clone(),
+                    "-",
                 ))?;
             }
         }

@@ -1,0 +1,389 @@
+//! Bundle working-set layer — the materialized `Y` stack of Algorithm 3.
+//!
+//! The per-bundle hot path (sample → SpMV → `G = tril(Y·Yᵀ)` → s-step
+//! correction → transpose-SpMV) operates on the `q = s·b` sampled,
+//! label-scaled rows. The seed kernels re-read those rows through
+//! `row_ids` indirection into the full `m_local × n_local` CSR block on
+//! *every* pass — and the Gram alone makes `q` passes. [`BundleCsr`]
+//! gathers the sampled rows **once** per bundle into a compact,
+//! cache-contiguous CSR stack (own indptr/indices/values, rebuilt in
+//! place into reusable per-rank scratch — zero steady-state allocation),
+//! which is exactly the `sb × n_local` matrix the paper's
+//! `mkl_sparse_syrkd` inspector-executor analysis (§6.5) operates on:
+//! the inspector's gather is paid once, every executor pass streams a
+//! packed working set that fits a faster cache tier than the scattered
+//! parent rows.
+//!
+//! Kernel equivalence contract: every kernel here performs **exactly the
+//! seed kernel's floating-point operations in exactly the seed order**
+//! ([`BundleCsr::spmv`] ↔ [`Csr::spmv_rows`], [`BundleCsr::t_spmv_acc`] ↔
+//! [`Csr::t_spmv_rows_acc`], and the gathered Gram kernels in
+//! [`super::gram`]), so solver trajectories are bit-identical to the
+//! seed — the repo's standing invariant, pinned by the property tests
+//! below and by `tests/session_equivalence.rs`.
+//!
+//! [`GramStrategy`] is the merge-vs-scatter knob for the Gram kernel;
+//! its `Auto` mode resolves per rank block from the block's measured
+//! mean row density (see [`GramStrategy::resolve`]). Merge and scatter
+//! are themselves bit-identical (a tested property), so the knob — like
+//! every collective/overlap knob in this repo — can move wall time,
+//! never values.
+
+use super::csr::Csr;
+
+/// Strategy knob for the bundle Gram kernel `G = tril(Y·Yᵀ)` (threaded
+/// through `RunOpts::gram` / `SessionBuilder::gram` / CLI `--gram`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GramStrategy {
+    /// Row-pair merge joins ([`super::gram::gram_lower_gathered`]):
+    /// branchy two-pointer walks, no dense scratch traffic. Wins when
+    /// rows are short (sparse intersections exit early).
+    Merge,
+    /// Dense-accumulator scatter/gather
+    /// ([`super::gram::gram_lower_scatter_gathered`]): one branch-free
+    /// multiply-add per stored entry against an `n_local` scratch — the
+    /// `mkl_sparse_syrkd` executor structure. Wins when rows are denser.
+    Scatter,
+    /// Resolve per rank block from its measured mean row density
+    /// (`z̄ < `[`GRAM_MERGE_MAX_ZBAR`]` → Merge, else Scatter`). The
+    /// default.
+    Auto,
+}
+
+/// `Auto` crossover: blocks whose mean row density is below this pick
+/// the merge Gram, denser blocks the scatter Gram.
+///
+/// Rationale (and the measuring instrument): per row pair, merge walks
+/// `~z_i + z_j` branchy comparisons with early exit, scatter does `~z_j`
+/// branch-free multiply-adds plus an `O(z_i)` scatter/clean amortized
+/// over the pair row — so scatter's per-entry work is cheaper once rows
+/// carry enough entries to amortize its scratch traffic, and merge wins
+/// in the short-row regime. `benches/ablation_hotpath.rs` sweeps z̄
+/// across the crossover on the 4096×8192 synthetic config and prints
+/// the measured merge/scatter ratio per density (folded into
+/// `BENCH_ci.json` by `tools/collect_bench.py`), so the shipped
+/// constant is checked against the current hardware on every CI run.
+pub const GRAM_MERGE_MAX_ZBAR: f64 = 12.0;
+
+impl GramStrategy {
+    /// CLI/table label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GramStrategy::Merge => "merge",
+            GramStrategy::Scatter => "scatter",
+            GramStrategy::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<GramStrategy> {
+        match s {
+            "merge" => Some(GramStrategy::Merge),
+            "scatter" => Some(GramStrategy::Scatter),
+            "auto" => Some(GramStrategy::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` against a block's measured mean row density
+    /// (`zbar = `[`Csr::mean_row_nnz`]). Fixed strategies return
+    /// themselves; the result is never `Auto`.
+    pub fn resolve(self, zbar: f64) -> GramStrategy {
+        match self {
+            GramStrategy::Auto => {
+                if zbar < GRAM_MERGE_MAX_ZBAR {
+                    GramStrategy::Merge
+                } else {
+                    GramStrategy::Scatter
+                }
+            }
+            fixed => fixed,
+        }
+    }
+}
+
+/// The gathered bundle stack `Y`: a compact CSR holding the sampled rows
+/// of one bundle, in sample order, with the parent's column space.
+///
+/// Built with [`BundleCsr::gather`] into reusable buffers — after the
+/// first few bundles the vectors have reached steady capacity and a
+/// gather allocates nothing. Row `k` of the stack is a verbatim copy of
+/// `a.row(row_ids[k])` (duplicate ids are simply copied twice, matching
+/// what the indirect kernels read).
+#[derive(Clone, Debug, Default)]
+pub struct BundleCsr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer, length `rows + 1` once gathered (empty when fresh).
+    indptr: Vec<usize>,
+    /// Column indices in the parent's column space.
+    indices: Vec<u32>,
+    /// Nonzero values, parallel to `indices`.
+    values: Vec<f64>,
+}
+
+impl BundleCsr {
+    /// An empty stack (0 × 0); call [`BundleCsr::gather`] to fill it.
+    pub fn new() -> BundleCsr {
+        BundleCsr::default()
+    }
+
+    /// Gather the given rows of `a` (in order) into this stack, reusing
+    /// the existing buffers. The previous contents are discarded.
+    pub fn gather(&mut self, a: &Csr, row_ids: &[usize]) {
+        self.rows = row_ids.len();
+        self.cols = a.cols();
+        self.indptr.clear();
+        self.indptr.reserve(row_ids.len() + 1);
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        let nnz: usize = row_ids.iter().map(|&r| a.row_nnz(r)).sum();
+        self.indices.reserve(nnz);
+        self.values.reserve(nnz);
+        for &r in row_ids {
+            let (ci, vi) = a.row(r);
+            self.indices.extend_from_slice(ci);
+            self.values.extend_from_slice(vi);
+            self.indptr.push(self.indices.len());
+        }
+    }
+
+    /// Gathered rows (`q` of the last gather; 0 when fresh).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Parent column count (`n_local`).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries across the gathered rows.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// (column indices, values) of gathered row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let span = self.indptr[r]..self.indptr[r + 1];
+        (&self.indices[span.clone()], &self.values[span])
+    }
+
+    /// `out[j] = Y[j, :] · x` — the bundle's forward product `v = Y·x`
+    /// (Algorithm 1 line 4). Bit-identical to
+    /// [`Csr::spmv_rows`]`(row_ids, x, out)` on the gathered rows: same
+    /// products, same accumulation order, read from the packed stack.
+    pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.rows, "bundle spmv out length");
+        assert_eq!(x.len(), self.cols, "bundle spmv x length");
+        for (j, o) in out.iter_mut().enumerate() {
+            let (ci, vi) = self.row(j);
+            let mut acc = 0.0;
+            for (&c, &v) in ci.iter().zip(vi) {
+                acc += v * x[c as usize];
+            }
+            *o = acc;
+        }
+    }
+
+    /// `out += Σ_j coeff[j] · Y[j, :]` — the bundle's weight scatter
+    /// `x += (η/b)·Yᵀz` (Algorithm 3 line 14). Bit-identical to
+    /// [`Csr::t_spmv_rows_acc`] on the gathered rows (including the
+    /// zero-coefficient skip).
+    pub fn t_spmv_acc(&self, coeff: &[f64], out: &mut [f64]) {
+        assert_eq!(coeff.len(), self.rows, "bundle t_spmv coeff length");
+        assert_eq!(out.len(), self.cols, "bundle t_spmv out length");
+        for (j, &c0) in coeff.iter().enumerate() {
+            if c0 == 0.0 {
+                continue;
+            }
+            let (ci, vi) = self.row(j);
+            for (&c, &v) in ci.iter().zip(vi) {
+                out[c as usize] += c0 * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gram;
+    use crate::util::proptest::{check, Config};
+    use crate::util::Prng;
+
+    fn bits(x: &[f64]) -> Vec<u64> {
+        x.iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Random ids with duplicates allowed — the indirect kernels accept
+    /// them, so the gathered ones must reproduce them too.
+    fn random_ids(rng: &mut Prng, rows: usize, len: usize) -> Vec<usize> {
+        (0..len).map(|_| rng.next_below(rows)).collect()
+    }
+
+    #[test]
+    fn gather_copies_rows_in_order() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            &[(0, 0, 1.0), (0, 2, 2.0), (1, 2, 3.0), (2, 1, -1.0), (2, 3, 4.0)],
+        );
+        let mut y = BundleCsr::new();
+        y.gather(&a, &[2, 0, 2]);
+        assert_eq!(y.rows(), 3);
+        assert_eq!(y.cols(), 4);
+        assert_eq!(y.nnz(), 6);
+        let (c0, v0) = y.row(0);
+        assert_eq!((c0, v0), a.row(2));
+        let (c1, v1) = y.row(1);
+        assert_eq!((c1, v1), a.row(0));
+        let (c2, v2) = y.row(2);
+        assert_eq!((c2, v2), a.row(2));
+    }
+
+    #[test]
+    fn gather_empty_batch_is_zero_rows() {
+        let mut rng = Prng::new(3);
+        let a = Csr::random(5, 7, 2, &mut rng);
+        let mut y = BundleCsr::new();
+        y.gather(&a, &[]);
+        assert_eq!(y.rows(), 0);
+        assert_eq!(y.nnz(), 0);
+        let x = vec![0.0; 7];
+        let mut out: Vec<f64> = vec![];
+        y.spmv(&x, &mut out);
+        let mut acc = vec![1.0; 7];
+        y.t_spmv_acc(&[], &mut acc);
+        assert_eq!(acc, vec![1.0; 7]);
+    }
+
+    /// Re-gathering into the same scratch must behave exactly like a
+    /// fresh gather (the per-rank reuse path).
+    #[test]
+    fn regather_matches_fresh() {
+        let mut rng = Prng::new(11);
+        let a = Csr::random(20, 15, 4, &mut rng);
+        let ids1 = random_ids(&mut rng, 20, 9);
+        let ids2 = random_ids(&mut rng, 20, 5);
+        let mut reused = BundleCsr::new();
+        reused.gather(&a, &ids1);
+        reused.gather(&a, &ids2);
+        let mut fresh = BundleCsr::new();
+        fresh.gather(&a, &ids2);
+        assert_eq!(reused.rows(), fresh.rows());
+        assert_eq!(reused.nnz(), fresh.nnz());
+        for r in 0..fresh.rows() {
+            assert_eq!(reused.row(r), fresh.row(r));
+        }
+    }
+
+    /// The tentpole contract: gathered spmv / t_spmv / Gram (both
+    /// strategies) are **bit-identical** to the indirect kernels, across
+    /// random shapes, duplicate ids, and empty batches.
+    #[test]
+    fn prop_gathered_kernels_bit_identical_to_indirect() {
+        check(
+            Config { cases: 48, seed: 0xB0D1E },
+            "gathered kernels == indirect kernels, bit for bit",
+            |rng| {
+                let rows = 1 + rng.next_below(30);
+                let cols = 1 + rng.next_below(40);
+                let a = Csr::random(rows, cols, 1 + rng.next_below(6), rng);
+                // Empty batches included (q = 0).
+                let q = rng.next_below(13);
+                let ids = random_ids(rng, rows, q);
+                let x: Vec<f64> = (0..cols).map(|_| rng.next_gaussian()).collect();
+                let coeff: Vec<f64> = (0..q).map(|_| rng.next_gaussian()).collect();
+                (a, ids, x, coeff)
+            },
+            |(a, ids, x, coeff)| {
+                let q = ids.len();
+                let mut y = BundleCsr::new();
+                y.gather(a, ids);
+
+                let mut v_ind = vec![0.0; q];
+                a.spmv_rows(ids, x, &mut v_ind);
+                let mut v_gat = vec![0.0; q];
+                y.spmv(x, &mut v_gat);
+
+                let mut acc_ind = x.clone();
+                a.t_spmv_rows_acc(ids, coeff, &mut acc_ind);
+                let mut acc_gat = x.clone();
+                y.t_spmv_acc(coeff, &mut acc_gat);
+
+                let mut g_ind = vec![0.0; q * q];
+                gram::gram_lower(a, ids, &mut g_ind);
+                let mut g_merge = vec![0.0; q * q];
+                gram::gram_lower_gathered(&y, &mut g_merge);
+
+                let mut scratch_ind = vec![0.0; a.cols()];
+                let mut g_scat_ind = vec![0.0; q * q];
+                gram::gram_lower_scatter(a, ids, &mut scratch_ind, &mut g_scat_ind);
+                let mut scratch_gat = vec![0.0; y.cols()];
+                let mut g_scat = vec![0.0; q * q];
+                gram::gram_lower_scatter_gathered(&y, &mut scratch_gat, &mut g_scat);
+
+                bits(&v_ind) == bits(&v_gat)
+                    && bits(&acc_ind) == bits(&acc_gat)
+                    && bits(&g_ind) == bits(&g_merge)
+                    && bits(&g_scat_ind) == bits(&g_scat)
+            },
+        );
+    }
+
+    /// Merge and scatter Gram must agree **bitwise** (not just to
+    /// tolerance): `GramStrategy` — and therefore `--gram` — can never
+    /// move a trajectory.
+    #[test]
+    fn prop_merge_and_scatter_bitwise_equal() {
+        check(
+            Config { cases: 48, seed: 0x6B17 },
+            "gram merge == gram scatter, bit for bit",
+            |rng| {
+                let rows = 2 + rng.next_below(24);
+                let cols = 1 + rng.next_below(32);
+                let a = Csr::random(rows, cols, 1 + rng.next_below(7), rng);
+                let q = 1 + rng.next_below(10);
+                let ids = random_ids(rng, rows, q);
+                (a, ids)
+            },
+            |(a, ids)| {
+                let q = ids.len();
+                let mut y = BundleCsr::new();
+                y.gather(a, ids);
+                let mut merge = vec![0.0; q * q];
+                gram::gram_lower_gathered(&y, &mut merge);
+                let mut scratch = vec![0.0; y.cols()];
+                let mut scat = vec![0.0; q * q];
+                gram::gram_lower_scatter_gathered(&y, &mut scratch, &mut scat);
+                bits(&merge) == bits(&scat)
+            },
+        );
+    }
+
+    #[test]
+    fn auto_resolves_at_the_density_crossover() {
+        let eps = 1e-9;
+        assert_eq!(
+            GramStrategy::Auto.resolve(GRAM_MERGE_MAX_ZBAR - eps),
+            GramStrategy::Merge
+        );
+        assert_eq!(GramStrategy::Auto.resolve(GRAM_MERGE_MAX_ZBAR), GramStrategy::Scatter);
+        assert_eq!(GramStrategy::Auto.resolve(0.0), GramStrategy::Merge);
+        // Fixed strategies ignore the density.
+        for z in [0.0, GRAM_MERGE_MAX_ZBAR, 1e6] {
+            assert_eq!(GramStrategy::Merge.resolve(z), GramStrategy::Merge);
+            assert_eq!(GramStrategy::Scatter.resolve(z), GramStrategy::Scatter);
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for g in [GramStrategy::Merge, GramStrategy::Scatter, GramStrategy::Auto] {
+            assert_eq!(GramStrategy::from_name(g.name()), Some(g));
+        }
+        assert_eq!(GramStrategy::from_name("nope"), None);
+    }
+}

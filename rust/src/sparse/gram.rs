@@ -3,15 +3,33 @@
 //!
 //! `Y` is the `sb × n_local` stack of sampled, label-scaled rows; `G` is the
 //! small dense lower-triangular Gram whose blocks correct the deferred
-//! updates. Two implementations are provided:
+//! updates. Since the bundle working-set layer landed, the solver hot path
+//! runs on a **materialized** `Y` ([`BundleCsr`], gathered once per bundle
+//! into cache-contiguous per-rank scratch) rather than chasing `row_ids`
+//! indirection into the parent block — the Gram is the kernel that gains
+//! most, because it re-reads every sampled row `O(q)` times and those reads
+//! now stream a packed stack that fits a faster cache tier. Two strategies
+//! (selected by [`GramStrategy`](super::bundle::GramStrategy), threaded
+//! from `RunOpts::gram` / `--gram`):
 //!
-//! * [`gram_lower`] — row-pair sparse dot products (cache-friendly when rows
-//!   are short; `O((sb)² · z̄_row)` worst case but with early-exit merges).
-//! * [`gram_lower_scatter`] — scatter/gather over a dense accumulator of
-//!   length `n_local` (faster for larger `z̄`; this mirrors the
-//!   inspector-executor structure whose per-call `O(n_local)` floor the
-//!   paper measures in §6.5).
+//! * [`gram_lower_gathered`] (**merge**) — row-pair sparse dot products via
+//!   two-pointer merges (`O(q² · z̄)` comparisons with early exit; wins on
+//!   short rows, no dense scratch traffic).
+//! * [`gram_lower_scatter_gathered`] (**scatter**) — scatter/gather over a
+//!   dense accumulator of length `n_local`: one branch-free multiply-add
+//!   per stored entry (the `mkl_sparse_syrkd` executor structure whose
+//!   per-call `O(n_local)` floor the paper measures in §6.5; wins on
+//!   denser rows).
+//!
+//! The two strategies are **bit-identical** to each other (scatter's extra
+//! terms are exact `+0.0`s against an accumulator that can never be
+//! `-0.0`; a tested property in [`super::bundle`]), and each is
+//! bit-identical to its indirect seed twin ([`gram_lower`] /
+//! [`gram_lower_scatter`], kept for the reference solver, the ablation
+//! bench baselines, and as test oracles) — so the strategy knob moves wall
+//! time, never trajectories.
 
+use super::bundle::BundleCsr;
 use super::csr::Csr;
 
 /// Dense lower-triangular Gram `G[i*q + j] = rowᵢ · rowⱼ` for `j ≤ i`,
@@ -75,6 +93,59 @@ pub fn gram_lower_scatter(a: &Csr, row_ids: &[usize], scratch: &mut [f64], out: 
             let mut acc = 0.0;
             for (k, &c) in cj.iter().enumerate() {
                 acc += vj[k] * scratch[c as usize];
+            }
+            out[i * q + j] = acc;
+        }
+        // Clean scratch (only the touched entries).
+        for &c in ci {
+            scratch[c as usize] = 0.0;
+        }
+    }
+}
+
+/// Merge-strategy Gram over a materialized bundle stack: dense
+/// lower-triangular `G[i*q + j] = Y[i,:] · Y[j,:]` for `j ≤ i`, upper
+/// triangle left zero. Bit-identical to [`gram_lower`]`(a, row_ids, out)`
+/// when `y` was gathered from `(a, row_ids)` — same dot products, same
+/// merge order, read from the packed stack.
+pub fn gram_lower_gathered(y: &BundleCsr, out: &mut [f64]) {
+    let q = y.rows();
+    assert_eq!(out.len(), q * q, "gram out size");
+    out.fill(0.0);
+    for i in 0..q {
+        let (ci, vi) = y.row(i);
+        for j in 0..=i {
+            let (cj, vj) = y.row(j);
+            out[i * q + j] = sparse_dot(ci, vi, cj, vj);
+        }
+    }
+}
+
+/// Scatter-strategy Gram over a materialized bundle stack: densifies one
+/// gathered row at a time into `scratch` (length `y.cols()`, cleaned —
+/// not re-zeroed in full — after each row, so repeated calls stay
+/// `O(nnz)` amortized) and gathers dot products against the earlier rows.
+/// Bit-identical to [`gram_lower_scatter`] on the same rows, and to the
+/// merge strategy (see the module docs).
+pub fn gram_lower_scatter_gathered(y: &BundleCsr, scratch: &mut [f64], out: &mut [f64]) {
+    let q = y.rows();
+    assert_eq!(out.len(), q * q, "gram out size");
+    assert_eq!(scratch.len(), y.cols(), "scratch size");
+    out.fill(0.0);
+    for i in 0..q {
+        let (ci, vi) = y.row(i);
+        // Scatter row i.
+        for (&c, &v) in ci.iter().zip(vi) {
+            scratch[c as usize] = v;
+        }
+        // Diagonal.
+        out[i * q + i] = vi.iter().map(|v| v * v).sum();
+        // Gather against rows j < i.
+        for j in 0..i {
+            let (cj, vj) = y.row(j);
+            let mut acc = 0.0;
+            for (&c, &v) in cj.iter().zip(vj) {
+                acc += v * scratch[c as usize];
             }
             out[i * q + j] = acc;
         }

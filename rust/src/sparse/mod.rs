@@ -3,13 +3,17 @@
 //!
 //! Everything the solvers need is here: CSR storage, SpMV, the transposed
 //! SpMV scatter that forms the gradient, batched row gather (sparse and
-//! densified), the sparse Gram (`syrk`) used by the s-step bundle, and the
-//! nonzero-distribution statistics (`κ`, degree histograms) that drive the
-//! partitioning study.
+//! densified), the bundle working-set layer ([`bundle::BundleCsr`] — the
+//! materialized `Y` stack the per-bundle kernels run on), the sparse Gram
+//! (`syrk`) used by the s-step bundle with its merge/scatter/auto strategy
+//! knob ([`bundle::GramStrategy`]), and the nonzero-distribution statistics
+//! (`κ`, degree histograms) that drive the partitioning study.
 
+pub mod bundle;
 pub mod csr;
 pub mod gram;
 pub mod stats;
 
+pub use bundle::{BundleCsr, GramStrategy, GRAM_MERGE_MAX_ZBAR};
 pub use csr::Csr;
 pub use stats::{col_degrees, row_degrees, NnzStats};

@@ -9,7 +9,10 @@
 //!   `time_to_target` is read only after the in-flight transfer settles
 //!   (regression test);
 //! * bound-aware mid-run retuning moves charged books only, never
-//!   trajectories.
+//!   trajectories;
+//! * the bundle Gram strategy knob (`--gram merge|scatter|auto`) is a
+//!   host-wall-only knob: weights, traces, walls, and charged books are
+//!   bit-identical across all three strategies.
 
 use hybrid_sgd::collectives::SelectorSource;
 use hybrid_sgd::comm::OverlapPolicy;
@@ -20,8 +23,11 @@ use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::metrics::{Phase, PhaseBook};
 use hybrid_sgd::partition::Partitioner;
 use hybrid_sgd::solvers::{HybridSolver, RetunePolicy, RunOpts, SessionBuilder, SolverRun};
+use hybrid_sgd::sparse::GramStrategy;
 use hybrid_sgd::util::proptest::{check, Config};
 use hybrid_sgd::util::Prng;
+
+const GRAMS: [GramStrategy; 3] = [GramStrategy::Merge, GramStrategy::Scatter, GramStrategy::Auto];
 
 fn bits(x: &[f64]) -> Vec<u64> {
     x.iter().map(|v| v.to_bits()).collect()
@@ -55,8 +61,9 @@ fn runs_equal(a: &SolverRun, b: &SolverRun) -> bool {
 }
 
 /// The tentpole golden suite: across mesh shapes, s-step depths,
-/// overlap × selector × rs_row, eval cadences, and early-stop targets, a
-/// manually stepped session reproduces `HybridSolver::run` exactly.
+/// overlap × selector × rs_row × gram, eval cadences, and early-stop
+/// targets, a manually stepped session reproduces `HybridSolver::run`
+/// exactly.
 #[test]
 fn prop_step_driven_session_bit_identical_to_run() {
     let mut rng = Prng::new(0x5E5510);
@@ -77,9 +84,10 @@ fn prop_step_driven_session_bit_identical_to_run() {
                 rng.next_below(2) == 1, // measured selector
                 rng.next_below(3),      // eval_every
                 rng.next_below(2) == 1, // generous target (early stop path)
+                rng.next_below(3),      // gram strategy index
             )
         },
-        |&(p_r, p_c, s, b, tau_off, overlap, rs_row, measured, eval_every, target)| {
+        |&(p_r, p_c, s, b, tau_off, overlap, rs_row, measured, eval_every, target, gram)| {
             let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + tau_off);
             let opts = RunOpts {
                 max_bundles: 6,
@@ -93,6 +101,7 @@ fn prop_step_driven_session_bit_identical_to_run() {
                 },
                 // A loose target so some cases exercise the early stop.
                 target_loss: if target { Some(0.69) } else { None },
+                gram: GRAMS[gram],
                 ..Default::default()
             };
             let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts);
@@ -202,6 +211,50 @@ fn time_to_target_settles_in_flight_transfer_under_bundle_overlap() {
     assert_eq!(bun.time_to_target.unwrap().to_bits(), bun.sim_wall.to_bits());
     // Overlap still pays off end to end.
     assert!(bun.sim_wall <= off.sim_wall * (1.0 + 1e-12));
+}
+
+/// The bundle Gram strategy knob: runs under `merge`, `scatter`, and
+/// `auto` are **fully** bit-identical — weights, traces, walls, charged
+/// books, words, messages — across the overlap × rs_row grid (the
+/// acceptance pin for the working-set layer: `--gram` moves host wall
+/// time only).
+#[test]
+fn prop_gram_strategy_bit_identical_across_knob_grid() {
+    let mut rng = Prng::new(0x62A3);
+    let ds = synth::sparse_skewed("gram-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    check(
+        Config { cases: 12, seed: 0x62A3 },
+        "gram merge == scatter == auto, bit for bit",
+        |rng| {
+            (
+                1 + rng.next_below(3),  // p_r
+                1 + rng.next_below(4),  // p_c
+                2 + rng.next_below(2),  // s >= 2 so the Gram phase runs
+                2 + rng.next_below(6),  // b
+                rng.next_below(2) == 1, // overlap bundle
+                rng.next_below(2) == 1, // rs_row
+            )
+        },
+        |&(p_r, p_c, s, b, overlap, rs_row)| {
+            let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + 1);
+            let run_with = |gram: GramStrategy| {
+                let opts = RunOpts {
+                    max_bundles: 6,
+                    eval_every: 2,
+                    overlap: if overlap { OverlapPolicy::Bundle } else { OverlapPolicy::Off },
+                    rs_row,
+                    gram,
+                    ..Default::default()
+                };
+                HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+            };
+            let merge = run_with(GramStrategy::Merge);
+            let scatter = run_with(GramStrategy::Scatter);
+            let auto = run_with(GramStrategy::Auto);
+            runs_equal(&merge, &scatter) && runs_equal(&merge, &auto)
+        },
+    );
 }
 
 /// Bound-aware mid-run retuning: trajectories bit-identical to the fixed

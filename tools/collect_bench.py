@@ -11,12 +11,18 @@ Each input file is one bench target's captured stdout (named
 * optional ``1.87x``-style tokens (the overlap/collective gain columns) —
   collected as ``speedups`` so gain regressions are visible in the
   trajectory;
+* table rows whose cells carry a ``fmt_time`` duration (``123.4 ns`` /
+  ``1.23 us`` / ``2.000 ms`` / ``2.000 s``) — collected as ``kernels_ns``
+  keyed by the row's leading cells (e.g. ``"gram gathered | q=128
+  zbar=64"``), so per-kernel medians (the ablation_hotpath old-vs-new
+  rows) land in the perf trajectory as absolute numbers, not only ratios;
 * the ``== ... ==`` section headers, kept as ``sections`` for a cheap
   smoke check that a bench kept printing what it used to.
 
 Output schema (one object per bench)::
 
     { "<bench>": { "wall_s": 12.3, "speedups": [1.87, ...],
+                   "kernels_ns": {"gram gathered | q=128 zbar=64": 812.0},
                    "sections": ["Table 8 - ...", ...], "lines": 120 } }
 
 The script is deliberately tolerant: a bench that prints nothing
@@ -32,12 +38,28 @@ from pathlib import Path
 WALL_RE = re.compile(r"generated in ([0-9]+(?:\.[0-9]+)?)s")
 SPEEDUP_RE = re.compile(r"\b([0-9]+(?:\.[0-9]+)?)x\b")
 SECTION_RE = re.compile(r"^==\s*(.*?)\s*==\s*$")
+# One `util::table::fmt_time` cell: value + unit, nothing else in the cell
+# (table cells are separated by 2+ spaces).
+TIME_CELL_RE = re.compile(r"^([0-9]+(?:\.[0-9]+)?) (s|ms|us|ns)$")
+NS_PER_UNIT = {"s": 1e9, "ms": 1e6, "us": 1e3, "ns": 1.0}
+
+
+def kernel_row(line: str):
+    """``(key, ns)`` if the line is a table row with a duration cell."""
+    cells = re.split(r"\s{2,}", line.strip())
+    for i, cell in enumerate(cells):
+        m = TIME_CELL_RE.match(cell)
+        if m and i > 0:
+            key = " | ".join(cells[:i])
+            return key, float(m.group(1)) * NS_PER_UNIT[m.group(2)]
+    return None
 
 
 def collect(text: str) -> dict:
     wall = None
     speedups = []
     sections = []
+    kernels = {}
     for line in text.splitlines():
         m = WALL_RE.search(line)
         if m:
@@ -47,9 +69,14 @@ def collect(text: str) -> dict:
             sections.append(sec.group(1))
         for tok in SPEEDUP_RE.findall(line):
             speedups.append(float(tok))
+        row = kernel_row(line)
+        if row is not None:
+            key, ns = row
+            kernels[key] = ns
     return {
         "wall_s": wall,
         "speedups": speedups,
+        "kernels_ns": kernels,
         "sections": sections,
         "lines": len(text.splitlines()),
     }
