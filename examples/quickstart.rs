@@ -8,6 +8,12 @@
 //! arrive), and `finish()` assembles the result. Then repeats with FedAvg
 //! for contrast. Recorded in EXPERIMENTS.md §End-to-end.
 //!
+//! The hybrid run demonstrates the observability layer: two trace sinks
+//! stream every span to `quickstart_trace.jsonl` (line-oriented, for
+//! scripts) and `quickstart_trace.json` (Chrome `trace_event` — open it
+//! in `chrome://tracing` or <https://ui.perfetto.dev>, one track per
+//! rank), and the run ends with the versioned `obs::summary` TSV block.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! cargo run --release --example quickstart -- quick   # CI smoke scale
@@ -16,6 +22,7 @@
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::{topology, CalibProfile, HybridConfig};
 use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::obs::{JsonlSink, PerfettoSink, RunSummary};
 use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{SessionBuilder, SolverKind};
@@ -76,7 +83,19 @@ fn main() {
             .profile(CalibProfile::perlmutter())
     };
     let wall0 = Instant::now();
-    let mut hybrid = session(cfg, policy).build();
+    // Observability: stream the span trace in both formats while the run
+    // goes (attaching a sink forces event-log recording on; charging and
+    // the trajectory are bit-identical with tracing on or off).
+    let mut builder = session(cfg, policy);
+    match JsonlSink::create("quickstart_trace.jsonl") {
+        Ok(sink) => builder = builder.trace_sink(Box::new(sink)),
+        Err(e) => println!("(jsonl trace unavailable: {e})"),
+    }
+    match PerfettoSink::create("quickstart_trace.json") {
+        Ok(sink) => builder = builder.trace_sink(Box::new(sink)),
+        Err(e) => println!("(perfetto trace unavailable: {e})"),
+    }
+    let mut hybrid = builder.build();
     println!("\nloss curve (bundle, simulated s, loss):");
     while !hybrid.is_done() {
         let Some(report) = hybrid.step_bundle() else { break };
@@ -99,6 +118,13 @@ fn main() {
     if let Some(t) = run.time_to_target {
         println!("time-to-target 0.55: {t:.4} simulated s");
     }
+    println!(
+        "\ntraces written: quickstart_trace.jsonl (one JSON object per span) and \
+         quickstart_trace.json (open in chrome://tracing or ui.perfetto.dev — \
+         one track per rank)"
+    );
+    println!("\nrun summary (obs::summary schema, kind key a b c d):");
+    print!("{}", RunSummary::from_run(&run).render());
 
     // 5. FedAvg contrast at the same rank count (run_to_end: the
     //    compatibility one-liner over the same session machinery).

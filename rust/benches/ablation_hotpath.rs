@@ -15,7 +15,9 @@
 //!
 //! Prints ns/op medians (`tools/collect_bench.py` folds the time and
 //! `N.NNx` ratio tokens into `BENCH_ci.json`); drives the §Perf log in
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md. A trailing `obs::summary` block reports one small
+//! end-to-end session (per-phase charged/wait/hidden, traffic) as
+//! versioned `summary`-prefixed rows the collector also folds in.
 
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::data::synth;
@@ -290,6 +292,18 @@ fn main() {
 
     println!("== hot-path ablations ==");
     println!("{}", table.render());
+
+    // One small end-to-end session, reported as obs::summary rows: the
+    // kernel medians above are host wall; these are the simulated-clock
+    // books the kernels feed.
+    let mut rng3 = Prng::new(3);
+    let sds = synth::sparse_skewed("ablation-e2e", 384, 768, 24, 1.0, &mut rng3);
+    let cfg = hybrid_sgd::costmodel::HybridConfig::new(Mesh::new(2, 4), 4, 8, 8);
+    let run = hybrid_sgd::solvers::SessionBuilder::new(&NativeBackend, &sds, cfg)
+        .max_bundles(6)
+        .run_to_end();
+    println!("== run summary (obs) ==");
+    print!("{}", hybrid_sgd::obs::RunSummary::from_run(&run).render());
 }
 
 fn fmt(t: f64) -> String {

@@ -1,9 +1,20 @@
 //! Bench target regenerating the paper's Table 10 — phase breakdown, url 4x64.
 //!
 //! Effort via `HYBRID_SGD_EFFORT=quick|full` (default quick). Rows print
-//! to stdout; machine-readable TSV lands under `results/`.
+//! to stdout; machine-readable TSV lands under `results/`. A trailing
+//! `obs::summary` block reports the same breakdown as versioned
+//! `summary`-prefixed TSV rows, which `tools/collect_bench.py` folds
+//! into `BENCH_ci.json` (per-phase charged/wait/hidden ride the CI
+//! trajectory as absolute numbers).
 
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::HybridConfig;
+use hybrid_sgd::data::{synth, DatasetSpec};
 use hybrid_sgd::experiments::{table10, Effort};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::obs::RunSummary;
+use hybrid_sgd::solvers::SessionBuilder;
+use hybrid_sgd::util::Prng;
 use std::time::Instant;
 
 fn main() {
@@ -14,4 +25,19 @@ fn main() {
     println!("== Table 10 — phase breakdown, url 4x64 ==");
     println!("{}", table.render());
     println!("(effort {effort:?}, generated in {wall:.1}s; TSV under results/)");
+
+    // The same breakdown as machine-readable summary rows: one small
+    // url-like run on the paper's 4-wide × row-team shape (scaled down so
+    // the block stays cheap at quick effort).
+    let ds = match effort {
+        Effort::Quick => {
+            let mut rng = Prng::new(10);
+            synth::sparse_skewed("url-bench", 512, 1024, 24, 1.2, &mut rng)
+        }
+        Effort::Full => DatasetSpec::UrlLike.profile().generate_scaled(0.05, 42),
+    };
+    let cfg = HybridConfig::new(Mesh::new(4, 8), 4, 8, 10);
+    let run = SessionBuilder::new(&NativeBackend, &ds, cfg).max_bundles(8).run_to_end();
+    println!("== run summary (obs) ==");
+    print!("{}", RunSummary::from_run(&run).render());
 }

@@ -34,6 +34,14 @@
 //!   reporting which phase each rank's makespan is bound by. Trajectories
 //!   never change across overlap policies; hidden transfer seconds are
 //!   booked in their own [`metrics::PhaseBook`] column.
+//! * **[`obs`]** — the observability layer over the timeline: streaming
+//!   trace export ([`obs::TraceSink`]) to JSONL and Chrome/Perfetto
+//!   `trace_event` files (one track per rank in `chrome://tracing`), the
+//!   versioned end-of-run summary TSV (`obs::summary`), and — with
+//!   [`timeline::CriticalPath::windowed`] — the sliding-window
+//!   critical-path analytics the bound-aware retuner reads. Export is
+//!   observation-only: trajectories and charged books are bit-identical
+//!   with tracing on or off.
 //! * **[`costmodel`]** — the closed-form α-β-γ model (Eq. 4), the optima
 //!   `s*`/`b*` (Eq. 5/6), the topology rule (Eq. 7), the regime taxonomy
 //!   (Table 5) and every empirical refinement of §6.5 (cache-aware γ(W),
@@ -51,6 +59,7 @@ pub mod data;
 pub mod experiments;
 pub mod mesh;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod solvers;

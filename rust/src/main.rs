@@ -11,6 +11,8 @@
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
 //!                       [--retune off|bound-aware] [--retune-every K]
 //!                       [--checkpoint FILE.tsv] [--resume FILE.tsv]
+//!                       [--trace-out FILE] [--trace-format jsonl|perfetto]
+//!                       [--summary FILE.tsv]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
 //! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
@@ -26,6 +28,7 @@ use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, Hybr
 use hybrid_sgd::data::DatasetSpec;
 use hybrid_sgd::experiments::{self, Effort};
 use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::obs::{self, RunSummary, TraceFormat};
 use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
@@ -96,6 +99,9 @@ fn usage() {
            from the live critical path every K bundles; books only, never values)\n  \
          --checkpoint FILE.tsv (save the session at the end of the run)\n  \
          --resume FILE.tsv (continue a saved session; config must match)\n  \
+         --trace-out FILE (stream the span trace; --trace-format jsonl|perfetto,\n  \
+           perfetto files load in chrome://tracing / ui.perfetto.dev)\n  \
+         --summary FILE.tsv (write the versioned obs::summary run report)\n  \
          calibrate --collectives (also fit per-algorithm curves into --save)"
     );
 }
@@ -420,10 +426,35 @@ fn cmd_train(flags: &Flags) -> i32 {
         backend.name(),
     );
     let overlap = opts.overlap;
-    let builder = SessionBuilder::new(backend, &ds, cfg)
+    let mut builder = SessionBuilder::new(backend, &ds, cfg)
         .partitioner(policy)
         .opts(opts)
         .retune(retune);
+    if let Some(path) = flags.get("trace-out") {
+        let format = match flags.get("trace-format").map(|s| s.as_str()) {
+            None => TraceFormat::default(),
+            Some(name) => match TraceFormat::from_name(name) {
+                Some(f) => f,
+                None => {
+                    eprintln!("unknown --trace-format {name} (want jsonl|perfetto)");
+                    return 2;
+                }
+            },
+        };
+        match obs::sink_to(format, path) {
+            Ok(sink) => {
+                // Attaching a sink forces event-log recording on.
+                builder = builder.trace_sink(sink);
+                println!("tracing spans to {path} ({})", format.name());
+            }
+            Err(e) => {
+                eprintln!("failed to open trace file {path}: {e}");
+                return 2;
+            }
+        }
+    } else if flags.contains_key("trace-format") {
+        eprintln!("--trace-format without --trace-out does nothing");
+    }
     let mut session = match flags.get("resume") {
         Some(path) => match builder.resume(path) {
             Ok(s) => {
@@ -487,6 +518,15 @@ fn cmd_train(flags: &Flags) -> i32 {
     }
     if let Some(t) = run.time_to_target {
         println!("time-to-target: {t:.4} s (simulated)");
+    }
+    if let Some(path) = flags.get("summary") {
+        match RunSummary::from_run(&run).to_tsv(path) {
+            Ok(()) => println!("run summary saved to {path}"),
+            Err(e) => {
+                eprintln!("failed to save run summary to {path}: {e}");
+                return 1;
+            }
+        }
     }
     0
 }

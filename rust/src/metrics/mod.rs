@@ -52,6 +52,11 @@ impl Phase {
         }
     }
 
+    /// Parse a table label back into a phase (checkpoint/trace restore).
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Phase::all().into_iter().find(|ph| ph.name() == s)
+    }
+
     /// Phases counted in the paper's "algorithm total" (everything except
     /// metrics overhead).
     pub fn in_algorithm_total(&self) -> bool {
@@ -170,6 +175,16 @@ impl PhaseBook {
     /// Max over ranks of the hidden transfer time for a phase.
     pub fn max_hidden(&self, phase: Phase) -> f64 {
         self.hidden[phase.index()].iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Mean over ranks of the words moved (the paper's W, per rank).
+    pub fn mean_words(&self) -> f64 {
+        mean(&self.words)
+    }
+
+    /// Mean over ranks of the collective message count (L, per rank).
+    pub fn mean_messages(&self) -> f64 {
+        mean(&self.messages)
     }
 
     /// One rank's charged algorithm time summed over non-metrics phases —

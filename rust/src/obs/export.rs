@@ -1,0 +1,274 @@
+//! Concrete trace exporters: JSONL and Chrome/Perfetto `trace_event`.
+//!
+//! Both sinks stream — a span is formatted and written the moment the
+//! [`TraceObserver`](super::TraceObserver) forwards it, so memory stays
+//! O(1) in the run length. Times are simulated seconds in JSONL and
+//! microseconds in the Perfetto output (the `trace_event` convention).
+
+use super::TraceSink;
+use crate::timeline::Event;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+/// Which on-disk trace format to emit (`--trace-format`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON object per line per span — the tooling-friendly default.
+    #[default]
+    Jsonl,
+    /// Chrome `trace_event` JSON: open the file in `chrome://tracing` or
+    /// <https://ui.perfetto.dev>; one track (tid) per rank.
+    Perfetto,
+}
+
+impl TraceFormat {
+    /// CLI label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceFormat::Jsonl => "jsonl",
+            TraceFormat::Perfetto => "perfetto",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn from_name(s: &str) -> Option<TraceFormat> {
+        match s {
+            "jsonl" => Some(TraceFormat::Jsonl),
+            "perfetto" => Some(TraceFormat::Perfetto),
+            _ => None,
+        }
+    }
+}
+
+/// Open a buffered file sink in the requested format.
+pub fn sink_to<P: AsRef<Path>>(
+    format: TraceFormat,
+    path: P,
+) -> io::Result<Box<dyn TraceSink + 'static>> {
+    let out = BufWriter::new(File::create(path)?);
+    Ok(match format {
+        TraceFormat::Jsonl => Box::new(JsonlSink::new(out)),
+        TraceFormat::Perfetto => Box::new(PerfettoSink::new(out)),
+    })
+}
+
+/// One JSON object per line:
+/// `{"rank":0,"phase":"sstep_comm","kind":"wait","bundle":3,"t_start":0.1,"t_end":0.2}`.
+///
+/// Floats use Rust's shortest-roundtrip formatting, so a parsed trace
+/// reproduces the recorded spans bit for bit.
+pub struct JsonlSink<W: Write> {
+    out: W,
+}
+
+impl JsonlSink<BufWriter<File>> {
+    /// Create (truncate) a buffered file sink at `path`.
+    pub fn create<P: AsRef<Path>>(path: P) -> io::Result<Self> {
+        Ok(JsonlSink::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    /// Wrap any writer.
+    pub fn new(out: W) -> JsonlSink<W> {
+        JsonlSink { out }
+    }
+}
+
+impl<W: Write> TraceSink for JsonlSink<W> {
+    fn span(&mut self, e: &Event) -> io::Result<()> {
+        writeln!(
+            self.out,
+            "{{\"rank\":{},\"phase\":\"{}\",\"kind\":\"{}\",\"bundle\":{},\
+             \"t_start\":{},\"t_end\":{}}}",
+            e.rank,
+            e.phase.name(),
+            e.kind.name(),
+            e.bundle,
+            json_num(e.start),
+            json_num(e.end),
+        )
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Chrome `trace_event` JSON (the "JSON Array Format" with a
+/// `traceEvents` wrapper): complete `X` (duration) events, `ts`/`dur` in
+/// microseconds of simulated time, `pid` 0, `tid` = rank — so the viewer
+/// renders **one horizontal track per rank**. Each rank's track is named
+/// by an `M` (metadata) event the first time the rank appears; the span
+/// name is the phase, the category the event kind, and `args` carries
+/// the bundle index.
+pub struct PerfettoSink<W: Write> {
+    out: W,
+    started: bool,
+    any_event: bool,
+    named: Vec<bool>,
+    closed: bool,
+}
+
+impl PerfettoSink<BufWriter<File>> {
+    /// Create (truncate) a buffered file sink at `path`.
+    pub fn create<P: AsRef<Path>>(path: P) -> io::Result<Self> {
+        Ok(PerfettoSink::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> PerfettoSink<W> {
+    /// Wrap any writer.
+    pub fn new(out: W) -> PerfettoSink<W> {
+        PerfettoSink { out, started: false, any_event: false, named: Vec::new(), closed: false }
+    }
+
+    fn start(&mut self) -> io::Result<()> {
+        if !self.started {
+            self.started = true;
+            write!(self.out, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+            self.raw(
+                "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":0,\"tid\":0,\
+                 \"args\":{\"name\":\"hybrid-sgd simulated ranks\"}}"
+                    .to_string(),
+            )?;
+        }
+        Ok(())
+    }
+
+    fn raw(&mut self, event_json: String) -> io::Result<()> {
+        let sep = if self.any_event { "," } else { "" };
+        self.any_event = true;
+        write!(self.out, "{sep}\n{event_json}")
+    }
+
+    fn name_rank(&mut self, rank: usize) -> io::Result<()> {
+        if rank >= self.named.len() {
+            self.named.resize(rank + 1, false);
+        }
+        if !self.named[rank] {
+            self.named[rank] = true;
+            self.raw(format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{rank},\
+                 \"args\":{{\"name\":\"rank {rank}\"}}}}"
+            ))?;
+            // Keep the viewer's track order = rank order.
+            self.raw(format!(
+                "{{\"name\":\"thread_sort_index\",\"ph\":\"M\",\"pid\":0,\"tid\":{rank},\
+                 \"args\":{{\"sort_index\":{rank}}}}}"
+            ))?;
+        }
+        Ok(())
+    }
+}
+
+impl<W: Write> TraceSink for PerfettoSink<W> {
+    fn span(&mut self, e: &Event) -> io::Result<()> {
+        self.start()?;
+        self.name_rank(e.rank)?;
+        let ts = e.start * 1e6;
+        let dur = e.dur() * 1e6;
+        self.raw(format!(
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+             \"pid\":0,\"tid\":{},\"args\":{{\"bundle\":{},\"kind\":\"{}\"}}}}",
+            e.phase.name(),
+            e.kind.name(),
+            json_num(ts),
+            json_num(dur),
+            e.rank,
+            e.bundle,
+            e.kind.name(),
+        ))
+    }
+
+    fn finish(&mut self) -> io::Result<()> {
+        if self.closed {
+            return Ok(());
+        }
+        self.closed = true;
+        self.start()?; // an empty run still emits a valid file
+        writeln!(self.out, "\n]}}")?;
+        self.out.flush()
+    }
+}
+
+/// JSON-safe float formatting: Rust's shortest-roundtrip `Display` is
+/// valid JSON for every finite value; recorded spans are always finite.
+fn json_num(v: f64) -> String {
+    debug_assert!(v.is_finite(), "trace spans carry finite times");
+    v.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Phase;
+    use crate::timeline::EventKind;
+
+    fn ev(rank: usize, bundle: usize, start: f64, end: f64) -> Event {
+        Event { rank, phase: Phase::SstepComm, kind: EventKind::Wait, bundle, start, end }
+    }
+
+    #[test]
+    fn jsonl_one_object_per_line() {
+        let mut buf = Vec::new();
+        {
+            let mut s = JsonlSink::new(&mut buf);
+            s.span(&ev(1, 2, 0.5, 1.25)).unwrap();
+            s.span(&ev(0, 3, 1.25, 2.0)).unwrap();
+            s.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(
+            lines[0],
+            "{\"rank\":1,\"phase\":\"sstep_comm\",\"kind\":\"wait\",\"bundle\":2,\
+             \"t_start\":0.5,\"t_end\":1.25}"
+        );
+        assert!(lines[1].contains("\"bundle\":3"));
+    }
+
+    #[test]
+    fn perfetto_wraps_events_and_names_each_rank_once() {
+        let mut buf = Vec::new();
+        {
+            let mut s = PerfettoSink::new(&mut buf);
+            s.span(&ev(0, 0, 0.0, 1.0)).unwrap();
+            s.span(&ev(1, 0, 0.0, 2.0)).unwrap();
+            s.span(&ev(0, 1, 1.0, 3.0)).unwrap();
+            s.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(text.trim_end().ends_with("]}"));
+        // One thread_name metadata event per rank, not per span.
+        assert_eq!(text.matches("thread_name").count(), 2);
+        assert_eq!(text.matches("\"ph\":\"X\"").count(), 3);
+        // ts/dur in microseconds.
+        assert!(text.contains("\"ts\":1000000,\"dur\":2000000"));
+        // Tracks keyed by rank.
+        assert!(text.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn perfetto_empty_run_is_still_valid() {
+        let mut buf = Vec::new();
+        {
+            let mut s = PerfettoSink::new(&mut buf);
+            s.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("traceEvents"));
+        assert!(text.trim_end().ends_with("]}"));
+    }
+
+    #[test]
+    fn format_names_roundtrip() {
+        for f in [TraceFormat::Jsonl, TraceFormat::Perfetto] {
+            assert_eq!(TraceFormat::from_name(f.name()), Some(f));
+        }
+        assert_eq!(TraceFormat::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,208 @@
+//! Observability: the structured run-telemetry layer.
+//!
+//! The engine already *records* everything that matters — every charge,
+//! collective round, wait, and hidden transfer lands in the
+//! [`Timeline`](crate::timeline::Timeline) event log, stamped with
+//! (rank, phase, kind, bundle, span). This module turns that log into
+//! artifacts other tools consume:
+//!
+//! * [`TraceSink`] — the streaming export trait. A sink receives each
+//!   recorded span exactly once, in record order; [`NullSink`] is the
+//!   zero-cost default (drops everything). Attach a sink to a session
+//!   with [`SessionBuilder::trace_sink`](crate::solvers::SessionBuilder::trace_sink),
+//!   which rides the built-in [`TraceObserver`].
+//! * [`export`] — concrete sinks: [`JsonlSink`] (one JSON object per
+//!   span, for ad-hoc tooling) and [`PerfettoSink`] (Chrome
+//!   `trace_event` format, loadable directly in `chrome://tracing` or
+//!   <https://ui.perfetto.dev> with one track per rank).
+//! * [`summary`] — the end-of-run report: per-phase charged/wait/hidden
+//!   seconds, traffic, and the retune history as a versioned TSV block
+//!   (`tools/collect_bench.py` folds it into `BENCH_ci.json`).
+//!
+//! The *analysis* complement lives in
+//! [`timeline::analyzer`](crate::timeline::analyzer):
+//! [`CriticalPath::windowed`](crate::timeline::CriticalPath::windowed)
+//! aggregates the last `k` bundles so the bound-aware retuner reads the
+//! recent — not whole-run — bound axis.
+//!
+//! # Worked `chrome://tracing` workflow
+//!
+//! ```bash
+//! cargo run --release -- train --dataset url --p 16 \
+//!     --trace-out run.json --trace-format perfetto
+//! # then open chrome://tracing (or https://ui.perfetto.dev) and load
+//! # run.json: one horizontal track per rank; spans are named by phase
+//! # and colored by category (compute / transfer / wait / hidden), with
+//! # the bundle index in each span's args.
+//! ```
+//!
+//! Export is observation-only: sinks read the same event log the
+//! analyzer does, so trajectories and charged books are bit-identical
+//! with tracing on or off (property-tested in `tests/obs_trace.rs`).
+
+pub mod export;
+pub mod summary;
+
+pub use export::{sink_to, JsonlSink, PerfettoSink, TraceFormat};
+pub use summary::RunSummary;
+
+use crate::solvers::{BundleReport, Observer, ObserverCtx};
+use crate::timeline::{Event, Timeline};
+use std::io;
+
+/// A streaming consumer of recorded timeline spans.
+///
+/// Sinks are driven by [`TraceObserver`]: every span recorded since the
+/// last bundle boundary is forwarded once, in record order, and
+/// [`TraceSink::finish`] is called exactly once when the session
+/// finishes (sinks that buffer or need a closing delimiter flush there).
+pub trait TraceSink {
+    /// Consume one span.
+    fn span(&mut self, event: &Event) -> io::Result<()>;
+    /// Close out the stream (write trailers, flush).
+    fn finish(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The zero-cost default sink: drops every span. Exists so APIs can take
+/// a `TraceSink` unconditionally without paying for formatting or I/O
+/// when tracing is off.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn span(&mut self, _event: &Event) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Built-in session observer that drains the live event log into a
+/// [`TraceSink`] at every bundle boundary (and once more at finish).
+///
+/// The timeline itself stays clonable and sink-free; the observer keeps
+/// a cursor into the log and forwards only the spans recorded since its
+/// last visit, so a span is exported exactly once. Restored spans from a
+/// checkpoint resume are forwarded too (they precede the first
+/// post-resume bundle). Export failures are reported to stderr once and
+/// disable the sink — telemetry must never abort a run.
+pub struct TraceObserver<'a> {
+    sink: Box<dyn TraceSink + 'a>,
+    cursor: usize,
+    failed: bool,
+}
+
+impl<'a> TraceObserver<'a> {
+    /// Wrap a sink for attachment via
+    /// [`SessionBuilder::observe`](crate::solvers::SessionBuilder::observe)
+    /// (or let [`SessionBuilder::trace_sink`](crate::solvers::SessionBuilder::trace_sink)
+    /// construct it for you).
+    pub fn new(sink: Box<dyn TraceSink + 'a>) -> TraceObserver<'a> {
+        TraceObserver { sink, cursor: 0, failed: false }
+    }
+
+    fn drain(&mut self, timeline: &Timeline) {
+        if self.failed {
+            return;
+        }
+        let events = timeline.events();
+        // A cleared log (e.g. warmup reset) moves the cursor back.
+        self.cursor = self.cursor.min(events.len());
+        for e in &events[self.cursor..] {
+            if let Err(err) = self.sink.span(e) {
+                self.fail(&err);
+                break;
+            }
+        }
+        self.cursor = events.len();
+    }
+
+    fn fail(&mut self, err: &io::Error) {
+        eprintln!("trace sink failed ({err}); disabling trace export for this run");
+        self.failed = true;
+    }
+}
+
+impl Observer for TraceObserver<'_> {
+    fn on_bundle(&mut self, ctx: &ObserverCtx<'_>, _report: &BundleReport) {
+        self.drain(ctx.timeline);
+    }
+
+    fn on_finish(&mut self, ctx: &ObserverCtx<'_>) {
+        self.drain(ctx.timeline);
+        if !self.failed {
+            if let Err(err) = self.sink.finish() {
+                self.fail(&err);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Phase;
+    use crate::timeline::EventKind;
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let mut s = NullSink;
+        let e = Event {
+            rank: 0,
+            phase: Phase::SpGemv,
+            kind: EventKind::Compute,
+            bundle: 0,
+            start: 0.0,
+            end: 1.0,
+        };
+        assert!(s.span(&e).is_ok());
+        assert!(s.finish().is_ok());
+    }
+
+    #[test]
+    fn observer_forwards_each_span_once() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Count(Rc<RefCell<(usize, usize)>>);
+        impl TraceSink for Count {
+            fn span(&mut self, _e: &Event) -> io::Result<()> {
+                self.0.borrow_mut().0 += 1;
+                Ok(())
+            }
+            fn finish(&mut self) -> io::Result<()> {
+                self.0.borrow_mut().1 += 1;
+                Ok(())
+            }
+        }
+        let seen = Rc::new(RefCell::new((0usize, 0usize)));
+        let mut obs = TraceObserver::new(Box::new(Count(seen.clone())));
+        let mut tl = Timeline::new(1);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.record(0, Phase::SstepComm, EventKind::Wait, 1.0, 2.0);
+        obs.drain(&tl);
+        obs.drain(&tl); // no new events: nothing forwarded
+        tl.record(0, Phase::Correction, EventKind::Compute, 2.0, 3.0);
+        obs.drain(&tl);
+        let ctx_finish_events = seen.borrow().0;
+        assert_eq!(ctx_finish_events, 3);
+        assert_eq!(seen.borrow().1, 0);
+    }
+
+    #[test]
+    fn failed_sink_disables_quietly() {
+        struct Broken;
+        impl TraceSink for Broken {
+            fn span(&mut self, _e: &Event) -> io::Result<()> {
+                Err(io::Error::other("disk full"))
+            }
+        }
+        let mut obs = TraceObserver::new(Box::new(Broken));
+        let mut tl = Timeline::new(1);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        obs.drain(&tl);
+        assert!(obs.failed);
+        // Further drains are no-ops, not panics.
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 1.0, 2.0);
+        obs.drain(&tl);
+    }
+}

@@ -1,0 +1,186 @@
+//! The end-of-run summary report: one versioned TSV block per run.
+//!
+//! Benches print the block to stdout (each row prefixed `summary`) and
+//! `tools/collect_bench.py` folds it into `BENCH_ci.json`, so per-phase
+//! charged/wait/hidden seconds, traffic, and the retune history ride the
+//! CI bench trajectory next to the kernel medians. [`RunSummary::to_tsv`]
+//! writes the same rows as a standalone file under `results/`.
+
+use crate::metrics::Phase;
+use crate::solvers::SolverRun;
+use std::io;
+use std::path::Path;
+
+/// Version stamp of the summary row schema (the `meta schema` row).
+/// Bump when row meanings change; `collect_bench.py` records it.
+pub const SUMMARY_SCHEMA: u32 = 1;
+
+/// A rendered run summary: rows of `kind key a b c d`, same shape as the
+/// session checkpoint TSV.
+///
+/// Schema v1 rows:
+///
+/// ```text
+/// meta    schema   1
+/// meta    name     <run label>
+/// meta    ranks    <p>
+/// meta    bundles  <outer>  <inner iters>
+/// meta    sim_wall <seconds>
+/// meta    time_to_target <seconds | ->
+/// phase   <name>   <mean charged>  <mean wait>  <mean hidden>  <max charged>
+/// traffic mean     <words/rank>    <messages/rank>
+/// total   algorithm <mean charged seconds, metrics excluded>
+/// retune  <i>      <bundle>  <axis>  <algo>  <switched 0|1>
+/// pin     row      <algo | ->
+/// ```
+///
+/// Floats use shortest-roundtrip formatting (machine-readable, lossless).
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    rows: Vec<[String; 6]>,
+}
+
+impl RunSummary {
+    /// Summarize a finished run (phase lines come from the run's
+    /// [`PhaseBook`](crate::metrics::PhaseBook), the retune history from
+    /// the session's bound-aware decisions).
+    pub fn from_run(run: &SolverRun) -> RunSummary {
+        fn row(
+            kind: &str,
+            key: impl Into<String>,
+            a: impl Into<String>,
+            b: impl Into<String>,
+            c: impl Into<String>,
+            d: impl Into<String>,
+        ) -> [String; 6] {
+            [kind.to_string(), key.into(), a.into(), b.into(), c.into(), d.into()]
+        }
+        let mut rows = Vec::new();
+        rows.push(row("meta", "schema", SUMMARY_SCHEMA.to_string(), "-", "-", "-"));
+        rows.push(row("meta", "name", run.name.as_str(), "-", "-", "-"));
+        rows.push(row("meta", "ranks", run.book.ranks().to_string(), "-", "-", "-"));
+        rows.push(row(
+            "meta",
+            "bundles",
+            run.bundles_run.to_string(),
+            run.inner_iters.to_string(),
+            "-",
+            "-",
+        ));
+        rows.push(row("meta", "sim_wall", run.sim_wall.to_string(), "-", "-", "-"));
+        let ttt = run.time_to_target.map(|t| t.to_string()).unwrap_or_else(|| "-".into());
+        rows.push(row("meta", "time_to_target", ttt, "-", "-", "-"));
+        for ph in Phase::all() {
+            rows.push(row(
+                "phase",
+                ph.name(),
+                run.book.mean_charged(ph).to_string(),
+                run.book.mean_wait(ph).to_string(),
+                run.book.mean_hidden(ph).to_string(),
+                run.book.max_charged(ph).to_string(),
+            ));
+        }
+        rows.push(row(
+            "traffic",
+            "mean",
+            run.book.mean_words().to_string(),
+            run.book.mean_messages().to_string(),
+            "-",
+            "-",
+        ));
+        rows.push(row(
+            "total",
+            "algorithm",
+            run.book.algorithm_total().to_string(),
+            "-",
+            "-",
+            "-",
+        ));
+        for (i, ev) in run.retunes.iter().enumerate() {
+            rows.push(row(
+                "retune",
+                i.to_string(),
+                ev.bundle.to_string(),
+                ev.axis.name(),
+                ev.algo.name(),
+                (ev.switched as u8).to_string(),
+            ));
+        }
+        let pin = run
+            .retunes
+            .last()
+            .map(|ev| ev.algo.name().to_string())
+            .unwrap_or_else(|| "-".into());
+        rows.push(row("pin", "row", pin, "-", "-", "-"));
+        RunSummary { rows }
+    }
+
+    /// The raw rows (`kind key a b c d`).
+    pub fn rows(&self) -> &[[String; 6]] {
+        &self.rows
+    }
+
+    /// Render the stdout block: one line per row, each prefixed with a
+    /// literal `summary` cell so `collect_bench.py` can key on it amid a
+    /// bench's human-formatted tables.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            out.push_str("summary\t");
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the rows as a standalone TSV file (same header family as
+    /// the session checkpoint).
+    pub fn to_tsv<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        let mut w =
+            crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b", "c", "d"]);
+        for r in &self.rows {
+            w.append(&r[..])?;
+        }
+        Ok(())
+    }
+
+    /// Convenience lookup for tests: the `a` cell of the first row with
+    /// this kind and key.
+    pub fn cell(&self, kind: &str, key: &str) -> Option<&str> {
+        self.rows.iter().find(|r| r[0] == kind && r[1] == key).map(|r| r[2].as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::NativeBackend;
+    use crate::costmodel::HybridConfig;
+    use crate::data::synth;
+    use crate::mesh::Mesh;
+    use crate::solvers::SessionBuilder;
+    use crate::util::Prng;
+
+    #[test]
+    fn summary_reports_book_totals_and_versions_itself() {
+        let mut rng = Prng::new(11);
+        let ds = synth::sparse_skewed("obs-sum", 96, 32, 5, 0.6, &mut rng);
+        let be = NativeBackend;
+        let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+        let run = SessionBuilder::new(&be, &ds, cfg).max_bundles(4).run_to_end();
+        let s = RunSummary::from_run(&run);
+        assert_eq!(s.cell("meta", "schema"), Some("1"));
+        assert_eq!(s.cell("meta", "ranks"), Some("4"));
+        assert_eq!(s.cell("meta", "bundles"), Some("4"));
+        let wall: f64 = s.cell("meta", "sim_wall").unwrap().parse().unwrap();
+        assert_eq!(wall.to_bits(), run.sim_wall.to_bits(), "lossless float cells");
+        let spgemv: f64 = s.cell("phase", "spgemv").unwrap().parse().unwrap();
+        assert!(spgemv > 0.0);
+        // No retunes ran: the pin row reports none.
+        assert_eq!(s.cell("pin", "row"), Some("-"));
+        // Rendered block: every line keyed for collect_bench.py.
+        let text = s.render();
+        assert!(text.lines().all(|l| l.starts_with("summary\t")));
+        assert_eq!(text.lines().count(), s.rows().len());
+    }
+}

@@ -1,5 +1,6 @@
 //! Shared solver plumbing: run options, traces, results.
 
+use super::session::RetuneEvent;
 use crate::collectives::{AlgoPolicy, SelectorSource};
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
@@ -130,6 +131,11 @@ pub struct SolverRun {
     /// Per-rank event log of the run (input to
     /// [`timeline::analyzer`](crate::timeline::analyzer)).
     pub timeline: Timeline,
+    /// Bound-aware retune decisions taken during the run, in order
+    /// (empty unless [`RetunePolicy::BoundAware`](super::RetunePolicy)
+    /// was active) — the selector-decision history `obs::summary`
+    /// reports.
+    pub retunes: Vec<RetuneEvent>,
     /// Simulated time at which `target_loss` was first met, if it was.
     pub time_to_target: Option<f64>,
 }
@@ -167,6 +173,7 @@ mod tests {
             sim_wall: 2.0,
             book: PhaseBook::new(1),
             timeline: Timeline::new(1),
+            retunes: vec![],
             time_to_target: None,
         };
         assert!((r.per_iter() - 0.1).abs() < 1e-12);

@@ -25,14 +25,22 @@
 //!   (schema-guarded like
 //!   [`CalibProfile::from_tsv`](crate::costmodel::CalibProfile::from_tsv))
 //!   carrying weights, sampling cursors, the master seed, per-rank
-//!   clocks/books, and any **in-flight overlap state** (a posted row
-//!   reduce not yet settled), so a resumed session continues the
-//!   trajectory *and* the charged accounting bit-for-bit.
+//!   clocks/books, the recorded **event log**, and any **in-flight
+//!   overlap state** (a posted row reduce not yet settled), so a resumed
+//!   session continues the trajectory, the charged accounting, *and* the
+//!   timeline byte-for-byte.
 //! * [`RetunePolicy::BoundAware`] — every `k` bundles the session reads
-//!   [`CriticalPath::bound_axis`] from the live timeline and re-pins the
-//!   row collective via [`AutoSelector::pick_bound_aware`]. Selection
-//!   moves books only (the collectives determinism contract), so
-//!   trajectories stay bit-identical with retuning on or off.
+//!   [`CriticalPath::bound_axis`] from the **sliding window** of the last
+//!   `k` bundles ([`CriticalPath::windowed`]) and re-pins the row
+//!   collective via [`AutoSelector::pick_bound_aware`] — a phase-shifting
+//!   run (or a resumed one with a long history) is tuned on what the
+//!   machine is doing *now*. Selection moves books only (the collectives
+//!   determinism contract), so trajectories stay bit-identical with
+//!   retuning on or off.
+//! * [`SessionBuilder::trace_sink`] — attach an
+//!   [`obs::TraceSink`](crate::obs::TraceSink) (JSONL, Chrome/Perfetto)
+//!   and every recorded span streams out through the built-in
+//!   [`obs::TraceObserver`](crate::obs::TraceObserver).
 //!
 //! # Lifecycle
 //!
@@ -71,7 +79,7 @@ use crate::data::Dataset;
 use crate::metrics::{Phase, PhaseBook};
 use crate::partition::{MeshPartition, Partitioner};
 use crate::sparse::{gram, BundleCsr, Csr, GramStrategy};
-use crate::timeline::{CriticalPath, PendingCollective, Timeline};
+use crate::timeline::{CriticalPath, Event, EventKind, PendingCollective, Timeline};
 use crate::WORD_BYTES;
 use std::time::Instant;
 
@@ -114,9 +122,10 @@ pub enum RetunePolicy {
     /// Never re-pin; the row collective follows [`RunOpts::algo`] for the
     /// whole run (the seed behavior).
     Off,
-    /// Every `every` bundles, read the live critical path's
-    /// [`CriticalPath::bound_axis`] for the makespan rank and re-pin the
-    /// row collective via [`AutoSelector::pick_bound_aware`]. Forces
+    /// Every `every` bundles, read [`CriticalPath::bound_axis`] for the
+    /// makespan rank **over the sliding window of the last `every`
+    /// bundles** ([`CriticalPath::windowed`]) and re-pin the row
+    /// collective via [`AutoSelector::pick_bound_aware`]. Forces
     /// event-log recording on (the analyzer needs it). Books may move;
     /// trajectories never do.
     BoundAware {
@@ -171,6 +180,11 @@ pub struct BundleReport {
     /// Whether this bundle's eval reached `target_loss` (the session is
     /// done; further `step_bundle` calls return `None`).
     pub target_hit: bool,
+    /// Words this bundle moved (mean per rank, [`PhaseBook::words`]
+    /// delta) — comm volume over time without observers diffing books.
+    pub words_delta: f64,
+    /// Collective messages this bundle issued (mean per rank).
+    pub messages_delta: f64,
     /// The re-tune decision taken after this bundle, if the cadence hit.
     pub retune: Option<RetuneEvent>,
 }
@@ -258,6 +272,7 @@ pub struct SessionBuilder<'a> {
     trace: bool,
     timeline: Option<bool>,
     book: bool,
+    traced: bool,
     observers: Vec<Box<dyn Observer + 'a>>,
 }
 
@@ -281,6 +296,7 @@ impl<'a> SessionBuilder<'a> {
             trace: true,
             timeline: None,
             book: true,
+            traced: false,
             observers: Vec::new(),
         }
     }
@@ -413,6 +429,22 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Stream every recorded span into a
+    /// [`TraceSink`](crate::obs::TraceSink) (e.g.
+    /// [`JsonlSink`](crate::obs::JsonlSink) or
+    /// [`PerfettoSink`](crate::obs::PerfettoSink)) via the built-in
+    /// [`TraceObserver`](crate::obs::TraceObserver). Forces event-log
+    /// recording on regardless of [`RunOpts::timeline`] /
+    /// [`SessionBuilder::record_timeline`] — a sink with nothing to read
+    /// would be a silent no-op. Multiple sinks may be attached; each
+    /// sees the full stream. Export is observation-only: trajectories
+    /// and charged books are bit-identical with or without sinks.
+    pub fn trace_sink(mut self, sink: Box<dyn crate::obs::TraceSink + 'a>) -> Self {
+        self.observers.push(Box::new(crate::obs::TraceObserver::new(sink)));
+        self.traced = true;
+        self
+    }
+
     /// Build the session: partition the dataset over the mesh and stand
     /// up the engine. No bundles run yet.
     pub fn build(self) -> Session<'a> {
@@ -462,8 +494,10 @@ impl<'a> SessionBuilder<'a> {
         // Bound-aware retuning reads the live event log, so it forces
         // recording on even when the opts/builder left it off — unless
         // its cadence is 0 (documented as disabled), which must not pay
-        // for an event log nothing will read.
+        // for an event log nothing will read. An attached trace sink
+        // forces recording on the same way.
         let record = self.timeline.unwrap_or(self.opts.timeline)
+            || self.traced
             || matches!(self.retune, RetunePolicy::BoundAware { every } if every > 0);
         engine.timeline.set_enabled(record);
 
@@ -506,9 +540,11 @@ impl<'a> SessionBuilder<'a> {
     /// rs-row knobs, and seed — mismatches are rejected rather than
     /// silently resumed.
     ///
-    /// The event log is *not* checkpointed (it grows with the run):
-    /// a resumed session's timeline — and therefore any bound-aware
-    /// retune verdict after resume — covers the resumed segment only.
+    /// The event log rides the checkpoint (schema v2 `event` rows), so
+    /// a resumed session's timeline — and trace export, and bound-aware
+    /// retuning's sliding window — sees the whole run's history. Resumes
+    /// with recording off skip the restored log. Schema v1 files (no
+    /// event rows) still restore; their timeline starts empty.
     pub fn resume<P: AsRef<std::path::Path>>(self, path: P) -> std::io::Result<Session<'a>> {
         let mut session = self.build();
         session.restore(path)?;
@@ -615,11 +651,17 @@ impl<'a> Session<'a> {
             return None;
         }
         let bundle = self.bundles_run;
+        // Everything recorded from here settles under this bundle's
+        // stamp — including a previous bundle's overlapped reduce, which
+        // completes (and charges) during this one.
+        self.engine.timeline.set_bundle(bundle);
         let (s, b) = (self.cfg.s, self.cfg.b);
         let q = self.q;
         let eta_over_b = self.opts.eta / b as f64;
         let backend = self.backend;
         let wall_before = self.engine.sim_wall();
+        let words_before = self.engine.book.mean_words();
+        let messages_before = self.engine.book.mean_messages();
         self.charged_scratch.clear();
         self.charged_scratch
             .extend(Phase::all().iter().map(|&ph| self.engine.book.mean_charged(ph)));
@@ -816,7 +858,7 @@ impl<'a> Session<'a> {
                 && !self.target_reached
                 && self.cfg.mesh.p_c > 1
             {
-                retune = Some(self.retune_now());
+                retune = Some(self.retune_now(every));
             }
         }
 
@@ -835,6 +877,8 @@ impl<'a> Session<'a> {
             fedavg_fired,
             eval,
             target_hit,
+            words_delta: self.engine.book.mean_words() - words_before,
+            messages_delta: self.engine.book.mean_messages() - messages_before,
             retune,
         };
         self.notify_bundle(&report);
@@ -884,17 +928,21 @@ impl<'a> Session<'a> {
             sim_wall,
             book,
             timeline,
+            retunes: self.retunes,
             time_to_target: self.time_to_target,
         }
     }
 
-    /// The bound-aware re-tune: critical path → axis → row-collective
-    /// pin.
-    fn retune_now(&mut self) -> RetuneEvent {
+    /// The bound-aware re-tune: **windowed** critical path (the last
+    /// `every` bundles — the span since the previous check) → axis →
+    /// row-collective pin. Reading the window instead of the whole run
+    /// means a regime shift (or a long restored history after resume)
+    /// re-tunes on the machine's *current* behavior.
+    fn retune_now(&mut self, every: usize) -> RetuneEvent {
         let q_row = self.cfg.mesh.p_c;
         let words = self.q + self.tril_len;
         let (axis, algo, prev) = {
-            let cp = CriticalPath::analyze(&self.engine.timeline);
+            let cp = CriticalPath::windowed(&self.engine.timeline, every);
             let axis = cp.bound_axis(cp.makespan_rank());
             let sel =
                 AutoSelector::new(&self.engine.profile).with_source(self.engine.selector);
@@ -1029,9 +1077,9 @@ fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
 // ---------------------------------------------------------------------
 // Checkpoint / resume: versioned TSV, schema-guarded like CalibProfile.
 //
-// Schema v1, header `kind  key  a  b  c  d`:
+// Schema v2, header `kind  key  a  b  c  d`:
 //   meta    schema|dataset|mesh|shape|opts|policy|bundles|
-//           time_to_target|trace_points|pending|retunes|pin
+//           time_to_target|trace_points|pending|retunes|pin|events
 //   cursor  <rank>  <cursor>
 //   clock   <rank>  <seconds>
 //   x       <rank>  <len>  <space-joined f64 shortest-roundtrip>
@@ -1041,6 +1089,12 @@ fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
 //   retune  <i>     <bundle>   <axis>   <algo>     <switched>
 //   pending <i>     <algo>  <t_start>  <time>   (row reduce in flight)
 //   pendcost <i>    <steps>  <messages>  <words>
+//   event   <i>     <rank>  <phase>/<kind>/<bundle>  <start>  <end>
+//
+// v2 adds the `meta events` count and the `event` rows (the timeline
+// event log, so traces and windowed critical-path analytics survive a
+// resume). v1 files restore fine: the count guard treats an absent
+// declaration with zero rows as a legitimately event-free checkpoint.
 //
 // Floats use Rust's shortest-roundtrip formatting, so restore is
 // bit-lossless; declared counts guard truncated tails; config/dataset
@@ -1050,11 +1104,12 @@ fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
 impl Session<'_> {
     /// Persist the session at a bundle boundary: weights, sampling
     /// cursors, the master seed, per-rank clocks, the phase books, the
-    /// collected loss trace, the retune history, and any in-flight
-    /// (posted, unsettled) row reduce — everything needed for
+    /// collected loss trace, the retune history, the timeline event log
+    /// (carried byte-for-byte so trace export and windowed critical-path
+    /// analytics see the whole history after a resume), and any
+    /// in-flight (posted, unsettled) row reduce — everything needed for
     /// [`SessionBuilder::resume`] to continue the trajectory and the
-    /// charged accounting bit-for-bit. The event log is not persisted
-    /// (see [`SessionBuilder::resume`]).
+    /// charged accounting bit-for-bit.
     pub fn checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
         let mut w =
             crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b", "c", "d"]);
@@ -1071,7 +1126,7 @@ impl Session<'_> {
         ) -> [String; 6] {
             [kind.to_string(), key.into(), a.into(), b.into(), c.into(), d.into()]
         }
-        w.append(&row("meta", "schema", "1", "-", "-", "-"))?;
+        w.append(&row("meta", "schema", "2", "-", "-", "-"))?;
         w.append(&row(
             "meta",
             "dataset",
@@ -1126,6 +1181,8 @@ impl Session<'_> {
         w.append(&row("meta", "retunes", self.retunes.len().to_string(), "-", "-", "-"))?;
         let pin = self.row_pin.map(|a| a.name().to_string()).unwrap_or_else(|| "-".into());
         w.append(&row("meta", "pin", pin, "-", "-", "-"))?;
+        let events_n = self.engine.timeline.events().len();
+        w.append(&row("meta", "events", events_n.to_string(), "-", "-", "-"))?;
 
         for (r, st) in self.states.iter().enumerate() {
             w.append(&row("cursor", r.to_string(), st.cursor.to_string(), "-", "-", "-"))?;
@@ -1202,6 +1259,19 @@ impl Session<'_> {
                 ))?;
             }
         }
+        // The event log, one row per span. phase/kind/bundle share a cell
+        // to keep the six-column shape; floats are shortest-roundtrip, so
+        // a restore pushes back bit-identical spans.
+        for (i, e) in self.engine.timeline.events().iter().enumerate() {
+            w.append(&row(
+                "event",
+                i.to_string(),
+                e.rank.to_string(),
+                format!("{}/{}/{}", e.phase.name(), e.kind.name(), e.bundle),
+                e.start.to_string(),
+                e.end.to_string(),
+            ))?;
+        }
         Ok(())
     }
 
@@ -1234,6 +1304,8 @@ impl Session<'_> {
         let mut retune_rows: Vec<(usize, RetuneEvent)> = Vec::new();
         let mut pend_head: Vec<(usize, Algorithm, f64, f64)> = Vec::new();
         let mut pend_cost: Vec<(usize, usize, f64, f64)> = Vec::new();
+        let mut declared_events: Option<usize> = None;
+        let mut event_rows: Vec<(usize, Event)> = Vec::new();
 
         let phase_of = |name: &str| {
             Phase::all()
@@ -1260,7 +1332,7 @@ impl Session<'_> {
                 "meta" => match key {
                     "schema" => {
                         let v = parse_u(a)?;
-                        if v > 1 {
+                        if v > 2 {
                             return Err(bad(format!(
                                 "checkpoint schema {v} is newer than this build"
                             )));
@@ -1330,6 +1402,7 @@ impl Session<'_> {
                     "trace_points" => declared_trace = Some(parse_u(a)?),
                     "pending" => declared_pending = Some(parse_u(a)?),
                     "retunes" => declared_retunes = Some(parse_u(a)?),
+                    "events" => declared_events = Some(parse_u(a)?),
                     "pin" => {
                         if a != "-" {
                             pin = Some(
@@ -1395,6 +1468,23 @@ impl Session<'_> {
                 "pendcost" => {
                     pend_cost.push((parse_u(key)?, parse_u(a)?, parse_f(b)?, parse_f(c)?));
                 }
+                "event" => {
+                    let mut it = b.split('/');
+                    let (ph, kd, bu) = match (it.next(), it.next(), it.next(), it.next()) {
+                        (Some(ph), Some(kd), Some(bu), None) => (ph, kd, bu),
+                        _ => return Err(bad(format!("malformed event cell {b:?}"))),
+                    };
+                    let ev = Event {
+                        rank: rank_of(a)?,
+                        phase: phase_of(ph)?,
+                        kind: EventKind::from_name(kd)
+                            .ok_or_else(|| bad(format!("unknown event kind {kd:?}")))?,
+                        bundle: parse_u(bu)?,
+                        start: parse_f(c)?,
+                        end: parse_f(d)?,
+                    };
+                    event_rows.push((parse_u(key)?, ev));
+                }
                 other => return Err(bad(format!("unknown checkpoint row kind {other:?}"))),
             }
         }
@@ -1427,6 +1517,7 @@ impl Session<'_> {
         check_count("trace points", declared_trace, trace_rows.len())?;
         check_count("retune events", declared_retunes, retune_rows.len())?;
         check_count("pending transfers", declared_pending, pend_head.len())?;
+        check_count("timeline events", declared_events, event_rows.len())?;
         if pend_cost.len() != pend_head.len() {
             return Err(bad("pending transfer rows missing their cost rows".into()));
         }
@@ -1461,6 +1552,17 @@ impl Session<'_> {
         }
         retune_rows.sort_by_key(|(i, _)| *i);
         self.retunes = retune_rows.into_iter().map(|(_, ev)| ev).collect();
+        // The restored log re-enters through `push` (verbatim — the
+        // recorded bundle stamps survive), but only when this session
+        // records at all: a recording-off resume of a recorded
+        // checkpoint stays recording-off.
+        if self.engine.timeline.is_enabled() {
+            event_rows.sort_by_key(|(i, _)| *i);
+            for (_, ev) in event_rows {
+                self.engine.timeline.push(ev);
+            }
+        }
+        self.engine.timeline.set_bundle(bundles);
         self.row_pin = pin;
         self.bundles_run = bundles;
         self.time_to_target = ttt;
@@ -1690,7 +1792,7 @@ mod tests {
         assert!(SessionBuilder::new(&be, &ds, cfg).resume(&trunc).is_err());
         // Future schema.
         let future = dir.join("future.tsv");
-        std::fs::write(&future, "kind\tkey\ta\tb\tc\td\nmeta\tschema\t2\t-\t-\t-\n").unwrap();
+        std::fs::write(&future, "kind\tkey\ta\tb\tc\td\nmeta\tschema\t3\t-\t-\t-\n").unwrap();
         assert!(SessionBuilder::new(&be, &ds, cfg).resume(&future).is_err());
         std::fs::remove_dir_all(dir).unwrap();
     }

@@ -42,6 +42,15 @@ pub struct CriticalPath {
 impl CriticalPath {
     /// Aggregate a recorded timeline.
     pub fn analyze(timeline: &Timeline) -> CriticalPath {
+        Self::analyze_range(timeline, 0, usize::MAX)
+    }
+
+    /// Aggregate only the events stamped with bundles in `lo..=hi` — the
+    /// window primitive behind [`CriticalPath::windowed`]. With
+    /// `lo = 0, hi = usize::MAX` this is event-for-event
+    /// [`CriticalPath::analyze`] (same accumulation order, bit-identical
+    /// sums).
+    pub fn analyze_range(timeline: &Timeline, lo: usize, hi: usize) -> CriticalPath {
         let p = timeline.ranks();
         let n = Phase::all().len();
         let mut cp = CriticalPath {
@@ -52,6 +61,9 @@ impl CriticalPath {
             end: vec![0.0; p],
         };
         for e in timeline.events() {
+            if e.bundle < lo || e.bundle > hi {
+                continue;
+            }
             let pi = phase_index(e.phase);
             match e.kind {
                 EventKind::Compute | EventKind::Transfer => cp.charged[pi][e.rank] += e.dur(),
@@ -66,6 +78,19 @@ impl CriticalPath {
             }
         }
         cp
+    }
+
+    /// Sliding-window aggregation: the last `k` bundles of the log,
+    /// ending at the newest bundle stamp present. This is what
+    /// [`RetunePolicy::BoundAware`](crate::solvers::RetunePolicy) reads —
+    /// the *recent* bound axis — so a run whose regime shifts (or a
+    /// resumed run with a long restored history) retunes on what the
+    /// machine is doing now, not a whole-run average. `k = 0` is treated
+    /// as `k = 1`.
+    pub fn windowed(timeline: &Timeline, k: usize) -> CriticalPath {
+        let hi = timeline.events().iter().map(|e| e.bundle).max().unwrap_or(0);
+        let lo = (hi + 1).saturating_sub(k.max(1));
+        Self::analyze_range(timeline, lo, hi)
     }
 
     /// Ranks tracked.
@@ -161,6 +186,22 @@ impl CriticalPath {
     pub fn rank_hidden(&self, rank: usize) -> f64 {
         self.hidden.iter().map(|per_rank| per_rank[rank]).sum()
     }
+
+    /// Charged seconds of one phase on one rank (the per-rank view the
+    /// windowed-sum property tests and obs summary read).
+    pub fn charged_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.charged[phase_index(phase)][rank]
+    }
+
+    /// Wait seconds of one phase on one rank.
+    pub fn wait_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.wait[phase_index(phase)][rank]
+    }
+
+    /// Hidden seconds of one phase on one rank.
+    pub fn hidden_of(&self, phase: Phase, rank: usize) -> f64 {
+        self.hidden[phase_index(phase)][rank]
+    }
 }
 
 fn phase_index(phase: Phase) -> usize {
@@ -223,6 +264,66 @@ mod tests {
         let cp = CriticalPath::analyze(&tl);
         assert_eq!(cp.bound_by(0), Phase::SstepComm);
         assert_eq!(cp.rows().len(), Phase::all().len());
+    }
+
+    #[test]
+    fn windowed_reads_the_recent_regime_not_the_whole_run() {
+        // Bundles 0..3: latency-dominated comm (all wait). Bundles 4..5:
+        // compute-dominated. The whole-run axis still says Latency; the
+        // 2-bundle window must say Balanced — this divergence is what the
+        // bound-aware retuner reads.
+        let mut tl = Timeline::new(1);
+        for b in 0..4 {
+            tl.set_bundle(b);
+            let t = b as f64 * 10.0;
+            tl.record(0, Phase::SpGemv, EventKind::Compute, t, t + 1.0);
+            tl.record(0, Phase::SstepComm, EventKind::Wait, t + 1.0, t + 8.0);
+            tl.record(0, Phase::SstepComm, EventKind::Transfer, t + 8.0, t + 9.0);
+        }
+        for b in 4..6 {
+            tl.set_bundle(b);
+            let t = 40.0 + (b - 4) as f64 * 10.0;
+            tl.record(0, Phase::SpGemv, EventKind::Compute, t, t + 8.0);
+            tl.record(0, Phase::SstepComm, EventKind::Transfer, t + 8.0, t + 9.0);
+        }
+        let whole = CriticalPath::analyze(&tl);
+        let recent = CriticalPath::windowed(&tl, 2);
+        assert_eq!(whole.bound_axis(0), BoundBy::Latency);
+        assert_eq!(recent.bound_axis(0), BoundBy::Balanced);
+        // The window saw only bundles 4..=5.
+        assert!((recent.charged_of(Phase::SpGemv, 0) - 16.0).abs() < 1e-12);
+        assert_eq!(recent.makespan(), whole.makespan());
+    }
+
+    #[test]
+    fn window_partition_sums_to_the_whole_run() {
+        let mut tl = Timeline::new(2);
+        for b in 0..5 {
+            tl.set_bundle(b);
+            let t = b as f64;
+            tl.record(0, Phase::SpGemv, EventKind::Compute, t, t + 0.25);
+            tl.record(1, Phase::SstepComm, EventKind::Wait, t, t + 0.125);
+            tl.record(1, Phase::SstepComm, EventKind::Hidden, t, t + 0.5);
+        }
+        let whole = CriticalPath::analyze(&tl);
+        // An all-covering range is event-for-event analyze(): bitwise.
+        let all = CriticalPath::analyze_range(&tl, 0, usize::MAX);
+        for ph in Phase::all() {
+            for r in 0..2 {
+                assert_eq!(all.charged_of(ph, r).to_bits(), whole.charged_of(ph, r).to_bits());
+            }
+        }
+        // Disjoint windows tile the run.
+        let lobe = CriticalPath::analyze_range(&tl, 0, 2);
+        let tail = CriticalPath::analyze_range(&tl, 3, usize::MAX);
+        for ph in Phase::all() {
+            for r in 0..2 {
+                let sum = lobe.charged_of(ph, r) + tail.charged_of(ph, r);
+                assert!((sum - whole.charged_of(ph, r)).abs() < 1e-12);
+                let hid = lobe.hidden_of(ph, r) + tail.hidden_of(ph, r);
+                assert!((hid - whole.hidden_of(ph, r)).abs() < 1e-12);
+            }
+        }
     }
 
     #[test]

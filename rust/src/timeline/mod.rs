@@ -124,6 +124,17 @@ impl EventKind {
         }
     }
 
+    /// Parse a table label back into a kind (checkpoint/trace restore).
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        match s {
+            "compute" => Some(EventKind::Compute),
+            "transfer" => Some(EventKind::Transfer),
+            "wait" => Some(EventKind::Wait),
+            "hidden" => Some(EventKind::Hidden),
+            _ => None,
+        }
+    }
+
     /// Whether this kind advances the simulated clock (is charged).
     pub fn is_charged(&self) -> bool {
         !matches!(self, EventKind::Hidden)
@@ -139,6 +150,12 @@ pub struct Event {
     pub phase: Phase,
     /// What the span was spent on.
     pub kind: EventKind,
+    /// Bundle (outer iteration) the span was recorded during — the
+    /// timeline's [`Timeline::set_bundle`] cursor at record time. A span
+    /// settled late (an overlapped collective completed in a later
+    /// bundle) carries the bundle it *settled* in, so the bundles
+    /// partition the log exactly.
+    pub bundle: usize,
     /// Simulated start time (seconds).
     pub start: f64,
     /// Simulated end time (seconds).
@@ -158,17 +175,30 @@ pub struct Timeline {
     p: usize,
     events: Vec<Event>,
     enabled: bool,
+    bundle: usize,
 }
 
 impl Timeline {
     /// New (enabled) timeline over `p` ranks.
     pub fn new(p: usize) -> Timeline {
-        Timeline { p, events: Vec::new(), enabled: true }
+        Timeline { p, events: Vec::new(), enabled: true, bundle: 0 }
     }
 
     /// Ranks tracked.
     pub fn ranks(&self) -> usize {
         self.p
+    }
+
+    /// Set the bundle cursor subsequent [`Timeline::record`] calls stamp
+    /// onto their events. The session loop moves this at the top of each
+    /// `step_bundle`; engine users outside a bundle loop leave it at 0.
+    pub fn set_bundle(&mut self, bundle: usize) {
+        self.bundle = bundle;
+    }
+
+    /// The current bundle cursor.
+    pub fn bundle(&self) -> usize {
+        self.bundle
     }
 
     /// Disable/enable recording (e.g. for very large sweeps where the
@@ -185,7 +215,18 @@ impl Timeline {
     /// Record one span (zero-length spans are dropped).
     pub fn record(&mut self, rank: usize, phase: Phase, kind: EventKind, start: f64, end: f64) {
         if self.enabled && end > start {
-            self.events.push(Event { rank, phase, kind, start, end });
+            self.events.push(Event { rank, phase, kind, bundle: self.bundle, start, end });
+        }
+    }
+
+    /// Re-append a previously recorded span verbatim — the session
+    /// checkpoint restore path, which must preserve the event log (bundle
+    /// stamps included) byte-for-byte. Unlike [`Timeline::record`] this
+    /// ignores the bundle cursor and keeps zero-length spans, trusting
+    /// the caller to replay exactly what a timeline once held.
+    pub fn push(&mut self, event: Event) {
+        if self.enabled {
+            self.events.push(event);
         }
     }
 
@@ -361,6 +402,29 @@ mod tests {
         assert!((tl.events_of(1).next().unwrap().dur() - 2.0).abs() < 1e-15);
         tl.clear();
         assert!(tl.events().is_empty());
+    }
+
+    #[test]
+    fn bundle_cursor_stamps_events_and_push_restores_verbatim() {
+        let mut tl = Timeline::new(1);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 0.0, 1.0);
+        tl.set_bundle(3);
+        assert_eq!(tl.bundle(), 3);
+        tl.record(0, Phase::SpGemv, EventKind::Compute, 1.0, 2.0);
+        assert_eq!(tl.events()[0].bundle, 0);
+        assert_eq!(tl.events()[1].bundle, 3);
+        // push() replays an event verbatim, ignoring the cursor.
+        let e = Event {
+            rank: 0,
+            phase: Phase::SstepComm,
+            kind: EventKind::Wait,
+            bundle: 1,
+            start: 2.0,
+            end: 2.5,
+        };
+        tl.push(e);
+        assert_eq!(tl.events()[2].bundle, 1);
+        assert_eq!(tl.events()[2].kind, EventKind::Wait);
     }
 
     #[test]

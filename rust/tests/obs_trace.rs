@@ -1,0 +1,452 @@
+//! Acceptance suite for the run-telemetry layer (`obs`):
+//!
+//! * tracing is **observation-only** — weights, walls, traces, and
+//!   charged books are bit-identical with two live sinks attached vs
+//!   none, across the overlap × selector × rs_row grid;
+//! * the recorded event log **reconciles with the books** — per
+//!   `(phase, rank)`, span sums equal the `PhaseBook` charged/wait/
+//!   hidden columns to 1e-9 (exactly, in fact) for every simulated
+//!   phase, and disjoint bundle windows tile the whole-run
+//!   `CriticalPath`;
+//! * the exported files agree with the log they were drained from —
+//!   JSONL line-for-span with bit-lossless times, Perfetto one `X`
+//!   event per span and one named track per rank;
+//! * checkpoint schema v2 carries the event log **byte-for-byte**
+//!   (checkpoint → resume → checkpoint reproduces the file, and a
+//!   resumed run finishes with the full-history timeline);
+//! * `RetunePolicy::BoundAware` reads the **sliding window**, not the
+//!   whole-run average: injected ancient history flips the whole-run
+//!   axis but not the recorded retune (regression for ROADMAP item 5).
+
+use hybrid_sgd::collectives::{BoundBy, SelectorSource};
+use hybrid_sgd::comm::OverlapPolicy;
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::HybridConfig;
+use hybrid_sgd::data::synth;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::metrics::{Phase, PhaseBook};
+use hybrid_sgd::obs::{JsonlSink, PerfettoSink, TraceSink};
+use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder, SolverRun};
+use hybrid_sgd::sparse::GramStrategy;
+use hybrid_sgd::timeline::CriticalPath;
+use hybrid_sgd::util::Prng;
+use std::cell::RefCell;
+use std::io::{self, Write};
+use std::rc::Rc;
+
+/// A `Write` the test keeps a handle to after the sink is boxed away
+/// into the session's observer.
+#[derive(Clone, Default)]
+struct ShareBuf(Rc<RefCell<Vec<u8>>>);
+
+impl ShareBuf {
+    fn take_string(&self) -> String {
+        String::from_utf8(self.0.borrow().clone()).expect("sinks emit utf-8")
+    }
+}
+
+impl Write for ShareBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.borrow_mut().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn books_equal(a: &PhaseBook, b: &PhaseBook) -> bool {
+    Phase::all().iter().filter(|ph| ph.in_algorithm_total()).all(|&ph| {
+        a.mean_charged(ph).to_bits() == b.mean_charged(ph).to_bits()
+            && a.mean_wait(ph).to_bits() == b.mean_wait(ph).to_bits()
+            && a.mean_hidden(ph).to_bits() == b.mean_hidden(ph).to_bits()
+    }) && a.words == b.words
+        && a.messages == b.messages
+}
+
+fn runs_equal(a: &SolverRun, b: &SolverRun) -> bool {
+    bits(&a.x) == bits(&b.x)
+        && a.sim_wall.to_bits() == b.sim_wall.to_bits()
+        && a.bundles_run == b.bundles_run
+        && a.time_to_target.map(f64::to_bits) == b.time_to_target.map(f64::to_bits)
+        && a.trace.len() == b.trace.len()
+        && a.trace.iter().zip(&b.trace).all(|(p, q)| p.loss.to_bits() == q.loss.to_bits())
+        && books_equal(&a.book, &b.book)
+}
+
+/// Everything the cost model simulates lands on the timeline; only the
+/// `Metrics` phase (measured host time) is book-only by design.
+fn simulated(ph: Phase) -> bool {
+    ph != Phase::Metrics
+}
+
+/// Tracing on (both exporters live) vs off: bit-identical runs across
+/// the overlap × selector × rs_row grid. Sinks only observe.
+#[test]
+fn prop_tracing_is_observation_only_across_knob_grid() {
+    let mut rng = Prng::new(0x0B5E);
+    let ds = synth::sparse_skewed("obs-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        for selector in [SelectorSource::Analytic, SelectorSource::Measured] {
+            for rs_row in [false, true] {
+                let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 3);
+                let opts = RunOpts {
+                    max_bundles: 5,
+                    eval_every: 2,
+                    overlap,
+                    rs_row,
+                    selector,
+                    gram: GramStrategy::Auto,
+                    ..Default::default()
+                };
+                let plain = SessionBuilder::new(&be, &ds, cfg).opts(opts.clone()).run_to_end();
+                let jsonl = ShareBuf::default();
+                let perfetto = ShareBuf::default();
+                let traced = SessionBuilder::new(&be, &ds, cfg)
+                    .opts(opts)
+                    .trace_sink(Box::new(JsonlSink::new(jsonl.clone())))
+                    .trace_sink(Box::new(PerfettoSink::new(perfetto.clone())))
+                    .run_to_end();
+                assert!(
+                    runs_equal(&plain, &traced),
+                    "tracing moved the run (overlap {overlap:?}, {selector:?}, rs_row {rs_row})"
+                );
+                // And the sinks saw every span exactly once.
+                let lines = jsonl.take_string().lines().count();
+                assert_eq!(lines, traced.timeline.events().len(), "jsonl line per span");
+                let x_events = perfetto.take_string().matches("\"ph\":\"X\"").count();
+                assert_eq!(x_events, traced.timeline.events().len(), "perfetto X per span");
+            }
+        }
+    }
+}
+
+/// The recorded spans reconcile with the phase books: per (phase, rank)
+/// the charged/wait/hidden span sums equal the book columns to 1e-9,
+/// under both charging regimes. Windowed analyses tile the whole run.
+#[test]
+fn span_sums_match_phase_book_and_windows_tile() {
+    let mut rng = Prng::new(0x57A75);
+    let ds = synth::sparse_skewed("sum-toy", 180, 48, 6, 0.8, &mut rng);
+    let be = NativeBackend;
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 8, 3);
+        let run = SessionBuilder::new(&be, &ds, cfg)
+            .overlap(overlap)
+            .max_bundles(6)
+            .eval_every(2)
+            .run_to_end();
+        let p = run.book.ranks();
+        assert!(!run.timeline.events().is_empty(), "recording is on by default");
+        let cp = CriticalPath::analyze(&run.timeline);
+        for ph in Phase::all().into_iter().filter(|&ph| simulated(ph)) {
+            for r in 0..p {
+                let (c, w, h) = (cp.charged_of(ph, r), cp.wait_of(ph, r), cp.hidden_of(ph, r));
+                assert!(
+                    (c - run.book.charged_of(ph, r)).abs() <= 1e-9,
+                    "{overlap:?} {ph:?} rank {r}: spans {c} vs book {}",
+                    run.book.charged_of(ph, r)
+                );
+                assert!((w - run.book.wait_of(ph, r)).abs() <= 1e-9);
+                assert!((h - run.book.hidden_of(ph, r)).abs() <= 1e-9);
+            }
+        }
+        // All-covering window: event-for-event identical to analyze().
+        let hi = run.timeline.events().iter().map(|e| e.bundle).max().unwrap();
+        let all = CriticalPath::windowed(&run.timeline, hi + 1);
+        for ph in Phase::all() {
+            for r in 0..p {
+                assert_eq!(all.charged_of(ph, r).to_bits(), cp.charged_of(ph, r).to_bits());
+            }
+        }
+        // Disjoint 2-bundle windows tile the whole run.
+        for ph in Phase::all() {
+            for r in 0..p {
+                let mut charged = 0.0;
+                let mut hidden = 0.0;
+                let mut lo = 0;
+                while lo <= hi {
+                    let win = CriticalPath::analyze_range(&run.timeline, lo, lo + 1);
+                    charged += win.charged_of(ph, r);
+                    hidden += win.hidden_of(ph, r);
+                    lo += 2;
+                }
+                assert!((charged - cp.charged_of(ph, r)).abs() <= 1e-9, "{ph:?} rank {r}");
+                assert!((hidden - cp.hidden_of(ph, r)).abs() <= 1e-9);
+            }
+        }
+    }
+}
+
+/// The exported JSONL agrees with the log it drained: per (phase, rank)
+/// the file's span durations sum to the book's charged seconds (times
+/// are shortest-roundtrip, so the parse is bit-lossless), and Perfetto
+/// names every rank's track once.
+#[test]
+fn exported_files_reconcile_with_books() {
+    let mut rng = Prng::new(0xF11E5);
+    let ds = synth::sparse_skewed("file-toy", 160, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 6, 2);
+    let jsonl = ShareBuf::default();
+    let perfetto = ShareBuf::default();
+    let run = SessionBuilder::new(&be, &ds, cfg)
+        .max_bundles(5)
+        .trace_sink(Box::new(JsonlSink::new(jsonl.clone())))
+        .trace_sink(Box::new(PerfettoSink::new(perfetto.clone())))
+        .run_to_end();
+    let p = run.book.ranks();
+
+    // Hand-rolled field extraction (the build is offline, no serde).
+    fn field<'a>(line: &'a str, key: &str) -> &'a str {
+        let at = line.find(key).unwrap_or_else(|| panic!("{key} missing in {line}"));
+        let rest = &line[at + key.len()..];
+        let end = rest.find([',', '}']).expect("well-formed span object");
+        rest[..end].trim_matches('"')
+    }
+    // charged[phase][rank] summed from the file, analyzer accumulation
+    // order (file order == event order).
+    let n = Phase::all().len();
+    let mut charged = vec![vec![0.0f64; p]; n];
+    let text = jsonl.take_string();
+    for line in text.lines() {
+        let rank: usize = field(line, "\"rank\":").parse().unwrap();
+        let phase = Phase::from_name(field(line, "\"phase\":")).expect("known phase");
+        let kind = field(line, "\"kind\":");
+        let t0: f64 = field(line, "\"t_start\":").parse().unwrap();
+        let t1: f64 = field(line, "\"t_end\":").parse().unwrap();
+        assert!(t1 >= t0, "spans run forward");
+        let pi = Phase::all().iter().position(|&q| q == phase).unwrap();
+        if kind != "hidden" {
+            charged[pi][rank] += t1 - t0;
+        }
+    }
+    for (pi, ph) in Phase::all().into_iter().enumerate() {
+        if !simulated(ph) {
+            continue;
+        }
+        for r in 0..p {
+            assert!(
+                (charged[pi][r] - run.book.charged_of(ph, r)).abs() <= 1e-9,
+                "{ph:?} rank {r}: file says {}, book says {}",
+                charged[pi][r],
+                run.book.charged_of(ph, r)
+            );
+        }
+    }
+    // Perfetto: wrapper + one named track per rank, span count matches.
+    let pj = perfetto.take_string();
+    assert!(pj.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+    assert!(pj.trim_end().ends_with("]}"));
+    assert_eq!(pj.matches("\"ph\":\"X\"").count(), run.timeline.events().len());
+    for r in 0..p {
+        assert_eq!(
+            pj.matches(&format!("\"args\":{{\"name\":\"rank {r}\"}}")).count(),
+            1,
+            "rank {r} named exactly once"
+        );
+    }
+}
+
+/// Per-bundle traffic deltas: `BundleReport::words_delta` /
+/// `messages_delta` telescope to the final book means.
+#[test]
+fn bundle_traffic_deltas_telescope_to_book_totals() {
+    let mut rng = Prng::new(0xDE17A);
+    let ds = synth::sparse_skewed("delta-toy", 150, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 2);
+    let mut session = SessionBuilder::new(&be, &ds, cfg).max_bundles(6).build();
+    let mut words = 0.0;
+    let mut messages = 0.0;
+    let mut bundles = 0;
+    while let Some(report) = session.step_bundle() {
+        words += report.words_delta;
+        messages += report.messages_delta;
+        bundles += 1;
+        assert!(report.words_delta >= 0.0 && report.messages_delta >= 0.0);
+    }
+    assert_eq!(bundles, 6);
+    let run = session.finish();
+    assert!((words - run.book.mean_words()).abs() <= 1e-9 * (1.0 + words.abs()));
+    assert!((messages - run.book.mean_messages()).abs() <= 1e-9 * (1.0 + messages.abs()));
+    assert!(words > 0.0, "a 2x4 hybrid run moves words");
+}
+
+/// Checkpoint schema v2 carries the event log byte-for-byte: resuming
+/// and immediately re-checkpointing reproduces the file exactly, and a
+/// resumed run ends with the full-history timeline (same span count and
+/// same analyzer verdicts as the uninterrupted run).
+#[test]
+fn checkpoint_roundtrips_the_event_log_byte_for_byte() {
+    let mut rng = Prng::new(0xC4E7);
+    let ds = synth::sparse_skewed("ckpt-obs-toy", 140, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let dir = std::env::temp_dir().join(format!("obs_trace_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        let cfg = HybridConfig::new(Mesh::new(2, 3), 2, 5, 2);
+        let builder = || {
+            SessionBuilder::new(&be, &ds, cfg)
+                .overlap(overlap)
+                .max_bundles(6)
+                .eval_every(2)
+        };
+        let straight = builder().run_to_end();
+
+        let p1 = dir.join(format!("first_{overlap:?}.tsv"));
+        let p2 = dir.join(format!("second_{overlap:?}.tsv"));
+        let mut first = builder().build();
+        for _ in 0..3 {
+            let _ = first.step_bundle();
+        }
+        first.checkpoint(&p1).unwrap();
+        assert!(!first.timeline().events().is_empty());
+        drop(first);
+
+        let mut resumed = builder().resume(&p1).unwrap();
+        resumed.checkpoint(&p2).unwrap();
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert!(b1 == b2, "{overlap:?}: resume must restore the checkpoint byte-for-byte");
+        assert!(
+            String::from_utf8_lossy(&b1).lines().any(|l| l.starts_with("event\t")),
+            "schema v2 checkpoints carry event rows"
+        );
+
+        while !resumed.is_done() {
+            let _ = resumed.step_bundle();
+        }
+        let resumed = resumed.finish();
+        assert_eq!(
+            resumed.timeline.events().len(),
+            straight.timeline.events().len(),
+            "{overlap:?}: resumed run keeps the whole history"
+        );
+        let a = CriticalPath::analyze(&straight.timeline);
+        let b = CriticalPath::analyze(&resumed.timeline);
+        for ph in Phase::all() {
+            for r in 0..straight.book.ranks() {
+                assert_eq!(
+                    a.charged_of(ph, r).to_bits(),
+                    b.charged_of(ph, r).to_bits(),
+                    "{overlap:?} {ph:?} rank {r}: restored spans are bit-identical"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// The bound-aware regression: doctor a checkpoint with overwhelming
+/// ancient history (latency-heavy spans stamped at old bundles, plus
+/// dominant compute spans inside the upcoming window), resume, and let
+/// the cadence fire. A whole-run reader would report Latency; the
+/// sliding window must report the recent (compute-bound ⇒ Balanced)
+/// regime — which is exactly what the recorded retune carries.
+#[test]
+fn bound_aware_retune_reads_the_window_not_the_whole_run() {
+    let mut rng = Prng::new(0xB0B);
+    let ds = synth::sparse_skewed("window-toy", 160, 48, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 2);
+    let dir = std::env::temp_dir().join(format!("obs_trace_retune_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("doctored.tsv");
+
+    let builder = || {
+        SessionBuilder::new(&be, &ds, cfg)
+            .max_bundles(4)
+            .retune(RetunePolicy::BoundAware { every: 2 })
+    };
+    let mut session = builder().build();
+    for _ in 0..2 {
+        let _ = session.step_bundle();
+    }
+    assert_eq!(session.retunes().len(), 1, "first check fires at bundle 2");
+    session.checkpoint(&path).unwrap();
+    drop(session);
+
+    // Doctor the checkpoint: 1e9 s of sstep-comm wait stamped at bundles
+    // 0-1 (ancient history) and 1e7 s of spgemv compute stamped at
+    // bundles 2-3 (the window the next check will read).
+    let text = std::fs::read_to_string(&path).unwrap();
+    let declared: usize = text
+        .lines()
+        .find_map(|l| l.strip_prefix("meta\tevents\t"))
+        .and_then(|rest| rest.split('\t').next())
+        .expect("v2 checkpoints declare an event count")
+        .parse()
+        .unwrap();
+    let mut doctored = text.replace(
+        &format!("meta\tevents\t{declared}\t-\t-\t-"),
+        &format!("meta\tevents\t{}\t-\t-\t-", declared + 4),
+    );
+    for (j, (cell, end)) in [
+        ("sstep_comm/wait/0", "1000000000"),
+        ("sstep_comm/wait/1", "1000000000"),
+        ("spgemv/compute/2", "10000000"),
+        ("spgemv/compute/3", "10000000"),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        doctored.push_str(&format!("event\t{}\t0\t{cell}\t0\t{end}\n", declared + j));
+    }
+    std::fs::write(&path, doctored).unwrap();
+
+    let mut tuned = builder().resume(&path).unwrap();
+    while !tuned.is_done() {
+        let _ = tuned.step_bundle();
+    }
+    assert_eq!(tuned.retunes().len(), 2, "second check fires at bundle 4");
+    let recorded = tuned.retunes()[1];
+    let run = tuned.finish();
+
+    let whole = CriticalPath::analyze(&run.timeline);
+    let whole_axis = whole.bound_axis(whole.makespan_rank());
+    assert_eq!(whole_axis, BoundBy::Latency, "the injected history dominates a whole-run read");
+    let win = CriticalPath::windowed(&run.timeline, 2);
+    let win_axis = win.bound_axis(win.makespan_rank());
+    assert_eq!(win_axis, BoundBy::Balanced, "the window is compute-bound by construction");
+    assert_eq!(
+        recorded.axis, win_axis,
+        "the retuner must report the windowed axis, not the whole-run one"
+    );
+    assert_ne!(recorded.axis, whole_axis, "regression: retuner no longer reads the whole run");
+
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+/// A sink that fails mid-run only disables export — the run itself is
+/// unaffected and bit-identical to the untraced one.
+#[test]
+fn failing_sink_never_fails_the_run() {
+    struct ExplodingSink {
+        left: usize,
+    }
+    impl TraceSink for ExplodingSink {
+        fn span(&mut self, _: &hybrid_sgd::timeline::Event) -> io::Result<()> {
+            if self.left == 0 {
+                return Err(io::Error::other("disk full"));
+            }
+            self.left -= 1;
+            Ok(())
+        }
+    }
+    let mut rng = Prng::new(0xFA11);
+    let ds = synth::sparse_skewed("fail-toy", 120, 36, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 5, 2);
+    let plain = SessionBuilder::new(&be, &ds, cfg).max_bundles(4).run_to_end();
+    let traced = SessionBuilder::new(&be, &ds, cfg)
+        .max_bundles(4)
+        .trace_sink(Box::new(ExplodingSink { left: 3 }))
+        .run_to_end();
+    assert!(runs_equal(&plain, &traced), "a dying sink must not move the run");
+}

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Validate a hybrid-sgd trace file (CI gate for the examples job).
+
+Usage:
+    check_trace.py jsonl    FILE [--min-spans N]
+    check_trace.py perfetto FILE [--min-spans N] [--min-ranks N]
+
+jsonl: every line is a standalone JSON object carrying the span fields
+(rank, phase, kind, bundle, t_start, t_end) with t_end >= t_start.
+
+perfetto: the file parses as Chrome trace_event JSON ("JSON Array
+Format" with a traceEvents wrapper), every event is a complete-duration
+"X" span or an "M" metadata record, spans carry ts/dur/pid/tid, and each
+rank that appears as a tid owns a thread_name metadata record — the
+"one track per rank" contract the viewer renders from.
+
+Exit 0 on a valid trace, 1 with a diagnostic on the first violation.
+"""
+
+import json
+import sys
+
+SPAN_KEYS = {"rank", "phase", "kind", "bundle", "t_start", "t_end"}
+KINDS = {"compute", "transfer", "wait", "hidden"}
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_jsonl(path, min_spans):
+    n = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{lineno}: not a JSON object ({e})")
+            missing = SPAN_KEYS - obj.keys()
+            if missing:
+                fail(f"{path}:{lineno}: span missing keys {sorted(missing)}")
+            if obj["kind"] not in KINDS:
+                fail(f"{path}:{lineno}: unknown kind {obj['kind']!r}")
+            if not isinstance(obj["rank"], int) or obj["rank"] < 0:
+                fail(f"{path}:{lineno}: bad rank {obj['rank']!r}")
+            if not isinstance(obj["bundle"], int) or obj["bundle"] < 0:
+                fail(f"{path}:{lineno}: bad bundle {obj['bundle']!r}")
+            if obj["t_end"] < obj["t_start"]:
+                fail(f"{path}:{lineno}: span ends before it starts")
+            n += 1
+    if n < min_spans:
+        fail(f"{path}: {n} spans, expected at least {min_spans}")
+    print(f"check_trace: OK: {path}: {n} jsonl spans")
+
+
+def check_perfetto(path, min_spans, min_ranks):
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not valid JSON ({e})")
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: missing the traceEvents wrapper")
+    spans = 0
+    span_tids = set()
+    named_tids = set()
+    for i, ev in enumerate(doc["traceEvents"]):
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                named_tids.add(ev.get("tid"))
+            continue
+        if ph != "X":
+            fail(f"{path}: event {i}: unexpected ph {ph!r} (want X or M)")
+        for key in ("ts", "dur", "pid", "tid", "name"):
+            if key not in ev:
+                fail(f"{path}: event {i}: X span missing {key!r}")
+        if ev["dur"] < 0:
+            fail(f"{path}: event {i}: negative duration")
+        if ev.get("cat") not in KINDS:
+            fail(f"{path}: event {i}: unknown cat {ev.get('cat')!r}")
+        spans += 1
+        span_tids.add(ev["tid"])
+    unnamed = span_tids - named_tids
+    if unnamed:
+        fail(f"{path}: ranks {sorted(unnamed)} have spans but no thread_name track")
+    if spans < min_spans:
+        fail(f"{path}: {spans} spans, expected at least {min_spans}")
+    if len(span_tids) < min_ranks:
+        fail(f"{path}: {len(span_tids)} rank tracks, expected at least {min_ranks}")
+    print(f"check_trace: OK: {path}: {spans} spans across {len(span_tids)} rank tracks")
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    fmt, path = argv[1], argv[2]
+    opts = {}
+    rest = argv[3:]
+    while rest:
+        flag = rest.pop(0)
+        if flag in ("--min-spans", "--min-ranks") and rest:
+            opts[flag.lstrip("-").replace("-", "_")] = int(rest.pop(0))
+        else:
+            print(f"check_trace: unknown argument {flag!r}", file=sys.stderr)
+            return 2
+    if fmt == "jsonl":
+        check_jsonl(path, opts.get("min_spans", 1))
+    elif fmt == "perfetto":
+        check_perfetto(path, opts.get("min_spans", 1), opts.get("min_ranks", 1))
+    else:
+        print(f"check_trace: unknown format {fmt!r} (want jsonl|perfetto)", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -17,13 +17,29 @@ Each input file is one bench target's captured stdout (named
   zbar=64"``), so per-kernel medians (the ablation_hotpath old-vs-new
   rows) land in the perf trajectory as absolute numbers, not only ratios;
 * the ``== ... ==`` section headers, kept as ``sections`` for a cheap
-  smoke check that a bench kept printing what it used to.
+  smoke check that a bench kept printing what it used to;
+* ``summary``-prefixed TSV rows (the ``obs::summary`` run report some
+  benches print: ``summary <kind> <key> <a> <b> <c> <d>``) — folded into
+  a ``summary`` dict so per-phase charged/wait/hidden seconds, traffic,
+  and the retune history ride the trajectory next to the kernel medians.
 
 Output schema (one object per bench)::
 
     { "<bench>": { "wall_s": 12.3, "speedups": [1.87, ...],
                    "kernels_ns": {"gram gathered | q=128 zbar=64": 812.0},
-                   "sections": ["Table 8 - ...", ...], "lines": 120 } }
+                   "sections": ["Table 8 - ...", ...], "lines": 120,
+                   "summary": { "schema": 1, "sim_wall": 0.42,
+                                "phases": {"spgemv": {"charged": ..,
+                                           "wait": .., "hidden": ..,
+                                           "max_charged": ..}},
+                                "traffic": {"words": .., "messages": ..},
+                                "retunes": [{"bundle": 3, "axis": "latency",
+                                             "algo": "rd", "switched": 1}],
+                                "pin": "rd" } }
+
+A bench that prints several summary blocks keeps the last one (the
+blocks are per-run; the last run is the bench's headline configuration).
+Benches with no summary rows simply omit the key.
 
 The script is deliberately tolerant: a bench that prints nothing
 recognizable still lands in the JSON (with nulls) so the CI artifact
@@ -55,12 +71,56 @@ def kernel_row(line: str):
     return None
 
 
+def fnum(cell: str):
+    """Float if the cell parses, else the cell verbatim (``-`` stays)."""
+    try:
+        return float(cell)
+    except ValueError:
+        return cell
+
+
+def fold_summary(rows: list) -> dict:
+    """Fold ``summary`` TSV rows (kind key a b c d) into one dict."""
+    out = {"phases": {}, "retunes": []}
+    for kind, key, a, b, c, d in rows:
+        if kind == "meta":
+            out[key] = fnum(a)
+        elif kind == "phase":
+            out["phases"][key] = {
+                "charged": fnum(a),
+                "wait": fnum(b),
+                "hidden": fnum(c),
+                "max_charged": fnum(d),
+            }
+        elif kind == "traffic":
+            out["traffic"] = {"words": fnum(a), "messages": fnum(b)}
+        elif kind == "total":
+            out[f"total_{key}"] = fnum(a)
+        elif kind == "retune":
+            out["retunes"].append(
+                {"bundle": fnum(a), "axis": b, "algo": c, "switched": fnum(d)}
+            )
+        elif kind == "pin":
+            out["pin"] = a
+    return out
+
+
 def collect(text: str) -> dict:
     wall = None
     speedups = []
     sections = []
     kernels = {}
+    summary_rows = []
     for line in text.splitlines():
+        if line.startswith("summary\t"):
+            cells = line.split("\t")[1:]
+            if len(cells) == 6:
+                # Every block opens with its `meta schema` row; a new
+                # opener replaces the previous block (last run wins).
+                if cells[0] == "meta" and cells[1] == "schema":
+                    summary_rows = []
+                summary_rows.append(cells)
+            continue
         m = WALL_RE.search(line)
         if m:
             wall = float(m.group(1))
@@ -73,13 +133,16 @@ def collect(text: str) -> dict:
         if row is not None:
             key, ns = row
             kernels[key] = ns
-    return {
+    result = {
         "wall_s": wall,
         "speedups": speedups,
         "kernels_ns": kernels,
         "sections": sections,
         "lines": len(text.splitlines()),
     }
+    if summary_rows:
+        result["summary"] = fold_summary(summary_rows)
+    return result
 
 
 def main() -> int:
