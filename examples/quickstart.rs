@@ -12,17 +12,32 @@
 //! stream every span to `quickstart_trace.jsonl` (line-oriented, for
 //! scripts) and `quickstart_trace.json` (Chrome `trace_event` — open it
 //! in `chrome://tracing` or <https://ui.perfetto.dev>, one track per
-//! rank), and the run ends with the versioned `obs::summary` TSV block.
+//! rank), a metrics sink keeps `quickstart_metrics.prom` — an
+//! OpenMetrics scrape file with the live loss, health verdict, per-phase
+//! model-drift gauges, and overlap efficiency — current at every bundle
+//! boundary, and the run ends with the versioned `obs::summary` TSV
+//! block.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! cargo run --release --example quickstart -- quick   # CI smoke scale
 //! ```
+//!
+//! The same scrape file comes out of the CLI with `train --metrics-out`;
+//! point a Prometheus at it with the node-exporter textfile pattern:
+//!
+//! ```bash
+//! cargo run --release -- train --dataset url --p 16 \
+//!     --metrics-out /var/lib/node_exporter/textfile/hybridsgd.prom
+//! # prometheus.yml: the node_exporter textfile collector re-reads the
+//! # file each scrape, so `hybridsgd_loss`, `hybridsgd_health`, and the
+//! # `hybridsgd_model_drift{series=...}` gauges chart live in Grafana.
+//! ```
 
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::{topology, CalibProfile, HybridConfig};
 use hybrid_sgd::data::DatasetSpec;
-use hybrid_sgd::obs::{JsonlSink, PerfettoSink, RunSummary};
+use hybrid_sgd::obs::{JsonlSink, PerfettoSink, PrometheusSink, RunSummary};
 use hybrid_sgd::partition::stats::{select_two_objective, L_CAP_BYTES};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{SessionBuilder, SolverKind};
@@ -95,6 +110,13 @@ fn main() {
         Ok(sink) => builder = builder.trace_sink(Box::new(sink)),
         Err(e) => println!("(perfetto trace unavailable: {e})"),
     }
+    // Metrics: a live OpenMetrics scrape file, rewritten at every bundle
+    // boundary (loss, health verdict, per-phase model drift, overlap
+    // efficiency). Observation-only, like the traces.
+    match PrometheusSink::create("quickstart_metrics.prom") {
+        Ok(sink) => builder = builder.metrics_sink(Box::new(sink)),
+        Err(e) => println!("(metrics export unavailable: {e})"),
+    }
     let mut hybrid = builder.build();
     println!("\nloss curve (bundle, simulated s, loss):");
     while !hybrid.is_done() {
@@ -118,10 +140,18 @@ fn main() {
     if let Some(t) = run.time_to_target {
         println!("time-to-target 0.55: {t:.4} simulated s");
     }
+    println!("health: {}", run.health.name());
+    for d in run.drift.iter().filter(|d| d.flagged) {
+        println!(
+            "model drift flagged: {} (ewma relative error {:.3})",
+            d.key.name(),
+            d.ewma
+        );
+    }
     println!(
         "\ntraces written: quickstart_trace.jsonl (one JSON object per span) and \
          quickstart_trace.json (open in chrome://tracing or ui.perfetto.dev — \
-         one track per rank)"
+         one track per rank); metrics in quickstart_metrics.prom (OpenMetrics)"
     );
     println!("\nrun summary (obs::summary schema, kind key a b c d):");
     print!("{}", RunSummary::from_run(&run).render());

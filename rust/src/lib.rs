@@ -37,11 +37,14 @@
 //! * **[`obs`]** — the observability layer over the timeline: streaming
 //!   trace export ([`obs::TraceSink`]) to JSONL and Chrome/Perfetto
 //!   `trace_event` files (one track per rank in `chrome://tracing`), the
-//!   versioned end-of-run summary TSV (`obs::summary`), and — with
-//!   [`timeline::CriticalPath::windowed`] — the sliding-window
+//!   versioned end-of-run summary TSV (`obs::summary`), the per-bundle
+//!   health/fidelity metrics layer (`obs::metrics` + `obs::health`:
+//!   typed metric registry, convergence verdicts, predicted-vs-charged
+//!   drift gauges, OpenMetrics export via `train --metrics-out`), and —
+//!   with [`timeline::CriticalPath::windowed`] — the sliding-window
 //!   critical-path analytics the bound-aware retuner reads. Export is
 //!   observation-only: trajectories and charged books are bit-identical
-//!   with tracing on or off.
+//!   with tracing or metrics on or off.
 //! * **[`costmodel`]** — the closed-form α-β-γ model (Eq. 4), the optima
 //!   `s*`/`b*` (Eq. 5/6), the topology rule (Eq. 7), the regime taxonomy
 //!   (Table 5) and every empirical refinement of §6.5 (cache-aware γ(W),

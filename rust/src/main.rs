@@ -9,9 +9,10 @@
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
 //!                       [--selector analytic|measured] [--gram merge|scatter|auto]
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
-//!                       [--retune off|bound-aware] [--retune-every K]
+//!                       [--retune off|bound-aware|drift-gated] [--retune-every K]
 //!                       [--checkpoint FILE.tsv] [--resume FILE.tsv]
 //!                       [--trace-out FILE] [--trace-format jsonl|perfetto]
+//!                       [--metrics-out FILE.prom] [--metrics-series FILE.tsv]
 //!                       [--summary FILE.tsv]
 //! hybrid-sgd predict    --dataset url --p 256      # cost-model selection
 //! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
@@ -28,7 +29,7 @@ use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, Hybr
 use hybrid_sgd::data::DatasetSpec;
 use hybrid_sgd::experiments::{self, Effort};
 use hybrid_sgd::mesh::Mesh;
-use hybrid_sgd::obs::{self, RunSummary, TraceFormat};
+use hybrid_sgd::obs::{self, MetricsTsvSink, PrometheusSink, RunSummary, TraceFormat};
 use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
@@ -95,12 +96,17 @@ fn usage() {
          --gram merge|scatter|auto (bundle Gram kernel; auto resolves per block\n  \
            from measured row density — wall time only, never values)\n  \
          --rs-row (what-if reduce-scatter row books)  --profile FILE.tsv\n  \
-         --retune off|bound-aware [--retune-every K] (re-pin the row collective\n  \
-           from the live critical path every K bundles; books only, never values)\n  \
+         --retune off|bound-aware|drift-gated [--retune-every K] (re-pin the row\n  \
+           collective from the live critical path every K bundles; drift-gated\n  \
+           only fires while the fidelity monitor flags row-reduce drift;\n  \
+           books only, never values)\n  \
          --checkpoint FILE.tsv (save the session at the end of the run)\n  \
          --resume FILE.tsv (continue a saved session; config must match)\n  \
          --trace-out FILE (stream the span trace; --trace-format jsonl|perfetto,\n  \
            perfetto files load in chrome://tracing / ui.perfetto.dev)\n  \
+         --metrics-out FILE.prom (live OpenMetrics scrape file: loss, health,\n  \
+           per-phase model drift, overlap efficiency; rewritten every bundle)\n  \
+         --metrics-series FILE.tsv (append the same samples as a TSV time-series)\n  \
          --summary FILE.tsv (write the versioned obs::summary run report)\n  \
          calibrate --collectives (also fit per-algorithm curves into --save)"
     );
@@ -406,8 +412,9 @@ fn cmd_train(flags: &Flags) -> i32 {
     let retune = match flags.get("retune").map(|s| s.as_str()) {
         None | Some("off") => RetunePolicy::Off,
         Some("bound-aware") => RetunePolicy::BoundAware { every: get(flags, "retune-every", 5) },
+        Some("drift-gated") => RetunePolicy::DriftGated { every: get(flags, "retune-every", 5) },
         Some(other) => {
-            eprintln!("unknown --retune {other} (want off|bound-aware)");
+            eprintln!("unknown --retune {other} (want off|bound-aware|drift-gated)");
             return 2;
         }
     };
@@ -454,6 +461,22 @@ fn cmd_train(flags: &Flags) -> i32 {
         }
     } else if flags.contains_key("trace-format") {
         eprintln!("--trace-format without --trace-out does nothing");
+    }
+    if let Some(path) = flags.get("metrics-out") {
+        match PrometheusSink::create(path) {
+            Ok(sink) => {
+                builder = builder.metrics_sink(Box::new(sink));
+                println!("metrics scrape file at {path} (OpenMetrics, rewritten every bundle)");
+            }
+            Err(e) => {
+                eprintln!("failed to open metrics file {path}: {e}");
+                return 2;
+            }
+        }
+    }
+    if let Some(path) = flags.get("metrics-series") {
+        builder = builder.metrics_sink(Box::new(MetricsTsvSink::create(path)));
+        println!("metrics time-series at {path} (TSV, one row per sample per bundle)");
     }
     let mut session = match flags.get("resume") {
         Some(path) => match builder.resume(path) {
@@ -518,6 +541,20 @@ fn cmd_train(flags: &Flags) -> i32 {
     }
     if let Some(t) = run.time_to_target {
         println!("time-to-target: {t:.4} s (simulated)");
+    }
+    println!("health: {}", run.health.name());
+    let flagged: Vec<String> = run
+        .drift
+        .iter()
+        .filter(|d| d.flagged)
+        .map(|d| format!("{} (ewma {:.3})", d.key.name(), d.ewma))
+        .collect();
+    if !flagged.is_empty() {
+        println!(
+            "model drift above threshold: {} — the analytic prediction disagrees \
+             with the charged books for this config",
+            flagged.join(", ")
+        );
     }
     if let Some(path) = flags.get("summary") {
         match RunSummary::from_run(&run).to_tsv(path) {

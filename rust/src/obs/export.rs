@@ -182,6 +182,21 @@ impl<W: Write> TraceSink for PerfettoSink<W> {
         ))
     }
 
+    /// Counter (`"ph":"C"`) events: the viewer renders one counter track
+    /// per name above the rank span tracks — loss, drift, and overlap
+    /// efficiency plotted against the same simulated-µs axis the spans
+    /// use. Counters belong to the process, not a rank, so `tid` is 0.
+    fn counter(&mut self, name: &str, ts: f64, value: f64) -> io::Result<()> {
+        self.start()?;
+        self.raw(format!(
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"ts\":{},\"pid\":0,\"tid\":0,\
+             \"args\":{{\"value\":{}}}}}",
+            escape_json(name),
+            json_num(ts * 1e6),
+            json_num(value),
+        ))
+    }
+
     fn finish(&mut self) -> io::Result<()> {
         if self.closed {
             return Ok(());
@@ -191,6 +206,12 @@ impl<W: Write> TraceSink for PerfettoSink<W> {
         writeln!(self.out, "\n]}}")?;
         self.out.flush()
     }
+}
+
+/// Minimal JSON string escaping for counter names (phase names and the
+/// fixed series labels are ASCII, but the trait takes arbitrary `&str`).
+fn escape_json(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// JSON-safe float formatting: Rust's shortest-roundtrip `Display` is
@@ -250,6 +271,34 @@ mod tests {
         assert!(text.contains("\"ts\":1000000,\"dur\":2000000"));
         // Tracks keyed by rank.
         assert!(text.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn perfetto_counters_ride_the_same_stream() {
+        let mut buf = Vec::new();
+        {
+            let mut s = PerfettoSink::new(&mut buf);
+            s.span(&ev(0, 0, 0.0, 1.0)).unwrap();
+            s.counter("loss", 1.0, 0.693).unwrap();
+            s.counter("drift:sstep_comm", 1.0, 0.01).unwrap();
+            s.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        assert_eq!(text.matches("\"ph\":\"C\"").count(), 2);
+        // Counter ts shares the spans' microsecond axis; value in args.
+        assert!(text.contains(
+            "{\"name\":\"loss\",\"ph\":\"C\",\"ts\":1000000,\"pid\":0,\"tid\":0,\
+             \"args\":{\"value\":0.693}}"
+        ));
+        assert!(text.contains("\"name\":\"drift:sstep_comm\""));
+        // The JSONL sink drops counters via the trait default.
+        let mut jbuf = Vec::new();
+        {
+            let mut s = JsonlSink::new(&mut jbuf);
+            s.counter("loss", 1.0, 0.5).unwrap();
+            s.finish().unwrap();
+        }
+        assert!(jbuf.is_empty());
     }
 
     #[test]

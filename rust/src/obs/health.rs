@@ -1,0 +1,466 @@
+//! Run-health producers: convergence diagnostics and model-fidelity drift.
+//!
+//! Two small, allocation-light monitors that the [`Session`] drives at
+//! every bundle boundary (they are *core* session state, not observers,
+//! so their verdicts are identical whether or not any metrics sink is
+//! attached):
+//!
+//! * [`HealthMonitor`] — "is the optimization converging?" It watches the
+//!   bundle update norm and the eval-cadence loss sequence, guards
+//!   against NaN/Inf, detects divergence (loss blowing up past its best
+//!   by [`HealthOpts::diverge_ratio`]) and plateaus (a full
+//!   [`HealthOpts::plateau_window`] of evals with relative improvement
+//!   below [`HealthOpts::plateau_tol`]), and folds these into a single
+//!   [`HealthStatus`] surfaced in `BundleReport` and `SolverRun`.
+//!
+//! * [`FidelityMonitor`] — "is the cost model honest?" The paper
+//!   validates its performance model offline (the fig. 4 experiment);
+//!   this turns that into a continuously-running check. At each bundle
+//!   the session evaluates the analytic prediction for the *current*
+//!   (s, b, mesh, algo, overlap) configuration and reports the relative
+//!   error between predicted and charged seconds per phase (plus words
+//!   and messages) here; the monitor keeps an EWMA per series and flags
+//!   any that exceed [`HealthOpts::drift_threshold`], so
+//!   `RetunePolicy::DriftGated` can consult it mid-run.
+//!
+//! Both monitors are deterministic functions of the observed sequence —
+//! no clocks, no I/O — and neither feeds back into the trajectory.
+//!
+//! [`Session`]: crate::solvers::Session
+
+use crate::metrics::Phase;
+
+// ---------------------------------------------------------------------------
+// Health status
+// ---------------------------------------------------------------------------
+
+/// Convergence verdict for a run, coarsest-first.
+///
+/// The ordering is a severity lattice: once a run is `Diverged` it stays
+/// `Diverged` (NaN coefficients don't heal), while `Stalled` and
+/// `Healthy` can alternate as the loss curve flattens and recovers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthStatus {
+    /// Not enough observations yet (no eval point seen).
+    Initializing,
+    /// Loss is finite and improving (or at least not flagged).
+    Healthy,
+    /// A full plateau window of evals improved less than the tolerance.
+    Stalled,
+    /// NaN/Inf appeared, or loss blew up past `diverge_ratio` × best.
+    /// Sticky: never downgraded.
+    Diverged,
+}
+
+impl HealthStatus {
+    /// Stable lower-case name used in summaries, metrics labels and TSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthStatus::Initializing => "initializing",
+            HealthStatus::Healthy => "healthy",
+            HealthStatus::Stalled => "stalled",
+            HealthStatus::Diverged => "diverged",
+        }
+    }
+
+    /// Inverse of [`HealthStatus::name`], for tooling that reads TSVs back.
+    pub fn from_name(s: &str) -> Option<HealthStatus> {
+        match s {
+            "initializing" => Some(HealthStatus::Initializing),
+            "healthy" => Some(HealthStatus::Healthy),
+            "stalled" => Some(HealthStatus::Stalled),
+            "diverged" => Some(HealthStatus::Diverged),
+            _ => None,
+        }
+    }
+
+    /// All states, in severity order — the metrics layer exports one
+    /// one-hot gauge series per state.
+    pub fn all() -> [HealthStatus; 4] {
+        [
+            HealthStatus::Initializing,
+            HealthStatus::Healthy,
+            HealthStatus::Stalled,
+            HealthStatus::Diverged,
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared knobs
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs shared by both monitors (builder knob:
+/// `SessionBuilder::health_opts`).
+#[derive(Clone, Copy, Debug)]
+pub struct HealthOpts {
+    /// Number of consecutive eval points a plateau must span.
+    pub plateau_window: usize,
+    /// Relative improvement across the window below which the run is
+    /// `Stalled`.
+    pub plateau_tol: f64,
+    /// Loss exceeding `diverge_ratio × best_loss_so_far` marks the run
+    /// `Diverged` even while every value is still finite.
+    pub diverge_ratio: f64,
+    /// EWMA smoothing factor for the drift gauges (weight of the newest
+    /// observation).
+    pub drift_lambda: f64,
+    /// EWMA relative error above which a drift series is flagged.
+    pub drift_threshold: f64,
+}
+
+impl Default for HealthOpts {
+    fn default() -> Self {
+        HealthOpts {
+            plateau_window: 5,
+            plateau_tol: 1e-3,
+            diverge_ratio: 2.0,
+            drift_lambda: 0.2,
+            drift_threshold: 0.25,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Convergence health
+// ---------------------------------------------------------------------------
+
+/// Streaming convergence detector. See the module docs for the rules.
+#[derive(Clone, Debug)]
+pub struct HealthMonitor {
+    opts: HealthOpts,
+    status: HealthStatus,
+    /// Best (lowest) finite loss seen so far.
+    best: f64,
+    /// Last `plateau_window` losses, oldest first.
+    window: Vec<f64>,
+    last_loss: Option<f64>,
+}
+
+impl HealthMonitor {
+    pub fn new(opts: HealthOpts) -> Self {
+        HealthMonitor {
+            opts,
+            status: HealthStatus::Initializing,
+            best: f64::INFINITY,
+            window: Vec::with_capacity(opts.plateau_window),
+            last_loss: None,
+        }
+    }
+
+    /// Current verdict.
+    pub fn status(&self) -> HealthStatus {
+        self.status
+    }
+
+    /// Loss at the most recent eval point, if any.
+    pub fn last_loss(&self) -> Option<f64> {
+        self.last_loss
+    }
+
+    fn diverge(&mut self) {
+        self.status = HealthStatus::Diverged;
+    }
+
+    /// Feed the per-bundle update norm (‖η/b · z‖ over all ranks). A
+    /// non-finite norm means the coefficients are already poisoned.
+    pub fn observe_update(&mut self, norm: f64) {
+        if !norm.is_finite() {
+            self.diverge();
+        }
+    }
+
+    /// Feed an eval-point loss. Returns the delta versus the *previous*
+    /// eval (`None` on the first one) — this is what `BundleReport`
+    /// surfaces, so bundles between evals report `None` rather than a
+    /// stale delta.
+    pub fn observe_loss(&mut self, loss: f64) -> Option<f64> {
+        let delta = self.last_loss.map(|prev| loss - prev);
+        self.last_loss = Some(loss);
+        if self.status == HealthStatus::Diverged {
+            return delta;
+        }
+        if !loss.is_finite() {
+            self.diverge();
+            return delta;
+        }
+        if loss < self.best {
+            self.best = loss;
+        }
+        if self.best.is_finite() && loss > self.opts.diverge_ratio * self.best.max(f64::MIN_POSITIVE)
+        {
+            self.diverge();
+            return delta;
+        }
+        if self.window.len() == self.opts.plateau_window {
+            self.window.remove(0);
+        }
+        self.window.push(loss);
+        if self.window.len() == self.opts.plateau_window && self.opts.plateau_window > 1 {
+            let first = self.window[0];
+            let last = *self.window.last().unwrap();
+            let rel = (first - last) / first.abs().max(f64::MIN_POSITIVE);
+            self.status = if rel < self.opts.plateau_tol {
+                HealthStatus::Stalled
+            } else {
+                HealthStatus::Healthy
+            };
+        } else {
+            self.status = HealthStatus::Healthy;
+        }
+        delta
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model fidelity
+// ---------------------------------------------------------------------------
+
+/// What a drift series tracks: a charged phase, or the traffic books.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftKey {
+    /// Predicted-vs-charged seconds for one phase.
+    Phase(Phase),
+    /// Predicted-vs-booked collective payload words (mean per rank).
+    Words,
+    /// Predicted-vs-booked collective message count (mean per rank).
+    Messages,
+}
+
+impl DriftKey {
+    /// Stable name used in summary rows and metrics labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DriftKey::Phase(p) => p.name(),
+            DriftKey::Words => "words",
+            DriftKey::Messages => "messages",
+        }
+    }
+}
+
+/// One drift gauge reading, as surfaced in `BundleReport::drift` and
+/// `SolverRun::drift`.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftEntry {
+    pub key: DriftKey,
+    /// EWMA of the relative error |charged − predicted| / max(|·|).
+    pub ewma: f64,
+    /// Most recent raw relative error.
+    pub last: f64,
+    /// `ewma > drift_threshold` — the model is lying about this series.
+    pub flagged: bool,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct DriftGauge {
+    ewma: f64,
+    last: f64,
+    seen: bool,
+}
+
+impl DriftGauge {
+    fn observe(&mut self, lambda: f64, err: f64) {
+        self.last = err;
+        self.ewma = if self.seen { lambda * err + (1.0 - lambda) * self.ewma } else { err };
+        self.seen = true;
+    }
+}
+
+/// Relative error between a predicted and an observed quantity.
+///
+/// Symmetric denominator (`max(|pred|, |actual|)`) so a model that
+/// predicts 0 for a phase that actually charges is flagged at 1.0 rather
+/// than ∞; two effectively-zero quantities agree exactly.
+pub fn rel_err(predicted: f64, actual: f64) -> f64 {
+    let scale = predicted.abs().max(actual.abs());
+    if scale < 1e-300 {
+        0.0
+    } else {
+        (actual - predicted).abs() / scale
+    }
+}
+
+/// Streaming predicted-vs-charged drift tracker. The session feeds it
+/// `(predicted, actual)` pairs; it keeps one EWMA gauge per algorithm
+/// phase plus the two traffic books.
+#[derive(Clone, Debug)]
+pub struct FidelityMonitor {
+    lambda: f64,
+    threshold: f64,
+    /// Indexed parallel to the algorithm phases of [`Phase::all`].
+    phases: Vec<(Phase, DriftGauge)>,
+    words: DriftGauge,
+    messages: DriftGauge,
+}
+
+impl FidelityMonitor {
+    pub fn new(lambda: f64, threshold: f64) -> Self {
+        let phases = Phase::all()
+            .iter()
+            .copied()
+            .filter(|p| p.in_algorithm_total())
+            .map(|p| (p, DriftGauge::default()))
+            .collect();
+        FidelityMonitor { lambda, threshold, phases, words: DriftGauge::default(), messages: DriftGauge::default() }
+    }
+
+    fn gauge_mut(&mut self, phase: Phase) -> &mut DriftGauge {
+        &mut self
+            .phases
+            .iter_mut()
+            .find(|(p, _)| *p == phase)
+            .expect("drift tracked for algorithm phases only")
+            .1
+    }
+
+    /// Record one predicted-vs-charged seconds pair for `phase`.
+    pub fn observe(&mut self, phase: Phase, predicted: f64, actual: f64) {
+        let err = rel_err(predicted, actual);
+        let lambda = self.lambda;
+        self.gauge_mut(phase).observe(lambda, err);
+    }
+
+    /// Record one predicted-vs-booked traffic pair (mean words and
+    /// messages per rank for the bundle).
+    pub fn observe_traffic(&mut self, pred_words: f64, words: f64, pred_msgs: f64, msgs: f64) {
+        let (ew, em) = (rel_err(pred_words, words), rel_err(pred_msgs, msgs));
+        self.words.observe(self.lambda, ew);
+        self.messages.observe(self.lambda, em);
+    }
+
+    /// Is this phase's EWMA drift above the threshold?
+    pub fn flagged(&self, phase: Phase) -> bool {
+        self.phases
+            .iter()
+            .find(|(p, _)| *p == phase)
+            .map(|(_, g)| g.seen && g.ewma > self.threshold)
+            .unwrap_or(false)
+    }
+
+    /// Current EWMA drift for one phase (0 until first observation).
+    pub fn ewma(&self, phase: Phase) -> f64 {
+        self.phases.iter().find(|(p, _)| *p == phase).map(|(_, g)| g.ewma).unwrap_or(0.0)
+    }
+
+    /// Snapshot every drift series (phases in [`Phase::all`] order, then
+    /// words, then messages) for reports and the run summary.
+    pub fn drift(&self) -> Vec<DriftEntry> {
+        let entry = |key: DriftKey, g: &DriftGauge| DriftEntry {
+            key,
+            ewma: g.ewma,
+            last: g.last,
+            flagged: g.seen && g.ewma > self.threshold,
+        };
+        let mut out: Vec<DriftEntry> =
+            self.phases.iter().map(|(p, g)| entry(DriftKey::Phase(*p), g)).collect();
+        out.push(entry(DriftKey::Words, &self.words));
+        out.push(entry(DriftKey::Messages, &self.messages));
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nan_input_diverges_and_is_sticky() {
+        let mut h = HealthMonitor::new(HealthOpts::default());
+        assert_eq!(h.status(), HealthStatus::Initializing);
+        h.observe_loss(0.7);
+        assert_eq!(h.status(), HealthStatus::Healthy);
+        h.observe_loss(f64::NAN);
+        assert_eq!(h.status(), HealthStatus::Diverged);
+        // Sticky: a later healthy-looking loss does not heal the verdict.
+        h.observe_loss(0.5);
+        assert_eq!(h.status(), HealthStatus::Diverged);
+
+        let mut h = HealthMonitor::new(HealthOpts::default());
+        h.observe_update(f64::INFINITY);
+        assert_eq!(h.status(), HealthStatus::Diverged);
+    }
+
+    #[test]
+    fn loss_blowup_past_ratio_diverges() {
+        let mut h = HealthMonitor::new(HealthOpts::default());
+        h.observe_loss(0.5);
+        h.observe_loss(0.4);
+        assert_eq!(h.status(), HealthStatus::Healthy);
+        h.observe_loss(0.9); // > 2.0 × best (0.4)
+        assert_eq!(h.status(), HealthStatus::Diverged);
+    }
+
+    #[test]
+    fn monotone_plateau_stalls_and_recovers() {
+        let opts = HealthOpts { plateau_window: 3, plateau_tol: 1e-3, ..HealthOpts::default() };
+        let mut h = HealthMonitor::new(opts);
+        // Monotone but sub-tolerance decline across the full window.
+        for loss in [0.500_000, 0.499_999_9, 0.499_999_8] {
+            h.observe_loss(loss);
+        }
+        assert_eq!(h.status(), HealthStatus::Stalled);
+        // A real improvement flips it back.
+        h.observe_loss(0.40);
+        assert_eq!(h.status(), HealthStatus::Healthy);
+    }
+
+    #[test]
+    fn loss_delta_is_none_only_on_first_eval() {
+        let mut h = HealthMonitor::new(HealthOpts::default());
+        assert_eq!(h.observe_loss(0.7), None);
+        let d = h.observe_loss(0.6).expect("second eval has a delta");
+        assert!((d - (-0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_edges() {
+        assert_eq!(rel_err(0.0, 0.0), 0.0);
+        assert_eq!(rel_err(0.0, 3.0), 1.0);
+        assert_eq!(rel_err(3.0, 0.0), 1.0);
+        assert!((rel_err(1.0, 1.1) - 0.1 / 1.1).abs() < 1e-12);
+        assert_eq!(rel_err(2.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn fidelity_ewma_and_flagging() {
+        let mut f = FidelityMonitor::new(0.5, 0.25);
+        assert!(!f.flagged(Phase::SpGemv));
+        f.observe(Phase::SpGemv, 1.0, 1.0);
+        assert_eq!(f.ewma(Phase::SpGemv), 0.0);
+        assert!(!f.flagged(Phase::SpGemv));
+        // err = 2/3 → ewma 1/3 > threshold; then decays under repeated 0s.
+        f.observe(Phase::SpGemv, 1.0, 3.0);
+        assert!(f.flagged(Phase::SpGemv));
+        f.observe(Phase::SpGemv, 1.0, 1.0);
+        f.observe(Phase::SpGemv, 1.0, 1.0);
+        assert!(f.ewma(Phase::SpGemv) < 0.25);
+        assert!(!f.flagged(Phase::SpGemv));
+    }
+
+    #[test]
+    fn drift_snapshot_order_and_traffic() {
+        let mut f = FidelityMonitor::new(0.2, 0.25);
+        f.observe_traffic(100.0, 100.0, 8.0, 4.0);
+        let d = f.drift();
+        // Six algorithm phases + words + messages.
+        assert_eq!(d.len(), 8);
+        assert_eq!(d[d.len() - 2].key, DriftKey::Words);
+        assert_eq!(d[d.len() - 1].key, DriftKey::Messages);
+        assert_eq!(d[d.len() - 2].ewma, 0.0);
+        let msgs = d[d.len() - 1];
+        assert!((msgs.ewma - 0.5).abs() < 1e-12);
+        assert!(msgs.flagged);
+    }
+
+    #[test]
+    fn status_names_roundtrip() {
+        for s in HealthStatus::all() {
+            assert_eq!(HealthStatus::from_name(s.name()), Some(s));
+        }
+        assert_eq!(HealthStatus::from_name("bogus"), None);
+    }
+}

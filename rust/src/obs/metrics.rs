@@ -1,0 +1,836 @@
+//! Typed metric registry with OpenMetrics text exposition, plus the
+//! built-in [`MetricsObserver`] that samples a running session at every
+//! bundle boundary.
+//!
+//! The registry is deliberately small and zero-dependency: three metric
+//! kinds (monotone [`MetricKind::Counter`], set-anywhere
+//! [`MetricKind::Gauge`], fixed-bucket [`MetricKind::Histogram`]), stable
+//! snake_case family names, and label sets attached per *series* (one
+//! family → many `{label="value"}` series). Registration is idempotent by
+//! name but **typed**: re-registering a name under a different kind
+//! panics, so a counter can never silently become a gauge.
+//!
+//! Exposition is the OpenMetrics text format (`# HELP` / `# TYPE`
+//! headers, `_total`-suffixed counter samples, cumulative `_bucket{le=}`
+//! histogram samples with `_sum`/`_count`, and a final `# EOF`), which is
+//! what `prometheus` and `ui.perfetto.dev`-adjacent tooling ingest.
+//! [`PrometheusSink`] rewrites a scrape file atomically-enough at every
+//! sample, so `promtool`/node-exporter-style textfile collection sees a
+//! live view of the run; [`MetricsTsvSink`] appends a versioned TSV
+//! time-series instead (one row per sample per series) for offline
+//! plotting next to the repo's other TSV artifacts.
+//!
+//! Everything here is observation-only: the observer reads
+//! `BundleReport`/`ObserverCtx` and never touches solver state, and a
+//! failing sink disables itself with a warning rather than aborting the
+//! run (same contract as `TraceObserver`).
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::metrics::Phase;
+use crate::obs::health::{DriftKey, HealthStatus};
+use crate::solvers::{BundleReport, Observer, ObserverCtx};
+use crate::util::tsv::TsvWriter;
+
+/// Schema version stamped into the first row of [`MetricsTsvSink`]'s
+/// output, so downstream parsers can reject files they don't understand.
+pub const METRICS_SERIES_SCHEMA: u32 = 1;
+
+/// Every metric family this module registers is prefixed with this, so
+/// the series namespace stays collision-free on a shared Prometheus.
+pub const METRIC_PREFIX: &str = "hybridsgd_";
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// The three supported metric kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone non-decreasing; exposed with the `_total` suffix.
+    Counter,
+    /// Last-write-wins scalar.
+    Gauge,
+    /// Fixed-bucket distribution; exposed as cumulative `_bucket{le=}`
+    /// samples plus `_sum` and `_count`.
+    Histogram,
+}
+
+impl MetricKind {
+    fn om_type(&self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Handle to a registered family (name + kind + help).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FamilyId(usize);
+
+/// Handle to one labelled series within a family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeriesId {
+    family: usize,
+    series: usize,
+}
+
+#[derive(Clone, Debug)]
+enum SeriesData {
+    Scalar(f64),
+    Histogram {
+        /// Per-bucket (non-cumulative) observation counts, one per upper
+        /// bound plus a final overflow (`+Inf`) bucket.
+        counts: Vec<u64>,
+        sum: f64,
+        count: u64,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct Series {
+    /// Rendered `(key, value)` pairs, in registration order.
+    labels: Vec<(String, String)>,
+    data: SeriesData,
+}
+
+#[derive(Clone, Debug)]
+struct Family {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    /// Histogram upper bounds (strictly ascending, finite); empty for
+    /// scalar kinds.
+    bounds: Vec<f64>,
+    series: Vec<Series>,
+}
+
+/// In-memory metric store. See the module docs for the data model.
+#[derive(Clone, Debug, Default)]
+pub struct MetricRegistry {
+    families: Vec<Family>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register(&mut self, name: &str, help: &str, kind: MetricKind, bounds: &[f64]) -> FamilyId {
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            let f = &self.families[i];
+            assert_eq!(
+                f.kind, kind,
+                "metric {name:?} already registered as {:?}, not {kind:?}",
+                f.kind
+            );
+            assert_eq!(f.bounds, bounds, "metric {name:?} re-registered with different buckets");
+            return FamilyId(i);
+        }
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            bounds: bounds.to_vec(),
+            series: Vec::new(),
+        });
+        FamilyId(self.families.len() - 1)
+    }
+
+    /// Register (idempotently) a counter family.
+    pub fn counter(&mut self, name: &str, help: &str) -> FamilyId {
+        self.register(name, help, MetricKind::Counter, &[])
+    }
+
+    /// Register (idempotently) a gauge family.
+    pub fn gauge(&mut self, name: &str, help: &str) -> FamilyId {
+        self.register(name, help, MetricKind::Gauge, &[])
+    }
+
+    /// Register (idempotently) a histogram family with fixed upper
+    /// bounds (an implicit `+Inf` bucket is always appended).
+    pub fn histogram(&mut self, name: &str, help: &str, bounds: &[f64]) -> FamilyId {
+        self.register(name, help, MetricKind::Histogram, bounds)
+    }
+
+    /// Find or create the series of `fam` with exactly these labels.
+    pub fn series(&mut self, fam: FamilyId, labels: &[(&str, &str)]) -> SeriesId {
+        let f = &mut self.families[fam.0];
+        if let Some(i) = f.series.iter().position(|s| {
+            s.labels.len() == labels.len()
+                && s.labels.iter().zip(labels).all(|((k, v), (lk, lv))| k == lk && v == lv)
+        }) {
+            return SeriesId { family: fam.0, series: i };
+        }
+        let data = match f.kind {
+            MetricKind::Histogram => SeriesData::Histogram {
+                counts: vec![0; f.bounds.len() + 1],
+                sum: 0.0,
+                count: 0,
+            },
+            _ => SeriesData::Scalar(0.0),
+        };
+        f.series.push(Series {
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            data,
+        });
+        SeriesId { family: fam.0, series: f.series.len() - 1 }
+    }
+
+    fn series_mut(&mut self, id: SeriesId) -> (&MetricKind, &mut SeriesData) {
+        let f = &mut self.families[id.family];
+        (&f.kind, &mut f.series[id.series].data)
+    }
+
+    /// Increment a counter. `v` must be non-negative (counters are
+    /// monotone by contract).
+    pub fn add(&mut self, id: SeriesId, v: f64) {
+        let (kind, data) = self.series_mut(id);
+        debug_assert_eq!(*kind, MetricKind::Counter, "add() is for counters");
+        debug_assert!(v >= 0.0 || v.is_nan(), "counters only move forward (got {v})");
+        if let SeriesData::Scalar(x) = data {
+            *x += v;
+        }
+    }
+
+    /// Set a gauge.
+    pub fn set(&mut self, id: SeriesId, v: f64) {
+        let (kind, data) = self.series_mut(id);
+        debug_assert_eq!(*kind, MetricKind::Gauge, "set() is for gauges");
+        if let SeriesData::Scalar(x) = data {
+            *x = v;
+        }
+    }
+
+    /// Record one histogram observation.
+    pub fn observe(&mut self, id: SeriesId, v: f64) {
+        let bounds = self.families[id.family].bounds.clone();
+        let (kind, data) = self.series_mut(id);
+        debug_assert_eq!(*kind, MetricKind::Histogram, "observe() is for histograms");
+        if let SeriesData::Histogram { counts, sum, count } = data {
+            let slot = bounds.iter().position(|&b| v <= b).unwrap_or(bounds.len());
+            counts[slot] += 1;
+            *sum += v;
+            *count += 1;
+        }
+    }
+
+    /// Current scalar value of a counter/gauge series (tests, tooling).
+    pub fn value_of(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let (f, s) = self.lookup(name, labels)?;
+        match &f.series[s].data {
+            SeriesData::Scalar(x) => Some(*x),
+            SeriesData::Histogram { .. } => None,
+        }
+    }
+
+    /// Current `(count, sum, per-bucket counts)` of a histogram series.
+    pub fn hist_of(&self, name: &str, labels: &[(&str, &str)]) -> Option<(u64, f64, Vec<u64>)> {
+        let (f, s) = self.lookup(name, labels)?;
+        match &f.series[s].data {
+            SeriesData::Histogram { counts, sum, count } => Some((*count, *sum, counts.clone())),
+            SeriesData::Scalar(_) => None,
+        }
+    }
+
+    fn lookup(&self, name: &str, labels: &[(&str, &str)]) -> Option<(&Family, usize)> {
+        let f = self.families.iter().find(|f| f.name == name)?;
+        let s = f.series.iter().position(|s| {
+            s.labels.len() == labels.len()
+                && s.labels.iter().zip(labels).all(|((k, v), (lk, lv))| k == lk && v == lv)
+        })?;
+        Some((f, s))
+    }
+
+    /// Write the whole registry as an OpenMetrics text exposition.
+    pub fn write_openmetrics<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        for f in &self.families {
+            writeln!(w, "# HELP {} {}", f.name, escape_help(&f.help))?;
+            writeln!(w, "# TYPE {} {}", f.name, f.kind.om_type())?;
+            for s in &f.series {
+                match &s.data {
+                    SeriesData::Scalar(v) => {
+                        let suffix =
+                            if f.kind == MetricKind::Counter { "_total" } else { "" };
+                        writeln!(
+                            w,
+                            "{}{}{} {}",
+                            f.name,
+                            suffix,
+                            render_labels(&s.labels, None),
+                            fmt_value(*v)
+                        )?;
+                    }
+                    SeriesData::Histogram { counts, sum, count } => {
+                        let mut cum = 0u64;
+                        for (i, c) in counts.iter().enumerate() {
+                            cum += c;
+                            let le = if i < f.bounds.len() {
+                                fmt_value(f.bounds[i])
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            writeln!(
+                                w,
+                                "{}_bucket{} {}",
+                                f.name,
+                                render_labels(&s.labels, Some(&le)),
+                                cum
+                            )?;
+                        }
+                        writeln!(
+                            w,
+                            "{}_sum{} {}",
+                            f.name,
+                            render_labels(&s.labels, None),
+                            fmt_value(*sum)
+                        )?;
+                        debug_assert_eq!(cum, *count, "bucket counts sum to _count");
+                        writeln!(
+                            w,
+                            "{}_count{} {}",
+                            f.name,
+                            render_labels(&s.labels, None),
+                            count
+                        )?;
+                    }
+                }
+            }
+        }
+        writeln!(w, "# EOF")
+    }
+
+    /// Visit every exposition sample as `(sample_name, labels, value)` —
+    /// the flattened view [`MetricsTsvSink`] appends per bundle. Label
+    /// strings include the braces (empty string when unlabelled).
+    pub fn for_each_sample<F: FnMut(&str, &str, f64)>(&self, mut f: F) {
+        for fam in &self.families {
+            for s in &fam.series {
+                match &s.data {
+                    SeriesData::Scalar(v) => {
+                        let suffix =
+                            if fam.kind == MetricKind::Counter { "_total" } else { "" };
+                        f(
+                            &format!("{}{}", fam.name, suffix),
+                            &render_labels(&s.labels, None),
+                            *v,
+                        );
+                    }
+                    SeriesData::Histogram { counts, sum, count } => {
+                        let mut cum = 0u64;
+                        for (i, c) in counts.iter().enumerate() {
+                            cum += c;
+                            let le = if i < fam.bounds.len() {
+                                fmt_value(fam.bounds[i])
+                            } else {
+                                "+Inf".to_string()
+                            };
+                            f(
+                                &format!("{}_bucket", fam.name),
+                                &render_labels(&s.labels, Some(&le)),
+                                cum as f64,
+                            );
+                        }
+                        f(&format!("{}_sum", fam.name), &render_labels(&s.labels, None), *sum);
+                        f(
+                            &format!("{}_count", fam.name),
+                            &render_labels(&s.labels, None),
+                            *count as f64,
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Render `{k="v",...}` (with an optional trailing `le`), or `""` when
+/// there are no labels at all.
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// OpenMetrics float rendering: shortest round-trip via `to_string`,
+/// with the spec's spellings for the non-finite values.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// Receives registry snapshots at bundle boundaries. Implementations
+/// must be cheap per call — they run on the driving thread.
+pub trait MetricsSink {
+    /// Called after the registry was updated for `bundle`.
+    fn sample(&mut self, bundle: usize, reg: &MetricRegistry) -> io::Result<()>;
+    /// Called once when the run finishes (after the last sample).
+    fn finish(&mut self, _reg: &MetricRegistry) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// OpenMetrics scrape file: the full exposition is rewritten (truncate +
+/// write + flush) at every sample, so an external scraper always reads a
+/// complete, valid snapshot of the run so far.
+pub struct PrometheusSink {
+    path: PathBuf,
+}
+
+impl PrometheusSink {
+    /// Create the scrape file eagerly (with an empty-but-valid
+    /// exposition), so a bad path fails at attach time, not mid-run.
+    pub fn create<P: AsRef<Path>>(path: P) -> io::Result<Self> {
+        let sink = PrometheusSink { path: path.as_ref().to_path_buf() };
+        sink.rewrite(&MetricRegistry::new())?;
+        Ok(sink)
+    }
+
+    fn rewrite(&self, reg: &MetricRegistry) -> io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut w = BufWriter::new(File::create(&self.path)?);
+        reg.write_openmetrics(&mut w)?;
+        w.flush()
+    }
+}
+
+impl MetricsSink for PrometheusSink {
+    fn sample(&mut self, _bundle: usize, reg: &MetricRegistry) -> io::Result<()> {
+        self.rewrite(reg)
+    }
+
+    fn finish(&mut self, reg: &MetricRegistry) -> io::Result<()> {
+        self.rewrite(reg)
+    }
+}
+
+/// Versioned TSV time-series: one `sample` row per series per bundle,
+/// appended as the run progresses (schema [`METRICS_SERIES_SCHEMA`]).
+pub struct MetricsTsvSink {
+    w: TsvWriter,
+    wrote_meta: bool,
+}
+
+impl MetricsTsvSink {
+    /// Create a sink targeting `path`. The file (header plus the schema
+    /// row) is written lazily with the first sample, so a run that never
+    /// bundles writes nothing.
+    pub fn create<P: AsRef<Path>>(path: P) -> Self {
+        MetricsTsvSink {
+            w: TsvWriter::create(path, &["kind", "bundle", "metric", "labels", "value"]),
+            wrote_meta: false,
+        }
+    }
+}
+
+impl MetricsSink for MetricsTsvSink {
+    fn sample(&mut self, bundle: usize, reg: &MetricRegistry) -> io::Result<()> {
+        if !self.wrote_meta {
+            self.w.append(&[
+                "meta".into(),
+                "-".into(),
+                "schema".into(),
+                "-".into(),
+                METRICS_SERIES_SCHEMA.to_string(),
+            ])?;
+            self.wrote_meta = true;
+        }
+        let mut rows: Vec<[String; 5]> = Vec::new();
+        reg.for_each_sample(|name, labels, v| {
+            rows.push([
+                "sample".into(),
+                bundle.to_string(),
+                name.into(),
+                if labels.is_empty() { "-".into() } else { labels.into() },
+                fmt_value(v),
+            ]);
+        });
+        for r in rows {
+            self.w.append(&r)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The built-in observer
+// ---------------------------------------------------------------------------
+
+struct SinkSlot<'a> {
+    sink: Box<dyn MetricsSink + 'a>,
+    failed: bool,
+}
+
+/// Pre-resolved series handles, built lazily on the first bundle (the
+/// rank count is only known once the session reports).
+struct Ids {
+    bundles: SeriesId,
+    iters: SeriesId,
+    /// `[charged, wait, hidden]` counter per phase, in `Phase::all` order.
+    phase_sec: Vec<[SeriesId; 3]>,
+    words: SeriesId,
+    messages: SeriesId,
+    sim_wall: SeriesId,
+    loss: SeriesId,
+    loss_delta: SeriesId,
+    update_norm: SeriesId,
+    /// One-hot gauge per health state, in `HealthStatus::all` order.
+    health: Vec<SeriesId>,
+    /// Aligned with `BundleReport::drift` (phases, then words/messages):
+    /// `(ewma gauge, flag gauge)`.
+    drift: Vec<(SeriesId, SeriesId)>,
+    eff_bundle: SeriesId,
+    rank_busy: Vec<SeriesId>,
+    wall_hist: SeriesId,
+    /// Per-phase `(charged, wait, hidden)` book snapshot from the
+    /// previous sample, so the counters receive true deltas.
+    prev_phase: Vec<(f64, f64, f64)>,
+    prev_words: f64,
+    prev_messages: f64,
+    prev_iters: usize,
+}
+
+/// Built-in observer that samples session state into a
+/// [`MetricRegistry`] at every bundle boundary and forwards snapshots to
+/// the attached sinks. Attach via `SessionBuilder::metrics_sink`.
+///
+/// Observation-only: it reads the bundle report and the charged books,
+/// never the solver state, so attaching it cannot perturb the
+/// trajectory. A sink whose I/O fails is disabled (with one warning on
+/// stderr) while the run continues.
+pub struct MetricsObserver<'a> {
+    reg: MetricRegistry,
+    sinks: Vec<SinkSlot<'a>>,
+    ids: Option<Ids>,
+}
+
+/// Bundle wall-clock histogram bounds (seconds): simulated bundles land
+/// anywhere from sub-microsecond toys to ~seconds at scale.
+const WALL_BOUNDS: [f64; 7] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+
+impl<'a> MetricsObserver<'a> {
+    pub fn new(sinks: Vec<Box<dyn MetricsSink + 'a>>) -> Self {
+        MetricsObserver {
+            reg: MetricRegistry::new(),
+            sinks: sinks.into_iter().map(|sink| SinkSlot { sink, failed: false }).collect(),
+            ids: None,
+        }
+    }
+
+    /// The registry (tests and ad-hoc exports).
+    pub fn registry(&self) -> &MetricRegistry {
+        &self.reg
+    }
+
+    fn build_ids(reg: &mut MetricRegistry, ctx: &ObserverCtx, report: &BundleReport) -> Ids {
+        let m = |s: &str| format!("{METRIC_PREFIX}{s}");
+        let bundles = reg.counter(&m("bundles"), "Completed outer bundles.");
+        let iters = reg.counter(&m("inner_iterations"), "Completed inner SGD iterations.");
+        let phase_fam = reg.counter(
+            &m("phase_seconds"),
+            "Charged/wait/hidden seconds per phase (mean across ranks).",
+        );
+        let words = reg.counter(
+            &m("comm_words"),
+            "Collective payload words booked (mean per rank).",
+        );
+        let messages = reg.counter(
+            &m("comm_messages"),
+            "Collective messages booked (mean per rank).",
+        );
+        let sim_wall = reg.gauge(&m("sim_wall_seconds"), "Simulated wall clock of the run.");
+        let loss = reg.gauge(&m("loss"), "Global logistic loss at the last eval point.");
+        let loss_delta =
+            reg.gauge(&m("loss_delta"), "Loss change versus the previous eval point.");
+        let update_norm =
+            reg.gauge(&m("update_norm"), "L2 norm of the bundle's scaled update coefficients.");
+        let health_fam = reg.gauge(
+            &m("health"),
+            "Convergence health verdict, one-hot over the state label.",
+        );
+        let drift_fam = reg.gauge(
+            &m("model_drift"),
+            "EWMA relative error between predicted and charged books.",
+        );
+        let flag_fam = reg.gauge(
+            &m("model_drift_flag"),
+            "1 when a drift series exceeds the configured threshold.",
+        );
+        let eff_fam = reg.gauge(
+            &m("overlap_efficiency"),
+            "Fraction of the row-reduce transfer hidden behind compute.",
+        );
+        let busy_fam =
+            reg.gauge(&m("rank_busy_seconds"), "Charged algorithm seconds per rank.");
+        let wall_fam = reg.histogram(
+            &m("bundle_wall_seconds"),
+            "Distribution of per-bundle simulated wall deltas.",
+            &WALL_BOUNDS,
+        );
+
+        let phases = Phase::all();
+        let phase_sec = phases
+            .iter()
+            .map(|p| {
+                ["charged", "wait", "hidden"].map(|kind| {
+                    reg.series(phase_fam, &[("phase", p.name()), ("kind", kind)])
+                })
+            })
+            .collect();
+        let health = HealthStatus::all()
+            .iter()
+            .map(|s| reg.series(health_fam, &[("state", s.name())]))
+            .collect();
+        let drift = report
+            .drift
+            .iter()
+            .map(|d| {
+                let labels = match d.key {
+                    DriftKey::Phase(p) => [("series", p.name())],
+                    DriftKey::Words => [("series", "words")],
+                    DriftKey::Messages => [("series", "messages")],
+                };
+                (reg.series(drift_fam, &labels), reg.series(flag_fam, &labels))
+            })
+            .collect();
+        let ranks = ctx.book.ranks();
+        let rank_labels: Vec<String> = (0..ranks).map(|r| r.to_string()).collect();
+        let rank_busy = rank_labels
+            .iter()
+            .map(|r| reg.series(busy_fam, &[("rank", r.as_str())]))
+            .collect();
+
+        Ids {
+            bundles: reg.series(bundles, &[]),
+            iters: reg.series(iters, &[]),
+            phase_sec,
+            words: reg.series(words, &[]),
+            messages: reg.series(messages, &[]),
+            sim_wall: reg.series(sim_wall, &[]),
+            loss: reg.series(loss, &[]),
+            loss_delta: reg.series(loss_delta, &[]),
+            update_norm: reg.series(update_norm, &[]),
+            health,
+            drift,
+            eff_bundle: reg.series(eff_fam, &[("window", "bundle")]),
+            rank_busy,
+            wall_hist: reg.series(wall_fam, &[]),
+            prev_phase: vec![(0.0, 0.0, 0.0); phases.len()],
+            prev_words: 0.0,
+            prev_messages: 0.0,
+            prev_iters: 0,
+        }
+    }
+
+    fn sample(&mut self, ctx: &ObserverCtx, report: &BundleReport) {
+        if self.ids.is_none() {
+            self.ids = Some(Self::build_ids(&mut self.reg, ctx, report));
+        }
+        let ids = self.ids.as_mut().unwrap();
+        let reg = &mut self.reg;
+
+        reg.add(ids.bundles, 1.0);
+        reg.add(ids.iters, (ctx.inner_iters - ids.prev_iters) as f64);
+        ids.prev_iters = ctx.inner_iters;
+
+        for (i, p) in Phase::all().iter().enumerate() {
+            let now =
+                (ctx.book.mean_charged(*p), ctx.book.mean_wait(*p), ctx.book.mean_hidden(*p));
+            let prev = ids.prev_phase[i];
+            reg.add(ids.phase_sec[i][0], now.0 - prev.0);
+            reg.add(ids.phase_sec[i][1], now.1 - prev.1);
+            reg.add(ids.phase_sec[i][2], now.2 - prev.2);
+            ids.prev_phase[i] = now;
+        }
+        let (w, m) = (ctx.book.mean_words(), ctx.book.mean_messages());
+        reg.add(ids.words, w - ids.prev_words);
+        reg.add(ids.messages, m - ids.prev_messages);
+        ids.prev_words = w;
+        ids.prev_messages = m;
+
+        reg.set(ids.sim_wall, ctx.sim_wall);
+        if let Some(tp) = &report.eval {
+            reg.set(ids.loss, tp.loss);
+        }
+        if let Some(d) = report.loss_delta {
+            reg.set(ids.loss_delta, d);
+        }
+        reg.set(ids.update_norm, report.update_norm);
+        for (s, id) in HealthStatus::all().iter().zip(&ids.health) {
+            reg.set(*id, if *s == report.health { 1.0 } else { 0.0 });
+        }
+        for (d, (ewma_id, flag_id)) in report.drift.iter().zip(&ids.drift) {
+            reg.set(*ewma_id, d.ewma);
+            reg.set(*flag_id, if d.flagged { 1.0 } else { 0.0 });
+        }
+        if let Some(eff) = report.overlap_efficiency {
+            reg.set(ids.eff_bundle, eff);
+        }
+        for (r, id) in ids.rank_busy.iter().enumerate() {
+            reg.set(*id, ctx.book.rank_algorithm_total(r));
+        }
+        reg.observe(ids.wall_hist, report.wall_delta);
+
+        for slot in &mut self.sinks {
+            if slot.failed {
+                continue;
+            }
+            if let Err(e) = slot.sink.sample(report.bundle, reg) {
+                eprintln!("metrics sink failed ({e}); disabling metrics export for this run");
+                slot.failed = true;
+            }
+        }
+    }
+}
+
+impl Observer for MetricsObserver<'_> {
+    fn on_bundle(&mut self, ctx: &ObserverCtx, report: &BundleReport) {
+        self.sample(ctx, report);
+    }
+
+    fn on_finish(&mut self, _ctx: &ObserverCtx) {
+        for slot in &mut self.sinks {
+            if slot.failed {
+                continue;
+            }
+            if let Err(e) = slot.sink.finish(&self.reg) {
+                eprintln!("metrics sink failed ({e}); disabling metrics export for this run");
+                slot.failed = true;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_typed_and_idempotent() {
+        let mut reg = MetricRegistry::new();
+        let a = reg.counter("x_total_things", "help");
+        let b = reg.counter("x_total_things", "help");
+        assert_eq!(a, b);
+        let s = reg.series(a, &[("phase", "gram")]);
+        let s2 = reg.series(a, &[("phase", "gram")]);
+        assert_eq!(s, s2);
+        reg.add(s, 2.0);
+        reg.add(s, 3.0);
+        assert_eq!(reg.value_of("x_total_things", &[("phase", "gram")]), Some(5.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let mut reg = MetricRegistry::new();
+        reg.counter("x", "help");
+        reg.gauge("x", "help");
+    }
+
+    #[test]
+    fn histogram_buckets_sum_to_count() {
+        let mut reg = MetricRegistry::new();
+        let h = reg.histogram("lat", "help", &[0.1, 1.0, 10.0]);
+        let s = reg.series(h, &[]);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0, f64::INFINITY] {
+            reg.observe(s, v);
+        }
+        let (count, sum, counts) = reg.hist_of("lat", &[]).unwrap();
+        assert_eq!(count, 6);
+        assert_eq!(counts, vec![1, 2, 1, 2]);
+        assert_eq!(counts.iter().sum::<u64>(), count);
+        assert!(sum.is_infinite());
+    }
+
+    #[test]
+    fn openmetrics_exposition_shape() {
+        let mut reg = MetricRegistry::new();
+        let c = reg.counter("hybridsgd_bundles", "Completed bundles.");
+        let sc = reg.series(c, &[]);
+        reg.add(sc, 4.0);
+        let g = reg.gauge("hybridsgd_loss", "Loss.");
+        let sg = reg.series(g, &[("phase", "a\"b")]);
+        reg.set(sg, 0.5);
+        let h = reg.histogram("hybridsgd_wall", "Wall.", &[1.0, 2.0]);
+        let sh = reg.series(h, &[]);
+        reg.observe(sh, 0.5);
+        reg.observe(sh, 1.5);
+        reg.observe(sh, 9.0);
+
+        let mut buf = Vec::new();
+        reg.write_openmetrics(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.contains(&"# TYPE hybridsgd_bundles counter"));
+        assert!(lines.contains(&"hybridsgd_bundles_total 4"));
+        assert!(lines.contains(&"hybridsgd_loss{phase=\"a\\\"b\"} 0.5"));
+        // Cumulative buckets with a final +Inf equal to _count.
+        assert!(lines.contains(&"hybridsgd_wall_bucket{le=\"1\"} 1"));
+        assert!(lines.contains(&"hybridsgd_wall_bucket{le=\"2\"} 2"));
+        assert!(lines.contains(&"hybridsgd_wall_bucket{le=\"+Inf\"} 3"));
+        assert!(lines.contains(&"hybridsgd_wall_count 3"));
+        assert_eq!(*lines.last().unwrap(), "# EOF");
+    }
+
+    #[test]
+    fn for_each_sample_matches_exposition() {
+        let mut reg = MetricRegistry::new();
+        let c = reg.counter("a", "h");
+        let s = reg.series(c, &[("k", "v")]);
+        reg.add(s, 1.0);
+        let mut seen = Vec::new();
+        reg.for_each_sample(|name, labels, v| seen.push((name.to_string(), labels.to_string(), v)));
+        assert_eq!(seen, vec![("a_total".to_string(), "{k=\"v\"}".to_string(), 1.0)]);
+    }
+
+    #[test]
+    fn prometheus_sink_writes_valid_empty_file() {
+        let dir = std::env::temp_dir().join("hybridsgd_metrics_test");
+        let path = dir.join("empty.prom");
+        let _sink = PrometheusSink::create(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.trim_end(), "# EOF");
+        std::fs::remove_file(&path).ok();
+    }
+}

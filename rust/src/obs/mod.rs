@@ -1,10 +1,22 @@
 //! Observability: the structured run-telemetry layer.
 //!
-//! The engine already *records* everything that matters — every charge,
-//! collective round, wait, and hidden transfer lands in the
-//! [`Timeline`](crate::timeline::Timeline) event log, stamped with
-//! (rank, phase, kind, bundle, span). This module turns that log into
-//! artifacts other tools consume:
+//! # The three questions
+//!
+//! The layer answers three distinct questions with three artifacts:
+//!
+//! 1. **Where did the time go?** → *traces*. Every charge, collective
+//!    round, wait, and hidden transfer lands in the
+//!    [`Timeline`](crate::timeline::Timeline) event log, streamed out
+//!    span-by-span through [`TraceSink`]s.
+//! 2. **How much did each phase cost?** → *summary*. The end-of-run
+//!    [`RunSummary`] folds the charged books into per-phase totals,
+//!    traffic, and the retune history.
+//! 3. **Is the run healthy — and is the model honest?** → *metrics*.
+//!    The per-bundle [`metrics`]/[`health`] layer: convergence verdicts
+//!    ([`HealthStatus`]), predicted-vs-charged drift gauges, and an
+//!    OpenMetrics/TSV time-series export.
+//!
+//! # The pieces
 //!
 //! * [`TraceSink`] — the streaming export trait. A sink receives each
 //!   recorded span exactly once, in record order; [`NullSink`] is the
@@ -14,10 +26,23 @@
 //! * [`export`] — concrete sinks: [`JsonlSink`] (one JSON object per
 //!   span, for ad-hoc tooling) and [`PerfettoSink`] (Chrome
 //!   `trace_event` format, loadable directly in `chrome://tracing` or
-//!   <https://ui.perfetto.dev> with one track per rank).
+//!   <https://ui.perfetto.dev> with one track per rank, plus counter
+//!   tracks for loss, drift, and overlap efficiency).
 //! * [`summary`] — the end-of-run report: per-phase charged/wait/hidden
-//!   seconds, traffic, and the retune history as a versioned TSV block
-//!   (`tools/collect_bench.py` folds it into `BENCH_ci.json`).
+//!   seconds, traffic, the health verdict, drift gauges, and the retune
+//!   history as a versioned TSV block (`tools/collect_bench.py` folds it
+//!   into `BENCH_ci.json`).
+//! * [`metrics`] — the typed metric registry (counters, gauges,
+//!   fixed-bucket histograms), the built-in [`MetricsObserver`] sampling
+//!   it at bundle boundaries, and the [`PrometheusSink`] /
+//!   [`MetricsTsvSink`] exports; attach via
+//!   [`SessionBuilder::metrics_sink`](crate::solvers::SessionBuilder::metrics_sink)
+//!   (`train --metrics-out FILE` on the CLI).
+//! * [`health`] — the producers behind the metrics: [`HealthMonitor`]
+//!   (loss deltas, update norms, NaN/Inf guard, plateau/divergence
+//!   detection) and [`FidelityMonitor`] (EWMA drift between the analytic
+//!   prediction for the current config and the charged books — the
+//!   paper's fig. 4 model validation as a continuously-running check).
 //!
 //! The *analysis* complement lives in
 //! [`timeline::analyzer`](crate::timeline::analyzer):
@@ -41,9 +66,15 @@
 //! with tracing on or off (property-tested in `tests/obs_trace.rs`).
 
 pub mod export;
+pub mod health;
+pub mod metrics;
 pub mod summary;
 
 pub use export::{sink_to, JsonlSink, PerfettoSink, TraceFormat};
+pub use health::{DriftEntry, DriftKey, FidelityMonitor, HealthMonitor, HealthOpts, HealthStatus};
+pub use metrics::{
+    MetricKind, MetricRegistry, MetricsObserver, MetricsSink, MetricsTsvSink, PrometheusSink,
+};
 pub use summary::RunSummary;
 
 use crate::solvers::{BundleReport, Observer, ObserverCtx};
@@ -59,6 +90,13 @@ use std::io;
 pub trait TraceSink {
     /// Consume one span.
     fn span(&mut self, event: &Event) -> io::Result<()>;
+    /// Consume one counter sample (`ts` in simulated seconds). Emitted
+    /// at bundle boundaries for the loss, drift, and overlap-efficiency
+    /// series; formats without a counter concept (JSONL) keep this
+    /// default no-op.
+    fn counter(&mut self, _name: &str, _ts: f64, _value: f64) -> io::Result<()> {
+        Ok(())
+    }
     /// Close out the stream (write trailers, flush).
     fn finish(&mut self) -> io::Result<()> {
         Ok(())
@@ -121,11 +159,42 @@ impl<'a> TraceObserver<'a> {
         eprintln!("trace sink failed ({err}); disabling trace export for this run");
         self.failed = true;
     }
+
+    /// Forward the bundle's metric readings as counter samples (Perfetto
+    /// renders them as counter tracks above the span tracks; other
+    /// formats drop them via the trait default). Non-finite values are
+    /// skipped — a diverged run's NaN loss has nowhere to plot.
+    fn counters(&mut self, ctx: &ObserverCtx<'_>, report: &BundleReport) {
+        if self.failed {
+            return;
+        }
+        let ts = ctx.sim_wall;
+        let mut samples: Vec<(String, f64)> = Vec::new();
+        if let Some(tp) = &report.eval {
+            samples.push(("loss".to_string(), tp.loss));
+        }
+        if let Some(eff) = report.overlap_efficiency {
+            samples.push(("overlap_efficiency".to_string(), eff));
+        }
+        for d in &report.drift {
+            samples.push((format!("drift:{}", d.key.name()), d.ewma));
+        }
+        for (name, value) in samples {
+            if !value.is_finite() {
+                continue;
+            }
+            if let Err(err) = self.sink.counter(&name, ts, value) {
+                self.fail(&err);
+                return;
+            }
+        }
+    }
 }
 
 impl Observer for TraceObserver<'_> {
-    fn on_bundle(&mut self, ctx: &ObserverCtx<'_>, _report: &BundleReport) {
+    fn on_bundle(&mut self, ctx: &ObserverCtx<'_>, report: &BundleReport) {
         self.drain(ctx.timeline);
+        self.counters(ctx, report);
     }
 
     fn on_finish(&mut self, ctx: &ObserverCtx<'_>) {

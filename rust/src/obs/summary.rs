@@ -13,15 +13,15 @@ use std::path::Path;
 
 /// Version stamp of the summary row schema (the `meta schema` row).
 /// Bump when row meanings change; `collect_bench.py` records it.
-pub const SUMMARY_SCHEMA: u32 = 1;
+pub const SUMMARY_SCHEMA: u32 = 2;
 
 /// A rendered run summary: rows of `kind key a b c d`, same shape as the
 /// session checkpoint TSV.
 ///
-/// Schema v1 rows:
+/// Schema v2 rows (v2 added `health` and `drift`):
 ///
 /// ```text
-/// meta    schema   1
+/// meta    schema   2
 /// meta    name     <run label>
 /// meta    ranks    <p>
 /// meta    bundles  <outer>  <inner iters>
@@ -30,6 +30,8 @@ pub const SUMMARY_SCHEMA: u32 = 1;
 /// phase   <name>   <mean charged>  <mean wait>  <mean hidden>  <max charged>
 /// traffic mean     <words/rank>    <messages/rank>
 /// total   algorithm <mean charged seconds, metrics excluded>
+/// health  verdict  <initializing|healthy|stalled|diverged>
+/// drift   <series> <ewma rel err>  <last rel err>  <flagged 0|1>
 /// retune  <i>      <bundle>  <axis>  <algo>  <switched 0|1>
 /// pin     row      <algo | ->
 /// ```
@@ -96,6 +98,17 @@ impl RunSummary {
             "-",
             "-",
         ));
+        rows.push(row("health", "verdict", run.health.name(), "-", "-", "-"));
+        for d in &run.drift {
+            rows.push(row(
+                "drift",
+                d.key.name(),
+                d.ewma.to_string(),
+                d.last.to_string(),
+                (d.flagged as u8).to_string(),
+                "-",
+            ));
+        }
         for (i, ev) in run.retunes.iter().enumerate() {
             rows.push(row(
                 "retune",
@@ -169,7 +182,10 @@ mod tests {
         let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
         let run = SessionBuilder::new(&be, &ds, cfg).max_bundles(4).run_to_end();
         let s = RunSummary::from_run(&run);
-        assert_eq!(s.cell("meta", "schema"), Some("1"));
+        assert_eq!(s.cell("meta", "schema"), Some("2"));
+        // v2 rows: the health verdict and the drift gauges ride along.
+        assert_eq!(s.cell("health", "verdict"), Some("healthy"));
+        assert!(s.rows().iter().any(|r| r[0] == "drift" && r[1] == "sstep_comm"));
         assert_eq!(s.cell("meta", "ranks"), Some("4"));
         assert_eq!(s.cell("meta", "bundles"), Some("4"));
         let wall: f64 = s.cell("meta", "sim_wall").unwrap().parse().unwrap();

@@ -5,6 +5,7 @@ use crate::collectives::{AlgoPolicy, SelectorSource};
 use crate::comm::Charging;
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
+use crate::obs::health::{DriftEntry, HealthStatus};
 use crate::sparse::GramStrategy;
 use crate::timeline::{OverlapPolicy, Timeline};
 
@@ -138,6 +139,13 @@ pub struct SolverRun {
     pub retunes: Vec<RetuneEvent>,
     /// Simulated time at which `target_loss` was first met, if it was.
     pub time_to_target: Option<f64>,
+    /// Final convergence verdict from the always-on health monitor
+    /// (`Initializing` when the run never evaluated the loss).
+    pub health: HealthStatus,
+    /// Final predicted-vs-charged drift gauges (phases in
+    /// [`Phase::all`](crate::metrics::Phase::all) order, then words,
+    /// then messages) from the always-on fidelity monitor.
+    pub drift: Vec<DriftEntry>,
 }
 
 impl SolverRun {
@@ -175,6 +183,8 @@ mod tests {
             timeline: Timeline::new(1),
             retunes: vec![],
             time_to_target: None,
+            health: HealthStatus::Initializing,
+            drift: vec![],
         };
         assert!((r.per_iter() - 0.1).abs() < 1e-12);
         assert_eq!(r.final_loss(), None);

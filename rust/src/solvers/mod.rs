@@ -24,9 +24,11 @@
 //!    `run(ds, cfg, policy, &opts)` signature and absorbs [`RunOpts`]
 //!    construction: `SessionBuilder::new(backend, &ds, cfg)
 //!    .partitioner(..).eta(..).max_bundles(..)…`. Optional:
-//!    [`RetunePolicy::BoundAware`] for mid-run collective re-tuning,
-//!    [`Observer`]s for per-bundle hooks (the loss trace, event-log
-//!    recording, and phase accounting are built-in observers).
+//!    [`RetunePolicy::BoundAware`] / [`RetunePolicy::DriftGated`] for
+//!    mid-run collective re-tuning, [`Observer`]s for per-bundle hooks
+//!    (the loss trace, event-log recording, phase accounting, and the
+//!    [`obs::metrics`](crate::obs::metrics) sampler are built-in
+//!    observers).
 //! 2. **Drive** — [`Session::step_bundle`] advances exactly one bundle
 //!    (`s` inner iterations) and returns a [`BundleReport`] (books/trace
 //!    deltas, eval point, retune decision). [`Session::checkpoint`]

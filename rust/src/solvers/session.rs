@@ -41,6 +41,23 @@
 //!   [`obs::TraceSink`](crate::obs::TraceSink) (JSONL, Chrome/Perfetto)
 //!   and every recorded span streams out through the built-in
 //!   [`obs::TraceObserver`](crate::obs::TraceObserver).
+//! * **Run health and model fidelity** — two always-on monitors ride
+//!   every bundle: a [`HealthMonitor`] (loss deltas, update-norm NaN/Inf
+//!   guard, plateau/divergence verdicts as [`HealthStatus`]) and a
+//!   [`FidelityMonitor`] (EWMA relative error between the analytic
+//!   prediction for the *current* `(s, b, mesh, algo, overlap)` config
+//!   and the charged books, per phase plus words/messages). Their
+//!   verdicts land in [`BundleReport`] and [`SolverRun`];
+//!   [`SessionBuilder::metrics_sink`] additionally samples them (and the
+//!   books) into an OpenMetrics/TSV export through the built-in
+//!   [`obs::MetricsObserver`](crate::obs::MetricsObserver). Both are
+//!   pure observation: trajectories and charged books are bit-identical
+//!   with metrics on or off. [`RetunePolicy::DriftGated`] closes the
+//!   loop — the re-tune cadence only fires while the row-reduce drift
+//!   gauge is flagged. The monitors are *not* checkpointed: a resumed
+//!   session restarts them cold (schema v2 files carry no monitor rows),
+//!   so the first post-resume eval reports `loss_delta = None` and the
+//!   drift gauges re-initialize from the first post-resume bundle.
 //!
 //! # Lifecycle
 //!
@@ -71,12 +88,17 @@
 //! `sim_wall` of the run.
 
 use super::common::{RunOpts, SolverRun, TracePoint};
-use crate::collectives::{AlgoPolicy, Algorithm, AutoSelector, BoundBy, CollectiveCost};
+use crate::collectives::{
+    charge_with, reduce_scatter_charge, AlgoPolicy, Algorithm, AutoSelector, BoundBy,
+    CollectiveCost,
+};
 use crate::comm::{Charging, CollHandle, Cost, Engine, OverlapPolicy, Reduce, Scope};
 use crate::compute::ComputeBackend;
 use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::Dataset;
 use crate::metrics::{Phase, PhaseBook};
+use crate::obs::health::{DriftEntry, FidelityMonitor, HealthMonitor, HealthOpts, HealthStatus};
+use crate::obs::metrics::{MetricsObserver, MetricsSink};
 use crate::partition::{MeshPartition, Partitioner};
 use crate::sparse::{gram, BundleCsr, Csr, GramStrategy};
 use crate::timeline::{CriticalPath, Event, EventKind, PendingCollective, Timeline};
@@ -132,6 +154,18 @@ pub enum RetunePolicy {
         /// Re-tune cadence in bundles (0 disables).
         every: usize,
     },
+    /// Like `BoundAware`, but the check only *fires* while the
+    /// [`FidelityMonitor`] flags the row-reduce drift gauge — i.e. the
+    /// analytic model the standing pin was chosen from has stopped
+    /// matching the charged books. While the model is honest the pin is
+    /// left alone (no churn); once predicted-vs-charged drift crosses
+    /// [`HealthOpts::drift_threshold`], every `every` bundles the
+    /// windowed critical path re-picks. Forces event-log recording on,
+    /// like `BoundAware`.
+    DriftGated {
+        /// Check cadence in bundles (0 disables).
+        every: usize,
+    },
 }
 
 impl RetunePolicy {
@@ -140,6 +174,7 @@ impl RetunePolicy {
         match self {
             RetunePolicy::Off => "off",
             RetunePolicy::BoundAware { .. } => "bound-aware",
+            RetunePolicy::DriftGated { .. } => "drift-gated",
         }
     }
 }
@@ -187,6 +222,22 @@ pub struct BundleReport {
     pub messages_delta: f64,
     /// The re-tune decision taken after this bundle, if the cadence hit.
     pub retune: Option<RetuneEvent>,
+    /// Loss change versus the **previous eval point**. `Some` only when
+    /// this bundle evaluated *and* an earlier eval exists — a bundle
+    /// without an eval reports `None`, never a stale delta.
+    pub loss_delta: Option<f64>,
+    /// L2 norm of the bundle's scaled update coefficients (η/b · z over
+    /// all ranks) — the convergence monitor's NaN/Inf tripwire.
+    pub update_norm: f64,
+    /// Convergence verdict after this bundle.
+    pub health: HealthStatus,
+    /// Predicted-vs-charged drift gauges after this bundle (phases in
+    /// [`Phase::all`] order, then words, then messages).
+    pub drift: Vec<DriftEntry>,
+    /// Fraction of this bundle's settled row-reduce transfer that was
+    /// hidden behind compute (`hidden / (charged − wait + hidden)`).
+    /// `None` when nothing settled this bundle.
+    pub overlap_efficiency: Option<f64>,
 }
 
 /// Read-only view of the live session handed to [`Observer`] hooks.
@@ -274,6 +325,9 @@ pub struct SessionBuilder<'a> {
     book: bool,
     traced: bool,
     observers: Vec<Box<dyn Observer + 'a>>,
+    health: HealthOpts,
+    predict_profile: Option<CalibProfile>,
+    metrics_sinks: Vec<Box<dyn MetricsSink + 'a>>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -298,6 +352,9 @@ impl<'a> SessionBuilder<'a> {
             book: true,
             traced: false,
             observers: Vec::new(),
+            health: HealthOpts::default(),
+            predict_profile: None,
+            metrics_sinks: Vec::new(),
         }
     }
 
@@ -445,6 +502,37 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Tuning knobs for the convergence and fidelity monitors (plateau
+    /// window/tolerance, divergence ratio, drift EWMA λ and threshold).
+    /// The monitors themselves are always on — they are cheap, pure
+    /// observation, and their verdicts ride every [`BundleReport`].
+    pub fn health_opts(mut self, health: HealthOpts) -> Self {
+        self.health = health;
+        self
+    }
+
+    /// Profile the fidelity monitor predicts from (default: the charging
+    /// profile itself, so a `Charging::Modeled` run self-checks at ~0
+    /// drift). Point it elsewhere to measure how far the live books have
+    /// moved from an *older* calibration — or, in tests, to provoke
+    /// provably nonzero drift from a doctored profile.
+    pub fn predict_profile(mut self, profile: CalibProfile) -> Self {
+        self.predict_profile = Some(profile);
+        self
+    }
+
+    /// Stream per-bundle registry snapshots into a
+    /// [`MetricsSink`](crate::obs::MetricsSink) (e.g.
+    /// [`PrometheusSink`](crate::obs::PrometheusSink) or
+    /// [`MetricsTsvSink`](crate::obs::MetricsTsvSink)) via the built-in
+    /// [`MetricsObserver`](crate::obs::MetricsObserver). Multiple sinks
+    /// share one registry. Observation-only: trajectories and charged
+    /// books are bit-identical with or without metrics attached.
+    pub fn metrics_sink(mut self, sink: Box<dyn MetricsSink + 'a>) -> Self {
+        self.metrics_sinks.push(sink);
+        self
+    }
+
     /// Build the session: partition the dataset over the mesh and stand
     /// up the engine. No bundles run yet.
     pub fn build(self) -> Session<'a> {
@@ -498,8 +586,31 @@ impl<'a> SessionBuilder<'a> {
         // forces recording on the same way.
         let record = self.timeline.unwrap_or(self.opts.timeline)
             || self.traced
-            || matches!(self.retune, RetunePolicy::BoundAware { every } if every > 0);
+            || matches!(
+                self.retune,
+                RetunePolicy::BoundAware { every } | RetunePolicy::DriftGated { every }
+                    if every > 0
+            );
         engine.timeline.set_enabled(record);
+
+        // The fidelity monitor's analytic side: per-bundle predictions
+        // for the compute phases and the FedAvg column reduce depend
+        // only on (s, b, mesh, partition, profile), so they are priced
+        // once here; the row reduce re-prices per bundle (a retune pin
+        // changes its algorithm). Defaulting the prediction profile to
+        // the charging profile makes a `Modeled` run self-consistent.
+        let predict_profile =
+            self.predict_profile.unwrap_or_else(|| self.opts.profile.clone());
+        let pred_compute = predict_compute_phases(
+            &predict_profile,
+            cfg.s,
+            cfg.b,
+            self.ds.zbar(),
+            self.ds.n(),
+            &mp.cols.n_local,
+        );
+        let pred_fedavg =
+            predict_fedavg(&predict_profile, &self.opts, mesh.p_r, &mp.cols.n_local);
 
         Session {
             backend: self.backend,
@@ -513,17 +624,30 @@ impl<'a> SessionBuilder<'a> {
             states,
             avg_parts,
             charged_scratch: Vec::with_capacity(Phase::all().len()),
+            wait_scratch: Vec::with_capacity(Phase::all().len()),
+            hidden_scratch: Vec::with_capacity(Phase::all().len()),
             engine,
             bundles_run: 0,
             pending: None,
+            pred_pending: None,
             time_to_target: None,
             target_reached: false,
             row_pin: None,
             retune: self.retune,
             retunes: Vec::new(),
+            health: HealthMonitor::new(self.health),
+            fidelity: FidelityMonitor::new(self.health.drift_lambda, self.health.drift_threshold),
+            predict_profile,
+            pred_compute,
+            pred_fedavg,
             trace_obs: if self.trace { Some(LossTrace::default()) } else { None },
             timeline_obs: if record { Some(TimelineRecorder) } else { None },
             book_obs: if self.book { Some(PhaseAccounting) } else { None },
+            metrics_obs: if self.metrics_sinks.is_empty() {
+                None
+            } else {
+                Some(MetricsObserver::new(self.metrics_sinks))
+            },
             observers: self.observers,
         }
     }
@@ -572,11 +696,20 @@ pub struct Session<'a> {
     /// Reused per-bundle snapshot of the mean charged books
     /// ([`Phase::all`] order).
     charged_scratch: Vec<f64>,
+    /// Like `charged_scratch`, for the wait books (the overlap identity
+    /// `transfer = charged − wait + hidden` needs all three deltas).
+    wait_scratch: Vec<f64>,
+    /// Like `charged_scratch`, for the hidden books.
+    hidden_scratch: Vec<f64>,
     engine: Engine,
     bundles_run: usize,
     /// At most one row reduce in flight (posted under
     /// `OverlapPolicy::Bundle`, completed after the next bundle's Gram).
     pending: Option<CollHandle>,
+    /// The analytic `(seconds, words, messages)` prediction for the
+    /// in-flight row reduce — the fidelity monitor's mirror of
+    /// `pending`, settled in lockstep with it.
+    pred_pending: Option<(f64, f64, f64)>,
     time_to_target: Option<f64>,
     target_reached: bool,
     /// Bound-aware re-pin for the row collective (None = follow
@@ -584,9 +717,23 @@ pub struct Session<'a> {
     row_pin: Option<Algorithm>,
     retune: RetunePolicy,
     retunes: Vec<RetuneEvent>,
+    /// Convergence detector (always on; pure observation).
+    health: HealthMonitor,
+    /// Predicted-vs-charged drift tracker (always on; pure observation).
+    fidelity: FidelityMonitor,
+    /// Profile the fidelity predictions are priced from (defaults to the
+    /// charging profile).
+    predict_profile: CalibProfile,
+    /// Per-bundle predicted mean charged seconds for the compute phases
+    /// (priced once at build; see `predict_compute_phases`).
+    pred_compute: Vec<(Phase, f64)>,
+    /// Predicted `(seconds, words, messages)` of one FedAvg column
+    /// averaging (mean per rank; priced once at build).
+    pred_fedavg: (f64, f64, f64),
     trace_obs: Option<LossTrace>,
     timeline_obs: Option<TimelineRecorder>,
     book_obs: Option<PhaseAccounting>,
+    metrics_obs: Option<MetricsObserver<'a>>,
     observers: Vec<Box<dyn Observer + 'a>>,
 }
 
@@ -640,6 +787,17 @@ impl<'a> Session<'a> {
         assemble_averaged(&self.mp, &self.states)
     }
 
+    /// Current convergence verdict.
+    pub fn health(&self) -> HealthStatus {
+        self.health.status()
+    }
+
+    /// Current predicted-vs-charged drift gauges (phases in
+    /// [`Phase::all`] order, then words, then messages).
+    pub fn drift(&self) -> Vec<DriftEntry> {
+        self.fidelity.drift()
+    }
+
     /// Advance exactly one outer bundle (`s` inner iterations): sample,
     /// SpMV/Gram, row-team reduce (possibly posted nonblocking), the
     /// correction recurrence, the weight scatter, the deferred FedAvg
@@ -665,6 +823,16 @@ impl<'a> Session<'a> {
         self.charged_scratch.clear();
         self.charged_scratch
             .extend(Phase::all().iter().map(|&ph| self.engine.book.mean_charged(ph)));
+        self.wait_scratch.clear();
+        self.wait_scratch.extend(Phase::all().iter().map(|&ph| self.engine.book.mean_wait(ph)));
+        self.hidden_scratch.clear();
+        self.hidden_scratch
+            .extend(Phase::all().iter().map(|&ph| self.engine.book.mean_hidden(ph)));
+        // Row-reduce predictions settled during this bundle (sum of the
+        // previous overlapped transfer and/or this bundle's blocking
+        // one), mirroring exactly when the engine charges them.
+        let mut row_settles = 0usize;
+        let mut settled_row = (0.0, 0.0, 0.0);
 
         // --- 1+2: sample, gather the bundle stack, partial products,
         //     partial Gram ------------------------------------------
@@ -723,7 +891,16 @@ impl<'a> Session<'a> {
         // SpMV/Gram (and the previous bundle's tail phases).
         if let Some(h) = self.pending.take() {
             self.engine.wait(h);
+            if let Some(p) = self.pred_pending.take() {
+                row_settles += 1;
+                settled_row = (settled_row.0 + p.0, settled_row.1 + p.1, settled_row.2 + p.2);
+            }
         }
+
+        // Price the reduce we are about to post under the *current* pin
+        // (a retune later this bundle changes the next post, not this
+        // one) — the fidelity monitor's analytic side of phase 3.
+        let row_pred = self.predict_row();
 
         // --- 3: row-team reduce of [v | tril(G)] ---------------------
         // A bound-aware re-pin overrides the policy for the row
@@ -770,6 +947,16 @@ impl<'a> Session<'a> {
             }
         }
         self.engine.algo = self.opts.algo;
+        // Mirror the post: a blocking reduce settled (and charged) right
+        // here; an overlapped one is in flight until the next bundle's
+        // wait (or the end-of-run settles).
+        if self.pending.is_some() {
+            self.pred_pending = Some(row_pred);
+        } else {
+            row_settles += 1;
+            settled_row =
+                (settled_row.0 + row_pred.0, settled_row.1 + row_pred.1, settled_row.2 + row_pred.2);
+        }
 
         // --- 4: redundant correction recurrence ----------------------
         self.engine.compute(Phase::Correction, &mut self.states, |_rank, st| {
@@ -799,6 +986,17 @@ impl<'a> Session<'a> {
             )
         });
 
+        // The bundle's update magnitude (z now holds the η/b-scaled
+        // coefficients): the convergence monitor's NaN/Inf tripwire and
+        // a cheap step-size diagnostic. Pure observation.
+        let update_norm = self
+            .states
+            .iter()
+            .map(|st| st.z.iter().map(|&z| z * z).sum::<f64>())
+            .sum::<f64>()
+            .sqrt();
+        self.health.observe_update(update_norm);
+
         // --- every τ bundles: column-team averaging ------------------
         let fedavg_fired = (bundle + 1) % self.cfg.tau == 0;
         if fedavg_fired {
@@ -818,6 +1016,7 @@ impl<'a> Session<'a> {
             || bundle + 1 == self.opts.max_bundles;
         let mut eval = None;
         let mut target_hit = false;
+        let mut loss_delta = None;
         if eval_now {
             let t0 = Instant::now();
             let x_global = assemble_averaged_into(&self.mp, &self.states, &mut self.avg_parts);
@@ -827,6 +1026,7 @@ impl<'a> Session<'a> {
             for r in 0..self.engine.p() {
                 self.engine.book.charge(Phase::Metrics, r, share);
             }
+            loss_delta = self.health.observe_loss(loss);
             target_hit = self.time_to_target.is_none()
                 && self.opts.target_loss.is_some_and(|t| loss <= t);
             if target_hit {
@@ -835,6 +1035,11 @@ impl<'a> Session<'a> {
                 // its exposed remainder (the seed read it mid-flight).
                 if let Some(h) = self.pending.take() {
                     self.engine.wait(h);
+                    if let Some(p) = self.pred_pending.take() {
+                        row_settles += 1;
+                        settled_row =
+                            (settled_row.0 + p.0, settled_row.1 + p.1, settled_row.2 + p.2);
+                    }
                 }
             }
             let tp = TracePoint {
@@ -850,23 +1055,80 @@ impl<'a> Session<'a> {
             }
         }
 
-        // --- every k bundles: bound-aware re-tune --------------------
-        let mut retune = None;
-        if let RetunePolicy::BoundAware { every } = self.retune {
-            if every > 0
-                && self.bundles_run % every == 0
-                && !self.target_reached
-                && self.cfg.mesh.p_c > 1
-            {
-                retune = Some(self.retune_now(every));
-            }
-        }
-
+        // --- fidelity: predicted vs charged, per phase ---------------
         let charged_delta: Vec<(Phase, f64)> = Phase::all()
             .iter()
             .zip(&self.charged_scratch)
             .map(|(&ph, &before)| (ph, self.engine.book.mean_charged(ph) - before))
             .collect();
+        // This bundle's slice of the comm books, via the overlap-proof
+        // identity transfer = charged − wait + hidden (holds per member
+        // whether the reduce blocked, hid, or was exposed).
+        let transfer_of = |ph: Phase| {
+            let i = Phase::all().iter().position(|&p| p == ph).unwrap();
+            charged_delta[i].1 - (self.engine.book.mean_wait(ph) - self.wait_scratch[i])
+                + (self.engine.book.mean_hidden(ph) - self.hidden_scratch[i])
+        };
+        let sstep_hidden = {
+            let i = Phase::all().iter().position(|&p| p == Phase::SstepComm).unwrap();
+            self.engine.book.mean_hidden(Phase::SstepComm) - self.hidden_scratch[i]
+        };
+        let sstep_transfer = transfer_of(Phase::SstepComm);
+        for &(ph, pred) in &self.pred_compute {
+            let i = Phase::all().iter().position(|&p| p == ph).unwrap();
+            self.fidelity.observe(ph, pred, charged_delta[i].1);
+        }
+        // Comm phases compare against their *settled* predictions only —
+        // a bundle where nothing settled (the first overlapped post, a
+        // non-FedAvg bundle) observes nothing rather than diluting the
+        // EWMA with empty 0-vs-0 pairs.
+        if row_settles > 0 {
+            self.fidelity.observe(Phase::SstepComm, settled_row.0, sstep_transfer);
+        }
+        let words_delta = self.engine.book.mean_words() - words_before;
+        let messages_delta = self.engine.book.mean_messages() - messages_before;
+        if fedavg_fired {
+            self.fidelity.observe(
+                Phase::FedAvgComm,
+                self.pred_fedavg.0,
+                transfer_of(Phase::FedAvgComm),
+            );
+        }
+        if row_settles > 0 || fedavg_fired {
+            let fed = if fedavg_fired { self.pred_fedavg } else { (0.0, 0.0, 0.0) };
+            self.fidelity.observe_traffic(
+                settled_row.1 + fed.1,
+                words_delta,
+                settled_row.2 + fed.2,
+                messages_delta,
+            );
+        }
+        let overlap_efficiency =
+            if sstep_transfer > 0.0 { Some(sstep_hidden / sstep_transfer) } else { None };
+
+        // --- every k bundles: bound-aware / drift-gated re-tune ------
+        let mut retune = None;
+        let every = match self.retune {
+            RetunePolicy::BoundAware { every } | RetunePolicy::DriftGated { every } => every,
+            RetunePolicy::Off => 0,
+        };
+        if every > 0
+            && self.bundles_run % every == 0
+            && !self.target_reached
+            && self.cfg.mesh.p_c > 1
+        {
+            // Drift-gated only acts while the model's row-reduce
+            // prediction has demonstrably stopped matching the charged
+            // books; bound-aware acts unconditionally on its cadence.
+            let fire = match self.retune {
+                RetunePolicy::DriftGated { .. } => self.fidelity.flagged(Phase::SstepComm),
+                _ => true,
+            };
+            if fire {
+                retune = Some(self.retune_now(every));
+            }
+        }
+
         let sim_wall = self.engine.sim_wall();
         let report = BundleReport {
             bundle: self.bundles_run,
@@ -877,9 +1139,14 @@ impl<'a> Session<'a> {
             fedavg_fired,
             eval,
             target_hit,
-            words_delta: self.engine.book.mean_words() - words_before,
-            messages_delta: self.engine.book.mean_messages() - messages_before,
+            words_delta,
+            messages_delta,
             retune,
+            loss_delta,
+            update_norm,
+            health: self.health.status(),
+            drift: self.fidelity.drift(),
+            overlap_efficiency,
         };
         self.notify_bundle(&report);
         Some(report)
@@ -930,6 +1197,8 @@ impl<'a> Session<'a> {
             timeline,
             retunes: self.retunes,
             time_to_target: self.time_to_target,
+            health: self.health.status(),
+            drift: self.fidelity.drift(),
         }
     }
 
@@ -964,6 +1233,26 @@ impl<'a> Session<'a> {
         ev
     }
 
+    /// Analytic `(seconds, words, messages)` for the row reduce this
+    /// bundle posts, mirroring `Engine::post_collective`'s charging
+    /// exactly (same policy resolution, same pricing functions) but
+    /// against [`Session::predict_profile`]. Re-priced per bundle
+    /// because a retune pin changes the effective policy mid-run.
+    fn predict_row(&self) -> (f64, f64, f64) {
+        let q_row = self.cfg.mesh.p_c;
+        let words = self.q + self.tril_len;
+        let policy = match self.row_pin {
+            Some(a) => AlgoPolicy::Fixed(a),
+            None => self.opts.algo,
+        };
+        let (_, cost) = if self.opts.rs_row {
+            reduce_scatter_charge(&self.predict_profile, policy, q_row, words)
+        } else {
+            charge_with(&self.predict_profile, policy, self.opts.selector, q_row, words)
+        };
+        (cost.time, cost.words, cost.messages)
+    }
+
     fn notify_bundle(&mut self, report: &BundleReport) {
         self.notify(|o, ctx| o.on_bundle(ctx, report));
     }
@@ -980,6 +1269,7 @@ impl<'a> Session<'a> {
         let mut trace_obs = self.trace_obs.take();
         let mut timeline_obs = self.timeline_obs.take();
         let mut book_obs = self.book_obs.take();
+        let mut metrics_obs = self.metrics_obs.take();
         let mut user = std::mem::take(&mut self.observers);
         {
             let ctx = self.ctx();
@@ -992,6 +1282,9 @@ impl<'a> Session<'a> {
             if let Some(o) = book_obs.as_mut() {
                 f(o, &ctx);
             }
+            if let Some(o) = metrics_obs.as_mut() {
+                f(o, &ctx);
+            }
             for o in user.iter_mut() {
                 f(o.as_mut(), &ctx);
             }
@@ -999,6 +1292,7 @@ impl<'a> Session<'a> {
         self.trace_obs = trace_obs;
         self.timeline_obs = timeline_obs;
         self.book_obs = book_obs;
+        self.metrics_obs = metrics_obs;
         self.observers = user;
     }
 
@@ -1012,6 +1306,80 @@ impl<'a> Session<'a> {
             time_to_target: self.time_to_target,
         }
     }
+}
+
+/// Charge a streamed compute cost against a profile — the same formula
+/// `Engine::run_one` applies under [`Charging::Modeled`]. (Under
+/// `Charging::Measured` the engine books host wall instead, so the
+/// fidelity gauges then report the *model-vs-machine* gap — which is the
+/// monitor's whole point, not an error.)
+fn model_charge(profile: &CalibProfile, flops: f64, bytes: f64, ws_bytes: usize) -> f64 {
+    flops * profile.gamma_flop + bytes * profile.gamma_ws(ws_bytes)
+}
+
+/// Predicted mean charged seconds per bundle for each compute phase.
+///
+/// Mirrors the exact `Cost` expressions `step_bundle` charges, with the
+/// expected batch nonzeros `nnz_c = q·z̄·n_local/n` substituted for the
+/// sampled count (the uniform-density model): a bundle holds `q·z̄`
+/// expected nonzeros and column class `c` owns an `n_local/n` slice of
+/// them. On a skew-free dataset this is exact and drift reads ~0; on
+/// skewed data the standing gap **is** the signal the monitor exists to
+/// surface.
+fn predict_compute_phases(
+    profile: &CalibProfile,
+    s: usize,
+    b: usize,
+    zbar: f64,
+    n: usize,
+    n_locals: &[usize],
+) -> Vec<(Phase, f64)> {
+    let q = s * b;
+    let (mut spgemv, mut gram, mut weights) = (0.0, 0.0, 0.0);
+    for &n_local in n_locals {
+        let nnz = q as f64 * zbar * n_local as f64 / n as f64;
+        let slab = (n_local * WORD_BYTES) as f64;
+        let ws = n_local * WORD_BYTES;
+        spgemv += model_charge(profile, 2.0 * nnz, 12.0 * nnz + slab, ws);
+        if s > 1 {
+            let flops = 2.0 * nnz + (q as f64 - 1.0) / 2.0 * nnz;
+            gram += model_charge(profile, flops, 6.0 * flops, ws);
+        }
+        weights += model_charge(profile, 2.0 * nnz, 20.0 * nnz + 2.0 * slab, ws);
+    }
+    // Each column class holds `p_r` identically-charged ranks, so the
+    // rank mean reduces to the class mean. The correction is
+    // data-independent (flops only) and identical on every rank.
+    let inv = 1.0 / n_locals.len() as f64;
+    let correction = model_charge(profile, (s * (s - 1) * b * b) as f64 + 12.0 * q as f64, 0.0, 0);
+    vec![
+        (Phase::Gram, gram * inv),
+        (Phase::WeightsUpdate, weights * inv),
+        (Phase::SpGemv, spgemv * inv),
+        (Phase::Correction, correction),
+    ]
+}
+
+/// Predicted `(seconds, words, messages)` of one FedAvg column
+/// averaging, mean per rank: each column class's team reduces that
+/// class's `n_local`-word weight slice under [`RunOpts::algo`], so the
+/// mean prices one collective per class and averages. Degenerate
+/// single-row meshes price to zero, like the engine books them.
+fn predict_fedavg(
+    profile: &CalibProfile,
+    opts: &RunOpts,
+    p_r: usize,
+    n_locals: &[usize],
+) -> (f64, f64, f64) {
+    let (mut t, mut w, mut m) = (0.0, 0.0, 0.0);
+    for &n_local in n_locals {
+        let (_, cost) = charge_with(profile, opts.algo, opts.selector, p_r, n_local);
+        t += cost.time;
+        w += cost.words;
+        m += cost.messages;
+    }
+    let inv = 1.0 / n_locals.len() as f64;
+    (t * inv, w * inv, m * inv)
 }
 
 /// Pack the lower triangle (incl. diagonal) of a row-major `q × q` matrix.

@@ -1,0 +1,396 @@
+//! Acceptance suite for the health/metrics layer (`obs::metrics` +
+//! `obs::health`):
+//!
+//! * metrics export is **observation-only** — weights, walls, traces,
+//!   and charged books are bit-identical with sinks attached vs none,
+//!   across the overlap × selector × rs_row grid, and the bundle-wall
+//!   histogram's bucket counts sum to its observation count;
+//! * the fidelity monitor is **calibrated against the engine** — on an
+//!   exactly-uniform dataset (every row holds the same nnz in every
+//!   column residue class) a `Modeled` run's predicted books match the
+//!   charged books and every drift gauge reads < 1e-9, while a doctored
+//!   `predict_profile` provably drifts and flags;
+//! * `RetunePolicy::DriftGated` fires only while the model is lying,
+//!   and never moves the trajectory;
+//! * `loss_delta` follows the eval cadence (`None` off-eval and on the
+//!   first eval, never stale), and the health verdict trips to
+//!   `Diverged` on a poisoned run;
+//! * the `PrometheusSink` scrape file is valid OpenMetrics carrying the
+//!   loss, one-hot health, per-phase drift, and overlap-efficiency
+//!   series, and the TSV sink leads with its schema row.
+
+use hybrid_sgd::collectives::SelectorSource;
+use hybrid_sgd::comm::OverlapPolicy;
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
+use hybrid_sgd::data::{synth, Dataset};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::metrics::{Phase, PhaseBook};
+use hybrid_sgd::obs::{
+    DriftKey, HealthStatus, MetricRegistry, MetricsSink, MetricsTsvSink, PrometheusSink,
+};
+use hybrid_sgd::partition::Partitioner;
+use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder, SolverRun};
+use hybrid_sgd::sparse::{Csr, GramStrategy};
+use hybrid_sgd::util::Prng;
+use std::cell::RefCell;
+use std::io;
+use std::rc::Rc;
+
+fn bits(x: &[f64]) -> Vec<u64> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+fn books_equal(a: &PhaseBook, b: &PhaseBook) -> bool {
+    Phase::all().iter().filter(|ph| ph.in_algorithm_total()).all(|&ph| {
+        a.mean_charged(ph).to_bits() == b.mean_charged(ph).to_bits()
+            && a.mean_wait(ph).to_bits() == b.mean_wait(ph).to_bits()
+            && a.mean_hidden(ph).to_bits() == b.mean_hidden(ph).to_bits()
+    }) && a.words == b.words
+        && a.messages == b.messages
+}
+
+fn runs_equal(a: &SolverRun, b: &SolverRun) -> bool {
+    bits(&a.x) == bits(&b.x)
+        && a.sim_wall.to_bits() == b.sim_wall.to_bits()
+        && a.bundles_run == b.bundles_run
+        && a.trace.len() == b.trace.len()
+        && a.trace.iter().zip(&b.trace).all(|(p, q)| p.loss.to_bits() == q.loss.to_bits())
+        && books_equal(&a.book, &b.book)
+}
+
+/// A sink the test keeps a handle to after it is boxed away into the
+/// session: records the sample count and the final registry snapshot.
+#[derive(Clone, Default)]
+struct CaptureSink {
+    state: Rc<RefCell<Captured>>,
+}
+
+#[derive(Default)]
+struct Captured {
+    samples: usize,
+    /// Last OpenMetrics exposition.
+    text: String,
+    /// Last `hybridsgd_bundle_wall_seconds` snapshot.
+    wall_hist: Option<(u64, f64, Vec<u64>)>,
+    /// Last `hybridsgd_bundles` counter value.
+    bundles_total: f64,
+}
+
+impl MetricsSink for CaptureSink {
+    fn sample(&mut self, _bundle: usize, reg: &MetricRegistry) -> io::Result<()> {
+        let mut st = self.state.borrow_mut();
+        st.samples += 1;
+        let mut buf = Vec::new();
+        reg.write_openmetrics(&mut buf)?;
+        st.text = String::from_utf8(buf).expect("exposition is utf-8");
+        st.wall_hist = reg.hist_of("hybridsgd_bundle_wall_seconds", &[]);
+        st.bundles_total = reg.value_of("hybridsgd_bundles", &[]).unwrap_or(f64::NAN);
+        Ok(())
+    }
+}
+
+/// Metrics on (a live capturing sink) vs off: bit-identical runs across
+/// the overlap × selector × rs_row grid, one sample per bundle, and the
+/// wall histogram's buckets always sum to its count.
+#[test]
+fn prop_metrics_are_observation_only_across_knob_grid() {
+    let mut rng = Prng::new(0x3E7A1);
+    let ds = synth::sparse_skewed("metrics-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        for selector in [SelectorSource::Analytic, SelectorSource::Measured] {
+            for rs_row in [false, true] {
+                let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 3);
+                let opts = RunOpts {
+                    max_bundles: 5,
+                    eval_every: 2,
+                    overlap,
+                    rs_row,
+                    selector,
+                    gram: GramStrategy::Auto,
+                    ..Default::default()
+                };
+                let plain = SessionBuilder::new(&be, &ds, cfg).opts(opts.clone()).run_to_end();
+                let cap = CaptureSink::default();
+                let metered = SessionBuilder::new(&be, &ds, cfg)
+                    .opts(opts)
+                    .metrics_sink(Box::new(cap.clone()))
+                    .run_to_end();
+                assert!(
+                    runs_equal(&plain, &metered),
+                    "metrics moved the run (overlap {overlap:?}, {selector:?}, rs_row {rs_row})"
+                );
+                let st = cap.state.borrow();
+                assert_eq!(st.samples, 5, "one sample per bundle");
+                assert_eq!(st.bundles_total, 5.0, "bundle counter counts bundles");
+                let (count, _sum, buckets) =
+                    st.wall_hist.clone().expect("wall histogram exists");
+                assert_eq!(count, 5, "one wall observation per bundle");
+                assert_eq!(buckets.iter().sum::<u64>(), count, "buckets sum to count");
+                assert_eq!(st.text.lines().last(), Some("# EOF"), "valid exposition");
+            }
+        }
+    }
+}
+
+/// Every row gets exactly `z` nonzeros in each column residue class mod
+/// `p_c`, so under the `Cyclic` partitioner each rank block's batch nnz
+/// equals the uniform-density expectation `q·z̄·n_local/n` *exactly* —
+/// the fixture on which the analytic prediction is bit-honest.
+fn exact_uniform_dataset(m: usize, n: usize, p_c: usize, z: usize) -> Dataset {
+    assert!(n % p_c == 0 && z <= n / p_c);
+    let per_class = n / p_c;
+    let mut indptr = vec![0usize];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values = Vec::new();
+    for i in 0..m {
+        let mut cols: Vec<usize> = Vec::new();
+        for c in 0..p_c {
+            for k in 0..z {
+                cols.push(c + p_c * ((i + k) % per_class));
+            }
+        }
+        cols.sort_unstable();
+        for col in cols {
+            indices.push(col as u32);
+            values.push(1.0 + 0.125 * ((i + col) % 7) as f64);
+        }
+        indptr.push(indices.len());
+    }
+    let y = (0..m).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    Dataset {
+        name: "exact-uniform".into(),
+        a: Csr::from_parts(m, n, indptr, indices, values),
+        y,
+    }
+}
+
+/// On the calibration-consistent fixture every drift gauge — the four
+/// compute phases, both comm phases, words, messages — reads ~0 (< 1e-9)
+/// under both overlap policies and both row-reduce charging paths.
+#[test]
+fn drift_is_zero_on_calibration_consistent_run() {
+    let ds = exact_uniform_dataset(48, 8, 2, 2);
+    let be = NativeBackend;
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        for rs_row in [false, true] {
+            let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+            let run = SessionBuilder::new(&be, &ds, cfg)
+                .partitioner(Partitioner::Cyclic)
+                .overlap(overlap)
+                .rs_row(rs_row)
+                .max_bundles(6)
+                .eval_every(2)
+                .run_to_end();
+            assert_eq!(run.drift.len(), 8, "6 algorithm phases + words + messages");
+            for d in &run.drift {
+                assert!(
+                    d.ewma.abs() < 1e-9 && d.last.abs() < 1e-9 && !d.flagged,
+                    "{} drifted on a self-consistent run \
+                     (overlap {overlap:?}, rs_row {rs_row}): ewma {} last {}",
+                    d.key.name(),
+                    d.ewma,
+                    d.last
+                );
+            }
+        }
+    }
+}
+
+/// A prediction profile every one of whose rates is 50× the charging
+/// profile's: times mispredict by 49/50 everywhere, while the schedule
+/// choices (and so words/messages) are unchanged — uniform scaling
+/// preserves every selector argmin.
+fn doctored_profile() -> CalibProfile {
+    let mut p = CalibProfile::perlmutter();
+    p.gamma_flop *= 50.0;
+    p.gamma_flop_dense *= 50.0;
+    for pt in p.intra.iter_mut().chain(p.inter.iter_mut()) {
+        pt.alpha *= 50.0;
+        pt.beta *= 50.0;
+    }
+    for t in p.tiers.iter_mut() {
+        t.gamma *= 50.0;
+    }
+    p
+}
+
+/// The doctored profile drifts every seconds gauge past the threshold
+/// (relative error 49/50) while the traffic gauges stay exact.
+#[test]
+fn doctored_predict_profile_flags_every_phase() {
+    let ds = exact_uniform_dataset(48, 8, 2, 2);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+    let run = SessionBuilder::new(&be, &ds, cfg)
+        .partitioner(Partitioner::Cyclic)
+        .predict_profile(doctored_profile())
+        .max_bundles(6)
+        .eval_every(2)
+        .run_to_end();
+    for d in &run.drift {
+        match d.key {
+            DriftKey::Phase(_) => assert!(
+                d.flagged && d.ewma > 0.9,
+                "{} must drift under a 50x prediction profile (ewma {})",
+                d.key.name(),
+                d.ewma
+            ),
+            DriftKey::Words | DriftKey::Messages => assert!(
+                !d.flagged && d.ewma.abs() < 1e-9,
+                "traffic books are rate-independent ({}: ewma {})",
+                d.key.name(),
+                d.ewma
+            ),
+        }
+    }
+}
+
+/// Drift-gated retuning fires only while the row-reduce drift gauge is
+/// flagged: never on a self-consistent run, on cadence under a doctored
+/// prediction profile — and either way the trajectory is untouched.
+#[test]
+fn drift_gated_retune_fires_only_when_the_model_lies() {
+    let mut rng = Prng::new(0xD61F7);
+    let ds = synth::sparse_skewed("gate-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 3);
+    let builder = || SessionBuilder::new(&be, &ds, cfg).max_bundles(6).eval_every(2);
+
+    let plain = builder().run_to_end();
+    let clean = builder().retune(RetunePolicy::DriftGated { every: 2 }).run_to_end();
+    assert!(
+        clean.retunes.is_empty(),
+        "the row-reduce prediction is exact by construction, so a \
+         self-consistent run must never trip the gate"
+    );
+    assert!(runs_equal(&plain, &clean), "an idle gate must not move the run");
+
+    let gated = builder()
+        .retune(RetunePolicy::DriftGated { every: 2 })
+        .predict_profile(doctored_profile())
+        .run_to_end();
+    assert!(!gated.retunes.is_empty(), "a lying model must trip the gate");
+    assert_eq!(gated.retunes[0].bundle, 2, "first firing on the cadence");
+    // A retune may re-pin the row collective (charged seconds move), but
+    // values are bit-identical across collective algorithms.
+    assert_eq!(bits(&plain.x), bits(&gated.x), "retuning must not move the weights");
+    assert_eq!(plain.trace.len(), gated.trace.len());
+    for (p, q) in plain.trace.iter().zip(&gated.trace) {
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "losses are trajectory state");
+    }
+}
+
+/// `loss_delta` follows the eval cadence: `None` on bundles without an
+/// eval and on the first eval, the exact previous-eval difference after
+/// that; health moves Initializing → Healthy with the first eval.
+#[test]
+fn loss_delta_and_health_follow_the_eval_cadence() {
+    let mut rng = Prng::new(0xCADE);
+    let ds = synth::sparse_skewed("cadence-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 3);
+    let mut session =
+        SessionBuilder::new(&be, &ds, cfg).max_bundles(5).eval_every(2).eta(0.05).build();
+
+    let r1 = session.step_bundle().unwrap();
+    assert!(r1.eval.is_none() && r1.loss_delta.is_none());
+    assert_eq!(r1.health, HealthStatus::Initializing, "no eval yet");
+    let r2 = session.step_bundle().unwrap();
+    assert!(r2.eval.is_some());
+    assert!(r2.loss_delta.is_none(), "first eval has no previous point");
+    assert_eq!(r2.health, HealthStatus::Healthy);
+    let r3 = session.step_bundle().unwrap();
+    assert!(r3.eval.is_none() && r3.loss_delta.is_none(), "off-cadence bundle stays None");
+    let r4 = session.step_bundle().unwrap();
+    let d = r4.loss_delta.expect("second eval has a delta");
+    let (l2, l4) = (r2.eval.unwrap().loss, r4.eval.unwrap().loss);
+    assert_eq!(d.to_bits(), (l4 - l2).to_bits(), "delta is the previous-eval difference");
+    let r5 = session.step_bundle().unwrap();
+    assert!(r5.eval.is_some(), "the final budgeted bundle always evals");
+    assert!(r5.loss_delta.is_some());
+    let run = session.finish();
+    assert_eq!(run.health, HealthStatus::Healthy);
+}
+
+/// A poisoned run (astronomical step size overflows the update norm)
+/// trips the tripwire on the very first bundle and the verdict is
+/// sticky through the run summary.
+#[test]
+fn poisoned_run_reports_diverged() {
+    let mut rng = Prng::new(0xBAD);
+    let ds = synth::sparse_skewed("poison-toy", 120, 36, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 5, 2);
+    let mut session =
+        SessionBuilder::new(&be, &ds, cfg).max_bundles(3).eval_every(1).eta(1e300).build();
+    let r1 = session.step_bundle().unwrap();
+    assert!(!r1.update_norm.is_finite(), "1e300 steps overflow the update norm");
+    assert_eq!(r1.health, HealthStatus::Diverged);
+    while !session.is_done() {
+        let _ = session.step_bundle();
+    }
+    let run = session.finish();
+    assert_eq!(run.health, HealthStatus::Diverged, "divergence is sticky");
+}
+
+/// The scrape file is valid OpenMetrics carrying every required series,
+/// the health gauge is one-hot, and the TSV series file leads with its
+/// versioned schema row.
+#[test]
+fn prometheus_scrape_file_is_valid_and_complete() {
+    let mut rng = Prng::new(0x9120);
+    let ds = synth::sparse_skewed("scrape-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let dir = std::env::temp_dir().join(format!("obs_metrics_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let prom = dir.join("run.prom");
+    let tsv = dir.join("run.tsv");
+
+    let cfg = HybridConfig::new(Mesh::new(2, 4), 2, 6, 3);
+    let run = SessionBuilder::new(&be, &ds, cfg)
+        .max_bundles(4)
+        .eval_every(2)
+        .metrics_sink(Box::new(PrometheusSink::create(&prom).unwrap()))
+        .metrics_sink(Box::new(MetricsTsvSink::create(&tsv)))
+        .run_to_end();
+    assert_eq!(run.health, HealthStatus::Healthy);
+
+    let text = std::fs::read_to_string(&prom).unwrap();
+    assert_eq!(text.lines().last(), Some("# EOF"), "exposition ends with EOF");
+    for needle in [
+        "# TYPE hybridsgd_bundles counter",
+        "hybridsgd_bundles_total 4",
+        "# TYPE hybridsgd_loss gauge",
+        "hybridsgd_loss ",
+        "hybridsgd_phase_seconds_total{phase=\"sstep_comm\",kind=\"charged\"}",
+        "hybridsgd_model_drift{series=\"sstep_comm\"}",
+        "hybridsgd_model_drift{series=\"words\"}",
+        "hybridsgd_health{state=\"healthy\"} 1",
+        "hybridsgd_overlap_efficiency{window=\"bundle\"}",
+        "hybridsgd_bundle_wall_seconds_bucket{le=\"+Inf\"} 4",
+        "hybridsgd_bundle_wall_seconds_count 4",
+        "hybridsgd_rank_busy_seconds{rank=\"7\"}",
+    ] {
+        assert!(text.contains(needle), "scrape file is missing `{needle}`:\n{text}");
+    }
+    // One-hot: exactly one health state reads 1.
+    let ones = HealthStatus::all()
+        .iter()
+        .filter(|s| text.contains(&format!("hybridsgd_health{{state=\"{}\"}} 1", s.name())))
+        .count();
+    assert_eq!(ones, 1, "health gauge is one-hot");
+
+    let series = std::fs::read_to_string(&tsv).unwrap();
+    let mut lines = series.lines();
+    assert_eq!(lines.next(), Some("kind\tbundle\tmetric\tlabels\tvalue"), "tsv header");
+    let meta = lines.next().unwrap();
+    assert!(
+        meta.starts_with("meta\t-\tschema\t-\t"),
+        "schema row leads the series: {meta}"
+    );
+    assert!(series.lines().any(|l| l.starts_with("sample\t4\thybridsgd_loss\t")));
+
+    std::fs::remove_dir_all(dir).unwrap();
+}

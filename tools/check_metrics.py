@@ -1,0 +1,257 @@
+#!/usr/bin/env python3
+"""Validate a hybrid-sgd metrics export (CI gate for the examples job).
+
+Usage:
+    check_metrics.py prom   FILE [--require FAMILY]...
+    check_metrics.py series FILE [--require METRIC]...
+
+prom: the file is an OpenMetrics text exposition (the ``train
+--metrics-out`` / ``PrometheusSink`` scrape file): every sample belongs
+to a ``# TYPE``-declared family of the right kind (counters expose
+``_total``, histograms ``_bucket``/``_sum``/``_count``), counter values
+are finite and non-negative, histogram buckets are cumulative
+nondecreasing with a final ``+Inf`` bucket equal to ``_count``, and the
+file ends with ``# EOF``. ``--require`` asserts a family is present with
+at least one sample.
+
+series: the file is the versioned ``--metrics-series`` TSV (``kind
+bundle metric labels value``): the schema row leads, bundles
+nondecrease, and every ``_total``/``_bucket``/``_count`` series is
+monotone nondecreasing across bundles — the cross-snapshot counter
+check a single scrape file cannot express.
+
+Exit 0 on a valid export, 1 with a diagnostic on the first violation.
+"""
+
+import math
+import sys
+
+SERIES_SCHEMA = 1
+
+
+def fail(msg):
+    print(f"check_metrics: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def parse_value(text, where):
+    if text == "NaN":
+        return math.nan
+    if text == "+Inf":
+        return math.inf
+    if text == "-Inf":
+        return -math.inf
+    try:
+        return float(text)
+    except ValueError:
+        fail(f"{where}: unparseable value {text!r}")
+
+
+def parse_labels(text, where):
+    """``k="v",...`` (no braces) -> dict, honoring backslash escapes."""
+    labels = {}
+    i = 0
+    while i < len(text):
+        eq = text.find('="', i)
+        if eq < 0:
+            fail(f"{where}: malformed labels {text!r}")
+        key = text[i:eq]
+        i = eq + 2
+        val = []
+        while i < len(text) and text[i] != '"':
+            if text[i] == "\\" and i + 1 < len(text):
+                val.append({"n": "\n", "\\": "\\", '"': '"'}.get(text[i + 1], text[i + 1]))
+                i += 2
+            else:
+                val.append(text[i])
+                i += 1
+        if i >= len(text):
+            fail(f"{where}: unterminated label value in {text!r}")
+        labels[key] = "".join(val)
+        i += 1  # closing quote
+        if i < len(text):
+            if text[i] != ",":
+                fail(f"{where}: expected ',' between labels in {text!r}")
+            i += 1
+    return labels
+
+
+def parse_sample(line, where):
+    """``name{labels} value`` -> (name, labels dict, value)."""
+    brace, space = line.find("{"), line.find(" ")
+    if brace != -1 and (space == -1 or brace < space):
+        name = line[:brace]
+        close = line.rfind("}")
+        if close < brace:
+            fail(f"{where}: unbalanced braces")
+        labels = parse_labels(line[brace + 1 : close], where)
+        rest = line[close + 1 :].strip()
+    else:
+        parts = line.split(None, 1)
+        if len(parts) != 2:
+            fail(f"{where}: sample needs a name and a value")
+        name, rest = parts
+        labels = {}
+    return name, labels, parse_value(rest, where)
+
+
+def base_family(name, types):
+    """Resolve a sample name to its declared family and suffix."""
+    if name in types:
+        return name, ""
+    for suffix in ("_total", "_bucket", "_sum", "_count"):
+        if name.endswith(suffix) and name[: -len(suffix)] in types:
+            return name[: -len(suffix)], suffix
+    return None, None
+
+
+def check_prom(path, required):
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        fail(f"{path}: empty file")
+    if lines[-1] != "# EOF":
+        fail(f"{path}: exposition must end with '# EOF'")
+    types = {}
+    seen = set()
+    samples = 0
+    # histogram series state: (family, labels-sans-le) -> bucket list
+    buckets = {}
+    counts = {}
+    for lineno, line in enumerate(lines, 1):
+        where = f"{path}:{lineno}"
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in ("counter", "gauge", "histogram"):
+                fail(f"{where}: malformed TYPE line {line!r}")
+            if parts[2] in types:
+                fail(f"{where}: family {parts[2]!r} declared twice")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            if lineno != len(lines) and not line.startswith("# HELP "):
+                if line != "# EOF":
+                    fail(f"{where}: unknown comment {line!r}")
+                fail(f"{where}: '# EOF' before the end of the file")
+            continue
+        name, labels, value = parse_sample(line, where)
+        family, suffix = base_family(name, types)
+        if family is None:
+            fail(f"{where}: sample {name!r} has no TYPE declaration")
+        kind = types[family]
+        if kind == "counter":
+            if suffix != "_total":
+                fail(f"{where}: counter sample {name!r} must use the _total suffix")
+            if not (value >= 0.0 and math.isfinite(value)):
+                fail(f"{where}: counter {name!r} must be finite and >= 0, got {value}")
+        elif kind == "gauge":
+            if suffix != "":
+                fail(f"{where}: gauge sample {name!r} must not be suffixed")
+        else:  # histogram
+            key = (family, tuple(sorted((k, v) for k, v in labels.items() if k != "le")))
+            if suffix == "_bucket":
+                if "le" not in labels:
+                    fail(f"{where}: histogram bucket without an 'le' label")
+                le = parse_value(labels["le"], where)
+                buckets.setdefault(key, []).append((le, value))
+            elif suffix == "_count":
+                counts[key] = value
+            elif suffix != "_sum":
+                fail(f"{where}: bare histogram sample {name!r}")
+        seen.add(family)
+        samples += 1
+    for (family, labels), series in buckets.items():
+        prev_le, prev_cum = -math.inf, 0.0
+        for le, cum in series:
+            if le <= prev_le:
+                fail(f"{path}: {family}{dict(labels)}: 'le' bounds not ascending")
+            if cum < prev_cum:
+                fail(f"{path}: {family}{dict(labels)}: bucket counts decrease at le={le}")
+            prev_le, prev_cum = le, cum
+        if prev_le != math.inf:
+            fail(f"{path}: {family}{dict(labels)}: last bucket must be le=\"+Inf\"")
+        if (family, labels) not in counts:
+            fail(f"{path}: {family}{dict(labels)}: _bucket series without _count")
+        if counts[(family, labels)] != prev_cum:
+            fail(
+                f"{path}: {family}{dict(labels)}: +Inf bucket {prev_cum} != "
+                f"_count {counts[(family, labels)]}"
+            )
+    for fam in required:
+        if fam not in seen:
+            fail(f"{path}: required family {fam!r} has no samples")
+    print(f"check_metrics: OK: {path}: {samples} samples across {len(seen)} families")
+
+
+def check_series(path, required):
+    with open(path) as f:
+        lines = f.read().splitlines()
+    if not lines:
+        fail(f"{path}: empty file")
+    header = lines[0].split("\t")
+    if header != ["kind", "bundle", "metric", "labels", "value"]:
+        fail(f"{path}: unexpected header {header}")
+    if len(lines) < 2 or lines[1].split("\t")[:4] != ["meta", "-", "schema", "-"]:
+        fail(f"{path}: the schema row must lead the series")
+    schema = int(lines[1].split("\t")[4])
+    if schema != SERIES_SCHEMA:
+        fail(f"{path}: schema {schema}, this checker understands {SERIES_SCHEMA}")
+    seen = set()
+    rows = 0
+    last_bundle = -1
+    # (metric, labels) -> last value, for the monotone-counter check.
+    monotone = {}
+    for lineno, line in enumerate(lines[2:], 3):
+        where = f"{path}:{lineno}"
+        cells = line.split("\t")
+        if len(cells) != 5:
+            fail(f"{where}: want 5 cells, got {len(cells)}")
+        kind, bundle, metric, labels, value = cells
+        if kind != "sample":
+            fail(f"{where}: unknown kind {kind!r}")
+        b = int(bundle)
+        if b < last_bundle:
+            fail(f"{where}: bundles must not decrease ({b} after {last_bundle})")
+        last_bundle = b
+        v = parse_value(value, where)
+        if metric.endswith(("_total", "_bucket", "_count")):
+            key = (metric, labels)
+            if key in monotone and v < monotone[key]:
+                fail(f"{where}: counter {metric}{labels} decreased ({monotone[key]} -> {v})")
+            monotone[key] = v
+        seen.add(metric)
+        rows += 1
+    for metric in required:
+        if metric not in seen:
+            fail(f"{path}: required metric {metric!r} has no rows")
+    print(f"check_metrics: OK: {path}: {rows} rows across {len(seen)} series")
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    fmt, path = argv[1], argv[2]
+    required = []
+    rest = argv[3:]
+    while rest:
+        flag = rest.pop(0)
+        if flag == "--require" and rest:
+            required.append(rest.pop(0))
+        else:
+            print(f"check_metrics: unknown argument {flag!r}", file=sys.stderr)
+            return 2
+    if fmt == "prom":
+        check_prom(path, required)
+    elif fmt == "series":
+        check_series(path, required)
+    else:
+        print(f"check_metrics: unknown format {fmt!r} (want prom|series)", file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -21,18 +21,22 @@ Each input file is one bench target's captured stdout (named
 * ``summary``-prefixed TSV rows (the ``obs::summary`` run report some
   benches print: ``summary <kind> <key> <a> <b> <c> <d>``) — folded into
   a ``summary`` dict so per-phase charged/wait/hidden seconds, traffic,
-  and the retune history ride the trajectory next to the kernel medians.
+  the health verdict, the model-drift gauges, and the retune history
+  ride the trajectory next to the kernel medians.
 
 Output schema (one object per bench)::
 
     { "<bench>": { "wall_s": 12.3, "speedups": [1.87, ...],
                    "kernels_ns": {"gram gathered | q=128 zbar=64": 812.0},
                    "sections": ["Table 8 - ...", ...], "lines": 120,
-                   "summary": { "schema": 1, "sim_wall": 0.42,
+                   "summary": { "schema": 2, "sim_wall": 0.42,
                                 "phases": {"spgemv": {"charged": ..,
                                            "wait": .., "hidden": ..,
                                            "max_charged": ..}},
                                 "traffic": {"words": .., "messages": ..},
+                                "health": "healthy",
+                                "drift": {"sstep_comm": {"ewma": ..,
+                                          "last": .., "flagged": 0.0}},
                                 "retunes": [{"bundle": 3, "axis": "latency",
                                              "algo": "rd", "switched": 1}],
                                 "pin": "rd" } }
@@ -96,6 +100,14 @@ def fold_summary(rows: list) -> dict:
             out["traffic"] = {"words": fnum(a), "messages": fnum(b)}
         elif kind == "total":
             out[f"total_{key}"] = fnum(a)
+        elif kind == "health":
+            out["health"] = a
+        elif kind == "drift":
+            out.setdefault("drift", {})[key] = {
+                "ewma": fnum(a),
+                "last": fnum(b),
+                "flagged": fnum(c),
+            }
         elif kind == "retune":
             out["retunes"].append(
                 {"bundle": fnum(a), "axis": b, "algo": c, "switched": fnum(d)}
