@@ -20,7 +20,7 @@ fn main() {
     let mut args = std::env::args().skip(1);
     let spec = args
         .next()
-        .and_then(|s| DatasetSpec::from_name(&s))
+        .and_then(|s| s.parse().ok())
         .unwrap_or(DatasetSpec::UrlLike);
     let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(256);
     let prof = CalibProfile::perlmutter();

@@ -12,7 +12,7 @@ use hybrid_sgd::experiments::{fixtures, table11, Effort};
 fn main() {
     let spec = std::env::args()
         .nth(1)
-        .and_then(|s| DatasetSpec::from_name(&s))
+        .and_then(|s| s.parse().ok())
         .unwrap_or(DatasetSpec::UrlLike);
     let effort = Effort::Quick;
     let ds = fixtures::dataset(spec, effort);

@@ -47,7 +47,7 @@ fn main() {
     let mut args = std::env::args().skip(1);
     let spec = args
         .next()
-        .and_then(|s| DatasetSpec::from_name(&s))
+        .and_then(|s| s.parse().ok())
         .unwrap_or(DatasetSpec::UrlLike);
     let p: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(32);
     let scale: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(0.05);

@@ -18,9 +18,19 @@
 //! boundary, and the run ends with the versioned `obs::summary` TSV
 //! block.
 //!
+//! The run executes on the engine's **execution backend** seam: `sim`
+//! (default) walks the ranks on the host thread with fully simulated
+//! clocks; `threads` runs each rank as a real OS thread and every
+//! collective as a barrier-synchronized shared-memory reduction — values
+//! bit-identical to sim, with measured per-phase wall seconds recorded
+//! alongside the charged books (printed at the end, and scored by the
+//! `wall_*` drift gauges in the summary).
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! cargo run --release --example quickstart -- quick   # CI smoke scale
+//! cargo run --release --example quickstart -- quick threads  # real ranks
+//! HYBRID_SGD_BACKEND=threads cargo run --release --example quickstart
 //! ```
 //!
 //! The same scrape file comes out of the CLI with `train --metrics-out`;
@@ -34,7 +44,9 @@
 //! # `hybridsgd_model_drift{series=...}` gauges chart live in Grafana.
 //! ```
 
+use hybrid_sgd::comm::ExecBackend;
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
+use hybrid_sgd::metrics::Phase;
 use hybrid_sgd::costmodel::{topology, CalibProfile, HybridConfig};
 use hybrid_sgd::data::DatasetSpec;
 use hybrid_sgd::obs::{JsonlSink, PerfettoSink, PrometheusSink, RunSummary};
@@ -45,7 +57,12 @@ use hybrid_sgd::sparse::GramStrategy;
 use std::time::Instant;
 
 fn main() {
-    let quick = std::env::args().nth(1).is_some_and(|a| a == "quick");
+    let quick = std::env::args().any(|a| a == "quick");
+    let exec = if std::env::args().any(|a| a == "threads") {
+        ExecBackend::Threads
+    } else {
+        ExecBackend::from_env()
+    };
     let (scale, p, max_bundles) = if quick { (0.05, 16, 150) } else { (0.12, 64, 600) };
 
     // 1. A real small workload: the url-like profile (sparse, huge-n,
@@ -83,9 +100,14 @@ fn main() {
     // 4. Train to a target loss, one bundle at a time through the session
     //    API (the builder absorbs what used to be a RunOpts struct).
     let cfg = HybridConfig::new(mesh, 4, 32, 10);
+    println!("execution backend: {} (select with `-- threads` or HYBRID_SGD_BACKEND)", exec.name());
     let session = |cfg, policy| {
         SessionBuilder::new(backend, &ds, cfg)
             .partitioner(policy)
+            // Execution backend seam: `threads` turns every rank into an
+            // OS thread and every collective into a real shared-memory
+            // reduction; the trajectory stays bit-identical to `sim`.
+            .backend(exec)
             .eta(0.5)
             .max_bundles(max_bundles)
             .eval_every(5)
@@ -141,6 +163,16 @@ fn main() {
         println!("time-to-target 0.55: {t:.4} simulated s");
     }
     println!("health: {}", run.health.name());
+    if exec == ExecBackend::Threads {
+        let phases: Vec<Phase> =
+            Phase::all().into_iter().filter(|ph| ph.in_algorithm_total()).collect();
+        let charged: f64 = phases.iter().map(|&ph| run.book.mean_charged(ph)).sum();
+        let measured: f64 = phases.iter().map(|&ph| run.measured.mean_charged(ph)).sum();
+        println!(
+            "threads backend: {measured:.4} s measured wall vs {charged:.4} s charged \
+             (mean/rank; per-phase `measured` rows in the summary below)"
+        );
+    }
     for d in run.drift.iter().filter(|d| d.flagged) {
         println!(
             "model drift flagged: {} (ewma relative error {:.3})",

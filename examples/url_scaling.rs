@@ -11,7 +11,7 @@ use hybrid_sgd::experiments::{fig7, Effort};
 fn main() {
     let effort = std::env::args()
         .nth(1)
-        .and_then(|s| Effort::from_name(&s))
+        .and_then(|s| s.parse().ok())
         .unwrap_or(Effort::Quick);
     println!("{}", fig7::run(effort).render());
     println!("series TSV: results/fig7_strong_scaling.tsv");

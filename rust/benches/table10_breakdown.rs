@@ -5,13 +5,17 @@
 //! `obs::summary` block reports the same breakdown as versioned
 //! `summary`-prefixed TSV rows, which `tools/collect_bench.py` folds
 //! into `BENCH_ci.json` (per-phase charged/wait/hidden ride the CI
-//! trajectory as absolute numbers).
+//! trajectory as absolute numbers). The summary run executes under the
+//! threads backend, so the block also carries per-phase `measured` wall
+//! rows — the analytic model scored against this host's real clock.
 
+use hybrid_sgd::comm::ExecBackend;
 use hybrid_sgd::compute::NativeBackend;
 use hybrid_sgd::costmodel::HybridConfig;
 use hybrid_sgd::data::{synth, DatasetSpec};
 use hybrid_sgd::experiments::{table10, Effort};
 use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::metrics::Phase;
 use hybrid_sgd::obs::RunSummary;
 use hybrid_sgd::solvers::SessionBuilder;
 use hybrid_sgd::util::Prng;
@@ -38,6 +42,39 @@ fn main() {
     };
     let cfg = HybridConfig::new(Mesh::new(4, 8), 4, 8, 10);
     let run = SessionBuilder::new(&NativeBackend, &ds, cfg).max_bundles(8).run_to_end();
+
+    // Model-fidelity check: the same run under the threads backend, where
+    // collectives execute as real shared-memory reductions. The charged
+    // books are bit-identical to the simulated run by construction; the
+    // measured column is real wall clock, so the ratio scores the analytic
+    // model against this host. The summary block below is the one
+    // `collect_bench.py` keeps (last block wins), which folds the
+    // per-phase `measured` rows into `BENCH_ci.json`.
+    let t1 = Instant::now();
+    let treal = SessionBuilder::new(&NativeBackend, &ds, cfg)
+        .backend(ExecBackend::Threads)
+        .max_bundles(8)
+        .run_to_end();
+    let twall = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        run.book.algorithm_total().to_bits(),
+        treal.book.algorithm_total().to_bits(),
+        "threads backend must charge identically to the simulator"
+    );
+    println!("== charged vs measured (threads backend) ==");
+    println!("{:<16}  {:>14}  {:>14}", "phase", "charged s", "measured s");
+    for ph in Phase::all() {
+        if !ph.in_algorithm_total() {
+            continue;
+        }
+        println!(
+            "{:<16}  {:>14.6}  {:>14.6}",
+            ph.name(),
+            treal.book.mean_charged(ph),
+            treal.measured.mean_charged(ph)
+        );
+    }
+    println!("(threads run generated in {twall:.1}s)");
     println!("== run summary (obs) ==");
-    print!("{}", RunSummary::from_run(&run).render());
+    print!("{}", RunSummary::from_run(&treal).render());
 }

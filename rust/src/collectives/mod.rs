@@ -106,22 +106,18 @@ impl Algorithm {
         }
     }
 
-    /// Parse a CLI/env label.
-    pub fn from_name(s: &str) -> Option<Algorithm> {
-        match s {
-            "linear" => Some(Algorithm::Linear),
-            "recursive-doubling" | "rd" => Some(Algorithm::RecursiveDoubling),
-            "ring" => Some(Algorithm::RingAllreduce),
-            "rabenseifner" | "rab" => Some(Algorithm::Rabenseifner),
-            _ => None,
-        }
-    }
-
     /// The implementation behind this tag.
     pub fn as_algo(&self) -> &'static dyn CollectiveAlgo {
         algos::lookup(*self)
     }
 }
+
+crate::impl_enum_from_str!(Algorithm, "collective algorithm",
+    ("linear" => Algorithm::Linear),
+    ("recursive-doubling" | "rd" => Algorithm::RecursiveDoubling),
+    ("ring" => Algorithm::RingAllreduce),
+    ("rabenseifner" | "rab" => Algorithm::Rabenseifner),
+);
 
 /// How the engine (or a predictor) picks the collective algorithm.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -133,6 +129,25 @@ pub enum AlgoPolicy {
     /// Pin one algorithm for every collective (e.g. `Fixed(Linear)`
     /// reproduces the seed engine's books exactly).
     Fixed(Algorithm),
+}
+
+impl std::str::FromStr for AlgoPolicy {
+    type Err = String;
+
+    /// `auto`, or any [`Algorithm`] name to pin it — the `--collective`
+    /// knob's grammar, with the shared unknown-value message listing both.
+    fn from_str(s: &str) -> Result<AlgoPolicy, String> {
+        if s == "auto" {
+            return Ok(AlgoPolicy::Auto);
+        }
+        s.parse::<Algorithm>().map(AlgoPolicy::Fixed).map_err(|_| {
+            crate::util::parse::unknown_value(
+                "collective policy",
+                s,
+                &["auto", "linear", "recursive-doubling", "rd", "ring", "rabenseifner", "rab"],
+            )
+        })
+    }
 }
 
 /// Charged per-rank cost of one Allreduce under a specific algorithm.
@@ -388,10 +403,15 @@ mod tests {
     #[test]
     fn names_roundtrip() {
         for a in Algorithm::all() {
-            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+            assert_eq!(a.name().parse::<Algorithm>(), Ok(a));
         }
-        assert_eq!(Algorithm::from_name("rd"), Some(Algorithm::RecursiveDoubling));
-        assert_eq!(Algorithm::from_name("bogus"), None);
+        assert_eq!("rd".parse::<Algorithm>(), Ok(Algorithm::RecursiveDoubling));
+        assert!("bogus".parse::<Algorithm>().unwrap_err().contains("expected one of"));
+        // The policy grammar layers `auto` on top of the algorithm names.
+        assert_eq!("auto".parse::<AlgoPolicy>(), Ok(AlgoPolicy::Auto));
+        assert_eq!("ring".parse::<AlgoPolicy>(), Ok(AlgoPolicy::Fixed(Algorithm::RingAllreduce)));
+        let err = "bogus".parse::<AlgoPolicy>().unwrap_err();
+        assert!(err.contains("auto") && err.contains("ring"), "{err}");
     }
 
     #[test]

@@ -51,16 +51,12 @@ impl SelectorSource {
             SelectorSource::Measured => "measured",
         }
     }
-
-    /// Parse a CLI label.
-    pub fn from_name(s: &str) -> Option<SelectorSource> {
-        match s {
-            "analytic" => Some(SelectorSource::Analytic),
-            "measured" => Some(SelectorSource::Measured),
-            _ => None,
-        }
-    }
 }
+
+crate::impl_enum_from_str!(SelectorSource, "selector source",
+    ("analytic" => SelectorSource::Analytic),
+    ("measured" => SelectorSource::Measured),
+);
 
 /// What a rank's makespan is bound by, collapsed to the axis that matters
 /// for algorithm choice — the bridge from the overlap analyzer's
@@ -89,18 +85,15 @@ impl BoundBy {
             BoundBy::Bandwidth => "bandwidth",
         }
     }
-
-    /// Parse a table label (the session-checkpoint schema round-trips
-    /// retune events through these names).
-    pub fn from_name(s: &str) -> Option<BoundBy> {
-        match s {
-            "balanced" => Some(BoundBy::Balanced),
-            "latency" => Some(BoundBy::Latency),
-            "bandwidth" => Some(BoundBy::Bandwidth),
-            _ => None,
-        }
-    }
 }
+
+// The session-checkpoint schema round-trips retune events through these
+// names, so the parse must stay the exact inverse of `name`.
+crate::impl_enum_from_str!(BoundBy, "bound axis",
+    ("balanced" => BoundBy::Balanced),
+    ("latency" => BoundBy::Latency),
+    ("bandwidth" => BoundBy::Bandwidth),
+);
 
 /// Near-tie slack for [`AutoSelector::pick_bound_aware`]: a candidate
 /// within this factor of the cheapest total is eligible for the
@@ -394,10 +387,13 @@ mod tests {
     #[test]
     fn selector_source_names_roundtrip() {
         for s in [SelectorSource::Analytic, SelectorSource::Measured] {
-            assert_eq!(SelectorSource::from_name(s.name()), Some(s));
+            assert_eq!(s.name().parse::<SelectorSource>(), Ok(s));
         }
-        assert_eq!(SelectorSource::from_name("bogus"), None);
+        assert!("bogus".parse::<SelectorSource>().is_err());
         assert_eq!(SelectorSource::default(), SelectorSource::Analytic);
+        for b in [BoundBy::Balanced, BoundBy::Latency, BoundBy::Bandwidth] {
+            assert_eq!(b.name().parse::<BoundBy>(), Ok(b));
+        }
     }
 
     #[test]

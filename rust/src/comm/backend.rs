@@ -1,0 +1,227 @@
+//! Execution backends: simulated ranks vs. real threads-as-ranks.
+//!
+//! [`ExecBackend`] is the seam between the two ways the engine can
+//! *execute* a run:
+//!
+//! - **`Sim`** (the default): one host thread walks the ranks; compute
+//!   closures run sequentially (or chunked over compute lanes) and
+//!   collectives are a host-side snapshot + canonical reduce. All cost
+//!   lives in the charged books.
+//! - **`Threads`**: each of the `p` ranks becomes an OS thread owning its
+//!   partition state for the phase, and every team collective is a real
+//!   shared-memory reduction — one worker thread per team member, a
+//!   [`std::sync::Barrier`] round-walk over the resolved
+//!   [`CollectiveSchedule`](crate::timeline::CollectiveSchedule) shapes
+//!   (so the memory traffic follows the charged algorithm's rounds), and
+//!   a chunk-parallel accumulation that preserves the **canonical linear
+//!   team order per element** — reduced values are bit-identical to
+//!   `Sim` by construction.
+//!
+//! The backend never touches the charged books: under
+//! [`Charging::Modeled`](crate::comm::Charging) trajectories, clocks,
+//! and books are bit-for-bit identical across backends
+//! (property-tested in `tests/session_equivalence.rs`), while the
+//! engine's **measured** book records what the execution actually cost
+//! in host wall seconds — the charged-vs-measured pair the fidelity
+//! monitor ([`crate::obs::health`]) scores the analytic model with.
+//!
+//! The pool that runs rank compute under `Threads` is governed by the
+//! engine's `lanes` knob: `lanes ≤ 1` means one thread per rank (full
+//! threads-as-ranks, the natural default), larger values cap the
+//! concurrent pool at `lanes` threads (ranks are chunked over them).
+//! Collectives always run one worker per team member.
+
+use crate::collectives::{Reduce, ScheduleStep};
+use std::sync::Barrier;
+use std::time::Instant;
+
+/// How the engine executes ranks and collectives (see the module docs).
+/// Orthogonal to [`Charging`](crate::comm::Charging): the backend decides
+/// *what actually runs*, charging decides *what the simulated clocks are
+/// billed*.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecBackend {
+    /// Simulated ranks on the host thread (charged clocks only).
+    #[default]
+    Sim,
+    /// Threads-as-ranks: real OS threads and real shared-memory
+    /// reductions, with measured wall-clock recorded alongside the
+    /// charged books. Values stay bit-identical to `Sim`.
+    Threads,
+}
+
+crate::impl_enum_from_str!(ExecBackend, "execution backend",
+    ("sim" => ExecBackend::Sim),
+    ("threads" => ExecBackend::Threads),
+);
+
+impl ExecBackend {
+    /// All backends, for sweeps and tests.
+    pub fn all() -> [ExecBackend; 2] {
+        [ExecBackend::Sim, ExecBackend::Threads]
+    }
+
+    /// Display / CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Sim => "sim",
+            ExecBackend::Threads => "threads",
+        }
+    }
+
+    /// The backend named by `HYBRID_SGD_BACKEND` (unset or unparsable →
+    /// `Sim`). This is how CI reruns the whole suite threads-mode without
+    /// touching each invocation: `RunOpts::default` consults it.
+    pub fn from_env() -> ExecBackend {
+        std::env::var("HYBRID_SGD_BACKEND")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(ExecBackend::Sim)
+    }
+}
+
+/// Size of the rank-compute thread pool under `Threads` for `p` ranks:
+/// `lanes ≤ 1` → one thread per rank, else min(lanes, p).
+pub(crate) fn threads_pool(lanes: usize, p: usize) -> usize {
+    if lanes <= 1 {
+        p
+    } else {
+        lanes.min(p)
+    }
+}
+
+/// Execute one team collective for real: `q` worker threads (one per
+/// team member) round-walk `steps` — each member streams the round's
+/// word count from its contribution through private staging, then meets
+/// the team barrier, mirroring the resolved algorithm's communication
+/// rounds in shared memory — and then reduce `contribs` into `acc`
+/// chunk-parallel, each element accumulated in **canonical linear team
+/// order** (bit-identical to
+/// [`canonical_reduce_into`](crate::collectives::canonical_reduce_into)).
+///
+/// Returns the measured wall seconds of the whole collective.
+pub(crate) fn team_reduce_threads(
+    contribs: &[Vec<f64>],
+    steps: &[ScheduleStep],
+    op: Reduce,
+    acc: &mut Vec<f64>,
+) -> f64 {
+    let q = contribs.len();
+    assert!(q > 0, "team reduce over empty team");
+    let words = contribs[0].len();
+    acc.clear();
+    acc.resize(words, 0.0);
+    let t0 = Instant::now();
+    if q == 1 {
+        acc.copy_from_slice(&contribs[0]);
+        return t0.elapsed().as_secs_f64();
+    }
+    let inv = 1.0 / q as f64;
+    let chunk = words.div_ceil(q).max(1);
+    let barrier = Barrier::new(q);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let mut rest: &mut [f64] = acc.as_mut_slice();
+        let mut offset = 0usize;
+        for member in 0..q {
+            let take = chunk.min(rest.len());
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let off = offset;
+            offset += take;
+            let barrier = &barrier;
+            handles.push(scope.spawn(move || {
+                // Round walk: the member's real memory traffic follows
+                // the charged schedule's shapes — one staging copy of the
+                // round's words, then the team barrier (the real
+                // synchronization cost each round).
+                let me = &contribs[member];
+                let mut staging: Vec<f64> = Vec::new();
+                for step in steps {
+                    let n = (step.words.ceil() as usize).min(me.len());
+                    staging.clear();
+                    staging.extend_from_slice(&me[..n]);
+                    std::hint::black_box(&mut staging);
+                    barrier.wait();
+                }
+                // Chunk-parallel canonical reduce: this member's element
+                // range, every element accumulated in linear team order
+                // (then the Mean divide), exactly the Sim kernel's fp
+                // sequence per element.
+                for (i, a) in mine.iter_mut().enumerate() {
+                    let idx = off + i;
+                    let mut s = 0.0f64;
+                    for c in contribs {
+                        s += c[idx];
+                    }
+                    if op == Reduce::Mean {
+                        s *= inv;
+                    }
+                    *a = s;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("rank thread panicked in team reduce");
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::canonical_reduce;
+
+    #[test]
+    fn names_roundtrip_and_env_defaults_sim() {
+        for b in ExecBackend::all() {
+            assert_eq!(b.name().parse::<ExecBackend>(), Ok(b));
+        }
+        let err = "cuda".parse::<ExecBackend>().unwrap_err();
+        assert_eq!(err, "unknown execution backend `cuda`, expected one of sim|threads");
+        assert_eq!(ExecBackend::default(), ExecBackend::Sim);
+    }
+
+    #[test]
+    fn pool_is_one_thread_per_rank_unless_lanes_cap() {
+        assert_eq!(threads_pool(1, 8), 8);
+        assert_eq!(threads_pool(0, 8), 8);
+        assert_eq!(threads_pool(3, 8), 3);
+        assert_eq!(threads_pool(16, 8), 8);
+    }
+
+    /// The threaded reduce is bit-identical to the canonical kernel —
+    /// including the catastrophic-cancellation probe that any reordering
+    /// would break, and the Mean divide.
+    #[test]
+    fn threaded_reduce_matches_canonical_bitwise() {
+        let steps = [ScheduleStep { time: 1e-6, words: 3.0, messages: 1.0 }; 2];
+        for op in [Reduce::Sum, Reduce::Mean] {
+            for q in [1usize, 2, 3, 7] {
+                for words in [1usize, 2, 5, 64, 1000] {
+                    let contribs: Vec<Vec<f64>> = (0..q)
+                        .map(|m| {
+                            (0..words)
+                                .map(|i| ((m * words + i) as f64 * 0.7).sin() * 1e3)
+                                .collect()
+                        })
+                        .collect();
+                    let views: Vec<&[f64]> = contribs.iter().map(|c| c.as_slice()).collect();
+                    let want = canonical_reduce(&views, op);
+                    let mut got = Vec::new();
+                    let wall = team_reduce_threads(&contribs, &steps, op, &mut got);
+                    assert!(wall >= 0.0);
+                    let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(wb, gb, "op {op:?} q {q} words {words}");
+                }
+            }
+        }
+        // The cancellation probe: linear order gives exactly 0.0.
+        let probe = vec![vec![1e16], vec![1.0], vec![-1e16]];
+        let mut acc = Vec::new();
+        team_reduce_threads(&probe, &[], Reduce::Sum, &mut acc);
+        assert_eq!(acc[0], 0.0);
+    }
+}

@@ -1,8 +1,9 @@
-//! The simulated-clock rank engine, with **two charging regimes**.
+//! The rank engine: **two charging regimes** on simulated clocks, plus a
+//! **third, real-execution regime** behind the [`ExecBackend`] seam.
 //!
 //! Every solver phase runs real math on real partitions while each of the
-//! `p` simulated ranks carries a clock; what differs between the regimes
-//! is *when* collective transfer time lands on those clocks:
+//! `p` ranks carries a simulated clock; what differs between the first
+//! two regimes is *when* collective transfer time lands on those clocks:
 //!
 //! 1. **Bulk-synchronous** (the seed regime; [`Engine::allreduce`],
 //!    [`Engine::reduce_scatter`]). Every member first waits until the
@@ -25,17 +26,37 @@
 //!    in [`timeline::PendingCollective`](crate::timeline); the blocking
 //!    calls are literally post + immediate wait, whose degenerate branch
 //!    reproduces regime 1 expression for expression.
+//! 3. **Real execution** ([`ExecBackend::Threads`], orthogonal to the
+//!    charging regimes above). Ranks become OS threads (pool sized by
+//!    [`Engine::lanes`]; `lanes ≤ 1` = one thread per rank) and every
+//!    team collective is a real shared-memory reduction: one worker per
+//!    member, barrier-synchronized rounds following the resolved
+//!    [`CollectiveSchedule`](crate::timeline::CollectiveSchedule)
+//!    shapes, and a chunk-parallel accumulation in the canonical linear
+//!    team order — so reduced values stay **bit-identical** to `Sim`,
+//!    and under [`Charging::Modeled`] so do the clocks and charged
+//!    books. What the backend adds is the **measured book**
+//!    ([`Engine::measured`]): real host wall seconds per phase and rank,
+//!    recorded alongside the charged books. One honesty note: the
+//!    nonblocking calls still deliver values at the post (the solvers
+//!    consume the reduced payload in the same bundle), so under
+//!    `Threads` the overlap regime remains a *charging* model — the
+//!    measured book is exactly the instrument that shows how much of
+//!    the charged hiding real hardware achieves, and the fidelity
+//!    monitor ([`crate::obs::health`]) scores the analytic model against
+//!    those measured walls.
 //!
-//! All clock advances (either regime) are recorded as events on
+//! All clock advances (any regime) are recorded as events on
 //! [`Engine::timeline`], which the
 //! [`timeline::analyzer`](crate::timeline::analyzer) turns into
 //! per-phase critical-path breakdowns.
 
+use super::backend::{self, ExecBackend};
 use crate::collectives::{self, AlgoPolicy, CollectiveCost, SelectorSource};
 use crate::costmodel::calib::CalibProfile;
 use crate::mesh::Mesh;
 use crate::metrics::{Phase, PhaseBook};
-use crate::timeline::{EventKind, PendingCollective, Timeline};
+use crate::timeline::{CollectiveSchedule, EventKind, PendingCollective, Timeline};
 use std::time::Instant;
 
 pub use crate::collectives::Reduce;
@@ -87,6 +108,11 @@ pub enum Charging {
     /// Fully deterministic.
     Modeled,
 }
+
+crate::impl_enum_from_str!(Charging, "charging mode",
+    ("modeled" => Charging::Modeled),
+    ("measured" => Charging::Measured),
+);
 
 /// Which collective a posted handle charges — the full Allreduce or its
 /// reduce-scatter first half.
@@ -143,7 +169,22 @@ pub struct Engine {
     pub book: PhaseBook,
     /// Per-rank event log (the analyzer's input).
     pub timeline: Timeline,
-    /// Compute lanes (OS threads) for per-rank closures; 1 = sequential.
+    /// Execution backend (see the module docs' third regime): `Sim`
+    /// walks ranks on the host thread, `Threads` runs them as OS threads
+    /// with real shared-memory collectives. Never changes values, clocks,
+    /// or charged books (under modeled charging) — only what actually
+    /// executes and what [`Engine::measured`] records.
+    pub backend: ExecBackend,
+    /// **Measured** per-phase wall-clock book: real host seconds each
+    /// phase cost on each rank, recorded alongside the charged
+    /// [`Engine::book`] (compute walls under both backends; collective
+    /// execution walls under `Threads`). The wait/hidden columns and
+    /// traffic vectors stay zero — only charged books model those.
+    pub measured: PhaseBook,
+    /// Compute-lane threads. Under [`ExecBackend::Sim`]: chunked
+    /// parallelism for per-rank closures, 1 = sequential. Under
+    /// [`ExecBackend::Threads`]: caps the concurrent rank-thread pool
+    /// (`≤ 1` = one thread per rank).
     pub lanes: usize,
     /// Collective-algorithm policy: `Auto` (Hockney-costed selection per
     /// team size and payload, the default) or `Fixed(_)` to pin one
@@ -183,6 +224,8 @@ impl Engine {
             clock: vec![0.0; p],
             book: PhaseBook::new(p),
             timeline: Timeline::new(p),
+            backend: ExecBackend::Sim,
+            measured: PhaseBook::new(p),
             lanes: 1,
             algo: AlgoPolicy::Auto,
             selector: SelectorSource::Analytic,
@@ -193,6 +236,12 @@ impl Engine {
     /// Use up to `lanes` OS threads for compute phases.
     pub fn with_lanes(mut self, lanes: usize) -> Engine {
         self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Select the execution backend (see [`Engine::backend`]).
+    pub fn with_backend(mut self, backend: ExecBackend) -> Engine {
+        self.backend = backend;
         self
     }
 
@@ -224,12 +273,16 @@ impl Engine {
     pub fn reset_accounting(&mut self) {
         self.clock.fill(0.0);
         self.book.reset();
+        self.measured.reset();
         self.timeline.clear();
     }
 
     /// Run a compute phase: `f(rank, state)` for every rank, charging each
-    /// rank's clock. Reduction-free, so lane parallelism never changes
-    /// results — only wall time.
+    /// rank's clock. Reduction-free, so lane/thread parallelism never
+    /// changes results — only wall time. The real wall each rank's
+    /// closure took lands in [`Engine::measured`] under both backends;
+    /// under [`ExecBackend::Threads`] the ranks genuinely run as
+    /// concurrent OS threads (pool per [`Engine::lanes`]).
     pub fn compute<S: Send>(
         &mut self,
         phase: Phase,
@@ -238,16 +291,20 @@ impl Engine {
     ) {
         assert_eq!(states.len(), self.p(), "one state per rank");
         let p = self.p();
+        let pool = match self.backend {
+            ExecBackend::Sim => self.lanes.min(p).max(1),
+            ExecBackend::Threads => backend::threads_pool(self.lanes, p),
+        };
         let mut charge = vec![0.0f64; p];
-        if self.lanes <= 1 || p == 1 {
+        let mut wall = vec![0.0f64; p];
+        if pool <= 1 || p == 1 {
             for (rank, st) in states.iter_mut().enumerate() {
-                charge[rank] = self.run_one(rank, st, &f);
+                (charge[rank], wall[rank]) = self.run_one(rank, st, &f);
             }
         } else {
-            let lanes = self.lanes.min(p);
-            let chunk = p.div_ceil(lanes);
+            let chunk = p.div_ceil(pool);
             let this = &*self;
-            let charges: Vec<(usize, f64)> = std::thread::scope(|scope| {
+            let charges: Vec<(usize, f64, f64)> = std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for (ci, states_chunk) in states.chunks_mut(chunk).enumerate() {
                     let f = &f;
@@ -256,35 +313,46 @@ impl Engine {
                         states_chunk
                             .iter_mut()
                             .enumerate()
-                            .map(|(i, st)| (base + i, this.run_one(base + i, st, f)))
+                            .map(|(i, st)| {
+                                let (c, w) = this.run_one(base + i, st, f);
+                                (base + i, c, w)
+                            })
                             .collect::<Vec<_>>()
                     }));
                 }
                 handles.into_iter().flat_map(|h| h.join().expect("lane panicked")).collect()
             });
-            for (rank, c) in charges {
+            for (rank, c, w) in charges {
                 charge[rank] = c;
+                wall[rank] = w;
             }
         }
         for rank in 0..p {
             let start = self.clock[rank];
             self.clock[rank] += charge[rank];
             self.book.charge(phase, rank, charge[rank]);
+            self.measured.charge(phase, rank, wall[rank]);
             self.timeline.record(rank, phase, EventKind::Compute, start, self.clock[rank]);
         }
     }
 
-    fn run_one<S>(&self, rank: usize, st: &mut S, f: &impl Fn(usize, &mut S) -> Cost) -> f64 {
+    fn run_one<S>(
+        &self,
+        rank: usize,
+        st: &mut S,
+        f: &impl Fn(usize, &mut S) -> Cost,
+    ) -> (f64, f64) {
         let t0 = Instant::now();
         let cost = f(rank, st);
         let wall = t0.elapsed().as_secs_f64();
-        match self.charging {
+        let charge = match self.charging {
             Charging::Measured => wall,
             Charging::Modeled => {
                 cost.flops * self.profile.gamma_flop
                     + cost.bytes * self.profile.gamma_ws(cost.ws_bytes)
             }
-        }
+        };
+        (charge, wall)
     }
 
     /// Team-scoped blocking Allreduce. `buf(state)` exposes each rank's
@@ -407,26 +475,63 @@ impl Engine {
                 lane.clear();
                 lane.extend_from_slice(b);
             }
-            collectives::canonical_reduce_into(
-                &self.scratch.lanes[..q],
-                op,
-                &mut self.scratch.acc,
-            );
+            let (algo, cost): (_, CollectiveCost) = if self.backend == ExecBackend::Threads
+                && q > 1
+            {
+                // Real execution: resolve the same (algorithm, charge)
+                // the Sim path would — the schedule constructors call the
+                // identical charge functions — then run the reduction for
+                // real over the schedule's rounds with one worker thread
+                // per member. The chunk-parallel accumulation preserves
+                // the canonical linear order per element, so the values
+                // delivered below are bit-identical to Sim's.
+                let sched = match kind {
+                    CollKind::Allreduce => CollectiveSchedule::allreduce_with(
+                        &self.profile,
+                        self.algo,
+                        self.selector,
+                        q,
+                        words,
+                    ),
+                    // Reduce-scatter selection stays analytic: the
+                    // measured curves are fitted from full-Allreduce
+                    // schedules.
+                    CollKind::ReduceScatter => {
+                        CollectiveSchedule::reduce_scatter(&self.profile, self.algo, q, words)
+                    }
+                };
+                let wall = backend::team_reduce_threads(
+                    &self.scratch.lanes[..q],
+                    &sched.steps,
+                    op,
+                    &mut self.scratch.acc,
+                );
+                for &member in &team {
+                    self.measured.charge(phase, member, wall);
+                }
+                (sched.algo, sched.cost)
+            } else {
+                collectives::canonical_reduce_into(
+                    &self.scratch.lanes[..q],
+                    op,
+                    &mut self.scratch.acc,
+                );
+                match kind {
+                    CollKind::Allreduce => {
+                        collectives::charge_with(&self.profile, self.algo, self.selector, q, words)
+                    }
+                    // Reduce-scatter selection stays analytic: the measured
+                    // curves are fitted from full-Allreduce schedules.
+                    CollKind::ReduceScatter => {
+                        collectives::reduce_scatter_charge(&self.profile, self.algo, q, words)
+                    }
+                }
+            };
             // Broadcast result (the reduce-scatter path delivers the full
             // buffer too — see `reduce_scatter`'s accounting contract).
             for &member in &team {
                 buf(&mut states[member]).copy_from_slice(&self.scratch.acc);
             }
-            let (algo, cost): (_, CollectiveCost) = match kind {
-                CollKind::Allreduce => {
-                    collectives::charge_with(&self.profile, self.algo, self.selector, q, words)
-                }
-                // Reduce-scatter selection stays analytic: the measured
-                // curves are fitted from full-Allreduce schedules.
-                CollKind::ReduceScatter => {
-                    collectives::reduce_scatter_charge(&self.profile, self.algo, q, words)
-                }
-            };
             pending.push(PendingCollective::post(phase, team, &self.clock, algo, cost));
         }
         CollHandle { pending }
@@ -722,6 +827,93 @@ mod tests {
         assert!(t_rs < t_ar, "rs {t_rs} not cheaper than ar {t_ar}");
         assert!((w_rs * 2.0 - w_ar).abs() < 1e-9, "rs words {w_rs} vs ar {w_ar}");
         assert!((m_rs * 2.0 - m_ar).abs() < 1e-9);
+    }
+
+    /// The Threads backend is execution-only: values, clocks, charged
+    /// books, and traffic are bit-identical to Sim under modeled
+    /// charging, across blocking/nonblocking and reduce-scatter paths.
+    #[test]
+    fn threads_backend_bit_identical_to_sim() {
+        let run = |be: ExecBackend| {
+            let mut e = engine(2, 4).with_backend(be);
+            let mut states: Vec<St> =
+                (0..8).map(|r| St { buf: vec![(r as f64 * 0.37).sin() * 1e3; 300] }).collect();
+            e.compute(Phase::SpGemv, &mut states, |rank, s| {
+                for v in s.buf.iter_mut() {
+                    *v = (*v + rank as f64).cos();
+                }
+                Cost::flops(300.0 * (rank + 1) as f64)
+            });
+            let h = e.iallreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| {
+                &mut s.buf
+            });
+            e.compute(Phase::Gram, &mut states, |_, _| Cost::flops(5e5));
+            e.wait(h);
+            e.reduce_scatter(Phase::FedAvgComm, Scope::ColTeam, Reduce::Mean, &mut states, |s| {
+                &mut s.buf
+            });
+            let vals: Vec<Vec<u64>> =
+                states.iter().map(|s| s.buf.iter().map(|v| v.to_bits()).collect()).collect();
+            let clocks: Vec<u64> = e.clock.iter().map(|c| c.to_bits()).collect();
+            (
+                vals,
+                clocks,
+                e.book.mean_charged(Phase::SstepComm),
+                e.book.mean_hidden(Phase::SstepComm),
+                e.book.words.clone(),
+                e.book.messages.clone(),
+            )
+        };
+        assert_eq!(run(ExecBackend::Sim), run(ExecBackend::Threads));
+    }
+
+    /// Threads records real wall seconds in the measured book — compute
+    /// phases on every rank, collective execution on every team member —
+    /// while Sim's measured book only carries compute walls.
+    #[test]
+    fn threads_backend_populates_measured_book() {
+        let mut e = engine(1, 4).with_backend(ExecBackend::Threads);
+        let mut states: Vec<St> = (0..4).map(|_| St { buf: vec![1.0; 4096] }).collect();
+        e.compute(Phase::SpGemv, &mut states, |_, s| {
+            for v in s.buf.iter_mut() {
+                *v = v.sqrt() + 1.0;
+            }
+            Cost::flops(8192.0)
+        });
+        e.allreduce(Phase::SstepComm, Scope::World, Reduce::Sum, &mut states, |s| &mut s.buf);
+        for rank in 0..4 {
+            assert!(e.measured.charged_of(Phase::SpGemv, rank) > 0.0);
+            assert!(e.measured.charged_of(Phase::SstepComm, rank) > 0.0);
+        }
+        // Measured books are execution-side only: no wait/hidden columns.
+        assert_eq!(e.measured.mean_wait(Phase::SstepComm), 0.0);
+        assert_eq!(e.measured.mean_hidden(Phase::SstepComm), 0.0);
+        e.reset_accounting();
+        assert_eq!(e.measured.mean_charged(Phase::SpGemv), 0.0);
+    }
+
+    /// `lanes` caps the Threads pool without changing results.
+    #[test]
+    fn threads_pool_cap_does_not_change_results() {
+        let run = |lanes: usize| {
+            let mut e = engine(2, 3).with_backend(ExecBackend::Threads).with_lanes(lanes);
+            let mut states: Vec<St> =
+                (0..6).map(|r| St { buf: vec![r as f64 * 0.25; 64] }).collect();
+            e.compute(Phase::SpGemv, &mut states, |rank, s| {
+                for v in s.buf.iter_mut() {
+                    *v = (*v * 1.5 + rank as f64).tanh();
+                }
+                Cost::flops(64.0)
+            });
+            e.allreduce(Phase::SstepComm, Scope::RowTeam, Reduce::Sum, &mut states, |s| {
+                &mut s.buf
+            });
+            let vals: Vec<Vec<u64>> =
+                states.iter().map(|s| s.buf.iter().map(|v| v.to_bits()).collect()).collect();
+            (vals, e.clock.clone())
+        };
+        assert_eq!(run(1), run(2));
+        assert_eq!(run(1), run(6));
     }
 
     /// Every clock advance lands on the timeline as an event; hidden

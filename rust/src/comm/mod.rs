@@ -1,8 +1,16 @@
 //! The message-passing substrate (the role Cray MPICH plays in the paper).
 //!
 //! The solvers are bulk-synchronous: local compute phases separated by
-//! team-scoped Allreduces. [`Engine`] executes them over `p` *simulated
-//! ranks* with two orthogonal knobs:
+//! team-scoped Allreduces. [`Engine`] executes them over `p` ranks —
+//! simulated on the host thread or real OS threads, per the
+//! [`ExecBackend`] seam ([`backend`]) — with three orthogonal knobs:
+//!
+//! * **Execution backend** — [`ExecBackend::Sim`] walks the ranks on the
+//!   host thread; [`ExecBackend::Threads`] runs each rank as an OS thread
+//!   and every collective as a real barrier-synchronized shared-memory
+//!   reduction, recording measured wall seconds in [`Engine::measured`]
+//!   alongside the charged books. Trajectories, charged books, and
+//!   clocks are bit-identical across backends under modeled charging.
 //!
 //! * **Compute lanes** — per-rank compute closures run sequentially
 //!   (deterministic order) or in parallel across OS threads. The collective
@@ -32,8 +40,10 @@
 //! [`OverlapPolicy`](crate::timeline::OverlapPolicy) — see
 //! [`engine`]'s module docs for the two charging regimes.
 
+pub mod backend;
 pub mod engine;
 
 pub use crate::collectives::{AlgoPolicy, Algorithm, SelectorSource};
 pub use crate::timeline::OverlapPolicy;
+pub use backend::ExecBackend;
 pub use engine::{Charging, CollHandle, Cost, Engine, Reduce, Scope};

@@ -452,8 +452,9 @@ impl CalibProfile {
                     let (name, ranks) = key
                         .split_once(':')
                         .ok_or_else(|| bad(format!("algo key {key:?} is not <name>:<ranks>")))?;
-                    let algo = Algorithm::from_name(name)
-                        .ok_or_else(|| bad(format!("unknown algorithm {name:?} in algo row")))?;
+                    let algo = name
+                        .parse::<Algorithm>()
+                        .map_err(|_| bad(format!("unknown algorithm {name:?} in algo row")))?;
                     curves.push(
                         algo,
                         CommPoint { ranks: parse_u(ranks)?, alpha: parse_f(a)?, beta: parse_f(b)? },

@@ -37,18 +37,6 @@ impl DatasetSpec {
         ]
     }
 
-    /// Parse a CLI name.
-    pub fn from_name(name: &str) -> Option<DatasetSpec> {
-        match name {
-            "url" | "url-like" => Some(DatasetSpec::UrlLike),
-            "news20" | "news20-like" => Some(DatasetSpec::News20Like),
-            "rcv1" | "rcv1-like" => Some(DatasetSpec::Rcv1Like),
-            "epsilon" | "epsilon-like" => Some(DatasetSpec::EpsilonLike),
-            "synthetic" | "uniform" => Some(DatasetSpec::SyntheticUniform),
-            _ => None,
-        }
-    }
-
     /// The profile for this spec.
     pub fn profile(self) -> DatasetProfile {
         match self {
@@ -117,6 +105,14 @@ impl DatasetSpec {
         }
     }
 }
+
+crate::impl_enum_from_str!(DatasetSpec, "dataset",
+    ("url" | "url-like" => DatasetSpec::UrlLike),
+    ("news20" | "news20-like" => DatasetSpec::News20Like),
+    ("rcv1" | "rcv1-like" => DatasetSpec::Rcv1Like),
+    ("epsilon" | "epsilon-like" => DatasetSpec::EpsilonLike),
+    ("synthetic" | "uniform" => DatasetSpec::SyntheticUniform),
+);
 
 /// Shape parameters of one dataset profile (paper-scale + repro-scale).
 #[derive(Clone, Copy, Debug)]
@@ -190,9 +186,9 @@ mod tests {
 
     #[test]
     fn profiles_parse_by_name() {
-        assert_eq!(DatasetSpec::from_name("url"), Some(DatasetSpec::UrlLike));
-        assert_eq!(DatasetSpec::from_name("rcv1-like"), Some(DatasetSpec::Rcv1Like));
-        assert_eq!(DatasetSpec::from_name("nope"), None);
+        assert_eq!("url".parse::<DatasetSpec>(), Ok(DatasetSpec::UrlLike));
+        assert_eq!("rcv1-like".parse::<DatasetSpec>(), Ok(DatasetSpec::Rcv1Like));
+        assert!("nope".parse::<DatasetSpec>().is_err());
     }
 
     #[test]

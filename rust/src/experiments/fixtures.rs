@@ -8,7 +8,7 @@ use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::{Dataset, DatasetSpec};
 use crate::metrics::{Phase, PhaseBook};
 use crate::partition::Partitioner;
-use crate::solvers::{RunOpts, SessionBuilder, SolverRun};
+use crate::solvers::{SessionBuilder, SolverRun};
 use crate::util::tsv::TsvWriter;
 
 /// Master seed for all experiment datasets (fixed: experiments are
@@ -58,21 +58,6 @@ impl Measured {
     }
 }
 
-/// Default run options for charged-time measurements (deterministic:
-/// modeled compute + Perlmutter collective charging, contended-cache
-/// tiers — see [`CalibProfile::perlmutter_contended`]).
-pub fn charged_opts(bundles: usize) -> RunOpts {
-    RunOpts {
-        max_bundles: bundles,
-        eval_every: 0,
-        charging: Charging::Modeled,
-        profile: CalibProfile::perlmutter_contended(),
-        // Bench-scale sweeps read books, not event logs; skip recording.
-        timeline: false,
-        ..Default::default()
-    }
-}
-
 /// Measure charged per-iteration time of a configuration. The bundle
 /// count is rounded **up to a multiple of τ** so every amortized cost —
 /// in particular the column Allreduce that fires once per τ bundles — is
@@ -92,9 +77,16 @@ pub fn measure_overlap(
 ) -> Measured {
     let rounds = bundles.div_ceil(cfg.tau).max(1);
     let bundles = rounds * cfg.tau;
+    // Deterministic charged-time measurement: modeled compute +
+    // Perlmutter collective charging with contended-cache tiers. Bench-
+    // scale sweeps read books, not event logs; skip recording.
     let run = SessionBuilder::new(&NativeBackend, ds, cfg)
         .partitioner(policy)
-        .opts(charged_opts(bundles))
+        .max_bundles(bundles)
+        .eval_every(0)
+        .charging(Charging::Modeled)
+        .profile(CalibProfile::perlmutter_contended())
+        .record_timeline(false)
         .overlap(overlap)
         .run_to_end();
     Measured {

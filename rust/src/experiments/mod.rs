@@ -52,21 +52,17 @@ impl Effort {
         }
     }
 
-    /// Parse from CLI/env (`quick` / `full`).
-    pub fn from_name(s: &str) -> Option<Effort> {
-        match s {
-            "quick" => Some(Effort::Quick),
-            "full" => Some(Effort::Full),
-            _ => None,
-        }
-    }
-
     /// Effort from `HYBRID_SGD_EFFORT` (benches default to Quick so the
     /// suite completes in minutes; EXPERIMENTS.md records Full runs).
     pub fn from_env() -> Effort {
         std::env::var("HYBRID_SGD_EFFORT")
             .ok()
-            .and_then(|s| Effort::from_name(&s))
+            .and_then(|s| s.parse().ok())
             .unwrap_or(Effort::Quick)
     }
 }
+
+crate::impl_enum_from_str!(Effort, "effort",
+    ("quick" => Effort::Quick),
+    ("full" => Effort::Full),
+);

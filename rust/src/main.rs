@@ -5,7 +5,8 @@
 //! ```text
 //! hybrid-sgd train      --dataset url --p 256 --mesh 8x32 --partitioner cyclic
 //!                       [--s 4] [--b 32] [--tau 10] [--eta 0.1]
-//!                       [--bundles 200] [--target 0.5] [--backend xla|native]
+//!                       [--bundles 200] [--target 0.5] [--compute native|xla]
+//!                       [--backend sim|threads]
 //!                       [--collective auto|linear|rd|ring|rabenseifner]
 //!                       [--selector analytic|measured] [--gram merge|scatter|auto]
 //!                       [--overlap off|bundle] [--rs-row] [--profile FILE.tsv]
@@ -22,7 +23,7 @@
 //! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
 //! ```
 
-use hybrid_sgd::comm::{AlgoPolicy, Algorithm, Charging, OverlapPolicy, SelectorSource};
+use hybrid_sgd::comm::{AlgoPolicy, Charging, ExecBackend, OverlapPolicy, SelectorSource};
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
 use hybrid_sgd::costmodel::model::DataShape;
 use hybrid_sgd::costmodel::{calib, optima, regimes, topology, CalibProfile, HybridConfig};
@@ -34,6 +35,7 @@ use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
 use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
 use hybrid_sgd::sparse::GramStrategy;
+use hybrid_sgd::util::parse::unknown_value;
 use hybrid_sgd::util::Table;
 use std::collections::HashMap;
 
@@ -89,7 +91,10 @@ fn usage() {
          fig2..fig7        reproduce a paper figure\n\n\
          common flags: --dataset url|news20|rcv1|epsilon|synthetic  --p N\n  \
          --mesh PRxPC  --partitioner rows|nnz|cyclic  --s N --b N --tau N\n  \
-         --eta F  --bundles N  --target F  --backend native|xla\n  \
+         --eta F  --bundles N  --target F  --compute native|xla\n  \
+         --backend sim|threads (threads runs each rank as an OS thread and\n  \
+           every collective as a real shared-memory reduction; values are\n  \
+           bit-identical to sim, measured walls land next to charged books)\n  \
          --effort quick|full  --scale F  --lanes N  --charging modeled|measured\n  \
          --collective auto|linear|rd|ring|rabenseifner  --overlap off|bundle\n  \
          --selector analytic|measured (crossover source for --collective auto)\n  \
@@ -139,10 +144,24 @@ fn get<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> T {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Parse an enum knob via its `FromStr` (the unified convention: every
+/// knob enum derives it through `impl_enum_from_str!`, so every flag
+/// reports the same "unknown <what> `<got>`, expected one of ..." shape,
+/// here prefixed with the flag name).
+fn knob<T>(flags: &Flags, key: &str, default: T) -> Result<T, String>
+where
+    T: std::str::FromStr<Err = String>,
+{
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+    }
+}
+
 fn dataset_spec(flags: &Flags) -> DatasetSpec {
     let name = flags.get("dataset").map(|s| s.as_str()).unwrap_or("rcv1");
-    DatasetSpec::from_name(name).unwrap_or_else(|| {
-        eprintln!("unknown dataset {name:?}; see `hybrid-sgd datasets`");
+    name.parse().unwrap_or_else(|e: String| {
+        eprintln!("--dataset: {e} (see `hybrid-sgd datasets`)");
         std::process::exit(2);
     })
 }
@@ -155,7 +174,7 @@ fn parse_mesh(s: &str) -> Option<Mesh> {
 fn run_table(f: fn(Effort) -> Table, flags: &Flags) -> i32 {
     let effort = flags
         .get("effort")
-        .and_then(|e| Effort::from_name(e))
+        .and_then(|e| e.parse().ok())
         .unwrap_or_else(Effort::from_env);
     let t = f(effort);
     println!("{}", t.render());
@@ -286,6 +305,17 @@ fn cmd_predict(flags: &Flags) -> i32 {
 }
 
 fn cmd_train(flags: &Flags) -> i32 {
+    macro_rules! knob_or_exit {
+        ($key:literal, $default:expr) => {
+            match knob(flags, $key, $default) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        };
+    }
     let spec = dataset_spec(flags);
     let p: usize = get(flags, "p", 16);
     let scale: f64 = get(flags, "scale", 0.12);
@@ -300,10 +330,7 @@ fn cmd_train(flags: &Flags) -> i32 {
     let tau: usize = get(flags, "tau", 10);
     let s = if mesh.p_c == 1 { 1 } else { s };
     let cfg = HybridConfig::new(mesh, s, b, tau.max(s));
-    let policy = flags
-        .get("partitioner")
-        .and_then(|s| Partitioner::from_name(s))
-        .unwrap_or(Partitioner::Cyclic);
+    let policy = knob_or_exit!("partitioner", Partitioner::Cyclic);
 
     let profile = match flags.get("profile") {
         Some(path) => match CalibProfile::from_tsv(path) {
@@ -324,55 +351,15 @@ fn cmd_train(flags: &Flags) -> i32 {
         max_bundles: get(flags, "bundles", 200),
         eval_every: get(flags, "eval-every", 5),
         target_loss: flags.get("target").and_then(|t| t.parse().ok()),
+        backend: knob_or_exit!("backend", ExecBackend::from_env()),
         lanes: get(flags, "lanes", 1),
-        charging: match flags.get("charging").map(|s| s.as_str()) {
-            Some("measured") => Charging::Measured,
-            _ => Charging::Modeled,
-        },
+        charging: knob_or_exit!("charging", Charging::Modeled),
         profile,
-        algo: match flags.get("collective").map(|s| s.as_str()) {
-            None | Some("auto") => AlgoPolicy::Auto,
-            Some(name) => match Algorithm::from_name(name) {
-                Some(a) => AlgoPolicy::Fixed(a),
-                None => {
-                    eprintln!(
-                        "unknown --collective {name} (want auto|linear|rd|ring|rabenseifner)"
-                    );
-                    return 2;
-                }
-            },
-        },
-        selector: match flags.get("selector").map(|s| s.as_str()) {
-            None => SelectorSource::Analytic,
-            Some(name) => match SelectorSource::from_name(name) {
-                Some(s) => s,
-                None => {
-                    eprintln!("unknown --selector {name} (want analytic|measured)");
-                    return 2;
-                }
-            },
-        },
-        overlap: match flags.get("overlap").map(|s| s.as_str()) {
-            None => OverlapPolicy::Off,
-            Some(name) => match OverlapPolicy::from_name(name) {
-                Some(o) => o,
-                None => {
-                    eprintln!("unknown --overlap {name} (want off|bundle)");
-                    return 2;
-                }
-            },
-        },
+        algo: knob_or_exit!("collective", AlgoPolicy::Auto),
+        selector: knob_or_exit!("selector", SelectorSource::Analytic),
+        overlap: knob_or_exit!("overlap", OverlapPolicy::Off),
         rs_row: flags.contains_key("rs-row"),
-        gram: match flags.get("gram").map(|s| s.as_str()) {
-            None => GramStrategy::Auto,
-            Some(name) => match GramStrategy::from_name(name) {
-                Some(g) => g,
-                None => {
-                    eprintln!("unknown --gram {name} (want merge|scatter|auto)");
-                    return 2;
-                }
-            },
-        },
+        gram: knob_or_exit!("gram", GramStrategy::Auto),
         // The CLI reports book-based stats only; don't record an event
         // log nothing reads (large at high p · bundles). The analyzer
         // surface is `examples/overlap_breakdown.rs`.
@@ -393,9 +380,10 @@ fn cmd_train(flags: &Flags) -> i32 {
         );
     }
 
-    let backend_name = flags.get("backend").map(|s| s.as_str()).unwrap_or("native");
+    let compute_name = flags.get("compute").map(|s| s.as_str()).unwrap_or("native");
     let xla;
-    let backend: &dyn ComputeBackend = match backend_name {
+    let compute: &dyn ComputeBackend = match compute_name {
+        "native" => &NativeBackend,
         "xla" => match XlaBackend::load_default() {
             Ok(be) => {
                 xla = be;
@@ -406,21 +394,25 @@ fn cmd_train(flags: &Flags) -> i32 {
                 &NativeBackend
             }
         },
-        _ => &NativeBackend,
-    };
-
-    let retune = match flags.get("retune").map(|s| s.as_str()) {
-        None | Some("off") => RetunePolicy::Off,
-        Some("bound-aware") => RetunePolicy::BoundAware { every: get(flags, "retune-every", 5) },
-        Some("drift-gated") => RetunePolicy::DriftGated { every: get(flags, "retune-every", 5) },
-        Some(other) => {
-            eprintln!("unknown --retune {other} (want off|bound-aware|drift-gated)");
+        other => {
+            eprintln!("--compute: {}", unknown_value("compute backend", other, &["native", "xla"]));
             return 2;
         }
     };
 
+    let retune = match knob_or_exit!("retune", RetunePolicy::Off) {
+        RetunePolicy::Off => RetunePolicy::Off,
+        RetunePolicy::BoundAware { .. } => {
+            RetunePolicy::BoundAware { every: get(flags, "retune-every", 5) }
+        }
+        RetunePolicy::DriftGated { .. } => {
+            RetunePolicy::DriftGated { every: get(flags, "retune-every", 5) }
+        }
+    };
+
     println!(
-        "training {} (m={} n={} zbar={:.0}) on mesh {} s={} b={} tau={} partitioner={} backend={}",
+        "training {} (m={} n={} zbar={:.0}) on mesh {} s={} b={} tau={} partitioner={} \
+         compute={} backend={}",
         ds.name,
         ds.m(),
         ds.n(),
@@ -430,24 +422,31 @@ fn cmd_train(flags: &Flags) -> i32 {
         cfg.b,
         cfg.tau,
         policy.name(),
-        backend.name(),
+        compute.name(),
+        opts.backend.name(),
     );
     let overlap = opts.overlap;
-    let mut builder = SessionBuilder::new(backend, &ds, cfg)
+    let exec = opts.backend;
+    let mut builder = SessionBuilder::new(compute, &ds, cfg)
         .partitioner(policy)
-        .opts(opts)
+        .eta(opts.eta)
+        .max_bundles(opts.max_bundles)
+        .eval_every(opts.eval_every)
+        .target_loss(opts.target_loss)
+        .backend(opts.backend)
+        .lanes(opts.lanes)
+        .charging(opts.charging)
+        .profile(opts.profile)
+        .algo(opts.algo)
+        .selector(opts.selector)
+        .overlap(opts.overlap)
+        .rs_row(opts.rs_row)
+        .gram(opts.gram)
+        .record_timeline(opts.timeline)
+        .seed(opts.seed)
         .retune(retune);
     if let Some(path) = flags.get("trace-out") {
-        let format = match flags.get("trace-format").map(|s| s.as_str()) {
-            None => TraceFormat::default(),
-            Some(name) => match TraceFormat::from_name(name) {
-                Some(f) => f,
-                None => {
-                    eprintln!("unknown --trace-format {name} (want jsonl|perfetto)");
-                    return 2;
-                }
-            },
-        };
+        let format = knob_or_exit!("trace-format", TraceFormat::default());
         match obs::sink_to(format, path) {
             Ok(sink) => {
                 // Attaching a sink forces event-log recording on.
@@ -537,6 +536,18 @@ fn cmd_train(flags: &Flags) -> i32 {
         println!(
             "overlap: {:.4} s of row-reduce transfer hidden behind compute (mean/rank)",
             run.book.mean_hidden(hybrid_sgd::metrics::Phase::SstepComm)
+        );
+    }
+    if exec == ExecBackend::Threads {
+        let phases: Vec<hybrid_sgd::metrics::Phase> = hybrid_sgd::metrics::Phase::all()
+            .into_iter()
+            .filter(|ph| ph.in_algorithm_total())
+            .collect();
+        let charged: f64 = phases.iter().map(|&ph| run.book.mean_charged(ph)).sum();
+        let measured: f64 = phases.iter().map(|&ph| run.measured.mean_charged(ph)).sum();
+        println!(
+            "threads backend: {measured:.4} s measured wall vs {charged:.4} s charged \
+             (mean/rank; per-phase wall_* drift gauges in the summary)"
         );
     }
     if let Some(t) = run.time_to_target {

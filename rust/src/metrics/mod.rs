@@ -52,11 +52,6 @@ impl Phase {
         }
     }
 
-    /// Parse a table label back into a phase (checkpoint/trace restore).
-    pub fn from_name(s: &str) -> Option<Phase> {
-        Phase::all().into_iter().find(|ph| ph.name() == s)
-    }
-
     /// Phases counted in the paper's "algorithm total" (everything except
     /// metrics overhead).
     pub fn in_algorithm_total(&self) -> bool {
@@ -75,6 +70,16 @@ impl Phase {
         }
     }
 }
+
+crate::impl_enum_from_str!(Phase, "phase",
+    ("metrics" => Phase::Metrics),
+    ("gram" => Phase::Gram),
+    ("sstep_comm" => Phase::SstepComm),
+    ("fedavg_comm" => Phase::FedAvgComm),
+    ("weights_update" => Phase::WeightsUpdate),
+    ("spgemv" => Phase::SpGemv),
+    ("correction" => Phase::Correction),
+);
 
 /// Per-rank, per-phase accumulated charged time plus communication volume.
 #[derive(Clone, Debug)]

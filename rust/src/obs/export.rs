@@ -30,16 +30,12 @@ impl TraceFormat {
             TraceFormat::Perfetto => "perfetto",
         }
     }
-
-    /// Parse a CLI label.
-    pub fn from_name(s: &str) -> Option<TraceFormat> {
-        match s {
-            "jsonl" => Some(TraceFormat::Jsonl),
-            "perfetto" => Some(TraceFormat::Perfetto),
-            _ => None,
-        }
-    }
 }
+
+crate::impl_enum_from_str!(TraceFormat, "trace format",
+    ("jsonl" => TraceFormat::Jsonl),
+    ("perfetto" => TraceFormat::Perfetto),
+);
 
 /// Open a buffered file sink in the requested format.
 pub fn sink_to<P: AsRef<Path>>(
@@ -316,8 +312,8 @@ mod tests {
     #[test]
     fn format_names_roundtrip() {
         for f in [TraceFormat::Jsonl, TraceFormat::Perfetto] {
-            assert_eq!(TraceFormat::from_name(f.name()), Some(f));
+            assert_eq!(f.name().parse::<TraceFormat>(), Ok(f));
         }
-        assert_eq!(TraceFormat::from_name("bogus"), None);
+        assert!("bogus".parse::<TraceFormat>().is_err());
     }
 }

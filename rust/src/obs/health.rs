@@ -63,17 +63,6 @@ impl HealthStatus {
         }
     }
 
-    /// Inverse of [`HealthStatus::name`], for tooling that reads TSVs back.
-    pub fn from_name(s: &str) -> Option<HealthStatus> {
-        match s {
-            "initializing" => Some(HealthStatus::Initializing),
-            "healthy" => Some(HealthStatus::Healthy),
-            "stalled" => Some(HealthStatus::Stalled),
-            "diverged" => Some(HealthStatus::Diverged),
-            _ => None,
-        }
-    }
-
     /// All states, in severity order — the metrics layer exports one
     /// one-hot gauge series per state.
     pub fn all() -> [HealthStatus; 4] {
@@ -85,6 +74,13 @@ impl HealthStatus {
         ]
     }
 }
+
+crate::impl_enum_from_str!(HealthStatus, "health status",
+    ("initializing" => HealthStatus::Initializing),
+    ("healthy" => HealthStatus::Healthy),
+    ("stalled" => HealthStatus::Stalled),
+    ("diverged" => HealthStatus::Diverged),
+);
 
 // ---------------------------------------------------------------------------
 // Shared knobs
@@ -216,7 +212,8 @@ impl HealthMonitor {
 // Model fidelity
 // ---------------------------------------------------------------------------
 
-/// What a drift series tracks: a charged phase, or the traffic books.
+/// What a drift series tracks: a charged phase, the traffic books, or a
+/// charged-vs-measured wall comparison.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DriftKey {
     /// Predicted-vs-charged seconds for one phase.
@@ -225,6 +222,12 @@ pub enum DriftKey {
     Words,
     /// Predicted-vs-booked collective message count (mean per rank).
     Messages,
+    /// Charged-vs-**measured** seconds for one phase — how well the
+    /// analytic charging model tracks real hardware. Only fed when the
+    /// run executes for real
+    /// ([`ExecBackend::Threads`](crate::comm::ExecBackend)); a `Sim` run
+    /// has no measured collective walls to compare against.
+    Wall(Phase),
 }
 
 impl DriftKey {
@@ -234,6 +237,15 @@ impl DriftKey {
             DriftKey::Phase(p) => p.name(),
             DriftKey::Words => "words",
             DriftKey::Messages => "messages",
+            DriftKey::Wall(p) => match p {
+                Phase::Metrics => "wall_metrics",
+                Phase::Gram => "wall_gram",
+                Phase::SstepComm => "wall_sstep_comm",
+                Phase::FedAvgComm => "wall_fedavg_comm",
+                Phase::WeightsUpdate => "wall_weights_update",
+                Phase::SpGemv => "wall_spgemv",
+                Phase::Correction => "wall_correction",
+            },
         }
     }
 }
@@ -291,17 +303,27 @@ pub struct FidelityMonitor {
     phases: Vec<(Phase, DriftGauge)>,
     words: DriftGauge,
     messages: DriftGauge,
+    /// Charged-vs-measured wall gauges, fed only under real execution.
+    walls: Vec<(Phase, DriftGauge)>,
 }
 
 impl FidelityMonitor {
     pub fn new(lambda: f64, threshold: f64) -> Self {
-        let phases = Phase::all()
+        let phases: Vec<(Phase, DriftGauge)> = Phase::all()
             .iter()
             .copied()
             .filter(|p| p.in_algorithm_total())
             .map(|p| (p, DriftGauge::default()))
             .collect();
-        FidelityMonitor { lambda, threshold, phases, words: DriftGauge::default(), messages: DriftGauge::default() }
+        let walls = phases.clone();
+        FidelityMonitor {
+            lambda,
+            threshold,
+            phases,
+            words: DriftGauge::default(),
+            messages: DriftGauge::default(),
+            walls,
+        }
     }
 
     fn gauge_mut(&mut self, phase: Phase) -> &mut DriftGauge {
@@ -328,6 +350,23 @@ impl FidelityMonitor {
         self.messages.observe(self.lambda, em);
     }
 
+    /// Record one charged-vs-measured wall pair for `phase` (real
+    /// execution only). Keeps a separate gauge family from
+    /// [`FidelityMonitor::observe`]: that one scores the analytic
+    /// prediction against the *charged* books, this one scores the
+    /// charged books against *actual hardware* seconds.
+    pub fn observe_wall(&mut self, phase: Phase, charged: f64, measured: f64) {
+        let err = rel_err(charged, measured);
+        let lambda = self.lambda;
+        let gauge = &mut self
+            .walls
+            .iter_mut()
+            .find(|(p, _)| *p == phase)
+            .expect("wall drift tracked for algorithm phases only")
+            .1;
+        gauge.observe(lambda, err);
+    }
+
     /// Is this phase's EWMA drift above the threshold?
     pub fn flagged(&self, phase: Phase) -> bool {
         self.phases
@@ -343,7 +382,10 @@ impl FidelityMonitor {
     }
 
     /// Snapshot every drift series (phases in [`Phase::all`] order, then
-    /// words, then messages) for reports and the run summary.
+    /// words, then messages, then any **observed** wall-fidelity gauges)
+    /// for reports and the run summary. Wall gauges only appear once fed
+    /// ([`FidelityMonitor::observe_wall`]), so `Sim` runs keep the
+    /// original 8-entry shape.
     pub fn drift(&self) -> Vec<DriftEntry> {
         let entry = |key: DriftKey, g: &DriftGauge| DriftEntry {
             key,
@@ -355,6 +397,9 @@ impl FidelityMonitor {
             self.phases.iter().map(|(p, g)| entry(DriftKey::Phase(*p), g)).collect();
         out.push(entry(DriftKey::Words, &self.words));
         out.push(entry(DriftKey::Messages, &self.messages));
+        out.extend(
+            self.walls.iter().filter(|(_, g)| g.seen).map(|(p, g)| entry(DriftKey::Wall(*p), g)),
+        );
         out
     }
 }
@@ -457,10 +502,32 @@ mod tests {
     }
 
     #[test]
+    fn wall_gauges_appear_only_once_observed() {
+        let mut f = FidelityMonitor::new(0.2, 0.25);
+        assert_eq!(f.drift().len(), 8, "no wall rows before any observation");
+        // Perfect agreement: gauge appears, unflagged.
+        f.observe_wall(Phase::SpGemv, 2.0, 2.0);
+        let d = f.drift();
+        assert_eq!(d.len(), 9);
+        let wall = d.last().unwrap();
+        assert_eq!(wall.key, DriftKey::Wall(Phase::SpGemv));
+        assert_eq!(wall.key.name(), "wall_spgemv");
+        assert_eq!(wall.ewma, 0.0);
+        assert!(!wall.flagged);
+        // Hardware twice as slow as charged: rel err 0.5 flags the gauge.
+        f.observe_wall(Phase::Gram, 1.0, 2.0);
+        let d = f.drift();
+        assert_eq!(d.len(), 10);
+        let gram = d.iter().find(|e| e.key == DriftKey::Wall(Phase::Gram)).unwrap();
+        assert!((gram.ewma - 0.5).abs() < 1e-12);
+        assert!(gram.flagged);
+    }
+
+    #[test]
     fn status_names_roundtrip() {
         for s in HealthStatus::all() {
-            assert_eq!(HealthStatus::from_name(s.name()), Some(s));
+            assert_eq!(s.name().parse::<HealthStatus>(), Ok(s));
         }
-        assert_eq!(HealthStatus::from_name("bogus"), None);
+        assert!("bogus".parse::<HealthStatus>().is_err());
     }
 }

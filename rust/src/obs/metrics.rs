@@ -30,7 +30,7 @@ use std::io::{self, BufWriter, Write};
 use std::path::{Path, PathBuf};
 
 use crate::metrics::Phase;
-use crate::obs::health::{DriftKey, HealthStatus};
+use crate::obs::health::HealthStatus;
 use crate::solvers::{BundleReport, Observer, ObserverCtx};
 use crate::util::tsv::TsvWriter;
 
@@ -513,9 +513,12 @@ struct Ids {
     update_norm: SeriesId,
     /// One-hot gauge per health state, in `HealthStatus::all` order.
     health: Vec<SeriesId>,
-    /// Aligned with `BundleReport::drift` (phases, then words/messages):
-    /// `(ewma gauge, flag gauge)`.
-    drift: Vec<(SeriesId, SeriesId)>,
+    /// Drift gauge families (`model_drift`, `model_drift_flag`). Series
+    /// are resolved by label at every sample, not cached positionally:
+    /// under the threads backend the wall-fidelity gauges join
+    /// `BundleReport::drift` only once their phase is first observed, so
+    /// the snapshot can grow (and interleave) between bundles.
+    drift_fams: (FamilyId, FamilyId),
     eff_bundle: SeriesId,
     rank_busy: Vec<SeriesId>,
     wall_hist: SeriesId,
@@ -618,18 +621,14 @@ impl<'a> MetricsObserver<'a> {
             .iter()
             .map(|s| reg.series(health_fam, &[("state", s.name())]))
             .collect();
-        let drift = report
-            .drift
-            .iter()
-            .map(|d| {
-                let labels = match d.key {
-                    DriftKey::Phase(p) => [("series", p.name())],
-                    DriftKey::Words => [("series", "words")],
-                    DriftKey::Messages => [("series", "messages")],
-                };
-                (reg.series(drift_fam, &labels), reg.series(flag_fam, &labels))
-            })
-            .collect();
+        // Pre-register the first snapshot's drift series so the scrape
+        // ordering stays stable; wall gauges that first appear on a later
+        // bundle register on first sight in `sample`.
+        for d in &report.drift {
+            let labels = [("series", d.key.name())];
+            reg.series(drift_fam, &labels);
+            reg.series(flag_fam, &labels);
+        }
         let ranks = ctx.book.ranks();
         let rank_labels: Vec<String> = (0..ranks).map(|r| r.to_string()).collect();
         let rank_busy = rank_labels
@@ -648,7 +647,7 @@ impl<'a> MetricsObserver<'a> {
             loss_delta: reg.series(loss_delta, &[]),
             update_norm: reg.series(update_norm, &[]),
             health,
-            drift,
+            drift_fams: (drift_fam, flag_fam),
             eff_bundle: reg.series(eff_fam, &[("window", "bundle")]),
             rank_busy,
             wall_hist: reg.series(wall_fam, &[]),
@@ -696,9 +695,13 @@ impl<'a> MetricsObserver<'a> {
         for (s, id) in HealthStatus::all().iter().zip(&ids.health) {
             reg.set(*id, if *s == report.health { 1.0 } else { 0.0 });
         }
-        for (d, (ewma_id, flag_id)) in report.drift.iter().zip(&ids.drift) {
-            reg.set(*ewma_id, d.ewma);
-            reg.set(*flag_id, if d.flagged { 1.0 } else { 0.0 });
+        let (drift_fam, flag_fam) = ids.drift_fams;
+        for d in &report.drift {
+            let labels = [("series", d.key.name())];
+            let ewma_id = reg.series(drift_fam, &labels);
+            let flag_id = reg.series(flag_fam, &labels);
+            reg.set(ewma_id, d.ewma);
+            reg.set(flag_id, if d.flagged { 1.0 } else { 0.0 });
         }
         if let Some(eff) = report.overlap_efficiency {
             reg.set(ids.eff_bundle, eff);

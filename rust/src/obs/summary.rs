@@ -13,21 +13,22 @@ use std::path::Path;
 
 /// Version stamp of the summary row schema (the `meta schema` row).
 /// Bump when row meanings change; `collect_bench.py` records it.
-pub const SUMMARY_SCHEMA: u32 = 2;
+pub const SUMMARY_SCHEMA: u32 = 3;
 
 /// A rendered run summary: rows of `kind key a b c d`, same shape as the
 /// session checkpoint TSV.
 ///
-/// Schema v2 rows (v2 added `health` and `drift`):
+/// Schema v3 rows (v2 added `health` and `drift`; v3 added `measured`):
 ///
 /// ```text
-/// meta    schema   2
+/// meta    schema   3
 /// meta    name     <run label>
 /// meta    ranks    <p>
 /// meta    bundles  <outer>  <inner iters>
 /// meta    sim_wall <seconds>
 /// meta    time_to_target <seconds | ->
 /// phase   <name>   <mean charged>  <mean wait>  <mean hidden>  <max charged>
+/// measured <name>  <mean wall>     <max wall>
 /// traffic mean     <words/rank>    <messages/rank>
 /// total   algorithm <mean charged seconds, metrics excluded>
 /// health  verdict  <initializing|healthy|stalled|diverged>
@@ -80,6 +81,19 @@ impl RunSummary {
                 run.book.mean_wait(ph).to_string(),
                 run.book.mean_hidden(ph).to_string(),
                 run.book.max_charged(ph).to_string(),
+            ));
+        }
+        // v3: measured wall seconds next to the charged books. Under the
+        // threads backend both compute and collective phases carry real
+        // wall time; under the simulator collective entries stay zero.
+        for ph in Phase::all() {
+            rows.push(row(
+                "measured",
+                ph.name(),
+                run.measured.mean_charged(ph).to_string(),
+                run.measured.max_charged(ph).to_string(),
+                "-",
+                "-",
             ));
         }
         rows.push(row(
@@ -180,9 +194,20 @@ mod tests {
         let ds = synth::sparse_skewed("obs-sum", 96, 32, 5, 0.6, &mut rng);
         let be = NativeBackend;
         let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
-        let run = SessionBuilder::new(&be, &ds, cfg).max_bundles(4).run_to_end();
+        // Pinned to the simulator: the measured-row zero check below is
+        // Sim-specific (Threads books real collective wall).
+        let run = SessionBuilder::new(&be, &ds, cfg)
+            .backend(crate::comm::ExecBackend::Sim)
+            .max_bundles(4)
+            .run_to_end();
         let s = RunSummary::from_run(&run);
-        assert_eq!(s.cell("meta", "schema"), Some("2"));
+        assert_eq!(s.cell("meta", "schema"), Some("3"));
+        // v3 rows: measured wall next to the charged phase books. The
+        // simulator books real wall for compute phases only, so the
+        // collective rows are exactly zero here.
+        assert_eq!(s.cell("measured", "sstep_comm"), Some("0"));
+        let wall_spgemv: f64 = s.cell("measured", "spgemv").unwrap().parse().unwrap();
+        assert!(wall_spgemv > 0.0, "compute phases carry real wall even under Sim");
         // v2 rows: the health verdict and the drift gauges ride along.
         assert_eq!(s.cell("health", "verdict"), Some("healthy"));
         assert!(s.rows().iter().any(|r| r[0] == "drift" && r[1] == "sstep_comm"));

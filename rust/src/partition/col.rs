@@ -28,17 +28,13 @@ impl Partitioner {
             Partitioner::Cyclic => "cyclic",
         }
     }
-
-    /// Parse a CLI name.
-    pub fn from_name(s: &str) -> Option<Partitioner> {
-        match s {
-            "rows" => Some(Partitioner::Rows),
-            "nnz" => Some(Partitioner::Nnz),
-            "cyclic" => Some(Partitioner::Cyclic),
-            _ => None,
-        }
-    }
 }
+
+crate::impl_enum_from_str!(Partitioner, "partitioner",
+    ("rows" => Partitioner::Rows),
+    ("nnz" => Partitioner::Nnz),
+    ("cyclic" => Partitioner::Cyclic),
+);
 
 /// The result of partitioning `n` columns into `p_c` parts: a total map
 /// `column → (owner part, local index within part)`.

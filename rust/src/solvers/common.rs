@@ -2,7 +2,7 @@
 
 use super::session::RetuneEvent;
 use crate::collectives::{AlgoPolicy, SelectorSource};
-use crate::comm::Charging;
+use crate::comm::{Charging, ExecBackend};
 use crate::costmodel::CalibProfile;
 use crate::metrics::PhaseBook;
 use crate::obs::health::{DriftEntry, HealthStatus};
@@ -20,7 +20,22 @@ pub struct RunOpts {
     pub eval_every: usize,
     /// Stop early once the global loss reaches this target.
     pub target_loss: Option<f64>,
-    /// Compute-lane threads for the engine.
+    /// Execution backend (`--backend`): [`ExecBackend::Sim`] walks the
+    /// ranks on the host thread; [`ExecBackend::Threads`] runs each rank
+    /// as an OS thread and executes every collective as a real
+    /// barrier-synchronized shared-memory reduction, recording measured
+    /// wall seconds ([`SolverRun::measured`]) alongside the charged
+    /// books. Trajectories, charged books, and clocks are bit-identical
+    /// across backends under [`Charging::Modeled`]. Defaults from the
+    /// `HYBRID_SGD_BACKEND` env var (unset → `Sim`).
+    pub backend: ExecBackend,
+    /// Parallelism cap for the engine. Under [`ExecBackend::Sim`] this is
+    /// the compute-lane thread count (per-rank compute closures run
+    /// chunk-parallel across lanes). Under [`ExecBackend::Threads`] it
+    /// caps the rank-thread pool: `lanes <= 1` means one OS thread per
+    /// rank (the natural threads-as-ranks shape), larger values bound the
+    /// pool at `lanes.min(p)`. Either way results are bit-identical
+    /// across lane counts.
     pub lanes: usize,
     /// Charging policy for compute phases.
     pub charging: Charging,
@@ -85,6 +100,7 @@ impl Default for RunOpts {
             max_bundles: 100,
             eval_every: 10,
             target_loss: None,
+            backend: ExecBackend::from_env(),
             lanes: 1,
             charging: Charging::Modeled,
             profile: CalibProfile::perlmutter(),
@@ -129,6 +145,14 @@ pub struct SolverRun {
     pub sim_wall: f64,
     /// Phase accounting (Table 10 material).
     pub book: PhaseBook,
+    /// Measured per-phase wall seconds, booked alongside the charged
+    /// [`SolverRun::book`]. Under [`ExecBackend::Threads`] every compute
+    /// phase and collective records real host wall time here, so the
+    /// analytic charging model can be scored against actual hardware
+    /// (`obs::health` wall-fidelity gauges, `obs::summary` `measured`
+    /// rows). Under [`ExecBackend::Sim`] only compute walls are recorded;
+    /// collective entries stay zero (nothing real is executed to time).
+    pub measured: PhaseBook,
     /// Per-rank event log of the run (input to
     /// [`timeline::analyzer`](crate::timeline::analyzer)).
     pub timeline: Timeline,
@@ -180,6 +204,7 @@ mod tests {
             inner_iters: 20,
             sim_wall: 2.0,
             book: PhaseBook::new(1),
+            measured: PhaseBook::new(1),
             timeline: Timeline::new(1),
             retunes: vec![],
             time_to_target: None,

@@ -67,7 +67,23 @@ impl<'a> HybridSolver<'a> {
         policy: Partitioner,
         opts: &RunOpts,
     ) -> SolverRun {
-        self.session(ds, cfg, policy).opts(opts.clone()).run_to_end()
+        self.session(ds, cfg, policy)
+            .eta(opts.eta)
+            .max_bundles(opts.max_bundles)
+            .eval_every(opts.eval_every)
+            .target_loss(opts.target_loss)
+            .backend(opts.backend)
+            .lanes(opts.lanes)
+            .charging(opts.charging)
+            .profile(opts.profile.clone())
+            .algo(opts.algo)
+            .selector(opts.selector)
+            .overlap(opts.overlap)
+            .rs_row(opts.rs_row)
+            .gram(opts.gram)
+            .record_timeline(opts.timeline)
+            .seed(opts.seed)
+            .run_to_end()
     }
 
     /// Open a [`SessionBuilder`] over this solver's backend — the entry

@@ -89,18 +89,6 @@ impl SolverKind {
         }
     }
 
-    /// Parse a CLI name.
-    pub fn from_name(s: &str) -> Option<SolverKind> {
-        match s {
-            "mb-sgd" | "mbsgd" => Some(SolverKind::MbSgd),
-            "fedavg" => Some(SolverKind::FedAvg),
-            "sstep-sgd" | "sstep" => Some(SolverKind::SstepSgd),
-            "2d-sgd" | "sgd2d" => Some(SolverKind::Sgd2d),
-            "hybrid" => Some(SolverKind::Hybrid),
-            _ => None,
-        }
-    }
-
     /// The HybridConfig realizing this solver at total ranks `p`
     /// (mesh/s/τ per the corner table above; `mesh` is only consulted for
     /// `Sgd2d`/`Hybrid`).
@@ -120,6 +108,14 @@ impl SolverKind {
         }
     }
 }
+
+crate::impl_enum_from_str!(SolverKind, "solver",
+    ("mb-sgd" | "mbsgd" => SolverKind::MbSgd),
+    ("fedavg" => SolverKind::FedAvg),
+    ("sstep-sgd" | "sstep" => SolverKind::SstepSgd),
+    ("2d-sgd" | "sgd2d" => SolverKind::Sgd2d),
+    ("hybrid" => SolverKind::Hybrid),
+);
 
 #[cfg(test)]
 mod tests {
@@ -145,7 +141,7 @@ mod tests {
             SolverKind::Sgd2d,
             SolverKind::Hybrid,
         ] {
-            assert_eq!(SolverKind::from_name(k.name()), Some(k));
+            assert_eq!(k.name().parse::<SolverKind>(), Ok(k));
         }
     }
 }

@@ -9,8 +9,10 @@
 //!
 //! * [`SessionBuilder`] — replaces the positional
 //!   [`HybridSolver::run`](crate::solvers::HybridSolver::run) signature
-//!   and absorbs [`RunOpts`] construction (every knob has a builder
-//!   method; `.opts(..)` still accepts a prebuilt struct).
+//!   and absorbs [`RunOpts`] construction: every knob has a builder
+//!   method, and callers that hold a prebuilt [`RunOpts`] apply it
+//!   per-knob (the whole-struct `.opts(..)` compat path is retired;
+//!   `HybridSolver::run` shows the full chain).
 //! * [`Session::step_bundle`] — advances exactly **one outer bundle**
 //!   (`s` inner iterations) and returns a [`BundleReport`] with that
 //!   bundle's charged-book deltas, eval point, and retune decision. The
@@ -92,7 +94,7 @@ use crate::collectives::{
     charge_with, reduce_scatter_charge, AlgoPolicy, Algorithm, AutoSelector, BoundBy,
     CollectiveCost,
 };
-use crate::comm::{Charging, CollHandle, Cost, Engine, OverlapPolicy, Reduce, Scope};
+use crate::comm::{Charging, CollHandle, Cost, Engine, ExecBackend, OverlapPolicy, Reduce, Scope};
 use crate::compute::ComputeBackend;
 use crate::costmodel::{CalibProfile, HybridConfig};
 use crate::data::Dataset;
@@ -175,6 +177,24 @@ impl RetunePolicy {
             RetunePolicy::Off => "off",
             RetunePolicy::BoundAware { .. } => "bound-aware",
             RetunePolicy::DriftGated { .. } => "drift-gated",
+        }
+    }
+}
+
+/// Parses the CLI labels with the default cadence (`every = 5`); callers
+/// that expose a `--retune-every` knob overwrite the cadence afterwards.
+impl std::str::FromStr for RetunePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(RetunePolicy::Off),
+            "bound-aware" => Ok(RetunePolicy::BoundAware { every: 5 }),
+            "drift-gated" => Ok(RetunePolicy::DriftGated { every: 5 }),
+            _ => Err(crate::util::parse::unknown_value(
+                "retune policy",
+                s,
+                &["off", "bound-aware", "drift-gated"],
+            )),
         }
     }
 }
@@ -364,13 +384,6 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
-    /// Replace the whole option block (the compatibility path for callers
-    /// that already hold a [`RunOpts`]).
-    pub fn opts(mut self, opts: RunOpts) -> Self {
-        self.opts = opts;
-        self
-    }
-
     /// Step size η.
     pub fn eta(mut self, eta: f64) -> Self {
         self.opts.eta = eta;
@@ -397,7 +410,16 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
-    /// Compute-lane threads.
+    /// Execution backend: simulated ranks ([`ExecBackend::Sim`], the
+    /// default) or real threads-as-ranks execution
+    /// ([`ExecBackend::Threads`]). See [`RunOpts::backend`].
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Engine parallelism cap (compute lanes under `Sim`, rank-thread
+    /// pool under `Threads`; see [`RunOpts::lanes`]).
     pub fn lanes(mut self, lanes: usize) -> Self {
         self.opts.lanes = lanes;
         self
@@ -576,6 +598,7 @@ impl<'a> SessionBuilder<'a> {
             mp.cols.n_local.iter().map(|&n| vec![0.0; n]).collect();
 
         let mut engine = Engine::new(mesh, self.opts.profile.clone(), self.opts.charging)
+            .with_backend(self.opts.backend)
             .with_lanes(self.opts.lanes)
             .with_algo(self.opts.algo)
             .with_selector(self.opts.selector);
@@ -626,6 +649,7 @@ impl<'a> SessionBuilder<'a> {
             charged_scratch: Vec::with_capacity(Phase::all().len()),
             wait_scratch: Vec::with_capacity(Phase::all().len()),
             hidden_scratch: Vec::with_capacity(Phase::all().len()),
+            measured_scratch: Vec::with_capacity(Phase::all().len()),
             engine,
             bundles_run: 0,
             pending: None,
@@ -701,6 +725,10 @@ pub struct Session<'a> {
     wait_scratch: Vec<f64>,
     /// Like `charged_scratch`, for the hidden books.
     hidden_scratch: Vec<f64>,
+    /// Like `charged_scratch`, for the **measured** wall books — the
+    /// per-bundle charged-vs-measured wall fidelity feed under
+    /// [`ExecBackend::Threads`].
+    measured_scratch: Vec<f64>,
     engine: Engine,
     bundles_run: usize,
     /// At most one row reduce in flight (posted under
@@ -828,6 +856,9 @@ impl<'a> Session<'a> {
         self.hidden_scratch.clear();
         self.hidden_scratch
             .extend(Phase::all().iter().map(|&ph| self.engine.book.mean_hidden(ph)));
+        self.measured_scratch.clear();
+        self.measured_scratch
+            .extend(Phase::all().iter().map(|&ph| self.engine.measured.mean_charged(ph)));
         // Row-reduce predictions settled during this bundle (sum of the
         // previous overlapped transfer and/or this bundle's blocking
         // one), mirroring exactly when the engine charges them.
@@ -1103,6 +1134,21 @@ impl<'a> Session<'a> {
                 messages_delta,
             );
         }
+        // --- wall fidelity: charged vs measured, real execution only --
+        // Under Threads every phase that charged this bundle also has a
+        // real wall sample; feeding the pair scores the analytic charging
+        // model against actual hardware (the `wall_*` drift gauges).
+        if self.opts.backend == ExecBackend::Threads {
+            for (i, &(ph, charged)) in charged_delta.iter().enumerate() {
+                if !ph.in_algorithm_total() {
+                    continue;
+                }
+                let measured = self.engine.measured.mean_charged(ph) - self.measured_scratch[i];
+                if charged > 0.0 || measured > 0.0 {
+                    self.fidelity.observe_wall(ph, charged, measured);
+                }
+            }
+        }
         let overlap_efficiency =
             if sstep_transfer > 0.0 { Some(sstep_hidden / sstep_transfer) } else { None };
 
@@ -1194,6 +1240,7 @@ impl<'a> Session<'a> {
             inner_iters: self.bundles_run * self.cfg.s,
             sim_wall,
             book,
+            measured: self.engine.measured,
             timeline,
             retunes: self.retunes,
             time_to_target: self.time_to_target,
@@ -1676,10 +1723,8 @@ impl Session<'_> {
         let mut event_rows: Vec<(usize, Event)> = Vec::new();
 
         let phase_of = |name: &str| {
-            Phase::all()
-                .into_iter()
-                .find(|ph| ph.name() == name)
-                .ok_or_else(|| bad(format!("unknown phase {name:?} in checkpoint")))
+            name.parse::<Phase>()
+                .map_err(|_| bad(format!("unknown phase {name:?} in checkpoint")))
         };
         let rank_of = |key: &str| {
             let r = parse_u(key)?;
@@ -1739,7 +1784,8 @@ impl Session<'_> {
                         }
                     }
                     "opts" => {
-                        let same_overlap = OverlapPolicy::from_name(a) == Some(self.opts.overlap);
+                        let same_overlap =
+                            a.parse::<OverlapPolicy>().ok() == Some(self.opts.overlap);
                         let same_rs = parse_u(b)? == self.opts.rs_row as usize;
                         let same_seed = c.parse::<u64>().ok() == Some(self.opts.seed);
                         if !(same_overlap && same_rs && same_seed) {
@@ -1750,7 +1796,7 @@ impl Session<'_> {
                         }
                     }
                     "policy" => {
-                        let same_policy = Partitioner::from_name(a) == Some(self.policy);
+                        let same_policy = a.parse::<Partitioner>().ok() == Some(self.policy);
                         let same_eta = parse_f(b)?.to_bits() == self.opts.eta.to_bits();
                         if !(same_policy && same_eta) {
                             return Err(bad(format!(
@@ -1774,8 +1820,8 @@ impl Session<'_> {
                     "pin" => {
                         if a != "-" {
                             pin = Some(
-                                Algorithm::from_name(a)
-                                    .ok_or_else(|| bad(format!("unknown pin algorithm {a:?}")))?,
+                                a.parse::<Algorithm>()
+                                    .map_err(|_| bad(format!("unknown pin algorithm {a:?}")))?,
                             );
                         }
                     }
@@ -1816,10 +1862,12 @@ impl Session<'_> {
                     trace_rows.push((parse_u(key)?, tp));
                 }
                 "retune" => {
-                    let axis = BoundBy::from_name(b)
-                        .ok_or_else(|| bad(format!("unknown bound axis {b:?}")))?;
-                    let algo = Algorithm::from_name(c)
-                        .ok_or_else(|| bad(format!("unknown algorithm {c:?}")))?;
+                    let axis = b
+                        .parse::<BoundBy>()
+                        .map_err(|_| bad(format!("unknown bound axis {b:?}")))?;
+                    let algo = c
+                        .parse::<Algorithm>()
+                        .map_err(|_| bad(format!("unknown algorithm {c:?}")))?;
                     let ev = RetuneEvent {
                         bundle: parse_u(a)?,
                         axis,
@@ -1829,8 +1877,9 @@ impl Session<'_> {
                     retune_rows.push((parse_u(key)?, ev));
                 }
                 "pending" => {
-                    let algo = Algorithm::from_name(a)
-                        .ok_or_else(|| bad(format!("unknown algorithm {a:?}")))?;
+                    let algo = a
+                        .parse::<Algorithm>()
+                        .map_err(|_| bad(format!("unknown algorithm {a:?}")))?;
                     pend_head.push((parse_u(key)?, algo, parse_f(b)?, parse_f(c)?));
                 }
                 "pendcost" => {
@@ -1845,8 +1894,9 @@ impl Session<'_> {
                     let ev = Event {
                         rank: rank_of(a)?,
                         phase: phase_of(ph)?,
-                        kind: EventKind::from_name(kd)
-                            .ok_or_else(|| bad(format!("unknown event kind {kd:?}")))?,
+                        kind: kd
+                            .parse::<EventKind>()
+                            .map_err(|_| bad(format!("unknown event kind {kd:?}")))?,
                         bundle: parse_u(bu)?,
                         start: parse_f(c)?,
                         end: parse_f(d)?,
@@ -1998,9 +2048,10 @@ mod tests {
         }
     }
 
-    /// The absorbed builder knobs set exactly the RunOpts fields the
-    /// `.opts(..)` compatibility path would: both constructions produce
-    /// bit-identical runs.
+    /// The absorbed builder knobs set exactly the [`RunOpts`] fields the
+    /// retired `.opts(..)` compatibility path used to: applying a
+    /// prebuilt struct through [`HybridSolver::run`]'s per-knob chain
+    /// produces a run bit-identical to spelling the knobs directly.
     #[test]
     fn builder_knobs_match_opts_struct() {
         let ds = toy(1, 96, 32, 5);
@@ -2014,7 +2065,8 @@ mod tests {
             overlap: OverlapPolicy::Bundle,
             ..Default::default()
         };
-        let via_opts = SessionBuilder::new(&be, &ds, cfg).opts(opts).run_to_end();
+        let via_opts =
+            crate::solvers::HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts);
         let via_knobs = SessionBuilder::new(&be, &ds, cfg)
             .eta(0.05)
             .max_bundles(6)

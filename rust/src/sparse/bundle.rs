@@ -75,16 +75,6 @@ impl GramStrategy {
         }
     }
 
-    /// Parse a CLI name.
-    pub fn from_name(s: &str) -> Option<GramStrategy> {
-        match s {
-            "merge" => Some(GramStrategy::Merge),
-            "scatter" => Some(GramStrategy::Scatter),
-            "auto" => Some(GramStrategy::Auto),
-            _ => None,
-        }
-    }
-
     /// Resolve `Auto` against a block's measured mean row density
     /// (`zbar = `[`Csr::mean_row_nnz`]). Fixed strategies return
     /// themselves; the result is never `Auto`.
@@ -101,6 +91,12 @@ impl GramStrategy {
         }
     }
 }
+
+crate::impl_enum_from_str!(GramStrategy, "gram strategy",
+    ("merge" => GramStrategy::Merge),
+    ("scatter" => GramStrategy::Scatter),
+    ("auto" => GramStrategy::Auto),
+);
 
 /// The gathered bundle stack `Y`: a compact CSR holding the sampled rows
 /// of one bundle, in sample order, with the parent's column space.
@@ -382,8 +378,8 @@ mod tests {
     #[test]
     fn names_roundtrip() {
         for g in [GramStrategy::Merge, GramStrategy::Scatter, GramStrategy::Auto] {
-            assert_eq!(GramStrategy::from_name(g.name()), Some(g));
+            assert_eq!(g.name().parse::<GramStrategy>(), Ok(g));
         }
-        assert_eq!(GramStrategy::from_name("nope"), None);
+        assert!("nope".parse::<GramStrategy>().is_err());
     }
 }

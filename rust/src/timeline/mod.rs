@@ -88,16 +88,12 @@ impl OverlapPolicy {
             OverlapPolicy::Bundle => "bundle",
         }
     }
-
-    /// Parse a CLI label.
-    pub fn from_name(s: &str) -> Option<OverlapPolicy> {
-        match s {
-            "off" => Some(OverlapPolicy::Off),
-            "bundle" => Some(OverlapPolicy::Bundle),
-            _ => None,
-        }
-    }
 }
+
+crate::impl_enum_from_str!(OverlapPolicy, "overlap policy",
+    ("off" => OverlapPolicy::Off),
+    ("bundle" => OverlapPolicy::Bundle),
+);
 
 /// What a recorded event's span was spent on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -124,22 +120,19 @@ impl EventKind {
         }
     }
 
-    /// Parse a table label back into a kind (checkpoint/trace restore).
-    pub fn from_name(s: &str) -> Option<EventKind> {
-        match s {
-            "compute" => Some(EventKind::Compute),
-            "transfer" => Some(EventKind::Transfer),
-            "wait" => Some(EventKind::Wait),
-            "hidden" => Some(EventKind::Hidden),
-            _ => None,
-        }
-    }
-
     /// Whether this kind advances the simulated clock (is charged).
     pub fn is_charged(&self) -> bool {
         !matches!(self, EventKind::Hidden)
     }
 }
+
+// Checkpoint/trace restore parses kinds back from table labels.
+crate::impl_enum_from_str!(EventKind, "event kind",
+    ("compute" => EventKind::Compute),
+    ("transfer" => EventKind::Transfer),
+    ("wait" => EventKind::Wait),
+    ("hidden" => EventKind::Hidden),
+);
 
 /// One span on one rank's timeline.
 #[derive(Clone, Copy, Debug)]
@@ -439,9 +432,12 @@ mod tests {
     #[test]
     fn overlap_policy_names_roundtrip() {
         for p in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
-            assert_eq!(OverlapPolicy::from_name(p.name()), Some(p));
+            assert_eq!(p.name().parse::<OverlapPolicy>(), Ok(p));
         }
-        assert_eq!(OverlapPolicy::from_name("bogus"), None);
+        assert!("bogus".parse::<OverlapPolicy>().is_err());
         assert_eq!(OverlapPolicy::default(), OverlapPolicy::Off);
+        for k in [EventKind::Compute, EventKind::Transfer, EventKind::Wait, EventKind::Hidden] {
+            assert_eq!(k.name().parse::<EventKind>(), Ok(k));
+        }
     }
 }

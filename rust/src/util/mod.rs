@@ -7,6 +7,7 @@
 //! implementations are deliberately simple, deterministic, and unit-tested.
 
 pub mod error;
+pub mod parse;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

@@ -1,0 +1,73 @@
+//! The one CLI-parsing convention for knob enums.
+//!
+//! Every user-facing enum knob (`--collective`, `--selector`,
+//! `--overlap`, `--retune`, `--gram`, `--backend`, …) implements
+//! [`std::str::FromStr`] with `Err = String` through
+//! [`crate::impl_enum_from_str!`], so every unknown value produces the
+//! same `unknown <what> \`<got>\`, expected one of a|b|c` message and
+//! every call site is the standard `s.parse::<T>()`. This replaced the
+//! per-enum `from_name` methods, which each hand-rolled (or skipped) the
+//! error text.
+
+/// Render the shared unknown-value error message.
+pub fn unknown_value(what: &str, got: &str, expected: &[&str]) -> String {
+    format!("unknown {what} `{got}`, expected one of {}", expected.join("|"))
+}
+
+/// Implement [`std::str::FromStr`] (`Err = String`) for an enum knob:
+///
+/// ```ignore
+/// crate::impl_enum_from_str!(OverlapPolicy, "overlap policy",
+///     ("off" => OverlapPolicy::Off),
+///     ("bundle" => OverlapPolicy::Bundle),
+/// );
+/// ```
+///
+/// Aliases chain with `|` inside one arm (`("rd" | "recursive-doubling"
+/// => …)`); the error message lists every accepted spelling.
+#[macro_export]
+macro_rules! impl_enum_from_str {
+    ($ty:ty, $what:literal, $(($($alias:literal)|+ => $val:expr)),+ $(,)?) => {
+        impl ::std::str::FromStr for $ty {
+            type Err = ::std::string::String;
+            fn from_str(s: &str) -> ::std::result::Result<Self, Self::Err> {
+                match s {
+                    $($($alias)|+ => ::std::result::Result::Ok($val),)+
+                    _ => ::std::result::Result::Err($crate::util::parse::unknown_value(
+                        $what,
+                        s,
+                        &[$($($alias,)+)+],
+                    )),
+                }
+            }
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Probe {
+        A,
+        B,
+    }
+    crate::impl_enum_from_str!(Probe, "probe", ("a" => Probe::A), ("b" | "bee" => Probe::B));
+
+    #[test]
+    fn parses_aliases_and_reports_unknowns() {
+        assert_eq!("a".parse::<Probe>(), Ok(Probe::A));
+        assert_eq!("bee".parse::<Probe>(), Ok(Probe::B));
+        let err = "z".parse::<Probe>().unwrap_err();
+        assert_eq!(err, "unknown probe `z`, expected one of a|b|bee");
+    }
+
+    #[test]
+    fn helper_formats_the_shared_message() {
+        assert_eq!(
+            unknown_value("thing", "x", &["p", "q"]),
+            "unknown thing `x`, expected one of p|q"
+        );
+    }
+}

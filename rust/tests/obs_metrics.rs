@@ -20,7 +20,7 @@
 //!   series, and the TSV sink leads with its schema row.
 
 use hybrid_sgd::collectives::SelectorSource;
-use hybrid_sgd::comm::OverlapPolicy;
+use hybrid_sgd::comm::{ExecBackend, OverlapPolicy};
 use hybrid_sgd::compute::NativeBackend;
 use hybrid_sgd::costmodel::{CalibProfile, HybridConfig};
 use hybrid_sgd::data::{synth, Dataset};
@@ -36,6 +36,26 @@ use hybrid_sgd::util::Prng;
 use std::cell::RefCell;
 use std::io;
 use std::rc::Rc;
+
+/// Apply a prebuilt [`RunOpts`] through the per-knob builder surface
+/// (the whole-struct `.opts(..)` compat path is retired).
+fn with_opts<'a>(b: SessionBuilder<'a>, o: &RunOpts) -> SessionBuilder<'a> {
+    b.eta(o.eta)
+        .max_bundles(o.max_bundles)
+        .eval_every(o.eval_every)
+        .target_loss(o.target_loss)
+        .backend(o.backend)
+        .lanes(o.lanes)
+        .charging(o.charging)
+        .profile(o.profile.clone())
+        .algo(o.algo)
+        .selector(o.selector)
+        .overlap(o.overlap)
+        .rs_row(o.rs_row)
+        .gram(o.gram)
+        .record_timeline(o.timeline)
+        .seed(o.seed)
+}
 
 fn bits(x: &[f64]) -> Vec<u64> {
     x.iter().map(|v| v.to_bits()).collect()
@@ -111,10 +131,10 @@ fn prop_metrics_are_observation_only_across_knob_grid() {
                     gram: GramStrategy::Auto,
                     ..Default::default()
                 };
-                let plain = SessionBuilder::new(&be, &ds, cfg).opts(opts.clone()).run_to_end();
+                let plain =
+                    with_opts(SessionBuilder::new(&be, &ds, cfg), &opts).run_to_end();
                 let cap = CaptureSink::default();
-                let metered = SessionBuilder::new(&be, &ds, cfg)
-                    .opts(opts)
+                let metered = with_opts(SessionBuilder::new(&be, &ds, cfg), &opts)
                     .metrics_sink(Box::new(cap.clone()))
                     .run_to_end();
                 assert!(
@@ -176,8 +196,11 @@ fn drift_is_zero_on_calibration_consistent_run() {
     for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
         for rs_row in [false, true] {
             let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
+            // Pinned to the simulator: under `Threads` the wall-fidelity
+            // gauges ride along and the drift snapshot grows past 8.
             let run = SessionBuilder::new(&be, &ds, cfg)
                 .partitioner(Partitioner::Cyclic)
+                .backend(ExecBackend::Sim)
                 .overlap(overlap)
                 .rs_row(rs_row)
                 .max_bundles(6)
@@ -225,6 +248,7 @@ fn doctored_predict_profile_flags_every_phase() {
     let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 4, 2);
     let run = SessionBuilder::new(&be, &ds, cfg)
         .partitioner(Partitioner::Cyclic)
+        .backend(ExecBackend::Sim)
         .predict_profile(doctored_profile())
         .max_bundles(6)
         .eval_every(2)
@@ -242,6 +266,9 @@ fn doctored_predict_profile_flags_every_phase() {
                 "traffic books are rate-independent ({}: ewma {})",
                 d.key.name(),
                 d.ewma
+            ),
+            DriftKey::Wall(_) => unreachable!(
+                "wall-fidelity gauges only appear under the threads backend"
             ),
         }
     }

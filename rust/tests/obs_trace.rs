@@ -34,6 +34,26 @@ use std::cell::RefCell;
 use std::io::{self, Write};
 use std::rc::Rc;
 
+/// Apply a prebuilt [`RunOpts`] through the per-knob builder surface
+/// (the whole-struct `.opts(..)` compat path is retired).
+fn with_opts<'a>(b: SessionBuilder<'a>, o: &RunOpts) -> SessionBuilder<'a> {
+    b.eta(o.eta)
+        .max_bundles(o.max_bundles)
+        .eval_every(o.eval_every)
+        .target_loss(o.target_loss)
+        .backend(o.backend)
+        .lanes(o.lanes)
+        .charging(o.charging)
+        .profile(o.profile.clone())
+        .algo(o.algo)
+        .selector(o.selector)
+        .overlap(o.overlap)
+        .rs_row(o.rs_row)
+        .gram(o.gram)
+        .record_timeline(o.timeline)
+        .seed(o.seed)
+}
+
 /// A `Write` the test keeps a handle to after the sink is boxed away
 /// into the session's observer.
 #[derive(Clone, Default)]
@@ -104,11 +124,11 @@ fn prop_tracing_is_observation_only_across_knob_grid() {
                     gram: GramStrategy::Auto,
                     ..Default::default()
                 };
-                let plain = SessionBuilder::new(&be, &ds, cfg).opts(opts.clone()).run_to_end();
+                let plain =
+                    with_opts(SessionBuilder::new(&be, &ds, cfg), &opts).run_to_end();
                 let jsonl = ShareBuf::default();
                 let perfetto = ShareBuf::default();
-                let traced = SessionBuilder::new(&be, &ds, cfg)
-                    .opts(opts)
+                let traced = with_opts(SessionBuilder::new(&be, &ds, cfg), &opts)
                     .trace_sink(Box::new(JsonlSink::new(jsonl.clone())))
                     .trace_sink(Box::new(PerfettoSink::new(perfetto.clone())))
                     .run_to_end();
@@ -216,7 +236,7 @@ fn exported_files_reconcile_with_books() {
     let text = jsonl.take_string();
     for line in text.lines() {
         let rank: usize = field(line, "\"rank\":").parse().unwrap();
-        let phase = Phase::from_name(field(line, "\"phase\":")).expect("known phase");
+        let phase: Phase = field(line, "\"phase\":").parse().expect("known phase");
         let kind = field(line, "\"kind\":");
         let t0: f64 = field(line, "\"t_start\":").parse().unwrap();
         let t1: f64 = field(line, "\"t_end\":").parse().unwrap();

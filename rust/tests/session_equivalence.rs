@@ -12,10 +12,14 @@
 //!   trajectories;
 //! * the bundle Gram strategy knob (`--gram merge|scatter|auto`) is a
 //!   host-wall-only knob: weights, traces, walls, and charged books are
-//!   bit-identical across all three strategies.
+//!   bit-identical across all three strategies;
+//! * the execution backend (`--backend sim|threads`) is value- and
+//!   book-invariant: real threads-as-ranks execution reproduces the
+//!   simulated backend bit for bit across the same knob grid, and
+//!   checkpoints resume across backends in both directions.
 
 use hybrid_sgd::collectives::SelectorSource;
-use hybrid_sgd::comm::OverlapPolicy;
+use hybrid_sgd::comm::{ExecBackend, OverlapPolicy};
 use hybrid_sgd::compute::NativeBackend;
 use hybrid_sgd::costmodel::HybridConfig;
 use hybrid_sgd::data::synth;
@@ -28,6 +32,26 @@ use hybrid_sgd::util::proptest::{check, Config};
 use hybrid_sgd::util::Prng;
 
 const GRAMS: [GramStrategy; 3] = [GramStrategy::Merge, GramStrategy::Scatter, GramStrategy::Auto];
+
+/// Apply a prebuilt [`RunOpts`] through the per-knob builder surface
+/// (the whole-struct `.opts(..)` compat path is retired).
+fn with_opts<'a>(b: SessionBuilder<'a>, o: &RunOpts) -> SessionBuilder<'a> {
+    b.eta(o.eta)
+        .max_bundles(o.max_bundles)
+        .eval_every(o.eval_every)
+        .target_loss(o.target_loss)
+        .backend(o.backend)
+        .lanes(o.lanes)
+        .charging(o.charging)
+        .profile(o.profile.clone())
+        .algo(o.algo)
+        .selector(o.selector)
+        .overlap(o.overlap)
+        .rs_row(o.rs_row)
+        .gram(o.gram)
+        .record_timeline(o.timeline)
+        .seed(o.seed)
+}
 
 fn bits(x: &[f64]) -> Vec<u64> {
     x.iter().map(|v| v.to_bits()).collect()
@@ -105,10 +129,8 @@ fn prop_step_driven_session_bit_identical_to_run() {
                 ..Default::default()
             };
             let run = HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts);
-            let mut session = SessionBuilder::new(&be, &ds, cfg)
-                .partitioner(Partitioner::Cyclic)
-                .opts(opts.clone())
-                .build();
+            let builder = SessionBuilder::new(&be, &ds, cfg).partitioner(Partitioner::Cyclic);
+            let mut session = with_opts(builder, &opts).build();
             while !session.is_done() {
                 let _ = session.step_bundle();
             }
@@ -152,9 +174,10 @@ fn prop_checkpoint_resume_bit_identical() {
                 ..Default::default()
             };
             let builder = || {
-                SessionBuilder::new(&be, &ds, cfg)
-                    .partitioner(Partitioner::Cyclic)
-                    .opts(opts.clone())
+                with_opts(
+                    SessionBuilder::new(&be, &ds, cfg).partitioner(Partitioner::Cyclic),
+                    &opts,
+                )
             };
             let straight = builder().run_to_end();
             let path = dir.join(format!("case_{case}.tsv"));
@@ -288,4 +311,107 @@ fn bound_aware_retune_is_trajectory_invariant_end_to_end() {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{mesh}: retuning changed a loss");
         }
     }
+}
+
+/// The tentpole acceptance pin: real threads-as-ranks execution is
+/// **bit-identical** to the simulated backend — weights, traces, walls,
+/// charged books, words, messages — across the
+/// overlap × selector × rs_row × gram knob grid. The collective values
+/// come from a real barrier-synchronized shared-memory reduction under
+/// `Threads`, yet match `Sim`'s canonical host-thread reduce bit for bit
+/// because both accumulate in the same linear team order.
+#[test]
+fn prop_threads_backend_bit_identical_to_sim() {
+    let mut rng = Prng::new(0xBACE);
+    let ds = synth::sparse_skewed("backend-toy", 150, 44, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    check(
+        Config { cases: 16, seed: 0xBACE },
+        "threads backend == sim backend, bit for bit",
+        |rng| {
+            (
+                1 + rng.next_below(3),  // p_r
+                1 + rng.next_below(4),  // p_c
+                1 + rng.next_below(3),  // s
+                2 + rng.next_below(6),  // b
+                rng.next_below(2) == 1, // overlap bundle
+                rng.next_below(2) == 1, // rs_row
+                rng.next_below(2) == 1, // measured selector
+                rng.next_below(3),      // gram strategy index
+                1 + rng.next_below(4),  // lanes (threads pool cap)
+            )
+        },
+        |&(p_r, p_c, s, b, overlap, rs_row, measured, gram, lanes)| {
+            let cfg = HybridConfig::new(Mesh::new(p_r, p_c), s, b, s + 1);
+            let run_with = |backend: ExecBackend| {
+                let opts = RunOpts {
+                    max_bundles: 5,
+                    eval_every: 2,
+                    overlap: if overlap { OverlapPolicy::Bundle } else { OverlapPolicy::Off },
+                    rs_row,
+                    selector: if measured {
+                        SelectorSource::Measured
+                    } else {
+                        SelectorSource::Analytic
+                    },
+                    gram: GRAMS[gram],
+                    backend,
+                    lanes,
+                    ..Default::default()
+                };
+                HybridSolver::new(&be).run(&ds, cfg, Partitioner::Cyclic, &opts)
+            };
+            let sim = run_with(ExecBackend::Sim);
+            let threads = run_with(ExecBackend::Threads);
+            runs_equal(&sim, &threads)
+        },
+    );
+}
+
+/// Checkpoints are backend-portable: a session checkpointed under one
+/// execution backend resumes under the other, both directions, and the
+/// resumed run finishes bit-identical to a straight single-backend run.
+/// (The checkpoint schema deliberately records no backend — execution is
+/// a property of the resuming process, not of the optimizer state.)
+#[test]
+fn checkpoint_resumes_across_backends_both_ways() {
+    let mut rng = Prng::new(0xC0B0);
+    let ds = synth::sparse_skewed("xbackend-toy", 140, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let dir = std::env::temp_dir().join(format!("session_equiv_xbackend_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (from, to, overlap) in [
+        (ExecBackend::Sim, ExecBackend::Threads, OverlapPolicy::Off),
+        (ExecBackend::Threads, ExecBackend::Sim, OverlapPolicy::Off),
+        (ExecBackend::Sim, ExecBackend::Threads, OverlapPolicy::Bundle),
+        (ExecBackend::Threads, ExecBackend::Sim, OverlapPolicy::Bundle),
+    ] {
+        let cfg = HybridConfig::new(Mesh::new(2, 3), 2, 5, 3);
+        let opts = RunOpts { max_bundles: 7, eval_every: 2, overlap, ..Default::default() };
+        let builder = |backend: ExecBackend| {
+            with_opts(SessionBuilder::new(&be, &ds, cfg).partitioner(Partitioner::Cyclic), &opts)
+                .backend(backend)
+        };
+        let straight = builder(ExecBackend::Sim).run_to_end();
+        let path = dir.join(format!("{}_{}_{overlap:?}.tsv", from.name(), to.name()));
+        let mut first = builder(from).build();
+        for _ in 0..3 {
+            let _ = first.step_bundle();
+        }
+        first.checkpoint(&path).unwrap();
+        drop(first);
+        let mut resumed = builder(to).resume(&path).unwrap();
+        while !resumed.is_done() {
+            let _ = resumed.step_bundle();
+        }
+        let resumed = resumed.finish();
+        std::fs::remove_file(&path).unwrap();
+        assert!(
+            runs_equal(&straight, &resumed),
+            "resume {} -> {} under {overlap:?} diverged from the straight run",
+            from.name(),
+            to.name(),
+        );
+    }
+    std::fs::remove_dir_all(dir).unwrap();
 }

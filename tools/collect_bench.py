@@ -20,19 +20,22 @@ Each input file is one bench target's captured stdout (named
   smoke check that a bench kept printing what it used to;
 * ``summary``-prefixed TSV rows (the ``obs::summary`` run report some
   benches print: ``summary <kind> <key> <a> <b> <c> <d>``) — folded into
-  a ``summary`` dict so per-phase charged/wait/hidden seconds, traffic,
-  the health verdict, the model-drift gauges, and the retune history
-  ride the trajectory next to the kernel medians.
+  a ``summary`` dict so per-phase charged/wait/hidden seconds, measured
+  wall seconds (real execution under the threads backend), traffic, the
+  health verdict, the model-drift gauges, and the retune history ride
+  the trajectory next to the kernel medians.
 
 Output schema (one object per bench)::
 
     { "<bench>": { "wall_s": 12.3, "speedups": [1.87, ...],
                    "kernels_ns": {"gram gathered | q=128 zbar=64": 812.0},
                    "sections": ["Table 8 - ...", ...], "lines": 120,
-                   "summary": { "schema": 2, "sim_wall": 0.42,
+                   "summary": { "schema": 3, "sim_wall": 0.42,
                                 "phases": {"spgemv": {"charged": ..,
                                            "wait": .., "hidden": ..,
                                            "max_charged": ..}},
+                                "measured": {"spgemv": {"wall": ..,
+                                             "max_wall": ..}},
                                 "traffic": {"words": .., "messages": ..},
                                 "health": "healthy",
                                 "drift": {"sstep_comm": {"ewma": ..,
@@ -95,6 +98,11 @@ def fold_summary(rows: list) -> dict:
                 "wait": fnum(b),
                 "hidden": fnum(c),
                 "max_charged": fnum(d),
+            }
+        elif kind == "measured":
+            out.setdefault("measured", {})[key] = {
+                "wall": fnum(a),
+                "max_wall": fnum(b),
             }
         elif kind == "traffic":
             out["traffic"] = {"words": fnum(a), "messages": fnum(b)}
