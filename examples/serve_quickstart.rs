@@ -1,0 +1,140 @@
+//! Serve quickstart: the training-service daemon end to end, in process.
+//!
+//! Stands up a [`Daemon`] on an ephemeral loopback port, submits
+//! concurrent jobs through the typed [`Client`], and shows the whole
+//! service surface the `serve`/`submit`/`watch` CLI subcommands expose:
+//!
+//! * **admission planning** — each submit is priced by the cost model
+//!   against the live `CalibProfile`: the topology rule shapes the mesh
+//!   from the requested `p`, the joint optimum picks `(s, b, overlap)`,
+//!   and the reply echoes the plan (knobs + predicted per-epoch
+//!   seconds) before a single bundle runs;
+//! * **concurrent sessions** — both jobs are admitted onto the rank
+//!   budget and step in parallel, one worker thread each;
+//! * **streamed telemetry** — `watch` follows a job's per-bundle frames
+//!   (loss on the eval cadence, health verdict, simulated wall) live
+//!   over TCP;
+//! * **prompt cancel** — a long job is canceled mid-run and stops at
+//!   the next bundle boundary;
+//! * **service metrics** — the daemon keeps an OpenMetrics scrape file
+//!   (`serve_quickstart.prom`) with job lifecycle counters and per-job
+//!   gauges, validated in CI by `tools/check_metrics.py`;
+//! * **graceful drain** — `shutdown` checkpoints in-flight work into
+//!   the spool; a daemon restarted on the same spool would resume it
+//!   bit-identically (`tests/serve_daemon.rs` proves that equivalence).
+//!
+//! ```bash
+//! cargo run --release --example serve_quickstart -- quick  # CI smoke scale
+//! cargo run --release --example serve_quickstart
+//! ```
+//!
+//! The same daemon runs out of process via the CLI:
+//!
+//! ```bash
+//! cargo run --release -- serve --port 7465 --spool /tmp/pallas-spool &
+//! cargo run --release -- submit --addr 127.0.0.1:7465 --dataset rcv1 --watch
+//! cargo run --release -- status --addr 127.0.0.1:7465
+//! cargo run --release -- serve --stop --addr 127.0.0.1:7465
+//! ```
+
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::serve::{Client, Daemon, DaemonConfig, JobSpec, JobState};
+use std::path::PathBuf;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "quick");
+    let bundles = if quick { 40 } else { 200 };
+
+    // 1. An in-process daemon: ephemeral port, throwaway spool, scrape
+    //    file in the working directory (CI validates it).
+    let spool = std::env::temp_dir().join(format!("serve_quickstart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spool);
+    let mut cfg = DaemonConfig::local(&spool);
+    cfg.metrics_out = Some(PathBuf::from("serve_quickstart.prom"));
+    let daemon = Daemon::start(cfg).expect("daemon start");
+    println!("daemon on {} (spool {})", daemon.addr(), spool.display());
+
+    // 2. Submit two quick jobs on different datasets. The reply carries
+    //    the planner's knob set — nothing here picks s, b, or the mesh.
+    let client = Client::new(daemon.addr().to_string());
+    let spec = |dataset, seed| JobSpec {
+        dataset,
+        scale: 0.05,
+        p: 2,
+        bundles,
+        eval_every: 5,
+        eta: 0.1,
+        tau: 10,
+        seed,
+        target: None,
+        ckpt_every: 8,
+    };
+    let mut ids = Vec::new();
+    for (dataset, seed) in [(DatasetSpec::Rcv1Like, 1), (DatasetSpec::SyntheticUniform, 2)] {
+        let (row, plan) = client.submit(&spec(dataset, seed)).expect("submit");
+        println!(
+            "job {} {:>8}  mesh {}  s={} b={}  algo={} overlap={} gram={}  ~{:.4} s/epoch",
+            row.id,
+            row.state.name(),
+            plan.mesh,
+            plan.s,
+            plan.b,
+            plan.algo.name(),
+            plan.overlap.name(),
+            plan.gram.name(),
+            plan.per_epoch_s,
+        );
+        assert_eq!(row.state, JobState::Running, "both jobs fit the rank budget");
+        ids.push(row.id);
+    }
+
+    // 3. A third, long job — submitted, then promptly canceled: workers
+    //    honour the flag at the next bundle boundary.
+    let mut long_spec = spec(DatasetSpec::Rcv1Like, 99);
+    long_spec.bundles = 100_000;
+    let (long, _) = client.submit(&long_spec).expect("submit long");
+    println!("job {} canceled: {}", long.id, client.cancel(long.id).expect("cancel"));
+
+    // 4. Follow the first job's telemetry live over the wire.
+    let done = client
+        .watch(ids[0], 0, |t| {
+            if let Some(loss) = t.loss {
+                println!(
+                    "  job {} bundle {:>4}  loss {loss:.6}  health {:<10}  sim {:.4}s",
+                    t.id, t.bundle, t.health, t.sim_wall
+                );
+            }
+        })
+        .expect("watch");
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, bundles);
+
+    // 5. Wait for the rest, then print the status board.
+    for &id in &ids[1..] {
+        client.watch(id, 0, |_| {}).expect("watch");
+    }
+    client.watch(long.id, 0, |_| {}).expect("watch canceled");
+    println!("board:");
+    let rows = client.status(None).expect("status");
+    for row in &rows {
+        println!(
+            "  #{} {:>9}  bundles {:>5}  loss {}",
+            row.id,
+            row.state.name(),
+            row.bundles,
+            row.loss.map(|l| format!("{l:.6}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    assert!(rows.iter().filter(|r| r.state == JobState::Done).count() >= 2);
+    assert!(rows.iter().any(|r| r.state == JobState::Canceled));
+
+    // 6. Graceful drain; the scrape file survives with the final counts.
+    println!("shutdown: {}", client.shutdown().expect("shutdown"));
+    daemon.wait();
+    let scrape = std::fs::read_to_string("serve_quickstart.prom").expect("scrape file");
+    println!("serve_quickstart.prom (service families):");
+    for line in scrape.lines().filter(|l| l.contains("serve_jobs") && !l.starts_with('#')) {
+        println!("  {line}");
+    }
+    let _ = std::fs::remove_dir_all(&spool);
+}

@@ -10,7 +10,7 @@
 
 use super::calib::CalibProfile;
 use super::model::{eval_algo_overlap_with, eval_flat, ltilde, DataShape, HybridConfig};
-use crate::collectives::{AlgoPolicy, SelectorSource};
+use crate::collectives::{self, AlgoPolicy, Algorithm, SelectorSource};
 use crate::timeline::OverlapPolicy;
 use crate::WORD_BYTES;
 
@@ -193,6 +193,68 @@ pub fn joint_optimum_full(
         }
     }
     best
+}
+
+/// The cost model's answer to an admission request: the knob set a new
+/// job should run with, plus the predicted visible seconds the model
+/// charges one epoch under those knobs. Produced by [`admission_plan`];
+/// consumed by the `serve` scheduler, which packs jobs by mesh footprint
+/// and runs each session with exactly these knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionPlan {
+    /// Recurrence length `s` (grid argmin).
+    pub s: usize,
+    /// Batch size `b` (grid argmin).
+    pub b: usize,
+    /// Overlap policy whose visible total won the sweep.
+    pub overlap: OverlapPolicy,
+    /// The auto-selector's row-collective pick for the planned Gram
+    /// payload (reported so clients see the full knob set; the engine
+    /// re-picks per call under `AlgoPolicy::Auto` and lands on the same
+    /// schedule for the same payload).
+    pub algo: Algorithm,
+    /// Predicted visible (charged) seconds per epoch at the optimum.
+    pub per_epoch_s: f64,
+}
+
+/// Joint admission planning for a serve job: sweep both overlap policies
+/// through [`joint_optimum_full`] under `AlgoPolicy::Auto` and keep the
+/// knob set with the cheapest visible Eq. (4) total. The overlap axis is
+/// part of the plan — hiding the row reduce shifts `(s*, b*)` (see
+/// [`sweep_s_overlap`]), so the planner must pick the pair jointly
+/// rather than bolting overlap onto the bulk-synchronous optimum.
+pub fn admission_plan(
+    cfg: &HybridConfig,
+    data: &DataShape,
+    profile: &CalibProfile,
+    source: SelectorSource,
+    s_max: usize,
+    b_max: usize,
+) -> AdmissionPlan {
+    let mut best: Option<AdmissionPlan> = None;
+    for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+        let (s, b) =
+            joint_optimum_full(cfg, data, profile, AlgoPolicy::Auto, source, overlap, s_max, b_max);
+        let mut c = *cfg;
+        c.s = s;
+        c.b = b;
+        c.tau = c.tau.max(s);
+        let t = eval_algo_overlap_with(&c, data, profile, AlgoPolicy::Auto, source, overlap)
+            .total();
+        if best.map(|p| t < p.per_epoch_s).unwrap_or(true) {
+            // Report the selector's pick for the planned row payload —
+            // the same (q, words) the model prices the row reduce at.
+            let q_row = c.mesh.p_c;
+            let w_row = s * (s - 1) * b * b / 2;
+            let algo = if q_row > 1 {
+                collectives::charge_with(profile, AlgoPolicy::Auto, source, q_row, w_row).0
+            } else {
+                Algorithm::Linear
+            };
+            best = Some(AdmissionPlan { s, b, overlap, algo, per_epoch_s: t });
+        }
+    }
+    best.expect("both overlap sweeps evaluated")
 }
 
 fn with_s(cfg: &HybridConfig, s: usize) -> HybridConfig {
@@ -452,6 +514,46 @@ mod tests {
             48,
         );
         assert_eq!(a, m);
+    }
+
+    #[test]
+    fn admission_plan_is_the_winning_overlap_optimum() {
+        use crate::collectives::AlgoPolicy;
+        let prof = CalibProfile::perlmutter();
+        let cfg = HybridConfig::new(Mesh::new(4, 64), 4, 32, 10);
+        let data = shape();
+        let plan = admission_plan(&cfg, &data, &prof, SelectorSource::Analytic, 16, 64);
+        assert!((1..=16).contains(&plan.s));
+        assert!((1..=64).contains(&plan.b));
+        assert!(plan.per_epoch_s.is_finite() && plan.per_epoch_s > 0.0);
+        // Never worse than either single-policy joint optimum priced
+        // under its own policy.
+        for overlap in [OverlapPolicy::Off, OverlapPolicy::Bundle] {
+            let (s, b) = joint_optimum_full(
+                &cfg,
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                SelectorSource::Analytic,
+                overlap,
+                16,
+                64,
+            );
+            let mut c = cfg;
+            c.s = s;
+            c.b = b;
+            c.tau = c.tau.max(s);
+            let t = eval_algo_overlap_with(
+                &c,
+                &data,
+                &prof,
+                AlgoPolicy::Auto,
+                SelectorSource::Analytic,
+                overlap,
+            )
+            .total();
+            assert!(plan.per_epoch_s <= t + 1e-15, "{overlap:?} optimum beat the plan");
+        }
     }
 
     #[test]

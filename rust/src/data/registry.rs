@@ -37,6 +37,18 @@ impl DatasetSpec {
         ]
     }
 
+    /// Canonical CLI/wire name — the first alias `FromStr` accepts, so
+    /// serve-protocol frames and spool records round-trip through it.
+    pub fn cli_name(self) -> &'static str {
+        match self {
+            DatasetSpec::UrlLike => "url",
+            DatasetSpec::News20Like => "news20",
+            DatasetSpec::Rcv1Like => "rcv1",
+            DatasetSpec::EpsilonLike => "epsilon",
+            DatasetSpec::SyntheticUniform => "synthetic",
+        }
+    }
+
     /// The profile for this spec.
     pub fn profile(self) -> DatasetProfile {
         match self {

@@ -65,6 +65,7 @@ pub mod metrics;
 pub mod obs;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod sparse;
 pub mod timeline;

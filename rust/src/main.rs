@@ -19,9 +19,18 @@
 //! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
 //! hybrid-sgd datasets                              # registry listing
+//! hybrid-sgd serve      [--port 0] [--spool DIR] [--slots N] [--stop]
+//! hybrid-sgd submit     --addr HOST:PORT --dataset rcv1 --p 8 [--watch]
+//! hybrid-sgd status     --addr HOST:PORT [--job N]
+//! hybrid-sgd watch      --addr HOST:PORT --job N [--from K]
+//! hybrid-sgd cancel     --addr HOST:PORT --job N
 //! hybrid-sgd table4|table5|table7|table8|table9|table10|table11
 //! hybrid-sgd fig2|fig3|fig4|fig5|fig6|fig7         [--effort quick|full]
 //! ```
+//!
+//! Flags are checked against a per-subcommand allowlist (`cli_flags`);
+//! `--key=value` and `--key value` are both accepted, and a value flag
+//! always consumes the next token, so values starting with `-` work.
 
 use hybrid_sgd::comm::{AlgoPolicy, Charging, ExecBackend, OverlapPolicy, SelectorSource};
 use hybrid_sgd::compute::{ComputeBackend, NativeBackend};
@@ -33,11 +42,92 @@ use hybrid_sgd::mesh::Mesh;
 use hybrid_sgd::obs::{self, MetricsTsvSink, PrometheusSink, RunSummary, TraceFormat};
 use hybrid_sgd::partition::{self, Partitioner};
 use hybrid_sgd::runtime::XlaBackend;
+use hybrid_sgd::serve;
 use hybrid_sgd::solvers::{RetunePolicy, RunOpts, SessionBuilder};
 use hybrid_sgd::sparse::GramStrategy;
 use hybrid_sgd::util::parse::unknown_value;
 use hybrid_sgd::util::Table;
 use std::collections::HashMap;
+
+/// Per-subcommand flag allowlists: `(name, takes_value)`. The parser
+/// rejects anything not listed, so a typo'd `--flag` is an error instead
+/// of a silently ignored knob (the failure mode of the old parser).
+mod cli_flags {
+    use hybrid_sgd::util::parse::FlagSpec;
+
+    pub const TRAIN: &[FlagSpec] = &[
+        ("dataset", true),
+        ("p", true),
+        ("scale", true),
+        ("mesh", true),
+        ("s", true),
+        ("b", true),
+        ("tau", true),
+        ("eta", true),
+        ("bundles", true),
+        ("eval-every", true),
+        ("target", true),
+        ("seed", true),
+        ("partitioner", true),
+        ("compute", true),
+        ("backend", true),
+        ("lanes", true),
+        ("charging", true),
+        ("collective", true),
+        ("selector", true),
+        ("overlap", true),
+        ("rs-row", false),
+        ("gram", true),
+        ("profile", true),
+        ("retune", true),
+        ("retune-every", true),
+        ("checkpoint", true),
+        ("resume", true),
+        ("trace-out", true),
+        ("trace-format", true),
+        ("metrics-out", true),
+        ("metrics-series", true),
+        ("summary", true),
+    ];
+    pub const PREDICT: &[FlagSpec] = &[("dataset", true), ("p", true), ("scale", true)];
+    pub const CALIBRATE: &[FlagSpec] =
+        &[("quick", false), ("collectives", false), ("save", true)];
+    pub const PARTITION_STATS: &[FlagSpec] =
+        &[("dataset", true), ("scale", true), ("pc", true)];
+    pub const DATASETS: &[FlagSpec] = &[];
+    pub const TABLE: &[FlagSpec] = &[("effort", true)];
+    pub const SERVE: &[FlagSpec] = &[
+        ("host", true),
+        ("port", true),
+        ("spool", true),
+        ("slots", true),
+        ("profile", true),
+        ("selector", true),
+        ("backend", true),
+        ("metrics-out", true),
+        ("s-max", true),
+        ("b-max", true),
+        ("stop", false),
+        ("addr", true), // with --stop: which daemon to drain
+    ];
+    pub const SUBMIT: &[FlagSpec] = &[
+        ("addr", true),
+        ("dataset", true),
+        ("scale", true),
+        ("p", true),
+        ("bundles", true),
+        ("eval-every", true),
+        ("eta", true),
+        ("tau", true),
+        ("seed", true),
+        ("target", true),
+        ("ckpt-every", true),
+        ("watch", false),
+    ];
+    pub const STATUS: &[FlagSpec] = &[("addr", true), ("job", true)];
+    pub const WATCH: &[FlagSpec] = &[("addr", true), ("job", true), ("from", true)];
+    pub const CANCEL: &[FlagSpec] = &[("addr", true), ("job", true)];
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,13 +135,37 @@ fn main() {
         usage();
         std::process::exit(2);
     };
-    let flags = parse_flags(&args[1..]);
+    let allowed = match cmd.as_str() {
+        "train" => cli_flags::TRAIN,
+        "predict" => cli_flags::PREDICT,
+        "calibrate" => cli_flags::CALIBRATE,
+        "partition-stats" => cli_flags::PARTITION_STATS,
+        "datasets" => cli_flags::DATASETS,
+        "serve" => cli_flags::SERVE,
+        "submit" => cli_flags::SUBMIT,
+        "status" => cli_flags::STATUS,
+        "watch" => cli_flags::WATCH,
+        "cancel" => cli_flags::CANCEL,
+        _ => cli_flags::TABLE,
+    };
+    let flags = match hybrid_sgd::util::parse::parse_flags(&args[1..], allowed) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
+            std::process::exit(2);
+        }
+    };
     let code = match cmd.as_str() {
         "train" => cmd_train(&flags),
         "predict" => cmd_predict(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "partition-stats" => cmd_partition_stats(&flags),
         "datasets" => cmd_datasets(),
+        "serve" => cmd_serve(&flags),
+        "submit" => cmd_submit(&flags),
+        "status" => cmd_status(&flags),
+        "watch" => cmd_watch(&flags),
+        "cancel" => cmd_cancel(&flags),
         "table4" => run_table(experiments::table4::run, &flags),
         "table5" => run_table(experiments::table5::run, &flags),
         "table7" => run_table(experiments::table7::run, &flags),
@@ -87,6 +201,16 @@ fn usage() {
          calibrate         measure local alpha/beta/gamma (Table 7 method)\n  \
          partition-stats   kappa / footprint survey for the three partitioners\n  \
          datasets          list registry profiles\n  \
+         serve             run the pallas-serve training daemon (TCP, TSV wire\n  \
+                           protocol; jobs are admission-planned by the cost model,\n  \
+                           packed by mesh footprint, checkpointed into --spool and\n  \
+                           resumed bit-identically on restart; --stop drains it)\n  \
+         submit            submit a job to a daemon (prints the admission plan;\n  \
+                           --watch streams telemetry until the job ends)\n  \
+         status            job board of a daemon (--job N for one row)\n  \
+         watch             stream one job's per-bundle telemetry (--from K resumes\n  \
+                           the stream after bundle K)\n  \
+         cancel            cancel a queued or running job\n  \
          table4..table11   reproduce a paper table\n  \
          fig2..fig7        reproduce a paper figure\n\n\
          common flags: --dataset url|news20|rcv1|epsilon|synthetic  --p N\n  \
@@ -113,32 +237,21 @@ fn usage() {
            per-phase model drift, overlap efficiency; rewritten every bundle)\n  \
          --metrics-series FILE.tsv (append the same samples as a TSV time-series)\n  \
          --summary FILE.tsv (write the versioned obs::summary run report)\n  \
-         calibrate --collectives (also fit per-algorithm curves into --save)"
+         calibrate --collectives (also fit per-algorithm curves into --save)\n\n\
+         serve flags: --host H --port P (0 = ephemeral; the bound address is\n  \
+           printed as `serving on HOST:PORT`) --spool DIR --slots N (rank\n  \
+           capacity for footprint packing) --profile FILE.tsv --selector\n  \
+           analytic|measured --backend sim|threads --metrics-out FILE.prom\n  \
+           --s-max N --b-max N (admission-planner grid) --stop [--addr] (drain)\n\
+         client flags (submit/status/watch/cancel): --addr HOST:PORT --job N\n  \
+           --from K (watch replay cursor) --ckpt-every N (durable checkpoint\n  \
+           cadence, bundles) plus the train-style job axes on submit:\n  \
+           --dataset --scale --p --bundles --eval-every --eta --tau --seed\n  \
+           --target (the planner chooses s/b/mesh/algo/overlap/gram)"
     );
 }
 
 type Flags = HashMap<String, String>;
-
-fn parse_flags(args: &[String]) -> Flags {
-    let mut flags = Flags::new();
-    let mut i = 0;
-    while i < args.len() {
-        let a = &args[i];
-        if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            eprintln!("ignoring stray argument {a:?}");
-            i += 1;
-        }
-    }
-    flags
-}
 
 fn get<T: std::str::FromStr>(flags: &Flags, key: &str, default: T) -> T {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -577,4 +690,240 @@ fn cmd_train(flags: &Flags) -> i32 {
         }
     }
     0
+}
+
+// ---------------------------------------------------------------------
+// pallas-serve subcommands
+// ---------------------------------------------------------------------
+
+fn serve_addr(flags: &Flags) -> String {
+    flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7465".into())
+}
+
+fn serve_job_id(flags: &Flags) -> Result<serve::JobId, String> {
+    let v = flags.get("job").ok_or("--job is required")?;
+    v.parse().map_err(|_| format!("--job: bad job id `{v}`"))
+}
+
+fn print_job_row(row: &serve::JobRow) {
+    let queue = row.queue_pos.map(|q| format!(" queue_pos={q}")).unwrap_or_default();
+    let loss = row.loss.map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into());
+    println!(
+        "job {} {}{queue} bundles={} loss={loss} health={}",
+        row.id,
+        row.state.name(),
+        row.bundles,
+        row.health,
+    );
+}
+
+fn print_plan(id: serve::JobId, plan: &serve::Plan) {
+    println!(
+        "plan for job {id}: mesh {} ({} ranks) s={} b={} algo={} overlap={} gram={} \
+         source={} predicted {:.4} s/epoch",
+        plan.mesh,
+        plan.ranks(),
+        plan.s,
+        plan.b,
+        plan.algo.name(),
+        plan.overlap.name(),
+        plan.gram.name(),
+        plan.source.name(),
+        plan.per_epoch_s,
+    );
+}
+
+fn print_telem(t: &serve::TelemFrame) {
+    let loss = t.loss.map(|l| format!(" loss={l:.5}")).unwrap_or_default();
+    let hidden = t.hidden_frac.map(|h| format!(" hidden={h:.2}")).unwrap_or_default();
+    let fed = if t.fedavg { " fedavg" } else { "" };
+    println!(
+        "job {} bundle {} sim_wall={:.4}{loss} health={} words={:.0}{hidden}{fed}",
+        t.id, t.bundle, t.sim_wall, t.health, t.words
+    );
+}
+
+fn print_done(d: &serve::DoneRow) {
+    let loss = d.loss.map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into());
+    println!(
+        "job {} {}: {} bundles, final loss {loss}, sim wall {:.4} s",
+        d.id,
+        d.state.name(),
+        d.bundles,
+        d.sim_wall
+    );
+}
+
+fn cmd_serve(flags: &Flags) -> i32 {
+    macro_rules! knob_or_exit {
+        ($key:literal, $default:expr) => {
+            match knob(flags, $key, $default) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        };
+    }
+    if flags.contains_key("stop") {
+        let client = serve::Client::new(serve_addr(flags));
+        return match client.shutdown() {
+            Ok(msg) => {
+                println!("daemon: {msg}");
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        };
+    }
+    let host = flags.get("host").map(|s| s.as_str()).unwrap_or("127.0.0.1");
+    let port: u16 = get(flags, "port", 0);
+    let profile = match flags.get("profile") {
+        Some(path) => match CalibProfile::from_tsv(path) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("failed to load profile {path}: {e}");
+                return 2;
+            }
+        },
+        None => CalibProfile::perlmutter(),
+    };
+    let cfg = serve::DaemonConfig {
+        addr: format!("{host}:{port}"),
+        spool: flags.get("spool").cloned().unwrap_or_else(|| "serve-spool".into()).into(),
+        slots: get(flags, "slots", 16),
+        profile,
+        source: knob_or_exit!("selector", SelectorSource::Analytic),
+        backend: knob_or_exit!("backend", ExecBackend::from_env()),
+        metrics_out: flags.get("metrics-out").map(|p| p.into()),
+        s_max: get(flags, "s-max", 8),
+        b_max: get(flags, "b-max", 64),
+    };
+    let spool = cfg.spool.clone();
+    let slots = cfg.slots;
+    match serve::Daemon::start(cfg) {
+        Ok(daemon) => {
+            // The harness/CI greps this line for the ephemeral port.
+            println!("serving on {} (spool {}, slots {slots})", daemon.addr(), spool.display());
+            println!("stop with `hybrid-sgd serve --stop --addr {}`", daemon.addr());
+            daemon.wait();
+            println!("drained; unfinished jobs are checkpointed in the spool");
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to start daemon: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_submit(flags: &Flags) -> i32 {
+    let spec = serve::JobSpec {
+        dataset: dataset_spec(flags),
+        scale: get(flags, "scale", 0.05),
+        p: get(flags, "p", 8),
+        bundles: get(flags, "bundles", 40),
+        eval_every: get(flags, "eval-every", 5),
+        eta: get(flags, "eta", 0.1),
+        tau: get(flags, "tau", 10),
+        seed: get(flags, "seed", 0x5EEDu64),
+        target: flags.get("target").and_then(|t| t.parse().ok()),
+        ckpt_every: get(flags, "ckpt-every", 8),
+    };
+    let client = serve::Client::new(serve_addr(flags));
+    let (row, plan) = match client.submit(&spec) {
+        Ok(ok) => ok,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    print_job_row(&row);
+    print_plan(row.id, &plan);
+    if !flags.contains_key("watch") {
+        return 0;
+    }
+    match client.watch(row.id, 0, print_telem) {
+        Ok(done) => {
+            print_done(&done);
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_status(flags: &Flags) -> i32 {
+    let job = match flags.get("job") {
+        Some(v) => match v.parse() {
+            Ok(id) => Some(id),
+            Err(_) => {
+                eprintln!("--job: bad job id `{v}`");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    let client = serve::Client::new(serve_addr(flags));
+    match client.status(job) {
+        Ok(rows) => {
+            for row in &rows {
+                print_job_row(row);
+            }
+            println!("{} jobs", rows.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_watch(flags: &Flags) -> i32 {
+    let job = match serve_job_id(flags) {
+        Ok(id) => id,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let from: usize = get(flags, "from", 0);
+    let client = serve::Client::new(serve_addr(flags));
+    match client.watch(job, from, print_telem) {
+        Ok(done) => {
+            print_done(&done);
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_cancel(flags: &Flags) -> i32 {
+    let job = match serve_job_id(flags) {
+        Ok(id) => id,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let client = serve::Client::new(serve_addr(flags));
+    match client.cancel(job) {
+        Ok(msg) => {
+            println!("daemon: {msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
 }

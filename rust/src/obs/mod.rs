@@ -15,6 +15,15 @@
 //!    The per-bundle [`metrics`]/[`health`] layer: convergence verdicts
 //!    ([`HealthStatus`]), predicted-vs-charged drift gauges, and an
 //!    OpenMetrics/TSV time-series export.
+//! 4. **Is the *service* healthy?** → *service metrics*. When sessions
+//!    run under the training daemon ([`crate::serve`]), its scheduler
+//!    aggregates job lifecycles into one [`MetricRegistry`] scraped
+//!    through the same [`PrometheusSink`]: `hybridsgd_serve_jobs_*`
+//!    counters (submitted/done/canceled/failed), queue-depth and
+//!    running-session gauges, and per-job `serve_job_bundles` /
+//!    `serve_job_loss` / `serve_job_drift` gauges labelled `job="<id>"`
+//!    — the fleet view of questions 1–3 (`serve --metrics-out FILE` on
+//!    the CLI, gated in CI by `tools/check_metrics.py`).
 //!
 //! # The pieces
 //!
@@ -74,6 +83,7 @@ pub use export::{sink_to, JsonlSink, PerfettoSink, TraceFormat};
 pub use health::{DriftEntry, DriftKey, FidelityMonitor, HealthMonitor, HealthOpts, HealthStatus};
 pub use metrics::{
     MetricKind, MetricRegistry, MetricsObserver, MetricsSink, MetricsTsvSink, PrometheusSink,
+    METRIC_PREFIX,
 };
 pub use summary::RunSummary;
 

@@ -1,0 +1,179 @@
+//! Thin synchronous client for the `pallas-serve` wire protocol.
+//!
+//! Each operation opens one TCP connection, writes one request frame,
+//! and reads the response frame(s) — the protocol is strictly
+//! request/response (plus the `watch` stream), so there is no session
+//! state to manage. The CLI subcommands, the acceptance harness, and
+//! `examples/serve_quickstart.rs` all talk to the daemon through this.
+
+use super::protocol::{DoneRow, JobId, JobRow, JobSpec, Plan, Request, Response, TelemFrame};
+use super::protocol::{ErrCode, WireError};
+use std::fmt;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Client-side failure: the transport broke, the daemon answered with a
+/// typed `err` frame, or the daemon sent something unparseable.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Socket-level failure (connect, read, write, early close).
+    Io(io::Error),
+    /// The daemon answered with an `err` frame.
+    Daemon(WireError),
+    /// The daemon's frame did not parse, or was the wrong kind for the
+    /// request — a protocol bug or version skew.
+    Protocol(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "serve i/o: {e}"),
+            ClientError::Daemon(e) => write!(f, "daemon: {e}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> ClientError {
+        ClientError::Daemon(e)
+    }
+}
+
+impl ClientError {
+    /// The daemon-side error code, when the failure is a typed `err`
+    /// frame (e.g. to treat `shutting-down` differently from `bad-value`).
+    pub fn code(&self) -> Option<ErrCode> {
+        match self {
+            ClientError::Daemon(e) => Some(e.code),
+            _ => None,
+        }
+    }
+}
+
+/// A daemon address; cheap to clone, connects per operation.
+#[derive(Clone, Debug)]
+pub struct Client {
+    addr: String,
+}
+
+impl Client {
+    /// Point a client at `host:port` (no connection is made yet).
+    pub fn new(addr: impl Into<String>) -> Client {
+        Client { addr: addr.into() }
+    }
+
+    fn connect(&self) -> Result<(BufReader<TcpStream>, TcpStream), ClientError> {
+        let addr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| ClientError::Protocol(format!("address `{}` resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok((reader, stream))
+    }
+
+    fn send(stream: &mut TcpStream, req: &Request) -> Result<(), ClientError> {
+        let mut line = req.render();
+        line.push('\n');
+        stream.write_all(line.as_bytes())?;
+        Ok(())
+    }
+
+    fn read_frame(reader: &mut BufReader<TcpStream>) -> Result<Response, ClientError> {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(ClientError::Protocol("daemon closed the connection mid-reply".into()));
+        }
+        match Response::parse(&line)? {
+            Response::Err(e) => Err(ClientError::Daemon(e)),
+            other => Ok(other),
+        }
+    }
+
+    /// Submit a job; returns the admitted row and the planner's echo.
+    pub fn submit(&self, spec: &JobSpec) -> Result<(JobRow, Plan), ClientError> {
+        let (mut reader, mut stream) = self.connect()?;
+        Self::send(&mut stream, &Request::Submit(*spec))?;
+        let row = match Self::read_frame(&mut reader)? {
+            Response::Job(row) => row,
+            other => return Err(ClientError::Protocol(format!("expected job frame, got {other:?}"))),
+        };
+        match Self::read_frame(&mut reader)? {
+            Response::Plan { id, plan } if id == row.id => Ok((row, plan)),
+            other => Err(ClientError::Protocol(format!("expected plan frame, got {other:?}"))),
+        }
+    }
+
+    /// Status of one job (`Some`) or the whole board (`None`).
+    pub fn status(&self, job: Option<JobId>) -> Result<Vec<JobRow>, ClientError> {
+        let (mut reader, mut stream) = self.connect()?;
+        Self::send(&mut stream, &Request::Status(job))?;
+        let mut rows = Vec::new();
+        loop {
+            match Self::read_frame(&mut reader)? {
+                Response::Job(row) => rows.push(row),
+                Response::Ok(_) => return Ok(rows),
+                other => {
+                    return Err(ClientError::Protocol(format!(
+                        "expected job/ok frame, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Follow a job's telemetry from bundle index `from` (0 = from the
+    /// start), invoking `on_frame` per bundle until the terminating
+    /// `done` frame arrives.
+    pub fn watch(
+        &self,
+        job: JobId,
+        from: usize,
+        mut on_frame: impl FnMut(&TelemFrame),
+    ) -> Result<DoneRow, ClientError> {
+        let (mut reader, mut stream) = self.connect()?;
+        Self::send(&mut stream, &Request::Watch { job, from })?;
+        loop {
+            match Self::read_frame(&mut reader)? {
+                Response::Telem(t) => on_frame(&t),
+                Response::Done(d) => return Ok(d),
+                other => {
+                    return Err(ClientError::Protocol(format!(
+                        "expected telem/done frame, got {other:?}"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Cancel a queued or running job; returns the daemon's ack text.
+    pub fn cancel(&self, job: JobId) -> Result<String, ClientError> {
+        self.simple(&Request::Cancel(job))
+    }
+
+    /// Ask the daemon to drain gracefully.
+    pub fn shutdown(&self) -> Result<String, ClientError> {
+        self.simple(&Request::Shutdown)
+    }
+
+    fn simple(&self, req: &Request) -> Result<String, ClientError> {
+        let (mut reader, mut stream) = self.connect()?;
+        Self::send(&mut stream, req)?;
+        match Self::read_frame(&mut reader)? {
+            Response::Ok(msg) => Ok(msg),
+            other => Err(ClientError::Protocol(format!("expected ok frame, got {other:?}"))),
+        }
+    }
+}

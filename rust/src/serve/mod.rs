@@ -1,0 +1,102 @@
+//! `pallas-serve`: a training-service daemon over the resumable
+//! [`Session`](crate::solvers::Session) engine.
+//!
+//! The CLI's `train` runs one job per process. This module turns the
+//! same engine into a long-lived service: a daemon that admits many
+//! jobs, prices each one through the cost model before it runs, packs
+//! admitted jobs onto a fixed rank budget, checkpoints them durably,
+//! and streams per-bundle telemetry to clients over TCP. It is
+//! deliberately std-only, like the rest of the crate.
+//!
+//! # Wire protocol
+//!
+//! One frame = one `\n`-terminated line of tab-separated cells, first
+//! cell the magic+version tag `ps1` ([`WIRE_MAGIC`]). Free-text cells
+//! have tabs/newlines squashed on render, so framing can never break.
+//! Parsing is schema-guarded like the checkpoint/CalibProfile TSV
+//! loaders: wrong arity, bad field, or unknown op yields a typed
+//! [`WireError`] `err` frame — never a panic, never a wedged
+//! connection — and a `ps<N>` tag with `N > 1` is rejected as
+//! `bad-version` ("newer than this build").
+//!
+//! Requests (client → daemon):
+//!
+//! | frame | cells after `ps1` | reply |
+//! |---|---|---|
+//! | `submit` | `submit dataset scale p bundles eval_every eta tau seed target ckpt_every` | `job` + `plan`, or `err` |
+//! | `status` | `status <id\|all>` | `job`× then `ok <count>` |
+//! | `watch` | `watch <id> <from>` | `telem`× then `done` |
+//! | `cancel` | `cancel <id>` | `ok` |
+//! | `shutdown` | `shutdown` | `ok`, then the daemon drains |
+//!
+//! Responses (daemon → client):
+//!
+//! | frame | cells after `ps1` |
+//! |---|---|
+//! | `job` | `job id state queue_pos bundles loss health` |
+//! | `plan` | `plan id mesh s b algo overlap gram source ranks per_epoch_s` |
+//! | `telem` | `telem id bundle sim_wall loss health words hidden_frac fedavg` |
+//! | `done` | `done id state bundles loss sim_wall` |
+//! | `ok` | `ok message` |
+//! | `err` | `err code message` |
+//!
+//! Optional numeric cells travel as `-`; floats use shortest-roundtrip
+//! `to_string`, so values cross the wire bit-for-bit (the equivalence
+//! harness depends on this).
+//!
+//! # Scheduler and admission
+//!
+//! The daemon holds a fixed budget of rank *slots*. On `submit`, the
+//! admission planner prices the job against the live
+//! [`CalibProfile`](crate::costmodel::CalibProfile): the topology rule
+//! shapes the mesh from the requested `p`, then
+//! [`admission_plan`](crate::costmodel::optima::admission_plan) sweeps
+//! the joint `(s, b, overlap)` optimum and reports the predicted row
+//! collective and per-epoch seconds. The plan's mesh footprint is the
+//! packing currency: jobs queue FIFO and the head is admitted whenever
+//! its footprint fits the free slots, so several planner-admitted
+//! sessions step concurrently (one worker thread each, interleaving at
+//! bundle granularity via `step_bundle`). Cancel and drain flags are
+//! honoured at the next bundle boundary, which is what makes them
+//! prompt.
+//!
+//! # Durability
+//!
+//! Every job's spec+plan+state lives in a spool record
+//! (`job-NNNNNN.tsv`, schema-guarded, written atomically via temp file
+//! + rename), and every `ckpt_every` bundles the worker writes the
+//! session checkpoint next to it (`job-NNNNNN.ckpt.tsv`, same atomic
+//! dance). Datasets are **regenerated, never spooled**: generation is
+//! deterministic in (profile, scale, seed), so spec + checkpoint fully
+//! determine the trajectory *and* the charged books. A graceful drain
+//! checkpoints every running job and marks it `interrupted`; a crash
+//! leaves the periodic checkpoints. Either way, a restarted daemon
+//! re-queues unfinished records and resumes each one bit-identically —
+//! the acceptance harness (`tests/serve_daemon.rs`) proves this by
+//! byte-comparing final checkpoints against an uninterrupted reference
+//! run.
+//!
+//! # Observability
+//!
+//! A wire-backed [`Observer`](crate::solvers::Observer) pushes each
+//! [`BundleReport`](crate::solvers::BundleReport) into the job's replay
+//! log (served to `watch` clients, resumable via the `from` cursor) and
+//! into a daemon-level
+//! [`MetricRegistry`](crate::obs::MetricRegistry) — job lifecycle
+//! counters plus per-job bundle/loss/drift gauges — scraped through the
+//! existing [`PrometheusSink`](crate::obs::PrometheusSink). See the
+//! [obs module docs](crate::obs) for where these land in the
+//! "three questions" map.
+
+mod client;
+mod protocol;
+mod scheduler;
+mod spool;
+
+pub use client::{Client, ClientError};
+pub use protocol::{
+    DoneRow, ErrCode, JobId, JobRow, JobSpec, JobState, Plan, Request, Response, TelemFrame,
+    WireError, WIRE_MAGIC,
+};
+pub use scheduler::{plan_job, Daemon, DaemonConfig};
+pub use spool::{JobRecord, Spool, SPOOL_SCHEMA};

@@ -1,0 +1,751 @@
+//! The `pallas-serve` wire protocol: versioned, line-oriented TSV frames.
+//!
+//! Every frame is one `\n`-terminated line of tab-separated cells whose
+//! first cell is the magic+version tag [`WIRE_MAGIC`] (`ps1`). Parsing is
+//! schema-guarded exactly like the checkpoint/CalibProfile TSV loaders:
+//! a frame with the wrong cell count, an unparseable field, or an
+//! unknown op yields a typed [`WireError`] — never a panic — and a
+//! `ps<N>` tag with `N > 1` is rejected as written by a newer build
+//! (mirroring the checkpoint `meta schema` guard). See the
+//! [module docs](super) for the full frame table.
+
+use crate::collectives::{Algorithm, SelectorSource};
+use crate::data::DatasetSpec;
+use crate::mesh::Mesh;
+use crate::sparse::GramStrategy;
+use crate::timeline::OverlapPolicy;
+use crate::util::parse::unknown_value;
+use std::fmt;
+
+/// Magic + protocol version prefixed to every frame in both directions.
+pub const WIRE_MAGIC: &str = "ps1";
+
+/// Wire job identifier (assigned by the daemon, dense from 1).
+pub type JobId = u64;
+
+/// Typed protocol failure class, carried on `err` frames as a stable
+/// kebab-case code so clients can dispatch without parsing prose.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Not a parseable frame: wrong magic, wrong arity, empty line.
+    BadFrame,
+    /// Valid shape but a `ps<N>` tag newer than this build understands.
+    BadVersion,
+    /// Unknown request op.
+    UnknownOp,
+    /// A field failed to parse or failed validation.
+    BadValue,
+    /// The referenced job id does not exist.
+    UnknownJob,
+    /// The daemon is draining; no new work is admitted.
+    ShuttingDown,
+    /// Daemon-side failure (spool I/O, worker death).
+    Internal,
+}
+
+impl ErrCode {
+    /// Stable wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrCode::BadFrame => "bad-frame",
+            ErrCode::BadVersion => "bad-version",
+            ErrCode::UnknownOp => "unknown-op",
+            ErrCode::BadValue => "bad-value",
+            ErrCode::UnknownJob => "unknown-job",
+            ErrCode::ShuttingDown => "shutting-down",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+crate::impl_enum_from_str!(ErrCode, "error code",
+    ("bad-frame" => ErrCode::BadFrame),
+    ("bad-version" => ErrCode::BadVersion),
+    ("unknown-op" => ErrCode::UnknownOp),
+    ("bad-value" => ErrCode::BadValue),
+    ("unknown-job" => ErrCode::UnknownJob),
+    ("shutting-down" => ErrCode::ShuttingDown),
+    ("internal" => ErrCode::Internal),
+);
+
+/// A typed protocol error: what went wrong ([`ErrCode`]) plus prose.
+/// Travels as `ps1 err <code> <message>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    /// Failure class.
+    pub code: ErrCode,
+    /// Human-readable detail (tabs/newlines are squashed on render).
+    pub msg: String,
+}
+
+impl WireError {
+    /// Build an error frame payload.
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> WireError {
+        WireError { code, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.name(), self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// What a client asks the daemon to train: the job axes the planner does
+/// *not* choose. Everything else — (s, b, mesh, algo, overlap, gram) —
+/// comes from the admission planner at submit time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Registry dataset to synthesize (deterministically, so a restarted
+    /// daemon regenerates bit-identical data from the spec alone).
+    pub dataset: DatasetSpec,
+    /// Linear scale factor on the registry profile.
+    pub scale: f64,
+    /// Requested total ranks (the topology rule shapes the mesh).
+    pub p: usize,
+    /// Bundle budget.
+    pub bundles: usize,
+    /// Loss-eval cadence in bundles.
+    pub eval_every: usize,
+    /// Step size.
+    pub eta: f64,
+    /// FedAvg column-averaging period in bundles.
+    pub tau: usize,
+    /// Trajectory seed.
+    pub seed: u64,
+    /// Early-stop target loss (`-` on the wire when absent).
+    pub target: Option<f64>,
+    /// Durable-checkpoint cadence in bundles (0 = only at shutdown).
+    pub ckpt_every: usize,
+}
+
+/// The planner's knob set for an admitted job, echoed to the client on
+/// submit (`plan` frame) and persisted in the spool record so a restart
+/// re-runs the job under identical knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plan {
+    /// Mesh from the topology rule (footprint = `mesh.p()` ranks).
+    pub mesh: Mesh,
+    /// Planned recurrence length.
+    pub s: usize,
+    /// Planned batch size.
+    pub b: usize,
+    /// Predicted row-collective pick for the planned payload.
+    pub algo: Algorithm,
+    /// Planned overlap policy.
+    pub overlap: OverlapPolicy,
+    /// Planned Gram kernel (resolved, never `auto`).
+    pub gram: GramStrategy,
+    /// Selector pricing source the plan (and the session) uses.
+    pub source: SelectorSource,
+    /// Predicted visible seconds per model epoch under these knobs.
+    pub per_epoch_s: f64,
+}
+
+impl Plan {
+    /// Scheduler packing footprint: ranks this job occupies while running.
+    pub fn ranks(&self) -> usize {
+        self.mesh.p()
+    }
+}
+
+/// Lifecycle of a job inside the daemon (and its spool record).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting for free ranks.
+    Queued,
+    /// A worker thread is stepping it.
+    Running,
+    /// Finished (budget exhausted or target reached).
+    Done,
+    /// Canceled by a client.
+    Canceled,
+    /// Daemon drained gracefully mid-run; resumes on restart.
+    Interrupted,
+    /// Worker died (spool I/O, resume failure).
+    Failed,
+}
+
+impl JobState {
+    /// Stable wire/spool name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Canceled => "canceled",
+            JobState::Interrupted => "interrupted",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Whether the state is final (no worker will touch the job again
+    /// until a daemon restart re-queues `Running`/`Interrupted` jobs).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Canceled | JobState::Failed)
+    }
+}
+
+crate::impl_enum_from_str!(JobState, "job state",
+    ("queued" => JobState::Queued),
+    ("running" => JobState::Running),
+    ("done" => JobState::Done),
+    ("canceled" => JobState::Canceled),
+    ("interrupted" => JobState::Interrupted),
+    ("failed" => JobState::Failed),
+);
+
+/// One job's status snapshot (`job` frame).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRow {
+    /// Job id.
+    pub id: JobId,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Position in the admission queue (queued jobs only; 0 = next).
+    pub queue_pos: Option<usize>,
+    /// Bundles completed so far.
+    pub bundles: usize,
+    /// Latest evaluated loss, if any eval has run.
+    pub loss: Option<f64>,
+    /// Convergence-monitor verdict name.
+    pub health: String,
+}
+
+/// One bundle's streamed telemetry (`telem` frame), built from the
+/// session's [`BundleReport`](crate::solvers::BundleReport) by the
+/// daemon's wire-backed observer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemFrame {
+    /// Job id.
+    pub id: JobId,
+    /// 1-based bundle index.
+    pub bundle: usize,
+    /// Simulated wall after this bundle.
+    pub sim_wall: f64,
+    /// Loss, on eval bundles.
+    pub loss: Option<f64>,
+    /// Convergence verdict name.
+    pub health: String,
+    /// Words this bundle moved (mean per rank).
+    pub words: f64,
+    /// Fraction of settled row-reduce transfer hidden behind compute.
+    pub hidden_frac: Option<f64>,
+    /// Whether the FedAvg column averaging fired this bundle.
+    pub fedavg: bool,
+}
+
+/// Watch-stream terminator (`done` frame): the job reached a terminal
+/// state (or the daemon is draining, with state `interrupted`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DoneRow {
+    /// Job id.
+    pub id: JobId,
+    /// Final (or drain-time) state.
+    pub state: JobState,
+    /// Bundles completed.
+    pub bundles: usize,
+    /// Final loss, if evaluated.
+    pub loss: Option<f64>,
+    /// Final simulated wall.
+    pub sim_wall: f64,
+}
+
+/// Client → daemon frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Admit a job; daemon answers `job` + `plan` (or `err`).
+    Submit(JobSpec),
+    /// Snapshot one job (`Some`) or all (`None`); daemon answers `job`
+    /// rows then `ok <count>`.
+    Status(Option<JobId>),
+    /// Stream `telem` frames from bundle index `from` (0 = from the
+    /// start) until the job ends; terminated by a `done` frame.
+    Watch {
+        /// Job to follow.
+        job: JobId,
+        /// Replay cursor: skip telemetry up to this bundle index.
+        from: usize,
+    },
+    /// Cancel a queued or running job; daemon answers `ok`.
+    Cancel(JobId),
+    /// Drain gracefully: checkpoint in-flight jobs and exit.
+    Shutdown,
+}
+
+/// Daemon → client frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Job status row.
+    Job(JobRow),
+    /// Planner echo for a submitted job.
+    Plan {
+        /// Job the plan belongs to.
+        id: JobId,
+        /// The planned knob set.
+        plan: Plan,
+    },
+    /// Streamed telemetry.
+    Telem(TelemFrame),
+    /// Watch terminator.
+    Done(DoneRow),
+    /// Generic acknowledgement.
+    Ok(String),
+    /// Typed failure.
+    Err(WireError),
+}
+
+// ---------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------
+
+fn fmt_opt_f64(v: Option<f64>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_else(|| "-".into())
+}
+
+/// Squash cell-breaking characters out of free-text cells so one frame
+/// is always exactly one line.
+fn clean(s: &str) -> String {
+    s.replace(['\t', '\n', '\r'], " ")
+}
+
+impl Request {
+    /// Render as one wire line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Request::Submit(s) => format!(
+                "{WIRE_MAGIC}\tsubmit\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                s.dataset.cli_name(),
+                s.scale,
+                s.p,
+                s.bundles,
+                s.eval_every,
+                s.eta,
+                s.tau,
+                s.seed,
+                fmt_opt_f64(s.target),
+                s.ckpt_every,
+            ),
+            Request::Status(job) => format!(
+                "{WIRE_MAGIC}\tstatus\t{}",
+                job.map(|j| j.to_string()).unwrap_or_else(|| "all".into())
+            ),
+            Request::Watch { job, from } => format!("{WIRE_MAGIC}\twatch\t{job}\t{from}"),
+            Request::Cancel(job) => format!("{WIRE_MAGIC}\tcancel\t{job}"),
+            Request::Shutdown => format!("{WIRE_MAGIC}\tshutdown"),
+        }
+    }
+}
+
+impl Response {
+    /// Render as one wire line (no trailing newline).
+    pub fn render(&self) -> String {
+        match self {
+            Response::Job(j) => format!(
+                "{WIRE_MAGIC}\tjob\t{}\t{}\t{}\t{}\t{}\t{}",
+                j.id,
+                j.state.name(),
+                j.queue_pos.map(|q| q.to_string()).unwrap_or_else(|| "-".into()),
+                j.bundles,
+                fmt_opt_f64(j.loss),
+                clean(&j.health),
+            ),
+            Response::Plan { id, plan } => format!(
+                "{WIRE_MAGIC}\tplan\t{id}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                plan.mesh,
+                plan.s,
+                plan.b,
+                plan.algo.name(),
+                plan.overlap.name(),
+                plan.gram.name(),
+                plan.source.name(),
+                plan.ranks(),
+                plan.per_epoch_s,
+            ),
+            Response::Telem(t) => format!(
+                "{WIRE_MAGIC}\ttelem\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                t.id,
+                t.bundle,
+                t.sim_wall,
+                fmt_opt_f64(t.loss),
+                clean(&t.health),
+                t.words,
+                fmt_opt_f64(t.hidden_frac),
+                u8::from(t.fedavg),
+            ),
+            Response::Done(d) => format!(
+                "{WIRE_MAGIC}\tdone\t{}\t{}\t{}\t{}\t{}",
+                d.id,
+                d.state.name(),
+                d.bundles,
+                fmt_opt_f64(d.loss),
+                d.sim_wall,
+            ),
+            Response::Ok(msg) => format!("{WIRE_MAGIC}\tok\t{}", clean(msg)),
+            Response::Err(e) => {
+                format!("{WIRE_MAGIC}\terr\t{}\t{}", e.code.name(), clean(&e.msg))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------
+
+/// Magic guard: accept `ps1`, classify `ps<N>` with `N > 1` as a newer
+/// build's frame (the checkpoint loaders' `meta schema` guard, applied
+/// to the wire), everything else as not-a-frame.
+fn check_magic(tag: &str) -> Result<(), WireError> {
+    if tag == WIRE_MAGIC {
+        return Ok(());
+    }
+    if let Some(v) = tag.strip_prefix("ps").and_then(|v| v.parse::<u64>().ok()) {
+        if v > 1 {
+            return Err(WireError::new(
+                ErrCode::BadVersion,
+                format!("frame version ps{v} is newer than this build ({WIRE_MAGIC})"),
+            ));
+        }
+    }
+    Err(WireError::new(
+        ErrCode::BadFrame,
+        format!("expected {WIRE_MAGIC} frame, got leading cell `{}`", clean(tag)),
+    ))
+}
+
+/// Arity guard, mirroring the TSV loaders' declared-count checks.
+fn need(cells: &[&str], n: usize, what: &str) -> Result<(), WireError> {
+    if cells.len() != n {
+        return Err(WireError::new(
+            ErrCode::BadFrame,
+            format!("{what} frame has {} cells, expected {n}", cells.len()),
+        ));
+    }
+    Ok(())
+}
+
+fn num<T: std::str::FromStr>(cell: &str, field: &str) -> Result<T, WireError> {
+    cell.parse()
+        .map_err(|_| WireError::new(ErrCode::BadValue, format!("bad {field} `{}`", clean(cell))))
+}
+
+fn opt_f64(cell: &str, field: &str) -> Result<Option<f64>, WireError> {
+    if cell == "-" {
+        return Ok(None);
+    }
+    num(cell, field).map(Some)
+}
+
+fn knob<T>(cell: &str, field: &str) -> Result<T, WireError>
+where
+    T: std::str::FromStr<Err = String>,
+{
+    cell.parse().map_err(|e| WireError::new(ErrCode::BadValue, format!("{field}: {e}")))
+}
+
+fn parse_mesh(cell: &str) -> Result<Mesh, WireError> {
+    let bad = || WireError::new(ErrCode::BadValue, format!("bad mesh `{}`", clean(cell)));
+    let (r, c) = cell.split_once('x').ok_or_else(bad)?;
+    let (r, c): (usize, usize) = (r.parse().map_err(|_| bad())?, c.parse().map_err(|_| bad())?);
+    if r == 0 || c == 0 {
+        return Err(bad());
+    }
+    Ok(Mesh::new(r, c))
+}
+
+impl Request {
+    /// Parse one request line. Every failure is a typed [`WireError`]
+    /// the daemon echoes back as an `err` frame.
+    pub fn parse(line: &str) -> Result<Request, WireError> {
+        let line = line.trim_end_matches(['\n', '\r']);
+        let cells: Vec<&str> = line.split('\t').collect();
+        check_magic(cells[0])?;
+        if cells.len() < 2 {
+            return Err(WireError::new(ErrCode::BadFrame, "frame carries no op cell"));
+        }
+        match cells[1] {
+            "submit" => {
+                need(&cells, 12, "submit")?;
+                Ok(Request::Submit(JobSpec {
+                    dataset: knob(cells[2], "dataset")?,
+                    scale: num(cells[3], "scale")?,
+                    p: num(cells[4], "p")?,
+                    bundles: num(cells[5], "bundles")?,
+                    eval_every: num(cells[6], "eval_every")?,
+                    eta: num(cells[7], "eta")?,
+                    tau: num(cells[8], "tau")?,
+                    seed: num(cells[9], "seed")?,
+                    target: opt_f64(cells[10], "target")?,
+                    ckpt_every: num(cells[11], "ckpt_every")?,
+                }))
+            }
+            "status" => {
+                need(&cells, 3, "status")?;
+                if cells[2] == "all" {
+                    Ok(Request::Status(None))
+                } else {
+                    Ok(Request::Status(Some(num(cells[2], "job id")?)))
+                }
+            }
+            "watch" => {
+                need(&cells, 4, "watch")?;
+                Ok(Request::Watch { job: num(cells[2], "job id")?, from: num(cells[3], "from")? })
+            }
+            "cancel" => {
+                need(&cells, 3, "cancel")?;
+                Ok(Request::Cancel(num(cells[2], "job id")?))
+            }
+            "shutdown" => {
+                need(&cells, 2, "shutdown")?;
+                Ok(Request::Shutdown)
+            }
+            op => Err(WireError::new(
+                ErrCode::UnknownOp,
+                unknown_value(
+                    "request op",
+                    op,
+                    &["submit", "status", "watch", "cancel", "shutdown"],
+                ),
+            )),
+        }
+    }
+}
+
+impl Response {
+    /// Parse one response line (the client half of the protocol).
+    pub fn parse(line: &str) -> Result<Response, WireError> {
+        let line = line.trim_end_matches(['\n', '\r']);
+        let cells: Vec<&str> = line.split('\t').collect();
+        check_magic(cells[0])?;
+        if cells.len() < 2 {
+            return Err(WireError::new(ErrCode::BadFrame, "frame carries no op cell"));
+        }
+        match cells[1] {
+            "job" => {
+                need(&cells, 8, "job")?;
+                Ok(Response::Job(JobRow {
+                    id: num(cells[2], "job id")?,
+                    state: knob(cells[3], "state")?,
+                    queue_pos: if cells[4] == "-" {
+                        None
+                    } else {
+                        Some(num(cells[4], "queue position")?)
+                    },
+                    bundles: num(cells[5], "bundles")?,
+                    loss: opt_f64(cells[6], "loss")?,
+                    health: cells[7].to_string(),
+                }))
+            }
+            "plan" => {
+                need(&cells, 12, "plan")?;
+                let plan = Plan {
+                    mesh: parse_mesh(cells[3])?,
+                    s: num(cells[4], "s")?,
+                    b: num(cells[5], "b")?,
+                    algo: knob(cells[6], "algo")?,
+                    overlap: knob(cells[7], "overlap")?,
+                    gram: knob(cells[8], "gram")?,
+                    source: knob(cells[9], "source")?,
+                    per_epoch_s: num(cells[11], "per_epoch_s")?,
+                };
+                let ranks: usize = num(cells[10], "ranks")?;
+                if ranks != plan.ranks() {
+                    return Err(WireError::new(
+                        ErrCode::BadValue,
+                        format!("plan ranks {ranks} disagree with mesh {}", plan.mesh),
+                    ));
+                }
+                Ok(Response::Plan { id: num(cells[2], "job id")?, plan })
+            }
+            "telem" => {
+                need(&cells, 10, "telem")?;
+                Ok(Response::Telem(TelemFrame {
+                    id: num(cells[2], "job id")?,
+                    bundle: num(cells[3], "bundle")?,
+                    sim_wall: num(cells[4], "sim_wall")?,
+                    loss: opt_f64(cells[5], "loss")?,
+                    health: cells[6].to_string(),
+                    words: num(cells[7], "words")?,
+                    hidden_frac: opt_f64(cells[8], "hidden_frac")?,
+                    fedavg: cells[9] == "1",
+                }))
+            }
+            "done" => {
+                need(&cells, 7, "done")?;
+                Ok(Response::Done(DoneRow {
+                    id: num(cells[2], "job id")?,
+                    state: knob(cells[3], "state")?,
+                    bundles: num(cells[4], "bundles")?,
+                    loss: opt_f64(cells[5], "loss")?,
+                    sim_wall: num(cells[6], "sim_wall")?,
+                }))
+            }
+            "ok" => {
+                need(&cells, 3, "ok")?;
+                Ok(Response::Ok(cells[2].to_string()))
+            }
+            "err" => {
+                need(&cells, 4, "err")?;
+                Ok(Response::Err(WireError::new(knob(cells[2], "error code")?, cells[3])))
+            }
+            op => Err(WireError::new(
+                ErrCode::UnknownOp,
+                unknown_value("response op", op, &["job", "plan", "telem", "done", "ok", "err"]),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            dataset: DatasetSpec::Rcv1Like,
+            scale: 0.07,
+            p: 8,
+            bundles: 40,
+            eval_every: 5,
+            eta: 0.1,
+            tau: 10,
+            seed: 0x5EED,
+            target: Some(0.625),
+            ckpt_every: 7,
+        }
+    }
+
+    #[test]
+    fn request_frames_round_trip() {
+        let reqs = [
+            Request::Submit(spec()),
+            Request::Submit(JobSpec { target: None, ..spec() }),
+            Request::Status(None),
+            Request::Status(Some(12)),
+            Request::Watch { job: 3, from: 17 },
+            Request::Cancel(9),
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.render();
+            assert!(line.starts_with("ps1\t"), "{line}");
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn response_frames_round_trip() {
+        let plan = Plan {
+            mesh: Mesh::new(2, 4),
+            s: 4,
+            b: 8,
+            algo: Algorithm::RingAllreduce,
+            overlap: OverlapPolicy::Bundle,
+            gram: GramStrategy::Merge,
+            source: SelectorSource::Analytic,
+            per_epoch_s: 0.012345678901234567,
+        };
+        let resps = [
+            Response::Job(JobRow {
+                id: 2,
+                state: JobState::Queued,
+                queue_pos: Some(1),
+                bundles: 0,
+                loss: None,
+                health: "initializing".into(),
+            }),
+            Response::Plan { id: 2, plan },
+            Response::Telem(TelemFrame {
+                id: 2,
+                bundle: 7,
+                sim_wall: 0.25,
+                loss: Some(0.6931471805599453),
+                health: "healthy".into(),
+                words: 1234.5,
+                hidden_frac: Some(0.75),
+                fedavg: true,
+            }),
+            Response::Done(DoneRow {
+                id: 2,
+                state: JobState::Done,
+                bundles: 40,
+                loss: Some(0.5),
+                sim_wall: 1.5,
+            }),
+            Response::Ok("canceled".into()),
+            Response::Err(WireError::new(ErrCode::UnknownJob, "no job 99")),
+        ];
+        for r in resps {
+            let line = r.render();
+            assert_eq!(Response::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn floats_survive_the_wire_bit_for_bit() {
+        // Shortest-roundtrip `to_string` is the crate-wide TSV float
+        // convention; the watch stream relies on it for the equivalence
+        // harness.
+        for v in [0.1, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, 0.6931471805599453] {
+            let t = Response::Telem(TelemFrame {
+                id: 1,
+                bundle: 1,
+                sim_wall: v,
+                loss: Some(v),
+                health: "healthy".into(),
+                words: v,
+                hidden_frac: None,
+                fedavg: false,
+            });
+            match Response::parse(&t.render()).unwrap() {
+                Response::Telem(f) => {
+                    assert_eq!(f.sim_wall.to_bits(), v.to_bits());
+                    assert_eq!(f.loss.unwrap().to_bits(), v.to_bits());
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_yield_typed_errors() {
+        let cases: &[(&str, ErrCode)] = &[
+            ("", ErrCode::BadFrame),
+            ("hello world", ErrCode::BadFrame),
+            ("ps1", ErrCode::BadFrame),
+            ("ps2\tstatus\tall", ErrCode::BadVersion),
+            ("ps99\tsubmit", ErrCode::BadVersion),
+            ("ps0\tstatus\tall", ErrCode::BadFrame),
+            ("ps1\tfrobnicate\t1", ErrCode::UnknownOp),
+            ("ps1\tstatus", ErrCode::BadFrame),            // truncated
+            ("ps1\tstatus\tall\textra", ErrCode::BadFrame), // too wide
+            ("ps1\tcancel\tnot-a-number", ErrCode::BadValue),
+            ("ps1\tsubmit\trcv1\t0.1", ErrCode::BadFrame), // truncated submit
+            (
+                "ps1\tsubmit\tnosuch\t0.1\t8\t40\t5\t0.1\t10\t1\t-\t0",
+                ErrCode::BadValue,
+            ),
+            ("ps1\twatch\t1\t-3", ErrCode::BadValue),
+        ];
+        for (line, code) in cases {
+            match Request::parse(line) {
+                Err(e) => assert_eq!(e.code, *code, "line {line:?} -> {e}"),
+                Ok(r) => panic!("line {line:?} parsed as {r:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn free_text_cells_cannot_break_framing() {
+        let e = Response::Err(WireError::new(ErrCode::Internal, "tab\there\nand newline"));
+        let line = e.render();
+        assert_eq!(line.lines().count(), 1);
+        match Response::parse(&line).unwrap() {
+            Response::Err(w) => assert_eq!(w.msg, "tab here and newline"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

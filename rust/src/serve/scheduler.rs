@@ -1,0 +1,870 @@
+//! The `pallas-serve` daemon: TCP front end, admission planner, and the
+//! job scheduler multiplexing many concurrent [`Session`]s.
+//!
+//! Architecture (see the [module docs](super) for the wire side):
+//!
+//! - **Admission**: `submit` runs the cost model
+//!   ([`optima::admission_plan`] + the topology rule) against the live
+//!   [`CalibProfile`] to pick `(s, b, mesh, algo, overlap, gram)` and
+//!   the job's rank footprint. Jobs queue FIFO and are admitted when
+//!   their footprint fits the daemon's free rank slots — the predicted
+//!   footprint *is* the packing currency.
+//! - **Execution**: one worker thread per admitted job steps its
+//!   [`Session`] via `step_bundle()`, so jobs interleave at bundle
+//!   granularity and cancel/drain flags take effect at the next bundle
+//!   boundary. Datasets are regenerated deterministically from the spec
+//!   (same seed the CLI uses), which is what makes restart resume
+//!   bit-identical without spooling data.
+//! - **Durability**: every `ckpt_every` bundles the worker writes a
+//!   session checkpoint into the spool (temp file + rename). A graceful
+//!   drain checkpoints every running job and marks it `interrupted`; a
+//!   restarted daemon re-queues interrupted/running/queued records and
+//!   resumes from the latest checkpoint.
+//! - **Observability**: a wire-backed [`Observer`] streams per-bundle
+//!   telemetry into the job's in-memory log (served to `watch` clients)
+//!   and updates the daemon-level [`MetricRegistry`], exposed through
+//!   the existing [`PrometheusSink`] scrape file.
+
+use super::protocol::{
+    DoneRow, ErrCode, JobId, JobRow, JobSpec, Plan, JobState, Request, Response, TelemFrame,
+    WireError,
+};
+use super::spool::{JobRecord, Spool};
+use crate::collectives::{AlgoPolicy, SelectorSource};
+use crate::comm::ExecBackend;
+use crate::compute::NativeBackend;
+use crate::costmodel::model::DataShape;
+use crate::costmodel::{optima, topology, CalibProfile, HybridConfig};
+use crate::obs::{MetricRegistry, MetricsSink, PrometheusSink, METRIC_PREFIX};
+use crate::partition::Partitioner;
+use crate::solvers::{BundleReport, Observer, ObserverCtx, SessionBuilder};
+use crate::sparse::GramStrategy;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+/// The dataset seed the CLI's `train` uses; the daemon regenerates job
+/// datasets with the same constant so `serve` trajectories line up with
+/// `train --dataset ... --seed ...` runs of the same knobs.
+const DATASET_SEED: u64 = 0x2D5D;
+
+/// How a daemon is stood up.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back from
+    /// [`Daemon::addr`]).
+    pub addr: String,
+    /// Spool directory (created if missing).
+    pub spool: PathBuf,
+    /// Rank capacity: the sum of running jobs' mesh footprints never
+    /// exceeds this.
+    pub slots: usize,
+    /// Calibration profile the admission planner prices against and the
+    /// sessions charge from.
+    pub profile: CalibProfile,
+    /// Selector pricing source for planning and execution.
+    pub source: SelectorSource,
+    /// Execution backend for job sessions (values are bit-identical
+    /// across backends, so this only moves measured walls).
+    pub backend: ExecBackend,
+    /// OpenMetrics scrape file for the aggregate registry, if any.
+    pub metrics_out: Option<PathBuf>,
+    /// Planner grid cap on `s`.
+    pub s_max: usize,
+    /// Planner grid cap on `b`.
+    pub b_max: usize,
+}
+
+impl DaemonConfig {
+    /// Loopback daemon on an ephemeral port with library defaults —
+    /// the harness/example constructor; the CLI fills fields from flags.
+    pub fn local<P: Into<PathBuf>>(spool: P) -> DaemonConfig {
+        DaemonConfig {
+            addr: "127.0.0.1:0".into(),
+            spool: spool.into(),
+            slots: 16,
+            profile: CalibProfile::perlmutter(),
+            source: SelectorSource::Analytic,
+            backend: ExecBackend::from_env(),
+            metrics_out: None,
+            s_max: 8,
+            b_max: 64,
+        }
+    }
+}
+
+/// Plan one job: validate the spec, shape the mesh with the topology
+/// rule, and run the joint (s, b, overlap) optimum against the live
+/// profile. Pure — no daemon state — so tests can call it directly.
+pub fn plan_job(spec: &JobSpec, cfg: &DaemonConfig) -> Result<Plan, WireError> {
+    let bad = |msg: String| WireError::new(ErrCode::BadValue, msg);
+    if !(spec.scale > 0.0 && spec.scale <= 1.0) {
+        return Err(bad(format!("scale {} outside (0, 1]", spec.scale)));
+    }
+    if spec.p == 0 {
+        return Err(bad("p must be at least 1".into()));
+    }
+    if spec.bundles == 0 {
+        return Err(bad("bundles must be at least 1".into()));
+    }
+    if spec.eval_every == 0 {
+        return Err(bad("eval_every must be at least 1".into()));
+    }
+    if !(spec.eta.is_finite() && spec.eta > 0.0) {
+        return Err(bad(format!("eta {} must be finite and positive", spec.eta)));
+    }
+    if spec.tau == 0 {
+        return Err(bad("tau must be at least 1".into()));
+    }
+    if let Some(t) = spec.target {
+        if !t.is_finite() {
+            return Err(bad(format!("target {t} must be finite")));
+        }
+    }
+
+    let dp = spec.dataset.profile();
+    // Mirror `generate_scaled`'s shape law (m linear, n by √scale) so
+    // the planner prices the dataset the worker will actually build.
+    let m = ((dp.m as f64 * spec.scale) as usize).max(64);
+    let n = ((dp.n as f64 * spec.scale.sqrt()) as usize).max(32);
+    let mesh = topology::mesh_rule(n, spec.p, cfg.profile.ranks_per_node, cfg.profile.l_cap_bytes);
+    if mesh.p() > cfg.slots {
+        return Err(bad(format!(
+            "job needs {} ranks (mesh {}) but the daemon has {} slots",
+            mesh.p(),
+            mesh,
+            cfg.slots
+        )));
+    }
+    let shape = DataShape { m, n, zbar: dp.zbar as f64 };
+    let cfg0 = HybridConfig::new(mesh, 1, 1, spec.tau);
+    let ap = optima::admission_plan(&cfg0, &shape, &cfg.profile, cfg.source, cfg.s_max, cfg.b_max);
+    // A 1-wide column team has no deferred steps to correct — same
+    // guard the CLI applies.
+    let s = if mesh.p_c == 1 { 1 } else { ap.s };
+    Ok(Plan {
+        mesh,
+        s,
+        b: ap.b,
+        algo: ap.algo,
+        overlap: ap.overlap,
+        gram: GramStrategy::Auto.resolve(dp.zbar as f64),
+        source: cfg.source,
+        per_epoch_s: ap.per_epoch_s,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Shared daemon state
+// ---------------------------------------------------------------------
+
+struct JobEntry {
+    rec: JobRecord,
+    /// Telemetry replay log served to `watch` clients. In-memory only:
+    /// a restarted daemon streams from the resume point.
+    telem: Vec<TelemFrame>,
+    cancel: Arc<AtomicBool>,
+    sim_wall: f64,
+}
+
+/// Aggregate service metrics behind the existing registry/sink pair.
+struct MetricsHub {
+    reg: MetricRegistry,
+    sink: Option<PrometheusSink>,
+    samples: usize,
+}
+
+impl MetricsHub {
+    fn new(metrics_out: Option<&PathBuf>) -> io::Result<MetricsHub> {
+        let mut reg = MetricRegistry::new();
+        // Families are registered eagerly so an empty daemon still
+        // exposes a complete (zeroed) exposition. Names carry the
+        // crate-wide `hybridsgd_` prefix like every other family.
+        for (name, help) in [
+            ("serve_jobs_submitted", "Jobs accepted by the admission planner."),
+            ("serve_jobs_done", "Jobs that finished their budget or target."),
+            ("serve_jobs_canceled", "Jobs canceled by clients."),
+            ("serve_jobs_failed", "Jobs whose worker failed."),
+        ] {
+            let fam = reg.counter(&format!("{METRIC_PREFIX}{name}"), help);
+            let id = reg.series(fam, &[]);
+            reg.add(id, 0.0);
+        }
+        for (name, help) in [
+            ("serve_jobs_queued", "Jobs waiting for free rank slots."),
+            ("serve_jobs_running", "Jobs currently stepping on a worker."),
+        ] {
+            let fam = reg.gauge(&format!("{METRIC_PREFIX}{name}"), help);
+            let id = reg.series(fam, &[]);
+            reg.set(id, 0.0);
+        }
+        for (name, help) in [
+            ("serve_job_bundles", "Bundles completed, per job."),
+            ("serve_job_loss", "Latest evaluated loss, per job."),
+            ("serve_job_drift", "Max model-drift EWMA across gauges, per job."),
+        ] {
+            reg.gauge(&format!("{METRIC_PREFIX}{name}"), help);
+        }
+        let sink = match metrics_out {
+            Some(path) => Some(PrometheusSink::create(path)?),
+            None => None,
+        };
+        Ok(MetricsHub { reg, sink, samples: 0 })
+    }
+
+    fn bump(&mut self, counter: &str) {
+        let fam = self.reg.counter(&format!("{METRIC_PREFIX}{counter}"), "");
+        let id = self.reg.series(fam, &[]);
+        self.reg.add(id, 1.0);
+    }
+
+    fn set_gauge(&mut self, gauge: &str, labels: &[(&str, &str)], v: f64) {
+        let fam = self.reg.gauge(&format!("{METRIC_PREFIX}{gauge}"), "");
+        let id = self.reg.series(fam, labels);
+        self.reg.set(id, v);
+    }
+
+    fn flush(&mut self) {
+        self.samples += 1;
+        if let Some(sink) = &mut self.sink {
+            // Fail-quietly, like every observation sink in the crate:
+            // a full disk must not take the scheduler down.
+            let _ = sink.sample(self.samples, &self.reg);
+        }
+    }
+}
+
+struct State {
+    jobs: BTreeMap<JobId, JobEntry>,
+    queue: VecDeque<JobId>,
+    free_ranks: usize,
+    next_id: JobId,
+    /// Graceful drain: stop admitting, checkpoint running jobs.
+    draining: bool,
+    /// Abrupt kill (test harness): workers abandon sessions without
+    /// touching the spool, simulating a daemon crash.
+    killed: bool,
+    workers: Vec<JoinHandle<()>>,
+    metrics: MetricsHub,
+}
+
+impl State {
+    fn refresh_gauges(&mut self) {
+        let queued = self.jobs.values().filter(|j| j.rec.state == JobState::Queued).count();
+        let running = self.jobs.values().filter(|j| j.rec.state == JobState::Running).count();
+        self.metrics.set_gauge("serve_jobs_queued", &[], queued as f64);
+        self.metrics.set_gauge("serve_jobs_running", &[], running as f64);
+    }
+
+    fn job_row(&self, id: JobId, entry: &JobEntry) -> JobRow {
+        JobRow {
+            id,
+            state: entry.rec.state,
+            queue_pos: self.queue.iter().position(|&q| q == id),
+            bundles: entry.rec.bundles_done,
+            loss: entry.rec.last_loss,
+            health: entry
+                .telem
+                .last()
+                .map(|t| t.health.clone())
+                .unwrap_or_else(|| "initializing".into()),
+        }
+    }
+
+    fn done_row(&self, id: JobId, entry: &JobEntry) -> DoneRow {
+        DoneRow {
+            id,
+            state: entry.rec.state,
+            bundles: entry.rec.bundles_done,
+            loss: entry.rec.last_loss,
+            sim_wall: entry.sim_wall,
+        }
+    }
+}
+
+struct Shared {
+    cfg: DaemonConfig,
+    spool: Spool,
+    state: Mutex<State>,
+    cv: Condvar,
+    /// Set by [`Daemon::wait`]/[`Daemon::kill`] once the daemon is fully
+    /// stopped. The accept loop keeps serving through a drain — clients
+    /// must still be able to `watch` their jobs checkpoint out, and a
+    /// `submit` during the drain gets the typed `shutting-down` error
+    /// rather than a dead socket — and breaks only on this flag.
+    accept_done: AtomicBool,
+}
+
+impl Shared {
+    /// Unblock the accept loop with a throwaway self-connection.
+    fn wake_accept(&self, addr: SocketAddr) {
+        let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The daemon handle
+// ---------------------------------------------------------------------
+
+/// A running `pallas-serve` daemon. Dropping the handle does **not**
+/// stop it — call [`Daemon::shutdown`] + [`Daemon::wait`] (graceful) or
+/// [`Daemon::kill`] (crash simulation).
+pub struct Daemon {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind, scan the spool (re-queueing interrupted work), and start
+    /// accepting connections.
+    pub fn start(cfg: DaemonConfig) -> io::Result<Daemon> {
+        let spool = Spool::open(&cfg.spool)?;
+        let metrics = MetricsHub::new(cfg.metrics_out.as_ref())?;
+        let mut state = State {
+            jobs: BTreeMap::new(),
+            queue: VecDeque::new(),
+            free_ranks: cfg.slots,
+            next_id: 1,
+            draining: false,
+            killed: false,
+            workers: Vec::new(),
+            metrics,
+        };
+        for mut rec in spool.scan()? {
+            state.next_id = state.next_id.max(rec.id + 1);
+            let requeue = matches!(
+                rec.state,
+                JobState::Queued | JobState::Running | JobState::Interrupted
+            );
+            if requeue {
+                rec.state = JobState::Queued;
+                spool.save(&rec)?;
+                state.queue.push_back(rec.id);
+            }
+            let id = rec.id;
+            state.jobs.insert(
+                id,
+                JobEntry {
+                    rec,
+                    telem: Vec::new(),
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    sim_wall: 0.0,
+                },
+            );
+        }
+        state.refresh_gauges();
+        state.metrics.flush();
+
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            cfg,
+            spool,
+            state: Mutex::new(state),
+            cv: Condvar::new(),
+            accept_done: AtomicBool::new(false),
+        });
+
+        {
+            let mut st = shared.state.lock().unwrap();
+            pump(&shared, &mut st);
+        }
+
+        let accept_shared = shared.clone();
+        let accept = thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shared.accept_done.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let conn_shared = accept_shared.clone();
+                thread::spawn(move || handle_conn(&conn_shared, stream));
+            }
+        });
+
+        Ok(Daemon { shared, addr, accept: Some(accept) })
+    }
+
+    /// The bound address (read the ephemeral port back from here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain: stop admitting, checkpoint running
+    /// jobs, mark them `interrupted`. Idempotent; pair with [`wait`].
+    ///
+    /// [`wait`]: Daemon::wait
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.draining = true;
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Block until a drain (local [`shutdown`] or a wire `shutdown`
+    /// frame) completes: every running job has checkpointed out, all
+    /// worker threads joined.
+    ///
+    /// [`shutdown`]: Daemon::shutdown
+    pub fn wait(mut self) {
+        let workers = {
+            let mut st = self.shared.state.lock().unwrap();
+            loop {
+                let busy = st.jobs.values().any(|j| j.rec.state == JobState::Running);
+                if (st.draining || st.killed) && !busy {
+                    break;
+                }
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            std::mem::take(&mut st.workers)
+        };
+        for w in workers {
+            let _ = w.join();
+        }
+        self.shared.accept_done.store(true, Ordering::Release);
+        self.shared.wake_accept(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.metrics.flush();
+    }
+
+    /// Simulate a crash: workers abandon their sessions at the next
+    /// bundle boundary **without** spool writes, so the spool holds only
+    /// the periodic checkpoints — exactly what a SIGKILL would leave.
+    /// The kill-and-restart equivalence harness builds on this.
+    pub fn kill(mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.killed = true;
+        }
+        self.shared.cv.notify_all();
+        self.shared.accept_done.store(true, Ordering::Release);
+        self.shared.wake_accept(self.addr);
+        let workers = {
+            let mut st = self.shared.state.lock().unwrap();
+            std::mem::take(&mut st.workers)
+        };
+        for w in workers {
+            let _ = w.join();
+        }
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+/// FIFO admission by predicted footprint: admit from the head while the
+/// head fits the free rank slots. Called with the state lock held.
+fn pump(shared: &Arc<Shared>, st: &mut State) {
+    if st.draining || st.killed {
+        return;
+    }
+    while let Some(&id) = st.queue.front() {
+        let ranks = st.jobs[&id].rec.plan.ranks();
+        if ranks > st.free_ranks {
+            break;
+        }
+        st.queue.pop_front();
+        st.free_ranks -= ranks;
+        let entry = st.jobs.get_mut(&id).expect("queued job exists");
+        entry.rec.state = JobState::Running;
+        if let Err(e) = shared.spool.save(&entry.rec) {
+            eprintln!("serve: spool write for job {id} failed: {e}");
+        }
+        let worker_shared = shared.clone();
+        st.workers.push(thread::spawn(move || run_job(&worker_shared, id)));
+    }
+    st.refresh_gauges();
+    st.metrics.flush();
+}
+
+/// How a worker left its job.
+enum Outcome {
+    Finished,
+    Canceled,
+    Drained,
+    Failed(io::Error),
+}
+
+/// Streams per-bundle telemetry into the job's replay log and the
+/// aggregate registry. Pure observation: attaching it cannot move the
+/// trajectory or the charged books.
+struct WireObserver {
+    shared: Arc<Shared>,
+    id: JobId,
+}
+
+impl Observer for WireObserver {
+    fn on_bundle(&mut self, _ctx: &ObserverCtx<'_>, report: &BundleReport) {
+        let frame = TelemFrame {
+            id: self.id,
+            bundle: report.bundle,
+            sim_wall: report.sim_wall,
+            loss: report.eval.map(|tp| tp.loss),
+            health: report.health.name().to_string(),
+            words: report.words_delta,
+            hidden_frac: report.overlap_efficiency,
+            fedavg: report.fedavg_fired,
+        };
+        let mut st = self.shared.state.lock().unwrap();
+        let label = self.id.to_string();
+        let drift = report.drift.iter().map(|d| d.ewma).fold(0.0f64, f64::max);
+        if let Some(entry) = st.jobs.get_mut(&self.id) {
+            entry.rec.bundles_done = report.bundle;
+            if let Some(tp) = report.eval {
+                entry.rec.last_loss = Some(tp.loss);
+            }
+            entry.sim_wall = report.sim_wall;
+            entry.telem.push(frame);
+        }
+        let labels: &[(&str, &str)] = &[("job", label.as_str())];
+        st.metrics.set_gauge("serve_job_bundles", labels, report.bundle as f64);
+        if let Some(tp) = report.eval {
+            st.metrics.set_gauge("serve_job_loss", labels, tp.loss);
+        }
+        st.metrics.set_gauge("serve_job_drift", labels, drift);
+        st.metrics.flush();
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+/// The per-job worker: build (or resume) the session, step it to a
+/// terminal state, checkpointing on the durable cadence and reacting to
+/// cancel/drain/kill flags at bundle boundaries.
+fn run_job(shared: &Arc<Shared>, id: JobId) {
+    let (spec, plan, cancel) = {
+        let st = shared.state.lock().unwrap();
+        let entry = &st.jobs[&id];
+        (entry.rec.spec, entry.rec.plan, entry.cancel.clone())
+    };
+
+    // Regenerated, never spooled: the generator is deterministic in
+    // (profile, scale, seed), so a restarted daemon reconstructs the
+    // exact bytes the dead one trained on.
+    let ds = spec.dataset.profile().generate_scaled(spec.scale, DATASET_SEED);
+    let compute = NativeBackend;
+    let cfg = HybridConfig::new(plan.mesh, plan.s, plan.b, spec.tau.max(plan.s));
+    let builder = SessionBuilder::new(&compute, &ds, cfg)
+        .partitioner(Partitioner::Cyclic)
+        .eta(spec.eta)
+        .max_bundles(spec.bundles)
+        .eval_every(spec.eval_every)
+        .target_loss(spec.target)
+        .backend(shared.cfg.backend)
+        .profile(shared.cfg.profile.clone())
+        .algo(AlgoPolicy::Auto)
+        .selector(plan.source)
+        .overlap(plan.overlap)
+        .gram(plan.gram)
+        .seed(spec.seed)
+        .observe(Box::new(WireObserver { shared: shared.clone(), id }));
+
+    let ckpt = shared.spool.ckpt_path(id);
+    let mut session = if ckpt.exists() {
+        match builder.resume(&ckpt) {
+            Ok(s) => s,
+            Err(e) => return finish_job(shared, id, Outcome::Failed(e), 0, 0.0),
+        }
+    } else {
+        builder.build()
+    };
+
+    let write_ckpt = |session: &crate::solvers::Session<'_>| -> io::Result<()> {
+        let tmp = ckpt.with_extension("tsv.tmp");
+        session.checkpoint(&tmp)?;
+        std::fs::rename(&tmp, &ckpt)
+    };
+
+    let outcome = loop {
+        let (killed, draining) = {
+            let st = shared.state.lock().unwrap();
+            (st.killed, st.draining)
+        };
+        if killed {
+            // Crash simulation: vanish without spool writes.
+            return;
+        }
+        if cancel.load(Ordering::Relaxed) {
+            break Outcome::Canceled;
+        }
+        if draining {
+            break match write_ckpt(&session) {
+                Ok(()) => Outcome::Drained,
+                Err(e) => Outcome::Failed(e),
+            };
+        }
+        if session.is_done() {
+            break match write_ckpt(&session) {
+                Ok(()) => Outcome::Finished,
+                Err(e) => Outcome::Failed(e),
+            };
+        }
+        let _ = session.step_bundle();
+        if spec.ckpt_every > 0
+            && session.bundles_run() % spec.ckpt_every == 0
+            && !session.is_done()
+        {
+            if let Err(e) = write_ckpt(&session) {
+                break Outcome::Failed(e);
+            }
+            // Keep the durable record's progress cursor in step with
+            // the checkpoint it sits next to.
+            let mut st = shared.state.lock().unwrap();
+            if let Some(entry) = st.jobs.get_mut(&id) {
+                if let Err(e) = shared.spool.save(&entry.rec) {
+                    eprintln!("serve: spool write for job {id} failed: {e}");
+                }
+            }
+        }
+    };
+    let (bundles, sim_wall) = (session.bundles_run(), session.sim_wall());
+    drop(session);
+    finish_job(shared, id, outcome, bundles, sim_wall);
+}
+
+fn finish_job(shared: &Arc<Shared>, id: JobId, outcome: Outcome, bundles: usize, sim_wall: f64) {
+    let mut st = shared.state.lock().unwrap();
+    let ranks = st.jobs[&id].rec.plan.ranks();
+    let (state, counter) = match &outcome {
+        Outcome::Finished => (JobState::Done, Some("serve_jobs_done")),
+        Outcome::Canceled => (JobState::Canceled, Some("serve_jobs_canceled")),
+        Outcome::Drained => (JobState::Interrupted, None),
+        Outcome::Failed(e) => {
+            eprintln!("serve: job {id} failed: {e}");
+            (JobState::Failed, Some("serve_jobs_failed"))
+        }
+    };
+    if let Some(entry) = st.jobs.get_mut(&id) {
+        entry.rec.state = state;
+        entry.rec.bundles_done = bundles;
+        entry.sim_wall = sim_wall;
+        if let Err(e) = shared.spool.save(&entry.rec) {
+            eprintln!("serve: spool write for job {id} failed: {e}");
+        }
+    }
+    st.free_ranks += ranks;
+    if let Some(c) = counter {
+        st.metrics.bump(c);
+    }
+    pump(shared, &mut st);
+    drop(st);
+    shared.cv.notify_all();
+}
+
+// ---------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------
+
+fn send(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    let mut line = resp.render();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+fn handle_conn(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // A silent or half-written request must not pin this thread
+    // forever; watch streaming below clears the deadline again.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let Ok(reader_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(reader_half);
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => return, // closed or truncated mid-line
+        Ok(_) => {}
+    }
+    let req = match Request::parse(&line) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = send(&mut stream, &Response::Err(e));
+            return;
+        }
+    };
+    match req {
+        Request::Submit(spec) => handle_submit(shared, &mut stream, spec),
+        Request::Status(job) => handle_status(shared, &mut stream, job),
+        Request::Watch { job, from } => handle_watch(shared, &mut stream, job, from),
+        Request::Cancel(job) => handle_cancel(shared, &mut stream, job),
+        Request::Shutdown => {
+            {
+                let mut st = shared.state.lock().unwrap();
+                st.draining = true;
+            }
+            shared.cv.notify_all();
+            let _ = send(&mut stream, &Response::Ok("draining".into()));
+        }
+    }
+}
+
+fn handle_submit(shared: &Arc<Shared>, stream: &mut TcpStream, spec: JobSpec) {
+    let reply = {
+        let mut st = shared.state.lock().unwrap();
+        if st.draining || st.killed {
+            Err(WireError::new(ErrCode::ShuttingDown, "daemon is draining; resubmit later"))
+        } else {
+            plan_job(&spec, &shared.cfg).and_then(|plan| {
+                let id = st.next_id;
+                let rec = JobRecord {
+                    id,
+                    spec,
+                    plan,
+                    state: JobState::Queued,
+                    bundles_done: 0,
+                    last_loss: None,
+                };
+                shared
+                    .spool
+                    .save(&rec)
+                    .map_err(|e| WireError::new(ErrCode::Internal, format!("spool: {e}")))?;
+                st.next_id += 1;
+                st.jobs.insert(
+                    id,
+                    JobEntry {
+                        rec,
+                        telem: Vec::new(),
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        sim_wall: 0.0,
+                    },
+                );
+                st.queue.push_back(id);
+                st.metrics.bump("serve_jobs_submitted");
+                pump(shared, &mut st);
+                let row = st.job_row(id, &st.jobs[&id]);
+                Ok((row, id, plan))
+            })
+        }
+    };
+    match reply {
+        Ok((row, id, plan)) => {
+            let _ = send(stream, &Response::Job(row));
+            let _ = send(stream, &Response::Plan { id, plan });
+        }
+        Err(e) => {
+            let _ = send(stream, &Response::Err(e));
+        }
+    }
+}
+
+fn handle_status(shared: &Arc<Shared>, stream: &mut TcpStream, job: Option<JobId>) {
+    let rows = {
+        let st = shared.state.lock().unwrap();
+        match job {
+            Some(id) => match st.jobs.get(&id) {
+                Some(e) => Ok(vec![st.job_row(id, e)]),
+                None => Err(WireError::new(ErrCode::UnknownJob, format!("no job {id}"))),
+            },
+            None => Ok(st.jobs.iter().map(|(&id, e)| st.job_row(id, e)).collect()),
+        }
+    };
+    match rows {
+        Ok(rows) => {
+            let n = rows.len();
+            for row in rows {
+                if send(stream, &Response::Job(row)).is_err() {
+                    return;
+                }
+            }
+            let _ = send(stream, &Response::Ok(format!("{n} jobs")));
+        }
+        Err(e) => {
+            let _ = send(stream, &Response::Err(e));
+        }
+    }
+}
+
+fn handle_cancel(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId) {
+    let reply = {
+        let mut st = shared.state.lock().unwrap();
+        match st.jobs.get(&job) {
+            None => Err(WireError::new(ErrCode::UnknownJob, format!("no job {job}"))),
+            Some(entry) => match entry.rec.state {
+                JobState::Queued => {
+                    st.queue.retain(|&q| q != job);
+                    let entry = st.jobs.get_mut(&job).expect("entry exists");
+                    entry.rec.state = JobState::Canceled;
+                    if let Err(e) = shared.spool.save(&entry.rec) {
+                        eprintln!("serve: spool write for job {job} failed: {e}");
+                    }
+                    st.metrics.bump("serve_jobs_canceled");
+                    st.refresh_gauges();
+                    st.metrics.flush();
+                    Ok("canceled".to_string())
+                }
+                JobState::Running => {
+                    // The worker notices at the next bundle boundary —
+                    // bundle-granular interleaving is what makes this
+                    // prompt.
+                    entry.cancel.store(true, Ordering::Relaxed);
+                    Ok("cancel requested".to_string())
+                }
+                state => Ok(format!("already {}", state.name())),
+            },
+        }
+    };
+    shared.cv.notify_all();
+    match reply {
+        Ok(msg) => {
+            let _ = send(stream, &Response::Ok(msg));
+        }
+        Err(e) => {
+            let _ = send(stream, &Response::Err(e));
+        }
+    }
+}
+
+fn handle_watch(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId, from: usize) {
+    let mut cursor = 0usize;
+    loop {
+        let (frames, done) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                let Some(entry) = st.jobs.get(&job) else {
+                    let _ = send(
+                        stream,
+                        &Response::Err(WireError::new(
+                            ErrCode::UnknownJob,
+                            format!("no job {job}"),
+                        )),
+                    );
+                    return;
+                };
+                let fresh = entry.telem.len() > cursor;
+                let over = entry.rec.state.is_terminal()
+                    || entry.rec.state == JobState::Interrupted
+                    || st.killed
+                    || (st.draining && entry.rec.state == JobState::Queued);
+                if fresh || over {
+                    let frames: Vec<TelemFrame> = entry.telem[cursor..].to_vec();
+                    cursor = entry.telem.len();
+                    let done = if over { Some(st.done_row(job, entry)) } else { None };
+                    break (frames, done);
+                }
+                let (next, _timed_out) =
+                    shared.cv.wait_timeout(st, Duration::from_millis(200)).unwrap();
+                st = next;
+            }
+        };
+        for f in frames {
+            if f.bundle <= from {
+                continue;
+            }
+            if send(stream, &Response::Telem(f)).is_err() {
+                return; // client went away
+            }
+        }
+        if let Some(d) = done {
+            let _ = send(stream, &Response::Done(d));
+            return;
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! The daemon's durable state: one spool directory holding a versioned
+//! TSV record per job plus its latest session checkpoint.
+//!
+//! Layout (all under the spool dir):
+//!
+//! ```text
+//! job-000001.tsv        the job record: spec + plan + lifecycle state
+//! job-000001.ckpt.tsv   latest durable Session checkpoint (cadence:
+//!                       `ckpt_every`, plus one at graceful drain and a
+//!                       final one at completion)
+//! ```
+//!
+//! Records are schema-guarded like every other TSV in the crate: a
+//! `meta schema` row that newer builds bump (loads reject newer
+//! schemas), required keys whose absence is a typed [`io::Error`], and
+//! enum cells parsed through the same `FromStr` impls the CLI uses.
+//! Every write goes through a temp file + atomic rename, so a daemon
+//! killed mid-write leaves the previous complete record, never a torn
+//! one — the kill-and-restart equivalence harness leans on this.
+
+use super::protocol::{JobId, JobSpec, Plan, JobState};
+use crate::mesh::Mesh;
+use crate::util::tsv::read_tsv;
+use std::fs;
+use std::io::{self, ErrorKind, Write};
+use std::path::{Path, PathBuf};
+
+/// Job-record schema version (`meta schema` row).
+pub const SPOOL_SCHEMA: u32 = 1;
+
+/// One job's durable record: everything a restarted daemon needs to
+/// re-queue and resume it bit-identically (the dataset is regenerated
+/// deterministically from the spec; the trajectory comes from the
+/// checkpoint file next to the record).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobRecord {
+    /// Daemon-assigned id (dense from 1; restart continues after the max).
+    pub id: JobId,
+    /// The client's request.
+    pub spec: JobSpec,
+    /// The admission planner's knob set.
+    pub plan: Plan,
+    /// Lifecycle state at the last spool write.
+    pub state: JobState,
+    /// Bundles completed at the last spool write.
+    pub bundles_done: usize,
+    /// Latest evaluated loss at the last spool write.
+    pub last_loss: Option<f64>,
+}
+
+/// Handle on a spool directory.
+#[derive(Clone, Debug)]
+pub struct Spool {
+    dir: PathBuf,
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(ErrorKind::InvalidData, msg.into())
+}
+
+impl Spool {
+    /// Open (creating if needed) a spool directory.
+    pub fn open<P: AsRef<Path>>(dir: P) -> io::Result<Spool> {
+        fs::create_dir_all(&dir)?;
+        Ok(Spool { dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// The directory this spool lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Path of a job's record file.
+    pub fn record_path(&self, id: JobId) -> PathBuf {
+        self.dir.join(format!("job-{id:06}.tsv"))
+    }
+
+    /// Path of a job's durable checkpoint.
+    pub fn ckpt_path(&self, id: JobId) -> PathBuf {
+        self.dir.join(format!("job-{id:06}.ckpt.tsv"))
+    }
+
+    /// Atomically (re)write a job record: temp file + rename, so a kill
+    /// mid-write can never leave a torn record.
+    pub fn save(&self, rec: &JobRecord) -> io::Result<()> {
+        let mut out = String::new();
+        out.push_str("kind\tkey\tvalue\n");
+        let mut row = |kind: &str, key: &str, value: String| {
+            out.push_str(kind);
+            out.push('\t');
+            out.push_str(key);
+            out.push('\t');
+            out.push_str(&value);
+            out.push('\n');
+        };
+        row("meta", "schema", SPOOL_SCHEMA.to_string());
+        row("meta", "id", rec.id.to_string());
+        let s = &rec.spec;
+        row("spec", "dataset", s.dataset.cli_name().to_string());
+        row("spec", "scale", s.scale.to_string());
+        row("spec", "p", s.p.to_string());
+        row("spec", "bundles", s.bundles.to_string());
+        row("spec", "eval_every", s.eval_every.to_string());
+        row("spec", "eta", s.eta.to_string());
+        row("spec", "tau", s.tau.to_string());
+        row("spec", "seed", s.seed.to_string());
+        row("spec", "target", s.target.map(|t| t.to_string()).unwrap_or_else(|| "-".into()));
+        row("spec", "ckpt_every", s.ckpt_every.to_string());
+        let p = &rec.plan;
+        row("plan", "mesh", p.mesh.to_string());
+        row("plan", "s", p.s.to_string());
+        row("plan", "b", p.b.to_string());
+        row("plan", "algo", p.algo.name().to_string());
+        row("plan", "overlap", p.overlap.name().to_string());
+        row("plan", "gram", p.gram.name().to_string());
+        row("plan", "source", p.source.name().to_string());
+        row("plan", "per_epoch_s", p.per_epoch_s.to_string());
+        row("state", "state", rec.state.name().to_string());
+        row("state", "bundles", rec.bundles_done.to_string());
+        row(
+            "state",
+            "loss",
+            rec.last_loss.map(|l| l.to_string()).unwrap_or_else(|| "-".into()),
+        );
+
+        let tmp = self.dir.join(format!("job-{:06}.tsv.tmp", rec.id));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(out.as_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, self.record_path(rec.id))
+    }
+
+    /// Load one job record, with the same guard posture as the
+    /// checkpoint/CalibProfile loaders: schema gate, required keys,
+    /// typed `InvalidData` errors.
+    pub fn load<P: AsRef<Path>>(&self, path: P) -> io::Result<JobRecord> {
+        let path = path.as_ref();
+        let (header, rows) = read_tsv(path)?;
+        if header != ["kind", "key", "value"] {
+            return Err(bad(format!("{}: not a spool job record", path.display())));
+        }
+        let get = |kind: &str, key: &str| -> io::Result<String> {
+            rows.iter()
+                .find(|r| r.len() == 3 && r[0] == kind && r[1] == key)
+                .map(|r| r[2].clone())
+                .ok_or_else(|| {
+                    bad(format!("{}: missing {kind} {key} row", path.display()))
+                })
+        };
+        let schema: u32 = get("meta", "schema")?
+            .parse()
+            .map_err(|_| bad(format!("{}: bad schema cell", path.display())))?;
+        if schema > SPOOL_SCHEMA {
+            return Err(bad(format!(
+                "{}: record schema {schema} is newer than this build ({SPOOL_SCHEMA})",
+                path.display()
+            )));
+        }
+        let num = |field: &str, v: String| -> io::Result<u64> {
+            v.parse().map_err(|_| bad(format!("{}: bad {field} `{v}`", path.display())))
+        };
+        let f64_of = |field: &str, v: String| -> io::Result<f64> {
+            v.parse().map_err(|_| bad(format!("{}: bad {field} `{v}`", path.display())))
+        };
+        let opt_f64 = |field: &str, v: String| -> io::Result<Option<f64>> {
+            if v == "-" {
+                Ok(None)
+            } else {
+                f64_of(field, v).map(Some)
+            }
+        };
+        let mesh_cell = get("plan", "mesh")?;
+        let mesh = {
+            let bad_mesh = || bad(format!("{}: bad mesh `{mesh_cell}`", path.display()));
+            let (r, c) = mesh_cell.split_once('x').ok_or_else(bad_mesh)?;
+            Mesh::new(
+                r.parse().map_err(|_| bad_mesh())?,
+                c.parse().map_err(|_| bad_mesh())?,
+            )
+        };
+
+        // Enum cells parse through the same `FromStr` impls the CLI
+        // uses, so spool errors share the "unknown <what> `<got>`"
+        // shape.
+        macro_rules! enum_of {
+            ($field:literal, $v:expr) => {
+                $v.parse().map_err(|e: String| {
+                    bad(format!("{}: {}: {e}", path.display(), $field))
+                })?
+            };
+        }
+
+        let rec = JobRecord {
+            id: num("id", get("meta", "id")?)?,
+            spec: JobSpec {
+                dataset: enum_of!("dataset", get("spec", "dataset")?),
+                scale: f64_of("scale", get("spec", "scale")?)?,
+                p: num("p", get("spec", "p")?)? as usize,
+                bundles: num("bundles", get("spec", "bundles")?)? as usize,
+                eval_every: num("eval_every", get("spec", "eval_every")?)? as usize,
+                eta: f64_of("eta", get("spec", "eta")?)?,
+                tau: num("tau", get("spec", "tau")?)? as usize,
+                seed: num("seed", get("spec", "seed")?)?,
+                target: opt_f64("target", get("spec", "target")?)?,
+                ckpt_every: num("ckpt_every", get("spec", "ckpt_every")?)? as usize,
+            },
+            plan: Plan {
+                mesh,
+                s: num("s", get("plan", "s")?)? as usize,
+                b: num("b", get("plan", "b")?)? as usize,
+                algo: enum_of!("algo", get("plan", "algo")?),
+                overlap: enum_of!("overlap", get("plan", "overlap")?),
+                gram: enum_of!("gram", get("plan", "gram")?),
+                source: enum_of!("source", get("plan", "source")?),
+                per_epoch_s: f64_of("per_epoch_s", get("plan", "per_epoch_s")?)?,
+            },
+            state: enum_of!("state", get("state", "state")?),
+            bundles_done: num("bundles", get("state", "bundles")?)? as usize,
+            last_loss: opt_f64("loss", get("state", "loss")?)?,
+        };
+        Ok(rec)
+    }
+
+    /// Scan the spool for job records, sorted by id. Unreadable or
+    /// foreign files fail the scan (a daemon must not silently drop
+    /// spooled jobs); `.tmp` leftovers from an interrupted write are
+    /// removed.
+    pub fn scan(&self) -> io::Result<Vec<JobRecord>> {
+        let mut recs = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if name.ends_with(".tmp") {
+                let _ = fs::remove_file(&path);
+                continue;
+            }
+            if name.starts_with("job-") && name.ends_with(".tsv") && !name.ends_with(".ckpt.tsv")
+            {
+                recs.push(self.load(&path)?);
+            }
+        }
+        recs.sort_by_key(|r| r.id);
+        Ok(recs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{Algorithm, SelectorSource};
+    use crate::data::DatasetSpec;
+    use crate::sparse::GramStrategy;
+    use crate::timeline::OverlapPolicy;
+
+    fn tmp_spool(tag: &str) -> Spool {
+        let dir = std::env::temp_dir().join(format!("spool_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        Spool::open(dir).unwrap()
+    }
+
+    fn rec(id: JobId) -> JobRecord {
+        JobRecord {
+            id,
+            spec: JobSpec {
+                dataset: DatasetSpec::SyntheticUniform,
+                scale: 0.07,
+                p: 8,
+                bundles: 40,
+                eval_every: 5,
+                eta: 0.1,
+                tau: 10,
+                seed: 7,
+                target: None,
+                ckpt_every: 4,
+            },
+            plan: Plan {
+                mesh: Mesh::new(2, 4),
+                s: 3,
+                b: 9,
+                algo: Algorithm::Rabenseifner,
+                overlap: OverlapPolicy::Bundle,
+                gram: GramStrategy::Scatter,
+                source: SelectorSource::Analytic,
+                per_epoch_s: 0.125,
+            },
+            state: JobState::Running,
+            bundles_done: 13,
+            last_loss: Some(0.5987),
+        }
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let spool = tmp_spool("roundtrip");
+        let r = rec(3);
+        spool.save(&r).unwrap();
+        let back = spool.load(spool.record_path(3)).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn scan_sorts_and_cleans_tmp_leftovers() {
+        let spool = tmp_spool("scan");
+        for id in [5, 2, 9] {
+            spool.save(&rec(id)).unwrap();
+        }
+        fs::write(spool.dir().join("job-000099.tsv.tmp"), "torn").unwrap();
+        let ids: Vec<JobId> = spool.scan().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 5, 9]);
+        assert!(!spool.dir().join("job-000099.tsv.tmp").exists());
+    }
+
+    #[test]
+    fn newer_schema_and_truncation_are_rejected() {
+        let spool = tmp_spool("guards");
+        let r = rec(1);
+        spool.save(&r).unwrap();
+        let path = spool.record_path(1);
+        let text = fs::read_to_string(&path).unwrap();
+
+        let newer = text.replace("meta\tschema\t1", "meta\tschema\t2");
+        fs::write(&path, newer).unwrap();
+        let e = spool.load(&path).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::InvalidData);
+        assert!(e.to_string().contains("newer"), "{e}");
+
+        // Drop the plan rows: required keys must be typed errors.
+        let truncated: String = text
+            .lines()
+            .filter(|l| !l.starts_with("plan\t"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        fs::write(&path, truncated).unwrap();
+        let e = spool.load(&path).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::InvalidData);
+        assert!(e.to_string().contains("missing plan"), "{e}");
+
+        // A bad enum cell reports through the shared FromStr convention.
+        let bad_enum = text.replace("plan\talgo\trabenseifner", "plan\talgo\tnosuch");
+        fs::write(&path, bad_enum).unwrap();
+        let e = spool.load(&path).unwrap_err();
+        assert!(e.to_string().contains("unknown collective algorithm"), "{e}");
+    }
+}

@@ -14,6 +14,61 @@ pub fn unknown_value(what: &str, got: &str, expected: &[&str]) -> String {
     format!("unknown {what} `{got}`, expected one of {}", expected.join("|"))
 }
 
+/// A subcommand's flag allowlist entry: flag name (without `--`) and
+/// whether the flag takes a value. Boolean flags (`false`) never consume
+/// the next token; value flags (`true`) always do — so values that start
+/// with `-` (negative targets, `-`-prefixed paths) parse correctly.
+pub type FlagSpec = (&'static str, bool);
+
+/// Parse `--key value` / `--key=value` / `--bool-flag` argument lists
+/// against a per-subcommand allowlist.
+///
+/// Guarantees the ad-hoc parser it replaced did not give:
+///
+/// - an unknown `--flag` is a typed error (via [`unknown_value`]), not a
+///   silently accepted map entry;
+/// - `--key=value` is accepted everywhere;
+/// - a value flag consumes the next token *unconditionally*, so values
+///   beginning with `-` work (the old parser treated them as absent);
+/// - a value flag at the end of the line is a "missing value" error;
+/// - a boolean flag given `=value` is an error;
+/// - stray positional arguments are errors, not warnings.
+///
+/// Boolean flags land in the map with value `"true"`.
+pub fn parse_flags(
+    args: &[String],
+    allowed: &[FlagSpec],
+) -> Result<std::collections::HashMap<String, String>, String> {
+    let mut flags = std::collections::HashMap::new();
+    let names: Vec<&str> = allowed.iter().map(|(n, _)| *n).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(body) = a.strip_prefix("--") else {
+            return Err(format!("stray argument `{a}` (flags start with --)"));
+        };
+        let (key, inline) = match body.split_once('=') {
+            Some((k, v)) => (k, Some(v)),
+            None => (body, None),
+        };
+        let Some(&(name, takes_value)) = allowed.iter().find(|(n, _)| *n == key) else {
+            return Err(unknown_value("flag", &format!("--{key}"), &names));
+        };
+        let value = match (takes_value, inline) {
+            (true, Some(v)) => v.to_string(),
+            (true, None) => {
+                i += 1;
+                args.get(i).cloned().ok_or_else(|| format!("--{name} needs a value"))?
+            }
+            (false, None) => "true".to_string(),
+            (false, Some(_)) => return Err(format!("--{name} does not take a value")),
+        };
+        flags.insert(name.to_string(), value);
+        i += 1;
+    }
+    Ok(flags)
+}
+
 /// Implement [`std::str::FromStr`] (`Err = String`) for an enum knob:
 ///
 /// ```ignore
@@ -69,5 +124,42 @@ mod tests {
             unknown_value("thing", "x", &["p", "q"]),
             "unknown thing `x`, expected one of p|q"
         );
+    }
+
+    const SPEC: &[FlagSpec] = &[("dataset", true), ("target", true), ("quick", false)];
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_parse_all_three_shapes() {
+        let f = parse_flags(&argv(&["--dataset", "url", "--target=0.5", "--quick"]), SPEC).unwrap();
+        assert_eq!(f.get("dataset").unwrap(), "url");
+        assert_eq!(f.get("target").unwrap(), "0.5");
+        assert_eq!(f.get("quick").unwrap(), "true");
+    }
+
+    #[test]
+    fn value_flags_consume_dash_values() {
+        // The old parser treated a following `-`/`--` token as "no
+        // value" and silently mis-parsed; value flags must always eat
+        // the next token.
+        let f = parse_flags(&argv(&["--target", "-0.5"]), SPEC).unwrap();
+        assert_eq!(f.get("target").unwrap(), "-0.5");
+    }
+
+    #[test]
+    fn unknown_and_malformed_flags_are_errors() {
+        assert!(parse_flags(&argv(&["--nope", "1"]), SPEC)
+            .unwrap_err()
+            .contains("unknown flag `--nope`"));
+        assert!(parse_flags(&argv(&["--dataset"]), SPEC)
+            .unwrap_err()
+            .contains("needs a value"));
+        assert!(parse_flags(&argv(&["--quick=yes"]), SPEC)
+            .unwrap_err()
+            .contains("does not take a value"));
+        assert!(parse_flags(&argv(&["stray"]), SPEC).unwrap_err().contains("stray argument"));
     }
 }

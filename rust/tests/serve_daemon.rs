@@ -1,0 +1,506 @@
+//! Acceptance harness for the `pallas-serve` daemon:
+//!
+//! * **admission concurrency** — four planner-admitted jobs run at once
+//!   on one daemon (the submit replies themselves say `running`, since
+//!   admission happens under the submit lock before the reply);
+//! * **packing** — a daemon with a 2-rank budget queues the second job
+//!   with a queue position, and canceling a queued job frees it;
+//! * **watch streams** — per-bundle telemetry replays from the start or
+//!   from a `--from` cursor, losses land on the eval cadence, and the
+//!   stream terminates with a `done` frame;
+//! * **prompt cancel** — a running job stops at the next bundle
+//!   boundary when canceled;
+//! * **kill-and-restart equivalence** — a daemon killed mid-flight
+//!   (no spool writes, simulating SIGKILL) restarts, resumes every
+//!   in-flight job from its periodic checkpoint, and finishes
+//!   **bit-identical** to an uninterrupted reference run — trajectory
+//!   *and* charged books — including a job running under
+//!   `--overlap bundle` with a posted row reduce in flight;
+//! * **graceful drain** — `shutdown` checkpoints running jobs, marks
+//!   them `interrupted`, and a restart resumes them bit-identically;
+//! * **protocol robustness** — malformed, truncated, and newer-schema
+//!   frames produce typed `err` frames, never a panic or a wedged
+//!   daemon;
+//! * **service metrics** — the daemon's scrape file carries the job
+//!   lifecycle counters and per-job gauges.
+
+use hybrid_sgd::collectives::{Algorithm, SelectorSource};
+use hybrid_sgd::data::DatasetSpec;
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::serve::{
+    plan_job, Client, ClientError, Daemon, DaemonConfig, ErrCode, JobRecord, JobSpec, JobState,
+    Plan, Spool,
+};
+use hybrid_sgd::sparse::GramStrategy;
+use hybrid_sgd::timeline::OverlapPolicy;
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Fresh per-test spool directory (removed up front so reruns start
+/// clean; tests use distinct tags so `cargo test` can parallelize).
+fn spool_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_harness_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small rcv1-profile job: 2 requested ranks shape to a 1x2 mesh
+/// under the topology rule, so the footprint is 2 slots.
+fn quick_spec(bundles: usize, ckpt_every: usize) -> JobSpec {
+    JobSpec {
+        dataset: DatasetSpec::Rcv1Like,
+        scale: 0.05,
+        p: 2,
+        bundles,
+        eval_every: 3,
+        eta: 0.1,
+        tau: 10,
+        seed: 0x5EED,
+        target: None,
+        ckpt_every,
+    }
+}
+
+/// Poll a condition until it holds or a generous deadline passes.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Checkpoint lines for the bit-identity compare. The only
+/// host-nondeterministic rows are the `book metrics` entries (measured
+/// eval wall, charged as host time); everything else — weights, cursors,
+/// clocks, traffic, phase books, trace, pending collectives, the event
+/// log — must match byte for byte.
+fn ckpt_lines(path: &Path) -> Vec<String> {
+    fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+        .lines()
+        .filter(|l| !l.starts_with("book\tmetrics\t"))
+        .map(|l| l.to_string())
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Admission concurrency + watch + cancel + wire shutdown
+// ---------------------------------------------------------------------
+
+#[test]
+fn four_planner_admitted_jobs_run_concurrently() {
+    let daemon = Daemon::start(DaemonConfig::local(spool_dir("concurrent"))).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    // Long budget, no checkpoints: these jobs exist to occupy slots.
+    let mut spec = quick_spec(100_000, 0);
+    spec.eval_every = 1000;
+    let mut ids = Vec::new();
+    for seed in 0..4 {
+        spec.seed = seed;
+        let (row, plan) = client.submit(&spec).unwrap();
+        // The planner shaped the mesh and the scheduler admitted the job
+        // before replying: with 4 × 2 = 8 ranks against 16 slots, every
+        // submit reply must already say `running`.
+        assert_eq!(row.state, JobState::Running, "job {} not admitted", row.id);
+        assert_eq!(plan.ranks(), 2, "1x2 mesh expected for p=2");
+        assert!(plan.s >= 1 && plan.b >= 1);
+        assert!(plan.per_epoch_s.is_finite() && plan.per_epoch_s > 0.0);
+        ids.push(row.id);
+    }
+    let running = client
+        .status(None)
+        .unwrap()
+        .iter()
+        .filter(|r| r.state == JobState::Running)
+        .count();
+    assert!(running >= 4, "expected >= 4 concurrent sessions, saw {running}");
+
+    // Prompt cancel: each worker notices at the next bundle boundary.
+    for &id in &ids {
+        let ack = client.cancel(id).unwrap();
+        assert!(ack.contains("cancel"), "unexpected ack {ack:?}");
+    }
+    for &id in &ids {
+        let done = client.watch(id, 0, |_| {}).unwrap();
+        assert_eq!(done.state, JobState::Canceled);
+        assert!(done.bundles < 100_000, "canceled job ran to budget");
+    }
+
+    // Wire shutdown: the daemon drains and refuses new work.
+    assert_eq!(client.shutdown().unwrap(), "draining");
+    let err = client.submit(&spec).unwrap_err();
+    assert_eq!(err.code(), Some(ErrCode::ShuttingDown));
+    daemon.wait();
+}
+
+#[test]
+fn packing_queues_jobs_beyond_the_rank_budget() {
+    let mut cfg = DaemonConfig::local(spool_dir("packing"));
+    cfg.slots = 2; // exactly one 1x2 job fits
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    let (a, _) = client.submit(&quick_spec(100_000, 0)).unwrap();
+    assert_eq!(a.state, JobState::Running);
+    let (b, _) = client.submit(&quick_spec(100_000, 0)).unwrap();
+    assert_eq!(b.state, JobState::Queued);
+    assert_eq!(b.queue_pos, Some(0), "queued job must report its position");
+
+    // Canceling a queued job never involves a worker.
+    assert_eq!(client.cancel(b.id).unwrap(), "canceled");
+    let row = &client.status(Some(b.id)).unwrap()[0];
+    assert_eq!(row.state, JobState::Canceled);
+    // Cancel is idempotent on terminal jobs.
+    assert_eq!(client.cancel(b.id).unwrap(), "already canceled");
+
+    client.cancel(a.id).unwrap();
+    client.watch(a.id, 0, |_| {}).unwrap();
+    daemon.shutdown();
+    daemon.wait();
+}
+
+// ---------------------------------------------------------------------
+// Watch streams
+// ---------------------------------------------------------------------
+
+#[test]
+fn watch_replays_telemetry_and_honours_the_cursor() {
+    let daemon = Daemon::start(DaemonConfig::local(spool_dir("watch"))).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    let (row, _) = client.submit(&quick_spec(12, 0)).unwrap();
+    let mut frames = Vec::new();
+    let done = client.watch(row.id, 0, |f| frames.push(f.clone())).unwrap();
+
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, 12);
+    assert!(done.loss.is_some(), "final bundle always evals");
+    assert_eq!(frames.len(), 12, "one telem frame per bundle");
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.bundle, i + 1, "frames stream in bundle order");
+        assert_eq!(f.id, row.id);
+        // eval cadence: every 3rd bundle plus the budget boundary.
+        assert_eq!(f.loss.is_some(), (i + 1) % 3 == 0 || i + 1 == 12);
+        assert!(f.words >= 0.0);
+    }
+
+    // A second watch with a cursor replays only the tail.
+    let mut tail = Vec::new();
+    let done2 = client.watch(row.id, 6, |f| tail.push(f.bundle)).unwrap();
+    assert_eq!(done2.state, JobState::Done);
+    assert_eq!(tail, vec![7, 8, 9, 10, 11, 12]);
+
+    let err = client.watch(999, 0, |_| {}).unwrap_err();
+    assert_eq!(err.code(), Some(ErrCode::UnknownJob));
+
+    daemon.shutdown();
+    daemon.wait();
+}
+
+// ---------------------------------------------------------------------
+// Admission validation
+// ---------------------------------------------------------------------
+
+#[test]
+fn planner_rejects_bad_specs_with_typed_errors() {
+    let cfg = DaemonConfig::local(spool_dir("plan"));
+
+    let reject = |mutate: fn(&mut JobSpec), needle: &str| {
+        let mut spec = quick_spec(10, 0);
+        mutate(&mut spec);
+        let e = plan_job(&spec, &cfg).unwrap_err();
+        assert_eq!(e.code, ErrCode::BadValue, "{e}");
+        assert!(e.msg.contains(needle), "{e}");
+    };
+    reject(|s| s.scale = 0.0, "scale");
+    reject(|s| s.scale = 1.5, "scale");
+    reject(|s| s.p = 0, "p must");
+    reject(|s| s.bundles = 0, "bundles");
+    reject(|s| s.eval_every = 0, "eval_every");
+    reject(|s| s.eta = -0.1, "eta");
+    reject(|s| s.eta = f64::NAN, "eta");
+    reject(|s| s.tau = 0, "tau");
+    reject(|s| s.target = Some(f64::INFINITY), "target");
+    // A job whose mesh footprint exceeds the rank budget is refused at
+    // admission, not queued forever.
+    reject(|s| s.p = 64, "slots");
+
+    // The same rejection crosses the wire as a typed err frame.
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let mut spec = quick_spec(10, 0);
+    spec.scale = 0.0;
+    let err = client.submit(&spec).unwrap_err();
+    assert_eq!(err.code(), Some(ErrCode::BadValue));
+    let err = client.cancel(42).unwrap_err();
+    assert_eq!(err.code(), Some(ErrCode::UnknownJob));
+    daemon.shutdown();
+    daemon.wait();
+}
+
+// ---------------------------------------------------------------------
+// Kill-and-restart / drain-and-restart equivalence
+// ---------------------------------------------------------------------
+
+/// A hand-crafted record pinning `--overlap bundle` (the planner may or
+/// may not pick it; the equivalence claim must cover a checkpoint taken
+/// with a posted row reduce in flight, so the harness pins it). The
+/// daemon re-queues whatever the spool holds and runs the record's
+/// exact knobs.
+fn bundle_overlap_record(seed: u64, bundles: usize) -> JobRecord {
+    JobRecord {
+        id: 1,
+        spec: JobSpec {
+            dataset: DatasetSpec::Rcv1Like,
+            scale: 0.05,
+            p: 2,
+            bundles,
+            eval_every: 5,
+            eta: 0.1,
+            tau: 10,
+            seed,
+            target: None,
+            ckpt_every: 2,
+        },
+        plan: Plan {
+            mesh: Mesh::new(1, 2),
+            s: 3,
+            b: 4,
+            algo: Algorithm::RecursiveDoubling,
+            overlap: OverlapPolicy::Bundle,
+            gram: GramStrategy::Scatter,
+            source: SelectorSource::Analytic,
+            per_epoch_s: 1.0,
+        },
+        state: JobState::Queued,
+        bundles_done: 0,
+        last_loss: None,
+    }
+}
+
+/// Run `rec` to completion on a fresh daemon and return the final
+/// checkpoint lines — the uninterrupted reference trajectory.
+fn reference_run(tag: &str, rec: &JobRecord) -> Vec<String> {
+    let dir = spool_dir(tag);
+    let spool = Spool::open(&dir).unwrap();
+    spool.save(rec).unwrap();
+    let daemon = Daemon::start(DaemonConfig::local(&dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let done = client.watch(rec.id, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, rec.spec.bundles);
+    daemon.shutdown();
+    daemon.wait();
+    ckpt_lines(&spool.ckpt_path(rec.id))
+}
+
+#[test]
+fn kill_and_restart_resumes_bit_identically_under_bundle_overlap() {
+    const BUNDLES: usize = 600;
+    let rec = bundle_overlap_record(11, BUNDLES);
+    let reference = reference_run("kill_ref", &rec);
+
+    // Interrupted run: seed the same record, let it get partway, kill.
+    let dir = spool_dir("kill_run");
+    let spool = Spool::open(&dir).unwrap();
+    spool.save(&rec).unwrap();
+    let daemon = Daemon::start(DaemonConfig::local(&dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    wait_until("job past bundle 25", || {
+        client.status(Some(1)).map(|rows| rows[0].bundles >= 25).unwrap_or(false)
+    });
+    // Crash: workers abandon their sessions with NO spool writes — the
+    // spool holds the admission record and the periodic checkpoints,
+    // exactly what a SIGKILL would leave.
+    daemon.kill();
+    let after = spool.load(spool.record_path(1)).unwrap();
+    assert_eq!(after.state, JobState::Running, "a crash must not update the record");
+    assert!(after.bundles_done < BUNDLES, "job finished before the kill; raise BUNDLES");
+    assert!(spool.ckpt_path(1).exists(), "periodic checkpoint missing");
+
+    // Restart on the same spool: the record re-queues and the worker
+    // resumes from the checkpoint — with `overlap bundle`, that
+    // checkpoint can carry a posted row reduce still in flight.
+    let daemon = Daemon::start(DaemonConfig::local(&dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let done = client.watch(1, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, BUNDLES);
+    daemon.shutdown();
+    daemon.wait();
+
+    let resumed = ckpt_lines(&spool.ckpt_path(1));
+    assert!(!resumed.is_empty());
+    assert_eq!(
+        resumed, reference,
+        "kill-and-restart trajectory/books diverged from the uninterrupted run"
+    );
+}
+
+#[test]
+fn graceful_drain_resumes_bit_identically() {
+    const BUNDLES: usize = 600;
+    let rec = bundle_overlap_record(23, BUNDLES);
+    let reference = reference_run("drain_ref", &rec);
+
+    let dir = spool_dir("drain_run");
+    let spool = Spool::open(&dir).unwrap();
+    spool.save(&rec).unwrap();
+    let daemon = Daemon::start(DaemonConfig::local(&dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    wait_until("job past bundle 10", || {
+        client.status(Some(1)).map(|rows| rows[0].bundles >= 10).unwrap_or(false)
+    });
+    // Graceful drain: the worker checkpoints at the next bundle
+    // boundary (any bundle, not just the ckpt_every cadence) and the
+    // record is marked interrupted.
+    daemon.shutdown();
+    daemon.wait();
+    let after = spool.load(spool.record_path(1)).unwrap();
+    assert_eq!(after.state, JobState::Interrupted);
+
+    let daemon = Daemon::start(DaemonConfig::local(&dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let done = client.watch(1, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, BUNDLES);
+    daemon.shutdown();
+    daemon.wait();
+
+    let resumed = ckpt_lines(&spool.ckpt_path(1));
+    assert_eq!(
+        resumed, reference,
+        "drain-and-restart trajectory/books diverged from the uninterrupted run"
+    );
+    // The durable record agrees with the reference outcome too.
+    let final_rec = spool.load(spool.record_path(1)).unwrap();
+    assert_eq!(final_rec.state, JobState::Done);
+    assert_eq!(final_rec.bundles_done, BUNDLES);
+    assert!(final_rec.last_loss.is_some());
+}
+
+// ---------------------------------------------------------------------
+// Protocol robustness
+// ---------------------------------------------------------------------
+
+/// One raw request/response round trip, bypassing the typed client.
+fn raw_roundtrip(addr: &str, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.flush().unwrap();
+    let mut reply = String::new();
+    BufReader::new(stream).read_line(&mut reply).unwrap();
+    reply
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_wedge_the_daemon() {
+    let daemon = Daemon::start(DaemonConfig::local(spool_dir("robust"))).unwrap();
+    let addr = daemon.addr().to_string();
+    let client = Client::new(addr.clone());
+
+    let corpus: &[(&str, &str)] = &[
+        ("\n", "bad-frame"),                       // empty frame
+        ("garbage\n", "bad-frame"),                // wrong magic
+        ("ps1\n", "bad-frame"),                    // missing op
+        ("ps9\tstatus\tall\n", "bad-version"),     // newer protocol
+        ("ps1\tfrobnicate\tx\n", "unknown-op"),    // unknown op
+        ("ps1\tstatus\n", "bad-frame"),            // wrong arity
+        ("ps1\tstatus\tall\textra\n", "bad-frame"),
+        ("ps1\twatch\tnot-a-number\t0\n", "bad-value"),
+        ("ps1\tcancel\t999\n", "unknown-job"),
+        // submit with an unparseable scale cell
+        (
+            "ps1\tsubmit\trcv1\tbogus\t2\t10\t3\t0.1\t10\t1\t-\t0\n",
+            "bad-value",
+        ),
+        // submit with an unknown dataset
+        (
+            "ps1\tsubmit\tnosuch\t0.05\t2\t10\t3\t0.1\t10\t1\t-\t0\n",
+            "bad-value",
+        ),
+    ];
+    for (frame, code) in corpus {
+        let reply = raw_roundtrip(&addr, frame);
+        assert!(
+            reply.starts_with("ps1\terr\t"),
+            "frame {frame:?} should yield an err frame, got {reply:?}"
+        );
+        assert!(
+            reply.contains(&format!("\t{code}\t")) || reply.contains(&format!("err\t{code}")),
+            "frame {frame:?} should report {code}, got {reply:?}"
+        );
+    }
+
+    // A connection that opens and closes without a newline must not
+    // wedge anything.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"ps1\tstat").unwrap();
+        drop(s);
+    }
+    {
+        let s = TcpStream::connect(&addr).unwrap();
+        drop(s);
+    }
+
+    // After the whole corpus, the daemon still serves typed requests.
+    assert!(client.status(None).unwrap().is_empty());
+    daemon.shutdown();
+    daemon.wait();
+}
+
+// ---------------------------------------------------------------------
+// Service metrics
+// ---------------------------------------------------------------------
+
+#[test]
+fn scrape_file_carries_service_and_per_job_metrics() {
+    let dir = spool_dir("metrics");
+    let mut cfg = DaemonConfig::local(&dir);
+    let scrape = dir.join("serve.prom");
+    cfg.metrics_out = Some(scrape.clone());
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    let (row, _) = client.submit(&quick_spec(6, 0)).unwrap();
+    let done = client.watch(row.id, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Done);
+    daemon.shutdown();
+    daemon.wait();
+
+    let text = fs::read_to_string(&scrape).unwrap();
+    for needle in [
+        "hybridsgd_serve_jobs_submitted_total 1",
+        "hybridsgd_serve_jobs_done_total 1",
+        "hybridsgd_serve_jobs_canceled_total 0",
+        "hybridsgd_serve_jobs_failed_total 0",
+        "hybridsgd_serve_jobs_running 0",
+        "hybridsgd_serve_job_bundles{job=\"1\"} 6",
+    ] {
+        assert!(text.contains(needle), "scrape missing {needle:?}:\n{text}");
+    }
+    assert!(
+        text.contains("hybridsgd_serve_job_loss{job=\"1\"}"),
+        "per-job loss gauge missing:\n{text}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Client-side protocol errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn client_reports_transport_and_daemon_errors_distinctly() {
+    // Nothing is listening here: pure transport error.
+    let client = Client::new("127.0.0.1:1");
+    match client.status(None) {
+        Err(ClientError::Io(_)) => {}
+        other => panic!("expected an I/O error, got {other:?}"),
+    }
+}
