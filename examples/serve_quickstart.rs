@@ -68,6 +68,7 @@ fn main() {
         seed,
         target: None,
         ckpt_every: 8,
+        deadline: None,
     };
     let mut ids = Vec::new();
     for (dataset, seed) in [(DatasetSpec::Rcv1Like, 1), (DatasetSpec::SyntheticUniform, 2)] {
@@ -130,7 +131,8 @@ fn main() {
 
     // 6. Graceful drain; the scrape file survives with the final counts.
     println!("shutdown: {}", client.shutdown().expect("shutdown"));
-    daemon.wait();
+    let report = daemon.wait();
+    assert!(report.forced.is_empty(), "a graceful drain never forces jobs");
     let scrape = std::fs::read_to_string("serve_quickstart.prom").expect("scrape file");
     println!("serve_quickstart.prom (service families):");
     for line in scrape.lines().filter(|l| l.contains("serve_jobs") && !l.starts_with('#')) {

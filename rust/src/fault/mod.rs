@@ -1,0 +1,442 @@
+//! Seeded, deterministic fault injection for chaos-testing the serve
+//! stack.
+//!
+//! The paper's target machine is a Cray EX where stragglers and node
+//! failures are routine; the daemon's recovery machinery (retry with
+//! backoff, checkpoint-generation fallback, deadlines, drain
+//! escalation) is only trustworthy if it can be exercised *exactly the
+//! same way* on every run. This module is that lever: a [`FaultPlan`]
+//! is a typed list of faults pinned to (job, bundle) coordinates,
+//! serialized as a schema-guarded TSV like every other artifact in the
+//! repo, so a chaos run is as reproducible as a training trajectory.
+//!
+//! # Fault types
+//!
+//! * [`Fault::Straggle`] — one job's worker sleeps `millis` before
+//!   stepping bundle `k`: a slow rank / noisy neighbour. Recovery is
+//!   *detection*, not restart: the scheduler's per-job wall EWMA flags
+//!   the job `degraded`.
+//! * [`Fault::Crash`] — the job's worker thread panics before bundle
+//!   `k`. The scheduler catches it (`catch_unwind`), parks the job in
+//!   the `retrying` state, and relaunches it from the spool checkpoint
+//!   after a capped exponential backoff.
+//! * [`Fault::CorruptCkpt`] — the latest spool checkpoint generation is
+//!   bit-flipped or truncated right after it is written. The checksum
+//!   trailer (checkpoint schema v3) turns the corruption into a typed
+//!   resume error and recovery falls back to the previous generation.
+//! * [`Fault::DropConn`] — a `watch` stream's connection is severed
+//!   after `n` frames: a flaky network path. The typed client retries
+//!   with backoff and resumes from its bundle cursor.
+//!
+//! # Determinism contract
+//!
+//! Each fault fires **exactly once** (the [`FaultInjector`] records
+//! which entries have fired), at a coordinate the injected subsystem
+//! reaches deterministically. Combined with the daemon's bit-identical
+//! resume guarantee, this yields the headline chaos property: a run
+//! under any [`FaultPlan`] of crashes + corrupt checkpoints +
+//! stragglers finishes with trajectory and charged books bit-identical
+//! to the fault-free run (`rust/tests/serve_chaos.rs`).
+//!
+//! # TSV schema (v1)
+//!
+//! Header `kind  job  bundle  arg`; meta rows reuse the `kind`/`job`
+//! columns as key/value:
+//!
+//! ```text
+//! meta          schema  1        -
+//! meta          seed    <u64>    -
+//! meta          faults  <count>  -
+//! straggle      <job>   <bundle> <millis>
+//! crash         <job>   <bundle> -
+//! corrupt-ckpt  <job>   <bundle> <bit-flip|truncate>
+//! drop-conn     <job>   <frames> -
+//! ```
+//!
+//! Like the checkpoint and spool TSVs: newer schemas are rejected as
+//! "newer than this build", the declared count guards truncation, and
+//! every parse failure is a typed [`InvalidData`](std::io::ErrorKind::InvalidData)
+//! error — a malformed plan must never panic the daemon that loads it.
+
+use std::io;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Schema version written by [`FaultPlan::to_tsv`]; newer files are
+/// rejected by [`FaultPlan::from_tsv`].
+pub const FAULT_SCHEMA: u32 = 1;
+
+/// How [`corrupt_file`] damages a checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// XOR one byte in the body of the file (storage rot). Detected by
+    /// the checksum trailer.
+    BitFlip,
+    /// Cut the file to two thirds of its length (a torn write).
+    /// Detected by the checksum trailer or, for pre-v3 files, the
+    /// declared-count guards.
+    Truncate,
+}
+
+impl CorruptMode {
+    /// Wire/TSV name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorruptMode::BitFlip => "bit-flip",
+            CorruptMode::Truncate => "truncate",
+        }
+    }
+}
+
+crate::impl_enum_from_str!(CorruptMode, "corruption mode",
+    ("bit-flip" => CorruptMode::BitFlip),
+    ("truncate" => CorruptMode::Truncate),
+);
+
+/// One deterministic fault, pinned to a (job, coordinate) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Sleep `millis` before the job steps bundle `bundle`.
+    Straggle { job: u64, bundle: usize, millis: u64 },
+    /// Panic the job's worker thread before it steps bundle `bundle`.
+    Crash { job: u64, bundle: usize },
+    /// Corrupt the freshly written latest checkpoint generation after
+    /// the periodic write at bundle `bundle` (which must land on the
+    /// job's `ckpt_every` cadence, or the fault never fires).
+    CorruptCkpt { job: u64, bundle: usize, mode: CorruptMode },
+    /// Sever a `watch` stream for the job after `after_frames`
+    /// telemetry frames have been sent.
+    DropConn { job: u64, after_frames: usize },
+}
+
+impl Fault {
+    /// The metric label / TSV row kind for this fault.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Fault::Straggle { .. } => "straggle",
+            Fault::Crash { .. } => "crash",
+            Fault::CorruptCkpt { .. } => "corrupt-ckpt",
+            Fault::DropConn { .. } => "drop-conn",
+        }
+    }
+
+    /// The job the fault targets.
+    pub fn job(&self) -> u64 {
+        match *self {
+            Fault::Straggle { job, .. }
+            | Fault::Crash { job, .. }
+            | Fault::CorruptCkpt { job, .. }
+            | Fault::DropConn { job, .. } => job,
+        }
+    }
+}
+
+/// A reproducible chaos scenario: a seed (feeding [`corrupt_file`]'s
+/// byte selection) plus an ordered list of faults.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the deterministic parts of fault *execution* (which
+    /// byte a bit-flip lands on). Fault *placement* is explicit.
+    pub seed: u64,
+    /// The faults, in declaration order. Order matters only for
+    /// fire-once bookkeeping when two entries share a coordinate.
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// An empty plan under `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    /// Append a fault (builder-style).
+    pub fn with(mut self, fault: Fault) -> FaultPlan {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Serialize to the schema-v1 TSV (atomic single write).
+    pub fn to_tsv<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        let mut out = String::from("kind\tjob\tbundle\targ\n");
+        let mut row = |kind: &str, job: String, bundle: String, arg: &str| {
+            out.push_str(&format!("{kind}\t{job}\t{bundle}\t{arg}\n"));
+        };
+        row("meta", "schema".into(), FAULT_SCHEMA.to_string(), "-");
+        row("meta", "seed".into(), self.seed.to_string(), "-");
+        row("meta", "faults".into(), self.faults.len().to_string(), "-");
+        for f in &self.faults {
+            match *f {
+                Fault::Straggle { job, bundle, millis } => {
+                    row(f.kind(), job.to_string(), bundle.to_string(), &millis.to_string())
+                }
+                Fault::Crash { job, bundle } => {
+                    row(f.kind(), job.to_string(), bundle.to_string(), "-")
+                }
+                Fault::CorruptCkpt { job, bundle, mode } => {
+                    row(f.kind(), job.to_string(), bundle.to_string(), mode.name())
+                }
+                Fault::DropConn { job, after_frames } => {
+                    row(f.kind(), job.to_string(), after_frames.to_string(), "-")
+                }
+            }
+        }
+        std::fs::write(path, out)
+    }
+
+    /// Load a plan, rejecting malformed rows, truncated files, and
+    /// newer schemas with typed errors.
+    pub fn from_tsv<P: AsRef<Path>>(path: P) -> io::Result<FaultPlan> {
+        use std::io::{Error, ErrorKind};
+        let bad = |msg: String| Error::new(ErrorKind::InvalidData, msg);
+        let (header, rows) = crate::util::tsv::read_tsv(path)?;
+        if header != ["kind", "job", "bundle", "arg"] {
+            return Err(bad(format!("unexpected fault-plan header {header:?}")));
+        }
+        let parse_u = |s: &str| s.parse::<u64>().map_err(|_| bad(format!("bad int {s:?}")));
+        let mut plan = FaultPlan::default();
+        let mut declared: Option<usize> = None;
+        for raw in &rows {
+            let [kind, job, bundle, arg] = match raw.as_slice() {
+                [k, j, b, a] => [k.as_str(), j.as_str(), b.as_str(), a.as_str()],
+                _ => return Err(bad(format!("short fault-plan row {raw:?}"))),
+            };
+            let fault = match kind {
+                "meta" => {
+                    match job {
+                        "schema" => {
+                            let v = parse_u(bundle)?;
+                            if v > FAULT_SCHEMA as u64 {
+                                return Err(bad(format!(
+                                    "fault-plan schema {v} is newer than this build"
+                                )));
+                            }
+                        }
+                        "seed" => plan.seed = parse_u(bundle)?,
+                        "faults" => declared = Some(parse_u(bundle)? as usize),
+                        other => return Err(bad(format!("unknown fault-plan meta {other:?}"))),
+                    }
+                    continue;
+                }
+                "straggle" => Fault::Straggle {
+                    job: parse_u(job)?,
+                    bundle: parse_u(bundle)? as usize,
+                    millis: parse_u(arg)?,
+                },
+                "crash" => Fault::Crash { job: parse_u(job)?, bundle: parse_u(bundle)? as usize },
+                "corrupt-ckpt" => Fault::CorruptCkpt {
+                    job: parse_u(job)?,
+                    bundle: parse_u(bundle)? as usize,
+                    mode: arg.parse::<CorruptMode>().map_err(&bad)?,
+                },
+                "drop-conn" => Fault::DropConn {
+                    job: parse_u(job)?,
+                    after_frames: parse_u(bundle)? as usize,
+                },
+                other => return Err(bad(format!("unknown fault kind {other:?}"))),
+            };
+            plan.faults.push(fault);
+        }
+        match declared {
+            Some(n) if n != plan.faults.len() => Err(bad(format!(
+                "truncated fault plan: declared {n} faults, found {}",
+                plan.faults.len()
+            ))),
+            None => Err(bad("fault plan missing the faults count declaration".into())),
+            _ => Ok(plan),
+        }
+    }
+}
+
+/// Runtime bookkeeping over a [`FaultPlan`]: each query arm returns the
+/// matching fault *once* and marks it fired, so a retried job does not
+/// re-crash at the same bundle forever. Shared across scheduler threads
+/// (the fired-set sits behind a mutex).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    fired: Mutex<Vec<bool>>,
+}
+
+impl FaultInjector {
+    /// Wrap a plan for runtime queries.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let fired = Mutex::new(vec![false; plan.faults.len()]);
+        FaultInjector { plan, fired }
+    }
+
+    /// The empty injector: every query is a no-op.
+    pub fn none() -> FaultInjector {
+        FaultInjector::new(FaultPlan::default())
+    }
+
+    /// The plan's seed (feeds [`corrupt_file`]).
+    pub fn seed(&self) -> u64 {
+        self.plan.seed
+    }
+
+    fn fire<T>(&self, pick: impl Fn(&Fault) -> Option<T>) -> Option<T> {
+        let mut fired = self.fired.lock().unwrap();
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if fired[i] {
+                continue;
+            }
+            if let Some(t) = pick(f) {
+                fired[i] = true;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Straggler delay to inject before `job` steps `bundle`, if any.
+    pub fn straggle(&self, job: u64, bundle: usize) -> Option<Duration> {
+        self.fire(|f| match *f {
+            Fault::Straggle { job: j, bundle: k, millis } if j == job && k == bundle => {
+                Some(Duration::from_millis(millis))
+            }
+            _ => None,
+        })
+    }
+
+    /// Should `job`'s worker panic before stepping `bundle`?
+    pub fn crash(&self, job: u64, bundle: usize) -> bool {
+        self.fire(|f| match *f {
+            Fault::Crash { job: j, bundle: k } if j == job && k == bundle => Some(()),
+            _ => None,
+        })
+        .is_some()
+    }
+
+    /// Corruption to apply to the checkpoint `job` just wrote at
+    /// `bundle`, if any.
+    pub fn corrupt(&self, job: u64, bundle: usize) -> Option<CorruptMode> {
+        self.fire(|f| match *f {
+            Fault::CorruptCkpt { job: j, bundle: k, mode } if j == job && k == bundle => Some(mode),
+            _ => None,
+        })
+    }
+
+    /// Should the `watch` stream for `job` be severed, given that
+    /// `frames_streamed` frames have been sent so far?
+    pub fn drop_conn(&self, job: u64, frames_streamed: usize) -> bool {
+        self.fire(|f| match *f {
+            Fault::DropConn { job: j, after_frames }
+                if j == job && frames_streamed >= after_frames =>
+            {
+                Some(())
+            }
+            _ => None,
+        })
+        .is_some()
+    }
+}
+
+/// Damage a file in place, deterministically from `seed`: flip one byte
+/// in the middle third ([`CorruptMode::BitFlip`]) or cut the file to
+/// two thirds of its length ([`CorruptMode::Truncate`]). Empty files
+/// are left alone.
+pub fn corrupt_file<P: AsRef<Path>>(path: P, mode: CorruptMode, seed: u64) -> io::Result<()> {
+    let mut bytes = std::fs::read(&path)?;
+    if bytes.is_empty() {
+        return Ok(());
+    }
+    match mode {
+        CorruptMode::BitFlip => {
+            // Land inside the body (never the final trailer line) so the
+            // flip exercises content-hash detection, not trailer parsing.
+            let third = (bytes.len() / 3).max(1);
+            let pos = third + (seed as usize).wrapping_mul(0x9e37_79b9) % third;
+            bytes[pos.min(bytes.len() - 1)] ^= 0x01;
+        }
+        CorruptMode::Truncate => {
+            bytes.truncate(bytes.len() * 2 / 3);
+        }
+    }
+    std::fs::write(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fault_{}_{name}", std::process::id()))
+    }
+
+    fn sample() -> FaultPlan {
+        FaultPlan::new(7)
+            .with(Fault::Straggle { job: 2, bundle: 5, millis: 120 })
+            .with(Fault::Crash { job: 1, bundle: 9 })
+            .with(Fault::CorruptCkpt { job: 1, bundle: 8, mode: CorruptMode::BitFlip })
+            .with(Fault::DropConn { job: 1, after_frames: 3 })
+    }
+
+    #[test]
+    fn plan_round_trips_through_tsv() {
+        let p = tmp("roundtrip.tsv");
+        let plan = sample();
+        plan.to_tsv(&p).unwrap();
+        assert_eq!(FaultPlan::from_tsv(&p).unwrap(), plan);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn newer_schema_truncation_and_garbage_are_typed_errors() {
+        let p = tmp("guards.tsv");
+        sample().to_tsv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+
+        let newer = text.replace("meta\tschema\t1", "meta\tschema\t9");
+        std::fs::write(&p, newer).unwrap();
+        let err = FaultPlan::from_tsv(&p).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("newer than this build"), "{err}");
+
+        let cut: String =
+            text.lines().take(text.lines().count() - 1).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&p, cut).unwrap();
+        let err = FaultPlan::from_tsv(&p).unwrap_err();
+        assert!(err.to_string().contains("truncated fault plan"), "{err}");
+
+        std::fs::write(&p, text.replace("crash", "meteor-strike")).unwrap();
+        let err = FaultPlan::from_tsv(&p).unwrap_err();
+        assert!(err.to_string().contains("unknown fault kind"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn injector_fires_each_fault_exactly_once() {
+        let inj = FaultInjector::new(sample());
+        assert!(inj.straggle(2, 4).is_none());
+        assert_eq!(inj.straggle(2, 5), Some(Duration::from_millis(120)));
+        assert!(inj.straggle(2, 5).is_none(), "straggle must fire once");
+        assert!(inj.crash(1, 9));
+        assert!(!inj.crash(1, 9), "crash must fire once");
+        assert_eq!(inj.corrupt(1, 8), Some(CorruptMode::BitFlip));
+        assert!(inj.corrupt(1, 8).is_none());
+        assert!(!inj.drop_conn(1, 2), "not enough frames yet");
+        assert!(inj.drop_conn(1, 3));
+        assert!(!inj.drop_conn(1, 30), "drop fires once");
+    }
+
+    #[test]
+    fn corrupt_file_changes_content_deterministically() {
+        let p = tmp("corrupt.tsv");
+        let body = "kind\tkey\ta\nrow\t1\t2\nrow\t3\t4\nrow\t5\t6\n";
+        std::fs::write(&p, body).unwrap();
+        corrupt_file(&p, CorruptMode::BitFlip, 7).unwrap();
+        let flipped = std::fs::read(&p).unwrap();
+        assert_eq!(flipped.len(), body.len());
+        assert_ne!(flipped, body.as_bytes());
+
+        std::fs::write(&p, body).unwrap();
+        corrupt_file(&p, CorruptMode::BitFlip, 7).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), flipped, "same seed, same damage");
+
+        std::fs::write(&p, body).unwrap();
+        corrupt_file(&p, CorruptMode::Truncate, 7).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap().len(), body.len() * 2 / 3);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -53,6 +53,9 @@
 //!   Rust `f64` backend and an XLA/PJRT backend that executes the
 //!   AOT-compiled JAX+Pallas artifacts (Python never runs at request time).
 //! * **[`experiments`]** — one reproduction driver per paper table/figure.
+//! * **[`fault`]** — seeded, deterministic fault injection (stragglers,
+//!   worker crashes, checkpoint corruption, dropped connections) driving
+//!   the serve stack's self-healing recovery paths in chaos tests.
 
 pub mod collectives;
 pub mod comm;
@@ -60,6 +63,7 @@ pub mod compute;
 pub mod costmodel;
 pub mod data;
 pub mod experiments;
+pub mod fault;
 pub mod mesh;
 pub mod metrics;
 pub mod obs;

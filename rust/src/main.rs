@@ -19,8 +19,11 @@
 //! hybrid-sgd calibrate  [--quick] [--collectives] [--save FILE.tsv]  # Table 7 locally
 //! hybrid-sgd partition-stats --dataset url --pc 64
 //! hybrid-sgd datasets                              # registry listing
-//! hybrid-sgd serve      [--port 0] [--spool DIR] [--slots N] [--stop]
-//! hybrid-sgd submit     --addr HOST:PORT --dataset rcv1 --p 8 [--watch]
+//! hybrid-sgd serve      [--port 0] [--spool DIR] [--slots N] [--retry-max N]
+//!                       [--retry-backoff-ms MS] [--ckpt-keep N]
+//!                       [--drain-timeout SECS] [--fault-plan FILE.tsv] [--stop]
+//! hybrid-sgd submit     --addr HOST:PORT --dataset rcv1 --p 8 [--deadline SECS]
+//!                       [--timeout SECS] [--retries N] [--watch]
 //! hybrid-sgd status     --addr HOST:PORT [--job N]
 //! hybrid-sgd watch      --addr HOST:PORT --job N [--from K]
 //! hybrid-sgd cancel     --addr HOST:PORT --job N
@@ -107,8 +110,15 @@ mod cli_flags {
         ("metrics-out", true),
         ("s-max", true),
         ("b-max", true),
+        ("retry-max", true),
+        ("retry-backoff-ms", true),
+        ("ckpt-keep", true),
+        ("drain-timeout", true),
+        ("fault-plan", true),
         ("stop", false),
-        ("addr", true), // with --stop: which daemon to drain
+        ("addr", true),    // with --stop: which daemon to drain
+        ("timeout", true), // with --stop: client socket deadline
+        ("retries", true), // with --stop: client transport retries
     ];
     pub const SUBMIT: &[FlagSpec] = &[
         ("addr", true),
@@ -122,11 +132,17 @@ mod cli_flags {
         ("seed", true),
         ("target", true),
         ("ckpt-every", true),
+        ("deadline", true),
+        ("timeout", true),
+        ("retries", true),
         ("watch", false),
     ];
-    pub const STATUS: &[FlagSpec] = &[("addr", true), ("job", true)];
-    pub const WATCH: &[FlagSpec] = &[("addr", true), ("job", true), ("from", true)];
-    pub const CANCEL: &[FlagSpec] = &[("addr", true), ("job", true)];
+    pub const STATUS: &[FlagSpec] =
+        &[("addr", true), ("job", true), ("timeout", true), ("retries", true)];
+    pub const WATCH: &[FlagSpec] =
+        &[("addr", true), ("job", true), ("from", true), ("timeout", true), ("retries", true)];
+    pub const CANCEL: &[FlagSpec] =
+        &[("addr", true), ("job", true), ("timeout", true), ("retries", true)];
 }
 
 fn main() {
@@ -242,12 +258,22 @@ fn usage() {
            printed as `serving on HOST:PORT`) --spool DIR --slots N (rank\n  \
            capacity for footprint packing) --profile FILE.tsv --selector\n  \
            analytic|measured --backend sim|threads --metrics-out FILE.prom\n  \
-           --s-max N --b-max N (admission-planner grid) --stop [--addr] (drain)\n\
+           --s-max N --b-max N (admission-planner grid)\n  \
+           --retry-max N --retry-backoff-ms MS (panic-retry budget/ladder)\n  \
+           --ckpt-keep N (checkpoint generations per job; resume falls back\n  \
+           past a corrupted newest generation) --drain-timeout SECS (escalate\n  \
+           a stuck graceful drain to a forced interrupt, typed `drain-timeout`\n  \
+           note) --fault-plan FILE.tsv (seeded chaos plan, see fault module)\n  \
+           --stop [--addr] (drain)\n\
          client flags (submit/status/watch/cancel): --addr HOST:PORT --job N\n  \
-           --from K (watch replay cursor) --ckpt-every N (durable checkpoint\n  \
-           cadence, bundles) plus the train-style job axes on submit:\n  \
-           --dataset --scale --p --bundles --eval-every --eta --tau --seed\n  \
-           --target (the planner chooses s/b/mesh/algo/overlap/gram)"
+           --from K (watch replay cursor) --timeout SECS (connect/read/write\n  \
+           socket deadline) --retries N (transport-retry budget; watch also\n  \
+           reconnects mid-stream and resumes from its cursor) --ckpt-every N\n  \
+           (durable checkpoint cadence, bundles) plus the train-style job\n  \
+           axes on submit: --dataset --scale --p --bundles --eval-every --eta\n  \
+           --tau --seed --target --deadline SECS (wall-clock budget, typed\n  \
+           `deadline-exceeded` when blown; the planner chooses\n  \
+           s/b/mesh/algo/overlap/gram)"
     );
 }
 
@@ -700,6 +726,19 @@ fn serve_addr(flags: &Flags) -> String {
     flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7465".into())
 }
 
+/// Build a wire client from the shared `--addr`/`--timeout`/`--retries`
+/// client flags.
+fn serve_client(flags: &Flags) -> serve::Client {
+    let mut client = serve::Client::new(serve_addr(flags));
+    if let Some(secs) = flags.get("timeout").and_then(|v| v.parse::<f64>().ok()) {
+        client = client.timeout(std::time::Duration::from_secs_f64(secs.max(0.001)));
+    }
+    if let Some(n) = flags.get("retries").and_then(|v| v.parse::<u32>().ok()) {
+        client = client.retries(n);
+    }
+    client
+}
+
 fn serve_job_id(flags: &Flags) -> Result<serve::JobId, String> {
     let v = flags.get("job").ok_or("--job is required")?;
     v.parse().map_err(|_| format!("--job: bad job id `{v}`"))
@@ -708,8 +747,10 @@ fn serve_job_id(flags: &Flags) -> Result<serve::JobId, String> {
 fn print_job_row(row: &serve::JobRow) {
     let queue = row.queue_pos.map(|q| format!(" queue_pos={q}")).unwrap_or_default();
     let loss = row.loss.map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into());
+    let retries =
+        if row.retries > 0 { format!(" retries={}", row.retries) } else { String::new() };
     println!(
-        "job {} {}{queue} bundles={} loss={loss} health={}",
+        "job {} {}{queue} bundles={} loss={loss} health={}{retries}",
         row.id,
         row.state.name(),
         row.bundles,
@@ -745,8 +786,9 @@ fn print_telem(t: &serve::TelemFrame) {
 
 fn print_done(d: &serve::DoneRow) {
     let loss = d.loss.map(|l| format!("{l:.5}")).unwrap_or_else(|| "-".into());
+    let note = if d.note.is_empty() { String::new() } else { format!(" ({})", d.note) };
     println!(
-        "job {} {}: {} bundles, final loss {loss}, sim wall {:.4} s",
+        "job {} {}{note}: {} bundles, final loss {loss}, sim wall {:.4} s",
         d.id,
         d.state.name(),
         d.bundles,
@@ -767,7 +809,7 @@ fn cmd_serve(flags: &Flags) -> i32 {
         };
     }
     if flags.contains_key("stop") {
-        let client = serve::Client::new(serve_addr(flags));
+        let client = serve_client(flags);
         return match client.shutdown() {
             Ok(msg) => {
                 println!("daemon: {msg}");
@@ -791,6 +833,19 @@ fn cmd_serve(flags: &Flags) -> i32 {
         },
         None => CalibProfile::perlmutter(),
     };
+    let faults = match flags.get("fault-plan") {
+        Some(path) => match hybrid_sgd::fault::FaultPlan::from_tsv(path) {
+            Ok(plan) => {
+                println!("fault plan loaded: seed {} with {} faults", plan.seed, plan.faults.len());
+                Some(plan)
+            }
+            Err(e) => {
+                eprintln!("failed to load fault plan {path}: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     let cfg = serve::DaemonConfig {
         addr: format!("{host}:{port}"),
         spool: flags.get("spool").cloned().unwrap_or_else(|| "serve-spool".into()).into(),
@@ -801,6 +856,14 @@ fn cmd_serve(flags: &Flags) -> i32 {
         metrics_out: flags.get("metrics-out").map(|p| p.into()),
         s_max: get(flags, "s-max", 8),
         b_max: get(flags, "b-max", 64),
+        retry_max: get(flags, "retry-max", 2),
+        retry_backoff_ms: get(flags, "retry-backoff-ms", 250),
+        ckpt_keep: get(flags, "ckpt-keep", 2),
+        drain_timeout: flags
+            .get("drain-timeout")
+            .and_then(|v| v.parse::<f64>().ok())
+            .map(|s| std::time::Duration::from_secs_f64(s.max(0.0))),
+        faults,
     };
     let spool = cfg.spool.clone();
     let slots = cfg.slots;
@@ -809,8 +872,16 @@ fn cmd_serve(flags: &Flags) -> i32 {
             // The harness/CI greps this line for the ephemeral port.
             println!("serving on {} (spool {}, slots {slots})", daemon.addr(), spool.display());
             println!("stop with `hybrid-sgd serve --stop --addr {}`", daemon.addr());
-            daemon.wait();
-            println!("drained; unfinished jobs are checkpointed in the spool");
+            let report = daemon.wait();
+            // "drained" stays grep-able for the harness either way.
+            match report.note() {
+                Some(note) => println!(
+                    "drained ({note}: jobs {:?} forced; they resume from their last checkpoint); \
+                     unfinished jobs are checkpointed in the spool",
+                    report.forced
+                ),
+                None => println!("drained; unfinished jobs are checkpointed in the spool"),
+            }
             0
         }
         Err(e) => {
@@ -832,8 +903,9 @@ fn cmd_submit(flags: &Flags) -> i32 {
         seed: get(flags, "seed", 0x5EEDu64),
         target: flags.get("target").and_then(|t| t.parse().ok()),
         ckpt_every: get(flags, "ckpt-every", 8),
+        deadline: flags.get("deadline").and_then(|d| d.parse().ok()),
     };
-    let client = serve::Client::new(serve_addr(flags));
+    let client = serve_client(flags);
     let (row, plan) = match client.submit(&spec) {
         Ok(ok) => ok,
         Err(e) => {
@@ -869,7 +941,7 @@ fn cmd_status(flags: &Flags) -> i32 {
         },
         None => None,
     };
-    let client = serve::Client::new(serve_addr(flags));
+    let client = serve_client(flags);
     match client.status(job) {
         Ok(rows) => {
             for row in &rows {
@@ -894,7 +966,7 @@ fn cmd_watch(flags: &Flags) -> i32 {
         }
     };
     let from: usize = get(flags, "from", 0);
-    let client = serve::Client::new(serve_addr(flags));
+    let client = serve_client(flags);
     match client.watch(job, from, print_telem) {
         Ok(done) => {
             print_done(&done);
@@ -915,7 +987,7 @@ fn cmd_cancel(flags: &Flags) -> i32 {
             return 2;
         }
     };
-    let client = serve::Client::new(serve_addr(flags));
+    let client = serve_client(flags);
     match client.cancel(job) {
         Ok(msg) => {
             println!("daemon: {msg}");

@@ -263,18 +263,41 @@ pub struct DriftEntry {
     pub flagged: bool,
 }
 
+/// A seen-aware EWMA cell — the primitive under every drift series.
+///
+/// Public because it is useful beyond fidelity tracking: the serve
+/// scheduler feeds it per-bundle *host* wall seconds to spot straggling
+/// workers (a bundle taking far longer than the job's own moving
+/// average), the same way the `wall_*` gauges spot a lying cost model.
 #[derive(Clone, Copy, Debug, Default)]
-struct DriftGauge {
+pub struct DriftGauge {
     ewma: f64,
     last: f64,
     seen: bool,
 }
 
 impl DriftGauge {
-    fn observe(&mut self, lambda: f64, err: f64) {
+    /// Fold one observation in: `ewma ← λ·x + (1−λ)·ewma`, seeded with
+    /// the first observation directly.
+    pub fn observe(&mut self, lambda: f64, err: f64) {
         self.last = err;
         self.ewma = if self.seen { lambda * err + (1.0 - lambda) * self.ewma } else { err };
         self.seen = true;
+    }
+
+    /// Current EWMA (0 until the first observation).
+    pub fn ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Most recent raw observation.
+    pub fn last(&self) -> f64 {
+        self.last
+    }
+
+    /// Whether any observation has been folded in yet.
+    pub fn seen(&self) -> bool {
+        self.seen
     }
 }
 

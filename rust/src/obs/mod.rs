@@ -23,7 +23,17 @@
 //!    running-session gauges, and per-job `serve_job_bundles` /
 //!    `serve_job_loss` / `serve_job_drift` gauges labelled `job="<id>"`
 //!    — the fleet view of questions 1–3 (`serve --metrics-out FILE` on
-//!    the CLI, gated in CI by `tools/check_metrics.py`).
+//!    the CLI, gated in CI by `tools/check_metrics.py`). The
+//!    fault-recovery machinery ([`crate::fault`]) reports through the
+//!    same registry: `serve_faults_injected{kind=...}` counts each
+//!    seeded fault as it fires, `serve_job_retries` /
+//!    `serve_jobs_retrying` track the crash-retry lifecycle,
+//!    `serve_ckpt_fallbacks` counts resumes that had to fall back past a
+//!    corrupted checkpoint generation, `serve_jobs_deadline_exceeded` /
+//!    `serve_drain_forced` count the two timeout escalations, and
+//!    `serve_job_degraded{job=...}` flags jobs whose bundle wall drifts
+//!    straggler-like above their own EWMA (chaos CI asserts these match
+//!    the injected plan exactly).
 //!
 //! # The pieces
 //!
@@ -80,7 +90,9 @@ pub mod metrics;
 pub mod summary;
 
 pub use export::{sink_to, JsonlSink, PerfettoSink, TraceFormat};
-pub use health::{DriftEntry, DriftKey, FidelityMonitor, HealthMonitor, HealthOpts, HealthStatus};
+pub use health::{
+    DriftEntry, DriftGauge, DriftKey, FidelityMonitor, HealthMonitor, HealthOpts, HealthStatus,
+};
 pub use metrics::{
     MetricKind, MetricRegistry, MetricsObserver, MetricsSink, MetricsTsvSink, PrometheusSink,
     METRIC_PREFIX,

@@ -5,19 +5,53 @@
 //! request/response (plus the `watch` stream), so there is no session
 //! state to manage. The CLI subcommands, the acceptance harness, and
 //! `examples/serve_quickstart.rs` all talk to the daemon through this.
+//!
+//! # Timeouts and retry
+//!
+//! The client never blocks forever: connects go through
+//! [`TcpStream::connect_timeout`] and reads/writes carry socket
+//! deadlines (one knob, [`Client::timeout`], default
+//! [`DEFAULT_TIMEOUT`]). Expired deadlines surface as the typed
+//! [`ClientError::Timeout`]; other socket failures stay
+//! [`ClientError::Io`] — so callers can tell "daemon is slow" from
+//! "daemon is gone" without string-matching.
+//!
+//! Transport failures in the *connect* phase are retried with capped
+//! exponential backoff ([`Client::retries`], default
+//! [`DEFAULT_RETRIES`]) — safe for every operation because no request
+//! has been sent yet. The `watch` stream additionally survives a drop
+//! *mid-stream*: it reconnects (same budget) and resumes from the last
+//! bundle it saw, so a flaky path costs duplicate-free frames, not a
+//! dead stream. Daemon-side `err` frames are never retried — a typed
+//! refusal is an answer, not an outage.
 
 use super::protocol::{DoneRow, JobId, JobRow, JobSpec, Plan, Request, Response, TelemFrame};
 use super::protocol::{ErrCode, WireError};
 use std::fmt;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-/// Client-side failure: the transport broke, the daemon answered with a
-/// typed `err` frame, or the daemon sent something unparseable.
+/// Socket deadline applied to connect, read, and write unless
+/// [`Client::timeout`] overrides it.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Transport-retry budget unless [`Client::retries`] overrides it.
+pub const DEFAULT_RETRIES: u32 = 2;
+
+/// Base backoff before the first transport retry (doubles per attempt,
+/// capped at one second).
+const RETRY_BACKOFF: Duration = Duration::from_millis(200);
+
+/// Client-side failure: the transport broke, a socket deadline expired,
+/// the daemon answered with a typed `err` frame, or the daemon sent
+/// something unparseable.
 #[derive(Debug)]
 pub enum ClientError {
-    /// Socket-level failure (connect, read, write, early close).
+    /// Socket-level failure (connect refused, reset, early close).
     Io(io::Error),
+    /// A connect/read/write deadline expired ([`Client::timeout`]).
+    Timeout(io::Error),
     /// The daemon answered with an `err` frame.
     Daemon(WireError),
     /// The daemon's frame did not parse, or was the wrong kind for the
@@ -29,6 +63,7 @@ impl fmt::Display for ClientError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             ClientError::Io(e) => write!(f, "serve i/o: {e}"),
+            ClientError::Timeout(e) => write!(f, "serve timeout: {e}"),
             ClientError::Daemon(e) => write!(f, "daemon: {e}"),
             ClientError::Protocol(m) => write!(f, "protocol: {m}"),
         }
@@ -38,8 +73,15 @@ impl fmt::Display for ClientError {
 impl std::error::Error for ClientError {}
 
 impl From<io::Error> for ClientError {
+    /// Classify socket errors into the typed taxonomy: expired
+    /// deadlines (`TimedOut` on connect, `WouldBlock`/`TimedOut` on
+    /// reads, platform-dependent) become [`ClientError::Timeout`],
+    /// everything else stays [`ClientError::Io`].
     fn from(e: io::Error) -> ClientError {
-        ClientError::Io(e)
+        match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => ClientError::Timeout(e),
+            _ => ClientError::Io(e),
+        }
     }
 }
 
@@ -58,30 +100,74 @@ impl ClientError {
             _ => None,
         }
     }
+
+    /// Whether the failure is transport-level (socket error or expired
+    /// deadline) — the class the retry machinery is allowed to act on.
+    pub fn is_transport(&self) -> bool {
+        matches!(self, ClientError::Io(_) | ClientError::Timeout(_))
+    }
 }
 
-/// A daemon address; cheap to clone, connects per operation.
+/// A daemon address plus transport policy; cheap to clone, connects per
+/// operation.
 #[derive(Clone, Debug)]
 pub struct Client {
     addr: String,
+    timeout: Duration,
+    retry_max: u32,
 }
 
 impl Client {
-    /// Point a client at `host:port` (no connection is made yet).
+    /// Point a client at `host:port` (no connection is made yet), with
+    /// [`DEFAULT_TIMEOUT`] / [`DEFAULT_RETRIES`].
     pub fn new(addr: impl Into<String>) -> Client {
-        Client { addr: addr.into() }
+        Client { addr: addr.into(), timeout: DEFAULT_TIMEOUT, retry_max: DEFAULT_RETRIES }
     }
 
-    fn connect(&self) -> Result<(BufReader<TcpStream>, TcpStream), ClientError> {
+    /// Override the connect/read/write deadline (builder-style).
+    pub fn timeout(mut self, timeout: Duration) -> Client {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Override the transport-retry budget (builder-style; 0 disables
+    /// retries).
+    pub fn retries(mut self, retries: u32) -> Client {
+        self.retry_max = retries;
+        self
+    }
+
+    /// One connect attempt: resolve, dial under the deadline, arm the
+    /// read/write deadlines.
+    fn connect_once(&self) -> Result<(BufReader<TcpStream>, TcpStream), ClientError> {
         let addr = self
             .addr
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| ClientError::Protocol(format!("address `{}` resolves to nothing", self.addr)))?;
-        let stream = TcpStream::connect(addr)?;
+        let stream = TcpStream::connect_timeout(&addr, self.timeout)?;
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok((reader, stream))
+    }
+
+    /// Connect with the transport-retry budget. Safe for every
+    /// operation: nothing has been sent yet, so a retry cannot
+    /// duplicate a request.
+    fn connect(&self) -> Result<(BufReader<TcpStream>, TcpStream), ClientError> {
+        let mut attempt = 0;
+        loop {
+            match self.connect_once() {
+                Ok(conn) => return Ok(conn),
+                Err(e) if e.is_transport() && attempt < self.retry_max => {
+                    std::thread::sleep(backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     fn send(stream: &mut TcpStream, req: &Request) -> Result<(), ClientError> {
@@ -94,7 +180,10 @@ impl Client {
     fn read_frame(reader: &mut BufReader<TcpStream>) -> Result<Response, ClientError> {
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 {
-            return Err(ClientError::Protocol("daemon closed the connection mid-reply".into()));
+            return Err(ClientError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "daemon closed the connection mid-reply",
+            )));
         }
         match Response::parse(&line)? {
             Response::Err(e) => Err(ClientError::Daemon(e)),
@@ -137,17 +226,49 @@ impl Client {
     /// Follow a job's telemetry from bundle index `from` (0 = from the
     /// start), invoking `on_frame` per bundle until the terminating
     /// `done` frame arrives.
+    ///
+    /// A transport failure mid-stream (dropped connection, expired read
+    /// deadline) consumes one unit of the retry budget, reconnects
+    /// after backoff, and resumes from the highest bundle already
+    /// delivered — the daemon's replay cursor makes the resumed stream
+    /// pick up where the dead one stopped.
     pub fn watch(
         &self,
         job: JobId,
         from: usize,
         mut on_frame: impl FnMut(&TelemFrame),
     ) -> Result<DoneRow, ClientError> {
+        let mut cursor = from;
+        let mut attempt = 0;
+        loop {
+            match self.watch_once(job, cursor, &mut cursor, &mut on_frame) {
+                Ok(done) => return Ok(done),
+                Err(e) if e.is_transport() && attempt < self.retry_max => {
+                    std::thread::sleep(backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One watch connection; advances `cursor` past every frame
+    /// delivered so a retry never replays them.
+    fn watch_once(
+        &self,
+        job: JobId,
+        from: usize,
+        cursor: &mut usize,
+        on_frame: &mut impl FnMut(&TelemFrame),
+    ) -> Result<DoneRow, ClientError> {
         let (mut reader, mut stream) = self.connect()?;
         Self::send(&mut stream, &Request::Watch { job, from })?;
         loop {
             match Self::read_frame(&mut reader)? {
-                Response::Telem(t) => on_frame(&t),
+                Response::Telem(t) => {
+                    *cursor = (*cursor).max(t.bundle);
+                    on_frame(&t);
+                }
                 Response::Done(d) => return Ok(d),
                 other => {
                     return Err(ClientError::Protocol(format!(
@@ -176,4 +297,10 @@ impl Client {
             other => Err(ClientError::Protocol(format!("expected ok frame, got {other:?}"))),
         }
     }
+}
+
+/// Capped exponential backoff: 200ms, 400ms, 800ms, 1s, 1s, ...
+fn backoff(attempt: u32) -> Duration {
+    let exp = RETRY_BACKOFF.saturating_mul(1u32 << attempt.min(4));
+    exp.min(Duration::from_secs(1))
 }

@@ -5,25 +5,28 @@
 //! same engine into a long-lived service: a daemon that admits many
 //! jobs, prices each one through the cost model before it runs, packs
 //! admitted jobs onto a fixed rank budget, checkpoints them durably,
-//! and streams per-bundle telemetry to clients over TCP. It is
-//! deliberately std-only, like the rest of the crate.
+//! streams per-bundle telemetry to clients over TCP, and heals itself
+//! through worker crashes, corrupted checkpoints, stragglers, and
+//! dropped connections. It is deliberately std-only, like the rest of
+//! the crate.
 //!
 //! # Wire protocol
 //!
 //! One frame = one `\n`-terminated line of tab-separated cells, first
-//! cell the magic+version tag `ps1` ([`WIRE_MAGIC`]). Free-text cells
+//! cell the magic+version tag `ps2` ([`WIRE_MAGIC`]). Free-text cells
 //! have tabs/newlines squashed on render, so framing can never break.
 //! Parsing is schema-guarded like the checkpoint/CalibProfile TSV
 //! loaders: wrong arity, bad field, or unknown op yields a typed
 //! [`WireError`] `err` frame — never a panic, never a wedged
-//! connection — and a `ps<N>` tag with `N > 1` is rejected as
-//! `bad-version` ("newer than this build").
+//! connection — and a `ps<N>` tag with `N ≠ 2` is rejected as
+//! `bad-version`, naming which side is stale ("newer than this build"
+//! for `N > 2`, "older than this build" for `N < 2`).
 //!
 //! Requests (client → daemon):
 //!
-//! | frame | cells after `ps1` | reply |
+//! | frame | cells after `ps2` | reply |
 //! |---|---|---|
-//! | `submit` | `submit dataset scale p bundles eval_every eta tau seed target ckpt_every` | `job` + `plan`, or `err` |
+//! | `submit` | `submit dataset scale p bundles eval_every eta tau seed target ckpt_every deadline` | `job` + `plan`, or `err` |
 //! | `status` | `status <id\|all>` | `job`× then `ok <count>` |
 //! | `watch` | `watch <id> <from>` | `telem`× then `done` |
 //! | `cancel` | `cancel <id>` | `ok` |
@@ -31,12 +34,12 @@
 //!
 //! Responses (daemon → client):
 //!
-//! | frame | cells after `ps1` |
+//! | frame | cells after `ps2` |
 //! |---|---|
-//! | `job` | `job id state queue_pos bundles loss health` |
+//! | `job` | `job id state queue_pos bundles loss health retries` |
 //! | `plan` | `plan id mesh s b algo overlap gram source ranks per_epoch_s` |
 //! | `telem` | `telem id bundle sim_wall loss health words hidden_frac fedavg` |
-//! | `done` | `done id state bundles loss sim_wall` |
+//! | `done` | `done id state bundles loss sim_wall note` |
 //! | `ok` | `ok message` |
 //! | `err` | `err code message` |
 //!
@@ -65,16 +68,39 @@
 //! Every job's spec+plan+state lives in a spool record
 //! (`job-NNNNNN.tsv`, schema-guarded, written atomically via temp file
 //! + rename), and every `ckpt_every` bundles the worker writes the
-//! session checkpoint next to it (`job-NNNNNN.ckpt.tsv`, same atomic
-//! dance). Datasets are **regenerated, never spooled**: generation is
-//! deterministic in (profile, scale, seed), so spec + checkpoint fully
-//! determine the trajectory *and* the charged books. A graceful drain
-//! checkpoints every running job and marks it `interrupted`; a crash
-//! leaves the periodic checkpoints. Either way, a restarted daemon
-//! re-queues unfinished records and resumes each one bit-identically —
-//! the acceptance harness (`tests/serve_daemon.rs`) proves this by
-//! byte-comparing final checkpoints against an uninterrupted reference
-//! run.
+//! session checkpoint next to it — rotated through
+//! [`DaemonConfig::ckpt_keep`] generations (`job-NNNNNN.ckpt.tsv` is
+//! newest, `job-NNNNNN.ckpt.<g>.tsv` older), each carrying the session
+//! checkpoint's FNV-1a checksum trailer. Datasets are **regenerated,
+//! never spooled**: generation is deterministic in (profile, scale,
+//! seed), so spec + checkpoint fully determine the trajectory *and* the
+//! charged books. A graceful drain checkpoints every running job and
+//! marks it `interrupted`; a crash leaves the periodic checkpoints.
+//! Either way, a restarted daemon re-queues unfinished records and
+//! resumes each one bit-identically — the acceptance harness
+//! (`tests/serve_daemon.rs`) proves this by byte-comparing final
+//! checkpoints against an uninterrupted reference run.
+//!
+//! # Failure modes and recovery
+//!
+//! Every failure path is typed, counted, and recovered without operator
+//! intervention; the seeded [`FaultPlan`](crate::fault::FaultPlan)
+//! drives each row deterministically in `tests/serve_chaos.rs` and the
+//! CI chaos job:
+//!
+//! | fault | detection | recovery | metric |
+//! |---|---|---|---|
+//! | worker panic / crash | `catch_unwind` at the job boundary | typed `retrying` state, capped exponential backoff, re-queue up to [`DaemonConfig::retry_max`], then `failed` with the panic note | `serve_job_retries_total`, `serve_jobs_retrying` |
+//! | corrupted newest checkpoint | FNV-1a checksum trailer mismatch (or truncation / stale schema) on resume | fall back generation by generation, fresh build as last resort — resumed trajectory stays bit-identical | `serve_ckpt_fallbacks_total` |
+//! | straggling job | per-bundle host wall vs. the job's own EWMA ([`DriftGauge`](crate::obs::DriftGauge)) | flagged `degraded` in status rows; scheduling is unchanged (observation-only) | `serve_job_degraded{job=...}` |
+//! | runaway job | wall-clock [`JobSpec::deadline`] checked at bundle boundaries | stopped with the typed `deadline-exceeded` note | `serve_jobs_deadline_exceeded_total` |
+//! | wedged drain | [`DaemonConfig::drain_timeout`] expiry in [`Daemon::wait`] | running jobs forcibly `interrupted` with the `drain-timeout` note ([`DrainReport`]); they resume from their last checkpoint on restart | `serve_drain_forced_total` |
+//! | dropped/hung connection | client connect/read/write deadlines ([`Client::timeout`]) | typed `Timeout`/`Io` taxonomy, transport retry with backoff; `watch` reconnects and resumes from its bundle cursor | `serve_faults_injected{kind="drop-conn"}` |
+//!
+//! The headline property: under any seeded plan of crashes +
+//! corrupt-latest-checkpoint + stragglers, every admitted job completes
+//! with trajectory **and** charged books bit-identical to the
+//! fault-free run.
 //!
 //! # Observability
 //!
@@ -83,8 +109,9 @@
 //! log (served to `watch` clients, resumable via the `from` cursor) and
 //! into a daemon-level
 //! [`MetricRegistry`](crate::obs::MetricRegistry) — job lifecycle
-//! counters plus per-job bundle/loss/drift gauges — scraped through the
-//! existing [`PrometheusSink`](crate::obs::PrometheusSink). See the
+//! counters, per-job bundle/loss/drift gauges, and the fault/recovery
+//! counters in the table above — scraped through the existing
+//! [`PrometheusSink`](crate::obs::PrometheusSink). See the
 //! [obs module docs](crate::obs) for where these land in the
 //! "three questions" map.
 
@@ -93,10 +120,10 @@ mod protocol;
 mod scheduler;
 mod spool;
 
-pub use client::{Client, ClientError};
+pub use client::{Client, ClientError, DEFAULT_RETRIES, DEFAULT_TIMEOUT};
 pub use protocol::{
     DoneRow, ErrCode, JobId, JobRow, JobSpec, JobState, Plan, Request, Response, TelemFrame,
     WireError, WIRE_MAGIC,
 };
-pub use scheduler::{plan_job, Daemon, DaemonConfig};
+pub use scheduler::{plan_job, Daemon, DaemonConfig, DrainReport};
 pub use spool::{JobRecord, Spool, SPOOL_SCHEMA};

@@ -1,12 +1,15 @@
 //! The `pallas-serve` wire protocol: versioned, line-oriented TSV frames.
 //!
 //! Every frame is one `\n`-terminated line of tab-separated cells whose
-//! first cell is the magic+version tag [`WIRE_MAGIC`] (`ps1`). Parsing is
-//! schema-guarded exactly like the checkpoint/CalibProfile TSV loaders:
-//! a frame with the wrong cell count, an unparseable field, or an
-//! unknown op yields a typed [`WireError`] — never a panic — and a
-//! `ps<N>` tag with `N > 1` is rejected as written by a newer build
-//! (mirroring the checkpoint `meta schema` guard). See the
+//! first cell is the magic+version tag [`WIRE_MAGIC`] (`ps2` — v2 added
+//! the submit `deadline` cell, the job-row `retries` cell, and the done
+//! `note` cell). Parsing is schema-guarded exactly like the
+//! checkpoint/CalibProfile TSV loaders: a frame with the wrong cell
+//! count, an unparseable field, or an unknown op yields a typed
+//! [`WireError`] — never a panic — and a `ps<N>` tag other than the
+//! built version is rejected as `bad-version` in both directions
+//! (newer build *and* stale client; the cell counts changed, so there
+//! is no compatible subset to limp along on). See the
 //! [module docs](super) for the full frame table.
 
 use crate::collectives::{Algorithm, SelectorSource};
@@ -18,7 +21,10 @@ use crate::util::parse::unknown_value;
 use std::fmt;
 
 /// Magic + protocol version prefixed to every frame in both directions.
-pub const WIRE_MAGIC: &str = "ps1";
+pub const WIRE_MAGIC: &str = "ps2";
+
+/// The version number inside [`WIRE_MAGIC`] (for the mismatch guard).
+const WIRE_VERSION: u64 = 2;
 
 /// Wire job identifier (assigned by the daemon, dense from 1).
 pub type JobId = u64;
@@ -29,7 +35,8 @@ pub type JobId = u64;
 pub enum ErrCode {
     /// Not a parseable frame: wrong magic, wrong arity, empty line.
     BadFrame,
-    /// Valid shape but a `ps<N>` tag newer than this build understands.
+    /// Valid shape but a `ps<N>` tag from a different protocol version
+    /// (newer build or stale client).
     BadVersion,
     /// Unknown request op.
     UnknownOp,
@@ -69,7 +76,7 @@ crate::impl_enum_from_str!(ErrCode, "error code",
 );
 
 /// A typed protocol error: what went wrong ([`ErrCode`]) plus prose.
-/// Travels as `ps1 err <code> <message>`.
+/// Travels as `ps2 err <code> <message>`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct WireError {
     /// Failure class.
@@ -119,6 +126,11 @@ pub struct JobSpec {
     pub target: Option<f64>,
     /// Durable-checkpoint cadence in bundles (0 = only at shutdown).
     pub ckpt_every: usize,
+    /// Wall-clock deadline in host seconds (`-` on the wire when
+    /// absent), measured from first admission and enforced at bundle
+    /// boundaries: an overrun job fails typed (`deadline-exceeded`)
+    /// instead of holding its ranks forever.
+    pub deadline: Option<f64>,
 }
 
 /// The planner's knob set for an admitted job, echoed to the client on
@@ -158,6 +170,9 @@ pub enum JobState {
     Queued,
     /// A worker thread is stepping it.
     Running,
+    /// Worker crashed; the job is parked for its backoff window and
+    /// will be re-queued (retry budget permitting).
+    Retrying,
     /// Finished (budget exhausted or target reached).
     Done,
     /// Canceled by a client.
@@ -174,6 +189,7 @@ impl JobState {
         match self {
             JobState::Queued => "queued",
             JobState::Running => "running",
+            JobState::Retrying => "retrying",
             JobState::Done => "done",
             JobState::Canceled => "canceled",
             JobState::Interrupted => "interrupted",
@@ -191,6 +207,7 @@ impl JobState {
 crate::impl_enum_from_str!(JobState, "job state",
     ("queued" => JobState::Queued),
     ("running" => JobState::Running),
+    ("retrying" => JobState::Retrying),
     ("done" => JobState::Done),
     ("canceled" => JobState::Canceled),
     ("interrupted" => JobState::Interrupted),
@@ -210,8 +227,11 @@ pub struct JobRow {
     pub bundles: usize,
     /// Latest evaluated loss, if any eval has run.
     pub loss: Option<f64>,
-    /// Convergence-monitor verdict name.
+    /// Convergence-monitor verdict name (or `degraded` when the
+    /// scheduler's straggler detector has flagged the job).
     pub health: String,
+    /// Crash-recovery attempts consumed so far.
+    pub retries: usize,
 }
 
 /// One bundle's streamed telemetry (`telem` frame), built from the
@@ -251,6 +271,10 @@ pub struct DoneRow {
     pub loss: Option<f64>,
     /// Final simulated wall.
     pub sim_wall: f64,
+    /// Typed annotation on the terminal state (`deadline-exceeded`,
+    /// `drain-timeout`, a panic summary, ...); empty when there is
+    /// nothing to report (`-` on the wire).
+    pub note: String,
 }
 
 /// Client → daemon frames.
@@ -316,7 +340,7 @@ impl Request {
     pub fn render(&self) -> String {
         match self {
             Request::Submit(s) => format!(
-                "{WIRE_MAGIC}\tsubmit\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                "{WIRE_MAGIC}\tsubmit\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 s.dataset.cli_name(),
                 s.scale,
                 s.p,
@@ -327,6 +351,7 @@ impl Request {
                 s.seed,
                 fmt_opt_f64(s.target),
                 s.ckpt_every,
+                fmt_opt_f64(s.deadline),
             ),
             Request::Status(job) => format!(
                 "{WIRE_MAGIC}\tstatus\t{}",
@@ -344,13 +369,14 @@ impl Response {
     pub fn render(&self) -> String {
         match self {
             Response::Job(j) => format!(
-                "{WIRE_MAGIC}\tjob\t{}\t{}\t{}\t{}\t{}\t{}",
+                "{WIRE_MAGIC}\tjob\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
                 j.id,
                 j.state.name(),
                 j.queue_pos.map(|q| q.to_string()).unwrap_or_else(|| "-".into()),
                 j.bundles,
                 fmt_opt_f64(j.loss),
                 clean(&j.health),
+                j.retries,
             ),
             Response::Plan { id, plan } => format!(
                 "{WIRE_MAGIC}\tplan\t{id}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
@@ -376,12 +402,13 @@ impl Response {
                 u8::from(t.fedavg),
             ),
             Response::Done(d) => format!(
-                "{WIRE_MAGIC}\tdone\t{}\t{}\t{}\t{}\t{}",
+                "{WIRE_MAGIC}\tdone\t{}\t{}\t{}\t{}\t{}\t{}",
                 d.id,
                 d.state.name(),
                 d.bundles,
                 fmt_opt_f64(d.loss),
                 d.sim_wall,
+                if d.note.is_empty() { "-".to_string() } else { clean(&d.note) },
             ),
             Response::Ok(msg) => format!("{WIRE_MAGIC}\tok\t{}", clean(msg)),
             Response::Err(e) => {
@@ -395,18 +422,26 @@ impl Response {
 // Parsing
 // ---------------------------------------------------------------------
 
-/// Magic guard: accept `ps1`, classify `ps<N>` with `N > 1` as a newer
-/// build's frame (the checkpoint loaders' `meta schema` guard, applied
-/// to the wire), everything else as not-a-frame.
+/// Magic guard: accept `ps2`; classify every other `ps<N>` (`N ≥ 1`) as
+/// a version mismatch — a newer build's frame *and* a stale client's
+/// frame both get a typed `bad-version` (the checkpoint loaders'
+/// `meta schema` guard, applied to the wire in both directions);
+/// everything else is not-a-frame.
 fn check_magic(tag: &str) -> Result<(), WireError> {
     if tag == WIRE_MAGIC {
         return Ok(());
     }
     if let Some(v) = tag.strip_prefix("ps").and_then(|v| v.parse::<u64>().ok()) {
-        if v > 1 {
+        if v > WIRE_VERSION {
             return Err(WireError::new(
                 ErrCode::BadVersion,
                 format!("frame version ps{v} is newer than this build ({WIRE_MAGIC})"),
+            ));
+        }
+        if v >= 1 {
+            return Err(WireError::new(
+                ErrCode::BadVersion,
+                format!("frame version ps{v} is older than this build ({WIRE_MAGIC})"),
             ));
         }
     }
@@ -468,7 +503,7 @@ impl Request {
         }
         match cells[1] {
             "submit" => {
-                need(&cells, 12, "submit")?;
+                need(&cells, 13, "submit")?;
                 Ok(Request::Submit(JobSpec {
                     dataset: knob(cells[2], "dataset")?,
                     scale: num(cells[3], "scale")?,
@@ -480,6 +515,7 @@ impl Request {
                     seed: num(cells[9], "seed")?,
                     target: opt_f64(cells[10], "target")?,
                     ckpt_every: num(cells[11], "ckpt_every")?,
+                    deadline: opt_f64(cells[12], "deadline")?,
                 }))
             }
             "status" => {
@@ -525,7 +561,7 @@ impl Response {
         }
         match cells[1] {
             "job" => {
-                need(&cells, 8, "job")?;
+                need(&cells, 9, "job")?;
                 Ok(Response::Job(JobRow {
                     id: num(cells[2], "job id")?,
                     state: knob(cells[3], "state")?,
@@ -537,6 +573,7 @@ impl Response {
                     bundles: num(cells[5], "bundles")?,
                     loss: opt_f64(cells[6], "loss")?,
                     health: cells[7].to_string(),
+                    retries: num(cells[8], "retries")?,
                 }))
             }
             "plan" => {
@@ -574,13 +611,14 @@ impl Response {
                 }))
             }
             "done" => {
-                need(&cells, 7, "done")?;
+                need(&cells, 8, "done")?;
                 Ok(Response::Done(DoneRow {
                     id: num(cells[2], "job id")?,
                     state: knob(cells[3], "state")?,
                     bundles: num(cells[4], "bundles")?,
                     loss: opt_f64(cells[5], "loss")?,
                     sim_wall: num(cells[6], "sim_wall")?,
+                    note: if cells[7] == "-" { String::new() } else { cells[7].to_string() },
                 }))
             }
             "ok" => {
@@ -615,6 +653,7 @@ mod tests {
             seed: 0x5EED,
             target: Some(0.625),
             ckpt_every: 7,
+            deadline: Some(120.0),
         }
     }
 
@@ -622,7 +661,7 @@ mod tests {
     fn request_frames_round_trip() {
         let reqs = [
             Request::Submit(spec()),
-            Request::Submit(JobSpec { target: None, ..spec() }),
+            Request::Submit(JobSpec { target: None, deadline: None, ..spec() }),
             Request::Status(None),
             Request::Status(Some(12)),
             Request::Watch { job: 3, from: 17 },
@@ -631,7 +670,7 @@ mod tests {
         ];
         for r in reqs {
             let line = r.render();
-            assert!(line.starts_with("ps1\t"), "{line}");
+            assert!(line.starts_with("ps2\t"), "{line}");
             assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
         }
     }
@@ -656,6 +695,16 @@ mod tests {
                 bundles: 0,
                 loss: None,
                 health: "initializing".into(),
+                retries: 0,
+            }),
+            Response::Job(JobRow {
+                id: 3,
+                state: JobState::Retrying,
+                queue_pos: None,
+                bundles: 12,
+                loss: Some(0.61),
+                health: "degraded".into(),
+                retries: 2,
             }),
             Response::Plan { id: 2, plan },
             Response::Telem(TelemFrame {
@@ -674,6 +723,15 @@ mod tests {
                 bundles: 40,
                 loss: Some(0.5),
                 sim_wall: 1.5,
+                note: String::new(),
+            }),
+            Response::Done(DoneRow {
+                id: 4,
+                state: JobState::Failed,
+                bundles: 17,
+                loss: None,
+                sim_wall: 0.75,
+                note: "deadline-exceeded".into(),
             }),
             Response::Ok("canceled".into()),
             Response::Err(WireError::new(ErrCode::UnknownJob, "no job 99")),
@@ -715,20 +773,21 @@ mod tests {
         let cases: &[(&str, ErrCode)] = &[
             ("", ErrCode::BadFrame),
             ("hello world", ErrCode::BadFrame),
-            ("ps1", ErrCode::BadFrame),
-            ("ps2\tstatus\tall", ErrCode::BadVersion),
+            ("ps2", ErrCode::BadFrame),
+            ("ps1\tstatus\tall", ErrCode::BadVersion), // stale client
+            ("ps3\tstatus\tall", ErrCode::BadVersion), // newer build
             ("ps99\tsubmit", ErrCode::BadVersion),
             ("ps0\tstatus\tall", ErrCode::BadFrame),
-            ("ps1\tfrobnicate\t1", ErrCode::UnknownOp),
-            ("ps1\tstatus", ErrCode::BadFrame),            // truncated
-            ("ps1\tstatus\tall\textra", ErrCode::BadFrame), // too wide
-            ("ps1\tcancel\tnot-a-number", ErrCode::BadValue),
-            ("ps1\tsubmit\trcv1\t0.1", ErrCode::BadFrame), // truncated submit
+            ("ps2\tfrobnicate\t1", ErrCode::UnknownOp),
+            ("ps2\tstatus", ErrCode::BadFrame),            // truncated
+            ("ps2\tstatus\tall\textra", ErrCode::BadFrame), // too wide
+            ("ps2\tcancel\tnot-a-number", ErrCode::BadValue),
+            ("ps2\tsubmit\trcv1\t0.1", ErrCode::BadFrame), // truncated submit
             (
-                "ps1\tsubmit\tnosuch\t0.1\t8\t40\t5\t0.1\t10\t1\t-\t0",
+                "ps2\tsubmit\tnosuch\t0.1\t8\t40\t5\t0.1\t10\t1\t-\t0\t-",
                 ErrCode::BadValue,
             ),
-            ("ps1\twatch\t1\t-3", ErrCode::BadValue),
+            ("ps2\twatch\t1\t-3", ErrCode::BadValue),
         ];
         for (line, code) in cases {
             match Request::parse(line) {

@@ -16,10 +16,25 @@
 //!   (same seed the CLI uses), which is what makes restart resume
 //!   bit-identical without spooling data.
 //! - **Durability**: every `ckpt_every` bundles the worker writes a
-//!   session checkpoint into the spool (temp file + rename). A graceful
-//!   drain checkpoints every running job and marks it `interrupted`; a
-//!   restarted daemon re-queues interrupted/running/queued records and
-//!   resumes from the latest checkpoint.
+//!   session checkpoint into the spool (temp file + generation-rotating
+//!   rename, [`Spool::commit_ckpt`]). A graceful drain checkpoints every
+//!   running job and marks it `interrupted`; a restarted daemon
+//!   re-queues interrupted/running/queued/retrying records and resumes
+//!   from the newest checkpoint generation that verifies.
+//! - **Self-healing**: worker panics are caught at the job boundary
+//!   (`catch_unwind`) and turn into a typed `retrying` lifecycle with
+//!   capped exponential backoff and a per-job retry budget
+//!   ([`DaemonConfig::retry_max`]); a corrupted newest checkpoint
+//!   (checksum-trailer mismatch) falls back to the previous generation;
+//!   wall-clock job deadlines ([`JobSpec::deadline`]) are enforced at
+//!   bundle boundaries; per-bundle host walls feed a [`DriftGauge`] so a
+//!   straggling job surfaces as `degraded` health. Every recovery step
+//!   is counted in the metrics registry, and a seeded
+//!   [`FaultPlan`](crate::fault::FaultPlan) can drive all of these paths
+//!   deterministically for chaos tests. The contract under any plan of
+//!   crashes + corrupt checkpoints + stragglers: every admitted job
+//!   still completes with trajectory and charged books bit-identical to
+//!   the fault-free run.
 //! - **Observability**: a wire-backed [`Observer`] streams per-bundle
 //!   telemetry into the job's in-memory log (served to `watch` clients)
 //!   and updates the daemon-level [`MetricRegistry`], exposed through
@@ -35,6 +50,8 @@ use crate::comm::ExecBackend;
 use crate::compute::NativeBackend;
 use crate::costmodel::model::DataShape;
 use crate::costmodel::{optima, topology, CalibProfile, HybridConfig};
+use crate::fault::{FaultInjector, FaultPlan};
+use crate::obs::health::DriftGauge;
 use crate::obs::{MetricRegistry, MetricsSink, PrometheusSink, METRIC_PREFIX};
 use crate::partition::Partitioner;
 use crate::solvers::{BundleReport, Observer, ObserverCtx, SessionBuilder};
@@ -42,16 +59,27 @@ use crate::sparse::GramStrategy;
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// The dataset seed the CLI's `train` uses; the daemon regenerates job
 /// datasets with the same constant so `serve` trajectories line up with
 /// `train --dataset ... --seed ...` runs of the same knobs.
 const DATASET_SEED: u64 = 0x2D5D;
+
+/// A bundle whose host wall exceeds this floor *and*
+/// [`STRAGGLE_RATIO`] × the job's own EWMA marks the job `degraded`.
+/// The floor keeps ordinary scheduler jitter (tens of milliseconds on a
+/// loaded CI box) from tripping the ratio test on micro-bundles.
+const STRAGGLE_FLOOR_S: f64 = 0.25;
+
+/// Ratio of one bundle's host wall to the job's EWMA wall above which
+/// the bundle counts as straggling (given the floor).
+const STRAGGLE_RATIO: f64 = 8.0;
 
 /// How a daemon is stood up.
 #[derive(Clone, Debug)]
@@ -78,6 +106,23 @@ pub struct DaemonConfig {
     pub s_max: usize,
     /// Planner grid cap on `b`.
     pub b_max: usize,
+    /// Per-job retry budget: a job whose worker panics is re-queued up
+    /// to this many times before it is marked `failed`.
+    pub retry_max: usize,
+    /// Base backoff before the first retry; doubles per retry, capped
+    /// at 16× (so the default 250ms ladder is 250, 500, 1000, ...).
+    pub retry_backoff_ms: u64,
+    /// Checkpoint generations kept per job (newest is `.ckpt.tsv`,
+    /// older ones `.ckpt.<g>.tsv`). Resume falls back generation by
+    /// generation when the newest fails its checksum.
+    pub ckpt_keep: usize,
+    /// Graceful-drain budget for [`Daemon::wait`]: once a drain has
+    /// been requested, running jobs that have not checkpointed out
+    /// within this window are forcibly interrupted with the typed
+    /// `drain-timeout` note. `None` waits forever.
+    pub drain_timeout: Option<Duration>,
+    /// Seeded fault plan for chaos testing; `None` injects nothing.
+    pub faults: Option<FaultPlan>,
 }
 
 impl DaemonConfig {
@@ -94,6 +139,31 @@ impl DaemonConfig {
             metrics_out: None,
             s_max: 8,
             b_max: 64,
+            retry_max: 2,
+            retry_backoff_ms: 250,
+            ckpt_keep: 2,
+            drain_timeout: None,
+            faults: None,
+        }
+    }
+}
+
+/// What [`Daemon::wait`] observed while draining.
+#[derive(Debug, Default)]
+pub struct DrainReport {
+    /// Jobs that blew through [`DaemonConfig::drain_timeout`] and were
+    /// forcibly interrupted (marked `interrupted` with the
+    /// `drain-timeout` note) instead of checkpointing out gracefully.
+    pub forced: Vec<JobId>,
+}
+
+impl DrainReport {
+    /// The typed note attached to forced jobs, when any were forced.
+    pub fn note(&self) -> Option<&'static str> {
+        if self.forced.is_empty() {
+            None
+        } else {
+            Some("drain-timeout")
         }
     }
 }
@@ -124,6 +194,11 @@ pub fn plan_job(spec: &JobSpec, cfg: &DaemonConfig) -> Result<Plan, WireError> {
     if let Some(t) = spec.target {
         if !t.is_finite() {
             return Err(bad(format!("target {t} must be finite")));
+        }
+    }
+    if let Some(d) = spec.deadline {
+        if !(d.is_finite() && d > 0.0) {
+            return Err(bad(format!("deadline {d} must be finite and positive")));
         }
     }
 
@@ -170,6 +245,13 @@ struct JobEntry {
     telem: Vec<TelemFrame>,
     cancel: Arc<AtomicBool>,
     sim_wall: f64,
+    /// Host instant of the job's first admission in this daemon
+    /// process; the anchor [`JobSpec::deadline`] is measured from.
+    started: Option<Instant>,
+    /// Straggler flag: one bundle's host wall blew past the job's own
+    /// EWMA. Sticky for the life of the entry; surfaces as `degraded`
+    /// health in status rows.
+    degraded: bool,
 }
 
 /// Aggregate service metrics behind the existing registry/sink pair.
@@ -190,14 +272,32 @@ impl MetricsHub {
             ("serve_jobs_done", "Jobs that finished their budget or target."),
             ("serve_jobs_canceled", "Jobs canceled by clients."),
             ("serve_jobs_failed", "Jobs whose worker failed."),
+            ("serve_job_retries", "Worker panics answered with a re-queue."),
+            ("serve_ckpt_fallbacks", "Resumes that skipped a checkpoint generation that failed verification."),
+            ("serve_jobs_deadline_exceeded", "Jobs stopped at a bundle boundary by their wall-clock deadline."),
+            ("serve_drain_forced", "Jobs forcibly interrupted by the drain timeout."),
         ] {
             let fam = reg.counter(&format!("{METRIC_PREFIX}{name}"), help);
             let id = reg.series(fam, &[]);
             reg.add(id, 0.0);
         }
+        {
+            // One zeroed series per fault kind, so a chaos run's scrape
+            // can be diffed against its plan even for kinds that never
+            // fired.
+            let fam = reg.counter(
+                &format!("{METRIC_PREFIX}serve_faults_injected"),
+                "Seeded faults fired by the injection plan, by kind.",
+            );
+            for kind in ["crash", "straggle", "corrupt-ckpt", "drop-conn"] {
+                let id = reg.series(fam, &[("kind", kind)]);
+                reg.add(id, 0.0);
+            }
+        }
         for (name, help) in [
             ("serve_jobs_queued", "Jobs waiting for free rank slots."),
             ("serve_jobs_running", "Jobs currently stepping on a worker."),
+            ("serve_jobs_retrying", "Jobs waiting out a post-panic backoff."),
         ] {
             let fam = reg.gauge(&format!("{METRIC_PREFIX}{name}"), help);
             let id = reg.series(fam, &[]);
@@ -207,6 +307,7 @@ impl MetricsHub {
             ("serve_job_bundles", "Bundles completed, per job."),
             ("serve_job_loss", "Latest evaluated loss, per job."),
             ("serve_job_drift", "Max model-drift EWMA across gauges, per job."),
+            ("serve_job_degraded", "1 once a job's bundle wall straggles past its own EWMA."),
         ] {
             reg.gauge(&format!("{METRIC_PREFIX}{name}"), help);
         }
@@ -218,8 +319,12 @@ impl MetricsHub {
     }
 
     fn bump(&mut self, counter: &str) {
+        self.bump_labeled(counter, &[]);
+    }
+
+    fn bump_labeled(&mut self, counter: &str, labels: &[(&str, &str)]) {
         let fam = self.reg.counter(&format!("{METRIC_PREFIX}{counter}"), "");
-        let id = self.reg.series(fam, &[]);
+        let id = self.reg.series(fam, labels);
         self.reg.add(id, 1.0);
     }
 
@@ -257,8 +362,10 @@ impl State {
     fn refresh_gauges(&mut self) {
         let queued = self.jobs.values().filter(|j| j.rec.state == JobState::Queued).count();
         let running = self.jobs.values().filter(|j| j.rec.state == JobState::Running).count();
+        let retrying = self.jobs.values().filter(|j| j.rec.state == JobState::Retrying).count();
         self.metrics.set_gauge("serve_jobs_queued", &[], queued as f64);
         self.metrics.set_gauge("serve_jobs_running", &[], running as f64);
+        self.metrics.set_gauge("serve_jobs_retrying", &[], retrying as f64);
     }
 
     fn job_row(&self, id: JobId, entry: &JobEntry) -> JobRow {
@@ -268,11 +375,16 @@ impl State {
             queue_pos: self.queue.iter().position(|&q| q == id),
             bundles: entry.rec.bundles_done,
             loss: entry.rec.last_loss,
-            health: entry
-                .telem
-                .last()
-                .map(|t| t.health.clone())
-                .unwrap_or_else(|| "initializing".into()),
+            retries: entry.rec.retries,
+            health: if entry.degraded {
+                "degraded".into()
+            } else {
+                entry
+                    .telem
+                    .last()
+                    .map(|t| t.health.clone())
+                    .unwrap_or_else(|| "initializing".into())
+            },
         }
     }
 
@@ -283,6 +395,7 @@ impl State {
             bundles: entry.rec.bundles_done,
             loss: entry.rec.last_loss,
             sim_wall: entry.sim_wall,
+            note: entry.rec.note.clone().unwrap_or_default(),
         }
     }
 }
@@ -290,6 +403,7 @@ impl State {
 struct Shared {
     cfg: DaemonConfig,
     spool: Spool,
+    faults: FaultInjector,
     state: Mutex<State>,
     cv: Condvar,
     /// Set by [`Daemon::wait`]/[`Daemon::kill`] once the daemon is fully
@@ -304,6 +418,13 @@ impl Shared {
     /// Unblock the accept loop with a throwaway self-connection.
     fn wake_accept(&self, addr: SocketAddr) {
         let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+    }
+
+    /// Count one fired fault in the aggregate registry.
+    fn count_fault(&self, kind: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.bump_labeled("serve_faults_injected", &[("kind", kind)]);
+        st.metrics.flush();
     }
 }
 
@@ -340,7 +461,7 @@ impl Daemon {
             state.next_id = state.next_id.max(rec.id + 1);
             let requeue = matches!(
                 rec.state,
-                JobState::Queued | JobState::Running | JobState::Interrupted
+                JobState::Queued | JobState::Running | JobState::Retrying | JobState::Interrupted
             );
             if requeue {
                 rec.state = JobState::Queued;
@@ -355,6 +476,8 @@ impl Daemon {
                     telem: Vec::new(),
                     cancel: Arc::new(AtomicBool::new(false)),
                     sim_wall: 0.0,
+                    started: None,
+                    degraded: false,
                 },
             );
         }
@@ -363,9 +486,14 @@ impl Daemon {
 
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
+        let faults = match &cfg.faults {
+            Some(plan) => FaultInjector::new(plan.clone()),
+            None => FaultInjector::none(),
+        };
         let shared = Arc::new(Shared {
             cfg,
             spool,
+            faults,
             state: Mutex::new(state),
             cv: Condvar::new(),
             accept_done: AtomicBool::new(false),
@@ -412,8 +540,17 @@ impl Daemon {
     /// frame) completes: every running job has checkpointed out, all
     /// worker threads joined.
     ///
+    /// When [`DaemonConfig::drain_timeout`] is set and running jobs are
+    /// still stepping once it expires, the drain escalates: stuck jobs
+    /// are marked `interrupted` with the typed `drain-timeout` note,
+    /// workers are told to abandon their sessions, and the report lists
+    /// the forced jobs. (A job forced this way resumes from its last
+    /// durable checkpoint on restart — exactly the crash contract.)
+    ///
     /// [`shutdown`]: Daemon::shutdown
-    pub fn wait(mut self) {
+    pub fn wait(mut self) -> DrainReport {
+        let mut report = DrainReport::default();
+        let mut deadline: Option<Instant> = None;
         let workers = {
             let mut st = self.shared.state.lock().unwrap();
             loop {
@@ -421,12 +558,64 @@ impl Daemon {
                 if (st.draining || st.killed) && !busy {
                     break;
                 }
-                st = self.shared.cv.wait(st).unwrap();
+                if st.draining && deadline.is_none() {
+                    deadline = self.shared.cfg.drain_timeout.map(|d| Instant::now() + d);
+                }
+                if let Some(dl) = deadline {
+                    if Instant::now() >= dl && busy {
+                        // Escalate: the graceful window is spent. Flip
+                        // the kill flag so workers abandon their
+                        // sessions (periodic checkpoints stay — same
+                        // durability as a crash) and mark the stuck
+                        // jobs with the typed note.
+                        st.killed = true;
+                        let stuck: Vec<JobId> = st
+                            .jobs
+                            .iter()
+                            .filter(|(_, e)| e.rec.state == JobState::Running)
+                            .map(|(&id, _)| id)
+                            .collect();
+                        for id in stuck {
+                            let entry = st.jobs.get_mut(&id).expect("running job exists");
+                            entry.rec.state = JobState::Interrupted;
+                            entry.rec.note = Some("drain-timeout".into());
+                            if let Err(e) = self.shared.spool.save(&entry.rec) {
+                                eprintln!("serve: spool write for job {id} failed: {e}");
+                            }
+                            st.metrics.bump("serve_drain_forced");
+                            report.forced.push(id);
+                        }
+                        st.refresh_gauges();
+                        st.metrics.flush();
+                        break;
+                    }
+                }
+                let (next, _timed_out) =
+                    self.shared.cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+                st = next;
             }
             std::mem::take(&mut st.workers)
         };
-        for w in workers {
-            let _ = w.join();
+        self.shared.cv.notify_all();
+        if report.forced.is_empty() {
+            for w in workers {
+                let _ = w.join();
+            }
+        } else {
+            // Forced drain: workers notice the kill flag at the next
+            // bundle boundary (or mid-straggle). A worker wedged inside
+            // one step cannot be interrupted from safe code — poll
+            // briefly, join the ones that made it, detach the rest so
+            // the daemon itself never wedges on a wedged job.
+            let poll_until = Instant::now() + Duration::from_secs(2);
+            while workers.iter().any(|w| !w.is_finished()) && Instant::now() < poll_until {
+                thread::sleep(Duration::from_millis(20));
+            }
+            for w in workers {
+                if w.is_finished() {
+                    let _ = w.join();
+                }
+            }
         }
         self.shared.accept_done.store(true, Ordering::Release);
         self.shared.wake_accept(self.addr);
@@ -435,6 +624,7 @@ impl Daemon {
         }
         let mut st = self.shared.state.lock().unwrap();
         st.metrics.flush();
+        report
     }
 
     /// Simulate a crash: workers abandon their sessions at the next
@@ -477,6 +667,12 @@ fn pump(shared: &Arc<Shared>, st: &mut State) {
         st.free_ranks -= ranks;
         let entry = st.jobs.get_mut(&id).expect("queued job exists");
         entry.rec.state = JobState::Running;
+        // The deadline clock starts at *first* admission and keeps
+        // ticking across retries — a panic must not buy a job more
+        // wall-clock than it was admitted with.
+        if entry.started.is_none() {
+            entry.started = Some(Instant::now());
+        }
         if let Err(e) = shared.spool.save(&entry.rec) {
             eprintln!("serve: spool write for job {id} failed: {e}");
         }
@@ -492,6 +688,7 @@ enum Outcome {
     Finished,
     Canceled,
     Drained,
+    DeadlineExceeded,
     Failed(io::Error),
 }
 
@@ -538,14 +735,132 @@ impl Observer for WireObserver {
     }
 }
 
-/// The per-job worker: build (or resume) the session, step it to a
-/// terminal state, checkpointing on the durable cadence and reacting to
-/// cancel/drain/kill flags at bundle boundaries.
+/// The panic boundary around one worker. A panic anywhere inside the
+/// stepping loop (injected or real) is caught here and answered with
+/// the typed retry lifecycle instead of a silently dead job.
 fn run_job(shared: &Arc<Shared>, id: JobId) {
-    let (spec, plan, cancel) = {
+    match catch_unwind(AssertUnwindSafe(|| run_job_inner(shared, id))) {
+        // Killed daemon: vanish without spool writes (crash contract).
+        Ok(None) => {}
+        Ok(Some((outcome, bundles, sim_wall))) => {
+            finish_job(shared, id, outcome, bundles, sim_wall)
+        }
+        Err(payload) => handle_panic(shared, id, &panic_text(payload.as_ref())),
+    }
+}
+
+/// Best-effort text of a panic payload (the two shapes `panic!` emits).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// A worker panicked: consume one unit of the retry budget and re-queue
+/// after a capped exponential backoff, or mark the job failed once the
+/// budget is spent. The panic note travels in the job record (and the
+/// `done` frame) either way.
+fn handle_panic(shared: &Arc<Shared>, id: JobId, msg: &String) {
+    let mut st = shared.state.lock().unwrap();
+    let ranks = st.jobs[&id].rec.plan.ranks();
+    st.free_ranks += ranks;
+    let retry_max = shared.cfg.retry_max;
+    let Some(entry) = st.jobs.get_mut(&id) else { return };
+    if entry.rec.retries < retry_max {
+        entry.rec.retries += 1;
+        let attempt = entry.rec.retries;
+        entry.rec.state = JobState::Retrying;
+        entry.rec.note = Some(format!("panic: {msg}"));
+        if let Err(e) = shared.spool.save(&entry.rec) {
+            eprintln!("serve: spool write for job {id} failed: {e}");
+        }
+        st.metrics.bump("serve_job_retries");
+        eprintln!(
+            "serve: job {id} worker panicked ({msg}); retry {attempt}/{retry_max} after backoff"
+        );
+        let backoff = Duration::from_millis(
+            shared.cfg.retry_backoff_ms.saturating_mul(1u64 << (attempt as u32 - 1).min(4)),
+        );
+        let backoff_shared = shared.clone();
+        st.workers.push(thread::spawn(move || requeue_after(&backoff_shared, id, backoff)));
+    } else {
+        entry.rec.state = JobState::Failed;
+        entry.rec.note = Some(format!("panic: {msg} (retries exhausted)"));
+        if let Err(e) = shared.spool.save(&entry.rec) {
+            eprintln!("serve: spool write for job {id} failed: {e}");
+        }
+        st.metrics.bump("serve_jobs_failed");
+        eprintln!("serve: job {id} failed after {retry_max} retries: {msg}");
+        pump(shared, &mut st);
+    }
+    st.refresh_gauges();
+    st.metrics.flush();
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// The backoff half of a retry: sleep (watching the kill/drain flags),
+/// then put the job back in the admission queue. Runs on its own thread
+/// tracked in `State::workers` so `wait`/`kill` join it like any worker.
+fn requeue_after(shared: &Arc<Shared>, id: JobId, backoff: Duration) {
+    let deadline = Instant::now() + backoff;
+    loop {
+        {
+            let st = shared.state.lock().unwrap();
+            if st.killed {
+                return;
+            }
+            // A drain ends the backoff early: the job requeues as
+            // `queued` so the spool records resumable intent and the
+            // drain can settle without waiting out the ladder.
+            if st.draining {
+                break;
+            }
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+    let mut st = shared.state.lock().unwrap();
+    if st.killed {
+        return;
+    }
+    if let Some(entry) = st.jobs.get_mut(&id) {
+        if entry.rec.state == JobState::Retrying {
+            entry.rec.state = JobState::Queued;
+            if let Err(e) = shared.spool.save(&entry.rec) {
+                eprintln!("serve: spool write for job {id} failed: {e}");
+            }
+            st.queue.push_back(id);
+        }
+    }
+    pump(shared, &mut st);
+    st.refresh_gauges();
+    st.metrics.flush();
+    drop(st);
+    shared.cv.notify_all();
+}
+
+/// The per-job worker body: build (or resume) the session, step it to a
+/// terminal state, checkpointing on the durable cadence and reacting to
+/// cancel/drain/kill flags at bundle boundaries. Returns `None` when the
+/// daemon was killed (the worker vanishes without spool writes), else
+/// the outcome plus final progress.
+fn run_job_inner(shared: &Arc<Shared>, id: JobId) -> Option<(Outcome, usize, f64)> {
+    let (spec, plan, cancel, started) = {
         let st = shared.state.lock().unwrap();
         let entry = &st.jobs[&id];
-        (entry.rec.spec, entry.rec.plan, entry.cancel.clone())
+        (
+            entry.rec.spec,
+            entry.rec.plan,
+            entry.cancel.clone(),
+            entry.started.unwrap_or_else(Instant::now),
+        )
     };
 
     // Regenerated, never spooled: the generator is deterministic in
@@ -554,36 +869,67 @@ fn run_job(shared: &Arc<Shared>, id: JobId) {
     let ds = spec.dataset.profile().generate_scaled(spec.scale, DATASET_SEED);
     let compute = NativeBackend;
     let cfg = HybridConfig::new(plan.mesh, plan.s, plan.b, spec.tau.max(plan.s));
-    let builder = SessionBuilder::new(&compute, &ds, cfg)
-        .partitioner(Partitioner::Cyclic)
-        .eta(spec.eta)
-        .max_bundles(spec.bundles)
-        .eval_every(spec.eval_every)
-        .target_loss(spec.target)
-        .backend(shared.cfg.backend)
-        .profile(shared.cfg.profile.clone())
-        .algo(AlgoPolicy::Auto)
-        .selector(plan.source)
-        .overlap(plan.overlap)
-        .gram(plan.gram)
-        .seed(spec.seed)
-        .observe(Box::new(WireObserver { shared: shared.clone(), id }));
+    // Resume consumes the builder, and a corrupt generation means more
+    // than one attempt — so build a fresh one per attempt.
+    let make_builder = || {
+        SessionBuilder::new(&compute, &ds, cfg)
+            .partitioner(Partitioner::Cyclic)
+            .eta(spec.eta)
+            .max_bundles(spec.bundles)
+            .eval_every(spec.eval_every)
+            .target_loss(spec.target)
+            .backend(shared.cfg.backend)
+            .profile(shared.cfg.profile.clone())
+            .algo(AlgoPolicy::Auto)
+            .selector(plan.source)
+            .overlap(plan.overlap)
+            .gram(plan.gram)
+            .seed(spec.seed)
+            .observe(Box::new(WireObserver { shared: shared.clone(), id }))
+    };
 
-    let ckpt = shared.spool.ckpt_path(id);
-    let mut session = if ckpt.exists() {
-        match builder.resume(&ckpt) {
-            Ok(s) => s,
-            Err(e) => return finish_job(shared, id, Outcome::Failed(e), 0, 0.0),
+    // Newest generation first; a generation that fails verification
+    // (checksum mismatch, truncation, stale schema) is *skipped*, not
+    // fatal — the previous one replays the same trajectory from a few
+    // bundles earlier, bit-identically. Only when every generation is
+    // unusable does the job restart from scratch (still bit-identical:
+    // the dataset and seed are regenerated, just all progress is lost).
+    let mut session = None;
+    for path in shared.spool.ckpt_generations(id, shared.cfg.ckpt_keep) {
+        match make_builder().resume(&path) {
+            Ok(s) => {
+                session = Some(s);
+                break;
+            }
+            Err(e) => {
+                eprintln!(
+                    "serve: job {id} checkpoint {} failed verification ({e}); falling back",
+                    path.display()
+                );
+                let mut st = shared.state.lock().unwrap();
+                st.metrics.bump("serve_ckpt_fallbacks");
+                st.metrics.flush();
+            }
         }
-    } else {
-        builder.build()
+    }
+    let mut session = match session {
+        Some(s) => s,
+        None => make_builder().build(),
     };
 
+    // Durable checkpoint: write to the spool's temp name, then rotate
+    // it in as generation 0 (older generations shift up, the oldest
+    // beyond `ckpt_keep` is dropped).
     let write_ckpt = |session: &crate::solvers::Session<'_>| -> io::Result<()> {
-        let tmp = ckpt.with_extension("tsv.tmp");
-        session.checkpoint(&tmp)?;
-        std::fs::rename(&tmp, &ckpt)
+        session.checkpoint(&shared.spool.ckpt_tmp_path(id))?;
+        shared.spool.commit_ckpt(id, shared.cfg.ckpt_keep)
     };
+
+    // Per-bundle host wall EWMA for straggler detection. Host-measured
+    // and observation-only: it can flag the job `degraded` but never
+    // touches the trajectory.
+    let mut wall = DriftGauge::default();
+    let mut flagged = false;
 
     let outcome = loop {
         let (killed, draining) = {
@@ -592,7 +938,7 @@ fn run_job(shared: &Arc<Shared>, id: JobId) {
         };
         if killed {
             // Crash simulation: vanish without spool writes.
-            return;
+            return None;
         }
         if cancel.load(Ordering::Relaxed) {
             break Outcome::Canceled;
@@ -609,13 +955,72 @@ fn run_job(shared: &Arc<Shared>, id: JobId) {
                 Err(e) => Outcome::Failed(e),
             };
         }
+        if let Some(deadline) = spec.deadline {
+            if started.elapsed().as_secs_f64() > deadline {
+                break Outcome::DeadlineExceeded;
+            }
+        }
+        let t0 = Instant::now();
         let _ = session.step_bundle();
-        if spec.ckpt_every > 0
-            && session.bundles_run() % spec.ckpt_every == 0
-            && !session.is_done()
+        let bundle = session.bundles_run();
+
+        // Injected straggler: stall this worker as a stuck rank would,
+        // deaf to cancel/drain but not to a kill. The stall lands in
+        // the measured bundle wall below, which is exactly how a real
+        // straggler would surface.
+        if let Some(delay) = shared.faults.straggle(id, bundle) {
+            shared.count_fault("straggle");
+            let until = Instant::now() + delay;
+            loop {
+                {
+                    let st = shared.state.lock().unwrap();
+                    if st.killed {
+                        return None;
+                    }
+                }
+                let now = Instant::now();
+                if now >= until {
+                    break;
+                }
+                thread::sleep((until - now).min(Duration::from_millis(10)));
+            }
+        }
+
+        let secs = t0.elapsed().as_secs_f64();
+        let prior = wall.ewma();
+        let warmed = wall.seen();
+        wall.observe(0.2, secs);
+        if warmed && !flagged && secs > STRAGGLE_FLOOR_S && secs > STRAGGLE_RATIO * prior.max(1e-9)
         {
+            flagged = true;
+            let label = id.to_string();
+            let mut st = shared.state.lock().unwrap();
+            if let Some(entry) = st.jobs.get_mut(&id) {
+                entry.degraded = true;
+            }
+            st.metrics.set_gauge("serve_job_degraded", &[("job", label.as_str())], 1.0);
+            st.metrics.flush();
+            drop(st);
+            eprintln!(
+                "serve: job {id} degraded — bundle {bundle} took {secs:.3}s against an EWMA of {prior:.3}s"
+            );
+        }
+
+        if spec.ckpt_every > 0 && bundle % spec.ckpt_every == 0 && !session.is_done() {
             if let Err(e) = write_ckpt(&session) {
                 break Outcome::Failed(e);
+            }
+            // Injected storage rot: damage the just-committed newest
+            // generation so the next resume exercises the fallback.
+            if let Some(mode) = shared.faults.corrupt(id, bundle) {
+                if let Err(e) = crate::fault::corrupt_file(
+                    &shared.spool.ckpt_path(id),
+                    mode,
+                    shared.faults.seed(),
+                ) {
+                    eprintln!("serve: fault injection could not corrupt job {id} ckpt: {e}");
+                }
+                shared.count_fault("corrupt-ckpt");
             }
             // Keep the durable record's progress cursor in step with
             // the checkpoint it sits next to.
@@ -626,27 +1031,47 @@ fn run_job(shared: &Arc<Shared>, id: JobId) {
                 }
             }
         }
+
+        // Injected crash, fired while *no* lock is held so the panic
+        // cannot poison the state mutex on its way out.
+        if shared.faults.crash(id, bundle) {
+            shared.count_fault("crash");
+            panic!("injected crash at bundle {bundle}");
+        }
     };
     let (bundles, sim_wall) = (session.bundles_run(), session.sim_wall());
     drop(session);
-    finish_job(shared, id, outcome, bundles, sim_wall);
+    Some((outcome, bundles, sim_wall))
 }
 
 fn finish_job(shared: &Arc<Shared>, id: JobId, outcome: Outcome, bundles: usize, sim_wall: f64) {
     let mut st = shared.state.lock().unwrap();
     let ranks = st.jobs[&id].rec.plan.ranks();
-    let (state, counter) = match &outcome {
-        Outcome::Finished => (JobState::Done, Some("serve_jobs_done")),
-        Outcome::Canceled => (JobState::Canceled, Some("serve_jobs_canceled")),
-        Outcome::Drained => (JobState::Interrupted, None),
+    let (state, note, counter) = match &outcome {
+        Outcome::Finished => (JobState::Done, None, Some("serve_jobs_done")),
+        Outcome::Canceled => (JobState::Canceled, None, Some("serve_jobs_canceled")),
+        Outcome::Drained => (JobState::Interrupted, None, None),
+        Outcome::DeadlineExceeded => {
+            eprintln!("serve: job {id} stopped at bundle {bundles}: deadline exceeded");
+            st.metrics.bump("serve_jobs_deadline_exceeded");
+            (
+                JobState::Failed,
+                Some("deadline-exceeded".to_string()),
+                Some("serve_jobs_failed"),
+            )
+        }
         Outcome::Failed(e) => {
             eprintln!("serve: job {id} failed: {e}");
-            (JobState::Failed, Some("serve_jobs_failed"))
+            (JobState::Failed, Some(e.to_string()), Some("serve_jobs_failed"))
         }
     };
     if let Some(entry) = st.jobs.get_mut(&id) {
         entry.rec.state = state;
         entry.rec.bundles_done = bundles;
+        // The note annotates the *current* state: a job that recovered
+        // from a panic and finished clean must not carry the stale
+        // panic text into its `done` frame.
+        entry.rec.note = note;
         entry.sim_wall = sim_wall;
         if let Err(e) = shared.spool.save(&entry.rec) {
             eprintln!("serve: spool write for job {id} failed: {e}");
@@ -721,6 +1146,8 @@ fn handle_submit(shared: &Arc<Shared>, stream: &mut TcpStream, spec: JobSpec) {
                     state: JobState::Queued,
                     bundles_done: 0,
                     last_loss: None,
+                    retries: 0,
+                    note: None,
                 };
                 shared
                     .spool
@@ -734,6 +1161,8 @@ fn handle_submit(shared: &Arc<Shared>, stream: &mut TcpStream, spec: JobSpec) {
                         telem: Vec::new(),
                         cancel: Arc::new(AtomicBool::new(false)),
                         sim_wall: 0.0,
+                        started: None,
+                        degraded: false,
                     },
                 );
                 st.queue.push_back(id);
@@ -788,7 +1217,7 @@ fn handle_cancel(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId) {
         match st.jobs.get(&job) {
             None => Err(WireError::new(ErrCode::UnknownJob, format!("no job {job}"))),
             Some(entry) => match entry.rec.state {
-                JobState::Queued => {
+                JobState::Queued | JobState::Retrying => {
                     st.queue.retain(|&q| q != job);
                     let entry = st.jobs.get_mut(&job).expect("entry exists");
                     entry.rec.state = JobState::Canceled;
@@ -824,6 +1253,7 @@ fn handle_cancel(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId) {
 
 fn handle_watch(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId, from: usize) {
     let mut cursor = 0usize;
+    let mut streamed = 0usize;
     loop {
         let (frames, done) = {
             let mut st = shared.state.lock().unwrap();
@@ -842,7 +1272,8 @@ fn handle_watch(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId, from: 
                 let over = entry.rec.state.is_terminal()
                     || entry.rec.state == JobState::Interrupted
                     || st.killed
-                    || (st.draining && entry.rec.state == JobState::Queued);
+                    || (st.draining
+                        && matches!(entry.rec.state, JobState::Queued | JobState::Retrying));
                 if fresh || over {
                     let frames: Vec<TelemFrame> = entry.telem[cursor..].to_vec();
                     cursor = entry.telem.len();
@@ -858,9 +1289,17 @@ fn handle_watch(shared: &Arc<Shared>, stream: &mut TcpStream, job: JobId, from: 
             if f.bundle <= from {
                 continue;
             }
+            // Injected wire fault: hang up mid-stream after N streamed
+            // frames. The client's watch retry reconnects with its
+            // cursor past everything already delivered.
+            if shared.faults.drop_conn(job, streamed) {
+                shared.count_fault("drop-conn");
+                return;
+            }
             if send(stream, &Response::Telem(f)).is_err() {
                 return; // client went away
             }
+            streamed += 1;
         }
         if let Some(d) = done {
             let _ = send(stream, &Response::Done(d));

@@ -4,19 +4,29 @@
 //! Layout (all under the spool dir):
 //!
 //! ```text
-//! job-000001.tsv        the job record: spec + plan + lifecycle state
-//! job-000001.ckpt.tsv   latest durable Session checkpoint (cadence:
-//!                       `ckpt_every`, plus one at graceful drain and a
-//!                       final one at completion)
+//! job-000001.tsv          the job record: spec + plan + lifecycle state
+//! job-000001.ckpt.tsv     latest durable Session checkpoint (cadence:
+//!                         `ckpt_every`, plus one at graceful drain and
+//!                         a final one at completion)
+//! job-000001.ckpt.1.tsv   previous checkpoint generation (and .2, ...,
+//!                         up to the daemon's `--ckpt-keep`); each
+//!                         commit of a fresh checkpoint rotates the
+//!                         survivors one slot down
 //! ```
 //!
 //! Records are schema-guarded like every other TSV in the crate: a
 //! `meta schema` row that newer builds bump (loads reject newer
 //! schemas), required keys whose absence is a typed [`io::Error`], and
 //! enum cells parsed through the same `FromStr` impls the CLI uses.
+//! Schema v2 adds the recovery rows — `spec deadline`, `state retries`,
+//! `state note` — all optional on load so v1 records keep working.
 //! Every write goes through a temp file + atomic rename, so a daemon
 //! killed mid-write leaves the previous complete record, never a torn
-//! one — the kill-and-restart equivalence harness leans on this.
+//! one — the kill-and-restart equivalence harness leans on this. The
+//! checkpoint *generations* are the second half of that story: the
+//! session checkpoint's checksum trailer turns a corrupted latest
+//! generation into a typed resume error, and the scheduler falls back
+//! to the next generation down instead of wedging.
 
 use super::protocol::{JobId, JobSpec, Plan, JobState};
 use crate::mesh::Mesh;
@@ -25,8 +35,9 @@ use std::fs;
 use std::io::{self, ErrorKind, Write};
 use std::path::{Path, PathBuf};
 
-/// Job-record schema version (`meta schema` row).
-pub const SPOOL_SCHEMA: u32 = 1;
+/// Job-record schema version (`meta schema` row). v2 added the
+/// recovery rows (`spec deadline`, `state retries`, `state note`).
+pub const SPOOL_SCHEMA: u32 = 2;
 
 /// One job's durable record: everything a restarted daemon needs to
 /// re-queue and resume it bit-identically (the dataset is regenerated
@@ -46,6 +57,13 @@ pub struct JobRecord {
     pub bundles_done: usize,
     /// Latest evaluated loss at the last spool write.
     pub last_loss: Option<f64>,
+    /// Crash-recovery attempts consumed so far (counted against the
+    /// daemon's `--retry-max` budget; survives a daemon restart).
+    pub retries: usize,
+    /// Typed annotation on the current state — `deadline-exceeded`,
+    /// `drain-timeout`, or the panic message that sent the job into
+    /// `retrying`/`failed`. Surfaced on the wire in the done frame.
+    pub note: Option<String>,
 }
 
 /// Handle on a spool directory.
@@ -75,9 +93,53 @@ impl Spool {
         self.dir.join(format!("job-{id:06}.tsv"))
     }
 
-    /// Path of a job's durable checkpoint.
+    /// Path of a job's durable checkpoint (the latest generation).
     pub fn ckpt_path(&self, id: JobId) -> PathBuf {
         self.dir.join(format!("job-{id:06}.ckpt.tsv"))
+    }
+
+    /// Path of checkpoint generation `gen` (0 = latest =
+    /// [`ckpt_path`](Self::ckpt_path), 1 = previous, ...).
+    pub fn ckpt_gen_path(&self, id: JobId, gen: usize) -> PathBuf {
+        if gen == 0 {
+            self.ckpt_path(id)
+        } else {
+            self.dir.join(format!("job-{id:06}.ckpt.{gen}.tsv"))
+        }
+    }
+
+    /// Scratch path a fresh checkpoint is written to before
+    /// [`commit_ckpt`](Self::commit_ckpt) installs it (the `.tmp`
+    /// suffix keeps [`scan`](Self::scan)'s leftover cleanup working).
+    pub fn ckpt_tmp_path(&self, id: JobId) -> PathBuf {
+        self.dir.join(format!("job-{id:06}.ckpt.tsv.tmp"))
+    }
+
+    /// Install the checkpoint sitting at
+    /// [`ckpt_tmp_path`](Self::ckpt_tmp_path) as generation 0, rotating
+    /// the survivors one slot down and keeping at most `keep`
+    /// generations. Renames only, so a kill at any point leaves every
+    /// surviving generation complete (some possibly duplicated — never
+    /// torn).
+    pub fn commit_ckpt(&self, id: JobId, keep: usize) -> io::Result<()> {
+        let keep = keep.max(1);
+        let _ = fs::remove_file(self.ckpt_gen_path(id, keep - 1));
+        for gen in (0..keep.saturating_sub(1)).rev() {
+            let from = self.ckpt_gen_path(id, gen);
+            if from.exists() {
+                fs::rename(&from, self.ckpt_gen_path(id, gen + 1))?;
+            }
+        }
+        fs::rename(self.ckpt_tmp_path(id), self.ckpt_path(id))
+    }
+
+    /// The job's existing checkpoint generations, newest first — the
+    /// resume fallback chain.
+    pub fn ckpt_generations(&self, id: JobId, keep: usize) -> Vec<PathBuf> {
+        (0..keep.max(1))
+            .map(|gen| self.ckpt_gen_path(id, gen))
+            .filter(|p| p.exists())
+            .collect()
     }
 
     /// Atomically (re)write a job record: temp file + rename, so a kill
@@ -106,6 +168,7 @@ impl Spool {
         row("spec", "seed", s.seed.to_string());
         row("spec", "target", s.target.map(|t| t.to_string()).unwrap_or_else(|| "-".into()));
         row("spec", "ckpt_every", s.ckpt_every.to_string());
+        row("spec", "deadline", s.deadline.map(|d| d.to_string()).unwrap_or_else(|| "-".into()));
         let p = &rec.plan;
         row("plan", "mesh", p.mesh.to_string());
         row("plan", "s", p.s.to_string());
@@ -122,6 +185,14 @@ impl Spool {
             "loss",
             rec.last_loss.map(|l| l.to_string()).unwrap_or_else(|| "-".into()),
         );
+        row("state", "retries", rec.retries.to_string());
+        // Notes can carry free text (panic messages); squash framing
+        // characters so the record stays one-row-per-line.
+        let note = match &rec.note {
+            Some(n) if !n.is_empty() => n.replace(['\t', '\n', '\r'], " "),
+            _ => "-".into(),
+        };
+        row("state", "note", note);
 
         let tmp = self.dir.join(format!("job-{:06}.tsv.tmp", rec.id));
         {
@@ -141,13 +212,15 @@ impl Spool {
         if header != ["kind", "key", "value"] {
             return Err(bad(format!("{}: not a spool job record", path.display())));
         }
-        let get = |kind: &str, key: &str| -> io::Result<String> {
+        let get_opt = |kind: &str, key: &str| -> Option<String> {
             rows.iter()
                 .find(|r| r.len() == 3 && r[0] == kind && r[1] == key)
                 .map(|r| r[2].clone())
-                .ok_or_else(|| {
-                    bad(format!("{}: missing {kind} {key} row", path.display()))
-                })
+        };
+        let get = |kind: &str, key: &str| -> io::Result<String> {
+            get_opt(kind, key).ok_or_else(|| {
+                bad(format!("{}: missing {kind} {key} row", path.display()))
+            })
         };
         let schema: u32 = get("meta", "schema")?
             .parse()
@@ -205,6 +278,12 @@ impl Spool {
                 seed: num("seed", get("spec", "seed")?)?,
                 target: opt_f64("target", get("spec", "target")?)?,
                 ckpt_every: num("ckpt_every", get("spec", "ckpt_every")?)? as usize,
+                // v2 rows: absent in v1 records, which load with the
+                // fault-free defaults.
+                deadline: match get_opt("spec", "deadline") {
+                    Some(v) => opt_f64("deadline", v)?,
+                    None => None,
+                },
             },
             plan: Plan {
                 mesh,
@@ -219,6 +298,14 @@ impl Spool {
             state: enum_of!("state", get("state", "state")?),
             bundles_done: num("bundles", get("state", "bundles")?)? as usize,
             last_loss: opt_f64("loss", get("state", "loss")?)?,
+            retries: match get_opt("state", "retries") {
+                Some(v) => num("retries", v)? as usize,
+                None => 0,
+            },
+            note: match get_opt("state", "note") {
+                Some(v) if v != "-" => Some(v),
+                _ => None,
+            },
         };
         Ok(rec)
     }
@@ -236,8 +323,9 @@ impl Spool {
                 let _ = fs::remove_file(&path);
                 continue;
             }
-            if name.starts_with("job-") && name.ends_with(".tsv") && !name.ends_with(".ckpt.tsv")
-            {
+            // `.ckpt.` excludes every checkpoint generation
+            // (job-N.ckpt.tsv, job-N.ckpt.1.tsv, ...), not just gen 0.
+            if name.starts_with("job-") && name.ends_with(".tsv") && !name.contains(".ckpt.") {
                 recs.push(self.load(&path)?);
             }
         }
@@ -274,6 +362,7 @@ mod tests {
                 seed: 7,
                 target: None,
                 ckpt_every: 4,
+                deadline: Some(90.0),
             },
             plan: Plan {
                 mesh: Mesh::new(2, 4),
@@ -288,6 +377,8 @@ mod tests {
             state: JobState::Running,
             bundles_done: 13,
             last_loss: Some(0.5987),
+            retries: 1,
+            note: Some("panic: injected crash".into()),
         }
     }
 
@@ -320,7 +411,7 @@ mod tests {
         let path = spool.record_path(1);
         let text = fs::read_to_string(&path).unwrap();
 
-        let newer = text.replace("meta\tschema\t1", "meta\tschema\t2");
+        let newer = text.replace("meta\tschema\t2", "meta\tschema\t3");
         fs::write(&path, newer).unwrap();
         let e = spool.load(&path).unwrap_err();
         assert_eq!(e.kind(), ErrorKind::InvalidData);
@@ -342,5 +433,51 @@ mod tests {
         fs::write(&path, bad_enum).unwrap();
         let e = spool.load(&path).unwrap_err();
         assert!(e.to_string().contains("unknown collective algorithm"), "{e}");
+    }
+
+    #[test]
+    fn v1_records_load_with_fault_free_defaults() {
+        let spool = tmp_spool("v1compat");
+        let r = rec(4);
+        spool.save(&r).unwrap();
+        let path = spool.record_path(4);
+        // Strip the v2 rows and claim schema 1 — the shape a pre-upgrade
+        // daemon left behind.
+        let v1: String = fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .filter(|l| {
+                !l.starts_with("spec\tdeadline")
+                    && !l.starts_with("state\tretries")
+                    && !l.starts_with("state\tnote")
+            })
+            .map(|l| format!("{l}\n"))
+            .collect();
+        fs::write(&path, v1.replace("meta\tschema\t2", "meta\tschema\t1")).unwrap();
+        let back = spool.load(&path).unwrap();
+        assert_eq!(back.spec.deadline, None);
+        assert_eq!(back.retries, 0);
+        assert_eq!(back.note, None);
+        assert_eq!(back.bundles_done, r.bundles_done);
+    }
+
+    #[test]
+    fn commit_rotates_generations_and_scan_skips_them() {
+        let spool = tmp_spool("generations");
+        spool.save(&rec(7)).unwrap();
+        for ckpt in ["gen-a", "gen-b", "gen-c", "gen-d"] {
+            fs::write(spool.ckpt_tmp_path(7), ckpt).unwrap();
+            spool.commit_ckpt(7, 3).unwrap();
+        }
+        // Newest first: d (gen 0), c (gen 1), b (gen 2); a rotated away.
+        let gens = spool.ckpt_generations(7, 3);
+        let contents: Vec<String> =
+            gens.iter().map(|p| fs::read_to_string(p).unwrap()).collect();
+        assert_eq!(contents, ["gen-d", "gen-c", "gen-b"]);
+        assert!(!spool.ckpt_gen_path(7, 3).exists());
+        // Generations are checkpoints, not records: scan must not try to
+        // parse them.
+        let ids: Vec<JobId> = spool.scan().unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![7]);
     }
 }

@@ -1511,9 +1511,18 @@ fn assemble_averaged(mp: &MeshPartition, states: &[RankState]) -> Vec<f64> {
 // resume). v1 files restore fine: the count guard treats an absent
 // declaration with zero rows as a legitimately event-free checkpoint.
 //
+// v3 appends a content-hash trailer as the final row:
+//   checksum <fnv1a64-hex> - - - -
+// computed over every byte above it (header included). Restore verifies
+// the hash before parsing a single row, so a bit-flipped cell — which
+// would otherwise parse as a perfectly plausible float — is a typed
+// error, not a silently corrupted trajectory. v1/v2 files (no trailer)
+// still restore; their protection is the declared-count guards only.
+//
 // Floats use Rust's shortest-roundtrip formatting, so restore is
 // bit-lossless; declared counts guard truncated tails; config/dataset
-// meta rows guard resuming into a different run.
+// meta rows guard resuming into a different run; the checksum guards
+// everything in between.
 // ---------------------------------------------------------------------
 
 impl Session<'_> {
@@ -1524,10 +1533,21 @@ impl Session<'_> {
     /// analytics see the whole history after a resume), and any
     /// in-flight (posted, unsettled) row reduce — everything needed for
     /// [`SessionBuilder::resume`] to continue the trajectory and the
-    /// charged accounting bit-for-bit.
+    /// charged accounting bit-for-bit. The file ends in a checksum
+    /// trailer (schema v3) so resume detects corruption as a typed
+    /// error instead of a silently wrong trajectory.
     pub fn checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> std::io::Result<()> {
-        let mut w =
-            crate::util::tsv::TsvWriter::create(path, &["kind", "key", "a", "b", "c", "d"]);
+        // The file is assembled in memory so the v3 checksum trailer can
+        // hash the exact bytes that precede it, then lands in one write.
+        struct Buf(String);
+        impl Buf {
+            fn append(&mut self, cells: &[String; 6]) -> std::io::Result<()> {
+                self.0.push_str(&cells.join("\t"));
+                self.0.push('\n');
+                Ok(())
+            }
+        }
+        let mut w = Buf(String::from("kind\tkey\ta\tb\tc\td\n"));
         // Each value cell converts on its own terms — static cells stay
         // `&str` (the seed's `na.clone()` churn allocated six Strings per
         // row regardless of content).
@@ -1541,7 +1561,7 @@ impl Session<'_> {
         ) -> [String; 6] {
             [kind.to_string(), key.into(), a.into(), b.into(), c.into(), d.into()]
         }
-        w.append(&row("meta", "schema", "2", "-", "-", "-"))?;
+        w.append(&row("meta", "schema", "3", "-", "-", "-"))?;
         w.append(&row(
             "meta",
             "dataset",
@@ -1687,7 +1707,9 @@ impl Session<'_> {
                 e.end.to_string(),
             ))?;
         }
-        Ok(())
+        let sum = crate::util::checksum::fnv1a64_hex(w.0.as_bytes());
+        w.0.push_str(&format!("checksum\t{sum}\t-\t-\t-\t-\n"));
+        std::fs::write(path, w.0)
     }
 
     /// Restore a freshly built session from a checkpoint file (the
@@ -1699,10 +1721,39 @@ impl Session<'_> {
         let parse_u = |s: &str| s.parse::<usize>().map_err(|_| bad(format!("bad int {s:?}")));
         debug_assert_eq!(self.bundles_run, 0, "restore only into a fresh session");
 
-        let (header, rows) = crate::util::tsv::read_tsv(path)?;
+        let text = std::fs::read_to_string(path)?;
+        // v3 files end in a `checksum` trailer row hashing every byte
+        // above it; verify before trusting a single cell (a bit-flipped
+        // float would otherwise parse cleanly). Pre-v3 files carry no
+        // trailer and fall through to the count guards alone.
+        let trimmed = text.trim_end_matches('\n');
+        let body = match trimmed.rfind('\n') {
+            Some(pos) if trimmed[pos + 1..].starts_with("checksum\t") => {
+                let trailer = &trimmed[pos + 1..];
+                let cells: Vec<&str> = trailer.split('\t').collect();
+                if cells.len() != 6 {
+                    return Err(bad(format!("malformed checksum trailer {trailer:?}")));
+                }
+                let declared = u64::from_str_radix(cells[1], 16)
+                    .map_err(|_| bad(format!("bad checksum cell {:?}", cells[1])))?;
+                let body = &text[..pos + 1];
+                let actual = crate::util::checksum::fnv1a64(body.as_bytes());
+                if actual != declared {
+                    return Err(bad(format!(
+                        "checkpoint checksum mismatch (file declares {declared:016x}, \
+                         content hashes to {actual:016x}) — the file is corrupted"
+                    )));
+                }
+                body
+            }
+            _ => text.as_str(),
+        };
+        let mut lines = body.lines().filter(|l| !l.is_empty());
+        let header: Vec<&str> = lines.next().map(|l| l.split('\t').collect()).unwrap_or_default();
         if header != ["kind", "key", "a", "b", "c", "d"] {
             return Err(bad(format!("unexpected checkpoint header {header:?}")));
         }
+        let rows: Vec<Vec<&str>> = lines.map(|l| l.split('\t').collect()).collect();
         let p = self.engine.p();
         let mut bundles: Option<usize> = None;
         let mut ttt: Option<f64> = None;
@@ -1736,16 +1787,14 @@ impl Session<'_> {
 
         for raw in &rows {
             let [kind, key, a, b, c, d] = match raw.as_slice() {
-                [k, key, a, b, c, d] => {
-                    [k.as_str(), key.as_str(), a.as_str(), b.as_str(), c.as_str(), d.as_str()]
-                }
+                [k, key, a, b, c, d] => [*k, *key, *a, *b, *c, *d],
                 _ => return Err(bad(format!("short checkpoint row {raw:?}"))),
             };
             match kind {
                 "meta" => match key {
                     "schema" => {
                         let v = parse_u(a)?;
-                        if v > 2 {
+                        if v > 3 {
                             return Err(bad(format!(
                                 "checkpoint schema {v} is newer than this build"
                             )));

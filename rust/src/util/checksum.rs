@@ -1,0 +1,65 @@
+//! Content checksums for the versioned TSV artifacts.
+//!
+//! The checkpoint/spool files guard *structure* with schema rows and
+//! declared counts, but a bit-flip inside a float cell parses fine and
+//! would silently corrupt a resumed trajectory. The session checkpoint
+//! (schema v3) therefore appends a trailer row carrying an FNV-1a hash
+//! of everything above it; [`SessionBuilder::resume`] recomputes the
+//! hash before parsing a single row and rejects a mismatch as a typed
+//! error, which is what lets the serve spool fall back to the previous
+//! checkpoint generation instead of resuming garbage.
+//!
+//! FNV-1a is not cryptographic — the threat model is storage rot and
+//! truncated writes, not an adversary — and it keeps the crate
+//! dependency-free.
+//!
+//! [`SessionBuilder::resume`]: crate::solvers::SessionBuilder::resume
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// 64-bit FNV-1a over `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The hash as the fixed-width hex cell written into TSV trailers.
+pub fn fnv1a64_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Reference values for FNV-1a 64 from the original Fowler/Noll/Vo
+        // test suite.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn single_bit_flip_changes_the_hash() {
+        let base = b"kind\tkey\ta\tb\tc\td\nmeta\tschema\t3\t-\t-\t-\n".to_vec();
+        let h0 = fnv1a64(&base);
+        for i in 0..base.len() {
+            let mut flipped = base.clone();
+            flipped[i] ^= 0x01;
+            assert_ne!(fnv1a64(&flipped), h0, "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn hex_form_is_fixed_width() {
+        assert_eq!(fnv1a64_hex(b"").len(), 16);
+        assert_eq!(fnv1a64_hex(b""), "cbf29ce484222325");
+    }
+}

@@ -6,6 +6,7 @@
 //! offline (no `rand`, `proptest`, `serde`, or `anyhow` available); the
 //! implementations are deliberately simple, deterministic, and unit-tested.
 
+pub mod checksum;
 pub mod error;
 pub mod parse;
 pub mod prng;

@@ -1,0 +1,391 @@
+//! Chaos harness for the serve stack's self-healing machinery, driven
+//! by the seeded [`FaultPlan`] layer:
+//!
+//! * **the headline property** — under a plan combining a worker crash,
+//!   a corrupted newest checkpoint generation, a straggler stall, and a
+//!   severed watch stream, every admitted job still completes, and its
+//!   final checkpoint (trajectory *and* charged books) is bit-identical
+//!   to a fault-free reference run; the scrape file counts exactly the
+//!   faults the plan declares (one retry, one generation fallback, one
+//!   fired fault per kind);
+//! * **deadlines** — a job admitted with a wall-clock deadline is
+//!   stopped at a bundle boundary with the typed `deadline-exceeded`
+//!   note once the budget is spent;
+//! * **drain escalation** — a drain wedged behind a stuck worker
+//!   escalates at `drain_timeout`: the stuck job is forcibly
+//!   interrupted with the typed `drain-timeout` note, the daemon never
+//!   wedges, and a restart resumes the job from its last durable
+//!   checkpoint to a clean finish;
+//! * **corruption corpus** — bit-flipped, truncated, count-trimmed, and
+//!   future-schema session checkpoints are typed resume errors (never a
+//!   panic), as are damaged spool records.
+//!
+//! The plan for the headline test round-trips through its TSV form
+//! first, so the test covers the same loader the `serve --fault-plan`
+//! CLI path uses.
+
+use hybrid_sgd::costmodel::HybridConfig;
+use hybrid_sgd::compute::NativeBackend;
+use hybrid_sgd::data::{synth, DatasetSpec};
+use hybrid_sgd::fault::{corrupt_file, CorruptMode, Fault, FaultPlan};
+use hybrid_sgd::mesh::Mesh;
+use hybrid_sgd::serve::{Client, Daemon, DaemonConfig, JobSpec, JobState, Spool};
+use hybrid_sgd::solvers::SessionBuilder;
+use hybrid_sgd::util::Prng;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn spool_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_chaos_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quick_spec(bundles: usize, ckpt_every: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        dataset: DatasetSpec::Rcv1Like,
+        scale: 0.05,
+        p: 2,
+        bundles,
+        eval_every: 3,
+        eta: 0.1,
+        tau: 10,
+        seed,
+        target: None,
+        ckpt_every,
+        deadline: None,
+    }
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Checkpoint lines for the bit-identity compare — same filter as the
+/// serve_daemon harness: `book metrics` rows carry measured host wall,
+/// and the `checksum` trailer hashes them, so both are excluded; every
+/// other row must match byte for byte.
+fn ckpt_lines(path: &Path) -> Vec<String> {
+    fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+        .lines()
+        .filter(|l| !l.starts_with("book\tmetrics\t") && !l.starts_with("checksum\t"))
+        .map(|l| l.to_string())
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// The headline property: chaos run ≡ fault-free run, bit for bit
+// ---------------------------------------------------------------------
+
+/// One plan, four fault kinds, two jobs:
+///
+/// * job 1 (30 bundles, ckpt every 2) — its newest checkpoint is
+///   bit-flipped right after the commit at bundle 8, its worker is
+///   crashed after bundle 9, and its watch stream is severed after 3
+///   frames. Recovery: the retry resumes past the corrupt generation 0
+///   (bundle 8) from generation 1 (bundle 6), the client reconnects
+///   from its cursor, and the job finishes its full budget.
+/// * job 2 (12 bundles, no periodic checkpoints) — stalled 1s after
+///   bundle 5, far above both the straggle floor and 8× its own
+///   bundle-wall EWMA, so it is flagged `degraded` (observation only:
+///   the stall never moves the trajectory).
+///
+/// Both final checkpoints must equal the ones from an identical
+/// fault-free run, and the scrape must count exactly what the plan
+/// declares.
+#[test]
+fn chaos_plan_recovers_every_job_bit_identically() {
+    let plan = FaultPlan::new(7)
+        .with(Fault::Crash { job: 1, bundle: 9 })
+        .with(Fault::CorruptCkpt { job: 1, bundle: 8, mode: CorruptMode::BitFlip })
+        .with(Fault::DropConn { job: 1, after_frames: 3 })
+        .with(Fault::Straggle { job: 2, bundle: 5, millis: 1000 });
+
+    // Round-trip the plan through its TSV form — the same loader the
+    // `serve --fault-plan` CLI path uses.
+    let plan_path = std::env::temp_dir()
+        .join(format!("serve_chaos_plan_{}.tsv", std::process::id()));
+    plan.to_tsv(&plan_path).unwrap();
+    let loaded = FaultPlan::from_tsv(&plan_path).unwrap();
+    assert_eq!(loaded, plan);
+    let _ = fs::remove_file(&plan_path);
+
+    let spec1 = quick_spec(30, 2, 0x5EED);
+    let spec2 = quick_spec(12, 0, 0xB0B);
+
+    // Fault-free reference run.
+    let ref_spool = spool_dir("ref");
+    let daemon = Daemon::start(DaemonConfig::local(&ref_spool)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let (r1, _) = client.submit(&spec1).unwrap();
+    let (r2, _) = client.submit(&spec2).unwrap();
+    assert_eq!((r1.id, r2.id), (1, 2));
+    assert_eq!(client.watch(1, 0, |_| {}).unwrap().state, JobState::Done);
+    assert_eq!(client.watch(2, 0, |_| {}).unwrap().state, JobState::Done);
+    client.shutdown().unwrap();
+    daemon.wait();
+    let ref_ckpt1 = ckpt_lines(&Spool::open(&ref_spool).unwrap().ckpt_path(1));
+    let ref_ckpt2 = ckpt_lines(&Spool::open(&ref_spool).unwrap().ckpt_path(2));
+
+    // Chaos run: same specs, same submission order, the plan above.
+    let spool = spool_dir("chaos");
+    let mut cfg = DaemonConfig::local(&spool);
+    cfg.metrics_out = Some(spool.join("chaos.prom"));
+    cfg.retry_backoff_ms = 10;
+    cfg.faults = Some(loaded);
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let (c1, _) = client.submit(&spec1).unwrap();
+    let (c2, _) = client.submit(&spec2).unwrap();
+    assert_eq!((c1.id, c2.id), (1, 2));
+
+    // Watch job 1 through the severed stream: the typed client retry
+    // reconnects from its bundle cursor and still sees the terminal
+    // frame. (The retried worker replays bundles 7..9, so duplicates
+    // are expected in the log — the cursor only ever moves forward.)
+    let mut max_bundle = 0;
+    let done1 = client.watch(1, 0, |t| max_bundle = max_bundle.max(t.bundle)).unwrap();
+    assert_eq!(done1.state, JobState::Done, "job 1 must recover, note {:?}", done1.note);
+    assert_eq!(done1.bundles, 30);
+    assert_eq!(max_bundle, 30);
+    assert_eq!(done1.note, "", "a recovered job carries no stale panic note");
+    let done2 = client.watch(2, 0, |_| {}).unwrap();
+    assert_eq!(done2.state, JobState::Done);
+    assert_eq!(done2.bundles, 12);
+
+    // The status board tells the recovery story: job 1 spent one unit
+    // of its retry budget, job 2 is flagged degraded by the straggle.
+    let rows = client.status(None).unwrap();
+    let row1 = rows.iter().find(|r| r.id == 1).unwrap();
+    let row2 = rows.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(row1.retries, 1, "exactly one crash, one retry");
+    assert_eq!(row2.retries, 0);
+    assert_eq!(row2.health, "degraded", "the 1s stall must trip the straggle gauge");
+
+    client.shutdown().unwrap();
+    daemon.wait();
+
+    // Bit-identity: the chaos trajectory and charged books equal the
+    // fault-free ones.
+    let spool_h = Spool::open(&spool).unwrap();
+    assert_eq!(ckpt_lines(&spool_h.ckpt_path(1)), ref_ckpt1, "job 1 diverged under chaos");
+    assert_eq!(ckpt_lines(&spool_h.ckpt_path(2)), ref_ckpt2, "job 2 diverged under chaos");
+
+    // The scrape counts exactly what the plan declares.
+    let scrape = fs::read_to_string(spool.join("chaos.prom")).unwrap();
+    for needle in [
+        "hybridsgd_serve_jobs_done_total 2",
+        "hybridsgd_serve_jobs_failed_total 0",
+        "hybridsgd_serve_job_retries_total 1",
+        "hybridsgd_serve_ckpt_fallbacks_total 1",
+        "hybridsgd_serve_faults_injected_total{kind=\"crash\"} 1",
+        "hybridsgd_serve_faults_injected_total{kind=\"corrupt-ckpt\"} 1",
+        "hybridsgd_serve_faults_injected_total{kind=\"drop-conn\"} 1",
+        "hybridsgd_serve_faults_injected_total{kind=\"straggle\"} 1",
+        "hybridsgd_serve_job_degraded{job=\"2\"} 1",
+    ] {
+        assert!(scrape.contains(needle), "scrape missing `{needle}`:\n{scrape}");
+    }
+
+    let _ = fs::remove_dir_all(&ref_spool);
+    let _ = fs::remove_dir_all(&spool);
+}
+
+// ---------------------------------------------------------------------
+// Deadlines
+// ---------------------------------------------------------------------
+
+/// A job admitted with a tiny wall-clock deadline is stopped at a
+/// bundle boundary: `failed` with the typed `deadline-exceeded` note
+/// (and the matching counter), not a cancel and not a wedge.
+#[test]
+fn deadline_exceeded_is_a_typed_failure() {
+    let spool = spool_dir("deadline");
+    let mut cfg = DaemonConfig::local(&spool);
+    cfg.metrics_out = Some(spool.join("deadline.prom"));
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    let mut spec = quick_spec(100_000, 0, 1);
+    spec.deadline = Some(0.3);
+    let (row, _) = client.submit(&spec).unwrap();
+    let done = client.watch(row.id, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Failed);
+    assert_eq!(done.note, "deadline-exceeded");
+    assert!(done.bundles < 100_000, "the deadline must cut the budget short");
+
+    // The typed note is durable: a restarted daemon must not resume a
+    // deadline-failed job.
+    let spool_h = Spool::open(&spool).unwrap();
+    let rec = spool_h.load(spool_h.record_path(row.id)).unwrap();
+    assert_eq!(rec.state, JobState::Failed);
+    assert_eq!(rec.note.as_deref(), Some("deadline-exceeded"));
+
+    client.shutdown().unwrap();
+    daemon.wait();
+    let scrape = fs::read_to_string(spool.join("deadline.prom")).unwrap();
+    assert!(
+        scrape.contains("hybridsgd_serve_jobs_deadline_exceeded_total 1"),
+        "deadline counter missing:\n{scrape}"
+    );
+    let _ = fs::remove_dir_all(&spool);
+}
+
+// ---------------------------------------------------------------------
+// Drain escalation
+// ---------------------------------------------------------------------
+
+/// A drain wedged behind a stuck worker (here: a 60s injected straggle)
+/// escalates at `drain_timeout`: the job is forcibly interrupted with
+/// the typed `drain-timeout` note, `wait` returns promptly with the
+/// forced id, and a restarted daemon resumes the job from its last
+/// durable checkpoint to a clean finish.
+#[test]
+fn drain_timeout_forces_stuck_jobs_and_restart_recovers_them() {
+    let spool = spool_dir("drain");
+    let mut cfg = DaemonConfig::local(&spool);
+    cfg.drain_timeout = Some(Duration::from_millis(300));
+    cfg.faults =
+        Some(FaultPlan::new(1).with(Fault::Straggle { job: 1, bundle: 3, millis: 60_000 }));
+    let daemon = Daemon::start(cfg).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+
+    let (row, _) = client.submit(&quick_spec(40, 2, 2)).unwrap();
+    assert_eq!(row.id, 1);
+    // Let the worker commit the bundle-2 checkpoint and walk into the
+    // 60s stall at bundle 3.
+    wait_until("job 1 stuck in the straggle", || {
+        client.status(Some(1)).unwrap()[0].bundles >= 3
+    });
+
+    let t0 = Instant::now();
+    daemon.shutdown();
+    let report = daemon.wait();
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "escalation must beat the 60s stall, took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(report.forced, vec![1], "the stuck job must be forced");
+    assert_eq!(report.note(), Some("drain-timeout"));
+
+    let spool_h = Spool::open(&spool).unwrap();
+    let rec = spool_h.load(spool_h.record_path(1)).unwrap();
+    assert_eq!(rec.state, JobState::Interrupted);
+    assert_eq!(rec.note.as_deref(), Some("drain-timeout"));
+
+    // Restart without the fault plan: the forced job resumes from its
+    // last durable checkpoint — the crash contract — and finishes.
+    let daemon = Daemon::start(DaemonConfig::local(&spool)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let done = client.watch(1, 0, |_| {}).unwrap();
+    assert_eq!(done.state, JobState::Done);
+    assert_eq!(done.bundles, 40);
+    assert_eq!(done.note, "", "the drain-timeout note must not outlive recovery");
+    client.shutdown().unwrap();
+    daemon.wait();
+    let _ = fs::remove_dir_all(&spool);
+}
+
+// ---------------------------------------------------------------------
+// Corruption corpus: typed errors, never a panic
+// ---------------------------------------------------------------------
+
+/// Every way a checkpoint can rot on disk — a flipped bit, a torn
+/// write, a trimmed tail, a future schema — is a typed `InvalidData`
+/// resume error. The daemon's generation fallback is built on exactly
+/// this property: corruption must be *detected*, not survived by luck.
+#[test]
+fn corrupted_session_checkpoints_are_typed_resume_errors() {
+    let dir = std::env::temp_dir().join(format!("serve_chaos_corpus_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+
+    let mut rng = Prng::new(0xC0FFEE);
+    let ds = synth::sparse_skewed("chaos-corpus", 140, 40, 5, 0.6, &mut rng);
+    let be = NativeBackend;
+    let cfg = HybridConfig::new(Mesh::new(2, 2), 2, 6, 2);
+    let builder = || SessionBuilder::new(&be, &ds, cfg).max_bundles(6).eval_every(2);
+
+    let good = dir.join("good.tsv");
+    let mut session = builder().build();
+    for _ in 0..3 {
+        let _ = session.step_bundle();
+    }
+    session.checkpoint(&good).unwrap();
+    builder().resume(&good).expect("the pristine checkpoint must resume");
+    let text = fs::read_to_string(&good).unwrap();
+    // The corpus variants that need hand-editing strip the checksum
+    // trailer first, so they probe the guards *behind* it (pre-v3 files
+    // have no trailer and rely on those guards alone).
+    let stripped: String = text
+        .lines()
+        .filter(|l| !l.starts_with("checksum\t"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    assert!(stripped.len() < text.len(), "v3 checkpoints end in a checksum trailer");
+
+    let bad = dir.join("bad.tsv");
+
+    // 1. One flipped bit in the body: caught by the checksum trailer.
+    fs::copy(&good, &bad).unwrap();
+    corrupt_file(&bad, CorruptMode::BitFlip, 7).unwrap();
+    let err = builder().resume(&bad).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("checksum"), "bit-flip: {err}");
+
+    // 2. A torn write (file cut to two thirds): typed, never a panic.
+    fs::copy(&good, &bad).unwrap();
+    corrupt_file(&bad, CorruptMode::Truncate, 7).unwrap();
+    let err = builder().resume(&bad).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "truncate: {err}");
+
+    // 3. A trimmed tail on a trailer-less file: the declared-count
+    //    guards name the truncation.
+    let mut lines: Vec<&str> = stripped.lines().collect();
+    lines.pop();
+    fs::write(&bad, lines.join("\n") + "\n").unwrap();
+    let err = builder().resume(&bad).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("truncated"), "trimmed tail: {err}");
+
+    // 4. A future schema is rejected by name, not mis-parsed.
+    fs::write(&bad, stripped.replace("\tschema\t3", "\tschema\t9")).unwrap();
+    let err = builder().resume(&bad).unwrap_err();
+    assert!(err.to_string().contains("newer than this build"), "future schema: {err}");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The spool's job records get the same posture: a torn record is a
+/// typed load error (the daemon refuses to silently drop or mangle a
+/// spooled job), never a panic.
+#[test]
+fn corrupted_spool_records_are_typed_load_errors() {
+    let spool = Spool::open(spool_dir("spool_corpus")).unwrap();
+    let daemon_dir = spool.dir().to_path_buf();
+
+    // A real record, written by the daemon itself.
+    let daemon = Daemon::start(DaemonConfig::local(&daemon_dir)).unwrap();
+    let client = Client::new(daemon.addr().to_string());
+    let (row, _) = client.submit(&quick_spec(4, 0, 3)).unwrap();
+    assert_eq!(client.watch(row.id, 0, |_| {}).unwrap().state, JobState::Done);
+    client.shutdown().unwrap();
+    daemon.wait();
+
+    let path = spool.record_path(row.id);
+    spool.load(&path).expect("the pristine record must load");
+    corrupt_file(&path, CorruptMode::Truncate, 7).unwrap();
+    let err = spool.load(&path).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "torn record: {err}");
+    // And a scan over the damaged spool fails loudly instead of
+    // dropping the job.
+    assert!(spool.scan().is_err(), "scan must surface the torn record");
+    let _ = fs::remove_dir_all(&daemon_dir);
+}

@@ -61,6 +61,7 @@ fn quick_spec(bundles: usize, ckpt_every: usize) -> JobSpec {
         seed: 0x5EED,
         target: None,
         ckpt_every,
+        deadline: None,
     }
 }
 
@@ -75,14 +76,15 @@ fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
 
 /// Checkpoint lines for the bit-identity compare. The only
 /// host-nondeterministic rows are the `book metrics` entries (measured
-/// eval wall, charged as host time); everything else — weights, cursors,
-/// clocks, traffic, phase books, trace, pending collectives, the event
-/// log — must match byte for byte.
+/// eval wall, charged as host time) and therefore the `checksum` trailer
+/// hashing them; everything else — weights, cursors, clocks, traffic,
+/// phase books, trace, pending collectives, the event log — must match
+/// byte for byte.
 fn ckpt_lines(path: &Path) -> Vec<String> {
     fs::read_to_string(path)
         .unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
         .lines()
-        .filter(|l| !l.starts_with("book\tmetrics\t"))
+        .filter(|l| !l.starts_with("book\tmetrics\t") && !l.starts_with("checksum\t"))
         .map(|l| l.to_string())
         .collect()
 }
@@ -266,6 +268,7 @@ fn bundle_overlap_record(seed: u64, bundles: usize) -> JobRecord {
             seed,
             target: None,
             ckpt_every: 2,
+            deadline: None,
         },
         plan: Plan {
             mesh: Mesh::new(1, 2),
@@ -280,6 +283,8 @@ fn bundle_overlap_record(seed: u64, bundles: usize) -> JobRecord {
         state: JobState::Queued,
         bundles_done: 0,
         last_loss: None,
+        retries: 0,
+        note: None,
     }
 }
 
@@ -407,28 +412,29 @@ fn malformed_frames_get_typed_errors_and_never_wedge_the_daemon() {
     let corpus: &[(&str, &str)] = &[
         ("\n", "bad-frame"),                       // empty frame
         ("garbage\n", "bad-frame"),                // wrong magic
-        ("ps1\n", "bad-frame"),                    // missing op
+        ("ps2\n", "bad-frame"),                    // missing op
         ("ps9\tstatus\tall\n", "bad-version"),     // newer protocol
-        ("ps1\tfrobnicate\tx\n", "unknown-op"),    // unknown op
-        ("ps1\tstatus\n", "bad-frame"),            // wrong arity
-        ("ps1\tstatus\tall\textra\n", "bad-frame"),
-        ("ps1\twatch\tnot-a-number\t0\n", "bad-value"),
-        ("ps1\tcancel\t999\n", "unknown-job"),
+        ("ps1\tstatus\tall\n", "bad-version"),     // stale client
+        ("ps2\tfrobnicate\tx\n", "unknown-op"),    // unknown op
+        ("ps2\tstatus\n", "bad-frame"),            // wrong arity
+        ("ps2\tstatus\tall\textra\n", "bad-frame"),
+        ("ps2\twatch\tnot-a-number\t0\n", "bad-value"),
+        ("ps2\tcancel\t999\n", "unknown-job"),
         // submit with an unparseable scale cell
         (
-            "ps1\tsubmit\trcv1\tbogus\t2\t10\t3\t0.1\t10\t1\t-\t0\n",
+            "ps2\tsubmit\trcv1\tbogus\t2\t10\t3\t0.1\t10\t1\t-\t0\t-\n",
             "bad-value",
         ),
         // submit with an unknown dataset
         (
-            "ps1\tsubmit\tnosuch\t0.05\t2\t10\t3\t0.1\t10\t1\t-\t0\n",
+            "ps2\tsubmit\tnosuch\t0.05\t2\t10\t3\t0.1\t10\t1\t-\t0\t-\n",
             "bad-value",
         ),
     ];
     for (frame, code) in corpus {
         let reply = raw_roundtrip(&addr, frame);
         assert!(
-            reply.starts_with("ps1\terr\t"),
+            reply.starts_with("ps2\terr\t"),
             "frame {frame:?} should yield an err frame, got {reply:?}"
         );
         assert!(
@@ -441,7 +447,7 @@ fn malformed_frames_get_typed_errors_and_never_wedge_the_daemon() {
     // wedge anything.
     {
         let mut s = TcpStream::connect(&addr).unwrap();
-        s.write_all(b"ps1\tstat").unwrap();
+        s.write_all(b"ps2\tstat").unwrap();
         drop(s);
     }
     {
@@ -482,6 +488,14 @@ fn scrape_file_carries_service_and_per_job_metrics() {
         "hybridsgd_serve_jobs_failed_total 0",
         "hybridsgd_serve_jobs_running 0",
         "hybridsgd_serve_job_bundles{job=\"1\"} 6",
+        // Fault-free run: the recovery families exist, eagerly zeroed.
+        "hybridsgd_serve_job_retries_total 0",
+        "hybridsgd_serve_ckpt_fallbacks_total 0",
+        "hybridsgd_serve_jobs_deadline_exceeded_total 0",
+        "hybridsgd_serve_drain_forced_total 0",
+        "hybridsgd_serve_jobs_retrying 0",
+        "hybridsgd_serve_faults_injected_total{kind=\"crash\"} 0",
+        "hybridsgd_serve_faults_injected_total{kind=\"corrupt-ckpt\"} 0",
     ] {
         assert!(text.contains(needle), "scrape missing {needle:?}:\n{text}");
     }
@@ -497,8 +511,10 @@ fn scrape_file_carries_service_and_per_job_metrics() {
 
 #[test]
 fn client_reports_transport_and_daemon_errors_distinctly() {
-    // Nothing is listening here: pure transport error.
-    let client = Client::new("127.0.0.1:1");
+    // Nothing is listening here: pure transport error. Retries are
+    // disabled so the refusal surfaces immediately instead of walking
+    // the backoff ladder first.
+    let client = Client::new("127.0.0.1:1").retries(0);
     match client.status(None) {
         Err(ClientError::Io(_)) => {}
         other => panic!("expected an I/O error, got {other:?}"),
